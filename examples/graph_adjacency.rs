@@ -1,0 +1,113 @@
+//! Graph adjacency scan — the intro's "stream of edges in a graph grouped
+//! by their source vertex" motivation, on the enumeration/aggregation API.
+//!
+//! Pipeline: vertices (composites of their out-edges) are enumerated;
+//! an edge-filter stage keeps edges whose weight clears a threshold
+//! (irregular dataflow); an aggregator computes, per vertex, the surviving
+//! out-degree and total weight — a building block of e.g. graph sparsifiers.
+//!
+//! Run: `cargo run --example graph_adjacency`
+
+use regatta::coordinator::aggregate::{Aggregator, FilterMapLogic};
+use regatta::coordinator::enumerate::Composite;
+use regatta::coordinator::node::Emitter;
+use regatta::coordinator::signal::parent_as;
+use regatta::coordinator::topology::PipelineBuilder;
+use regatta::util::prng::Prng;
+
+#[derive(Debug, Clone)]
+struct Vertex {
+    id: u64,
+    edges: Vec<(u32, f32)>, // (dst, weight)
+}
+
+impl Composite for Vertex {
+    fn count(&self) -> usize {
+        self.edges.len()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    const WIDTH: usize = 64;
+    const N_VERTS: usize = 2_000;
+    const THRESHOLD: f32 = 0.6;
+
+    // synthetic power-law-ish graph: degree in [0, 256)
+    let mut rng = Prng::new(42);
+    let mut vertices = Vec::with_capacity(N_VERTS);
+    for id in 0..N_VERTS as u64 {
+        let deg = (rng.below(16) * rng.below(16)) % 256;
+        let edges = (0..deg)
+            .map(|_| (rng.below(N_VERTS) as u32, rng.unit_f32()))
+            .collect();
+        vertices.push(Vertex { id, edges });
+    }
+    let total_edges: usize = vertices.iter().map(|v| v.edges.len()).sum();
+
+    let mut b = PipelineBuilder::new(WIDTH);
+    let src = b.source_with_cap::<Vertex>(N_VERTS);
+    let elems = b.enumerate("edges", &src);
+
+    // keep heavy edges only — data-dependent output count per input
+    let heavy = b.node(
+        "filter",
+        &elems,
+        FilterMapLogic::new(1, move |idxs: &[u32], parent, out: &mut Emitter<'_, f32>| {
+            let v = parent_as::<Vertex>(parent.unwrap()).unwrap();
+            for &i in idxs {
+                let (_dst, w) = v.edges[i as usize];
+                if w > THRESHOLD {
+                    out.push(w);
+                }
+            }
+            Ok(())
+        }),
+    );
+
+    // per-vertex: surviving degree + weight mass
+    let stats = b.sink(
+        "degree",
+        &heavy,
+        Aggregator::new(
+            (0u32, 0.0f64),
+            |acc: &mut (u32, f64), ws: &[f32], _| {
+                acc.0 += ws.len() as u32;
+                acc.1 += ws.iter().map(|&w| w as f64).sum::<f64>();
+                Ok(())
+            },
+            |acc: &mut (u32, f64), p| {
+                let v = parent_as::<Vertex>(p).unwrap();
+                Ok(Some((v.id, acc.0, acc.1)))
+            },
+        ),
+    );
+
+    for v in &vertices {
+        src.push(v.clone());
+    }
+    let mut pipe = b.build();
+    pipe.run()?;
+
+    let out = stats.borrow();
+    let kept: u64 = out.iter().map(|&(_, d, _)| d as u64).sum();
+    println!(
+        "{} vertices, {} edges -> {} heavy edges ({:.1}%)",
+        N_VERTS,
+        total_edges,
+        kept,
+        100.0 * kept as f64 / total_edges as f64
+    );
+    let mut top: Vec<_> = out.iter().cloned().collect();
+    top.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+    println!("top-5 vertices by surviving weight:");
+    for (id, deg, mass) in top.iter().take(5) {
+        println!("  v{id:<6} degree {deg:<4} mass {mass:.3}");
+    }
+    let m = pipe.metrics();
+    print!("\n{}", m.table());
+    println!(
+        "\nnote the occupancy effect: vertex regions smaller than the SIMD \
+         width ({WIDTH}) force partial ensembles in 'filter'."
+    );
+    Ok(())
+}

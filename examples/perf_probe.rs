@@ -1,0 +1,51 @@
+//! Perf probe: where does a PJRT ensemble invocation spend its time?
+use regatta::runtime::kernels::KernelSet;
+use regatta::runtime::{lit_f32, lit_i32, ArtifactStore, Engine, KernelName};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let eng = Engine::new(ArtifactStore::discover()?)?;
+    let ks = KernelSet::xla(&eng, 128)?;
+    let vals = vec![0.5f32; 128];
+    let mask = vec![1i32; 128];
+    ks.sum_region(&vals, &mask, 0.0)?; // warm
+
+    const N: u32 = 5000;
+    // (a) full typed call
+    let t = Instant::now();
+    for _ in 0..N { ks.sum_region(&vals, &mask, 0.0)?; }
+    let full = t.elapsed().as_secs_f64() / N as f64;
+
+    // (b) literal creation only
+    let t = Instant::now();
+    for _ in 0..N {
+        std::hint::black_box((lit_f32(&vals), lit_i32(&mask), lit_f32(&[0.0])));
+    }
+    let lits = t.elapsed().as_secs_f64() / N as f64;
+
+    // (c) raw execute with pre-built literals
+    let k = eng.kernel(KernelName::SumRegion, 128)?;
+    let inputs = [lit_f32(&vals), lit_i32(&mask), lit_f32(&[0.0f32])];
+    let t = Instant::now();
+    for _ in 0..N {
+        let r = k.exe_ref().execute::<xla::Literal>(&inputs)?;
+        std::hint::black_box(&r);
+    }
+    let exec_only = t.elapsed().as_secs_f64() / N as f64;
+
+    // (d) execute + fetch result literal + tuple decompose
+    let t = Instant::now();
+    for _ in 0..N {
+        let r = k.exe_ref().execute::<xla::Literal>(&inputs)?;
+        let lit = r[0][0].to_literal_sync()?;
+        std::hint::black_box(lit.to_tuple()?);
+    }
+    let exec_fetch = t.elapsed().as_secs_f64() / N as f64;
+
+    println!("full typed call : {:9.2} us", full * 1e6);
+    println!("literal creation: {:9.2} us", lits * 1e6);
+    println!("execute only    : {:9.2} us", exec_only * 1e6);
+    println!("execute + fetch : {:9.2} us", exec_fetch * 1e6);
+    println!("typed-call overhead vs execute+fetch: {:6.2} us", (full - exec_fetch) * 1e6);
+    Ok(())
+}

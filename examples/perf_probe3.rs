@@ -1,0 +1,39 @@
+//! Per-kernel PJRT invocation cost at w=128.
+use regatta::runtime::kernels::KernelSet;
+use regatta::runtime::{ArtifactStore, Engine};
+use std::time::Instant;
+
+fn time<F: FnMut()>(n: u32, mut f: F) -> f64 {
+    let t = Instant::now();
+    for _ in 0..n { f(); }
+    t.elapsed().as_secs_f64() / n as f64 * 1e6
+}
+
+fn main() -> anyhow::Result<()> {
+    let eng = Engine::new(ArtifactStore::discover()?)?;
+    let ks = KernelSet::xla(&eng, 128)?;
+    let vals = vec![0.5f32; 128];
+    let mask = vec![1i32; 128];
+    let seg: Vec<i32> = (0..128).map(|i| i / 45).collect();
+    let chars = vec![0x7Bi32; 128];
+    let windows = vec![0i32; 128 * ks.window_len()];
+    // warm all
+    ks.sum_region(&vals, &mask, 0.0)?;
+    ks.filter_scale(&vals, &mask, 0.0)?;
+    ks.masked_sum(&vals, &mask)?;
+    ks.segmented_sum(&vals, &seg, &mask)?;
+    ks.tagged_sum_region(&vals, &seg, &mask, 0.0)?;
+    ks.char_classify(&chars, &mask)?;
+    ks.tagged_char_stage(&chars, &seg, &mask)?;
+    ks.coord_parse(&windows, &mask)?;
+    const N: u32 = 2000;
+    println!("sum_region        {:8.1} us", time(N, || { ks.sum_region(&vals, &mask, 0.0).unwrap(); }));
+    println!("filter_scale      {:8.1} us", time(N, || { ks.filter_scale(&vals, &mask, 0.0).unwrap(); }));
+    println!("masked_sum        {:8.1} us", time(N, || { ks.masked_sum(&vals, &mask).unwrap(); }));
+    println!("segmented_sum     {:8.1} us", time(N, || { ks.segmented_sum(&vals, &seg, &mask).unwrap(); }));
+    println!("tagged_sum_region {:8.1} us", time(N, || { ks.tagged_sum_region(&vals, &seg, &mask, 0.0).unwrap(); }));
+    println!("char_classify     {:8.1} us", time(N, || { ks.char_classify(&chars, &mask).unwrap(); }));
+    println!("tagged_char_stage {:8.1} us", time(N, || { ks.tagged_char_stage(&chars, &seg, &mask).unwrap(); }));
+    println!("coord_parse       {:8.1} us", time(500, || { ks.coord_parse(&windows, &mask).unwrap(); }));
+    Ok(())
+}

@@ -1,0 +1,99 @@
+"""AOT compile path: lower every L2 entry point to HLO **text**.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids, which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Layout::
+
+    artifacts/
+      manifest.json            # widths, kernel names, shape metadata
+      w128/<entry>.hlo.txt     # one module per (width, entry)
+      w32/...  w64/...  w256/...
+
+Python runs only here (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .kernels import WINDOW_LEN
+from .kernels.filter_scale import SCALE
+from .model import ENTRIES
+
+#: Default production width (the paper's CUDA block size) plus the
+#: ablation widths swept by `cargo bench --bench ablation_width`.
+DEFAULT_WIDTHS = (128, 32, 64, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name, width):
+    fn, specs = ENTRIES[name](width)
+    return jax.jit(fn).lower(*specs)
+
+
+def describe_specs(specs):
+    return [
+        {"dtype": s.dtype.name, "shape": list(s.shape)}
+        for s in specs
+    ]
+
+
+def build(out_dir, widths):
+    manifest = {
+        "format": "hlo-text",
+        "widths": sorted(widths),
+        "window_len": WINDOW_LEN,
+        "scale": SCALE,
+        "path_format": "w{width}/{entry}.hlo.txt",
+        "entries": {},
+    }
+    for name in ENTRIES:
+        _, specs = ENTRIES[name](widths[0])
+        manifest["entries"][name] = {"inputs": describe_specs(specs)}
+    n = 0
+    for w in widths:
+        wdir = os.path.join(out_dir, f"w{w}")
+        os.makedirs(wdir, exist_ok=True)
+        for name in ENTRIES:
+            lowered = lower_entry(name, w)
+            text = to_hlo_text(lowered)
+            path = os.path.join(wdir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            n += 1
+            print(f"  wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"AOT: {n} modules for widths {list(widths)} -> {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--widths",
+        default=",".join(str(w) for w in DEFAULT_WIDTHS),
+        help="comma-separated ensemble widths to compile",
+    )
+    args = ap.parse_args()
+    widths = [int(w) for w in args.widths.split(",") if w]
+    build(args.out_dir, widths)
+
+
+if __name__ == "__main__":
+    main()

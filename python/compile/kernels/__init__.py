@@ -1,0 +1,43 @@
+"""Layer-1 Pallas kernels for REGATTA.
+
+Each kernel processes one SIMD *ensemble*: a fixed-width batch of ``w``
+lanes with an active-lane mask (``i32[w]``, 0/1). The fixed shape is the
+point — one invocation costs the same regardless of how many lanes are
+active, which is exactly the SIMD-occupancy cost model of the paper.
+
+Every kernel has a pure-jnp/numpy oracle in :mod:`.ref`; pytest (including
+hypothesis sweeps) asserts equivalence under ``interpret=True``.
+
+Kernels
+-------
+``filter_scale``   masked filter ``isGood(v)`` + scale (paper Fig. 5 node f)
+``masked_sum``     sum of active lanes (aggregation accumulate, node a)
+``sum_region``     fused filter+scale+sum — the sum-app hot path (Figs 6/7)
+``segmented_sum``  per-tag sums within an ensemble via one-hot matmul
+                   (the in-band tagging baseline of paper Sec. 5)
+``tagged_sum_region``  fused filter+scale+segmented-sum (perf pass, see
+                   EXPERIMENTS.md §Perf)
+``char_classify``  open-brace candidate detection (taxi stage 1)
+``coord_parse``    ``{lat,lon}`` parser over per-lane char windows (taxi stage 2)
+"""
+
+from .filter_scale import filter_scale, SCALE
+from .masked_sum import masked_sum
+from .sum_region import sum_region
+from .segmented_sum import segmented_sum
+from .tagged_sum_region import tagged_sum_region
+from .char_classify import char_classify, OPEN_BRACE
+from .coord_parse import coord_parse, WINDOW_LEN
+
+__all__ = [
+    "filter_scale",
+    "masked_sum",
+    "sum_region",
+    "segmented_sum",
+    "tagged_sum_region",
+    "char_classify",
+    "coord_parse",
+    "SCALE",
+    "OPEN_BRACE",
+    "WINDOW_LEN",
+]

@@ -1,0 +1,65 @@
+"""``char_classify`` — taxi stage 1: open-brace candidate detection.
+
+The taxi app (paper Sec. 5, DIBS ``tstcsv->csv``) enumerates each text
+line's characters and keeps only positions that likely start a
+coordinate pair — the ``'{'`` characters. One invocation classifies one
+ensemble of characters (passed as their ASCII codes).
+
+Besides the candidate flag the kernel also emits digit/delimiter class
+bits, which the tagged taxi variant uses for its per-character work and
+which make the "tag every character" overhead of the pure-tagging
+baseline honest (Fig. 8, x-series).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: ASCII code of the candidate marker.
+OPEN_BRACE = 0x7B  # '{'
+
+_DIGIT_LO, _DIGIT_HI = 0x30, 0x39
+_COMMA, _DOT, _MINUS, _CLOSE = 0x2C, 0x2E, 0x2D, 0x7D
+
+
+def _char_classify_kernel(c_ref, m_ref, f_ref, k_ref):
+    c = c_ref[...]
+    m = m_ref[...]
+    active = m != 0
+    is_open = jnp.logical_and(c == OPEN_BRACE, active)
+    f_ref[...] = is_open.astype(jnp.int32)
+    # class bitmap: 1=digit, 2=dot, 4=comma, 8=minus, 16=close-brace
+    is_digit = jnp.logical_and(c >= _DIGIT_LO, c <= _DIGIT_HI)
+    k = (
+        is_digit.astype(jnp.int32)
+        + 2 * (c == _DOT).astype(jnp.int32)
+        + 4 * (c == _COMMA).astype(jnp.int32)
+        + 8 * (c == _MINUS).astype(jnp.int32)
+        + 16 * (c == _CLOSE).astype(jnp.int32)
+    )
+    k_ref[...] = jnp.where(active, k, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def char_classify(chars, mask, *, width=None):
+    """Classify one ensemble of characters.
+
+    Args:
+      chars: ``i32[w]`` ASCII codes.
+      mask: ``i32[w]`` active-lane mask (0/1).
+
+    Returns:
+      ``(is_candidate i32[w], class_bits i32[w])`` — 1 where the lane is
+      an active ``'{'``; a small class bitmap for every active lane.
+    """
+    w = width or chars.shape[0]
+    return pl.pallas_call(
+        _char_classify_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((w,), jnp.int32),
+            jax.ShapeDtypeStruct((w,), jnp.int32),
+        ),
+        interpret=True,
+    )(chars, mask)

@@ -1,0 +1,169 @@
+"""``coord_parse`` — taxi stage 2: verify + parse ``{lat,lon}`` pairs.
+
+Each active lane holds a ``WINDOW_LEN``-char window of the raw text
+starting at a candidate ``'{'`` (stage 1 output). The kernel verifies
+the candidate really is a coordinate pair of the form::
+
+    '{' [-] digits ['.' digits] ',' [-] digits ['.' digits] '}'
+
+and, if so, parses both fields. Per the paper's app, the emitted pair is
+**swapped** relative to the text order.
+
+GPU→TPU adaptation: on the GPU each thread runs a divergent char loop;
+divergence is free to express but costs lockstep idling. Here the state
+machine is *vectorized across lanes* — a ``fori_loop`` over the window
+columns carrying per-lane state vectors, every lane advancing in
+lockstep through ``jnp.where`` cascades. Same O(w·WINDOW_LEN) work, no
+divergence, pure VPU.
+
+State per lane: current field (0/1), integer/fraction accumulators,
+fraction divisor, sign, seen-dot / seen-digit flags, done, ok.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Window length in characters; ``{-123.4567890,-123.4567890}`` is 27,
+#: so 32 covers any well-formed pair the generator emits.
+WINDOW_LEN = 32
+
+_DIGIT_LO, _DIGIT_HI = 0x30, 0x39
+_OPEN, _CLOSE, _COMMA, _DOT, _MINUS = 0x7B, 0x7D, 0x2C, 0x2E, 0x2D
+
+
+def _parse_window(win, active):
+    """Vectorized parser. ``win``: i32[w, WINDOW_LEN]; returns (a, b, ok)."""
+    w = win.shape[0]
+    f32 = jnp.float32
+    i32 = jnp.int32
+    zf = jnp.zeros((w,), f32)
+    zi = jnp.zeros((w,), i32)
+
+    # Lanes whose window does not start with '{' are invalid from the off;
+    # inactive lanes are parked as done/not-ok.
+    starts_ok = win[:, 0] == _OPEN
+    done0 = jnp.logical_or(~active, ~starts_ok)
+
+    state0 = (
+        zi,          # field: 0 or 1
+        zf,          # acc_int
+        zf,          # acc_frac
+        jnp.ones((w,), f32),  # frac_div
+        jnp.ones((w,), f32),  # sign
+        zi,          # seen_dot
+        zi,          # seen_digit
+        zf,          # a (field 0 value)
+        zf,          # b (field 1 value)
+        done0,       # done (bool)
+        zi,          # ok
+    )
+
+    def step(p, state):
+        (field, acc_i, acc_f, fdiv, sign, sdot, sdig, a, b, done, ok) = state
+        c = win[:, p]
+        is_digit = jnp.logical_and(c >= _DIGIT_LO, c <= _DIGIT_HI)
+        d = (c - _DIGIT_LO).astype(f32)
+        live = ~done
+
+        # digit: accumulate into int or frac part
+        dig = jnp.logical_and(live, is_digit)
+        grow_frac = jnp.logical_and(dig, sdot != 0)
+        grow_int = jnp.logical_and(dig, sdot == 0)
+        acc_i = jnp.where(grow_int, acc_i * 10.0 + d, acc_i)
+        acc_f = jnp.where(grow_frac, acc_f * 10.0 + d, acc_f)
+        fdiv = jnp.where(grow_frac, fdiv * 10.0, fdiv)
+        sdig = jnp.where(dig, 1, sdig)
+
+        # '.': only once per field, and only after a digit
+        dot = jnp.logical_and(live, c == _DOT)
+        dot_ok = jnp.logical_and(dot, jnp.logical_and(sdot == 0, sdig != 0))
+        dot_bad = jnp.logical_and(dot, ~jnp.logical_and(sdot == 0, sdig != 0))
+        sdot = jnp.where(dot_ok, 1, sdot)
+
+        # '-': only as the first char of a field
+        neg = jnp.logical_and(live, c == _MINUS)
+        at_start = jnp.logical_and(sdig == 0, jnp.logical_and(sdot == 0, sign > 0))
+        neg_ok = jnp.logical_and(neg, at_start)
+        neg_bad = jnp.logical_and(neg, ~at_start)
+        sign = jnp.where(neg_ok, -jnp.ones((w,), f32), sign)
+
+        value = sign * (acc_i + acc_f / fdiv)
+
+        # ',': close field 0
+        comma = jnp.logical_and(live, c == _COMMA)
+        comma_ok = jnp.logical_and(comma, jnp.logical_and(field == 0, sdig != 0))
+        comma_bad = jnp.logical_and(comma, ~jnp.logical_and(field == 0, sdig != 0))
+        a = jnp.where(comma_ok, value, a)
+        field = jnp.where(comma_ok, 1, field)
+        acc_i = jnp.where(comma_ok, zf, acc_i)
+        acc_f = jnp.where(comma_ok, zf, acc_f)
+        fdiv = jnp.where(comma_ok, jnp.ones((w,), f32), fdiv)
+        sign = jnp.where(comma_ok, jnp.ones((w,), f32), sign)
+        sdot = jnp.where(comma_ok, 0, sdot)
+        sdig = jnp.where(comma_ok, 0, sdig)
+
+        # '}': close field 1, success
+        close = jnp.logical_and(live, c == _CLOSE)
+        close_ok = jnp.logical_and(close, jnp.logical_and(field == 1, sdig != 0))
+        close_bad = jnp.logical_and(close, ~jnp.logical_and(field == 1, sdig != 0))
+        b = jnp.where(close_ok, value, b)
+        ok = jnp.where(close_ok, 1, ok)
+
+        # anything else (incl. '{' again, NUL padding) is invalid
+        known = is_digit | (c == _DOT) | (c == _MINUS) | (c == _COMMA) | (c == _CLOSE)
+        other_bad = jnp.logical_and(live, ~known)
+
+        bad = dot_bad | neg_bad | comma_bad | close_bad | other_bad
+        done = done | bad | close_ok
+        return (field, acc_i, acc_f, fdiv, sign, sdot, sdig, a, b, done, ok)
+
+    # Perf pass (EXPERIMENTS.md §Perf): unroll the window scan. A
+    # fori_loop lowers to an HLO while-loop whose per-iteration dispatch
+    # overhead on the CPU backend dwarfs the ~20 vector ops inside; the
+    # unrolled straight-line graph fuses into a handful of kernels.
+    state = state0
+    for p in range(1, WINDOW_LEN):
+        state = step(p, state)
+    a, b, ok = state[7], state[8], state[10]
+    # a window that runs out of chars without hitting '}' is invalid (ok=0)
+    a = jnp.where(ok != 0, a, 0.0)
+    b = jnp.where(ok != 0, b, 0.0)
+    return a, b, ok
+
+
+def _coord_parse_kernel(w_ref, m_ref, x_ref, y_ref, ok_ref):
+    win = w_ref[...]
+    active = m_ref[...] != 0
+    a, b, ok = _parse_window(win, active)
+    # The taxi app emits the pair SWAPPED relative to the text.
+    x_ref[...] = b
+    y_ref[...] = a
+    ok_ref[...] = ok
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def coord_parse(windows, mask, *, width=None):
+    """Verify + parse one ensemble of candidate windows.
+
+    Args:
+      windows: ``i32[w, WINDOW_LEN]`` ASCII windows, each starting at a
+        candidate ``'{'`` (pad past end-of-line with 0).
+      mask: ``i32[w]`` active-lane mask (0/1).
+
+    Returns:
+      ``(x f32[w], y f32[w], ok i32[w])`` — the *swapped* pair per lane
+      (``x`` = second field, ``y`` = first field) and a validity flag.
+    """
+    w = width or windows.shape[0]
+    return pl.pallas_call(
+        _coord_parse_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((w,), jnp.float32),
+            jax.ShapeDtypeStruct((w,), jnp.float32),
+            jax.ShapeDtypeStruct((w,), jnp.int32),
+        ),
+        interpret=True,
+    )(windows, mask)

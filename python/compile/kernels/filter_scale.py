@@ -1,0 +1,53 @@
+"""``filter_scale`` — the paper's Fig. 5 filtering node ``f``.
+
+Per active lane: keep ``v`` iff ``isGood(v)`` (here ``v > threshold``) and
+emit ``SCALE * v``; inactive or filtered lanes come back with a zeroed
+output mask. Irregular dataflow in miniature: each input yields 0 or 1
+outputs, and the coordinator compacts the survivors downstream.
+
+TPU notes: a ``w``-lane f32 ensemble is a single sub-tile in VMEM
+(w=128 → 512 B/operand); the kernel is a pure VPU elementwise op, no MXU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: The constant the paper's example multiplies surviving values by (Fig. 5).
+SCALE = 3.14
+
+
+def _filter_scale_kernel(v_ref, m_ref, t_ref, ov_ref, om_ref):
+    v = v_ref[...]
+    m = m_ref[...]
+    t = t_ref[0]
+    good = jnp.logical_and(v > t, m != 0)
+    ov_ref[...] = jnp.where(good, SCALE * v, jnp.float32(0.0))
+    om_ref[...] = good.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def filter_scale(vals, mask, threshold, *, width=None):
+    """Masked filter + scale over one ensemble.
+
+    Args:
+      vals: ``f32[w]`` lane values.
+      mask: ``i32[w]`` active-lane mask (0/1).
+      threshold: ``f32[1]`` — lanes with ``v > threshold`` survive.
+      width: static ensemble width (defaults to ``vals.shape[0]``).
+
+    Returns:
+      ``(out_vals f32[w], out_mask i32[w])`` — scaled survivors, with
+      ``out_mask`` marking lanes that produced an output.
+    """
+    w = width or vals.shape[0]
+    return pl.pallas_call(
+        _filter_scale_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((w,), jnp.float32),
+            jax.ShapeDtypeStruct((w,), jnp.int32),
+        ),
+        interpret=True,
+    )(vals, mask, threshold)

@@ -1,0 +1,47 @@
+"""``masked_sum`` — the aggregation accumulate of the paper's node ``a``.
+
+Sums the active lanes of one ensemble into a scalar partial sum. The
+coordinator adds partial sums into the per-parent accumulator between
+``begin()`` and ``end()`` — the SIMD-parallel reduction the paper notes
+node ``a`` would use in practice (Sec. 4.2).
+
+TPU notes: VPU lane reduction; output kept as ``f32[1]`` (SMEM scalar on
+real hardware).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _masked_sum_kernel(v_ref, m_ref, o_ref, c_ref):
+    v = v_ref[...]
+    m = m_ref[...]
+    active = m != 0
+    o_ref[0] = jnp.sum(jnp.where(active, v, jnp.float32(0.0)))
+    c_ref[0] = jnp.sum(active.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def masked_sum(vals, mask, *, width=None):
+    """Sum of active lanes.
+
+    Args:
+      vals: ``f32[w]`` lane values.
+      mask: ``i32[w]`` active-lane mask (0/1).
+
+    Returns:
+      ``(sum f32[1], count i32[1])`` — partial sum and active-lane count.
+    """
+    w = width or vals.shape[0]
+    del w
+    return pl.pallas_call(
+        _masked_sum_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ),
+        interpret=True,
+    )(vals, mask)

@@ -1,0 +1,135 @@
+"""Pure numpy oracles for every L1 kernel.
+
+Deliberately *independent* implementations — plain numpy (and, for the
+parser, a per-lane Python character loop) rather than a restructuring of
+the kernel code — so pytest equivalence is a real correctness signal.
+"""
+
+import numpy as np
+
+SCALE = 3.14
+OPEN_BRACE = 0x7B
+WINDOW_LEN = 32
+
+
+def filter_scale_ref(vals, mask, threshold):
+    vals = np.asarray(vals, np.float32)
+    mask = np.asarray(mask, np.int32)
+    t = np.float32(np.asarray(threshold).reshape(-1)[0])
+    good = (vals > t) & (mask != 0)
+    out = np.where(good, np.float32(SCALE) * vals, np.float32(0.0))
+    return out.astype(np.float32), good.astype(np.int32)
+
+
+def masked_sum_ref(vals, mask):
+    vals = np.asarray(vals, np.float32)
+    mask = np.asarray(mask, np.int32)
+    active = mask != 0
+    s = np.float32(vals[active].sum(dtype=np.float32))
+    return np.array([s], np.float32), np.array([active.sum()], np.int32)
+
+
+def sum_region_ref(vals, mask, threshold):
+    out, omask = filter_scale_ref(vals, mask, threshold)
+    s = np.float32(out[omask != 0].sum(dtype=np.float32))
+    return np.array([s], np.float32), np.array([(omask != 0).sum()], np.int32)
+
+
+def segmented_sum_ref(vals, seg, mask):
+    vals = np.asarray(vals, np.float32)
+    seg = np.asarray(seg, np.int32)
+    mask = np.asarray(mask, np.int32)
+    w = vals.shape[0]
+    sums = np.zeros(w, np.float32)
+    counts = np.zeros(w, np.int32)
+    for i in range(w):
+        if mask[i] != 0:
+            sums[seg[i]] += vals[i]
+            counts[seg[i]] += 1
+    return sums, counts
+
+
+def char_classify_ref(chars, mask):
+    chars = np.asarray(chars, np.int32)
+    mask = np.asarray(mask, np.int32)
+    active = mask != 0
+    is_open = (chars == OPEN_BRACE) & active
+    bits = np.zeros_like(chars)
+    bits += ((chars >= 0x30) & (chars <= 0x39)).astype(np.int32)
+    bits += 2 * (chars == 0x2E).astype(np.int32)
+    bits += 4 * (chars == 0x2C).astype(np.int32)
+    bits += 8 * (chars == 0x2D).astype(np.int32)
+    bits += 16 * (chars == 0x7D).astype(np.int32)
+    bits = np.where(active, bits, 0)
+    return is_open.astype(np.int32), bits
+
+
+def _parse_one(window):
+    """Parse one '{a,b}' window with an explicit per-char loop.
+
+    Returns (a, b, ok). Mirrors the grammar, not the kernel: single
+    optional leading '-', digits, optional '.' digits (dot only after a
+    digit), ',' between exactly two fields, '}' terminator. Arithmetic is
+    done in float32 steps to match the kernel's accumulation exactly.
+    """
+    if len(window) == 0 or window[0] != ord("{"):
+        return 0.0, 0.0, 0
+    f32 = np.float32
+    field = 0
+    acc_i, acc_f, fdiv, sign = f32(0), f32(0), f32(1), f32(1)
+    seen_dot = seen_digit = False
+    a = f32(0)
+    for c in window[1:]:
+        if ord("0") <= c <= ord("9"):
+            d = f32(c - ord("0"))
+            if seen_dot:
+                acc_f = f32(acc_f * f32(10) + d)
+                fdiv = f32(fdiv * f32(10))
+            else:
+                acc_i = f32(acc_i * f32(10) + d)
+            seen_digit = True
+        elif c == ord("."):
+            if seen_dot or not seen_digit:
+                return 0.0, 0.0, 0
+            seen_dot = True
+        elif c == ord("-"):
+            if seen_digit or seen_dot or sign < 0:
+                return 0.0, 0.0, 0
+            sign = f32(-1)
+        elif c == ord(","):
+            if field != 0 or not seen_digit:
+                return 0.0, 0.0, 0
+            a = f32(sign * f32(acc_i + f32(acc_f / fdiv)))
+            field = 1
+            acc_i, acc_f, fdiv, sign = f32(0), f32(0), f32(1), f32(1)
+            seen_dot = seen_digit = False
+        elif c == ord("}"):
+            if field != 1 or not seen_digit:
+                return 0.0, 0.0, 0
+            b = f32(sign * f32(acc_i + f32(acc_f / fdiv)))
+            return float(a), float(b), 1
+        else:
+            return 0.0, 0.0, 0
+    return 0.0, 0.0, 0  # ran out of window without '}'
+
+
+def coord_parse_ref(windows, mask):
+    windows = np.asarray(windows, np.int32)
+    mask = np.asarray(mask, np.int32)
+    w = windows.shape[0]
+    x = np.zeros(w, np.float32)
+    y = np.zeros(w, np.float32)
+    ok = np.zeros(w, np.int32)
+    for i in range(w):
+        if mask[i] == 0:
+            continue
+        a, b, good = _parse_one(list(windows[i]))
+        if good:
+            # swapped output: x = second field, y = first field
+            x[i], y[i], ok[i] = b, a, 1
+    return x, y, ok
+
+
+def tagged_sum_region_ref(vals, seg, mask, threshold):
+    out, omask = filter_scale_ref(vals, mask, threshold)
+    return segmented_sum_ref(out, seg, omask)

@@ -1,0 +1,64 @@
+"""``segmented_sum`` — per-tag sums within one ensemble.
+
+The in-band *tagging* baseline of the paper's Sec. 5 (CnC-CUDA style):
+instead of capping ensembles at region boundaries, every item carries its
+region tag, so a full ensemble may mix items from many regions. Each
+invocation reduces the ensemble into per-segment partial sums keyed by
+the lane's local segment id.
+
+TPU adaptation: the natural GPU implementation is an atomic
+scatter-add; scatters are poison on the MXU-era memory system, so we
+express the reduction as a one-hot matmul — ``one_hot(seg)ᵀ · vals`` —
+which maps straight onto the systolic array. This is the
+DESIGN.md §Hardware-Adaptation example of rethinking a CUDA idiom for
+TPU rather than porting it.
+
+Cost intuition (and what the Fig. 8 benches measure): full occupancy,
+but O(w²) MAC work and a tag per item — representation overhead traded
+against occupancy, the paper's central tradeoff.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segmented_sum_kernel(v_ref, seg_ref, m_ref, s_ref, c_ref):
+    v = v_ref[...]
+    seg = seg_ref[...]
+    m = m_ref[...]
+    w = v.shape[0]
+    active = m != 0
+    vm = jnp.where(active, v, jnp.float32(0.0))
+    # one_hot[lane, segment] — inactive lanes select no segment.
+    seg_ids = jax.lax.broadcasted_iota(jnp.int32, (w, w), 1)
+    one_hot = jnp.logical_and(seg[:, None] == seg_ids, active[:, None])
+    one_hot_f = one_hot.astype(jnp.float32)
+    s_ref[...] = jnp.dot(vm, one_hot_f, preferred_element_type=jnp.float32)
+    c_ref[...] = jnp.sum(one_hot.astype(jnp.int32), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def segmented_sum(vals, seg, mask, *, width=None):
+    """Per-segment sums over one ensemble via one-hot matmul.
+
+    Args:
+      vals: ``f32[w]`` lane values.
+      seg: ``i32[w]`` per-lane segment id in ``[0, w)`` (ensemble-local).
+      mask: ``i32[w]`` active-lane mask (0/1).
+
+    Returns:
+      ``(sums f32[w], counts i32[w])`` — sum and item count per segment
+      id; segments not present in the ensemble get 0.
+    """
+    w = width or vals.shape[0]
+    return pl.pallas_call(
+        _segmented_sum_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((w,), jnp.float32),
+            jax.ShapeDtypeStruct((w,), jnp.int32),
+        ),
+        interpret=True,
+    )(vals, seg, mask)

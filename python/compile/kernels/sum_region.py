@@ -1,0 +1,54 @@
+"""``sum_region`` — fused filter+scale+sum, the sum-app hot path.
+
+One invocation of this kernel is one node firing of the paper's
+benchmark computation (Sec. 5, Figs 6/7): filter the ensemble's active
+lanes, scale survivors, and reduce to a scalar partial sum — all in one
+HLO module so XLA fuses the elementwise chain straight into the
+reduction (verified in the perf pass: no intermediate buffer
+materialises).
+
+Because the coordinator caps the ensemble at the region boundary
+(credit), the partial sum is always confined to a single region; the
+fixed-width invocation cost is how reduced SIMD occupancy shows up as
+wall-clock time.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .filter_scale import SCALE
+
+
+def _sum_region_kernel(v_ref, m_ref, t_ref, s_ref, k_ref):
+    v = v_ref[...]
+    m = m_ref[...]
+    t = t_ref[0]
+    good = jnp.logical_and(v > t, m != 0)
+    s_ref[0] = jnp.sum(jnp.where(good, SCALE * v, jnp.float32(0.0)))
+    k_ref[0] = jnp.sum(good.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def sum_region(vals, mask, threshold, *, width=None):
+    """Fused filter+scale+partial-sum over one ensemble.
+
+    Args:
+      vals: ``f32[w]`` lane values.
+      mask: ``i32[w]`` active-lane mask (0/1).
+      threshold: ``f32[1]`` filter threshold (``v > t`` survives).
+
+    Returns:
+      ``(partial_sum f32[1], kept i32[1])``.
+    """
+    del width
+    return pl.pallas_call(
+        _sum_region_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ),
+        interpret=True,
+    )(vals, mask, threshold)

@@ -1,0 +1,60 @@
+"""``tagged_sum_region`` — fused filter+scale+segmented-sum.
+
+Perf-pass kernel (EXPERIMENTS.md §Perf): the tagged sum app originally
+issued two invocations per ensemble (``filter_scale`` then
+``segmented_sum``); since each fixed-width invocation costs ~150 µs of
+PJRT dispatch regardless of content, fusing them halves the dense
+baseline's cost per ensemble. One invocation per ensemble on both sides
+of the §5 comparison keeps it honest.
+
+Same TPU adaptation as ``segmented_sum``: the reduction is a one-hot
+matmul (MXU-friendly), not a scatter.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .filter_scale import SCALE
+
+
+def _tagged_sum_region_kernel(v_ref, seg_ref, m_ref, t_ref, s_ref, c_ref):
+    v = v_ref[...]
+    seg = seg_ref[...]
+    m = m_ref[...]
+    t = t_ref[0]
+    w = v.shape[0]
+    good = jnp.logical_and(v > t, m != 0)
+    scaled = jnp.where(good, SCALE * v, jnp.float32(0.0))
+    seg_ids = jax.lax.broadcasted_iota(jnp.int32, (w, w), 1)
+    one_hot = jnp.logical_and(seg[:, None] == seg_ids, good[:, None])
+    one_hot_f = one_hot.astype(jnp.float32)
+    s_ref[...] = jnp.dot(scaled, one_hot_f, preferred_element_type=jnp.float32)
+    c_ref[...] = jnp.sum(one_hot.astype(jnp.int32), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def tagged_sum_region(vals, seg, mask, threshold, *, width=None):
+    """Fused filter+scale+per-segment-sum over one tagged ensemble.
+
+    Args:
+      vals: ``f32[w]`` lane values.
+      seg: ``i32[w]`` ensemble-local segment ids in ``[0, w)``.
+      mask: ``i32[w]`` active-lane mask (0/1).
+      threshold: ``f32[1]`` filter threshold (``v > t`` survives).
+
+    Returns:
+      ``(sums f32[w], counts i32[w])`` — per-segment sum of scaled
+      survivors and surviving-lane count.
+    """
+    w = width or vals.shape[0]
+    return pl.pallas_call(
+        _tagged_sum_region_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((w,), jnp.float32),
+            jax.ShapeDtypeStruct((w,), jnp.int32),
+        ),
+        interpret=True,
+    )(vals, seg, mask, threshold)

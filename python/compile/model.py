@@ -1,0 +1,117 @@
+"""Layer-2 JAX model: fixed-width ensemble functions over the L1 kernels.
+
+Each entry point is the compute graph that one coordinator node runs per
+*firing* — a fixed-shape, width-``w`` batch function. `aot.py` lowers each
+entry for every configured width to HLO text; the Rust runtime
+(`rust/src/runtime/`) loads and invokes them via PJRT with the lane mask
+expressing SIMD occupancy.
+
+All scalars travel as rank-1 single-element arrays so every argument is a
+plain buffer on the Rust side.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    WINDOW_LEN,
+    char_classify,
+    coord_parse,
+    filter_scale,
+    masked_sum,
+    segmented_sum,
+    sum_region,
+    tagged_sum_region,
+)
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Entry points. Each factory returns (callable, example_args) for a width.
+# Every callable returns a tuple (lowered with return_tuple=True).
+# ---------------------------------------------------------------------------
+
+
+def entry_filter_scale(w):
+    def fn(vals, mask, threshold):
+        return filter_scale(vals, mask, threshold)
+
+    return fn, (_spec((w,), F32), _spec((w,), I32), _spec((1,), F32))
+
+
+def entry_masked_sum(w):
+    def fn(vals, mask):
+        return masked_sum(vals, mask)
+
+    return fn, (_spec((w,), F32), _spec((w,), I32))
+
+
+def entry_sum_region(w):
+    def fn(vals, mask, threshold):
+        return sum_region(vals, mask, threshold)
+
+    return fn, (_spec((w,), F32), _spec((w,), I32), _spec((1,), F32))
+
+
+def entry_segmented_sum(w):
+    def fn(vals, seg, mask):
+        return segmented_sum(vals, seg, mask)
+
+    return fn, (_spec((w,), F32), _spec((w,), I32), _spec((w,), I32))
+
+
+def entry_tagged_sum_region(w):
+    def fn(vals, seg, mask, threshold):
+        return tagged_sum_region(vals, seg, mask, threshold)
+
+    return fn, (_spec((w,), F32), _spec((w,), I32), _spec((w,), I32), _spec((1,), F32))
+
+
+def entry_char_classify(w):
+    def fn(chars, mask):
+        return char_classify(chars, mask)
+
+    return fn, (_spec((w,), I32), _spec((w,), I32))
+
+
+def entry_coord_parse(w):
+    def fn(windows, mask):
+        return coord_parse(windows, mask)
+
+    return fn, (_spec((w, WINDOW_LEN), I32), _spec((w,), I32))
+
+
+def entry_tagged_char_stage(w):
+    """Fused stage for the pure-tagging taxi variant.
+
+    Classifies a full (possibly mixed-region) ensemble of characters AND
+    reduces, per region tag present in the ensemble, the count of
+    candidate braces — the per-character work plus tag bookkeeping that
+    makes the dense representation's overhead real (Fig. 8, x-series).
+    """
+
+    def fn(chars, tags, mask):
+        flags, bits = char_classify(chars, mask)
+        tag_counts_f, _ = segmented_sum(flags.astype(F32), tags, mask)
+        return flags, bits, tag_counts_f.astype(I32)
+
+    return fn, (_spec((w,), I32), _spec((w,), I32), _spec((w,), I32))
+
+
+#: name -> entry factory; the AOT artifact set and the Rust runtime's
+#: kernel registry are both driven by this table.
+ENTRIES = {
+    "filter_scale": entry_filter_scale,
+    "masked_sum": entry_masked_sum,
+    "sum_region": entry_sum_region,
+    "segmented_sum": entry_segmented_sum,
+    "tagged_sum_region": entry_tagged_sum_region,
+    "char_classify": entry_char_classify,
+    "coord_parse": entry_coord_parse,
+    "tagged_char_stage": entry_tagged_char_stage,
+}

@@ -1,0 +1,23 @@
+"""Shared fixtures/helpers for the REGATTA kernel test suite."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import WINDOW_LEN
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC0FFEE)
+
+
+def make_window(s: str) -> np.ndarray:
+    """ASCII window padded with NULs to WINDOW_LEN (as the Rust side does)."""
+    out = np.zeros(WINDOW_LEN, np.int32)
+    bs = s.encode("ascii")[:WINDOW_LEN]
+    out[: len(bs)] = np.frombuffer(bs, np.uint8)
+    return out
+
+
+def random_mask(rng, w, p_active=0.75):
+    return (rng.random(w) < p_active).astype(np.int32)

@@ -1,0 +1,55 @@
+"""AOT path: every L2 entry lowers to loadable-looking HLO text, and the
+manifest describes exactly the artifact set (names, widths, shapes)."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import ENTRIES
+from compile.kernels import WINDOW_LEN
+
+
+@pytest.mark.parametrize("name", sorted(ENTRIES))
+def test_entry_lowers_to_hlo_text(name):
+    lowered = aot.lower_entry(name, 8)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # all ids must be 32-bit-safe for xla_extension 0.5.1 (the text parser
+    # reassigns them, but the text itself must be syntactically complete)
+    assert text.strip().endswith("}")
+
+
+@pytest.mark.parametrize("name", sorted(ENTRIES))
+def test_entry_executes_after_roundtrip(name):
+    """Lower → HLO text is still a *functioning* module: re-running the
+    jitted fn on zeros matches the eager kernel (sanity that lowering
+    didn't specialize away inputs)."""
+    fn, specs = ENTRIES[name](8)
+    args = [np.zeros(s.shape, s.dtype) for s in specs]
+    out_jit = jax.jit(fn)(*args)
+    out_eager = fn(*args)
+    for a, b in zip(out_jit, out_eager):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_build_writes_manifest_and_modules(tmp_path):
+    aot.build(str(tmp_path), [8])
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["widths"] == [8]
+    assert manifest["window_len"] == WINDOW_LEN
+    assert set(manifest["entries"]) == set(ENTRIES)
+    for name in ENTRIES:
+        p = tmp_path / "w8" / f"{name}.hlo.txt"
+        assert p.exists() and p.stat().st_size > 0
+
+
+def test_manifest_shapes_match_model():
+    _, specs = ENTRIES["coord_parse"](128)
+    desc = aot.describe_specs(specs)
+    assert desc[0] == {"dtype": "int32", "shape": [128, WINDOW_LEN]}
+    assert desc[1] == {"dtype": "int32", "shape": [128]}

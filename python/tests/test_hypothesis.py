@@ -1,0 +1,125 @@
+"""Hypothesis sweeps: kernel ⇄ ref equivalence over generated shapes,
+values, masks and (for the parser) generated grammar strings.
+"""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import (
+    WINDOW_LEN,
+    char_classify,
+    coord_parse,
+    filter_scale,
+    masked_sum,
+    segmented_sum,
+)
+from compile.kernels import ref
+
+from .conftest import make_window
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+widths = st.sampled_from([4, 8, 16, 32])
+finite_f32 = st.floats(
+    min_value=-1e4, max_value=1e4, allow_nan=False, width=32
+)
+
+
+@st.composite
+def ensemble(draw):
+    w = draw(widths)
+    vals = np.array(draw(st.lists(finite_f32, min_size=w, max_size=w)), np.float32)
+    mask = np.array(draw(st.lists(st.integers(0, 1), min_size=w, max_size=w)), np.int32)
+    return vals, mask
+
+
+@given(ensemble(), finite_f32)
+@settings(**_SETTINGS)
+def test_filter_scale_hypothesis(vm, t):
+    vals, mask = vm
+    th = np.array([t], np.float32)
+    ov, om = filter_scale(vals, mask, th)
+    rv, rm = ref.filter_scale_ref(vals, mask, th)
+    np.testing.assert_allclose(np.asarray(ov), rv, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(om), rm)
+
+
+@given(ensemble())
+@settings(**_SETTINGS)
+def test_masked_sum_hypothesis(vm):
+    vals, mask = vm
+    s, c = masked_sum(vals, mask)
+    rs, rc = ref.masked_sum_ref(vals, mask)
+    np.testing.assert_allclose(np.asarray(s), rs, rtol=1e-4, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(c), rc)
+
+
+@given(ensemble(), st.randoms(use_true_random=False))
+@settings(**_SETTINGS)
+def test_segmented_sum_hypothesis(vm, rnd):
+    vals, mask = vm
+    w = vals.shape[0]
+    seg = np.array([rnd.randrange(w) for _ in range(w)], np.int32)
+    s, c = segmented_sum(vals, seg, mask)
+    rs, rc = ref.segmented_sum_ref(vals, seg, mask)
+    np.testing.assert_allclose(np.asarray(s), rs, rtol=1e-4, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(c), rc)
+
+
+@given(
+    st.lists(st.integers(0, 255), min_size=8, max_size=8),
+    st.lists(st.integers(0, 1), min_size=8, max_size=8),
+)
+@settings(**_SETTINGS)
+def test_char_classify_hypothesis(cs, ms):
+    chars = np.array(cs, np.int32)
+    mask = np.array(ms, np.int32)
+    f, b = char_classify(chars, mask)
+    rf, rb = ref.char_classify_ref(chars, mask)
+    np.testing.assert_array_equal(np.asarray(f), rf)
+    np.testing.assert_array_equal(np.asarray(b), rb)
+
+
+@st.composite
+def coord_text(draw):
+    """Mix of well-formed pairs and mutated near-misses."""
+
+    def field():
+        sign = draw(st.sampled_from(["", "-"]))
+        ip = str(draw(st.integers(0, 999999)))
+        if draw(st.booleans()):
+            return f"{sign}{ip}.{draw(st.integers(0, 99999))}"
+        return f"{sign}{ip}"
+
+    s = "{" + field() + "," + field() + "}"
+    if draw(st.booleans()):
+        # mutate one char to exercise the reject paths
+        i = draw(st.integers(0, len(s) - 1))
+        c = draw(st.sampled_from("{},.-x9"))
+        s = s[:i] + c + s[i + 1 :]
+    return s[:WINDOW_LEN]
+
+
+@given(st.lists(coord_text(), min_size=4, max_size=4))
+@settings(**_SETTINGS)
+def test_coord_parse_hypothesis(texts):
+    wins = np.stack([make_window(t) for t in texts])
+    mask = np.ones(4, np.int32)
+    x, y, ok = coord_parse(wins, mask)
+    rx, ry, rok = ref.coord_parse_ref(wins, mask)
+    np.testing.assert_array_equal(np.asarray(ok), rok)
+    np.testing.assert_allclose(np.asarray(x), rx, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(y), ry, rtol=1e-6, atol=1e-6)
+
+
+@given(st.integers(0, 99999), st.integers(0, 9999), st.integers(0, 99999), st.integers(0, 9999))
+@settings(**_SETTINGS)
+def test_coord_parse_value_correct(ai, af, bi, bf):
+    """Parsed value agrees with Python's own float parse (within f32)."""
+    a, b = f"{ai}.{af}", f"-{bi}.{bf}"
+    wins = np.stack([make_window("{" + a + "," + b + "}")] * 4)
+    x, y, ok = coord_parse(wins, np.ones(4, np.int32))
+    assert np.asarray(ok)[0] == 1
+    np.testing.assert_allclose(np.asarray(y)[0], np.float32(float(a)), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(x)[0], np.float32(float(b)), rtol=1e-5)

@@ -1,0 +1,82 @@
+"""Algebraic invariants of the kernels (beyond pointwise ref-equality).
+
+These pin down properties the coordinator relies on: segment sums must be
+permutation-invariant, degenerate tag patterns must collapse to the plain
+masked reduction, and occupancy masking must behave like padding.
+"""
+
+import numpy as np
+
+from compile.kernels import (
+    filter_scale,
+    masked_sum,
+    segmented_sum,
+    sum_region,
+)
+
+
+def test_segmented_sum_permutation_invariant(rng):
+    w = 32
+    vals = rng.normal(size=w).astype(np.float32)
+    seg = rng.integers(0, 4, size=w).astype(np.int32)
+    mask = np.ones(w, np.int32)
+    s1, c1 = segmented_sum(vals, seg, mask)
+    perm = rng.permutation(w)
+    s2, c2 = segmented_sum(vals[perm], seg[perm], mask)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_segmented_sum_single_tag_equals_masked_sum(rng):
+    """One region per ensemble ⇒ tagging degenerates to the sparse design."""
+    w = 64
+    vals = rng.normal(size=w).astype(np.float32)
+    mask = (rng.random(w) < 0.7).astype(np.int32)
+    seg = np.zeros(w, np.int32)
+    s, c = segmented_sum(vals, seg, mask)
+    ms, mc = masked_sum(vals, mask)
+    np.testing.assert_allclose(np.asarray(s)[0], np.asarray(ms)[0], rtol=1e-5, atol=1e-5)
+    assert np.asarray(c)[0] == np.asarray(mc)[0]
+    assert not np.asarray(s)[1:].any()
+
+
+def test_segmented_sum_totals_match_masked_sum(rng):
+    """Sum over segments == masked sum: no item lost or double-counted."""
+    w = 128
+    vals = rng.normal(size=w).astype(np.float32)
+    seg = rng.integers(0, w, size=w).astype(np.int32)
+    mask = (rng.random(w) < 0.5).astype(np.int32)
+    s, c = segmented_sum(vals, seg, mask)
+    ms, mc = masked_sum(vals, mask)
+    np.testing.assert_allclose(np.asarray(s).sum(), np.asarray(ms)[0], rtol=1e-4, atol=1e-4)
+    assert np.asarray(c).sum() == np.asarray(mc)[0]
+
+
+def test_mask_is_padding(rng):
+    """A partially-full ensemble equals a narrower full one, zero-padded —
+    the property that makes occupancy purely a *cost*, never a semantics,
+    concern for the coordinator."""
+    w, k = 32, 11
+    vals = np.zeros(w, np.float32)
+    vals[:k] = rng.normal(size=k).astype(np.float32)
+    mask = np.zeros(w, np.int32)
+    mask[:k] = 1
+    t = np.array([0.0], np.float32)
+    s_part, k_part = sum_region(vals, mask, t)
+    s_full, k_full = sum_region(
+        vals[:16].copy() * 0 + np.pad(vals[:k], (0, 16 - k)),
+        np.pad(np.ones(k, np.int32), (0, 16 - k)),
+        t,
+    )
+    np.testing.assert_allclose(np.asarray(s_part), np.asarray(s_full), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(k_part), np.asarray(k_full))
+
+
+def test_filter_scale_idempotent_mask(rng):
+    """Output mask of filter_scale is a subset of the input mask."""
+    w = 64
+    vals = rng.normal(size=w).astype(np.float32)
+    mask = (rng.random(w) < 0.6).astype(np.int32)
+    _, om = filter_scale(vals, mask, np.array([0.0], np.float32))
+    om = np.asarray(om)
+    assert ((om == 1) <= (mask == 1)).all()

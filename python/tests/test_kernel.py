@@ -1,0 +1,174 @@
+"""Kernel vs. pure-numpy oracle — the CORE correctness signal.
+
+Every Pallas kernel (interpret=True) is checked against its independent
+numpy implementation in ``compile.kernels.ref`` across widths, seeds and
+mask densities, including the all-active and all-inactive edges.
+"""
+
+import numpy as np
+import pytest
+
+from compile.kernels import (
+    WINDOW_LEN,
+    char_classify,
+    coord_parse,
+    filter_scale,
+    masked_sum,
+    segmented_sum,
+    sum_region,
+    tagged_sum_region,
+)
+from compile.kernels import ref
+
+from .conftest import make_window, random_mask
+
+WIDTHS = [8, 16, 128]
+SEEDS = [0, 1, 2]
+DENSITIES = [0.0, 0.5, 1.0]
+
+
+def _data(w, seed, density):
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(scale=10.0, size=w).astype(np.float32)
+    mask = random_mask(rng, w, density)
+    return rng, vals, mask
+
+
+@pytest.mark.parametrize("w", WIDTHS)
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("density", DENSITIES)
+def test_filter_scale_matches_ref(w, seed, density):
+    _, vals, mask = _data(w, seed, density)
+    t = np.array([0.5], np.float32)
+    ov, om = filter_scale(vals, mask, t)
+    rv, rm = ref.filter_scale_ref(vals, mask, t)
+    np.testing.assert_allclose(np.asarray(ov), rv, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(om), rm)
+
+
+@pytest.mark.parametrize("w", WIDTHS)
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("density", DENSITIES)
+def test_masked_sum_matches_ref(w, seed, density):
+    _, vals, mask = _data(w, seed, density)
+    s, c = masked_sum(vals, mask)
+    rs, rc = ref.masked_sum_ref(vals, mask)
+    np.testing.assert_allclose(np.asarray(s), rs, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(c), rc)
+
+
+@pytest.mark.parametrize("w", WIDTHS)
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("density", DENSITIES)
+def test_sum_region_matches_ref(w, seed, density):
+    _, vals, mask = _data(w, seed, density)
+    t = np.array([-1.0], np.float32)
+    s, k = sum_region(vals, mask, t)
+    rs, rk = ref.sum_region_ref(vals, mask, t)
+    np.testing.assert_allclose(np.asarray(s), rs, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(k), rk)
+
+
+@pytest.mark.parametrize("w", WIDTHS)
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("density", DENSITIES)
+def test_segmented_sum_matches_ref(w, seed, density):
+    rng, vals, mask = _data(w, seed, density)
+    seg = rng.integers(0, w, size=w).astype(np.int32)
+    s, c = segmented_sum(vals, seg, mask)
+    rs, rc = ref.segmented_sum_ref(vals, seg, mask)
+    np.testing.assert_allclose(np.asarray(s), rs, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(c), rc)
+
+
+@pytest.mark.parametrize("w", WIDTHS)
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("density", DENSITIES)
+def test_tagged_sum_region_matches_ref(w, seed, density):
+    rng, vals, mask = _data(w, seed, density)
+    seg = rng.integers(0, w, size=w).astype(np.int32)
+    t = np.array([0.0], np.float32)
+    s, c = tagged_sum_region(vals, seg, mask, t)
+    rs, rc = ref.tagged_sum_region_ref(vals, seg, mask, t)
+    np.testing.assert_allclose(np.asarray(s), rs, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(c), rc)
+
+
+def test_tagged_sum_region_equals_two_step():
+    """The fused kernel is exactly filter_scale ∘ segmented_sum."""
+    rng = np.random.default_rng(5)
+    w = 32
+    vals = rng.normal(size=w).astype(np.float32)
+    seg = rng.integers(0, w, size=w).astype(np.int32)
+    mask = (rng.random(w) < 0.7).astype(np.int32)
+    t = np.array([0.25], np.float32)
+    s1, c1 = tagged_sum_region(vals, seg, mask, t)
+    fv, fm = filter_scale(vals, mask, t)
+    s2, c2 = segmented_sum(fv, seg, fm)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+@pytest.mark.parametrize("w", WIDTHS)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_char_classify_matches_ref(w, seed):
+    rng = np.random.default_rng(seed)
+    # realistic char mix: taxi-like text bytes
+    text = b'{12.5,-3.9}T42,extra {7,8} pad' * 8
+    chars = np.frombuffer(text[:w].ljust(w, b" "), np.uint8).astype(np.int32)
+    mask = random_mask(rng, w)
+    f, b = char_classify(chars, mask)
+    rf, rb = ref.char_classify_ref(chars, mask)
+    np.testing.assert_array_equal(np.asarray(f), rf)
+    np.testing.assert_array_equal(np.asarray(b), rb)
+
+
+@pytest.mark.parametrize("w", [8, 16])
+def test_coord_parse_matches_ref(w):
+    cases = [
+        "{12.5,-3.25}",
+        "{1,2}",
+        "{-116.52,39.93}trailing",
+        "{0.0,0.0}",
+        "{bad}",
+        "{1.2,}",
+        "{1,2",            # truncated — no closing brace
+        "{--1,2}",         # double sign
+        "{1.2.3,4}",       # double dot
+        "{.5,1}",          # dot before digit
+        "{1,2,3}",         # too many fields
+        "{-,1}",           # sign without digits
+        "x1,2}",           # doesn't start with '{'
+        "{999999,0.125}",
+        "{-0.5,-0.5}",
+        "{3,4}{5,6}",      # second pair after close ignored
+    ]
+    wins = np.stack([make_window(c) for c in (cases * ((w // len(cases)) + 1))[:w]])
+    mask = np.ones(w, np.int32)
+    mask[-1] = 0  # one inactive lane
+    x, y, ok = coord_parse(wins, mask)
+    rx, ry, rok = ref.coord_parse_ref(wins, mask)
+    np.testing.assert_array_equal(np.asarray(ok), rok)
+    np.testing.assert_allclose(np.asarray(x), rx, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(y), ry, rtol=1e-6)
+
+
+def test_coord_parse_swaps_fields():
+    wins = np.stack([make_window("{11.5,-42.25}")] * 8)
+    mask = np.ones(8, np.int32)
+    x, y, ok = coord_parse(wins, mask)
+    assert np.asarray(ok)[0] == 1
+    assert np.asarray(x)[0] == np.float32(-42.25)  # second field first
+    assert np.asarray(y)[0] == np.float32(11.5)
+
+
+def test_all_inactive_ensemble_is_zero():
+    w = 16
+    vals = np.full(w, 7.0, np.float32)
+    mask = np.zeros(w, np.int32)
+    s, c = masked_sum(vals, mask)
+    assert np.asarray(s)[0] == 0.0 and np.asarray(c)[0] == 0
+    ov, om = filter_scale(vals, mask, np.array([0.0], np.float32))
+    assert not np.asarray(om).any()
+    sums, counts = segmented_sum(vals, np.zeros(w, np.int32), mask)
+    assert not np.asarray(sums).any() and not np.asarray(counts).any()

@@ -1,0 +1,38 @@
+//! Ablation A3 (paper §6 future work): per-lane context via dense tags +
+//! segmented reduction (signal-free, full occupancy) vs signal-delimited
+//! ensembles, across region sizes — plus the scheduling-policy ablation.
+//! Run: `cargo bench --bench ablation_lanectx`
+//!
+//! Expected: lane-context wins for regions well below the SIMD width
+//! (occupancy dominates); signals win for large regions (representation
+//! overhead dominates) — the §5 tradeoff, quantified.
+
+use regatta::bench::figures::{ablation_lanectx, ablation_policy, SweepConfig};
+
+fn main() {
+    let mut cfg = SweepConfig::default();
+    cfg.items = std::env::var("REGATTA_BENCH_ITEMS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1 << 19);
+    let rows = ablation_lanectx(&cfg).expect("lanectx ablation");
+    let small = rows.first().unwrap();
+    let large = rows.last().unwrap();
+    println!("\nshape checks:");
+    println!(
+        "  small regions ({}): lane-ctx {:.4}s vs signals {:.4}s ({})",
+        small.0,
+        small.2,
+        small.1,
+        if small.2 < small.1 { "lane-ctx wins, as expected" } else { "signals win" }
+    );
+    println!(
+        "  large regions ({}): signals {:.4}s vs lane-ctx {:.4}s ({})",
+        large.0,
+        large.1,
+        large.2,
+        if large.1 < large.2 { "signals win, as expected" } else { "lane-ctx wins" }
+    );
+
+    ablation_policy(&cfg, 48).expect("policy ablation");
+}

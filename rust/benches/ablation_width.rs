@@ -1,0 +1,29 @@
+//! Ablation A2: the Fig-6 mechanism tracks the SIMD width — sweeping
+//! w ∈ {32, 64, 128, 256} moves the occupancy minima with it.
+//! Run: `cargo bench --bench ablation_width`
+
+use regatta::bench::figures::{ablation_width, SweepConfig};
+
+fn main() {
+    let mut cfg = SweepConfig::default();
+    cfg.items = std::env::var("REGATTA_BENCH_ITEMS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1 << 19);
+    let out = ablation_width(&cfg, &[32, 64, 128, 256]).expect("width ablation");
+    println!("\nshape check: occupancy at region=w vs region=w+8 per width:");
+    for (w, rows) in &out {
+        let occ = |r: usize| {
+            rows.iter()
+                .find(|x| x.region == r)
+                .map(|x| x.occupancy)
+                .unwrap_or(0.0)
+        };
+        println!(
+            "  w={w}: occ(w)={:.2} occ(w+8)={:.2} ({})",
+            occ(*w),
+            occ(*w + 8),
+            if occ(*w) > occ(*w + 8) { "minimum tracks width" } else { "MISMATCH" }
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! §5 abstraction-penalty check: applications that do not use signals or
+//! enumeration pay ~nothing for the machinery (paper: "verified to be
+//! negligible"). Run: `cargo bench --bench abstraction_penalty`
+
+use regatta::bench::figures::{abstraction_penalty, SweepConfig};
+
+fn main() {
+    let mut cfg = SweepConfig::default();
+    cfg.items = std::env::var("REGATTA_BENCH_ITEMS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1 << 19);
+    let (raw, coord, signals) = abstraction_penalty(&cfg).expect("penalty bench");
+    println!(
+        "\ncoordinator overhead vs raw loop: {:+.1}% (signals unused), {:+.1}% (aligned regions)",
+        100.0 * (coord / raw - 1.0),
+        100.0 * (signals / raw - 1.0)
+    );
+}

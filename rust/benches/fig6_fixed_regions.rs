@@ -1,0 +1,29 @@
+//! Regenerates **Figure 6**: execution time vs fixed region size for the
+//! sum app (paper §5). Run: `cargo bench --bench fig6_fixed_regions`
+//!
+//! Expected shape (paper): time falls sharply as region size grows toward
+//! the SIMD width, local minima at multiples of the width, sharp jumps
+//! just past each multiple.
+
+use regatta::bench::figures::{fig6, SweepConfig};
+
+fn main() {
+    let mut cfg = SweepConfig::default();
+    if let Ok(n) = std::env::var("REGATTA_BENCH_ITEMS") {
+        cfg.items = n.parse().expect("REGATTA_BENCH_ITEMS");
+    }
+    let rows = fig6(&cfg).expect("fig6 sweep");
+    // shape check: width-aligned minima — time(w) < time(w+8)
+    let at = |r: usize| rows.iter().find(|x| x.region == r).map(|x| x.seconds);
+    if let (Some(tw), Some(twp)) = (at(cfg.width), at(cfg.width + 8)) {
+        println!(
+            "\nshape check: time({}) = {:.4}s {} time({}) = {:.4}s  ({})",
+            cfg.width,
+            tw,
+            if tw < twp { "<" } else { ">=" },
+            cfg.width + 8,
+            twp,
+            if tw < twp { "aligned minimum reproduced" } else { "MISMATCH vs paper" }
+        );
+    }
+}

@@ -1,0 +1,29 @@
+//! Regenerates **Figure 7**: execution time vs *maximum* region size with
+//! sizes uniform in [0, max]. Run: `cargo bench --bench fig7_variable_regions`
+//!
+//! Expected shape (paper): the sharp alignment peaks of Fig. 6 smooth
+//! out; larger regions still cost less abstraction overhead.
+
+use regatta::bench::figures::{fig7, SweepConfig};
+
+fn main() {
+    let mut cfg = SweepConfig::default();
+    if let Ok(n) = std::env::var("REGATTA_BENCH_ITEMS") {
+        cfg.items = n.parse().expect("REGATTA_BENCH_ITEMS");
+    }
+    let rows = fig7(&cfg).expect("fig7 sweep");
+    let first = rows.first().unwrap();
+    let last = rows.last().unwrap();
+    println!(
+        "\nshape check: time(max={}) = {:.4}s vs time(max={}) = {:.4}s  ({})",
+        first.region,
+        first.seconds,
+        last.region,
+        last.seconds,
+        if last.seconds < first.seconds {
+            "larger regions cheaper, as in paper"
+        } else {
+            "MISMATCH vs paper"
+        }
+    );
+}

@@ -1,0 +1,47 @@
+//! Regenerates **Figure 8**: the taxi app under its three context
+//! strategies (pure enumeration / hybrid / pure tagging) vs input size,
+//! plus the §5 occupancy statistic (paper: stage 1 91 % full, stage 2
+//! 9 % full in the pure-enumeration variant).
+//!
+//! Run: `cargo bench --bench fig8_taxi`
+//! Expected shape: hybrid fastest; pure tagging ≈30 % slower than hybrid
+//! at the largest input.
+
+use regatta::apps::taxi::TaxiVariant;
+use regatta::bench::figures::{fig8, SweepConfig};
+
+fn main() {
+    let cfg = SweepConfig::default();
+    let base_lines = std::env::var("REGATTA_BENCH_LINES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+    let rows = fig8(&cfg, base_lines, &[1, 2, 4, 8]).expect("fig8 sweep");
+
+    let max_scale = rows.iter().map(|r| r.scale).max().unwrap();
+    let at = |v: TaxiVariant| {
+        rows.iter()
+            .find(|r| r.scale == max_scale && r.variant == v)
+            .unwrap()
+    };
+    let e = at(TaxiVariant::Enumerated);
+    let h = at(TaxiVariant::Hybrid);
+    let t = at(TaxiVariant::Tagged);
+    println!("\nshape checks at scale {max_scale}:");
+    println!(
+        "  hybrid {:.4}s < pure-enum {:.4}s: {}",
+        h.seconds,
+        e.seconds,
+        h.seconds < e.seconds
+    );
+    println!(
+        "  pure-tagging {:.4}s vs hybrid: {:.2}x (paper: ~1.3x)",
+        t.seconds,
+        t.seconds / h.seconds
+    );
+    println!(
+        "  occupancy split (pure-enum): stage1 {:.0}% / stage2 {:.0}% full (paper: 91%/9%)",
+        100.0 * e.stage1_full,
+        100.0 * e.stage2_full
+    );
+}

@@ -1,0 +1,109 @@
+//! Coordinator micro-benchmarks: per-operation costs of the L3 hot path.
+//! Run: `cargo bench --bench micro_coordinator`
+//!
+//! These feed the §Perf analysis in EXPERIMENTS.md: the coordinator's
+//! per-ensemble overhead (queue ops + credit bookkeeping + metrics) must
+//! stay well under one PJRT kernel invocation.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use regatta::bench::{BenchConfig, Table};
+use regatta::coordinator::channel::Channel;
+use regatta::coordinator::signal::SignalKind;
+use regatta::coordinator::tagging::densify_tags;
+use regatta::runtime::kernels::KernelSet;
+use regatta::runtime::{ArtifactStore, Engine};
+use regatta::util::stats::fmt_duration;
+
+fn time_per_op<F: FnMut()>(ops: u64, mut f: F) -> f64 {
+    let t = Instant::now();
+    f();
+    t.elapsed().as_secs_f64() / ops as f64
+}
+
+fn main() {
+    let _ = BenchConfig::from_env();
+    let mut t = Table::new(&["operation", "per-op"]);
+
+    // queue push+pop through a channel (the per-item L3 cost)
+    const N: u64 = 1_000_000;
+    let ch: Rc<Channel<u64>> = Channel::new(1 << 20, 1 << 10);
+    let mut buf = Vec::with_capacity(128);
+    let per = time_per_op(N, || {
+        for i in 0..N {
+            ch.push(i);
+        }
+        let mut got = 0;
+        while got < N {
+            got += ch.pop_data_into(128, &mut buf) as u64;
+        }
+    });
+    t.row(&["channel push+pop (per item)".into(), fmt_duration(per)]);
+
+    // signal emit + credit transfer + pop (per region boundary)
+    const S: u64 = 200_000;
+    let per = time_per_op(S, || {
+        for _ in 0..S {
+            ch.push(1);
+            ch.emit_signal(SignalKind::Custom(1));
+            ch.pop_data_into(1, &mut buf);
+            ch.take_head_signal_credit();
+            ch.pop_signal();
+        }
+    });
+    t.row(&["signal emit+consume (per signal)".into(), fmt_duration(per)]);
+
+    // tag densification at width 128 (per ensemble, tagged baseline)
+    let tags: Vec<u64> = (0..128u64).map(|i| i / 45).collect();
+    let (mut local, mut uniq) = (Vec::new(), Vec::new());
+    const D: u64 = 100_000;
+    let per = time_per_op(D, || {
+        for _ in 0..D {
+            densify_tags(&tags, &mut local, &mut uniq);
+        }
+    });
+    t.row(&["densify_tags w=128 (per ensemble)".into(), fmt_duration(per)]);
+
+    // native kernel ensemble (L3 floor without PJRT)
+    let ksn = KernelSet::native(128);
+    let vals = vec![0.5f32; 128];
+    let mask = vec![1i32; 128];
+    const K: u64 = 100_000;
+    let per = time_per_op(K, || {
+        for _ in 0..K {
+            ksn.sum_region(&vals, &mask, 0.0).unwrap();
+        }
+    });
+    t.row(&["native sum_region w=128".into(), fmt_duration(per)]);
+
+    // PJRT kernel invocation (the SIMD machine's cost unit)
+    if let Ok(store) = ArtifactStore::discover() {
+        let eng = Engine::new(store).unwrap();
+        let ks = KernelSet::xla(&eng, 128).unwrap();
+        ks.sum_region(&vals, &mask, 0.0).unwrap(); // warm
+        const X: u64 = 2_000;
+        let per = time_per_op(X, || {
+            for _ in 0..X {
+                ks.sum_region(&vals, &mask, 0.0).unwrap();
+            }
+        });
+        t.row(&["PJRT sum_region w=128 (cost unit)".into(), fmt_duration(per)]);
+
+        let wl = ks.window_len();
+        let windows = vec![0i32; 128 * wl];
+        ks.coord_parse(&windows, &mask).unwrap();
+        const P: u64 = 500;
+        let per = time_per_op(P, || {
+            for _ in 0..P {
+                ks.coord_parse(&windows, &mask).unwrap();
+            }
+        });
+        t.row(&["PJRT coord_parse w=128".into(), fmt_duration(per)]);
+    } else {
+        eprintln!("(artifacts missing — PJRT rows skipped; run `make artifacts`)");
+    }
+
+    println!("== Coordinator micro-benchmarks ==");
+    t.print();
+}

@@ -1,0 +1,42 @@
+//! Benchmark applications from the paper's evaluation (§5).
+//!
+//! * [`sum`] — the region-sum microbenchmark behind Figs 6/7: enumerate
+//!   each region of an integer stream, filter+scale+sum its elements, one
+//!   sum per region. Variants: enumerated (sparse signals), tagged
+//!   (dense in-band), fused vs two-stage pipeline shapes.
+//! * [`taxi`] — the DIBS `tstcsv->csv` application behind Fig. 8, in the
+//!   paper's three implementations: pure enumeration, hybrid
+//!   (enumerate stage 1 / tag stage 2), and pure tagging.
+//!
+//! Every app runs on either kernel backend (native Rust mirror or the
+//! AOT-compiled XLA artifacts via PJRT) at any compiled ensemble width.
+
+pub mod sum;
+pub mod taxi;
+
+/// Fill `mask` with `take` ones followed by `width - take` zeros — the
+/// standard compact-ensemble occupancy mask (public: the bench harness
+/// uses it for its raw-loop baselines).
+pub fn prefix_mask(mask: &mut Vec<i32>, take: usize, width: usize) {
+    mask.clear();
+    mask.resize(width, 0);
+    for m in mask.iter_mut().take(take) {
+        *m = 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_mask_shapes() {
+        let mut m = Vec::new();
+        prefix_mask(&mut m, 3, 8);
+        assert_eq!(m, vec![1, 1, 1, 0, 0, 0, 0, 0]);
+        prefix_mask(&mut m, 0, 4);
+        assert_eq!(m, vec![0, 0, 0, 0]);
+        prefix_mask(&mut m, 4, 4);
+        assert_eq!(m, vec![1, 1, 1, 1]);
+    }
+}

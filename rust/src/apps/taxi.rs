@@ -1,0 +1,732 @@
+//! The "taxi" application (paper §5, Fig. 8): DIBS `tstcsv->csv`.
+//!
+//! Parse every `{lat,lon}` pair out of a stream of tagged text lines,
+//! swap the pair, and emit it with its line's tag. Two stages:
+//!
+//! 1. **classify** — scan the line's characters for candidate `'{'`s;
+//! 2. **parse** — verify each candidate and parse the pair.
+//!
+//! The paper's three implementations, reproduced here as [`TaxiVariant`]:
+//!
+//! * `Enumerated` — both stages consume enumerated streams inside the
+//!   line's region. Stage 1 sees ~1397 chars/line (mostly full ensembles,
+//!   paper: 91 %); stage 2 sees ~45 candidates/line (mostly partial,
+//!   paper: 9 % full).
+//! * `Hybrid` — stage 1 enumerated, but it *closes* the region and tags
+//!   each candidate explicitly; stage 2 packs candidates from many lines
+//!   into full ensembles. The paper's winner.
+//! * `Tagged` — no enumeration anywhere: every character is tagged
+//!   (dense context), both stages run full but stage 1 pays the per-char
+//!   tag overhead — ~30 % slower than hybrid at scale.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::aggregate::MapLogic;
+use crate::coordinator::metrics::PipelineMetrics;
+use crate::coordinator::node::{Emitter, NodeLogic};
+use crate::coordinator::scheduler::Policy;
+use crate::coordinator::signal::{parent_as, ParentRef};
+use crate::coordinator::topology::PipelineBuilder;
+use crate::runtime::kernels::KernelSet;
+use crate::workload::taxi::{TaxiLine, TaxiWorkload};
+
+use super::prefix_mask;
+
+/// Implementation strategy (the three series of Fig. 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaxiVariant {
+    Enumerated,
+    Hybrid,
+    Tagged,
+}
+
+impl TaxiVariant {
+    pub fn all() -> [TaxiVariant; 3] {
+        [
+            TaxiVariant::Enumerated,
+            TaxiVariant::Hybrid,
+            TaxiVariant::Tagged,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TaxiVariant::Enumerated => "pure-enumeration",
+            TaxiVariant::Hybrid => "hybrid",
+            TaxiVariant::Tagged => "pure-tagging",
+        }
+    }
+}
+
+/// One parsed, swapped coordinate pair, marked with its line's tag.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaxiPair {
+    pub tag: u32,
+    pub x: f32,
+    pub y: f32,
+}
+
+/// A candidate position flowing between stages: absolute text offset plus
+/// (for the tagged representations) the line tag and line end.
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    pub abs: u32,
+    pub line_end: u32,
+    pub tag: u32,
+}
+
+/// App configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TaxiConfig {
+    pub width: usize,
+    pub variant: TaxiVariant,
+    pub data_cap: usize,
+    pub signal_cap: usize,
+    pub policy: Policy,
+}
+
+impl Default for TaxiConfig {
+    fn default() -> Self {
+        TaxiConfig {
+            width: 128,
+            variant: TaxiVariant::Hybrid,
+            data_cap: 8192,
+            signal_cap: 2048,
+            policy: Policy::GreedyOccupancy,
+        }
+    }
+}
+
+/// Run report.
+#[derive(Debug, Clone)]
+pub struct TaxiReport {
+    pub pairs: Vec<TaxiPair>,
+    pub metrics: PipelineMetrics,
+    pub elapsed: f64,
+    pub invocations: u64,
+}
+
+/// Parse the line tag from its head (`T<digits>,`): the paper parses each
+/// line's tag once, when the line is first enumerated.
+pub fn parse_tag(line: &TaxiLine) -> u32 {
+    let bytes = line.bytes();
+    let mut v: u32 = 0;
+    for &b in bytes.iter().skip(1) {
+        if b.is_ascii_digit() {
+            v = v * 10 + (b - b'0') as u32;
+        } else {
+            break;
+        }
+    }
+    v
+}
+
+/// The taxi application.
+pub struct TaxiApp {
+    cfg: TaxiConfig,
+    kernels: Rc<KernelSet>,
+}
+
+impl TaxiApp {
+    pub fn new(cfg: TaxiConfig, kernels: Rc<KernelSet>) -> TaxiApp {
+        assert_eq!(cfg.width, kernels.width(), "config/kernel width mismatch");
+        TaxiApp { cfg, kernels }
+    }
+
+    pub fn config(&self) -> &TaxiConfig {
+        &self.cfg
+    }
+
+    /// Process a workload; returns the parsed pairs and metrics.
+    pub fn run(&self, w: &TaxiWorkload) -> Result<TaxiReport> {
+        let inv0 = self.kernels.invocations();
+        let (pairs, metrics) = match self.cfg.variant {
+            TaxiVariant::Enumerated => self.run_enumerated(w)?,
+            TaxiVariant::Hybrid => self.run_hybrid(w)?,
+            TaxiVariant::Tagged => self.run_tagged(w)?,
+        };
+        Ok(TaxiReport {
+            pairs,
+            elapsed: metrics.elapsed,
+            invocations: self.kernels.invocations() - inv0,
+            metrics,
+        })
+    }
+
+    fn run_enumerated(&self, w: &TaxiWorkload) -> Result<(Vec<TaxiPair>, PipelineMetrics)> {
+        let cfg = self.cfg;
+        let mut b = PipelineBuilder::new(cfg.width)
+            .queue_caps(cfg.data_cap, cfg.signal_cap)
+            .policy(cfg.policy);
+        let src = b.source_with_cap::<TaxiLine>(w.lines.len().max(1));
+        let chars = b.enumerate("enum_chars", &src);
+        let cands = b.node(
+            "classify",
+            &chars,
+            ClassifyLogic::new(self.kernels.clone(), cfg.width, StageOneOut::InRegion),
+        );
+        let parsed = b.node(
+            "parse",
+            &cands,
+            ParseEnumLogic::new(self.kernels.clone(), cfg.width),
+        );
+        let sink = b.sink("out", &parsed, MapLogic::new(|p: &TaxiPair| *p));
+        Self::feed_lines(&src, &w.lines);
+        let mut pipe = b.build();
+        pipe.run()?;
+        let pairs = sink.borrow().clone();
+        Ok((pairs, pipe.metrics()))
+    }
+
+    fn run_hybrid(&self, w: &TaxiWorkload) -> Result<(Vec<TaxiPair>, PipelineMetrics)> {
+        let cfg = self.cfg;
+        let mut b = PipelineBuilder::new(cfg.width)
+            .queue_caps(cfg.data_cap, cfg.signal_cap)
+            .policy(cfg.policy);
+        let src = b.source_with_cap::<TaxiLine>(w.lines.len().max(1));
+        let chars = b.enumerate("enum_chars", &src);
+        // stage 1 closes the region and tags each candidate explicitly
+        let cands = b.node(
+            "classify",
+            &chars,
+            ClassifyLogic::new(self.kernels.clone(), cfg.width, StageOneOut::TaggedCandidates),
+        );
+        let parsed = b.node(
+            "parse",
+            &cands,
+            ParsePlainLogic::new(self.kernels.clone(), cfg.width, w.text.clone()),
+        );
+        let sink = b.sink("out", &parsed, MapLogic::new(|p: &TaxiPair| *p));
+        Self::feed_lines(&src, &w.lines);
+        let mut pipe = b.build();
+        pipe.run()?;
+        let pairs = sink.borrow().clone();
+        Ok((pairs, pipe.metrics()))
+    }
+
+    fn run_tagged(&self, w: &TaxiWorkload) -> Result<(Vec<TaxiPair>, PipelineMetrics)> {
+        let cfg = self.cfg;
+        let mut b = PipelineBuilder::new(cfg.width)
+            .queue_caps(cfg.data_cap, cfg.signal_cap)
+            .policy(cfg.policy);
+        let src = b.source_with_cap::<Candidate>(cfg.data_cap);
+        let cands = b.node(
+            "classify",
+            &src,
+            TaggedClassifyLogic::new(self.kernels.clone(), cfg.width, w.text.clone()),
+        );
+        let parsed = b.node(
+            "parse",
+            &cands,
+            ParsePlainLogic::new(self.kernels.clone(), cfg.width, w.text.clone()),
+        );
+        let sink = b.sink("out", &parsed, MapLogic::new(|p: &TaxiPair| *p));
+        let mut pipe = b.build();
+
+        // Dense representation: EVERY character becomes a tagged item.
+        // Feed in queue-capacity batches, draining between refills.
+        for line in &w.lines {
+            let tag = parse_tag(line);
+            let end = (line.start + line.len) as u32;
+            let mut off = 0usize;
+            while off < line.len {
+                let n = src.data_space().min(line.len - off);
+                let base = (line.start + off) as u32;
+                src.push_iter((0..n as u32).map(|k| Candidate {
+                    abs: base + k,
+                    line_end: end,
+                    tag,
+                }));
+                off += n;
+                if off < line.len {
+                    pipe.run()?;
+                }
+            }
+        }
+        pipe.run()?;
+        let pairs = sink.borrow().clone();
+        Ok((pairs, pipe.metrics()))
+    }
+
+    fn feed_lines(src: &Rc<crate::coordinator::channel::Channel<TaxiLine>>, lines: &[TaxiLine]) {
+        for line in lines {
+            src.push(line.clone());
+        }
+    }
+}
+
+/// What stage 1 emits.
+enum StageOneOut {
+    /// Line-relative offsets, staying inside the enumeration region.
+    InRegion,
+    /// Explicitly tagged absolute candidates; the region is closed here.
+    TaggedCandidates,
+}
+
+/// Stage 1 over enumerated characters: gather + `char_classify` kernel.
+struct ClassifyLogic {
+    kernels: Rc<KernelSet>,
+    width: usize,
+    out_kind: StageOneOut,
+    chars: Vec<i32>,
+    mask: Vec<i32>,
+    line: Option<Rc<TaxiLine>>,
+    tag: u32,
+}
+
+impl ClassifyLogic {
+    fn new(kernels: Rc<KernelSet>, width: usize, out_kind: StageOneOut) -> ClassifyLogic {
+        ClassifyLogic {
+            kernels,
+            width,
+            out_kind,
+            chars: vec![0; width],
+            mask: Vec::with_capacity(width),
+            line: None,
+            tag: 0,
+        }
+    }
+}
+
+/// Stage-1 output item: either a line-relative offset (enumerated) or a
+/// tagged absolute candidate (hybrid). One type keeps the channel simple.
+#[derive(Debug, Clone, Copy)]
+pub enum Stage1Item {
+    Offset(u32),
+    Cand(Candidate),
+}
+
+impl NodeLogic for ClassifyLogic {
+    type In = u32;
+    type Out = Stage1Item;
+
+    fn begin(&mut self, parent: &ParentRef, _out: &mut Emitter<'_, Stage1Item>) -> Result<()> {
+        let line = parent_as::<TaxiLine>(parent).expect("TaxiLine parent");
+        // tag parsed once per line, on first enumeration (paper §5)
+        self.tag = parse_tag(&line);
+        self.line = Some(line);
+        Ok(())
+    }
+
+    fn run(
+        &mut self,
+        items: &[u32],
+        parent: Option<&ParentRef>,
+        out: &mut Emitter<'_, Stage1Item>,
+    ) -> Result<()> {
+        let line = match &self.line {
+            Some(l) => l.clone(),
+            None => parent_as::<TaxiLine>(parent.expect("enumerated")).expect("TaxiLine"),
+        };
+        let bytes = line.bytes();
+        for (slot, &off) in self.chars.iter_mut().zip(items) {
+            *slot = bytes[off as usize] as i32;
+        }
+        for slot in self.chars[items.len()..].iter_mut() {
+            *slot = 0;
+        }
+        prefix_mask(&mut self.mask, items.len(), self.width);
+        let (flags, _bits) = self.kernels.char_classify(&self.chars, &self.mask)?;
+        for i in 0..items.len() {
+            if flags[i] != 0 {
+                match self.out_kind {
+                    StageOneOut::InRegion => out.push(Stage1Item::Offset(items[i])),
+                    StageOneOut::TaggedCandidates => out.push(Stage1Item::Cand(Candidate {
+                        abs: line.abs(items[i]) as u32,
+                        line_end: (line.start + line.len) as u32,
+                        tag: self.tag,
+                    })),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn end(&mut self, _parent: &ParentRef, _out: &mut Emitter<'_, Stage1Item>) -> Result<()> {
+        self.line = None;
+        Ok(())
+    }
+
+    fn max_outputs_per_input(&self) -> usize {
+        1
+    }
+
+    fn forward_region_signals(&self) -> bool {
+        matches!(self.out_kind, StageOneOut::InRegion)
+    }
+}
+
+/// Stage 2 inside the enumeration region (pure-enumeration variant):
+/// candidates are line-relative; the parent supplies text and tag.
+struct ParseEnumLogic {
+    kernels: Rc<KernelSet>,
+    width: usize,
+    windows: Vec<i32>,
+    mask: Vec<i32>,
+    line: Option<Rc<TaxiLine>>,
+    tag: u32,
+}
+
+impl ParseEnumLogic {
+    fn new(kernels: Rc<KernelSet>, width: usize) -> ParseEnumLogic {
+        let wl = kernels.window_len();
+        ParseEnumLogic {
+            kernels,
+            width,
+            windows: vec![0; width * wl],
+            mask: Vec::with_capacity(width),
+            line: None,
+            tag: 0,
+        }
+    }
+}
+
+fn fill_window(dst: &mut [i32], text: &[u8], start: usize, end: usize) {
+    let avail = end.saturating_sub(start).min(dst.len());
+    for (k, slot) in dst.iter_mut().enumerate() {
+        *slot = if k < avail { text[start + k] as i32 } else { 0 };
+    }
+}
+
+impl NodeLogic for ParseEnumLogic {
+    type In = Stage1Item;
+    type Out = TaxiPair;
+
+    fn begin(&mut self, parent: &ParentRef, _out: &mut Emitter<'_, TaxiPair>) -> Result<()> {
+        let line = parent_as::<TaxiLine>(parent).expect("TaxiLine parent");
+        self.tag = parse_tag(&line);
+        self.line = Some(line);
+        Ok(())
+    }
+
+    fn end(&mut self, _parent: &ParentRef, _out: &mut Emitter<'_, TaxiPair>) -> Result<()> {
+        self.line = None;
+        Ok(())
+    }
+
+    fn run(
+        &mut self,
+        items: &[Stage1Item],
+        parent: Option<&ParentRef>,
+        out: &mut Emitter<'_, TaxiPair>,
+    ) -> Result<()> {
+        let line = match &self.line {
+            Some(l) => l.clone(),
+            None => parent_as::<TaxiLine>(parent.expect("enumerated")).expect("TaxiLine"),
+        };
+        let wl = self.kernels.window_len();
+        let text: &[u8] = &line.text;
+        let line_end = line.start + line.len;
+        for (i, item) in items.iter().enumerate() {
+            let off = match item {
+                Stage1Item::Offset(o) => *o,
+                Stage1Item::Cand(_) => unreachable!("enum variant emits offsets"),
+            };
+            let abs = line.abs(off);
+            fill_window(&mut self.windows[i * wl..(i + 1) * wl], text, abs, line_end);
+        }
+        for i in items.len()..self.width {
+            self.windows[i * wl..(i + 1) * wl].fill(0);
+        }
+        prefix_mask(&mut self.mask, items.len(), self.width);
+        let (xs, ys, oks) = self.kernels.coord_parse(&self.windows, &self.mask)?;
+        for i in 0..items.len() {
+            if oks[i] != 0 {
+                out.push(TaxiPair {
+                    tag: self.tag,
+                    x: xs[i],
+                    y: ys[i],
+                });
+            }
+        }
+        Ok(())
+    }
+
+    fn max_outputs_per_input(&self) -> usize {
+        1
+    }
+}
+
+/// Stage 2 outside any region (hybrid + tagged variants): candidates carry
+/// their own tag and window bounds; ensembles mix lines freely.
+struct ParsePlainLogic {
+    kernels: Rc<KernelSet>,
+    width: usize,
+    text: Arc<Vec<u8>>,
+    windows: Vec<i32>,
+    mask: Vec<i32>,
+}
+
+impl ParsePlainLogic {
+    fn new(kernels: Rc<KernelSet>, width: usize, text: Arc<Vec<u8>>) -> ParsePlainLogic {
+        let wl = kernels.window_len();
+        ParsePlainLogic {
+            kernels,
+            width,
+            text,
+            windows: vec![0; width * wl],
+            mask: Vec::with_capacity(width),
+        }
+    }
+}
+
+impl NodeLogic for ParsePlainLogic {
+    type In = Stage1Item;
+    type Out = TaxiPair;
+
+    fn run(
+        &mut self,
+        items: &[Stage1Item],
+        _parent: Option<&ParentRef>,
+        out: &mut Emitter<'_, TaxiPair>,
+    ) -> Result<()> {
+        let wl = self.kernels.window_len();
+        for (i, item) in items.iter().enumerate() {
+            let c = match item {
+                Stage1Item::Cand(c) => *c,
+                Stage1Item::Offset(_) => unreachable!("plain parse needs tagged candidates"),
+            };
+            fill_window(
+                &mut self.windows[i * wl..(i + 1) * wl],
+                &self.text,
+                c.abs as usize,
+                c.line_end as usize,
+            );
+        }
+        for i in items.len()..self.width {
+            self.windows[i * wl..(i + 1) * wl].fill(0);
+        }
+        prefix_mask(&mut self.mask, items.len(), self.width);
+        let (xs, ys, oks) = self.kernels.coord_parse(&self.windows, &self.mask)?;
+        for (i, item) in items.iter().enumerate() {
+            if oks[i] != 0 {
+                let tag = match item {
+                    Stage1Item::Cand(c) => c.tag,
+                    Stage1Item::Offset(_) => unreachable!(),
+                };
+                out.push(TaxiPair {
+                    tag,
+                    x: xs[i],
+                    y: ys[i],
+                });
+            }
+        }
+        Ok(())
+    }
+
+    fn max_outputs_per_input(&self) -> usize {
+        1
+    }
+}
+
+/// Stage 1 of the pure-tagging variant: every char arrives as a tagged
+/// item; classification runs the fused kernel that also does the per-tag
+/// bookkeeping (the dense representation's overhead).
+struct TaggedClassifyLogic {
+    kernels: Rc<KernelSet>,
+    width: usize,
+    text: Arc<Vec<u8>>,
+    chars: Vec<i32>,
+    tags_dense: Vec<i32>,
+    mask: Vec<i32>,
+    local: Vec<i32>,
+    uniq: Vec<u64>,
+    tag_scratch: Vec<u64>,
+}
+
+impl TaggedClassifyLogic {
+    fn new(kernels: Rc<KernelSet>, width: usize, text: Arc<Vec<u8>>) -> TaggedClassifyLogic {
+        TaggedClassifyLogic {
+            kernels,
+            width,
+            text,
+            chars: vec![0; width],
+            tags_dense: vec![0; width],
+            mask: Vec::with_capacity(width),
+            local: Vec::with_capacity(width),
+            uniq: Vec::with_capacity(width),
+            tag_scratch: Vec::with_capacity(width),
+        }
+    }
+}
+
+impl NodeLogic for TaggedClassifyLogic {
+    type In = Candidate;
+    type Out = Stage1Item;
+
+    fn run(
+        &mut self,
+        items: &[Candidate],
+        _parent: Option<&ParentRef>,
+        out: &mut Emitter<'_, Stage1Item>,
+    ) -> Result<()> {
+        self.tag_scratch.clear();
+        for (i, c) in items.iter().enumerate() {
+            self.chars[i] = self.text[c.abs as usize] as i32;
+            self.tag_scratch.push(c.tag as u64);
+        }
+        for slot in self.chars[items.len()..].iter_mut() {
+            *slot = 0;
+        }
+        crate::coordinator::tagging::densify_tags(
+            &self.tag_scratch,
+            &mut self.local,
+            &mut self.uniq,
+        );
+        self.tags_dense[..items.len()].copy_from_slice(&self.local);
+        for slot in self.tags_dense[items.len()..].iter_mut() {
+            *slot = 0;
+        }
+        prefix_mask(&mut self.mask, items.len(), self.width);
+        let (flags, _bits, _tag_counts) =
+            self.kernels
+                .tagged_char_stage(&self.chars, &self.tags_dense, &self.mask)?;
+        for (i, c) in items.iter().enumerate() {
+            if flags[i] != 0 {
+                out.push(Stage1Item::Cand(*c));
+            }
+        }
+        Ok(())
+    }
+
+    fn max_outputs_per_input(&self) -> usize {
+        1
+    }
+}
+
+/// Independent ground truth for validation: parse the text with plain Rust
+/// string handling (no kernels, no pipeline).
+pub fn reference_pairs(w: &TaxiWorkload) -> Vec<TaxiPair> {
+    let mut out = Vec::new();
+    for line in &w.lines {
+        let tag = parse_tag(line);
+        let bytes = line.bytes();
+        let mut i = 0;
+        while i < bytes.len() {
+            if bytes[i] == b'{' {
+                let end = line.start + line.len;
+                let mut win = vec![0i32; crate::runtime::native::WINDOW_LEN];
+                fill_window(&mut win, &line.text, line.start + i, end);
+                let (a, b, ok) = crate::runtime::native::parse_window(&win);
+                if ok {
+                    out.push(TaxiPair { tag, x: b, y: a });
+                }
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Sort pairs for order-insensitive comparison across variants.
+pub fn sort_pairs(pairs: &mut [TaxiPair]) {
+    pairs.sort_by(|p, q| {
+        (p.tag, p.x.to_bits(), p.y.to_bits()).cmp(&(q.tag, q.x.to_bits(), q.y.to_bits()))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::taxi::{generate, TaxiGenConfig};
+
+    fn small_workload() -> TaxiWorkload {
+        generate(
+            12,
+            TaxiGenConfig {
+                avg_pairs: 6,
+                avg_line_len: 160,
+            },
+            42,
+        )
+    }
+
+    fn run_variant(v: TaxiVariant, w: &TaxiWorkload, width: usize) -> TaxiReport {
+        let app = TaxiApp::new(
+            TaxiConfig {
+                width,
+                variant: v,
+                data_cap: 512,
+                signal_cap: 128,
+                policy: Policy::GreedyOccupancy,
+            },
+            Rc::new(KernelSet::native(width)),
+        );
+        app.run(w).unwrap()
+    }
+
+    #[test]
+    fn all_variants_agree_with_reference() {
+        let w = small_workload();
+        let mut want = reference_pairs(&w);
+        assert_eq!(want.len(), w.total_pairs);
+        sort_pairs(&mut want);
+        for v in TaxiVariant::all() {
+            let mut got = run_variant(v, &w, 8).pairs;
+            sort_pairs(&mut got);
+            assert_eq!(got.len(), want.len(), "variant {v:?} pair count");
+            for (g, e) in got.iter().zip(&want) {
+                assert_eq!(g.tag, e.tag, "variant {v:?}");
+                assert_eq!(g.x.to_bits(), e.x.to_bits(), "variant {v:?}");
+                assert_eq!(g.y.to_bits(), e.y.to_bits(), "variant {v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn enumerated_preserves_stream_order() {
+        let w = small_workload();
+        let got = run_variant(TaxiVariant::Enumerated, &w, 8).pairs;
+        let want = reference_pairs(&w);
+        assert_eq!(got.len(), want.len());
+        for (g, e) in got.iter().zip(&want) {
+            assert_eq!((g.tag, g.x.to_bits()), (e.tag, e.x.to_bits()));
+        }
+    }
+
+    #[test]
+    fn occupancy_split_matches_paper_shape() {
+        // stage 1 (chars/line >> width) mostly full; stage 2 in the
+        // enumerated variant (pairs/line < width) mostly partial; hybrid's
+        // stage 2 mostly full.
+        let w = generate(
+            30,
+            TaxiGenConfig {
+                avg_pairs: 5,
+                avg_line_len: 300,
+            },
+            7,
+        );
+        let e = run_variant(TaxiVariant::Enumerated, &w, 16);
+        let h = run_variant(TaxiVariant::Hybrid, &w, 16);
+        let e_s1 = e.metrics.node("classify").unwrap().full_fraction();
+        let e_s2 = e.metrics.node("parse").unwrap().full_fraction();
+        let h_s2 = h.metrics.node("parse").unwrap().full_fraction();
+        assert!(e_s1 > 0.7, "enum stage1 full fraction {e_s1}");
+        assert!(e_s2 < 0.3, "enum stage2 full fraction {e_s2}");
+        assert!(h_s2 > 0.7, "hybrid stage2 full fraction {h_s2}");
+    }
+
+    #[test]
+    fn tagged_variant_runs_full_ensembles_everywhere() {
+        let w = small_workload();
+        let t = run_variant(TaxiVariant::Tagged, &w, 8);
+        let s1 = t.metrics.node("classify").unwrap();
+        assert!(
+            s1.occupancy() > 0.95,
+            "tagged stage1 occupancy {}",
+            s1.occupancy()
+        );
+    }
+
+    #[test]
+    fn parse_tag_reads_line_head() {
+        let w = small_workload();
+        for line in &w.lines {
+            assert_eq!(parse_tag(line), line.tag);
+        }
+    }
+}

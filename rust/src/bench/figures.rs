@@ -1,0 +1,522 @@
+//! Figure-regeneration sweeps (paper §5), shared by the `cargo bench`
+//! targets and the `regatta bench` CLI subcommand.
+//!
+//! Each function reproduces one figure/table of the paper's evaluation:
+//! same axes, same series — scaled to this testbed (CPU PJRT instead of a
+//! GTX 1080Ti; see DESIGN.md). The *shape* is the reproduction target:
+//! who wins, by roughly what factor, where the crossovers/minima fall.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::apps::sum::{SumApp, SumConfig, SumMode, SumShape};
+use crate::apps::taxi::{TaxiApp, TaxiConfig, TaxiVariant};
+use crate::coordinator::scheduler::Policy;
+use crate::runtime::kernels::KernelSet;
+use crate::runtime::{ArtifactStore, Engine};
+use crate::util::stats::fmt_duration;
+use crate::workload::regions::{gen_blobs, RegionSpec};
+use crate::workload::taxi::{generate, replicate, TaxiGenConfig};
+
+use super::{time_fn, BenchConfig, Table};
+
+/// Kernel backend selection for a sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendSel {
+    /// AOT artifacts via PJRT — the measured configuration.
+    Xla,
+    /// Pure-Rust mirror — for quick shape checks without artifacts.
+    Native,
+}
+
+impl std::str::FromStr for BackendSel {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "xla" => Ok(BackendSel::Xla),
+            "native" => Ok(BackendSel::Native),
+            other => anyhow::bail!("unknown backend {other:?} (use xla|native)"),
+        }
+    }
+}
+
+/// Keeps the PJRT engine alive alongside the kernels compiled from it.
+pub struct KernelProvider {
+    _engine: Option<Engine>,
+    pub kernels: Rc<KernelSet>,
+}
+
+/// Build a kernel set on the selected backend.
+pub fn provider(backend: BackendSel, width: usize) -> Result<KernelProvider> {
+    match backend {
+        BackendSel::Native => Ok(KernelProvider {
+            _engine: None,
+            kernels: Rc::new(KernelSet::native(width)),
+        }),
+        BackendSel::Xla => {
+            let engine = Engine::new(ArtifactStore::discover()?)?;
+            let kernels = Rc::new(KernelSet::xla(&engine, width)?);
+            Ok(KernelProvider {
+                _engine: Some(engine),
+                kernels,
+            })
+        }
+    }
+}
+
+/// Sweep parameters common to the figure benches.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepConfig {
+    pub width: usize,
+    pub items: usize,
+    pub backend: BackendSel,
+    pub seed: u64,
+    pub bench: BenchConfig,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            width: 128,
+            items: 1 << 18, // paper: 512 M; scaled to the CPU testbed
+                            // (512 Ki used for the EXPERIMENTS.md tables;
+                            // override with REGATTA_BENCH_ITEMS)
+            backend: BackendSel::Xla,
+            seed: 0xF16,
+            bench: BenchConfig::from_env(),
+        }
+    }
+}
+
+/// The region-size axis of Figs 6/7: sub-width sizes, the width and its
+/// multiples, and the paper's "just past a multiple" worst cases.
+pub fn region_size_axis(width: usize) -> Vec<usize> {
+    let w = width;
+    let mut v = vec![
+        w / 4,
+        w / 2,
+        3 * w / 4,
+        w - 8,
+        w,
+        w + 8,
+        w + w / 2,
+        2 * w,
+        2 * w + 8,
+        3 * w,
+        4 * w,
+        4 * w + 8,
+        6 * w,
+        8 * w,
+    ];
+    v.retain(|&s| s > 0);
+    v.dedup();
+    v
+}
+
+/// One measured row of a sum-app sweep.
+#[derive(Debug, Clone)]
+pub struct SumRow {
+    pub region: usize,
+    pub seconds: f64,
+    pub throughput: f64, // items/sec
+    pub occupancy: f64,
+    pub invocations: u64,
+}
+
+fn run_sum_point(
+    cfg: &SweepConfig,
+    spec: RegionSpec,
+    mode: SumMode,
+    kernels: Rc<KernelSet>,
+) -> Result<SumRow> {
+    let blobs = gen_blobs(cfg.items, spec, cfg.seed);
+    let app = SumApp::new(
+        SumConfig {
+            width: cfg.width,
+            mode,
+            shape: SumShape::Fused,
+            ..Default::default()
+        },
+        kernels,
+    );
+    let mut last = None;
+    let m = time_fn(cfg.bench, || {
+        last = Some(app.run(&blobs).expect("sum app run"));
+    });
+    let report = last.unwrap();
+    let node = match mode {
+        SumMode::Enumerated => "sum",
+        SumMode::Tagged => "tagsum",
+    };
+    Ok(SumRow {
+        region: match spec {
+            RegionSpec::Fixed { size } => size,
+            RegionSpec::Uniform { max } => max,
+        },
+        seconds: m.median(),
+        throughput: cfg.items as f64 / m.median(),
+        occupancy: report.metrics.node(node).map(|n| n.occupancy()).unwrap_or(0.0),
+        invocations: report.invocations,
+    })
+}
+
+fn sum_sweep_table(title: &str, rows: &[SumRow]) -> Table {
+    let mut t = Table::new(&["region", "time", "items/s", "occ%", "kernel_invocations"]);
+    for r in rows {
+        t.row(&[
+            r.region.to_string(),
+            fmt_duration(r.seconds),
+            format!("{:.2e}", r.throughput),
+            format!("{:.1}", 100.0 * r.occupancy),
+            r.invocations.to_string(),
+        ]);
+    }
+    println!("== {title} ==");
+    t
+}
+
+/// **Figure 6**: execution time vs fixed region size.
+pub fn fig6(cfg: &SweepConfig) -> Result<Vec<SumRow>> {
+    let p = provider(cfg.backend, cfg.width)?;
+    let mut rows = Vec::new();
+    for size in region_size_axis(cfg.width) {
+        rows.push(run_sum_point(
+            cfg,
+            RegionSpec::Fixed { size },
+            SumMode::Enumerated,
+            p.kernels.clone(),
+        )?);
+    }
+    sum_sweep_table("Fig 6: sum app, fixed-size regions", &rows).print();
+    Ok(rows)
+}
+
+/// **Figure 7**: execution time vs max region size (uniform random).
+pub fn fig7(cfg: &SweepConfig) -> Result<Vec<SumRow>> {
+    let p = provider(cfg.backend, cfg.width)?;
+    let mut rows = Vec::new();
+    for max in region_size_axis(cfg.width) {
+        rows.push(run_sum_point(
+            cfg,
+            RegionSpec::Uniform { max },
+            SumMode::Enumerated,
+            p.kernels.clone(),
+        )?);
+    }
+    sum_sweep_table("Fig 7: sum app, variable-size regions", &rows).print();
+    Ok(rows)
+}
+
+/// One measured row of the taxi sweep.
+#[derive(Debug, Clone)]
+pub struct TaxiRow {
+    pub variant: TaxiVariant,
+    pub scale: usize,
+    pub chars: usize,
+    pub seconds: f64,
+    pub stage1_full: f64,
+    pub stage2_full: f64,
+    pub pairs: usize,
+}
+
+/// **Figure 8**: taxi app, three implementations vs input size; also
+/// prints the §5 occupancy statistic (91 % / 9 % split).
+pub fn fig8(cfg: &SweepConfig, base_lines: usize, scales: &[usize]) -> Result<Vec<TaxiRow>> {
+    let p = provider(cfg.backend, cfg.width)?;
+    let base = generate(base_lines, TaxiGenConfig::default(), cfg.seed);
+    let mut rows = Vec::new();
+    for &scale in scales {
+        let w = replicate(&base, scale);
+        let chars: usize = w.lines.iter().map(|l| l.len).sum();
+        for variant in TaxiVariant::all() {
+            let app = TaxiApp::new(
+                TaxiConfig {
+                    width: cfg.width,
+                    variant,
+                    // paper-scale queues: candidate queues sized so stage-2
+                    // backpressure cannot fragment stage 1 (see §Perf log)
+                    data_cap: 65536,
+                    signal_cap: 8192,
+                    ..Default::default()
+                },
+                p.kernels.clone(),
+            );
+            let mut last = None;
+            let m = time_fn(cfg.bench, || {
+                last = Some(app.run(&w).expect("taxi run"));
+            });
+            let report = last.unwrap();
+            anyhow::ensure!(
+                report.pairs.len() == w.total_pairs,
+                "{variant:?} parsed {} of {} pairs",
+                report.pairs.len(),
+                w.total_pairs
+            );
+            rows.push(TaxiRow {
+                variant,
+                scale,
+                chars,
+                seconds: m.median(),
+                stage1_full: report
+                    .metrics
+                    .node("classify")
+                    .map(|n| n.full_fraction())
+                    .unwrap_or(0.0),
+                stage2_full: report
+                    .metrics
+                    .node("parse")
+                    .map(|n| n.full_fraction())
+                    .unwrap_or(0.0),
+                pairs: report.pairs.len(),
+            });
+        }
+    }
+    let mut t = Table::new(&[
+        "scale", "chars", "variant", "time", "s1_full%", "s2_full%", "pairs",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.scale.to_string(),
+            r.chars.to_string(),
+            r.variant.label().to_string(),
+            fmt_duration(r.seconds),
+            format!("{:.1}", 100.0 * r.stage1_full),
+            format!("{:.1}", 100.0 * r.stage2_full),
+            r.pairs.to_string(),
+        ]);
+    }
+    println!("== Fig 8: taxi app, three context strategies ==");
+    t.print();
+    Ok(rows)
+}
+
+/// §5 "abstraction penalty" check: an app that uses no signals pays ~0 for
+/// the machinery. Compares a coordinator pipeline (signal queues present
+/// but idle) against a raw kernel loop over the same ensembles.
+pub fn abstraction_penalty(cfg: &SweepConfig) -> Result<(f64, f64, f64)> {
+    use crate::coordinator::aggregate::Aggregator;
+    use crate::coordinator::topology::PipelineBuilder;
+    use std::cell::RefCell;
+
+    let p = provider(cfg.backend, cfg.width)?;
+    let n = cfg.items;
+    let vals: Vec<f32> = {
+        let mut rng = crate::util::prng::Prng::new(cfg.seed);
+        (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+    };
+    let w = cfg.width;
+
+    // (a) raw loop: no coordinator at all
+    let ks = p.kernels.clone();
+    let mask = vec![1i32; w];
+    let raw = time_fn(cfg.bench, || {
+        let mut total = 0.0f64;
+        let mut buf = vec![0.0f32; w];
+        let mut pm = Vec::new();
+        for chunk in vals.chunks(w) {
+            buf[..chunk.len()].copy_from_slice(chunk);
+            for s in buf[chunk.len()..].iter_mut() {
+                *s = 0.0;
+            }
+            let m: &[i32] = if chunk.len() == w {
+                &mask
+            } else {
+                crate::apps::prefix_mask(&mut pm, chunk.len(), w);
+                &pm
+            };
+            let (s, _) = ks.sum_region(&buf, m, 0.0).unwrap();
+            total += s as f64;
+        }
+        std::hint::black_box(total);
+    });
+
+    // (b) coordinator pipeline, signals never used
+    let ks2 = p.kernels.clone();
+    let coord = time_fn(cfg.bench, || {
+        let mut b = PipelineBuilder::new(w);
+        let src = b.source_with_cap::<f32>(8192);
+        let scratch = RefCell::new(vec![0.0f32; w]);
+        let mscratch = RefCell::new(Vec::new());
+        let ksr = ks2.clone();
+        let _sums = b.sink(
+            "sum",
+            &src,
+            Aggregator::new(
+                0.0f64,
+                move |acc: &mut f64, items: &[f32], _| {
+                    let mut buf = scratch.borrow_mut();
+                    let mut m = mscratch.borrow_mut();
+                    buf[..items.len()].copy_from_slice(items);
+                    for s in buf[items.len()..].iter_mut() {
+                        *s = 0.0;
+                    }
+                    crate::apps::prefix_mask(&mut m, items.len(), w);
+                    let (s, _) = ksr.sum_region(&buf, &m, 0.0).unwrap();
+                    *acc += s as f64;
+                    Ok(())
+                },
+                |acc: &mut f64, _| Ok(Some(*acc)),
+            ),
+        );
+        let mut pipe = b.build();
+        let mut fed = 0usize;
+        while fed < vals.len() {
+            while fed < vals.len() && src.data_space() > 0 {
+                src.push(vals[fed]);
+                fed += 1;
+            }
+            pipe.run().unwrap();
+        }
+    });
+
+    // (c) the same pipeline with one region per `w` items (signals ACTIVE)
+    let blobs = gen_blobs(n, RegionSpec::Fixed { size: w }, cfg.seed);
+    let app = SumApp::new(
+        SumConfig {
+            width: w,
+            ..Default::default()
+        },
+        p.kernels.clone(),
+    );
+    let signals = time_fn(cfg.bench, || {
+        app.run(&blobs).unwrap();
+    });
+
+    let (ra, co, si) = (raw.median(), coord.median(), signals.median());
+    let mut t = Table::new(&["configuration", "time", "vs raw"]);
+    t.row(&["raw kernel loop".into(), fmt_duration(ra), "1.00x".into()]);
+    t.row(&[
+        "coordinator, signals unused".into(),
+        fmt_duration(co),
+        format!("{:.2}x", co / ra),
+    ]);
+    t.row(&[
+        "coordinator, aligned regions".into(),
+        fmt_duration(si),
+        format!("{:.2}x", si / ra),
+    ]);
+    println!("== Abstraction penalty (paper: negligible when unused) ==");
+    t.print();
+    Ok((ra, co, si))
+}
+
+/// Ablation A2: the Fig 6 sweep at several SIMD widths — the minima track
+/// the width, confirming the occupancy mechanism.
+pub fn ablation_width(cfg: &SweepConfig, widths: &[usize]) -> Result<Vec<(usize, Vec<SumRow>)>> {
+    let mut out = Vec::new();
+    for &w in widths {
+        let mut c = *cfg;
+        c.width = w;
+        let p = provider(cfg.backend, w)?;
+        let mut rows = Vec::new();
+        for size in [w / 2, w, w + 8, 2 * w, 4 * w] {
+            if size == 0 {
+                continue;
+            }
+            rows.push(run_sum_point(
+                &c,
+                RegionSpec::Fixed { size },
+                SumMode::Enumerated,
+                p.kernels.clone(),
+            )?);
+        }
+        out.push((w, rows));
+    }
+    let mut t = Table::new(&["width", "region", "time", "occ%"]);
+    for (w, rows) in &out {
+        for r in rows {
+            t.row(&[
+                w.to_string(),
+                r.region.to_string(),
+                fmt_duration(r.seconds),
+                format!("{:.1}", 100.0 * r.occupancy),
+            ]);
+        }
+    }
+    println!("== Ablation: SIMD width sweep ==");
+    t.print();
+    Ok(out)
+}
+
+/// Ablation A3 (paper §6 future work): per-lane context (dense tags +
+/// segmented reduction, signal-free) vs signal-delimited ensembles, as a
+/// function of region size. Also covers the §5 sum-app comparison.
+pub fn ablation_lanectx(cfg: &SweepConfig) -> Result<Vec<(usize, f64, f64)>> {
+    let p = provider(cfg.backend, cfg.width)?;
+    let w = cfg.width;
+    let mut out = Vec::new();
+    for size in [w / 8, w / 4, w / 2, w, 2 * w, 4 * w] {
+        if size == 0 {
+            continue;
+        }
+        let enum_row = run_sum_point(
+            cfg,
+            RegionSpec::Fixed { size },
+            SumMode::Enumerated,
+            p.kernels.clone(),
+        )?;
+        let tag_row = run_sum_point(
+            cfg,
+            RegionSpec::Fixed { size },
+            SumMode::Tagged,
+            p.kernels.clone(),
+        )?;
+        out.push((size, enum_row.seconds, tag_row.seconds));
+    }
+    let mut t = Table::new(&["region", "signals(enum)", "lane-ctx(tagged)", "winner"]);
+    for &(size, e, tg) in &out {
+        t.row(&[
+            size.to_string(),
+            fmt_duration(e),
+            fmt_duration(tg),
+            if e < tg { "signals" } else { "lane-ctx" }.to_string(),
+        ]);
+    }
+    println!("== Ablation: signal-delimited vs per-lane context ==");
+    t.print();
+    Ok(out)
+}
+
+/// Scheduling-policy ablation (design-choice bench): occupancy and time
+/// for the three policies on the hybrid taxi app.
+pub fn ablation_policy(cfg: &SweepConfig, lines: usize) -> Result<()> {
+    let p = provider(cfg.backend, cfg.width)?;
+    let w = generate(lines, TaxiGenConfig::default(), cfg.seed);
+    let mut t = Table::new(&["policy", "time", "stage2_full%"]);
+    for (name, policy) in [
+        ("greedy-occupancy", Policy::GreedyOccupancy),
+        ("deepest-first", Policy::DeepestFirst),
+        ("round-robin", Policy::RoundRobin),
+    ] {
+        let app = TaxiApp::new(
+            TaxiConfig {
+                width: cfg.width,
+                variant: TaxiVariant::Hybrid,
+                policy,
+                ..Default::default()
+            },
+            p.kernels.clone(),
+        );
+        let mut last = None;
+        let m = time_fn(cfg.bench, || {
+            last = Some(app.run(&w).expect("taxi run"));
+        });
+        let r = last.unwrap();
+        t.row(&[
+            name.to_string(),
+            fmt_duration(m.median()),
+            format!(
+                "{:.1}",
+                100.0
+                    * r.metrics
+                        .node("parse")
+                        .map(|n| n.full_fraction())
+                        .unwrap_or(0.0)
+            ),
+        ]);
+    }
+    println!("== Ablation: scheduling policy (hybrid taxi) ==");
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,187 @@
+//! Benchmark harness (offline substitute for criterion).
+//!
+//! Used by every `rust/benches/*.rs` target: warmup + timed iterations,
+//! summary statistics, and aligned table output matching the rows/series
+//! of the paper's figures.
+
+pub mod figures;
+
+use std::time::Instant;
+
+use crate::util::stats::{fmt_duration, median, Summary};
+
+/// Timing configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 1,
+            iters: 3,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Read iteration counts from env (`REGATTA_BENCH_ITERS`,
+    /// `REGATTA_BENCH_WARMUP`) for quick CI runs.
+    pub fn from_env() -> BenchConfig {
+        let mut cfg = BenchConfig::default();
+        if let Some(n) = std::env::var("REGATTA_BENCH_ITERS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+        {
+            cfg.iters = n;
+        }
+        if let Some(n) = std::env::var("REGATTA_BENCH_WARMUP")
+            .ok()
+            .and_then(|s| s.parse().ok())
+        {
+            cfg.warmup_iters = n;
+        }
+        cfg
+    }
+}
+
+/// One measurement: median/mean/min over the timed iterations.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn median(&self) -> f64 {
+        median(&self.samples)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let mut s = Summary::new();
+        for &x in &self.samples {
+            s.add(x);
+        }
+        s.mean()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Time `f` under `cfg`, returning per-iteration seconds.
+pub fn time_fn<F: FnMut()>(cfg: BenchConfig, mut f: F) -> Measurement {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Measurement { samples }
+}
+
+/// Aligned-table printer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column alignment.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Convenience: format seconds for table cells.
+pub fn cell_time(secs: f64) -> String {
+    fmt_duration(secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_produces_samples() {
+        let m = time_fn(
+            BenchConfig {
+                warmup_iters: 1,
+                iters: 3,
+            },
+            || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            },
+        );
+        assert_eq!(m.samples.len(), 3);
+        assert!(m.min() >= 0.0);
+        assert!(m.median() >= m.min());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["region", "time"]);
+        t.row(&["32".into(), "1.0 ms".into()]);
+        t.row(&["1024".into(), "0.5 ms".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("region"));
+        assert!(lines[2].ends_with("1.0 ms"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,291 @@
+//! Aggregation: "closing" a region by folding its elements into one result
+//! per parent object (paper §4, the `aggregate` keyword).
+//!
+//! [`Aggregator`] is the generic fold node: `begin()` resets the
+//! accumulator, `run()` folds each ensemble (typically via a SIMD-parallel
+//! reduction kernel — the paper notes node `a`'s `acc += v` would really be
+//! a parallel reduction), and `end()` emits the folded value. It absorbs
+//! region signals (`forward_region_signals = false`): downstream nodes see
+//! a plain stream of per-parent results, stripped of parent context.
+//!
+//! [`MapLogic`] and [`FilterMapLogic`] are the corresponding helpers for
+//! ordinary pass-through stages.
+
+use anyhow::Result;
+
+use super::node::{Emitter, NodeLogic};
+use super::signal::ParentRef;
+
+/// Generic aggregation logic.
+///
+/// * `step(acc, items, parent)` folds one ensemble into the accumulator;
+/// * `finish(acc, parent)` produces the per-parent output (or `None` to
+///   emit nothing for that parent).
+pub struct Aggregator<I, O, A, Step, Finish>
+where
+    A: Clone,
+    Step: FnMut(&mut A, &[I], Option<&ParentRef>) -> Result<()>,
+    Finish: FnMut(&mut A, &ParentRef) -> Result<Option<O>>,
+{
+    init: A,
+    acc: A,
+    step: Step,
+    finish: Finish,
+    _marker: std::marker::PhantomData<fn(&[I]) -> O>,
+}
+
+impl<I, O, A, Step, Finish> Aggregator<I, O, A, Step, Finish>
+where
+    A: Clone,
+    Step: FnMut(&mut A, &[I], Option<&ParentRef>) -> Result<()>,
+    Finish: FnMut(&mut A, &ParentRef) -> Result<Option<O>>,
+{
+    pub fn new(init: A, step: Step, finish: Finish) -> Self {
+        Aggregator {
+            acc: init.clone(),
+            init,
+            step,
+            finish,
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Current accumulator (for tests / inspection).
+    pub fn acc(&self) -> &A {
+        &self.acc
+    }
+}
+
+impl<I, O, A, Step, Finish> NodeLogic for Aggregator<I, O, A, Step, Finish>
+where
+    I: 'static,
+    O: 'static,
+    A: Clone + 'static,
+    Step: FnMut(&mut A, &[I], Option<&ParentRef>) -> Result<()>,
+    Finish: FnMut(&mut A, &ParentRef) -> Result<Option<O>>,
+{
+    type In = I;
+    type Out = O;
+
+    fn run(
+        &mut self,
+        items: &[I],
+        parent: Option<&ParentRef>,
+        _out: &mut Emitter<'_, O>,
+    ) -> Result<()> {
+        (self.step)(&mut self.acc, items, parent)
+    }
+
+    fn begin(&mut self, _parent: &ParentRef, _out: &mut Emitter<'_, O>) -> Result<()> {
+        self.acc = self.init.clone();
+        Ok(())
+    }
+
+    fn end(&mut self, parent: &ParentRef, out: &mut Emitter<'_, O>) -> Result<()> {
+        if let Some(o) = (self.finish)(&mut self.acc, parent)? {
+            out.push(o);
+        }
+        Ok(())
+    }
+
+    fn max_outputs_per_input(&self) -> usize {
+        0 // run() never pushes
+    }
+
+    fn max_outputs_per_signal(&self) -> usize {
+        1 // end() pushes at most one aggregate
+    }
+
+    fn forward_region_signals(&self) -> bool {
+        false // `aggregate` closes the enumeration scope
+    }
+}
+
+/// Stateless per-ensemble map/filter logic from a closure
+/// `f(items, parent, emitter)`, declaring ≤ `max_out` outputs per input.
+pub struct FilterMapLogic<I, O, F>
+where
+    F: FnMut(&[I], Option<&ParentRef>, &mut Emitter<'_, O>) -> Result<()>,
+{
+    f: F,
+    max_out: usize,
+    _marker: std::marker::PhantomData<fn(&[I]) -> O>,
+}
+
+impl<I, O, F> FilterMapLogic<I, O, F>
+where
+    F: FnMut(&[I], Option<&ParentRef>, &mut Emitter<'_, O>) -> Result<()>,
+{
+    /// `max_out`: a-priori bound on outputs per consumed input item.
+    pub fn new(max_out: usize, f: F) -> Self {
+        FilterMapLogic {
+            f,
+            max_out,
+            _marker: std::marker::PhantomData,
+        }
+    }
+}
+
+impl<I, O, F> NodeLogic for FilterMapLogic<I, O, F>
+where
+    I: 'static,
+    O: 'static,
+    F: FnMut(&[I], Option<&ParentRef>, &mut Emitter<'_, O>) -> Result<()>,
+{
+    type In = I;
+    type Out = O;
+
+    fn run(
+        &mut self,
+        items: &[I],
+        parent: Option<&ParentRef>,
+        out: &mut Emitter<'_, O>,
+    ) -> Result<()> {
+        (self.f)(items, parent, out)
+    }
+
+    fn max_outputs_per_input(&self) -> usize {
+        self.max_out
+    }
+}
+
+/// One-to-one map logic from a per-item closure (convenience).
+pub struct MapLogic<I, O, F>
+where
+    F: FnMut(&I) -> O,
+{
+    f: F,
+    _marker: std::marker::PhantomData<fn(&I) -> O>,
+}
+
+impl<I, O, F> MapLogic<I, O, F>
+where
+    F: FnMut(&I) -> O,
+{
+    pub fn new(f: F) -> Self {
+        MapLogic {
+            f,
+            _marker: std::marker::PhantomData,
+        }
+    }
+}
+
+impl<I, O, F> NodeLogic for MapLogic<I, O, F>
+where
+    I: 'static,
+    O: 'static,
+    F: FnMut(&I) -> O,
+{
+    type In = I;
+    type Out = O;
+
+    fn run(
+        &mut self,
+        items: &[I],
+        _parent: Option<&ParentRef>,
+        out: &mut Emitter<'_, O>,
+    ) -> Result<()> {
+        for item in items {
+            out.push((self.f)(item));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::channel::Channel;
+    use crate::coordinator::node::{Node, NodeOps, Output};
+    use crate::coordinator::signal::SignalKind;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    fn region<T: 'static>(ch: &Channel<f32>, parent: T, items: &[f32]) {
+        let p: ParentRef = Rc::new(parent);
+        ch.emit_signal(SignalKind::RegionBegin { parent: p.clone() });
+        for &v in items {
+            ch.push(v);
+        }
+        ch.emit_signal(SignalKind::RegionEnd { parent: p });
+    }
+
+    #[test]
+    fn aggregator_sums_per_region() {
+        let ch: Rc<Channel<f32>> = Channel::new(64, 16);
+        region(&ch, 1u64, &[1.0, 2.0, 3.0]);
+        region(&ch, 2u64, &[10.0]);
+        region(&ch, 3u64, &[]);
+        let agg = Aggregator::new(
+            0.0f64,
+            |acc: &mut f64, items: &[f32], _p| {
+                *acc += items.iter().map(|&v| v as f64).sum::<f64>();
+                Ok(())
+            },
+            |acc: &mut f64, _p| Ok(Some(*acc)),
+        );
+        let sink = Rc::new(RefCell::new(Vec::new()));
+        let mut node = Node::new("a", 4, ch, Output::Sink(sink.clone()), agg);
+        while node.fireable() {
+            node.fire().unwrap();
+        }
+        assert_eq!(*sink.borrow(), vec![6.0, 10.0, 0.0]);
+    }
+
+    #[test]
+    fn aggregator_absorbs_region_signals() {
+        let ch: Rc<Channel<f32>> = Channel::new(16, 8);
+        region(&ch, 1u64, &[1.0]);
+        let agg = Aggregator::new(
+            0.0f64,
+            |acc: &mut f64, items: &[f32], _p| {
+                *acc += items.len() as f64;
+                Ok(())
+            },
+            |acc: &mut f64, _p| Ok(Some(*acc)),
+        );
+        let out: Rc<Channel<f64>> = Channel::new(16, 8);
+        let mut node = Node::new("a", 4, ch, Output::Chan(out.clone()), agg);
+        while node.fireable() {
+            node.fire().unwrap();
+        }
+        assert_eq!(out.data_len(), 1);
+        assert_eq!(out.signal_len(), 0); // signals absorbed
+    }
+
+    #[test]
+    fn finish_none_emits_nothing() {
+        let ch: Rc<Channel<f32>> = Channel::new(16, 8);
+        region(&ch, 1u64, &[]);
+        let agg = Aggregator::new(
+            0i64,
+            |_acc: &mut i64, _items: &[f32], _p| Ok(()),
+            |_acc: &mut i64, _p| Ok(None::<i64>),
+        );
+        let sink = Rc::new(RefCell::new(Vec::new()));
+        let mut node = Node::new("a", 4, ch, Output::Sink(sink.clone()), agg);
+        while node.fireable() {
+            node.fire().unwrap();
+        }
+        assert!(sink.borrow().is_empty());
+    }
+
+    #[test]
+    fn map_logic_transforms() {
+        let ch: Rc<Channel<f32>> = Channel::new(16, 8);
+        ch.push(1.0);
+        ch.push(2.0);
+        let sink = Rc::new(RefCell::new(Vec::new()));
+        let mut node = Node::new(
+            "m",
+            4,
+            ch,
+            Output::Sink(sink.clone()),
+            MapLogic::new(|&v: &f32| v * 10.0),
+        );
+        while node.fireable() {
+            node.fire().unwrap();
+        }
+        assert_eq!(*sink.borrow(), vec![10.0, 20.0]);
+    }
+}

@@ -1,0 +1,301 @@
+//! Tree topologies (paper Fig. 1b): a broadcast node duplicating its
+//! input stream — data *and* signals, precisely interleaved — to several
+//! children.
+//!
+//! The paper's contributions "also apply to tree-structured topologies":
+//! each child edge is an independent [`Channel`], so the emitter credit
+//! rules run per child and every child observes the same precise
+//! data/signal interleaving. (DAGs with convergent edges remain out of
+//! scope, as in the paper — see its §2.1 discussion of [9].)
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::channel::Channel;
+use super::metrics::NodeMetrics;
+use super::node::NodeOps;
+use super::signal::SignalKind;
+
+/// Fan-out node: one input channel, `k` cloned output channels.
+pub struct Broadcast<T: Clone + 'static> {
+    name: String,
+    input: Rc<Channel<T>>,
+    outputs: Vec<Rc<Channel<T>>>,
+    /// Receiver-side credit counter (same §3.1 rules as a compute node).
+    credit: u64,
+    width: usize,
+    metrics: NodeMetrics,
+    scratch: Vec<T>,
+}
+
+impl<T: Clone + 'static> Broadcast<T> {
+    pub fn new(
+        name: impl Into<String>,
+        width: usize,
+        input: Rc<Channel<T>>,
+        outputs: Vec<Rc<Channel<T>>>,
+    ) -> Broadcast<T> {
+        assert!(!outputs.is_empty(), "broadcast needs at least one child");
+        Broadcast {
+            name: name.into(),
+            input,
+            outputs,
+            credit: 0,
+            width,
+            metrics: NodeMetrics::new(width),
+            scratch: Vec::with_capacity(width),
+        }
+    }
+
+    fn min_child_data_space(&self) -> usize {
+        self.outputs
+            .iter()
+            .map(|c| c.data_space())
+            .min()
+            .unwrap_or(0)
+    }
+
+    fn min_child_signal_space(&self) -> usize {
+        self.outputs
+            .iter()
+            .map(|c| c.signal_space())
+            .min()
+            .unwrap_or(0)
+    }
+
+    fn data_limit(&mut self) -> usize {
+        let avail = self.input.data_len();
+        if avail == 0 {
+            return 0;
+        }
+        let mut limit = avail.min(self.width);
+        if self.input.signal_len() > 0 {
+            if self.credit == 0 {
+                self.credit = self.input.take_head_signal_credit();
+            }
+            limit = limit.min(self.credit as usize);
+        }
+        limit.min(self.min_child_data_space())
+    }
+}
+
+impl<T: Clone + 'static> NodeOps for Broadcast<T> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn has_pending(&self) -> bool {
+        self.input.has_pending()
+    }
+
+    fn fireable(&self) -> bool {
+        let data = self.input.data_len();
+        let sigs = self.input.signal_len();
+        if data == 0 && sigs == 0 {
+            return false;
+        }
+        if data > 0 && self.min_child_data_space() >= 1 {
+            let credit_ok = if sigs > 0 {
+                self.credit > 0 || self.input.head_signal_credit() > 0
+            } else {
+                true
+            };
+            if credit_ok {
+                return true;
+            }
+        }
+        sigs > 0
+            && self.credit == 0
+            && self.input.head_signal_credit() == 0
+            && self.min_child_signal_space() >= 1
+    }
+
+    fn fire(&mut self) -> Result<bool> {
+        self.metrics.firings += 1;
+        let mut worked = false;
+
+        // data phase: one ensemble, cloned to every child
+        let limit = self.data_limit();
+        if limit > 0 {
+            let take = self.input.pop_data_into(limit, &mut self.scratch);
+            for child in &self.outputs {
+                child.push_iter(self.scratch[..take].iter().cloned());
+            }
+            if self.credit > 0 {
+                self.credit -= take as u64;
+            }
+            self.metrics.record_ensemble(take);
+            worked = true;
+        }
+
+        // signal phase: duplicate signals to every child
+        if self.credit == 0 {
+            while self.input.signal_len() > 0 {
+                let c = self.input.take_head_signal_credit();
+                if c > 0 {
+                    self.credit = c;
+                    break;
+                }
+                if self.min_child_signal_space() == 0 {
+                    break;
+                }
+                let sig = self.input.pop_signal().expect("len checked");
+                for child in &self.outputs {
+                    // each child channel re-derives credit for its own
+                    // queue state (emitter rules are per edge)
+                    child.emit_signal(match &sig.kind {
+                        SignalKind::RegionBegin { parent } => SignalKind::RegionBegin {
+                            parent: parent.clone(),
+                        },
+                        SignalKind::RegionEnd { parent } => SignalKind::RegionEnd {
+                            parent: parent.clone(),
+                        },
+                        SignalKind::Custom(id) => SignalKind::Custom(*id),
+                    });
+                    self.metrics.signals_emitted += 1;
+                }
+                self.metrics.signals_consumed += 1;
+                worked = true;
+            }
+        }
+        Ok(worked)
+    }
+
+    fn metrics(&self) -> &NodeMetrics {
+        &self.metrics
+    }
+
+    fn ready_hint(&self) -> usize {
+        let avail = self.input.data_len();
+        if avail == 0 {
+            return 0;
+        }
+        let mut limit = avail.min(self.width);
+        if self.input.signal_len() > 0 {
+            let credit = self.credit.max(self.input.head_signal_credit());
+            limit = limit.min(credit as usize);
+        }
+        limit.min(self.min_child_data_space())
+    }
+
+    fn input_pressure(&self) -> bool {
+        self.input.data_space() < self.width
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::signal::{ParentRef, Signal};
+
+    fn drain<T>(ch: &Channel<T>) -> (Vec<T>, Vec<Signal>) {
+        let mut items = Vec::new();
+        let mut buf = Vec::new();
+        let mut sigs = Vec::new();
+        loop {
+            // respect interleaving: consume data up to next signal credit
+            let credit = ch.take_head_signal_credit() as usize;
+            if ch.signal_len() > 0 {
+                ch.pop_data_into(credit, &mut buf);
+                items.append(&mut buf);
+                sigs.push(ch.pop_signal().unwrap());
+            } else {
+                ch.pop_data_into(usize::MAX, &mut buf);
+                items.append(&mut buf);
+                break;
+            }
+        }
+        (items, sigs)
+    }
+
+    #[test]
+    fn duplicates_data_and_signals_to_all_children() {
+        let input: Rc<Channel<u32>> = Channel::new(64, 16);
+        let c1: Rc<Channel<u32>> = Channel::new(64, 16);
+        let c2: Rc<Channel<u32>> = Channel::new(64, 16);
+        input.push(1);
+        input.push(2);
+        input.emit_signal(SignalKind::Custom(7)); // after 2 items
+        input.push(3);
+
+        let mut b = Broadcast::new("tee", 4, input, vec![c1.clone(), c2.clone()]);
+        while b.fireable() {
+            b.fire().unwrap();
+        }
+        for child in [&c1, &c2] {
+            let (items, sigs) = drain(child);
+            assert_eq!(items, vec![1, 2, 3]);
+            assert_eq!(sigs.len(), 1);
+            assert!(matches!(sigs[0].kind, SignalKind::Custom(7)));
+        }
+        assert_eq!(b.metrics().signals_consumed, 1);
+        assert_eq!(b.metrics().signals_emitted, 2);
+    }
+
+    #[test]
+    fn per_child_credit_is_recomputed() {
+        // children at different consumption states get different credits
+        let input: Rc<Channel<u32>> = Channel::new(64, 16);
+        let c1: Rc<Channel<u32>> = Channel::new(64, 16);
+        let c2: Rc<Channel<u32>> = Channel::new(64, 16);
+        input.push(1);
+        input.push(2);
+        let mut b = Broadcast::new("tee", 4, input.clone(), vec![c1.clone(), c2.clone()]);
+        b.fire().unwrap(); // both children now hold items 1,2
+        let mut buf = Vec::new();
+        c1.pop_data_into(2, &mut buf); // child 1 consumed everything
+        input.emit_signal(SignalKind::Custom(0));
+        while b.fireable() {
+            b.fire().unwrap();
+        }
+        // rule (1) per edge: c1 had 0 queued -> credit 0; c2 had 2 -> 2
+        assert_eq!(c1.head_signal_credit(), 0);
+        assert_eq!(c2.head_signal_credit(), 2);
+    }
+
+    #[test]
+    fn region_parents_shared_across_children() {
+        let input: Rc<Channel<u32>> = Channel::new(64, 16);
+        let c1: Rc<Channel<u32>> = Channel::new(64, 16);
+        let c2: Rc<Channel<u32>> = Channel::new(64, 16);
+        let p: ParentRef = Rc::new(42u64);
+        input.emit_signal(SignalKind::RegionBegin { parent: p.clone() });
+        input.push(5);
+        input.emit_signal(SignalKind::RegionEnd { parent: p });
+        let mut b = Broadcast::new("tee", 4, input, vec![c1.clone(), c2.clone()]);
+        while b.fireable() {
+            b.fire().unwrap();
+        }
+        for child in [&c1, &c2] {
+            let (items, sigs) = drain(child);
+            assert_eq!(items, vec![5]);
+            assert_eq!(sigs.len(), 2);
+            let got = match &sigs[0].kind {
+                SignalKind::RegionBegin { parent } => {
+                    crate::coordinator::signal::parent_as::<u64>(parent).map(|v| *v)
+                }
+                _ => None,
+            };
+            assert_eq!(got, Some(42));
+        }
+    }
+
+    #[test]
+    fn blocked_child_gates_the_ensemble() {
+        let input: Rc<Channel<u32>> = Channel::new(64, 16);
+        for i in 0..8 {
+            input.push(i);
+        }
+        let c1: Rc<Channel<u32>> = Channel::new(64, 16);
+        let c2: Rc<Channel<u32>> = Channel::new(2, 16); // tiny child
+        let mut b = Broadcast::new("tee", 4, input, vec![c1.clone(), c2.clone()]);
+        b.fire().unwrap();
+        assert_eq!(c1.data_len(), 2); // capped by the slow child
+        assert_eq!(c2.data_len(), 2);
+        assert!(!b.fireable()); // blocked until c2 drains
+        let mut buf = Vec::new();
+        c2.pop_data_into(2, &mut buf);
+        assert!(b.fireable());
+    }
+}

@@ -1,0 +1,217 @@
+//! A channel = data queue + signal queue + the emitter half of the credit
+//! protocol (paper §3.1).
+//!
+//! Emitter rules, implemented in [`Channel::emit_signal`]:
+//!
+//! 1. If no signal is queued on `S`, the new signal's credit is the number
+//!    of data items currently queued on `Q`.
+//! 2. Otherwise, its credit is the number of data items emitted since the
+//!    signal at the tail of `S` was enqueued (`emitted_since_signal`,
+//!    reset on every signal emission).
+//!
+//! The receiver half (current-credit counter, rules 1/2a/2b) lives in
+//! [`super::node`], which owns the per-node counter.
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+
+use super::queue::{DataQueue, SignalQueue};
+use super::signal::{Signal, SignalKind};
+
+/// A directed edge between two nodes: bounded data and signal queues.
+pub struct Channel<T> {
+    data: RefCell<DataQueue<T>>,
+    signals: RefCell<SignalQueue>,
+    /// Emitter-side counter for credit rule (2).
+    emitted_since_signal: Cell<u64>,
+}
+
+impl<T> Channel<T> {
+    /// New channel with the given queue capacities.
+    pub fn new(data_cap: usize, signal_cap: usize) -> Rc<Channel<T>> {
+        Rc::new(Channel {
+            data: RefCell::new(DataQueue::new(data_cap)),
+            signals: RefCell::new(SignalQueue::new(signal_cap)),
+            emitted_since_signal: Cell::new(0),
+        })
+    }
+
+    // ---- emitter side -----------------------------------------------
+
+    /// Emit one data item (upstream node). Panics on overflow; the
+    /// scheduler's fireable test reserves space before firing.
+    pub fn push(&self, item: T) {
+        self.data.borrow_mut().push(item);
+        self.emitted_since_signal
+            .set(self.emitted_since_signal.get() + 1);
+    }
+
+    /// Emit a burst of data items with a single queue borrow (perf:
+    /// the per-item `RefCell` borrow in `push` dominates tight feed
+    /// loops — see EXPERIMENTS.md §Perf). Semantically identical to
+    /// pushing each item.
+    pub fn push_iter<I: IntoIterator<Item = T>>(&self, items: I) -> usize {
+        let mut q = self.data.borrow_mut();
+        let mut n = 0u64;
+        for item in items {
+            q.push(item);
+            n += 1;
+        }
+        self.emitted_since_signal
+            .set(self.emitted_since_signal.get() + n);
+        n as usize
+    }
+
+    /// Emit a signal, assigning credit per the emitter rules.
+    pub fn emit_signal(&self, kind: SignalKind) {
+        let mut sigs = self.signals.borrow_mut();
+        let credit = if sigs.is_empty() {
+            self.data.borrow().len() as u64 // rule (1)
+        } else {
+            self.emitted_since_signal.get() // rule (2)
+        };
+        sigs.push(Signal::new(kind, credit));
+        self.emitted_since_signal.set(0);
+    }
+
+    // ---- capacity (for the fireable test) ----------------------------
+
+    pub fn data_space(&self) -> usize {
+        self.data.borrow().space()
+    }
+
+    pub fn signal_space(&self) -> usize {
+        self.signals.borrow().space()
+    }
+
+    // ---- receiver side (used by the owning node) ----------------------
+
+    pub fn data_len(&self) -> usize {
+        self.data.borrow().len()
+    }
+
+    pub fn signal_len(&self) -> usize {
+        self.signals.borrow().len()
+    }
+
+    pub fn has_pending(&self) -> bool {
+        self.data_len() > 0 || self.signal_len() > 0
+    }
+
+    /// Pop up to `n` data items into the ensemble scratch buffer.
+    pub fn pop_data_into(&self, n: usize, out: &mut Vec<T>) -> usize {
+        self.data.borrow_mut().pop_into(n, out)
+    }
+
+    /// Head signal credit (0 when no signal queued).
+    pub fn head_signal_credit(&self) -> u64 {
+        self.signals.borrow().head_credit()
+    }
+
+    /// Drain the head signal's credit into the caller (receiver rule 2b).
+    pub fn take_head_signal_credit(&self) -> u64 {
+        self.signals.borrow_mut().take_head_credit()
+    }
+
+    /// Consume the head signal (its credit must already be drained).
+    pub fn pop_signal(&self) -> Option<Signal> {
+        self.signals.borrow_mut().pop()
+    }
+}
+
+impl<T> std::fmt::Debug for Channel<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Channel")
+            .field("data_len", &self.data_len())
+            .field("signal_len", &self.signal_len())
+            .field("emitted_since_signal", &self.emitted_since_signal.get())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule1_credit_equals_queue_len() {
+        let ch = Channel::new(16, 4);
+        ch.push(1);
+        ch.push(2);
+        ch.push(3);
+        ch.emit_signal(SignalKind::Custom(0));
+        assert_eq!(ch.head_signal_credit(), 3);
+    }
+
+    #[test]
+    fn rule1_counts_queue_not_emissions() {
+        // Items already consumed downstream must NOT count toward a new
+        // signal's credit when S is empty.
+        let ch = Channel::new(16, 4);
+        ch.push(1);
+        ch.push(2);
+        let mut scratch = Vec::new();
+        ch.pop_data_into(2, &mut scratch); // downstream consumed both
+        ch.push(3);
+        ch.emit_signal(SignalKind::Custom(0));
+        assert_eq!(ch.head_signal_credit(), 1); // only item 3 queued
+    }
+
+    #[test]
+    fn rule2_counts_since_last_signal() {
+        let ch = Channel::new(16, 4);
+        ch.push(1);
+        ch.emit_signal(SignalKind::Custom(0)); // credit 1 (rule 1)
+        ch.push(2);
+        ch.push(3);
+        ch.emit_signal(SignalKind::Custom(1)); // credit 2 (rule 2)
+        ch.push(4);
+        ch.emit_signal(SignalKind::Custom(2)); // credit 1 (rule 2)
+        assert_eq!(ch.head_signal_credit(), 1);
+        ch.take_head_signal_credit();
+        ch.pop_signal();
+        assert_eq!(ch.head_signal_credit(), 2);
+        ch.take_head_signal_credit();
+        ch.pop_signal();
+        assert_eq!(ch.head_signal_credit(), 1);
+    }
+
+    #[test]
+    fn push_iter_matches_per_item_pushes() {
+        let a: Rc<Channel<u32>> = Channel::new(64, 8);
+        let b: Rc<Channel<u32>> = Channel::new(64, 8);
+        for i in 0..5 {
+            a.push(i);
+        }
+        b.push_iter(0..5);
+        a.emit_signal(SignalKind::Custom(0));
+        b.emit_signal(SignalKind::Custom(0));
+        assert_eq!(a.head_signal_credit(), b.head_signal_credit());
+        a.push(9);
+        b.push_iter(std::iter::once(9));
+        a.emit_signal(SignalKind::Custom(1));
+        b.emit_signal(SignalKind::Custom(1));
+        assert_eq!(a.data_len(), b.data_len());
+    }
+
+    #[test]
+    fn back_to_back_signals_have_zero_credit() {
+        let ch: Rc<Channel<u32>> = Channel::new(8, 8);
+        ch.emit_signal(SignalKind::Custom(0));
+        ch.emit_signal(SignalKind::Custom(1));
+        assert_eq!(ch.head_signal_credit(), 0);
+        ch.pop_signal();
+        assert_eq!(ch.head_signal_credit(), 0);
+    }
+
+    #[test]
+    fn spaces_track_queues() {
+        let ch: Rc<Channel<u32>> = Channel::new(2, 1);
+        assert_eq!(ch.data_space(), 2);
+        ch.push(9);
+        assert_eq!(ch.data_space(), 1);
+        assert_eq!(ch.signal_space(), 1);
+        ch.emit_signal(SignalKind::Custom(0));
+        assert_eq!(ch.signal_space(), 0);
+    }
+}

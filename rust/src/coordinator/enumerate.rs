@@ -1,0 +1,329 @@
+//! Enumeration: "opening" a stream of composite objects into a stream of
+//! element indices bracketed by region signals (paper §4).
+//!
+//! The enumerator consumes composites and, per parent `p`:
+//!
+//! 1. emits `RegionBegin(p)` on the downstream signal queue,
+//! 2. emits the element indices `0..p.count()` as data items,
+//! 3. emits `RegionEnd(p)`.
+//!
+//! Credit assignment happens inside [`Channel::emit_signal`], so downstream
+//! nodes receive the boundaries precisely — and therefore never mix two
+//! parents' elements in one ensemble. Elements are bare `u32` indices: the
+//! parent context rides on the signals, not on the items (the paper's
+//! *sparse* representation; contrast with [`super::tagging`]).
+//!
+//! Like MERCATOR, the framework stays ignorant of composite internals: the
+//! [`Composite`] trait only reports the element count (`findCount()`), and
+//! node logics fetch elements from the parent themselves (Fig. 5's
+//! `b->getItem(i)`).
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use super::channel::Channel;
+use super::metrics::NodeMetrics;
+use super::node::NodeOps;
+use super::signal::{ParentRef, SignalKind};
+
+/// A composite object whose elements can be enumerated.
+pub trait Composite: 'static {
+    /// Number of elements (the paper's `findCount()`).
+    fn count(&self) -> usize;
+}
+
+/// The paper's running example composite (Figs 3–5): a bag of numbers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Blob {
+    pub id: u64,
+    pub elems: Vec<f32>,
+}
+
+impl Blob {
+    pub fn from_vec(id: u64, elems: Vec<f32>) -> Blob {
+        Blob { id, elems }
+    }
+
+    /// Fig. 5's `b->getItem(i)`.
+    pub fn get(&self, i: u32) -> f32 {
+        self.elems[i as usize]
+    }
+}
+
+impl Composite for Blob {
+    fn count(&self) -> usize {
+        self.elems.len()
+    }
+}
+
+/// Progress through the current parent.
+struct EnumProgress<P> {
+    parent: Rc<P>,
+    count: usize,
+    next: usize,
+    ended: bool,
+}
+
+/// Enumeration node: `Channel<P>` in, `Channel<u32>` (element indices) out.
+pub struct Enumerator<P: Composite> {
+    name: String,
+    input: Rc<Channel<P>>,
+    output: Rc<Channel<u32>>,
+    state: Option<EnumProgress<P>>,
+    metrics: NodeMetrics,
+}
+
+impl<P: Composite> Enumerator<P> {
+    pub fn new(
+        name: impl Into<String>,
+        width: usize,
+        input: Rc<Channel<P>>,
+        output: Rc<Channel<u32>>,
+    ) -> Enumerator<P> {
+        Enumerator {
+            name: name.into(),
+            input,
+            output,
+            state: None,
+            metrics: NodeMetrics::new(width),
+        }
+    }
+}
+
+impl<P: Composite> NodeOps for Enumerator<P> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn has_pending(&self) -> bool {
+        self.state.is_some() || self.input.has_pending()
+    }
+
+    fn fireable(&self) -> bool {
+        match &self.state {
+            Some(p) if p.next < p.count => self.output.data_space() > 0,
+            Some(_) => self.output.signal_space() > 0, // needs to emit End
+            None => {
+                if self.input.data_len() > 0 {
+                    // starting a parent emits Begin (and possibly End for
+                    // an empty parent in the same firing)
+                    self.output.signal_space() >= 1
+                } else if self.input.signal_len() > 0 {
+                    // forward custom signals
+                    self.output.signal_space() >= 1
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    fn fire(&mut self) -> Result<bool> {
+        self.metrics.firings += 1;
+        let mut worked = false;
+
+        // Forward any upstream custom signals first (precise w.r.t. the
+        // composite stream; nested region signals are not supported).
+        while self.state.is_none()
+            && self.input.signal_len() > 0
+            && self.input.head_signal_credit() == 0
+            && self.output.signal_space() > 0
+        {
+            let sig = self.input.pop_signal().expect("len checked");
+            match sig.kind {
+                SignalKind::Custom(id) => {
+                    self.output.emit_signal(SignalKind::Custom(id));
+                    self.metrics.signals_consumed += 1;
+                    self.metrics.signals_emitted += 1;
+                    worked = true;
+                }
+                SignalKind::RegionBegin { .. } | SignalKind::RegionEnd { .. } => {
+                    bail!("nested enumeration is not supported (node {})", self.name)
+                }
+            }
+        }
+
+        loop {
+            match &mut self.state {
+                None => {
+                    // open the next parent
+                    if self.output.signal_space() == 0 {
+                        break;
+                    }
+                    let Some(p) = ({
+                        let mut tmp = Vec::with_capacity(1);
+                        self.input.pop_data_into(1, &mut tmp);
+                        tmp.pop()
+                    }) else {
+                        break;
+                    };
+                    let parent = Rc::new(p);
+                    let count = parent.count();
+                    let pref: ParentRef = parent.clone();
+                    self.output
+                        .emit_signal(SignalKind::RegionBegin { parent: pref });
+                    self.metrics.signals_emitted += 1;
+                    self.metrics.items += 1; // composites consumed
+                    self.state = Some(EnumProgress {
+                        parent,
+                        count,
+                        next: 0,
+                        ended: false,
+                    });
+                    worked = true;
+                }
+                Some(prog) => {
+                    // emit element indices in one batched push (single
+                    // queue borrow — perf pass, EXPERIMENTS.md §Perf)
+                    let burst = (prog.count - prog.next).min(self.output.data_space());
+                    if burst > 0 {
+                        let lo = prog.next as u32;
+                        self.output.push_iter(lo..lo + burst as u32);
+                        prog.next += burst;
+                        worked = true;
+                    }
+                    if prog.next < prog.count {
+                        break; // out of data space; resume next firing
+                    }
+                    if self.output.signal_space() == 0 {
+                        break; // cannot emit End yet
+                    }
+                    let pref: ParentRef = prog.parent.clone();
+                    self.output.emit_signal(SignalKind::RegionEnd { parent: pref });
+                    self.metrics.signals_emitted += 1;
+                    prog.ended = true;
+                    self.state = None;
+                    worked = true;
+                }
+            }
+        }
+        Ok(worked)
+    }
+
+    fn metrics(&self) -> &NodeMetrics {
+        &self.metrics
+    }
+
+    fn ready_hint(&self) -> usize {
+        // producer: how many elements could be emitted this firing
+        let w = self.metrics.width;
+        match &self.state {
+            Some(p) => (p.count - p.next).min(self.output.data_space()).min(w),
+            None if self.input.data_len() > 0 => self.output.data_space().min(w),
+            None => 0,
+        }
+    }
+
+    fn input_pressure(&self) -> bool {
+        // composite granularity: pressured only when the source queue is
+        // completely full
+        self.input.data_space() == 0
+    }
+}
+
+impl<P: Composite> Enumerator<P>
+where
+    P: 'static,
+{
+    /// Rc-upcast helper used when storing `Rc<P>` as a [`ParentRef`].
+    #[allow(dead_code)]
+    fn _assert_static(_p: &P) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::signal::Signal;
+
+    fn drain_signals(ch: &Channel<u32>) -> Vec<Signal> {
+        let mut out = Vec::new();
+        while ch.signal_len() > 0 {
+            // record the credit before draining it (pop requires credit 0)
+            let credit = ch.take_head_signal_credit();
+            let mut sig = ch.pop_signal().unwrap();
+            sig.credit = credit;
+            out.push(sig);
+        }
+        out
+    }
+
+    #[test]
+    fn enumerates_indices_with_boundaries() {
+        let input: Rc<Channel<Blob>> = Channel::new(8, 4);
+        let output: Rc<Channel<u32>> = Channel::new(64, 16);
+        input.push(Blob::from_vec(0, vec![1.0, 2.0, 3.0]));
+        input.push(Blob::from_vec(1, vec![4.0]));
+        let mut e = Enumerator::new("enum", 4, input, output.clone());
+        while e.fireable() {
+            e.fire().unwrap();
+        }
+        // data: 0,1,2 (blob 0), 0 (blob 1)
+        let mut items = Vec::new();
+        // credits: Begin(0)=0, End(0)=3, Begin(1)=0, End(1)=1
+        assert_eq!(output.head_signal_credit(), 0);
+        assert_eq!(output.data_len(), 4);
+        output.pop_data_into(4, &mut items);
+        assert_eq!(items, vec![0, 1, 2, 0]);
+        let sigs = drain_signals(&output);
+        assert_eq!(sigs.len(), 4);
+        assert!(matches!(sigs[0].kind, SignalKind::RegionBegin { .. }));
+        assert!(matches!(sigs[1].kind, SignalKind::RegionEnd { .. }));
+        assert_eq!(sigs[1].credit, 3);
+        assert_eq!(sigs[2].credit, 0);
+        assert_eq!(sigs[3].credit, 1);
+    }
+
+    #[test]
+    fn empty_parent_yields_empty_region() {
+        let input: Rc<Channel<Blob>> = Channel::new(8, 4);
+        let output: Rc<Channel<u32>> = Channel::new(64, 16);
+        input.push(Blob::from_vec(7, vec![]));
+        let mut e = Enumerator::new("enum", 4, input, output.clone());
+        while e.fireable() {
+            e.fire().unwrap();
+        }
+        assert_eq!(output.data_len(), 0);
+        let sigs = drain_signals(&output);
+        assert_eq!(sigs.len(), 2); // Begin + End, no elements
+        assert_eq!(sigs[1].credit, 0);
+    }
+
+    #[test]
+    fn resumes_when_output_fills() {
+        let input: Rc<Channel<Blob>> = Channel::new(8, 4);
+        let output: Rc<Channel<u32>> = Channel::new(2, 16); // tiny data queue
+        input.push(Blob::from_vec(0, vec![0.0; 5]));
+        let mut e = Enumerator::new("enum", 4, input, output.clone());
+        assert!(e.fire().unwrap());
+        assert_eq!(output.data_len(), 2); // blocked at capacity
+        let mut buf = Vec::new();
+        output.pop_data_into(2, &mut buf); // downstream consumes
+        assert!(e.fireable());
+        e.fire().unwrap();
+        output.pop_data_into(2, &mut buf);
+        // final firing emits the last element AND the End signal
+        e.fire().unwrap();
+        assert_eq!(output.data_len(), 1);
+        assert_eq!(output.signal_len(), 2); // Begin + End
+        assert!(!e.has_pending());
+        assert!(!e.fireable());
+    }
+
+    #[test]
+    fn forwards_custom_signals() {
+        let input: Rc<Channel<Blob>> = Channel::new(8, 4);
+        let output: Rc<Channel<u32>> = Channel::new(8, 4);
+        input.emit_signal(SignalKind::Custom(42));
+        let mut e = Enumerator::new("enum", 4, input, output.clone());
+        e.fire().unwrap();
+        assert_eq!(output.signal_len(), 1);
+    }
+
+    #[test]
+    fn blob_get_item() {
+        let b = Blob::from_vec(3, vec![1.5, 2.5]);
+        assert_eq!(b.count(), 2);
+        assert_eq!(b.get(1), 2.5);
+    }
+}

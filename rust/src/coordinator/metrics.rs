@@ -1,0 +1,211 @@
+//! Per-node and pipeline-wide execution metrics.
+//!
+//! SIMD occupancy is the paper's central performance quantity: the fraction
+//! of lanes doing useful work per firing. Region-boundary signals cap
+//! ensembles below the SIMD width, and these counters make that visible
+//! (e.g. the taxi app's 91% / 9% full-ensemble split between stages).
+
+/// Counters for one node.
+#[derive(Debug, Clone)]
+pub struct NodeMetrics {
+    /// SIMD width the node runs at (histogram bound).
+    pub width: usize,
+    /// Scheduler firings (data or signal work done).
+    pub firings: u64,
+    /// Firings whose data phase processed ≥ 1 item (= ensembles executed).
+    pub ensembles: u64,
+    /// Ensembles that filled every lane.
+    pub full_ensembles: u64,
+    /// Total data items consumed.
+    pub items: u64,
+    /// Signals consumed / emitted downstream.
+    pub signals_consumed: u64,
+    pub signals_emitted: u64,
+    /// Histogram of ensemble sizes: `hist[k]` = ensembles with k lanes.
+    pub ensemble_hist: Vec<u64>,
+}
+
+impl NodeMetrics {
+    pub fn new(width: usize) -> NodeMetrics {
+        NodeMetrics {
+            width,
+            firings: 0,
+            ensembles: 0,
+            full_ensembles: 0,
+            items: 0,
+            signals_consumed: 0,
+            signals_emitted: 0,
+            ensemble_hist: vec![0; width + 1],
+        }
+    }
+
+    /// Record one executed ensemble of `size` lanes.
+    pub fn record_ensemble(&mut self, size: usize) {
+        debug_assert!(size >= 1 && size <= self.width);
+        self.ensembles += 1;
+        self.items += size as u64;
+        if size == self.width {
+            self.full_ensembles += 1;
+        }
+        self.ensemble_hist[size] += 1;
+    }
+
+    /// Mean occupancy: items / (ensembles × width).
+    pub fn occupancy(&self) -> f64 {
+        if self.ensembles == 0 {
+            return 0.0;
+        }
+        self.items as f64 / (self.ensembles as f64 * self.width as f64)
+    }
+
+    /// Fraction of ensembles that were full (the paper's stage statistic).
+    pub fn full_fraction(&self) -> f64 {
+        if self.ensembles == 0 {
+            return 0.0;
+        }
+        self.full_ensembles as f64 / self.ensembles as f64
+    }
+
+    /// Merge counters from another node instance (multi-worker runs).
+    pub fn merge(&mut self, other: &NodeMetrics) {
+        debug_assert_eq!(self.width, other.width);
+        self.firings += other.firings;
+        self.ensembles += other.ensembles;
+        self.full_ensembles += other.full_ensembles;
+        self.items += other.items;
+        self.signals_consumed += other.signals_consumed;
+        self.signals_emitted += other.signals_emitted;
+        for (a, b) in self.ensemble_hist.iter_mut().zip(&other.ensemble_hist) {
+            *a += b;
+        }
+    }
+}
+
+/// Metrics for a whole pipeline run.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineMetrics {
+    /// (node name, metrics) in topology order.
+    pub nodes: Vec<(String, NodeMetrics)>,
+    /// Wall-clock seconds of the scheduler loop.
+    pub elapsed: f64,
+    /// Scheduler iterations that found nothing fireable before quiescing.
+    pub idle_polls: u64,
+}
+
+impl PipelineMetrics {
+    /// Mean occupancy across all consuming nodes (item-weighted).
+    /// Producer nodes (e.g. enumerators) run no ensembles and are skipped.
+    pub fn occupancy(&self) -> f64 {
+        let (mut items, mut slots) = (0u64, 0u64);
+        for (_, m) in &self.nodes {
+            if m.ensembles > 0 {
+                items += m.items;
+                slots += m.ensembles * m.width as u64;
+            }
+        }
+        if slots == 0 {
+            0.0
+        } else {
+            items as f64 / slots as f64
+        }
+    }
+
+    /// Total ensembles across nodes (the SIMD invocation count — the
+    /// machine-model cost unit).
+    pub fn total_ensembles(&self) -> u64 {
+        self.nodes.iter().map(|(_, m)| m.ensembles).sum()
+    }
+
+    /// Look up one node's metrics by name.
+    pub fn node(&self, name: &str) -> Option<&NodeMetrics> {
+        self.nodes.iter().find(|(n, _)| n == name).map(|(_, m)| m)
+    }
+
+    /// Merge another run's metrics (matching topology).
+    pub fn merge(&mut self, other: &PipelineMetrics) {
+        if self.nodes.is_empty() {
+            *self = other.clone();
+            return;
+        }
+        assert_eq!(self.nodes.len(), other.nodes.len(), "topology mismatch");
+        for ((_, a), (_, b)) in self.nodes.iter_mut().zip(&other.nodes) {
+            a.merge(b);
+        }
+        self.elapsed = self.elapsed.max(other.elapsed);
+        self.idle_polls += other.idle_polls;
+    }
+
+    /// Render a per-node occupancy table (used by `--stats`).
+    pub fn table(&self) -> String {
+        let mut out = String::from(
+            "node                 firings  ensembles  full%   occ%    items      sig_in\n",
+        );
+        for (name, m) in &self.nodes {
+            out.push_str(&format!(
+                "{:<20} {:>7}  {:>9}  {:>5.1}  {:>5.1}  {:>9}  {:>8}\n",
+                name,
+                m.firings,
+                m.ensembles,
+                100.0 * m.full_fraction(),
+                100.0 * m.occupancy(),
+                m.items,
+                m.signals_consumed,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_math() {
+        let mut m = NodeMetrics::new(4);
+        m.record_ensemble(4);
+        m.record_ensemble(2);
+        assert_eq!(m.ensembles, 2);
+        assert_eq!(m.full_ensembles, 1);
+        assert_eq!(m.items, 6);
+        assert!((m.occupancy() - 0.75).abs() < 1e-12);
+        assert!((m.full_fraction() - 0.5).abs() < 1e-12);
+        assert_eq!(m.ensemble_hist[4], 1);
+        assert_eq!(m.ensemble_hist[2], 1);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = NodeMetrics::new(8);
+        assert_eq!(m.occupancy(), 0.0);
+        assert_eq!(m.full_fraction(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = NodeMetrics::new(4);
+        a.record_ensemble(4);
+        let mut b = NodeMetrics::new(4);
+        b.record_ensemble(1);
+        b.firings = 3;
+        a.merge(&b);
+        assert_eq!(a.ensembles, 2);
+        assert_eq!(a.items, 5);
+        assert_eq!(a.firings, 3);
+    }
+
+    #[test]
+    fn pipeline_totals() {
+        let mut pm = PipelineMetrics::default();
+        let mut m1 = NodeMetrics::new(2);
+        m1.record_ensemble(2);
+        let mut m2 = NodeMetrics::new(2);
+        m2.record_ensemble(1);
+        pm.nodes.push(("a".into(), m1));
+        pm.nodes.push(("b".into(), m2));
+        assert_eq!(pm.total_ensembles(), 2);
+        assert!((pm.occupancy() - 0.75).abs() < 1e-12);
+        assert!(pm.node("b").is_some());
+        assert!(pm.table().contains("a"));
+    }
+}

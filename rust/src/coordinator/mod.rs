@@ -1,0 +1,44 @@
+//! Layer-3 coordinator: the paper's system contribution.
+//!
+//! * [`signal`] / [`queue`] / [`channel`] — out-of-band control signals,
+//!   bounded queues, and the **credit protocol** that keeps the two
+//!   synchronized for precise delivery under irregular dataflow (§3.1).
+//! * [`node`] — two-phase firing (data ensemble + signal phase), receiver
+//!   credit rules, the §3.3 SIMD rule (ensembles never span a signal).
+//! * [`scheduler`] — non-preemptive firing loop with deadlock detection
+//!   (Lemma 2 says detection never triggers; the tests lean on that).
+//! * [`enumerate`] / [`aggregate`] — the developer-facing region-context
+//!   abstraction (§4): open composites into element streams, fold them
+//!   back to per-parent results.
+//! * [`broadcast`] — fan-out node for tree topologies (paper Fig. 1b),
+//!   duplicating data and signals precisely to every child.
+//! * [`tagging`] — the dense in-band alternative used as the paper's §5
+//!   comparison baseline.
+//! * [`metrics`] — occupancy accounting (the paper's key performance
+//!   quantity).
+//! * [`topology`] — the builder API mirroring the Fig. 4 topology
+//!   specification.
+
+pub mod aggregate;
+pub mod broadcast;
+pub mod channel;
+pub mod enumerate;
+pub mod metrics;
+pub mod node;
+pub mod queue;
+pub mod scheduler;
+pub mod signal;
+pub mod tagging;
+pub mod topology;
+
+pub use aggregate::{Aggregator, FilterMapLogic, MapLogic};
+pub use broadcast::Broadcast;
+pub use channel::Channel;
+pub use enumerate::{Blob, Composite, Enumerator};
+pub use metrics::{NodeMetrics, PipelineMetrics};
+pub use node::{Emitter, Node, NodeLogic, NodeOps, Output};
+pub use queue::{DataQueue, SignalQueue};
+pub use scheduler::{Policy, Scheduler};
+pub use signal::{parent_as, Credit, ParentRef, Signal, SignalKind};
+pub use tagging::{densify_tags, Tagged};
+pub use topology::{Pipeline, PipelineBuilder};

@@ -1,0 +1,580 @@
+//! Compute nodes: two-phase firing and the receiver half of the credit
+//! protocol (paper §3.1–3.3).
+//!
+//! A firing has a **data phase** followed by a **signal phase**:
+//!
+//! * Data phase — consume one SIMD *ensemble*: up to `width` items, further
+//!   limited by downstream queue space and, when a signal is pending, by
+//!   the node's current-credit counter (receiver rules 2a/2b). This is the
+//!   §3.3 SIMD rule: an ensemble never spans a signal, so all items in an
+//!   ensemble share one region context.
+//! * Signal phase — entered when the credit counter is 0: consume queued
+//!   signals (calling the `begin`/`end`/custom hooks and forwarding region
+//!   signals downstream) until a signal recharges the counter or none
+//!   remain.
+//!
+//! The *fireable* test (§3.2) uses each logic's a-priori output bounds to
+//! guarantee a firing can never overflow downstream queues.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::channel::Channel;
+use super::metrics::NodeMetrics;
+use super::signal::{ParentRef, Signal, SignalKind};
+
+/// User-provided node behaviour (the paper's `run()`/`begin()`/`end()`
+/// stubs, Fig. 5).
+pub trait NodeLogic {
+    type In: 'static;
+    type Out: 'static;
+
+    /// Process one ensemble. `items` has between 1 and `width` entries and
+    /// never spans a region boundary; `parent` is the enclosing region's
+    /// composite object (the paper's `getParent()`), uniform across the
+    /// ensemble.
+    fn run(
+        &mut self,
+        items: &[Self::In],
+        parent: Option<&ParentRef>,
+        out: &mut Emitter<'_, Self::Out>,
+    ) -> Result<()>;
+
+    /// Called when a region opens (before any of its items).
+    fn begin(&mut self, _parent: &ParentRef, _out: &mut Emitter<'_, Self::Out>) -> Result<()> {
+        Ok(())
+    }
+
+    /// Called when a region closes (after all of its items).
+    fn end(&mut self, _parent: &ParentRef, _out: &mut Emitter<'_, Self::Out>) -> Result<()> {
+        Ok(())
+    }
+
+    /// Called for application-defined signals.
+    fn on_custom(&mut self, _id: u64, _out: &mut Emitter<'_, Self::Out>) -> Result<()> {
+        Ok(())
+    }
+
+    /// A-priori bound on outputs per consumed data item (paper §3.2; the
+    /// scheduler uses it to reserve downstream space).
+    fn max_outputs_per_input(&self) -> usize {
+        1
+    }
+
+    /// A-priori bound on data outputs per consumed *signal* (an
+    /// aggregator's `end()` pushes one result; plain filters push none).
+    fn max_outputs_per_signal(&self) -> usize {
+        0
+    }
+
+    /// Forward region/custom signals to the downstream neighbour?
+    /// `true` keeps the enumeration scope open through this node;
+    /// aggregators return `false` to close it (the `aggregate` keyword).
+    fn forward_region_signals(&self) -> bool {
+        true
+    }
+}
+
+/// Where a node's outputs go: a downstream channel, or a terminal sink
+/// buffer (the paper's sink node, with unbounded output space).
+pub enum Output<T> {
+    Chan(Rc<Channel<T>>),
+    Sink(Rc<RefCell<Vec<T>>>),
+}
+
+impl<T> Output<T> {
+    fn data_space(&self) -> usize {
+        match self {
+            Output::Chan(c) => c.data_space(),
+            Output::Sink(_) => usize::MAX,
+        }
+    }
+
+    fn signal_space(&self) -> usize {
+        match self {
+            Output::Chan(c) => c.signal_space(),
+            Output::Sink(_) => usize::MAX,
+        }
+    }
+}
+
+/// Push handle given to [`NodeLogic`] callbacks.
+pub struct Emitter<'a, T> {
+    out: &'a Output<T>,
+    /// Items pushed during the current callback (checked against the
+    /// logic's declared bounds in debug builds).
+    pub pushed: usize,
+}
+
+impl<'a, T> Emitter<'a, T> {
+    pub(crate) fn new(out: &'a Output<T>) -> Emitter<'a, T> {
+        Emitter { out, pushed: 0 }
+    }
+
+    /// Emit one output item.
+    pub fn push(&mut self, item: T) {
+        match self.out {
+            Output::Chan(c) => c.push(item),
+            Output::Sink(s) => s.borrow_mut().push(item),
+        }
+        self.pushed += 1;
+    }
+}
+
+/// Object-safe node interface driven by the scheduler.
+pub trait NodeOps {
+    fn name(&self) -> &str;
+    /// Any queued data or signals?
+    fn has_pending(&self) -> bool;
+    /// May this node make progress if fired now? (paper §3.2 fireable test)
+    fn fireable(&self) -> bool;
+    /// One firing: data phase + signal phase. Returns true if progress
+    /// was made.
+    fn fire(&mut self) -> Result<bool>;
+    fn metrics(&self) -> &NodeMetrics;
+    /// Size of the data ensemble a firing would process right now
+    /// (0 if only signal work is possible). The occupancy-greedy
+    /// scheduling policy maximizes this — MERCATOR's approach to keeping
+    /// SIMD ensembles full.
+    fn ready_hint(&self) -> usize {
+        0
+    }
+    /// Is this node's input queue too full for its upstream neighbour to
+    /// stage another full ensemble? The scheduler uses this backpressure
+    /// signal to decide when a sub-width firing is *necessary* (drain)
+    /// rather than premature (it should keep accumulating).
+    fn input_pressure(&self) -> bool {
+        false
+    }
+}
+
+/// A pipeline stage wrapping a [`NodeLogic`].
+pub struct Node<L: NodeLogic> {
+    name: String,
+    logic: L,
+    input: Rc<Channel<L::In>>,
+    output: Output<L::Out>,
+    /// Receiver-side current credit counter (paper §3.1).
+    credit: u64,
+    /// Region context, maintained from RegionBegin/RegionEnd signals.
+    parent: Option<ParentRef>,
+    width: usize,
+    metrics: NodeMetrics,
+    scratch: Vec<L::In>,
+}
+
+impl<L: NodeLogic> Node<L> {
+    pub fn new(
+        name: impl Into<String>,
+        width: usize,
+        input: Rc<Channel<L::In>>,
+        output: Output<L::Out>,
+        logic: L,
+    ) -> Node<L> {
+        Node {
+            name: name.into(),
+            logic,
+            input,
+            output,
+            credit: 0,
+            parent: None,
+            width,
+            metrics: NodeMetrics::new(width),
+            scratch: Vec::with_capacity(width),
+        }
+    }
+
+    /// Invariant check (paper appendix, Claim 1): a non-zero credit counter
+    /// implies pending data.
+    fn check_claim1(&self) {
+        debug_assert!(
+            self.credit == 0 || self.input.data_len() > 0,
+            "claim 1 violated at node {}: credit {} with empty data queue",
+            self.name,
+            self.credit
+        );
+    }
+
+    /// Data-phase ensemble size limit (receiver rules 1/2a/2b + space +
+    /// SIMD width). May transfer head-signal credit into the counter.
+    fn data_limit(&mut self) -> usize {
+        let avail = self.input.data_len();
+        if avail == 0 {
+            return 0;
+        }
+        let mut limit = avail.min(self.width);
+        if self.input.signal_len() > 0 {
+            if self.credit == 0 {
+                // rule 2b: recharge from the head signal
+                self.credit = self.input.take_head_signal_credit();
+            }
+            // rule 2a: never read past the next signal
+            limit = limit.min(self.credit as usize);
+        } else {
+            debug_assert_eq!(self.credit, 0, "credit without queued signal");
+        }
+        let max_out = self.logic.max_outputs_per_input().max(1);
+        let space = self.output.data_space() / max_out;
+        limit.min(space)
+    }
+
+    fn can_consume_signal(&self) -> bool {
+        // forwarding needs signal space; begin/end pushes need data space
+        let sig_ok = !self.logic.forward_region_signals() || self.output.signal_space() >= 1;
+        let data_ok = self.output.data_space() >= self.logic.max_outputs_per_signal();
+        sig_ok && data_ok
+    }
+
+    fn handle_signal(&mut self, sig: Signal) -> Result<()> {
+        match sig.kind {
+            SignalKind::RegionBegin { parent } => {
+                self.parent = Some(parent.clone());
+                // forward FIRST: items pushed by begin() belong inside the
+                // region downstream as well
+                if self.logic.forward_region_signals() {
+                    if let Output::Chan(c) = &self.output {
+                        c.emit_signal(SignalKind::RegionBegin {
+                            parent: parent.clone(),
+                        });
+                        self.metrics.signals_emitted += 1;
+                    }
+                }
+                let mut em = Emitter::new(&self.output);
+                self.logic.begin(&parent, &mut em)?;
+                debug_assert!(em.pushed <= self.logic.max_outputs_per_signal());
+            }
+            SignalKind::RegionEnd { parent } => {
+                // end() pushes (e.g. an aggregate) belong BEFORE the
+                // downstream region-end boundary
+                let mut em = Emitter::new(&self.output);
+                self.logic.end(&parent, &mut em)?;
+                debug_assert!(em.pushed <= self.logic.max_outputs_per_signal());
+                self.parent = None;
+                if self.logic.forward_region_signals() {
+                    if let Output::Chan(c) = &self.output {
+                        c.emit_signal(SignalKind::RegionEnd { parent });
+                        self.metrics.signals_emitted += 1;
+                    }
+                }
+            }
+            SignalKind::Custom(id) => {
+                let mut em = Emitter::new(&self.output);
+                self.logic.on_custom(id, &mut em)?;
+                debug_assert!(em.pushed <= self.logic.max_outputs_per_signal());
+                if self.logic.forward_region_signals() {
+                    if let Output::Chan(c) = &self.output {
+                        c.emit_signal(SignalKind::Custom(id));
+                        self.metrics.signals_emitted += 1;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Access the wrapped logic (e.g. to read app state after a run).
+    pub fn logic(&self) -> &L {
+        &self.logic
+    }
+}
+
+impl<L: NodeLogic> NodeOps for Node<L> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn has_pending(&self) -> bool {
+        self.input.has_pending()
+    }
+
+    fn fireable(&self) -> bool {
+        let data = self.input.data_len();
+        let sigs = self.input.signal_len();
+        if data == 0 && sigs == 0 {
+            return false;
+        }
+        let max_out = self.logic.max_outputs_per_input().max(1);
+        let room_for_data = self.output.data_space() >= max_out;
+        if data > 0 && room_for_data {
+            // would the credit rules admit at least one item?
+            let credit_ok = if sigs > 0 {
+                self.credit > 0 || self.input.head_signal_credit() > 0
+            } else {
+                true
+            };
+            if credit_ok {
+                return true;
+            }
+        }
+        // otherwise: a zero-credit signal at the head may be consumable
+        if sigs > 0 && self.credit == 0 && self.input.head_signal_credit() == 0 {
+            return self.can_consume_signal();
+        }
+        false
+    }
+
+    fn fire(&mut self) -> Result<bool> {
+        self.check_claim1();
+        let mut worked = false;
+        self.metrics.firings += 1;
+
+        // ---- data phase: one ensemble ----
+        let limit = self.data_limit();
+        if limit > 0 {
+            let take = self.input.pop_data_into(limit, &mut self.scratch);
+            debug_assert!(take >= 1);
+            let max_pushed = take * self.logic.max_outputs_per_input().max(1);
+            let mut em = Emitter::new(&self.output);
+            let parent = self.parent.clone();
+            self.logic.run(&self.scratch[..take], parent.as_ref(), &mut em)?;
+            debug_assert!(
+                em.pushed <= max_pushed,
+                "node {} exceeded its declared output bound",
+                self.name
+            );
+            if self.credit > 0 {
+                self.credit -= take as u64;
+            }
+            self.metrics.record_ensemble(take);
+            worked = true;
+        }
+
+        // ---- signal phase ----
+        if self.credit == 0 {
+            while self.input.signal_len() > 0 {
+                let c = self.input.take_head_signal_credit();
+                if c > 0 {
+                    // counter recharged: data must be consumed first
+                    self.credit = c;
+                    break;
+                }
+                if !self.can_consume_signal() {
+                    break; // blocked downstream; retry on a later firing
+                }
+                let sig = self.input.pop_signal().expect("len checked");
+                self.handle_signal(sig)?;
+                self.metrics.signals_consumed += 1;
+                worked = true;
+            }
+        }
+        self.check_claim1();
+        Ok(worked)
+    }
+
+    fn metrics(&self) -> &NodeMetrics {
+        &self.metrics
+    }
+
+    fn ready_hint(&self) -> usize {
+        let avail = self.input.data_len();
+        if avail == 0 {
+            return 0;
+        }
+        let mut limit = avail.min(self.width);
+        if self.input.signal_len() > 0 {
+            // non-mutating mirror of data_limit(): count both the local
+            // counter and the (not yet transferred) head-signal credit
+            let credit = self.credit.max(self.input.head_signal_credit());
+            limit = limit.min(credit as usize);
+        }
+        let max_out = self.logic.max_outputs_per_input().max(1);
+        limit.min(self.output.data_space() / max_out)
+    }
+
+    fn input_pressure(&self) -> bool {
+        self.input.data_space() < self.width
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Doubles each value; drops negatives (irregular output).
+    struct DoublePos;
+    impl NodeLogic for DoublePos {
+        type In = f32;
+        type Out = f32;
+        fn run(
+            &mut self,
+            items: &[f32],
+            _parent: Option<&ParentRef>,
+            out: &mut Emitter<'_, f32>,
+        ) -> Result<()> {
+            for &v in items {
+                if v >= 0.0 {
+                    out.push(2.0 * v);
+                }
+            }
+            Ok(())
+        }
+    }
+
+    fn sink_node(
+        width: usize,
+        input: Rc<Channel<f32>>,
+    ) -> (Node<DoublePos>, Rc<RefCell<Vec<f32>>>) {
+        let sink = Rc::new(RefCell::new(Vec::new()));
+        let node = Node::new("n", width, input, Output::Sink(sink.clone()), DoublePos);
+        (node, sink)
+    }
+
+    #[test]
+    fn fires_one_ensemble_up_to_width() {
+        let ch = Channel::new(64, 8);
+        for i in 0..10 {
+            ch.push(i as f32);
+        }
+        let (mut node, sink) = sink_node(4, ch);
+        assert!(node.fireable());
+        assert!(node.fire().unwrap());
+        assert_eq!(sink.borrow().len(), 4); // one ensemble of width 4
+        assert_eq!(node.metrics().ensembles, 1);
+        assert_eq!(node.metrics().full_ensembles, 1);
+        // three more firings drain the rest
+        while node.fireable() {
+            node.fire().unwrap();
+        }
+        assert_eq!(sink.borrow().len(), 10);
+        assert_eq!(node.metrics().ensembles, 3);
+        assert_eq!(node.metrics().ensemble_hist[2], 1); // final partial
+    }
+
+    #[test]
+    fn signal_caps_ensemble_at_credit() {
+        let ch = Channel::new(64, 8);
+        for i in 0..3 {
+            ch.push(i as f32);
+        }
+        ch.emit_signal(SignalKind::Custom(7)); // credit 3
+        for i in 3..8 {
+            ch.push(i as f32);
+        }
+        let (mut node, sink) = sink_node(4, ch);
+        // firing 1: ensemble capped at 3 (credit), then signal consumed
+        assert!(node.fire().unwrap());
+        assert_eq!(sink.borrow().len(), 3);
+        assert_eq!(node.metrics().ensemble_hist[3], 1);
+        assert_eq!(node.metrics().signals_consumed, 1);
+        // firing 2: remaining 5 items → ensemble of 4, then 1
+        node.fire().unwrap();
+        node.fire().unwrap();
+        assert_eq!(sink.borrow().len(), 8);
+        assert_eq!(node.metrics().ensemble_hist[4], 1);
+        assert_eq!(node.metrics().ensemble_hist[1], 1);
+    }
+
+    #[test]
+    fn zero_credit_signal_consumed_before_data() {
+        let ch = Channel::new(64, 8);
+        ch.emit_signal(SignalKind::Custom(1)); // credit 0 (empty queue)
+        ch.push(1.0);
+        let (mut node, sink) = sink_node(4, ch);
+        assert!(node.fire().unwrap());
+        // the signal preceded the data; first firing consumed the signal
+        // AND then nothing blocked the data... data phase ran first with
+        // limit 0, signal phase consumed the signal.
+        assert_eq!(node.metrics().signals_consumed, 1);
+        assert_eq!(sink.borrow().len(), 0);
+        node.fire().unwrap();
+        assert_eq!(sink.borrow().len(), 1);
+    }
+
+    #[test]
+    fn region_signals_update_parent_and_hooks() {
+        struct ParentEcho {
+            begun: u32,
+            ended: u32,
+        }
+        impl NodeLogic for ParentEcho {
+            type In = u32;
+            type Out = u64;
+            fn run(
+                &mut self,
+                items: &[u32],
+                parent: Option<&ParentRef>,
+                out: &mut Emitter<'_, u64>,
+            ) -> Result<()> {
+                let pid = parent
+                    .and_then(|p| crate::coordinator::signal::parent_as::<u64>(p))
+                    .map(|p| *p)
+                    .unwrap_or(999);
+                for &i in items {
+                    out.push(pid * 1000 + i as u64);
+                }
+                Ok(())
+            }
+            fn begin(&mut self, _p: &ParentRef, _o: &mut Emitter<'_, u64>) -> Result<()> {
+                self.begun += 1;
+                Ok(())
+            }
+            fn end(&mut self, _p: &ParentRef, _o: &mut Emitter<'_, u64>) -> Result<()> {
+                self.ended += 1;
+                Ok(())
+            }
+        }
+
+        let ch: Rc<Channel<u32>> = Channel::new(64, 8);
+        let p1: ParentRef = Rc::new(5u64);
+        ch.emit_signal(SignalKind::RegionBegin { parent: p1.clone() });
+        ch.push(1);
+        ch.push(2);
+        ch.emit_signal(SignalKind::RegionEnd { parent: p1 });
+        let p2: ParentRef = Rc::new(6u64);
+        ch.emit_signal(SignalKind::RegionBegin { parent: p2.clone() });
+        ch.push(3);
+        ch.emit_signal(SignalKind::RegionEnd { parent: p2 });
+
+        let sink = Rc::new(RefCell::new(Vec::new()));
+        let mut node = Node::new(
+            "echo",
+            4,
+            ch,
+            Output::Sink(sink.clone()),
+            ParentEcho { begun: 0, ended: 0 },
+        );
+        while node.fireable() {
+            node.fire().unwrap();
+        }
+        assert_eq!(*sink.borrow(), vec![5001, 5002, 6003]);
+        assert_eq!(node.logic().begun, 2);
+        assert_eq!(node.logic().ended, 2);
+        // items of different regions never shared an ensemble
+        assert_eq!(node.metrics().ensemble_hist[2], 1);
+        assert_eq!(node.metrics().ensemble_hist[1], 1);
+    }
+
+    #[test]
+    fn blocked_downstream_is_not_fireable() {
+        let ch = Channel::new(64, 8);
+        ch.push(1.0);
+        let out: Rc<Channel<f32>> = Channel::new(0, 1); // no data space
+        let mut node = Node::new("n", 4, ch, Output::Chan(out), DoublePos);
+        assert!(!node.fireable());
+        assert!(!node.fire().unwrap()); // firing anyway makes no progress
+        assert_eq!(node.metrics().ensembles, 0);
+    }
+
+    #[test]
+    fn forwards_region_signals_downstream() {
+        let ch: Rc<Channel<f32>> = Channel::new(8, 4);
+        let p: ParentRef = Rc::new(1u64);
+        ch.emit_signal(SignalKind::RegionBegin { parent: p.clone() });
+        ch.push(1.0);
+        ch.emit_signal(SignalKind::RegionEnd { parent: p });
+        let out: Rc<Channel<f32>> = Channel::new(8, 4);
+        let mut node = Node::new("n", 4, ch, Output::Chan(out.clone()), DoublePos);
+        while node.fireable() {
+            node.fire().unwrap();
+        }
+        assert_eq!(out.data_len(), 1);
+        assert_eq!(out.signal_len(), 2);
+        assert_eq!(node.metrics().signals_emitted, 2);
+        // forwarded Begin has credit 0 (emitted before the data), End has 1
+        assert_eq!(out.head_signal_credit(), 0);
+        out.pop_signal();
+        assert_eq!(out.head_signal_credit(), 1);
+    }
+}

@@ -1,0 +1,185 @@
+//! Bounded data and signal queues between pipeline stages.
+//!
+//! `DataQueue<T>` is a fixed-capacity ring buffer; its pop-many operation
+//! fills the node's ensemble scratch buffer without per-item reallocation
+//! (this is on the hot path: every firing does exactly one `pop_into`).
+
+use std::collections::VecDeque;
+
+use super::signal::Signal;
+
+/// Fixed-capacity FIFO of data items.
+#[derive(Debug)]
+pub struct DataQueue<T> {
+    buf: VecDeque<T>,
+    capacity: usize,
+}
+
+impl<T> DataQueue<T> {
+    pub fn new(capacity: usize) -> DataQueue<T> {
+        DataQueue {
+            buf: VecDeque::with_capacity(capacity.min(1 << 20)),
+            capacity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Remaining space.
+    pub fn space(&self) -> usize {
+        self.capacity - self.buf.len()
+    }
+
+    /// Push one item. Panics if full — callers must check space first
+    /// (the scheduler's fireable test guarantees it).
+    pub fn push(&mut self, item: T) {
+        assert!(self.buf.len() < self.capacity, "data queue overflow");
+        self.buf.push_back(item);
+    }
+
+    /// Pop up to `n` items into `out` (cleared first). Returns the count.
+    pub fn pop_into(&mut self, n: usize, out: &mut Vec<T>) -> usize {
+        out.clear();
+        let take = n.min(self.buf.len());
+        for _ in 0..take {
+            out.push(self.buf.pop_front().expect("len checked"));
+        }
+        take
+    }
+
+    /// Pop a single item.
+    pub fn pop(&mut self) -> Option<T> {
+        self.buf.pop_front()
+    }
+}
+
+/// Fixed-capacity FIFO of signals.
+///
+/// The head signal's credit is drained in place by receiver rule (2b);
+/// the signal itself is consumed only once its credit reaches zero.
+#[derive(Debug)]
+pub struct SignalQueue {
+    buf: VecDeque<Signal>,
+    capacity: usize,
+}
+
+impl SignalQueue {
+    pub fn new(capacity: usize) -> SignalQueue {
+        SignalQueue {
+            buf: VecDeque::with_capacity(capacity.min(1 << 16)),
+            capacity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn space(&self) -> usize {
+        self.capacity - self.buf.len()
+    }
+
+    /// Enqueue a signal. Panics if full — guarded by the fireable test.
+    pub fn push(&mut self, sig: Signal) {
+        assert!(self.buf.len() < self.capacity, "signal queue overflow");
+        self.buf.push_back(sig);
+    }
+
+    /// Credit currently carried by the head signal (0 if none queued).
+    pub fn head_credit(&self) -> u64 {
+        self.buf.front().map(|s| s.credit).unwrap_or(0)
+    }
+
+    /// Drain the head signal's credit (receiver rule 2b). Returns the
+    /// amount transferred.
+    pub fn take_head_credit(&mut self) -> u64 {
+        match self.buf.front_mut() {
+            Some(s) => std::mem::take(&mut s.credit),
+            None => 0,
+        }
+    }
+
+    /// Consume the head signal. Callers must have drained its credit.
+    pub fn pop(&mut self) -> Option<Signal> {
+        debug_assert_eq!(self.head_credit(), 0, "consuming signal with credit");
+        self.buf.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::signal::SignalKind;
+
+    #[test]
+    fn data_queue_fifo_and_space() {
+        let mut q = DataQueue::new(4);
+        assert_eq!(q.space(), 4);
+        q.push(1);
+        q.push(2);
+        q.push(3);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.space(), 1);
+        let mut out = Vec::new();
+        assert_eq!(q.pop_into(2, &mut out), 2);
+        assert_eq!(out, vec![1, 2]);
+        assert_eq!(q.pop(), Some(3));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_into_caps_at_len() {
+        let mut q = DataQueue::new(8);
+        q.push(10);
+        let mut out = vec![99, 98];
+        assert_eq!(q.pop_into(5, &mut out), 1);
+        assert_eq!(out, vec![10]); // cleared first
+    }
+
+    #[test]
+    #[should_panic(expected = "data queue overflow")]
+    fn data_overflow_panics() {
+        let mut q = DataQueue::new(1);
+        q.push(1);
+        q.push(2);
+    }
+
+    #[test]
+    fn signal_queue_credit_draining() {
+        let mut s = SignalQueue::new(4);
+        s.push(Signal::new(SignalKind::Custom(1), 3));
+        s.push(Signal::new(SignalKind::Custom(2), 5));
+        assert_eq!(s.head_credit(), 3);
+        assert_eq!(s.take_head_credit(), 3);
+        assert_eq!(s.head_credit(), 0);
+        let sig = s.pop().unwrap();
+        assert!(matches!(sig.kind, SignalKind::Custom(1)));
+        assert_eq!(s.head_credit(), 5); // next head's credit now visible
+    }
+
+    #[test]
+    fn empty_signal_queue_is_zero_credit() {
+        let mut s = SignalQueue::new(2);
+        assert_eq!(s.head_credit(), 0);
+        assert_eq!(s.take_head_credit(), 0);
+        assert!(s.pop().is_none());
+    }
+}

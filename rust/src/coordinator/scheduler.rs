@@ -1,0 +1,260 @@
+//! Non-preemptive node scheduler (paper §2.1/§3.2).
+//!
+//! One node fires at a time; the scheduler repeatedly selects a fireable
+//! node until no node has pending inputs (quiescence, guaranteed to arrive
+//! by the paper's Lemma 2). If nothing is fireable while work remains the
+//! scheduler reports a deadlock — Lemma 2 says this cannot happen, and the
+//! property suite hammers on exactly that claim.
+
+use anyhow::{bail, Result};
+
+use super::node::NodeOps;
+
+/// Node-selection policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Fire the node with the largest ready ensemble (ties: deepest).
+    /// Lets queues fill so SIMD ensembles run full — MERCATOR's
+    /// occupancy-maximizing heuristic, and our default.
+    GreedyOccupancy,
+    /// Prefer the deepest (most-downstream) fireable node. Keeps queues
+    /// shallow but fires small ensembles (the ablation_lanectx bench
+    /// quantifies the cost).
+    DeepestFirst,
+    /// Cycle through nodes in topology order.
+    RoundRobin,
+}
+
+/// Scheduler state and counters.
+#[derive(Debug)]
+pub struct Scheduler {
+    policy: Policy,
+    /// Total firings dispatched.
+    pub firings: u64,
+    /// Fireability scans that found no node (should stay 0 mid-run;
+    /// the final quiescence scan is not counted).
+    pub idle_polls: u64,
+    rr_cursor: usize,
+}
+
+impl Scheduler {
+    pub fn new(policy: Policy) -> Scheduler {
+        Scheduler {
+            policy,
+            firings: 0,
+            idle_polls: 0,
+            rr_cursor: 0,
+        }
+    }
+
+    /// Run nodes to quiescence. `nodes` must be in topology order
+    /// (upstream first).
+    pub fn run(&mut self, nodes: &mut [Box<dyn NodeOps>]) -> Result<()> {
+        loop {
+            let fired = match self.policy {
+                Policy::GreedyOccupancy => self.fire_greedy(nodes)?,
+                Policy::DeepestFirst => self.fire_deepest(nodes)?,
+                Policy::RoundRobin => self.fire_round_robin(nodes)?,
+            };
+            if !fired {
+                // Quiescent or deadlocked?
+                if let Some(stuck) = nodes.iter().find(|n| n.has_pending()) {
+                    bail!(
+                        "scheduler deadlock: node '{}' has pending work but nothing is fireable \
+                         (queue capacities too small for declared output bounds?)",
+                        stuck.name()
+                    );
+                }
+                return Ok(());
+            }
+        }
+    }
+
+    fn fire_greedy(&mut self, nodes: &mut [Box<dyn NodeOps>]) -> Result<bool> {
+        // Three-rule occupancy heuristic:
+        //  1. if any node could fire a FULL ensemble, fire the deepest
+        //     such node (drain at maximum occupancy);
+        //  2. else, if any node is under input BACKPRESSURE (its queue is
+        //     too full for upstream to stage another full ensemble), fire
+        //     the largest-hint such node (ties: deepest): a sub-width
+        //     firing is necessary there, and draining it un-sticks the
+        //     pipeline — otherwise a full queue locks every stage into
+        //     fragmented sub-width firings forever;
+        //  3. else fire the shallowest fireable node, giving upstream
+        //     stages the chance to fill downstream queues before anyone
+        //     runs a premature partial ensemble.
+        // Partial ensembles still happen — at region boundaries (credit
+        // caps) and at end of stream — which is exactly the occupancy
+        // cost the paper measures.
+        let mut full: Option<usize> = None;
+        let mut pressured: Option<(usize, usize)> = None; // (hint, idx)
+        let mut shallowest: Option<usize> = None;
+        for i in 0..nodes.len() {
+            if nodes[i].fireable() {
+                if shallowest.is_none() {
+                    shallowest = Some(i);
+                }
+                let hint = nodes[i].ready_hint();
+                if hint >= nodes[i].metrics().width {
+                    full = Some(i); // keep scanning: deepest full wins
+                } else if nodes[i].input_pressure()
+                    && pressured.map(|(h, j)| (hint, i) >= (h, j)).unwrap_or(true)
+                {
+                    pressured = Some((hint, i));
+                }
+            }
+        }
+        match full.or(pressured.map(|(_, i)| i)).or(shallowest) {
+            Some(i) => {
+                let worked = nodes[i].fire()?;
+                self.firings += 1;
+                if worked {
+                    Ok(true)
+                } else {
+                    bail!(
+                        "node '{}' was fireable but made no progress",
+                        nodes[i].name()
+                    )
+                }
+            }
+            None => {
+                self.idle_polls += 1;
+                Ok(false)
+            }
+        }
+    }
+
+    fn fire_deepest(&mut self, nodes: &mut [Box<dyn NodeOps>]) -> Result<bool> {
+        for i in (0..nodes.len()).rev() {
+            if nodes[i].fireable() {
+                let worked = nodes[i].fire()?;
+                self.firings += 1;
+                if worked {
+                    return Ok(true);
+                }
+                // A fireable node that makes no progress would spin the
+                // scheduler forever; surface it loudly.
+                bail!(
+                    "node '{}' was fireable but made no progress",
+                    nodes[i].name()
+                );
+            }
+        }
+        self.idle_polls += 1;
+        Ok(false)
+    }
+
+    fn fire_round_robin(&mut self, nodes: &mut [Box<dyn NodeOps>]) -> Result<bool> {
+        let n = nodes.len();
+        for k in 0..n {
+            let i = (self.rr_cursor + k) % n;
+            if nodes[i].fireable() {
+                let worked = nodes[i].fire()?;
+                self.firings += 1;
+                self.rr_cursor = (i + 1) % n;
+                if worked {
+                    return Ok(true);
+                }
+                bail!(
+                    "node '{}' was fireable but made no progress",
+                    nodes[i].name()
+                );
+            }
+        }
+        self.idle_polls += 1;
+        Ok(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::aggregate::MapLogic;
+    use crate::coordinator::channel::Channel;
+    use crate::coordinator::node::{Node, Output};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    fn two_stage(policy: Policy) -> (Vec<Box<dyn NodeOps>>, Rc<RefCell<Vec<i64>>>) {
+        let ch0: Rc<Channel<i64>> = Channel::new(1024, 8);
+        for i in 0..100 {
+            ch0.push(i);
+        }
+        let ch1: Rc<Channel<i64>> = Channel::new(4, 8); // tight middle queue
+        let sink = Rc::new(RefCell::new(Vec::new()));
+        let n1 = Node::new(
+            "double",
+            4,
+            ch0,
+            Output::Chan(ch1.clone()),
+            MapLogic::new(|&v: &i64| v * 2),
+        );
+        let n2 = Node::new(
+            "inc",
+            4,
+            ch1,
+            Output::Sink(sink.clone()),
+            MapLogic::new(|&v: &i64| v + 1),
+        );
+        let nodes: Vec<Box<dyn NodeOps>> = vec![Box::new(n1), Box::new(n2)];
+        (nodes, sink)
+    }
+
+    #[test]
+    fn deepest_first_drains_pipeline() {
+        let (mut nodes, sink) = two_stage(Policy::DeepestFirst);
+        let mut s = Scheduler::new(Policy::DeepestFirst);
+        s.run(&mut nodes).unwrap();
+        let expect: Vec<i64> = (0..100).map(|v| v * 2 + 1).collect();
+        assert_eq!(*sink.borrow(), expect);
+        assert!(s.firings > 0);
+        assert_eq!(s.idle_polls, 1); // only the final quiescence scan
+    }
+
+    #[test]
+    fn round_robin_also_drains() {
+        let (mut nodes, sink) = two_stage(Policy::RoundRobin);
+        let mut s = Scheduler::new(Policy::RoundRobin);
+        s.run(&mut nodes).unwrap();
+        assert_eq!(sink.borrow().len(), 100);
+    }
+
+    #[test]
+    fn deadlock_is_reported_not_hung() {
+        // A node whose declared output bound exceeds the whole downstream
+        // queue capacity can never fire: the scheduler must say so.
+        struct Exploder;
+        impl crate::coordinator::node::NodeLogic for Exploder {
+            type In = i64;
+            type Out = i64;
+            fn run(
+                &mut self,
+                _items: &[i64],
+                _p: Option<&crate::coordinator::signal::ParentRef>,
+                _out: &mut crate::coordinator::node::Emitter<'_, i64>,
+            ) -> anyhow::Result<()> {
+                Ok(())
+            }
+            fn max_outputs_per_input(&self) -> usize {
+                100 // bigger than the downstream queue
+            }
+        }
+        let ch0: Rc<Channel<i64>> = Channel::new(8, 8);
+        ch0.push(1);
+        let ch1: Rc<Channel<i64>> = Channel::new(4, 8);
+        let n1 = Node::new("exploder", 4, ch0, Output::Chan(ch1.clone()), Exploder);
+        let sink = Rc::new(RefCell::new(Vec::new()));
+        let n2 = Node::new(
+            "sink",
+            4,
+            ch1,
+            Output::Sink(sink),
+            MapLogic::new(|&v: &i64| v),
+        );
+        let mut nodes: Vec<Box<dyn NodeOps>> = vec![Box::new(n1), Box::new(n2)];
+        let err = Scheduler::new(Policy::DeepestFirst)
+            .run(&mut nodes)
+            .unwrap_err();
+        assert!(err.to_string().contains("deadlock"), "{err}");
+    }
+}

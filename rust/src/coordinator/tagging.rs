@@ -1,0 +1,97 @@
+//! In-band tagging: the *dense* representation of regional context
+//! (paper §5's comparison point, after CnC-CUDA's control collections).
+//!
+//! Instead of bracketing regions with signals, every item carries its
+//! region tag. Ensembles may then mix regions — full SIMD occupancy — at
+//! the cost of per-item tag storage and per-ensemble tag bookkeeping
+//! (densification + segmented reduction instead of a plain reduction).
+//!
+//! [`Tagged`] is the item wrapper; [`densify_tags`] remaps an ensemble's
+//! global region ids onto `[0, k)` lane-local segment ids for the
+//! `segmented_sum` kernel.
+
+/// A data item carrying its region tag in-band.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tagged<T> {
+    /// Global region identifier.
+    pub tag: u64,
+    pub item: T,
+}
+
+impl<T> Tagged<T> {
+    pub fn new(tag: u64, item: T) -> Tagged<T> {
+        Tagged { tag, item }
+    }
+}
+
+/// Remap the global tags of one ensemble onto dense local segment ids
+/// (first-occurrence order). Returns the distinct-tag count `k`; `local`
+/// receives one id in `[0, k)` per input and `uniq` the global tag for
+/// each local id.
+///
+/// Linear scan: ensembles are at most a few hundred lanes, and tags within
+/// an ensemble cluster into few runs, so this beats hashing on the hot
+/// path.
+pub fn densify_tags(tags: &[u64], local: &mut Vec<i32>, uniq: &mut Vec<u64>) -> usize {
+    local.clear();
+    uniq.clear();
+    for &t in tags {
+        let id = match uniq.iter().rposition(|&u| u == t) {
+            Some(i) => i,
+            None => {
+                uniq.push(t);
+                uniq.len() - 1
+            }
+        };
+        local.push(id as i32);
+    }
+    uniq.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn densify_basic() {
+        let mut local = Vec::new();
+        let mut uniq = Vec::new();
+        let k = densify_tags(&[7, 7, 9, 7, 12, 9], &mut local, &mut uniq);
+        assert_eq!(k, 3);
+        assert_eq!(local, vec![0, 0, 1, 0, 2, 1]);
+        assert_eq!(uniq, vec![7, 9, 12]);
+    }
+
+    #[test]
+    fn densify_empty() {
+        let mut local = Vec::new();
+        let mut uniq = Vec::new();
+        assert_eq!(densify_tags(&[], &mut local, &mut uniq), 0);
+        assert!(local.is_empty());
+    }
+
+    #[test]
+    fn densify_single_region() {
+        let mut local = Vec::new();
+        let mut uniq = Vec::new();
+        let k = densify_tags(&[5, 5, 5, 5], &mut local, &mut uniq);
+        assert_eq!(k, 1);
+        assert_eq!(local, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn densify_reuses_buffers() {
+        let mut local = vec![9; 100];
+        let mut uniq = vec![42; 100];
+        densify_tags(&[1, 2], &mut local, &mut uniq);
+        assert_eq!(local, vec![0, 1]);
+        assert_eq!(uniq, vec![1, 2]);
+    }
+
+    #[test]
+    fn tagged_constructor() {
+        let t = Tagged::new(3, 1.5f32);
+        assert_eq!(t.tag, 3);
+        assert_eq!(t.item, 1.5);
+    }
+}

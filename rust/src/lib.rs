@@ -1,0 +1,71 @@
+//! # REGATTA — region-based state for streaming computations on SIMD architectures
+//!
+//! A reproduction of *Timcheck & Buhler, "Streaming Computations with
+//! Region-Based State on SIMD Architectures" (PARMA-DITAM 2020)* as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the streaming *coordinator*: compute nodes
+//!   connected by bounded data queues and out-of-band signal queues, the
+//!   paper's **credit protocol** for precise signal delivery under irregular
+//!   dataflow (§3), the **enumeration / aggregation** abstraction for
+//!   region-based contextual state (§4), a non-preemptive scheduler, and a
+//!   SIMD machine model in which each node firing processes a fixed-width
+//!   *ensemble* of lanes.
+//! * **Layer 2 (python/compile/model.py)** — JAX ensemble functions, AOT
+//!   lowered to HLO text at build time (`make artifacts`).
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels called by L2.
+//!
+//! At runtime the coordinator executes ensembles by invoking the AOT
+//! artifacts through PJRT ([`runtime`]); Python is never on the data path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use std::rc::Rc;
+//! use regatta::prelude::*;
+//! use regatta::runtime::kernels::KernelSet;
+//! use regatta::apps::sum::SumConfig;
+//!
+//! // The paper's Fig. 3 pipeline: enumerate Blobs, filter+scale their
+//! // elements, and aggregate one sum per Blob.
+//! let blobs: Vec<Blob> = (0..4).map(|i| Blob::from_vec(i, vec![1.0; 100])).collect();
+//! let cfg = SumConfig { width: 128, ..Default::default() };
+//! let app = SumApp::new(cfg, Rc::new(KernelSet::native(128)));
+//! let report = app.run(&blobs).unwrap();
+//! println!("{} sums, occupancy {:.1}%", report.outputs.len(),
+//!          100.0 * report.metrics.occupancy());
+//! ```
+//!
+//! See `examples/` for runnable applications and `rust/benches/` for the
+//! harnesses that regenerate every figure of the paper's evaluation.
+
+pub mod apps;
+pub mod bench;
+pub mod coordinator;
+pub mod runtime;
+pub mod simd;
+pub mod util;
+pub mod workload;
+
+pub mod prelude {
+    //! One-stop imports for application authors.
+    pub use crate::apps::sum::{SumApp, SumConfig, SumMode, SumReport, SumShape};
+    pub use crate::apps::taxi::{TaxiApp, TaxiConfig, TaxiPair, TaxiReport, TaxiVariant};
+    pub use crate::coordinator::{
+        aggregate::{Aggregator, FilterMapLogic, MapLogic},
+        channel::Channel,
+        enumerate::{Blob, Composite, Enumerator},
+        metrics::{NodeMetrics, PipelineMetrics},
+        node::{Emitter, Node, NodeLogic, NodeOps},
+        queue::{DataQueue, SignalQueue},
+        scheduler::{Policy, Scheduler},
+        signal::{parent_as, Credit, ParentRef, Signal, SignalKind},
+        tagging::Tagged,
+        topology::{Pipeline, PipelineBuilder},
+    };
+    pub use crate::runtime::kernels::{Backend, KernelSet};
+    pub use crate::runtime::{ArtifactStore, Engine, KernelName};
+    pub use crate::simd::{ChunkSource, SimdConfig, SimdMachine};
+    pub use crate::workload::regions::RegionSpec;
+    pub use crate::workload::taxi::TaxiWorkload;
+}

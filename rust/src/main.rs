@@ -1,0 +1,301 @@
+//! `regatta` — launcher CLI for the REGATTA streaming framework.
+//!
+//! ```text
+//! regatta run sum   [--items N] [--region-size N | --region-max N]
+//!                   [--mode enum|tagged] [--shape fused|two-stage]
+//!                   [--width W] [--backend xla|native] [--threshold T]
+//!                   [--workers K] [--stats]
+//! regatta run taxi  [--lines N] [--replicate K] [--variant enum|hybrid|tagged]
+//!                   [--width W] [--backend xla|native] [--stats]
+//! regatta bench <fig6|fig7|fig8|penalty|width|lanectx> [--items N] [--width W]
+//! regatta info      # artifact manifest + platform
+//! regatta --config <file.toml>   # load a [run] config (see configs/)
+//! ```
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use regatta::apps::sum::{reference_sums, SumApp, SumConfig, SumMode, SumShape};
+use regatta::apps::taxi::{TaxiApp, TaxiConfig, TaxiVariant};
+use regatta::bench::figures::{self, BackendSel, SweepConfig};
+use regatta::runtime::{ArtifactStore, Engine};
+use regatta::simd::{ChunkSource, SimdConfig, SimdMachine};
+use regatta::util::cli::Args;
+use regatta::util::config::Config;
+use regatta::util::stats::{fmt_count, fmt_duration};
+use regatta::workload::regions::{chunk_blobs, gen_blobs, RegionSpec};
+use regatta::workload::taxi::{generate, replicate, TaxiGenConfig};
+
+const USAGE: &str = "\
+regatta — region-based state for streaming computations on SIMD architectures
+
+USAGE:
+  regatta run sum   [--items N] [--region-size N | --region-max N]
+                    [--mode enum|tagged] [--shape fused|two-stage]
+                    [--width W] [--backend xla|native] [--threshold T]
+                    [--workers K] [--stats] [--verify]
+  regatta run taxi  [--lines N] [--replicate K] [--variant enum|hybrid|tagged]
+                    [--width W] [--backend xla|native] [--stats]
+  regatta bench <fig6|fig7|fig8|penalty|width|lanectx> [--items N] [--width W]
+                    [--backend xla|native]
+  regatta info
+  regatta --config <file.toml>
+";
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        eprintln!("\n{USAGE}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let mut args = Args::from_env()?;
+    if let Some(path) = args.opt("config").map(str::to_string) {
+        args = config_to_args(&path)?;
+    }
+    match args.subcommand() {
+        Some("run") => match args.positional.get(1).map(String::as_str) {
+            Some("sum") => run_sum(&args),
+            Some("taxi") => run_taxi(&args),
+            other => bail!("unknown app {other:?} (use sum|taxi)"),
+        },
+        Some("bench") => run_bench(&args),
+        Some("info") => info(),
+        Some(other) => bail!("unknown subcommand {other:?}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+/// Convert a `[run]` config file into the equivalent CLI arguments.
+fn config_to_args(path: &str) -> Result<Args> {
+    let cfg = Config::load(path)?;
+    let mut argv: Vec<String> = Vec::new();
+    let cmd = cfg.str_or("run", "command", "")?;
+    if cmd.is_empty() {
+        bail!("config {path}: [run] command = \"sum run ...\" is required");
+    }
+    argv.extend(cmd.split_whitespace().map(str::to_string));
+    for key in [
+        "items", "region-size", "region-max", "mode", "shape", "width", "backend",
+        "threshold", "workers", "lines", "replicate", "variant",
+    ] {
+        if let Some(v) = cfg.get("run", &key.replace('-', "_")) {
+            let vs = match v {
+                regatta::util::config::Value::Str(s) => s.clone(),
+                regatta::util::config::Value::Int(i) => i.to_string(),
+                regatta::util::config::Value::Float(f) => f.to_string(),
+                regatta::util::config::Value::Bool(b) => b.to_string(),
+                other => bail!("config {path}: bad value {other:?} for {key}"),
+            };
+            argv.push(format!("--{key}"));
+            argv.push(vs);
+        }
+    }
+    if cfg.bool_or("run", "stats", false)? {
+        argv.push("--stats".into());
+    }
+    Args::parse(argv)
+}
+
+fn backend(args: &Args) -> Result<BackendSel> {
+    args.str_or("backend", "xla").parse()
+}
+
+fn run_sum(args: &Args) -> Result<()> {
+    let width: usize = args.get_or("width", 128)?;
+    let items: usize = args.get_or("items", 1 << 20)?;
+    let threshold: f32 = args.get_or("threshold", 0.0)?;
+    let workers: usize = args.get_or("workers", 1)?;
+    let mode = match args.str_or("mode", "enum").as_str() {
+        "enum" => SumMode::Enumerated,
+        "tagged" => SumMode::Tagged,
+        other => bail!("unknown mode {other:?}"),
+    };
+    let shape = match args.str_or("shape", "fused").as_str() {
+        "fused" => SumShape::Fused,
+        "two-stage" => SumShape::TwoStage,
+        other => bail!("unknown shape {other:?}"),
+    };
+    let spec = if let Some(max) = args.get::<usize>("region-max")? {
+        RegionSpec::Uniform { max }
+    } else {
+        RegionSpec::Fixed {
+            size: args.get_or("region-size", 128)?,
+        }
+    };
+    let sel = backend(args)?;
+    let blobs = gen_blobs(items, spec, args.get_or("seed", 0xF16u64)?);
+    let n_regions = blobs.len();
+    let cfg = SumConfig {
+        width,
+        threshold,
+        mode,
+        shape,
+        ..Default::default()
+    };
+
+    println!(
+        "sum app: {items} items, {n_regions} regions ({spec:?}), width {width}, \
+         {mode:?}/{shape:?}, backend {sel:?}, {workers} worker(s)"
+    );
+
+    let (outputs, metrics, elapsed) = if workers <= 1 {
+        let p = figures::provider(sel, width)?;
+        let app = SumApp::new(cfg, p.kernels);
+        let report = app.run(&blobs)?;
+        (report.outputs, report.metrics, report.elapsed)
+    } else {
+        // multi-processor machine: workers claim region chunks atomically
+        let chunk_items = (items / (workers * 4)).max(width);
+        let chunks = chunk_blobs(blobs.clone(), chunk_items);
+        let source = ChunkSource::new(chunks);
+        let machine = SimdMachine::new(SimdConfig { width, workers });
+        let collected: Mutex<Vec<(u64, f64)>> = Mutex::new(Vec::new());
+        let merged: Mutex<regatta::coordinator::metrics::PipelineMetrics> =
+            Mutex::new(Default::default());
+        let t0 = std::time::Instant::now();
+        machine.run(source, |_wid, src| {
+            let p = figures::provider(sel, width)?; // engine per worker thread
+            let app = SumApp::new(cfg, p.kernels);
+            while let Some(chunk) = src.claim() {
+                let report = app.run(chunk)?;
+                collected.lock().unwrap().extend(report.outputs);
+                merged.lock().unwrap().merge(&report.metrics);
+            }
+            Ok(())
+        })?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        let mut outputs = collected.into_inner().unwrap();
+        outputs.sort_by_key(|&(id, _)| id);
+        (outputs, merged.into_inner().unwrap(), elapsed)
+    };
+
+    println!(
+        "-> {} region sums in {} ({} items/s)",
+        outputs.len(),
+        fmt_duration(elapsed),
+        fmt_count(items as f64 / elapsed)
+    );
+    if args.flag("verify") {
+        let want = reference_sums(&blobs, threshold);
+        anyhow::ensure!(outputs.len() == want.len(), "sum count mismatch");
+        for ((gi, gv), (wi, wv)) in outputs.iter().zip(&want) {
+            anyhow::ensure!(gi == wi, "region order mismatch");
+            anyhow::ensure!(
+                (gv - wv).abs() <= 1e-3 * (1.0 + wv.abs()),
+                "region {gi}: {gv} vs reference {wv}"
+            );
+        }
+        println!("verify: OK (matches f64 reference)");
+    }
+    if args.flag("stats") {
+        print!("{}", metrics.table());
+        println!("mean occupancy: {:.1}%", 100.0 * metrics.occupancy());
+    }
+    Ok(())
+}
+
+fn run_taxi(args: &Args) -> Result<()> {
+    let width: usize = args.get_or("width", 128)?;
+    let lines: usize = args.get_or("lines", 64)?;
+    let reps: usize = args.get_or("replicate", 1)?;
+    let variant = match args.str_or("variant", "hybrid").as_str() {
+        "enum" => TaxiVariant::Enumerated,
+        "hybrid" => TaxiVariant::Hybrid,
+        "tagged" => TaxiVariant::Tagged,
+        other => bail!("unknown variant {other:?}"),
+    };
+    let sel = backend(args)?;
+    let base = generate(lines, TaxiGenConfig::default(), args.get_or("seed", 0xF16u64)?);
+    let w = if reps > 1 { replicate(&base, reps) } else { base };
+    let chars: usize = w.lines.iter().map(|l| l.len).sum();
+    println!(
+        "taxi app: {} lines ({} chars, {} pairs), width {width}, {} variant, backend {sel:?}",
+        w.lines.len(),
+        fmt_count(chars as f64),
+        w.total_pairs,
+        variant.label()
+    );
+    let p = figures::provider(sel, width)?;
+    let app = TaxiApp::new(
+        TaxiConfig {
+            width,
+            variant,
+            ..Default::default()
+        },
+        p.kernels,
+    );
+    let report = app.run(&w)?;
+    anyhow::ensure!(
+        report.pairs.len() == w.total_pairs,
+        "parsed {} of {} pairs",
+        report.pairs.len(),
+        w.total_pairs
+    );
+    println!(
+        "-> {} pairs parsed in {} ({} chars/s)",
+        report.pairs.len(),
+        fmt_duration(report.elapsed),
+        fmt_count(chars as f64 / report.elapsed)
+    );
+    if args.flag("stats") {
+        print!("{}", report.metrics.table());
+    }
+    Ok(())
+}
+
+fn run_bench(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .context("bench target required: fig6|fig7|fig8|penalty|width|lanectx")?;
+    let mut cfg = SweepConfig {
+        backend: backend(args)?,
+        ..Default::default()
+    };
+    cfg.width = args.get_or("width", cfg.width)?;
+    cfg.items = args.get_or("items", 1 << 18)?;
+    match which.as_str() {
+        "fig6" => {
+            figures::fig6(&cfg)?;
+        }
+        "fig7" => {
+            figures::fig7(&cfg)?;
+        }
+        "fig8" => {
+            figures::fig8(&cfg, args.get_or("lines", 32)?, &[1, 2, 4])?;
+        }
+        "penalty" => {
+            figures::abstraction_penalty(&cfg)?;
+        }
+        "width" => {
+            figures::ablation_width(&cfg, &[32, 64, 128, 256])?;
+        }
+        "lanectx" => {
+            figures::ablation_lanectx(&cfg)?;
+            figures::ablation_policy(&cfg, args.get_or("lines", 32)?)?;
+        }
+        other => bail!("unknown bench {other:?}"),
+    }
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    let store = ArtifactStore::discover()?;
+    let m = store.manifest();
+    println!("artifact dir : {}", store.dir().display());
+    println!("widths       : {:?}", m.widths);
+    println!("kernels      : {}", m.entries.join(", "));
+    println!("window_len   : {}", m.window_len);
+    let engine = Engine::new(store.clone())?;
+    println!("PJRT platform: {}", engine.platform_name());
+    engine.preload(128)?;
+    println!("preload      : all kernels compiled at w=128 OK");
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! Artifact store: the AOT output directory plus its manifest.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::KernelName;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Ensemble widths that were compiled.
+    pub widths: Vec<usize>,
+    /// `coord_parse` window length (chars per candidate window).
+    pub window_len: usize,
+    /// The paper's Fig. 5 scale constant baked into filter kernels.
+    pub scale: f64,
+    /// Entry names present in the artifact set.
+    pub entries: Vec<String>,
+}
+
+impl Manifest {
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let widths = j
+            .get("widths")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing widths"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("manifest: bad width")))
+            .collect::<Result<Vec<_>>>()?;
+        let window_len = j
+            .get("window_len")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest: missing window_len"))?;
+        let scale = j
+            .get("scale")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("manifest: missing scale"))?;
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest: missing entries"))?
+            .keys()
+            .cloned()
+            .collect();
+        Ok(Manifest {
+            widths,
+            window_len,
+            scale,
+            entries,
+        })
+    }
+}
+
+/// The artifact directory (`artifacts/` by default).
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl ArtifactStore {
+    /// Open a store, reading and validating its manifest.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<ArtifactStore> {
+        let dir = dir.into();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                mpath.display()
+            )
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        Ok(ArtifactStore { dir, manifest })
+    }
+
+    /// Locate the artifact directory relative to the repo root, walking up
+    /// from the current directory (tests and benches run from subdirs).
+    pub fn discover() -> Result<ArtifactStore> {
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join("manifest.json").is_file() {
+                return ArtifactStore::open(cand);
+            }
+            if !dir.pop() {
+                bail!("no artifacts/manifest.json found — run `make artifacts`");
+            }
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path of the HLO text for (kernel, width), validated against the
+    /// manifest.
+    pub fn path_for(&self, name: KernelName, width: usize) -> Result<PathBuf> {
+        if !self.manifest.widths.contains(&width) {
+            bail!(
+                "width {width} not in artifact set {:?} — re-run `make artifacts` with --widths",
+                self.manifest.widths
+            );
+        }
+        if !self.manifest.entries.iter().any(|e| e == name.stem()) {
+            bail!("kernel {} not in manifest", name.stem());
+        }
+        let p = self.dir.join(format!("w{width}/{}.hlo.txt", name.stem()));
+        if !p.is_file() {
+            bail!("artifact missing: {}", p.display());
+        }
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text", "widths": [32, 128], "window_len": 32,
+      "scale": 3.14, "path_format": "w{width}/{entry}.hlo.txt",
+      "entries": {"sum_region": {"inputs": []}, "coord_parse": {"inputs": []}}
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.widths, vec![32, 128]);
+        assert_eq!(m.window_len, 32);
+        assert!((m.scale - 3.14).abs() < 1e-12);
+        assert_eq!(m.entries.len(), 2);
+    }
+
+    #[test]
+    fn rejects_incomplete_manifest() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"widths": [1]}"#).is_err());
+    }
+}

@@ -1,0 +1,354 @@
+//! Typed ensemble-kernel wrappers over the AOT artifacts.
+//!
+//! [`KernelSet`] bundles every L1 kernel at one ensemble width behind a
+//! typed API, with two interchangeable backends:
+//!
+//! * **Xla** — the measured configuration: each call is one PJRT
+//!   invocation of the AOT-compiled fixed-width module (the "SIMD
+//!   processor executes one ensemble" cost unit of the paper's model).
+//! * **Native** — the pure-Rust mirror from [`super::native`], used by
+//!   coordinator unit tests and as an oracle for the XLA backend.
+//!
+//! All slices must be exactly `width` lanes; the coordinator owns padding
+//! and masking (occupancy is its concern, not the kernels').
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::{lit_f32, lit_i32, lit_i32_2d, native, Engine, KernelName, LoadedKernel};
+
+/// Which backend a [`KernelSet`] runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust mirror of the kernels (tests / no-artifacts fallback).
+    Native,
+    /// AOT artifacts through PJRT (the measured hot path).
+    Xla,
+}
+
+enum SetImpl {
+    Native,
+    Xla {
+        filter_scale: Rc<LoadedKernel>,
+        masked_sum: Rc<LoadedKernel>,
+        sum_region: Rc<LoadedKernel>,
+        segmented_sum: Rc<LoadedKernel>,
+        tagged_sum_region: Rc<LoadedKernel>,
+        char_classify: Rc<LoadedKernel>,
+        coord_parse: Rc<LoadedKernel>,
+        tagged_char_stage: Rc<LoadedKernel>,
+    },
+}
+
+/// All ensemble kernels at one width.
+pub struct KernelSet {
+    width: usize,
+    window_len: usize,
+    imp: SetImpl,
+    native_invocations: Cell<u64>,
+}
+
+impl KernelSet {
+    /// Pure-Rust backend.
+    pub fn native(width: usize) -> KernelSet {
+        KernelSet {
+            width,
+            window_len: native::WINDOW_LEN,
+            imp: SetImpl::Native,
+            native_invocations: Cell::new(0),
+        }
+    }
+
+    /// XLA backend: compiles (memoized in `engine`) every kernel at `width`.
+    pub fn xla(engine: &Engine, width: usize) -> Result<KernelSet> {
+        Ok(KernelSet {
+            width,
+            window_len: engine.store().manifest().window_len,
+            imp: SetImpl::Xla {
+                filter_scale: engine.kernel(KernelName::FilterScale, width)?,
+                masked_sum: engine.kernel(KernelName::MaskedSum, width)?,
+                sum_region: engine.kernel(KernelName::SumRegion, width)?,
+                segmented_sum: engine.kernel(KernelName::SegmentedSum, width)?,
+                tagged_sum_region: engine.kernel(KernelName::TaggedSumRegion, width)?,
+                char_classify: engine.kernel(KernelName::CharClassify, width)?,
+                coord_parse: engine.kernel(KernelName::CoordParse, width)?,
+                tagged_char_stage: engine.kernel(KernelName::TaggedCharStage, width)?,
+            },
+            native_invocations: Cell::new(0),
+        })
+    }
+
+    pub fn backend(&self) -> Backend {
+        match self.imp {
+            SetImpl::Native => Backend::Native,
+            SetImpl::Xla { .. } => Backend::Xla,
+        }
+    }
+
+    /// Ensemble width `w` (SIMD lanes per firing).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// `coord_parse` window length.
+    pub fn window_len(&self) -> usize {
+        self.window_len
+    }
+
+    /// Number of kernel invocations so far (both backends).
+    pub fn invocations(&self) -> u64 {
+        match &self.imp {
+            SetImpl::Native => self.native_invocations.get(),
+            SetImpl::Xla {
+                filter_scale,
+                masked_sum,
+                sum_region,
+                segmented_sum,
+                tagged_sum_region,
+                char_classify,
+                coord_parse,
+                tagged_char_stage,
+            } => [
+                filter_scale,
+                masked_sum,
+                sum_region,
+                segmented_sum,
+                tagged_sum_region,
+                char_classify,
+                coord_parse,
+                tagged_char_stage,
+            ]
+            .iter()
+            .map(|k| k.invocations.get())
+            .sum(),
+        }
+    }
+
+    fn tick(&self) {
+        self.native_invocations
+            .set(self.native_invocations.get() + 1);
+    }
+
+    fn check_w(&self, n: usize) {
+        debug_assert_eq!(n, self.width, "ensemble buffer must be exactly width");
+    }
+
+    /// Masked filter + scale (paper Fig. 5 node `f`).
+    pub fn filter_scale(
+        &self,
+        vals: &[f32],
+        mask: &[i32],
+        threshold: f32,
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        self.check_w(vals.len());
+        match &self.imp {
+            SetImpl::Native => {
+                self.tick();
+                Ok(native::filter_scale(vals, mask, threshold))
+            }
+            SetImpl::Xla { filter_scale, .. } => {
+                let out = filter_scale.call(&[lit_f32(vals), lit_i32(mask), lit_f32(&[threshold])])?;
+                Ok((out[0].to_vec::<f32>()?, out[1].to_vec::<i32>()?))
+            }
+        }
+    }
+
+    /// Sum + count of active lanes (aggregation accumulate).
+    pub fn masked_sum(&self, vals: &[f32], mask: &[i32]) -> Result<(f32, i32)> {
+        self.check_w(vals.len());
+        match &self.imp {
+            SetImpl::Native => {
+                self.tick();
+                Ok(native::masked_sum(vals, mask))
+            }
+            SetImpl::Xla { masked_sum, .. } => {
+                let out = masked_sum.call(&[lit_f32(vals), lit_i32(mask)])?;
+                Ok((
+                    out[0].to_vec::<f32>()?[0],
+                    out[1].to_vec::<i32>()?[0],
+                ))
+            }
+        }
+    }
+
+    /// Fused filter+scale+partial-sum (sum-app hot path).
+    pub fn sum_region(&self, vals: &[f32], mask: &[i32], threshold: f32) -> Result<(f32, i32)> {
+        self.check_w(vals.len());
+        match &self.imp {
+            SetImpl::Native => {
+                self.tick();
+                Ok(native::sum_region(vals, mask, threshold))
+            }
+            SetImpl::Xla { sum_region, .. } => {
+                let out = sum_region.call(&[lit_f32(vals), lit_i32(mask), lit_f32(&[threshold])])?;
+                Ok((
+                    out[0].to_vec::<f32>()?[0],
+                    out[1].to_vec::<i32>()?[0],
+                ))
+            }
+        }
+    }
+
+    /// Per-segment sums within an ensemble (tagging baseline).
+    pub fn segmented_sum(
+        &self,
+        vals: &[f32],
+        seg: &[i32],
+        mask: &[i32],
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        self.check_w(vals.len());
+        match &self.imp {
+            SetImpl::Native => {
+                self.tick();
+                Ok(native::segmented_sum(vals, seg, mask))
+            }
+            SetImpl::Xla { segmented_sum, .. } => {
+                let out = segmented_sum.call(&[lit_f32(vals), lit_i32(seg), lit_i32(mask)])?;
+                Ok((out[0].to_vec::<f32>()?, out[1].to_vec::<i32>()?))
+            }
+        }
+    }
+
+    /// Fused filter+scale+per-segment-sum (perf-pass kernel: one
+    /// invocation per tagged ensemble instead of filter_scale +
+    /// segmented_sum — see EXPERIMENTS.md §Perf).
+    pub fn tagged_sum_region(
+        &self,
+        vals: &[f32],
+        seg: &[i32],
+        mask: &[i32],
+        threshold: f32,
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        self.check_w(vals.len());
+        match &self.imp {
+            SetImpl::Native => {
+                self.tick();
+                Ok(native::tagged_sum_region(vals, seg, mask, threshold))
+            }
+            SetImpl::Xla {
+                tagged_sum_region, ..
+            } => {
+                let out = tagged_sum_region.call(&[
+                    lit_f32(vals),
+                    lit_i32(seg),
+                    lit_i32(mask),
+                    lit_f32(&[threshold]),
+                ])?;
+                Ok((out[0].to_vec::<f32>()?, out[1].to_vec::<i32>()?))
+            }
+        }
+    }
+
+    /// Candidate detection over a char ensemble (taxi stage 1).
+    pub fn char_classify(&self, chars: &[i32], mask: &[i32]) -> Result<(Vec<i32>, Vec<i32>)> {
+        self.check_w(chars.len());
+        match &self.imp {
+            SetImpl::Native => {
+                self.tick();
+                Ok(native::char_classify(chars, mask))
+            }
+            SetImpl::Xla { char_classify, .. } => {
+                let out = char_classify.call(&[lit_i32(chars), lit_i32(mask)])?;
+                Ok((out[0].to_vec::<i32>()?, out[1].to_vec::<i32>()?))
+            }
+        }
+    }
+
+    /// Verify + parse candidate windows (taxi stage 2). `windows` is
+    /// row-major `[width, window_len]`.
+    pub fn coord_parse(
+        &self,
+        windows: &[i32],
+        mask: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<i32>)> {
+        self.check_w(mask.len());
+        debug_assert_eq!(windows.len(), self.width * self.window_len);
+        match &self.imp {
+            SetImpl::Native => {
+                self.tick();
+                Ok(native::coord_parse(windows, self.window_len, mask))
+            }
+            SetImpl::Xla { coord_parse, .. } => {
+                let out = coord_parse.call(&[
+                    lit_i32_2d(windows, self.width, self.window_len)?,
+                    lit_i32(mask),
+                ])?;
+                Ok((
+                    out[0].to_vec::<f32>()?,
+                    out[1].to_vec::<f32>()?,
+                    out[2].to_vec::<i32>()?,
+                ))
+            }
+        }
+    }
+
+    /// Fused classify + per-tag candidate counts (pure-tagging taxi).
+    pub fn tagged_char_stage(
+        &self,
+        chars: &[i32],
+        tags: &[i32],
+        mask: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>, Vec<i32>)> {
+        self.check_w(chars.len());
+        match &self.imp {
+            SetImpl::Native => {
+                self.tick();
+                let (flags, bits) = native::char_classify(chars, mask);
+                let fvals: Vec<f32> = flags.iter().map(|&f| f as f32).collect();
+                let (sums, _) = native::segmented_sum(&fvals, tags, mask);
+                let counts: Vec<i32> = sums.iter().map(|&s| s as i32).collect();
+                Ok((flags, bits, counts))
+            }
+            SetImpl::Xla {
+                tagged_char_stage, ..
+            } => {
+                let out =
+                    tagged_char_stage.call(&[lit_i32(chars), lit_i32(tags), lit_i32(mask)])?;
+                Ok((
+                    out[0].to_vec::<i32>()?,
+                    out[1].to_vec::<i32>()?,
+                    out[2].to_vec::<i32>()?,
+                ))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_set_matches_native_module() {
+        let ks = KernelSet::native(8);
+        assert_eq!(ks.backend(), Backend::Native);
+        let vals = [1.0, -2.0, 3.0, 4.0, -5.0, 6.0, 7.0, 8.0];
+        let mask = [1, 1, 1, 1, 1, 1, 0, 0];
+        let (s, k) = ks.sum_region(&vals, &mask, 0.0).unwrap();
+        let (es, ek) = native::sum_region(&vals, &mask, 0.0);
+        assert_eq!((s, k), (es, ek));
+        assert_eq!(ks.invocations(), 1);
+    }
+
+    #[test]
+    fn native_tagged_stage_counts_braces() {
+        let ks = KernelSet::native(4);
+        let chars: Vec<i32> = "{x{y".bytes().map(|b| b as i32).collect();
+        let tags = [0, 0, 1, 1];
+        let mask = [1, 1, 1, 1];
+        let (flags, _, counts) = ks.tagged_char_stage(&chars, &tags, &mask).unwrap();
+        assert_eq!(flags, vec![1, 0, 1, 0]);
+        assert_eq!(counts[0], 1);
+        assert_eq!(counts[1], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "ensemble buffer")]
+    #[cfg(debug_assertions)]
+    fn wrong_width_panics_in_debug() {
+        let ks = KernelSet::native(8);
+        let _ = ks.masked_sum(&[1.0; 4], &[1; 4]);
+    }
+}

@@ -1,0 +1,212 @@
+//! PJRT runtime: load AOT artifacts and execute them from the hot path.
+//!
+//! The coordinator never touches Python. `make artifacts` lowers every L2
+//! entry point to HLO **text** under `artifacts/w<width>/<name>.hlo.txt`
+//! (text, not serialized proto — xla_extension 0.5.1 rejects jax ≥ 0.5's
+//! 64-bit instruction ids; the text parser reassigns them). This module:
+//!
+//! * [`ArtifactStore`] — reads `manifest.json`, resolves artifact paths.
+//! * [`Engine`] — a PJRT CPU client plus a compiled-executable cache, keyed
+//!   by (kernel, width). `Engine` is deliberately `!Send`: PJRT client
+//!   handles are thread-confined, so each worker thread of the SIMD
+//!   machine owns its own `Engine` (mirroring one CUDA context per SM in
+//!   the paper's mapping — see `simd/`).
+//! * [`kernels`] — typed wrappers, one per L1 kernel, each with a pure-Rust
+//!   *native* backend (bit-compatible oracle, used by unit tests and as a
+//!   no-artifacts fallback) and the *XLA* backend used for measurements.
+
+pub mod artifacts;
+pub mod kernels;
+pub mod native;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+pub use artifacts::{ArtifactStore, Manifest};
+
+/// Names of the AOT-compiled L2 entry points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelName {
+    FilterScale,
+    MaskedSum,
+    SumRegion,
+    SegmentedSum,
+    TaggedSumRegion,
+    CharClassify,
+    CoordParse,
+    TaggedCharStage,
+}
+
+impl KernelName {
+    /// Artifact file stem (matches `python/compile/model.py::ENTRIES`).
+    pub fn stem(self) -> &'static str {
+        match self {
+            KernelName::FilterScale => "filter_scale",
+            KernelName::MaskedSum => "masked_sum",
+            KernelName::SumRegion => "sum_region",
+            KernelName::SegmentedSum => "segmented_sum",
+            KernelName::TaggedSumRegion => "tagged_sum_region",
+            KernelName::CharClassify => "char_classify",
+            KernelName::CoordParse => "coord_parse",
+            KernelName::TaggedCharStage => "tagged_char_stage",
+        }
+    }
+
+    /// All kernel names (for preloading / smoke tests).
+    pub fn all() -> [KernelName; 8] {
+        [
+            KernelName::FilterScale,
+            KernelName::MaskedSum,
+            KernelName::SumRegion,
+            KernelName::SegmentedSum,
+            KernelName::TaggedSumRegion,
+            KernelName::CharClassify,
+            KernelName::CoordParse,
+            KernelName::TaggedCharStage,
+        ]
+    }
+}
+
+/// A compiled executable for one (kernel, width).
+pub struct LoadedKernel {
+    pub name: KernelName,
+    pub width: usize,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative number of invocations (the SIMD cost unit).
+    pub invocations: std::cell::Cell<u64>,
+}
+
+impl LoadedKernel {
+    /// Raw executable handle (perf probes / advanced callers).
+    pub fn exe_ref(&self) -> &xla::PjRtLoadedExecutable {
+        &self.exe
+    }
+
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn call(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.invocations.set(self.invocations.get() + 1);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}@w{}", self.name.stem(), self.width))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // L2 entries are lowered with return_tuple=True.
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// PJRT CPU client + executable cache. One per worker thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+    store: ArtifactStore,
+    cache: RefCell<HashMap<(KernelName, usize), Rc<LoadedKernel>>>,
+}
+
+impl Engine {
+    /// Create an engine over an artifact store.
+    pub fn new(store: ArtifactStore) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            store,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Convenience: engine over the default `artifacts/` directory.
+    pub fn from_dir(dir: impl Into<std::path::PathBuf>) -> Result<Engine> {
+        Engine::new(ArtifactStore::open(dir)?)
+    }
+
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile) a kernel at a width, memoized.
+    pub fn kernel(&self, name: KernelName, width: usize) -> Result<Rc<LoadedKernel>> {
+        if let Some(k) = self.cache.borrow().get(&(name, width)) {
+            return Ok(k.clone());
+        }
+        let path = self.store.path_for(name, width)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}@w{width}", name.stem()))?;
+        let k = Rc::new(LoadedKernel {
+            name,
+            width,
+            exe,
+            invocations: std::cell::Cell::new(0),
+        });
+        self.cache.borrow_mut().insert((name, width), k.clone());
+        Ok(k)
+    }
+
+    /// Preload every kernel at a width (so benches don't measure compiles).
+    pub fn preload(&self, width: usize) -> Result<()> {
+        for name in KernelName::all() {
+            self.kernel(name, width)?;
+        }
+        Ok(())
+    }
+
+    /// Total executable invocations across all cached kernels.
+    pub fn total_invocations(&self) -> u64 {
+        self.cache
+            .borrow()
+            .values()
+            .map(|k| k.invocations.get())
+            .sum()
+    }
+}
+
+/// Build an `f32[n]` literal from a slice.
+pub fn lit_f32(xs: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+/// Build an `i32[n]` literal from a slice.
+pub fn lit_i32(xs: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+/// Build an `i32[rows, cols]` literal from a flattened row-major slice.
+pub fn lit_i32_2d(xs: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(xs.len(), rows * cols);
+    Ok(xla::Literal::vec1(xs).reshape(&[rows as i64, cols as i64])?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_names_roundtrip_stems() {
+        for name in KernelName::all() {
+            assert!(!name.stem().is_empty());
+        }
+        assert_eq!(KernelName::SumRegion.stem(), "sum_region");
+    }
+
+    #[test]
+    fn literal_builders() {
+        let l = lit_f32(&[1.0, 2.0, 3.0]);
+        assert_eq!(l.element_count(), 3);
+        let l2 = lit_i32_2d(&[1, 2, 3, 4, 5, 6], 2, 3).unwrap();
+        assert_eq!(l2.element_count(), 6);
+    }
+}

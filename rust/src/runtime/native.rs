@@ -1,0 +1,312 @@
+//! Pure-Rust implementations of every L1 kernel.
+//!
+//! These mirror `python/compile/kernels/ref.py` operation-for-operation in
+//! f32, so they serve as (a) an in-process oracle for the XLA backend in
+//! integration tests and (b) a no-artifacts backend for fast unit tests of
+//! the coordinator. They are NOT the measured hot path — benches run the
+//! XLA backend.
+
+/// The paper's Fig. 5 scale constant (must match `kernels/filter_scale.py`).
+pub const SCALE: f32 = 3.14;
+
+/// Window length for `coord_parse` (must match `kernels/coord_parse.py`).
+pub const WINDOW_LEN: usize = 32;
+
+/// ASCII of the taxi candidate marker.
+pub const OPEN_BRACE: i32 = 0x7B;
+
+/// `filter_scale`: masked filter (`v > threshold`) + scale.
+pub fn filter_scale(vals: &[f32], mask: &[i32], threshold: f32) -> (Vec<f32>, Vec<i32>) {
+    let mut ov = vec![0.0f32; vals.len()];
+    let mut om = vec![0i32; vals.len()];
+    for i in 0..vals.len() {
+        if mask[i] != 0 && vals[i] > threshold {
+            ov[i] = SCALE * vals[i];
+            om[i] = 1;
+        }
+    }
+    (ov, om)
+}
+
+/// `masked_sum`: sum + count of active lanes.
+pub fn masked_sum(vals: &[f32], mask: &[i32]) -> (f32, i32) {
+    let mut s = 0.0f32;
+    let mut c = 0i32;
+    for i in 0..vals.len() {
+        if mask[i] != 0 {
+            s += vals[i];
+            c += 1;
+        }
+    }
+    (s, c)
+}
+
+/// `sum_region`: fused filter+scale+sum.
+pub fn sum_region(vals: &[f32], mask: &[i32], threshold: f32) -> (f32, i32) {
+    let mut s = 0.0f32;
+    let mut k = 0i32;
+    for i in 0..vals.len() {
+        if mask[i] != 0 && vals[i] > threshold {
+            s += SCALE * vals[i];
+            k += 1;
+        }
+    }
+    (s, k)
+}
+
+/// `segmented_sum`: per-segment sums/counts (segment ids in `[0, w)`).
+pub fn segmented_sum(vals: &[f32], seg: &[i32], mask: &[i32]) -> (Vec<f32>, Vec<i32>) {
+    let w = vals.len();
+    let mut sums = vec![0.0f32; w];
+    let mut counts = vec![0i32; w];
+    for i in 0..w {
+        if mask[i] != 0 {
+            let s = seg[i] as usize;
+            sums[s] += vals[i];
+            counts[s] += 1;
+        }
+    }
+    (sums, counts)
+}
+
+/// `tagged_sum_region`: fused filter+scale+segmented-sum (perf-pass
+/// kernel; one invocation per tagged ensemble instead of two).
+pub fn tagged_sum_region(
+    vals: &[f32],
+    seg: &[i32],
+    mask: &[i32],
+    threshold: f32,
+) -> (Vec<f32>, Vec<i32>) {
+    let w = vals.len();
+    let mut sums = vec![0.0f32; w];
+    let mut counts = vec![0i32; w];
+    for i in 0..w {
+        if mask[i] != 0 && vals[i] > threshold {
+            let s = seg[i] as usize;
+            sums[s] += SCALE * vals[i];
+            counts[s] += 1;
+        }
+    }
+    (sums, counts)
+}
+
+/// `char_classify`: candidate flag + class bitmap.
+pub fn char_classify(chars: &[i32], mask: &[i32]) -> (Vec<i32>, Vec<i32>) {
+    let w = chars.len();
+    let mut flags = vec![0i32; w];
+    let mut bits = vec![0i32; w];
+    for i in 0..w {
+        if mask[i] == 0 {
+            continue;
+        }
+        let c = chars[i];
+        if c == OPEN_BRACE {
+            flags[i] = 1;
+        }
+        let mut k = 0;
+        if (0x30..=0x39).contains(&c) {
+            k += 1;
+        }
+        if c == 0x2E {
+            k += 2;
+        }
+        if c == 0x2C {
+            k += 4;
+        }
+        if c == 0x2D {
+            k += 8;
+        }
+        if c == 0x7D {
+            k += 16;
+        }
+        bits[i] = k;
+    }
+    (flags, bits)
+}
+
+/// Parse one `{a,b}` window. Returns `(a, b, ok)`; arithmetic is f32
+/// step-by-step to match the kernel's accumulation exactly.
+pub fn parse_window(window: &[i32]) -> (f32, f32, bool) {
+    if window.is_empty() || window[0] != OPEN_BRACE {
+        return (0.0, 0.0, false);
+    }
+    let mut field = 0;
+    let (mut acc_i, mut acc_f, mut fdiv, mut sign) = (0.0f32, 0.0f32, 1.0f32, 1.0f32);
+    let (mut seen_dot, mut seen_digit) = (false, false);
+    let mut a = 0.0f32;
+    for &c in &window[1..] {
+        match c {
+            0x30..=0x39 => {
+                let d = (c - 0x30) as f32;
+                if seen_dot {
+                    acc_f = acc_f * 10.0 + d;
+                    fdiv *= 10.0;
+                } else {
+                    acc_i = acc_i * 10.0 + d;
+                }
+                seen_digit = true;
+            }
+            0x2E => {
+                // '.'
+                if seen_dot || !seen_digit {
+                    return (0.0, 0.0, false);
+                }
+                seen_dot = true;
+            }
+            0x2D => {
+                // '-'
+                if seen_digit || seen_dot || sign < 0.0 {
+                    return (0.0, 0.0, false);
+                }
+                sign = -1.0;
+            }
+            0x2C => {
+                // ','
+                if field != 0 || !seen_digit {
+                    return (0.0, 0.0, false);
+                }
+                a = sign * (acc_i + acc_f / fdiv);
+                field = 1;
+                acc_i = 0.0;
+                acc_f = 0.0;
+                fdiv = 1.0;
+                sign = 1.0;
+                seen_dot = false;
+                seen_digit = false;
+            }
+            0x7D => {
+                // '}'
+                if field != 1 || !seen_digit {
+                    return (0.0, 0.0, false);
+                }
+                let b = sign * (acc_i + acc_f / fdiv);
+                return (a, b, true);
+            }
+            _ => return (0.0, 0.0, false),
+        }
+    }
+    (0.0, 0.0, false) // ran out of window without '}'
+}
+
+/// `coord_parse`: per-lane window parse with swapped output
+/// (`x` = second field, `y` = first field).
+pub fn coord_parse(
+    windows: &[i32],
+    window_len: usize,
+    mask: &[i32],
+) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+    let w = mask.len();
+    debug_assert_eq!(windows.len(), w * window_len);
+    let mut x = vec![0.0f32; w];
+    let mut y = vec![0.0f32; w];
+    let mut ok = vec![0i32; w];
+    for i in 0..w {
+        if mask[i] == 0 {
+            continue;
+        }
+        let (a, b, good) = parse_window(&windows[i * window_len..(i + 1) * window_len]);
+        if good {
+            x[i] = b;
+            y[i] = a;
+            ok[i] = 1;
+        }
+    }
+    (x, y, ok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn win(s: &str) -> Vec<i32> {
+        let mut v = vec![0i32; WINDOW_LEN];
+        for (i, b) in s.bytes().take(WINDOW_LEN).enumerate() {
+            v[i] = b as i32;
+        }
+        v
+    }
+
+    #[test]
+    fn filter_scale_basics() {
+        let (ov, om) = filter_scale(&[1.0, -1.0, 2.0], &[1, 1, 0], 0.0);
+        assert_eq!(om, vec![1, 0, 0]);
+        assert!((ov[0] - SCALE).abs() < 1e-6);
+        assert_eq!(ov[1], 0.0);
+    }
+
+    #[test]
+    fn masked_and_region_sums() {
+        let vals = [1.0, 2.0, 3.0, 4.0];
+        let mask = [1, 0, 1, 1];
+        assert_eq!(masked_sum(&vals, &mask), (8.0, 3));
+        let (s, k) = sum_region(&vals, &mask, 2.5);
+        assert_eq!(k, 2);
+        assert!((s - SCALE * 7.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn segmented_sum_routes_by_tag() {
+        let (s, c) = segmented_sum(&[1.0, 2.0, 3.0, 4.0], &[0, 1, 0, 1], &[1, 1, 1, 0]);
+        assert_eq!(s[0], 4.0);
+        assert_eq!(s[1], 2.0);
+        assert_eq!(c[0], 2);
+        assert_eq!(c[1], 1);
+    }
+
+    #[test]
+    fn tagged_sum_region_fuses_filter_and_segments() {
+        let (s, c) = tagged_sum_region(
+            &[1.0, -2.0, 3.0, 4.0],
+            &[0, 0, 1, 1],
+            &[1, 1, 1, 0],
+            0.0,
+        );
+        assert!((s[0] - SCALE).abs() < 1e-6); // -2.0 filtered out
+        assert!((s[1] - SCALE * 3.0).abs() < 1e-5); // 4.0 masked off
+        assert_eq!(c, vec![1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn classify_finds_braces() {
+        let chars: Vec<i32> = "a{1,}".bytes().map(|b| b as i32).collect();
+        let (f, bits) = char_classify(&chars, &[1; 5]);
+        assert_eq!(f, vec![0, 1, 0, 0, 0]);
+        assert_eq!(bits, vec![0, 0, 1, 4, 16]);
+    }
+
+    #[test]
+    fn parse_accepts_valid() {
+        let (a, b, ok) = parse_window(&win("{12.5,-3.25}"));
+        assert!(ok);
+        assert_eq!(a, 12.5);
+        assert_eq!(b, -3.25);
+    }
+
+    #[test]
+    fn parse_rejects_invalid() {
+        for bad in [
+            "{bad}", "{1.2,}", "{1,2", "{--1,2}", "{1.2.3,4}", "{.5,1}", "{1,2,3}", "x1,2}",
+            "{-,1}", "{,1}", "{}",
+        ] {
+            assert!(!parse_window(&win(bad)).2, "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn coord_parse_swaps() {
+        let mut ws = win("{11.5,-42.25}");
+        ws.extend(win("{1,2}"));
+        let (x, y, ok) = coord_parse(&ws, WINDOW_LEN, &[1, 1]);
+        assert_eq!(ok, vec![1, 1]);
+        assert_eq!(x[0], -42.25);
+        assert_eq!(y[0], 11.5);
+        assert_eq!((x[1], y[1]), (2.0, 1.0));
+    }
+
+    #[test]
+    fn coord_parse_respects_mask() {
+        let ws = [win("{1,2}"), win("{3,4}")].concat();
+        let (_, _, ok) = coord_parse(&ws, WINDOW_LEN, &[0, 1]);
+        assert_eq!(ok, vec![0, 1]);
+    }
+}

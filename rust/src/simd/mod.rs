@@ -1,0 +1,177 @@
+//! The SIMD machine model: fixed-width processors competing for a shared
+//! input stream (paper §2.2).
+//!
+//! The paper instantiates the pipeline once per GPU processor (SM) and
+//! lets the instances compete to consume a common input stream with atomic
+//! claims. We reproduce that mapping: each *worker thread* owns a full
+//! pipeline instance (plus its own PJRT engine — client handles are
+//! thread-confined) and claims input chunks from a shared, lock-free
+//! cursor until the stream is exhausted.
+//!
+//! The SIMD width `w` is the ensemble size of every node firing; one
+//! fixed-shape XLA invocation per ensemble is the machine's cost unit, so
+//! occupancy loss (partial ensembles forced by region boundaries) shows up
+//! directly as wall-clock time.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+/// Machine shape.
+#[derive(Debug, Clone, Copy)]
+pub struct SimdConfig {
+    /// SIMD width (lanes per ensemble). The paper's CUDA block size: 128.
+    pub width: usize,
+    /// Number of processors (worker threads; the paper's 28 SMs).
+    pub workers: usize,
+}
+
+impl Default for SimdConfig {
+    fn default() -> Self {
+        SimdConfig {
+            width: 128,
+            workers: 1,
+        }
+    }
+}
+
+/// Shared input stream: workers claim chunks by atomic cursor bump
+/// (the paper's "pipelines compete to consume data from a common input
+/// stream ... atomic operations but no locking").
+pub struct ChunkSource<C> {
+    chunks: Vec<C>,
+    cursor: AtomicUsize,
+}
+
+impl<C> ChunkSource<C> {
+    pub fn new(chunks: Vec<C>) -> Arc<ChunkSource<C>> {
+        Arc::new(ChunkSource {
+            chunks,
+            cursor: AtomicUsize::new(0),
+        })
+    }
+
+    /// Claim the next unprocessed chunk, if any.
+    pub fn claim(&self) -> Option<&C> {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+        self.chunks.get(i)
+    }
+
+    pub fn len(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty()
+    }
+}
+
+/// The machine: runs one pipeline instance per worker over a chunked
+/// input stream.
+pub struct SimdMachine {
+    pub cfg: SimdConfig,
+}
+
+impl SimdMachine {
+    pub fn new(cfg: SimdConfig) -> SimdMachine {
+        SimdMachine { cfg }
+    }
+
+    /// Run `worker_fn(worker_id, source)` on every worker thread and
+    /// collect the per-worker results in worker order.
+    ///
+    /// `worker_fn` typically builds a pipeline (and a PJRT engine) inside
+    /// the thread, then loops `source.claim()` → feed → run-to-quiescence.
+    /// Chunks are only handed out once, so the input stream is consumed
+    /// exactly once across the machine.
+    pub fn run<C, R, F>(&self, source: Arc<ChunkSource<C>>, worker_fn: F) -> Result<Vec<R>>
+    where
+        C: Sync + Send,
+        R: Send,
+        F: Fn(usize, Arc<ChunkSource<C>>) -> Result<R> + Sync,
+    {
+        if self.cfg.workers <= 1 {
+            return Ok(vec![worker_fn(0, source)?]);
+        }
+        let results: Vec<Result<R>> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(self.cfg.workers);
+            for wid in 0..self.cfg.workers {
+                let src = source.clone();
+                let f = &worker_fn;
+                handles.push(scope.spawn(move || f(wid, src)));
+            }
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .map_err(|_| anyhow!("worker thread panicked"))
+                        .and_then(|r| r)
+                })
+                .collect()
+        });
+        results.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_claimed_exactly_once() {
+        let src = ChunkSource::new((0..100).collect::<Vec<u32>>());
+        let machine = SimdMachine::new(SimdConfig {
+            width: 4,
+            workers: 4,
+        });
+        let sums = machine
+            .run(src, |_wid, src| {
+                let mut sum = 0u64;
+                while let Some(&c) = src.claim() {
+                    sum += c as u64;
+                }
+                Ok(sum)
+            })
+            .unwrap();
+        assert_eq!(sums.len(), 4);
+        assert_eq!(sums.iter().sum::<u64>(), (0..100u64).sum());
+    }
+
+    #[test]
+    fn single_worker_runs_inline() {
+        let src = ChunkSource::new(vec![1u32, 2, 3]);
+        let machine = SimdMachine::new(SimdConfig {
+            width: 4,
+            workers: 1,
+        });
+        let out = machine
+            .run(src, |wid, src| {
+                assert_eq!(wid, 0);
+                let mut v = Vec::new();
+                while let Some(&c) = src.claim() {
+                    v.push(c);
+                }
+                Ok(v)
+            })
+            .unwrap();
+        assert_eq!(out[0], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn worker_errors_propagate() {
+        let src = ChunkSource::new(vec![1u32]);
+        let machine = SimdMachine::new(SimdConfig {
+            width: 4,
+            workers: 2,
+        });
+        let res: Result<Vec<()>> = machine.run(src, |wid, _src| {
+            if wid == 1 {
+                anyhow::bail!("boom")
+            } else {
+                Ok(())
+            }
+        });
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,196 @@
+//! Minimal command-line argument parser for the launcher.
+//!
+//! Offline substitute for `clap`. Grammar:
+//!
+//! ```text
+//! regatta <subcommand> [positional...] [--key value | --key=value | --flag]
+//! ```
+//!
+//! Typed accessors return `anyhow` errors naming the offending option so the
+//! launcher can print a useful message plus usage text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments (subcommand first, if any).
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options, in definition order.
+    options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I, S>(raw: I) -> Result<Args>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().map(Into::into).peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    bail!("unexpected bare `--`");
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// The subcommand (first positional), if present.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+
+    /// Raw option lookup.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Was `--flag` given? (A valued option also counts as present.)
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.options.contains_key(key)
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option, erroring with the option name on parse failure.
+    pub fn get<T>(&self, key: &str) -> Result<Option<T>>
+    where
+        T: std::str::FromStr,
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => Ok(Some(
+                s.parse::<T>()
+                    .with_context(|| format!("invalid value {s:?} for --{key}"))?,
+            )),
+        }
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T>(&self, key: &str, default: T) -> Result<T>
+    where
+        T: std::str::FromStr,
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        Ok(self.get(key)?.unwrap_or(default))
+    }
+
+    /// Required typed option.
+    pub fn require<T>(&self, key: &str) -> Result<T>
+    where
+        T: std::str::FromStr,
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        self.get(key)?
+            .ok_or_else(|| anyhow!("missing required option --{key}"))
+    }
+
+    /// Comma-separated list option, e.g. `--widths 32,64,128`.
+    pub fn list_or<T>(&self, key: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: std::str::FromStr + Clone,
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.opt(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    p.trim()
+                        .parse::<T>()
+                        .with_context(|| format!("invalid list element {p:?} for --{key}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().copied()).unwrap()
+    }
+
+    #[test]
+    fn positional_and_subcommand() {
+        let a = parse(&["run", "sum-fixed"]);
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.positional, vec!["run", "sum-fixed"]);
+    }
+
+    #[test]
+    fn options_space_and_equals() {
+        let a = parse(&["bench", "--n", "1000", "--width=128"]);
+        assert_eq!(a.get_or::<usize>("n", 0).unwrap(), 1000);
+        assert_eq!(a.get_or::<usize>("width", 0).unwrap(), 128);
+    }
+
+    #[test]
+    fn flags() {
+        let a = parse(&["run", "--stats", "--n", "5"]);
+        assert!(a.flag("stats"));
+        assert!(!a.flag("quiet"));
+        assert!(a.flag("n")); // valued option counts as present
+    }
+
+    #[test]
+    fn typed_errors_name_the_option() {
+        let a = parse(&["--n", "abc"]);
+        let err = a.get::<usize>("n").unwrap_err().to_string();
+        assert!(err.contains("--n"), "{err}");
+    }
+
+    #[test]
+    fn required_missing() {
+        let a = parse(&[]);
+        assert!(a.require::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--widths", "32,64,128"]);
+        assert_eq!(a.list_or("widths", &[1usize]).unwrap(), vec![32, 64, 128]);
+        assert_eq!(a.list_or("other", &[7usize]).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse(&["--threshold", "-1.5"]);
+        // "-1.5" does not start with "--" so it is taken as the value
+        assert_eq!(a.get_or::<f32>("threshold", 0.0).unwrap(), -1.5);
+    }
+}

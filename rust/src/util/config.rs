@@ -1,0 +1,260 @@
+//! TOML-subset configuration loader for launch configs (`configs/*.toml`).
+//!
+//! Offline substitute for `toml`/`serde`. Supported grammar:
+//!
+//! ```text
+//! # comment
+//! [section]
+//! key = "string"
+//! key = 123            # integer
+//! key = 1.5            # float
+//! key = true | false
+//! key = [1, 2, 3]      # homogeneous scalar list
+//! ```
+//!
+//! Keys outside any section live in the "" (root) section. Values are kept
+//! as typed [`Value`]s with convenience accessors that name the key in
+//! error messages.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    fn parse(raw: &str, line_no: usize) -> Result<Value> {
+        let s = raw.trim();
+        if s.is_empty() {
+            bail!("empty value on line {line_no}");
+        }
+        if let Some(body) = s.strip_prefix('"') {
+            let body = body
+                .strip_suffix('"')
+                .ok_or_else(|| anyhow!("unterminated string on line {line_no}"))?;
+            return Ok(Value::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+        }
+        if let Some(body) = s.strip_prefix('[') {
+            let body = body
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("unterminated list on line {line_no}"))?;
+            let items = body
+                .split(',')
+                .map(str::trim)
+                .filter(|p| !p.is_empty())
+                .map(|p| Value::parse(p, line_no))
+                .collect::<Result<Vec<_>>>()?;
+            return Ok(Value::List(items));
+        }
+        match s {
+            "true" => return Ok(Value::Bool(true)),
+            "false" => return Ok(Value::Bool(false)),
+            _ => {}
+        }
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        bail!("cannot parse value {s:?} on line {line_no}")
+    }
+}
+
+/// A parsed config: section → key → value.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    /// Parse config text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (i, raw_line) in text.lines().enumerate() {
+            let line_no = i + 1;
+            // strip comments: first '#' preceded by an even number of
+            // quotes (i.e. not inside a string literal)
+            let line = match raw_line
+                .char_indices()
+                .find(|&(pos, c)| {
+                    c == '#' && raw_line[..pos].matches('"').count() % 2 == 0
+                })
+                .map(|(pos, _)| pos)
+            {
+                Some(pos) => &raw_line[..pos],
+                None => raw_line,
+            };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("bad section header on line {line_no}"))?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("expected key = value on line {line_no}"))?;
+            let value = Value::parse(val, line_no)?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    /// Load and parse a config file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Config::parse(&text).with_context(|| format!("parsing config {}", path.display()))
+    }
+
+    /// All section names (the root section is "").
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str)
+    }
+
+    /// Raw value lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    fn want<T>(&self, section: &str, key: &str, conv: impl Fn(&Value) -> Option<T>) -> Result<Option<T>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => conv(v)
+                .map(Some)
+                .ok_or_else(|| anyhow!("config key [{section}] {key} has wrong type: {v:?}")),
+        }
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> Result<String> {
+        Ok(self
+            .want(section, key, |v| match v {
+                Value::Str(s) => Some(s.clone()),
+                _ => None,
+            })?
+            .unwrap_or_else(|| default.to_string()))
+    }
+
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> Result<i64> {
+        Ok(self
+            .want(section, key, |v| match v {
+                Value::Int(i) => Some(*i),
+                _ => None,
+            })?
+            .unwrap_or(default))
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        let v = self.int_or(section, key, default as i64)?;
+        usize::try_from(v).with_context(|| format!("[{section}] {key} must be non-negative"))
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        Ok(self
+            .want(section, key, |v| match v {
+                Value::Float(f) => Some(*f),
+                Value::Int(i) => Some(*i as f64),
+                _ => None,
+            })?
+            .unwrap_or(default))
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        Ok(self
+            .want(section, key, |v| match v {
+                Value::Bool(b) => Some(*b),
+                _ => None,
+            })?
+            .unwrap_or(default))
+    }
+
+    pub fn int_list_or(&self, section: &str, key: &str, default: &[i64]) -> Result<Vec<i64>> {
+        Ok(self
+            .want(section, key, |v| match v {
+                Value::List(xs) => xs
+                    .iter()
+                    .map(|x| match x {
+                        Value::Int(i) => Some(*i),
+                        _ => None,
+                    })
+                    .collect::<Option<Vec<_>>>(),
+                _ => None,
+            })?
+            .unwrap_or_else(|| default.to_vec()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# launcher config
+name = "sum-fixed"
+
+[workload]
+items = 1000000
+region_size = 96
+sizes = [32, 64, 128]
+fraction = 0.5
+shuffle = false
+label = "fixed regions"  # inline comment
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("", "name", "?").unwrap(), "sum-fixed");
+        assert_eq!(c.usize_or("workload", "items", 0).unwrap(), 1_000_000);
+        assert_eq!(c.int_or("workload", "region_size", 0).unwrap(), 96);
+        assert_eq!(c.float_or("workload", "fraction", 0.0).unwrap(), 0.5);
+        assert!(!c.bool_or("workload", "shuffle", true).unwrap());
+        assert_eq!(
+            c.int_list_or("workload", "sizes", &[]).unwrap(),
+            vec![32, 64, 128]
+        );
+        assert_eq!(c.str_or("workload", "label", "?").unwrap(), "fixed regions");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("x", "y", 7).unwrap(), 7);
+        assert!(c.bool_or("x", "y", true).unwrap());
+    }
+
+    #[test]
+    fn type_errors_name_the_key() {
+        let c = Config::parse("[s]\nk = \"str\"").unwrap();
+        let err = c.int_or("s", "k", 0).unwrap_err().to_string();
+        assert!(err.contains("[s] k"), "{err}");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("k = ").is_err());
+        assert!(Config::parse("k = \"unterminated").is_err());
+    }
+}

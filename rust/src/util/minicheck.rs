@@ -1,0 +1,215 @@
+//! Minimal property-based testing harness (offline substitute for
+//! `proptest`).
+//!
+//! Properties are functions over a [`Gen`]; the harness runs each property
+//! many times with a *growing size parameter*, so the first failing case is
+//! naturally small (sized generation in lieu of shrinking). Failures panic
+//! with the seed and iteration, and `REGATTA_CHECK_SEED` /
+//! `REGATTA_CHECK_RUNS` reproduce or extend a run.
+//!
+//! ```no_run
+//! use regatta::util::minicheck::Checker;
+//! Checker::new("reverse-roundtrip").runs(200).check(|g| {
+//!     let xs = g.vec_u32(64, 1000);
+//!     let mut r = xs.clone();
+//!     r.reverse();
+//!     r.reverse();
+//!     if r == xs { Ok(()) } else { Err(format!("mismatch for {xs:?}")) }
+//! });
+//! ```
+
+use crate::util::prng::Prng;
+
+/// Sized random-input generator handed to properties.
+pub struct Gen {
+    prng: Prng,
+    size: usize,
+}
+
+impl Gen {
+    /// Current size (grows from 1 over a run; use to scale structures).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Uniform usize in `[0, cap)`, additionally capped by size scaling.
+    pub fn below(&mut self, cap: usize) -> usize {
+        let eff = cap.min(self.size.max(1));
+        self.prng.below(eff.max(1))
+    }
+
+    /// Uniform usize in `[lo, hi]` (NOT size-scaled).
+    pub fn int_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.prng.below(hi - lo + 1)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.prng.range_f32(lo, hi)
+    }
+
+    /// Bernoulli.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.prng.chance(p)
+    }
+
+    /// Length ≤ max_len (size-scaled) vector of u32 < bound.
+    pub fn vec_u32(&mut self, max_len: usize, bound: u32) -> Vec<u32> {
+        let len = self.below(max_len + 1);
+        (0..len)
+            .map(|_| (self.prng.next_u64() % bound as u64) as u32)
+            .collect()
+    }
+
+    /// Length ≤ max_len (size-scaled) vector of f32 in [-scale, scale).
+    pub fn vec_f32(&mut self, max_len: usize, scale: f32) -> Vec<f32> {
+        let len = self.below(max_len + 1);
+        (0..len).map(|_| self.prng.range_f32(-scale, scale)).collect()
+    }
+
+    /// Uniformly chosen element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.prng.choice(xs)
+    }
+
+    /// Access the raw PRNG (for custom generators).
+    pub fn rng(&mut self) -> &mut Prng {
+        &mut self.prng
+    }
+}
+
+/// Property runner.
+pub struct Checker {
+    name: String,
+    runs: usize,
+    seed: u64,
+    max_size: usize,
+}
+
+impl Checker {
+    /// New checker; honours `REGATTA_CHECK_SEED`/`REGATTA_CHECK_RUNS`.
+    pub fn new(name: &str) -> Self {
+        let seed = std::env::var("REGATTA_CHECK_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5EED_0000_u64);
+        let runs = std::env::var("REGATTA_CHECK_RUNS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(256);
+        Checker {
+            name: name.to_string(),
+            runs,
+            seed,
+            max_size: 100,
+        }
+    }
+
+    /// Number of cases to run.
+    pub fn runs(mut self, runs: usize) -> Self {
+        self.runs = runs;
+        self
+    }
+
+    /// Override the base seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Cap for the size parameter.
+    pub fn max_size(mut self, max_size: usize) -> Self {
+        self.max_size = max_size;
+        self
+    }
+
+    /// Run the property; panics with a reproducible report on failure.
+    pub fn check<F>(&self, prop: F)
+    where
+        F: Fn(&mut Gen) -> Result<(), String>,
+    {
+        for i in 0..self.runs {
+            // size ramps up over the run so failures tend to be small
+            let size = 1 + (i * self.max_size) / self.runs.max(1);
+            let case_seed = self.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let mut g = Gen {
+                prng: Prng::new(case_seed),
+                size,
+            };
+            if let Err(msg) = prop(&mut g) {
+                panic!(
+                    "property '{}' failed at iteration {i} (size {size}):\n  {msg}\n\
+                     reproduce with REGATTA_CHECK_SEED={} and iteration {i}",
+                    self.name, self.seed
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Checker::new("add-commutes").runs(64).check(|g| {
+            let a = g.int_in(0, 1000);
+            let b = g.int_in(0, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports() {
+        Checker::new("always-fails")
+            .runs(8)
+            .check(|_| Err("nope".into()));
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut max_seen = 0usize;
+        let mut min_seen = usize::MAX;
+        Checker::new("size-ramp").runs(100).check(|g| {
+            let s = g.size();
+            // record via a static-free trick: sizes are deterministic,
+            // so we just sanity-check the bounds here.
+            if s == 0 || s > 100 {
+                return Err(format!("size {s} out of range"));
+            }
+            Ok(())
+        });
+        // re-derive explicitly for assertion clarity
+        for i in 0..100usize {
+            let size = 1 + (i * 100) / 100;
+            max_seen = max_seen.max(size);
+            min_seen = min_seen.min(size);
+        }
+        assert_eq!(min_seen, 1);
+        assert_eq!(max_seen, 100);
+    }
+
+    #[test]
+    fn vec_generators_respect_caps() {
+        Checker::new("vec-caps").runs(64).check(|g| {
+            let xs = g.vec_u32(16, 10);
+            if xs.len() > 16 {
+                return Err(format!("len {}", xs.len()));
+            }
+            if xs.iter().any(|&x| x >= 10) {
+                return Err("element out of bound".into());
+            }
+            let fs = g.vec_f32(8, 2.0);
+            if fs.iter().any(|&f| !(-2.0..2.0).contains(&f)) {
+                return Err("f32 out of range".into());
+            }
+            Ok(())
+        });
+    }
+}

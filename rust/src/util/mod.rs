@@ -1,0 +1,21 @@
+//! Self-contained utility substrates.
+//!
+//! This build is fully offline: only the `xla` crate's dependency closure is
+//! vendored, so the usual ecosystem crates (clap, rand, serde, criterion,
+//! proptest, …) are unavailable. Everything the framework needs beyond that
+//! closure is implemented here as small, tested modules:
+//!
+//! * [`cli`] — argument parsing for the launcher.
+//! * [`config`] — TOML-subset config loader for launch configs.
+//! * [`json`] — minimal JSON parser (reads `artifacts/manifest.json`).
+//! * [`prng`] — splitmix64/xoshiro256** PRNG for workloads and tests.
+//! * [`stats`] — summary statistics for metrics and the bench harness.
+//! * [`minicheck`] — property-based testing harness (sized generation,
+//!   seed-reproducible failures).
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod minicheck;
+pub mod prng;
+pub mod stats;

@@ -1,0 +1,10 @@
+//! Workload generators for the paper's evaluation.
+//!
+//! * [`regions`] — integer streams divided into fixed-size or
+//!   uniformly-random regions (the §5 "sum" benchmarks, Figs 6/7).
+//! * [`taxi`] — synthetic DIBS-like `tstcsv` text: tagged lines of GPS
+//!   coordinate pairs matching the paper's corpus statistics (no DIBS
+//!   data ships with this repo; see DESIGN.md substitution notes).
+
+pub mod regions;
+pub mod taxi;

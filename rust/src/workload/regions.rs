@@ -1,0 +1,165 @@
+//! Region-structured integer streams (the §5 sum benchmarks).
+//!
+//! The paper streams 512 M integers divided into regions of (a) uniform
+//! size and (b) size uniform in `[0, max]`. The generator reproduces both,
+//! returning the stream as [`Blob`] composites (one per region) or as a
+//! flat tagged stream for the in-band baseline.
+
+use crate::coordinator::enumerate::Blob;
+use crate::coordinator::tagging::Tagged;
+use crate::util::prng::Prng;
+
+/// How region sizes are drawn.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RegionSpec {
+    /// Every region has exactly `size` elements (Fig. 6).
+    Fixed { size: usize },
+    /// Region sizes uniform in `[0, max]` (Fig. 7).
+    Uniform { max: usize },
+}
+
+impl RegionSpec {
+    fn next_size(&self, rng: &mut Prng) -> usize {
+        match *self {
+            RegionSpec::Fixed { size } => size,
+            RegionSpec::Uniform { max } => rng.below(max + 1),
+        }
+    }
+
+    /// Expected region size (for workload sizing).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            RegionSpec::Fixed { size } => size as f64,
+            RegionSpec::Uniform { max } => max as f64 / 2.0,
+        }
+    }
+}
+
+/// Generate regions until ~`total_items` elements have been produced
+/// (the final region is truncated to land exactly on the total).
+///
+/// Values are uniform in `[-1, 1)`: with the sum app's threshold at 0,
+/// about half the elements survive the filter — the irregular-dataflow
+/// regime the framework exists for.
+pub fn gen_blobs(total_items: usize, spec: RegionSpec, seed: u64) -> Vec<Blob> {
+    let mut rng = Prng::new(seed);
+    let mut blobs = Vec::new();
+    let mut produced = 0usize;
+    let mut id = 0u64;
+    while produced < total_items {
+        let size = spec.next_size(&mut rng).min(total_items - produced);
+        // Uniform spec may draw 0: an empty region, which is legal and
+        // exercises the empty-parent path — keep it.
+        let elems: Vec<f32> = (0..size).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        blobs.push(Blob::from_vec(id, elems));
+        id += 1;
+        produced += size;
+        if size == 0 && matches!(spec, RegionSpec::Fixed { size: 0 }) {
+            break; // degenerate fixed-zero spec cannot make progress
+        }
+    }
+    blobs
+}
+
+/// Flatten blobs into the dense in-band representation: one tagged item
+/// per element (the §5 comparison baseline).
+pub fn flatten_tagged(blobs: &[Blob]) -> Vec<Tagged<f32>> {
+    let mut out = Vec::with_capacity(blobs.iter().map(|b| b.elems.len()).sum());
+    for b in blobs {
+        for &v in &b.elems {
+            out.push(Tagged::new(b.id, v));
+        }
+    }
+    out
+}
+
+/// Split blobs into per-worker chunks of roughly `chunk_items` elements,
+/// respecting region boundaries (a region is never split across chunks —
+/// matching the paper, where a parent object is enumerated by a single
+/// processor).
+pub fn chunk_blobs(blobs: Vec<Blob>, chunk_items: usize) -> Vec<Vec<Blob>> {
+    let mut chunks = Vec::new();
+    let mut cur = Vec::new();
+    let mut cur_items = 0usize;
+    for b in blobs {
+        cur_items += b.elems.len();
+        cur.push(b);
+        if cur_items >= chunk_items {
+            chunks.push(std::mem::take(&mut cur));
+            cur_items = 0;
+        }
+    }
+    if !cur.is_empty() {
+        chunks.push(cur);
+    }
+    chunks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_regions_cover_total_exactly() {
+        let blobs = gen_blobs(1000, RegionSpec::Fixed { size: 96 }, 1);
+        let total: usize = blobs.iter().map(|b| b.elems.len()).sum();
+        assert_eq!(total, 1000);
+        // all but the last are exactly 96
+        for b in &blobs[..blobs.len() - 1] {
+            assert_eq!(b.elems.len(), 96);
+        }
+        assert!(blobs.last().unwrap().elems.len() <= 96);
+    }
+
+    #[test]
+    fn uniform_regions_cover_total_and_vary() {
+        let blobs = gen_blobs(10_000, RegionSpec::Uniform { max: 100 }, 2);
+        let total: usize = blobs.iter().map(|b| b.elems.len()).sum();
+        assert_eq!(total, 10_000);
+        let sizes: Vec<usize> = blobs.iter().map(|b| b.elems.len()).collect();
+        assert!(sizes.iter().any(|&s| s < 30));
+        assert!(sizes.iter().any(|&s| s > 70));
+        // mean should be near max/2
+        let mean = total as f64 / sizes.len() as f64;
+        assert!((mean - 50.0).abs() < 10.0, "mean={mean}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = gen_blobs(500, RegionSpec::Uniform { max: 64 }, 7);
+        let b = gen_blobs(500, RegionSpec::Uniform { max: 64 }, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn values_in_range() {
+        let blobs = gen_blobs(200, RegionSpec::Fixed { size: 50 }, 3);
+        for b in &blobs {
+            for &v in &b.elems {
+                assert!((-1.0..1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn flatten_preserves_order_and_tags() {
+        let blobs = vec![
+            Blob::from_vec(0, vec![1.0, 2.0]),
+            Blob::from_vec(1, vec![3.0]),
+        ];
+        let flat = flatten_tagged(&blobs);
+        assert_eq!(flat.len(), 3);
+        assert_eq!(flat[0], Tagged::new(0, 1.0));
+        assert_eq!(flat[2], Tagged::new(1, 3.0));
+    }
+
+    #[test]
+    fn chunking_respects_regions() {
+        let blobs = gen_blobs(1000, RegionSpec::Fixed { size: 96 }, 4);
+        let n_regions = blobs.len();
+        let chunks = chunk_blobs(blobs, 300);
+        assert!(chunks.len() > 1);
+        let total_regions: usize = chunks.iter().map(|c| c.len()).sum();
+        assert_eq!(total_regions, n_regions);
+    }
+}

@@ -1,0 +1,260 @@
+//! Synthetic DIBS-like `tstcsv` workload (the paper's "taxi" app input).
+//!
+//! The paper replays DIBS's `tstcsv->csv` benchmark: lines of text, each
+//! with a tag, a variable-length list of GPS coordinate pairs written as
+//! `{lat,lon}`, and other data. DIBS's corpus is not available offline, so
+//! the generator synthesizes text matching the statistics the paper
+//! reports — **average line length 1397 characters and 45 coordinate
+//! pairs per line** — which are exactly the quantities that determine
+//! stage occupancy (91 % / 9 % full ensembles) and hence the Fig. 8
+//! result shapes. See DESIGN.md §Substitutions.
+//!
+//! Line format:
+//!
+//! ```text
+//! T<tag>,{-37.8136,144.9631},{...},...,<filler>\n
+//! ```
+//!
+//! Filler is brace-free so stage 1's candidate detector stays honest.
+
+use std::sync::Arc;
+
+use crate::coordinator::enumerate::Composite;
+use crate::util::prng::Prng;
+
+/// Paper statistic: mean characters per line.
+pub const PAPER_AVG_LINE_LEN: usize = 1397;
+/// Paper statistic: mean coordinate pairs per line.
+pub const PAPER_AVG_PAIRS: usize = 45;
+
+/// One line of the input, viewing a shared text buffer
+/// (the paper's "stream of line start indices and line lengths").
+#[derive(Debug, Clone)]
+pub struct TaxiLine {
+    /// Shared raw text (the "GPU memory" buffer; `Arc`: all worker
+    /// processors view the same device memory).
+    pub text: Arc<Vec<u8>>,
+    pub start: usize,
+    pub len: usize,
+    /// Numeric tag parsed from the line head (parsed once per line).
+    pub tag: u32,
+}
+
+impl TaxiLine {
+    /// The line's bytes.
+    pub fn bytes(&self) -> &[u8] {
+        &self.text[self.start..self.start + self.len]
+    }
+
+    /// Absolute position of a line-relative offset.
+    pub fn abs(&self, off: u32) -> usize {
+        self.start + off as usize
+    }
+}
+
+impl Composite for TaxiLine {
+    fn count(&self) -> usize {
+        self.len // enumerate the line's characters
+    }
+}
+
+/// A generated workload: the raw text plus its line index.
+#[derive(Debug, Clone)]
+pub struct TaxiWorkload {
+    pub text: Arc<Vec<u8>>,
+    pub lines: Vec<TaxiLine>,
+    /// Ground truth: total well-formed coordinate pairs in the text.
+    pub total_pairs: usize,
+}
+
+/// Tunable generator parameters (defaults = the paper's statistics).
+#[derive(Debug, Clone, Copy)]
+pub struct TaxiGenConfig {
+    pub avg_pairs: usize,
+    pub avg_line_len: usize,
+}
+
+impl Default for TaxiGenConfig {
+    fn default() -> Self {
+        TaxiGenConfig {
+            avg_pairs: PAPER_AVG_PAIRS,
+            avg_line_len: PAPER_AVG_LINE_LEN,
+        }
+    }
+}
+
+const FILLER: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789 ;:";
+
+fn push_coord(out: &mut Vec<u8>, rng: &mut Prng) {
+    // GPS-ish coordinates with 1–4 fractional digits
+    let lat = rng.range_f32(-90.0, 90.0);
+    let lon = rng.range_f32(-180.0, 180.0);
+    let dec = 1 + rng.below(4);
+    out.push(b'{');
+    out.extend_from_slice(format!("{lat:.dec$}").as_bytes());
+    out.push(b',');
+    out.extend_from_slice(format!("{lon:.dec$}").as_bytes());
+    out.push(b'}');
+}
+
+/// Generate `n_lines` lines matching the configured statistics.
+pub fn generate(n_lines: usize, cfg: TaxiGenConfig, seed: u64) -> TaxiWorkload {
+    let mut rng = Prng::new(seed);
+    let mut text = Vec::with_capacity(n_lines * (cfg.avg_line_len + 1));
+    let mut spans = Vec::with_capacity(n_lines);
+    let mut total_pairs = 0usize;
+    for i in 0..n_lines {
+        let start = text.len();
+        let tag = i as u32;
+        text.extend_from_slice(format!("T{tag},").as_bytes());
+        // pairs per line: uniform in [1, 2*avg) → mean ≈ avg
+        let pairs = 1 + rng.below((2 * cfg.avg_pairs).max(2) - 1);
+        for p in 0..pairs {
+            if p > 0 {
+                text.push(b',');
+            }
+            push_coord(&mut text, &mut rng);
+        }
+        total_pairs += pairs;
+        // brace-free filler up to the target length (uniform around avg)
+        let target = {
+            let lo = cfg.avg_line_len / 2;
+            let hi = cfg.avg_line_len * 3 / 2;
+            lo + rng.below(hi - lo + 1)
+        };
+        text.push(b',');
+        while text.len() - start < target {
+            text.push(FILLER[rng.below(FILLER.len())]);
+        }
+        let len = text.len() - start;
+        text.push(b'\n');
+        spans.push((start, len, tag));
+    }
+    let text = Arc::new(text);
+    let lines = spans
+        .into_iter()
+        .map(|(start, len, tag)| TaxiLine {
+            text: text.clone(),
+            start,
+            len,
+            tag,
+        })
+        .collect();
+    TaxiWorkload {
+        text,
+        lines,
+        total_pairs,
+    }
+}
+
+/// Replicate a workload `k`× (the paper scales input size by replicating
+/// the DIBS file). Tags restart per replica; text is shared.
+pub fn replicate(base: &TaxiWorkload, k: usize) -> TaxiWorkload {
+    let mut lines = Vec::with_capacity(base.lines.len() * k);
+    for _ in 0..k {
+        lines.extend(base.lines.iter().cloned());
+    }
+    TaxiWorkload {
+        text: base.text.clone(),
+        lines,
+        total_pairs: base.total_pairs * k,
+    }
+}
+
+/// Split a workload's lines into chunks of `lines_per_chunk` for the
+/// multi-worker machine.
+pub fn chunk_lines(w: &TaxiWorkload, lines_per_chunk: usize) -> Vec<Vec<TaxiLine>> {
+    w.lines
+        .chunks(lines_per_chunk.max(1))
+        .map(|c| c.to_vec())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn count_pairs_naive(text: &[u8]) -> usize {
+        // independent ground-truth: regex-free scan for {num,num}
+        let s = String::from_utf8_lossy(text);
+        let mut n = 0;
+        for (i, _) in s.match_indices('{') {
+            if let Some(end) = s[i..].find('}') {
+                let body = &s[i + 1..i + end];
+                let mut it = body.splitn(2, ',');
+                let a = it.next().unwrap_or("");
+                let b = it.next().unwrap_or("");
+                if !a.is_empty()
+                    && !b.is_empty()
+                    && a.parse::<f64>().is_ok()
+                    && b.parse::<f64>().is_ok()
+                {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    #[test]
+    fn statistics_match_paper_targets() {
+        let w = generate(200, TaxiGenConfig::default(), 1);
+        let avg_len: f64 =
+            w.lines.iter().map(|l| l.len as f64).sum::<f64>() / w.lines.len() as f64;
+        assert!(
+            (avg_len - PAPER_AVG_LINE_LEN as f64).abs() < 150.0,
+            "avg_len={avg_len}"
+        );
+        let avg_pairs = w.total_pairs as f64 / w.lines.len() as f64;
+        assert!(
+            (avg_pairs - PAPER_AVG_PAIRS as f64).abs() < 8.0,
+            "avg_pairs={avg_pairs}"
+        );
+    }
+
+    #[test]
+    fn ground_truth_matches_scan() {
+        let w = generate(20, TaxiGenConfig::default(), 2);
+        assert_eq!(w.total_pairs, count_pairs_naive(&w.text));
+    }
+
+    #[test]
+    fn lines_index_text_correctly() {
+        let w = generate(10, TaxiGenConfig::default(), 3);
+        for l in &w.lines {
+            let bytes = l.bytes();
+            assert_eq!(bytes[0], b'T');
+            assert!(!bytes.contains(&b'\n'));
+            let tag_text: String = bytes[1..]
+                .iter()
+                .take_while(|&&b| b != b',')
+                .map(|&b| b as char)
+                .collect();
+            assert_eq!(tag_text.parse::<u32>().unwrap(), l.tag);
+        }
+    }
+
+    #[test]
+    fn replicate_scales_lines_and_truth() {
+        let base = generate(5, TaxiGenConfig::default(), 4);
+        let big = replicate(&base, 3);
+        assert_eq!(big.lines.len(), 15);
+        assert_eq!(big.total_pairs, base.total_pairs * 3);
+        assert!(Arc::ptr_eq(&big.text, &base.text));
+    }
+
+    #[test]
+    fn chunking_covers_all_lines() {
+        let w = generate(13, TaxiGenConfig::default(), 5);
+        let chunks = chunk_lines(&w, 4);
+        assert_eq!(chunks.iter().map(Vec::len).sum::<usize>(), 13);
+        assert_eq!(chunks.len(), 4);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(5, TaxiGenConfig::default(), 9);
+        let b = generate(5, TaxiGenConfig::default(), 9);
+        assert_eq!(*a.text, *b.text);
+    }
+}

@@ -1,0 +1,136 @@
+//! Apps on the real XLA backend: end-to-end through artifacts + PJRT
+//! (requires `make artifacts`). These are the measured configurations of
+//! the figure benches, validated for correctness at small scale.
+
+use std::rc::Rc;
+
+use regatta::apps::sum::{reference_sums, SumApp, SumConfig, SumMode, SumShape};
+use regatta::apps::taxi::{reference_pairs, sort_pairs, TaxiApp, TaxiConfig, TaxiVariant};
+use regatta::runtime::kernels::KernelSet;
+use regatta::runtime::{ArtifactStore, Engine};
+use regatta::workload::regions::{gen_blobs, RegionSpec};
+use regatta::workload::taxi::{generate, TaxiGenConfig};
+
+fn engine() -> Engine {
+    Engine::new(ArtifactStore::discover().expect("make artifacts")).expect("pjrt")
+}
+
+#[test]
+fn sum_app_xla_fused_matches_reference() {
+    let eng = engine();
+    let ks = Rc::new(KernelSet::xla(&eng, 32).unwrap());
+    let blobs = gen_blobs(3000, RegionSpec::Fixed { size: 48 }, 21);
+    let app = SumApp::new(
+        SumConfig {
+            width: 32,
+            data_cap: 512,
+            signal_cap: 128,
+            ..Default::default()
+        },
+        ks,
+    );
+    let report = app.run(&blobs).unwrap();
+    let want = reference_sums(&blobs, 0.0);
+    assert_eq!(report.outputs.len(), want.len());
+    for ((gi, gv), (wi, wv)) in report.outputs.iter().zip(&want) {
+        assert_eq!(gi, wi);
+        assert!((gv - wv).abs() < 1e-2 * (1.0 + wv.abs()), "{gv} vs {wv}");
+    }
+    assert!(report.invocations > 0);
+    assert!(report.elapsed > 0.0);
+}
+
+#[test]
+fn sum_app_xla_all_modes_agree() {
+    let eng = engine();
+    let ks = Rc::new(KernelSet::xla(&eng, 32).unwrap());
+    let blobs = gen_blobs(800, RegionSpec::Fixed { size: 17 }, 5);
+    let want = reference_sums(&blobs, 0.0);
+    for (mode, shape) in [
+        (SumMode::Enumerated, SumShape::Fused),
+        (SumMode::Enumerated, SumShape::TwoStage),
+        (SumMode::Tagged, SumShape::Fused),
+    ] {
+        let app = SumApp::new(
+            SumConfig {
+                width: 32,
+                mode,
+                shape,
+                data_cap: 256,
+                signal_cap: 64,
+                ..Default::default()
+            },
+            ks.clone(),
+        );
+        let got = app.run(&blobs).unwrap().outputs;
+        assert_eq!(got.len(), want.len(), "{mode:?}/{shape:?}");
+        for ((gi, gv), (wi, wv)) in got.iter().zip(&want) {
+            assert_eq!(gi, wi);
+            assert!(
+                (gv - wv).abs() < 1e-2 * (1.0 + wv.abs()),
+                "{mode:?}/{shape:?}: {gv} vs {wv}"
+            );
+        }
+    }
+}
+
+#[test]
+fn taxi_app_xla_all_variants_match_reference() {
+    let eng = engine();
+    let ks = Rc::new(KernelSet::xla(&eng, 32).unwrap());
+    let w = generate(
+        8,
+        TaxiGenConfig {
+            avg_pairs: 5,
+            avg_line_len: 150,
+        },
+        33,
+    );
+    let mut want = reference_pairs(&w);
+    sort_pairs(&mut want);
+    assert!(!want.is_empty());
+    for variant in TaxiVariant::all() {
+        let app = TaxiApp::new(
+            TaxiConfig {
+                width: 32,
+                variant,
+                data_cap: 1024,
+                signal_cap: 256,
+                ..Default::default()
+            },
+            ks.clone(),
+        );
+        let mut got = app.run(&w).unwrap().pairs;
+        sort_pairs(&mut got);
+        assert_eq!(got.len(), want.len(), "{variant:?}");
+        for (g, e) in got.iter().zip(&want) {
+            assert_eq!(g.tag, e.tag, "{variant:?}");
+            assert!((g.x - e.x).abs() < 1e-4, "{variant:?}: {} vs {}", g.x, e.x);
+            assert!((g.y - e.y).abs() < 1e-4, "{variant:?}: {} vs {}", g.y, e.y);
+        }
+    }
+}
+
+/// The paper's occupancy statistic, on the real backend at width 128 with
+/// paper-shaped workloads: stage 1 mostly full, stage 2 mostly partial.
+#[test]
+fn taxi_xla_width128_occupancy_split() {
+    let eng = engine();
+    let ks = Rc::new(KernelSet::xla(&eng, 128).unwrap());
+    let w = generate(6, TaxiGenConfig::default(), 77); // 1397 chars, 45 pairs
+    let app = TaxiApp::new(
+        TaxiConfig {
+            width: 128,
+            variant: TaxiVariant::Enumerated,
+            data_cap: 8192,
+            signal_cap: 1024,
+            ..Default::default()
+        },
+        ks,
+    );
+    let r = app.run(&w).unwrap();
+    let s1 = r.metrics.node("classify").unwrap().full_fraction();
+    let s2 = r.metrics.node("parse").unwrap().full_fraction();
+    assert!(s1 > 0.75, "stage1 full fraction {s1} (paper: 0.91)");
+    assert!(s2 < 0.25, "stage2 full fraction {s2} (paper: 0.09)");
+}

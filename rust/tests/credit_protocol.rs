@@ -1,0 +1,279 @@
+//! Credit-protocol integration tests: the paper's §3 rules and Lemma 1
+//! (precise delivery), exercised through real channels and nodes.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use regatta::coordinator::channel::Channel;
+use regatta::coordinator::node::{Emitter, Node, NodeLogic, NodeOps, Output};
+use regatta::coordinator::signal::{ParentRef, SignalKind};
+
+/// Records, per received custom signal, how many data items had been
+/// consumed at that moment — the observable Lemma 1 quantifies over.
+#[derive(Default)]
+struct DeliveryRecorder {
+    consumed: u64,
+    deliveries: Vec<(u64, u64)>, // (signal id, items consumed when received)
+}
+
+struct RecorderLogic {
+    state: Rc<RefCell<DeliveryRecorder>>,
+}
+
+impl NodeLogic for RecorderLogic {
+    type In = u64;
+    type Out = u64;
+
+    fn run(
+        &mut self,
+        items: &[u64],
+        _parent: Option<&ParentRef>,
+        out: &mut Emitter<'_, u64>,
+    ) -> anyhow::Result<()> {
+        let mut st = self.state.borrow_mut();
+        st.consumed += items.len() as u64;
+        for &i in items {
+            out.push(i);
+        }
+        Ok(())
+    }
+
+    fn on_custom(&mut self, id: u64, _out: &mut Emitter<'_, u64>) -> anyhow::Result<()> {
+        let mut st = self.state.borrow_mut();
+        let consumed = st.consumed;
+        st.deliveries.push((id, consumed));
+        Ok(())
+    }
+
+    fn forward_region_signals(&self) -> bool {
+        false
+    }
+}
+
+fn recorder_node(
+    ch: Rc<Channel<u64>>,
+    width: usize,
+) -> (Node<RecorderLogic>, Rc<RefCell<DeliveryRecorder>>) {
+    let state = Rc::new(RefCell::new(DeliveryRecorder::default()));
+    let sink = Rc::new(RefCell::new(Vec::new()));
+    let node = Node::new(
+        "recorder",
+        width,
+        ch,
+        Output::Sink(sink),
+        RecorderLogic {
+            state: state.clone(),
+        },
+    );
+    (node, state)
+}
+
+/// Lemma 1, deterministic trace: a signal emitted after k data items is
+/// received exactly when k items have been consumed.
+#[test]
+fn lemma1_simple_trace() {
+    let ch: Rc<Channel<u64>> = Channel::new(1024, 64);
+    for i in 0..5 {
+        ch.push(i);
+    }
+    ch.emit_signal(SignalKind::Custom(100)); // after 5 items
+    for i in 5..8 {
+        ch.push(i);
+    }
+    ch.emit_signal(SignalKind::Custom(101)); // after 8 items
+    ch.emit_signal(SignalKind::Custom(102)); // also after 8 items
+    for i in 8..10 {
+        ch.push(i);
+    }
+
+    let (mut node, state) = recorder_node(ch, 4);
+    while node.fireable() {
+        node.fire().unwrap();
+    }
+    let st = state.borrow();
+    assert_eq!(st.consumed, 10);
+    assert_eq!(
+        st.deliveries,
+        vec![(100, 5), (101, 8), (102, 8)],
+        "signals must be delivered at their precise stream positions"
+    );
+}
+
+/// Lemma 1 with interleaved production and consumption: emit/consume in
+/// random interleavings, verifying precision every time.
+#[test]
+fn lemma1_interleaved_production() {
+    use regatta::util::prng::Prng;
+    for seed in 0..50u64 {
+        let mut rng = Prng::new(seed);
+        let ch: Rc<Channel<u64>> = Channel::new(4096, 512);
+        let width = 1 + rng.below(9);
+        let (mut node, state) = recorder_node(ch.clone(), width);
+
+        let mut emitted = 0u64;
+        let mut expected = Vec::new();
+        let mut sig_id = 0u64;
+        for _step in 0..200 {
+            match rng.below(3) {
+                0 => {
+                    // emit a burst of data
+                    for _ in 0..rng.below(7) {
+                        if ch.data_space() > 0 {
+                            ch.push(emitted);
+                            emitted += 1;
+                        }
+                    }
+                }
+                1 => {
+                    // emit a signal: must be received after `emitted` items
+                    if ch.signal_space() > 0 {
+                        ch.emit_signal(SignalKind::Custom(sig_id));
+                        expected.push((sig_id, emitted));
+                        sig_id += 1;
+                    }
+                }
+                _ => {
+                    // let the receiver make some progress
+                    for _ in 0..rng.below(4) {
+                        if node.fireable() {
+                            node.fire().unwrap();
+                        }
+                    }
+                }
+            }
+        }
+        while node.fireable() {
+            node.fire().unwrap();
+        }
+        let st = state.borrow();
+        assert_eq!(st.consumed, emitted, "seed {seed}");
+        assert_eq!(st.deliveries, expected, "seed {seed}");
+    }
+}
+
+/// §3.3 SIMD rule: no ensemble may span a signal — equivalently, every
+/// ensemble's items were all emitted between the same pair of signals.
+#[test]
+fn ensembles_never_span_signals() {
+    // map: item value -> epoch assigned at emission
+    let ch: Rc<Channel<u64>> = Channel::new(1024, 64);
+    let mut epochs = Vec::new();
+    let mut epoch = 0u64;
+    let mut next = 0u64;
+    use regatta::util::prng::Prng;
+    let mut rng = Prng::new(9);
+    for _ in 0..30 {
+        for _ in 0..rng.below(10) {
+            ch.push(next);
+            epochs.push(epoch);
+            next += 1;
+        }
+        ch.emit_signal(SignalKind::Custom(epoch));
+        epoch += 1;
+    }
+
+    struct EnsembleEpochs {
+        epochs: Vec<u64>,
+        batches: Vec<Vec<u64>>,
+    }
+    struct Logic {
+        st: Rc<RefCell<EnsembleEpochs>>,
+    }
+    impl NodeLogic for Logic {
+        type In = u64;
+        type Out = u64;
+        fn run(
+            &mut self,
+            items: &[u64],
+            _p: Option<&ParentRef>,
+            _o: &mut Emitter<'_, u64>,
+        ) -> anyhow::Result<()> {
+            let st = self.st.borrow();
+            let batch: Vec<u64> = items.iter().map(|&i| st.epochs[i as usize]).collect();
+            drop(st);
+            self.st.borrow_mut().batches.push(batch);
+            Ok(())
+        }
+        fn max_outputs_per_input(&self) -> usize {
+            0
+        }
+        fn forward_region_signals(&self) -> bool {
+            false
+        }
+    }
+
+    let st = Rc::new(RefCell::new(EnsembleEpochs {
+        epochs,
+        batches: Vec::new(),
+    }));
+    let sink: Rc<RefCell<Vec<u64>>> = Rc::new(RefCell::new(Vec::new()));
+    let mut node = Node::new("chk", 4, ch, Output::Sink(sink), Logic { st: st.clone() });
+    while node.fireable() {
+        node.fire().unwrap();
+    }
+    let st = st.borrow();
+    assert!(!st.batches.is_empty());
+    for batch in &st.batches {
+        assert!(
+            batch.windows(2).all(|w| w[0] == w[1]),
+            "ensemble mixed epochs: {batch:?}"
+        );
+    }
+}
+
+/// Credit arithmetic across a chain of nodes: forwarded signals are
+/// re-credited per hop and stay precise two hops downstream.
+#[test]
+fn precision_is_preserved_across_hops() {
+    let ch0: Rc<Channel<u64>> = Channel::new(1024, 64);
+    // pattern: 3 items, signal, 2 items, signal, 4 items
+    for i in 0..3 {
+        ch0.push(i);
+    }
+    ch0.emit_signal(SignalKind::Custom(0));
+    for i in 3..5 {
+        ch0.push(i);
+    }
+    ch0.emit_signal(SignalKind::Custom(1));
+    for i in 5..9 {
+        ch0.push(i);
+    }
+
+    // middle node: pass-through that FORWARDS signals
+    struct Fwd;
+    impl NodeLogic for Fwd {
+        type In = u64;
+        type Out = u64;
+        fn run(
+            &mut self,
+            items: &[u64],
+            _p: Option<&ParentRef>,
+            out: &mut Emitter<'_, u64>,
+        ) -> anyhow::Result<()> {
+            for &i in items {
+                out.push(i);
+            }
+            Ok(())
+        }
+    }
+    let ch1: Rc<Channel<u64>> = Channel::new(4, 4); // tight queues
+    let mut mid = Node::new("mid", 3, ch0, Output::Chan(ch1.clone()), Fwd);
+    let (mut last, state) = recorder_node(ch1, 2);
+
+    // drive both nodes in an arbitrary interleaving
+    let mut progress = true;
+    while progress {
+        progress = false;
+        if mid.fireable() {
+            mid.fire().unwrap();
+            progress = true;
+        }
+        if last.fireable() {
+            last.fire().unwrap();
+            progress = true;
+        }
+    }
+    let st = state.borrow();
+    assert_eq!(st.consumed, 9);
+    assert_eq!(st.deliveries, vec![(0, 3), (1, 5)]);
+}

@@ -1,0 +1,251 @@
+//! Enumeration/aggregation integration: the paper's §4 abstraction over
+//! richer composites and nesting-adjacent scenarios.
+
+use std::rc::Rc;
+
+use regatta::coordinator::aggregate::{Aggregator, FilterMapLogic};
+use regatta::coordinator::enumerate::{Blob, Composite};
+use regatta::coordinator::node::Emitter;
+use regatta::coordinator::signal::parent_as;
+use regatta::coordinator::topology::PipelineBuilder;
+
+/// A graph vertex with its adjacency list — the intro's "stream of edges
+/// grouped by their source vertex".
+#[derive(Debug, Clone)]
+struct Vertex {
+    id: u64,
+    edges: Vec<(u64, f32)>, // (dst, weight)
+}
+
+impl Composite for Vertex {
+    fn count(&self) -> usize {
+        self.edges.len()
+    }
+}
+
+#[test]
+fn custom_composites_enumerate_like_blobs() {
+    let mut b = PipelineBuilder::new(4).queue_caps(64, 32);
+    let src = b.source::<Vertex>();
+    let elems = b.enumerate("edges", &src);
+    let degrees = b.sink(
+        "degree",
+        &elems,
+        Aggregator::new(
+            (0u64, 0.0f64),
+            |acc: &mut (u64, f64), idxs: &[u32], parent| {
+                let v = parent_as::<Vertex>(parent.unwrap()).unwrap();
+                acc.0 += idxs.len() as u64;
+                acc.1 += idxs.iter().map(|&i| v.edges[i as usize].1 as f64).sum::<f64>();
+                Ok(())
+            },
+            |acc: &mut (u64, f64), p| {
+                let v = parent_as::<Vertex>(p).unwrap();
+                Ok(Some((v.id, acc.0, acc.1)))
+            },
+        ),
+    );
+    src.push(Vertex {
+        id: 0,
+        edges: vec![(1, 0.5), (2, 1.5)],
+    });
+    src.push(Vertex { id: 1, edges: vec![] });
+    src.push(Vertex {
+        id: 2,
+        edges: vec![(0, 2.0), (1, 3.0), (3, 4.0), (4, 5.0), (5, 6.0)],
+    });
+    let mut pipe = b.build();
+    pipe.run().unwrap();
+    let got = degrees.borrow().clone();
+    assert_eq!(got[0], (0, 2, 2.0));
+    assert_eq!(got[1], (1, 0, 0.0));
+    assert_eq!(got[2], (2, 5, 20.0));
+}
+
+/// Sequential re-enumeration: aggregate closes the first region scope;
+/// a second enumerator downstream opens a new one (the legal alternative
+/// to nesting, which is rejected).
+#[test]
+fn aggregate_then_reenumerate() {
+    let mut b = PipelineBuilder::new(4).queue_caps(64, 32);
+    let src = b.source::<Blob>();
+    let elems = b.enumerate("enum1", &src);
+    // aggregate: per blob, a new blob holding the doubled elements —
+    // composite-to-composite
+    let rebuilt = b.node(
+        "rebuild",
+        &elems,
+        Aggregator::new(
+            Vec::<f32>::new(),
+            |acc: &mut Vec<f32>, idxs: &[u32], parent| {
+                let blob = parent_as::<Blob>(parent.unwrap()).unwrap();
+                acc.extend(idxs.iter().map(|&i| 2.0 * blob.get(i)));
+                Ok(())
+            },
+            |acc: &mut Vec<f32>, p| {
+                let blob = parent_as::<Blob>(p).unwrap();
+                Ok(Some(Blob::from_vec(blob.id + 100, std::mem::take(acc))))
+            },
+        ),
+    );
+    let elems2 = b.enumerate("enum2", &rebuilt);
+    let sums = b.sink(
+        "sum",
+        &elems2,
+        Aggregator::new(
+            0.0f64,
+            |acc: &mut f64, idxs: &[u32], parent| {
+                let blob = parent_as::<Blob>(parent.unwrap()).unwrap();
+                *acc += idxs.iter().map(|&i| blob.get(i) as f64).sum::<f64>();
+                Ok(())
+            },
+            |acc: &mut f64, p| {
+                let blob = parent_as::<Blob>(p).unwrap();
+                Ok(Some((blob.id, *acc)))
+            },
+        ),
+    );
+    src.push(Blob::from_vec(0, vec![1.0, 2.0, 3.0]));
+    src.push(Blob::from_vec(1, vec![10.0]));
+    let mut pipe = b.build();
+    pipe.run().unwrap();
+    let got = sums.borrow().clone();
+    assert_eq!(got, vec![(100, 12.0), (101, 20.0)]);
+}
+
+/// Nested enumeration is rejected loudly, not silently mis-executed.
+#[test]
+fn nested_enumeration_is_rejected() {
+    #[derive(Debug, Clone)]
+    struct Outer(Vec<Blob>);
+    impl Composite for Outer {
+        fn count(&self) -> usize {
+            self.0.len()
+        }
+    }
+    let mut b = PipelineBuilder::new(4).queue_caps(64, 32);
+    let src = b.source::<Outer>();
+    let outer_elems = b.enumerate("outer", &src);
+    // a node that converts outer indices back into Blobs IN-REGION
+    // (forwarding region signals), feeding a second enumerator: illegal
+    let inner_blobs = b.node(
+        "to_blob",
+        &outer_elems,
+        FilterMapLogic::new(1, |idxs: &[u32], parent, out: &mut Emitter<'_, Blob>| {
+            let outer = parent_as::<Outer>(parent.unwrap()).unwrap();
+            for &i in idxs {
+                out.push(outer.0[i as usize].clone());
+            }
+            Ok(())
+        }),
+    );
+    let inner_elems = b.enumerate("inner", &inner_blobs);
+    let _sink = b.sink(
+        "sum",
+        &inner_elems,
+        Aggregator::new(
+            0u64,
+            |acc: &mut u64, items: &[u32], _| {
+                *acc += items.len() as u64;
+                Ok(())
+            },
+            |acc: &mut u64, _| Ok(Some(*acc)),
+        ),
+    );
+    src.push(Outer(vec![Blob::from_vec(0, vec![1.0])]));
+    let mut pipe = b.build();
+    let err = pipe.run().unwrap_err();
+    assert!(
+        err.to_string().contains("nested enumeration"),
+        "unexpected error: {err}"
+    );
+}
+
+/// Region context with zero-element and single-element extremes mixed in
+/// one stream, at width 1 (fully serialized SIMD degenerate case).
+#[test]
+fn degenerate_widths_and_regions() {
+    let mut b = PipelineBuilder::new(1).queue_caps(8, 8);
+    let src = b.source::<Blob>();
+    let elems = b.enumerate("enum", &src);
+    let counts = b.sink(
+        "n",
+        &elems,
+        Aggregator::new(
+            0u64,
+            |acc: &mut u64, items: &[u32], _| {
+                *acc += items.len() as u64;
+                Ok(())
+            },
+            |acc: &mut u64, _| Ok(Some(*acc)),
+        ),
+    );
+    for (id, size) in [(0u64, 0usize), (1, 1), (2, 0), (3, 5), (4, 0)] {
+        src.push(Blob::from_vec(id, vec![1.0; size]));
+    }
+    let mut pipe = b.build();
+    pipe.run().unwrap();
+    assert_eq!(*counts.borrow(), vec![0, 1, 0, 5, 0]);
+    // width 1: every non-empty ensemble is "full"
+    let m = pipe.metrics();
+    assert_eq!(m.node("n").unwrap().full_fraction(), 1.0);
+}
+
+/// Tree topology (paper Fig. 1b): enumerate, broadcast the element stream
+/// to two differently-behaving children, aggregate each — both children
+/// observe the same precise region boundaries.
+#[test]
+fn tree_topology_broadcast_preserves_regions() {
+    let mut b = PipelineBuilder::new(4).queue_caps(64, 32);
+    let src = b.source::<Blob>();
+    let elems = b.enumerate("enum", &src);
+    let kids = b.broadcast("tee", &elems, 2);
+
+    // child A: per-blob element count
+    let counts = b.sink(
+        "count",
+        &kids[0],
+        Aggregator::new(
+            0u64,
+            |acc: &mut u64, items: &[u32], _| {
+                *acc += items.len() as u64;
+                Ok(())
+            },
+            |acc: &mut u64, p| {
+                let blob = parent_as::<Blob>(p).unwrap();
+                Ok(Some((blob.id, *acc)))
+            },
+        ),
+    );
+    // child B: per-blob sum of values (uses the parent through its copy
+    // of the region signals)
+    let sums = b.sink(
+        "sum",
+        &kids[1],
+        Aggregator::new(
+            0.0f64,
+            |acc: &mut f64, idxs: &[u32], parent| {
+                let blob = parent_as::<Blob>(parent.unwrap()).unwrap();
+                *acc += idxs.iter().map(|&i| blob.get(i) as f64).sum::<f64>();
+                Ok(())
+            },
+            |acc: &mut f64, p| {
+                let blob = parent_as::<Blob>(p).unwrap();
+                Ok(Some((blob.id, *acc)))
+            },
+        ),
+    );
+
+    src.push(Blob::from_vec(0, vec![1.0, 2.0, 3.0]));
+    src.push(Blob::from_vec(1, vec![]));
+    src.push(Blob::from_vec(2, (0..11).map(|i| i as f32).collect()));
+    let mut pipe = b.build();
+    pipe.run().unwrap();
+
+    assert_eq!(*counts.borrow(), vec![(0, 3), (1, 0), (2, 11)]);
+    let s = sums.borrow().clone();
+    assert_eq!(s.len(), 3);
+    assert!((s[0].1 - 6.0).abs() < 1e-9);
+    assert_eq!(s[1], (1, 0.0));
+    assert!((s[2].1 - 55.0).abs() < 1e-9);
+}

@@ -1,0 +1,186 @@
+//! Runtime integration: AOT artifacts → PJRT → numbers.
+//!
+//! Every kernel is loaded from `artifacts/` (requires `make artifacts`),
+//! executed through the XLA backend, and checked against the native Rust
+//! mirror — which pytest has already checked against the Pallas kernels,
+//! closing the three-way equivalence loop.
+
+use std::rc::Rc;
+
+use regatta::runtime::kernels::{Backend, KernelSet};
+use regatta::runtime::{native, ArtifactStore, Engine, KernelName};
+use regatta::util::prng::Prng;
+
+fn engine() -> Engine {
+    let store = ArtifactStore::discover().expect("run `make artifacts` first");
+    Engine::new(store).expect("PJRT CPU client")
+}
+
+fn xla_set(engine: &Engine, width: usize) -> Rc<KernelSet> {
+    Rc::new(KernelSet::xla(engine, width).expect("compile kernels"))
+}
+
+fn rand_ensemble(rng: &mut Prng, w: usize) -> (Vec<f32>, Vec<i32>) {
+    let vals = (0..w).map(|_| rng.range_f32(-10.0, 10.0)).collect();
+    let mask = (0..w).map(|_| i32::from(rng.chance(0.7))).collect();
+    (vals, mask)
+}
+
+#[test]
+fn manifest_lists_expected_widths_and_kernels() {
+    let store = ArtifactStore::discover().unwrap();
+    let m = store.manifest();
+    assert!(m.widths.contains(&128), "widths {:?}", m.widths);
+    assert!(m.widths.contains(&32));
+    assert_eq!(m.window_len, native::WINDOW_LEN);
+    assert!((m.scale as f32 - native::SCALE).abs() < 1e-6);
+    for k in KernelName::all() {
+        assert!(
+            m.entries.iter().any(|e| e == k.stem()),
+            "missing {}",
+            k.stem()
+        );
+        store.path_for(k, 128).unwrap();
+    }
+}
+
+#[test]
+fn missing_width_is_a_clean_error() {
+    let store = ArtifactStore::discover().unwrap();
+    let err = store.path_for(KernelName::SumRegion, 999).unwrap_err();
+    assert!(err.to_string().contains("999"), "{err}");
+}
+
+#[test]
+fn filter_scale_xla_matches_native() {
+    let eng = engine();
+    let ks = xla_set(&eng, 32);
+    assert_eq!(ks.backend(), Backend::Xla);
+    let mut rng = Prng::new(1);
+    for _ in 0..5 {
+        let (vals, mask) = rand_ensemble(&mut rng, 32);
+        let (gv, gm) = ks.filter_scale(&vals, &mask, 0.5).unwrap();
+        let (ev, em) = native::filter_scale(&vals, &mask, 0.5);
+        assert_eq!(gm, em);
+        for (a, b) in gv.iter().zip(&ev) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn sum_kernels_xla_match_native() {
+    let eng = engine();
+    let ks = xla_set(&eng, 32);
+    let mut rng = Prng::new(2);
+    for _ in 0..5 {
+        let (vals, mask) = rand_ensemble(&mut rng, 32);
+        let (gs, gc) = ks.masked_sum(&vals, &mask).unwrap();
+        let (es, ec) = native::masked_sum(&vals, &mask);
+        assert_eq!(gc, ec);
+        assert!((gs - es).abs() < 1e-3, "{gs} vs {es}");
+
+        let (gs, gk) = ks.sum_region(&vals, &mask, -1.0).unwrap();
+        let (es, ek) = native::sum_region(&vals, &mask, -1.0);
+        assert_eq!(gk, ek);
+        assert!((gs - es).abs() < 1e-3, "{gs} vs {es}");
+    }
+}
+
+#[test]
+fn segmented_sum_xla_matches_native() {
+    let eng = engine();
+    let ks = xla_set(&eng, 32);
+    let mut rng = Prng::new(3);
+    for _ in 0..5 {
+        let (vals, mask) = rand_ensemble(&mut rng, 32);
+        let seg: Vec<i32> = (0..32).map(|_| rng.below(32) as i32).collect();
+        let (gs, gc) = ks.segmented_sum(&vals, &seg, &mask).unwrap();
+        let (es, ec) = native::segmented_sum(&vals, &seg, &mask);
+        assert_eq!(gc, ec);
+        for (a, b) in gs.iter().zip(&es) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn char_kernels_xla_match_native() {
+    let eng = engine();
+    let ks = xla_set(&eng, 32);
+    let text = b"T7,{12.5,-3.9},{1,2},filler {x} {3.25,4}";
+    let chars: Vec<i32> = text.iter().take(32).map(|&b| b as i32).collect();
+    let mask = vec![1i32; 32];
+    let (gf, gb) = ks.char_classify(&chars, &mask).unwrap();
+    let (ef, eb) = native::char_classify(&chars, &mask);
+    assert_eq!(gf, ef);
+    assert_eq!(gb, eb);
+
+    let tags: Vec<i32> = (0..32).map(|i| i / 8).collect();
+    let (tf, tb, tc) = ks.tagged_char_stage(&chars, &tags, &mask).unwrap();
+    let ksn = KernelSet::native(32);
+    let (nf, nb, nc) = ksn.tagged_char_stage(&chars, &tags, &mask).unwrap();
+    assert_eq!(tf, nf);
+    assert_eq!(tb, nb);
+    assert_eq!(tc, nc);
+}
+
+#[test]
+fn coord_parse_xla_matches_native() {
+    let eng = engine();
+    let ks = xla_set(&eng, 32);
+    let wl = ks.window_len();
+    let cases = [
+        "{12.5,-3.25}",
+        "{1,2}",
+        "{-116.52,39.93}xx",
+        "{bad}",
+        "{1.2,}",
+        "{1,2",
+        "{999999,0.125}",
+        "{-0.5,-0.5}",
+    ];
+    let mut windows = vec![0i32; 32 * wl];
+    for i in 0..32 {
+        let s = cases[i % cases.len()].as_bytes();
+        for (k, &b) in s.iter().take(wl).enumerate() {
+            windows[i * wl + k] = b as i32;
+        }
+    }
+    let mask = vec![1i32; 32];
+    let (gx, gy, gok) = ks.coord_parse(&windows, &mask).unwrap();
+    let (ex, ey, eok) = native::coord_parse(&windows, wl, &mask);
+    assert_eq!(gok, eok);
+    for i in 0..32 {
+        assert!((gx[i] - ex[i]).abs() < 1e-5, "lane {i}: {} vs {}", gx[i], ex[i]);
+        assert!((gy[i] - ey[i]).abs() < 1e-5, "lane {i}: {} vs {}", gy[i], ey[i]);
+    }
+}
+
+#[test]
+fn executables_are_cached_and_counted() {
+    let eng = engine();
+    let k1 = eng.kernel(KernelName::SumRegion, 32).unwrap();
+    let k2 = eng.kernel(KernelName::SumRegion, 32).unwrap();
+    assert!(Rc::ptr_eq(&k1, &k2), "second load must hit the cache");
+    let ks = xla_set(&eng, 32);
+    let before = eng.total_invocations();
+    let vals = vec![1.0f32; 32];
+    let mask = vec![1i32; 32];
+    ks.sum_region(&vals, &mask, 0.0).unwrap();
+    ks.sum_region(&vals, &mask, 0.0).unwrap();
+    assert_eq!(eng.total_invocations(), before + 2);
+}
+
+#[test]
+fn multiple_widths_coexist() {
+    let eng = engine();
+    for &w in &[32usize, 64, 128] {
+        let ks = xla_set(&eng, w);
+        let vals = vec![2.0f32; w];
+        let mask = vec![1i32; w];
+        let (s, c) = ks.sum_region(&vals, &mask, 0.0).unwrap();
+        assert_eq!(c as usize, w);
+        assert!((s - native::SCALE * 2.0 * w as f32).abs() < 1e-2);
+    }
+}
