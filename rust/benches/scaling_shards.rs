@@ -1,0 +1,48 @@
+//! Shard-scaling harness (L3.5 baseline curve): sum-app throughput vs
+//! worker count × region size. Region size sets the region-boundary
+//! frequency — the Fig. 6/7 axis — now crossed with a scaling dimension.
+//! Run: `cargo bench --bench scaling_shards`
+//!
+//! Env knobs: `REGATTA_BENCH_ITEMS` (stream size), `REGATTA_BENCH_BACKEND`
+//! (`native`|`xla`; default native so the harness runs without AOT
+//! artifacts), `REGATTA_BENCH_WORKERS` (comma list), plus the usual
+//! `REGATTA_BENCH_ITERS` / `REGATTA_BENCH_WARMUP`.
+
+use regatta::bench::figures::{scaling_shards, BackendSel, SweepConfig};
+
+fn main() {
+    let mut cfg = SweepConfig {
+        backend: BackendSel::Native,
+        ..SweepConfig::default()
+    };
+    if let Ok(n) = std::env::var("REGATTA_BENCH_ITEMS") {
+        cfg.items = n.parse().expect("REGATTA_BENCH_ITEMS");
+    }
+    if let Ok(b) = std::env::var("REGATTA_BENCH_BACKEND") {
+        cfg.backend = b.parse().expect("REGATTA_BENCH_BACKEND");
+    }
+    let workers: Vec<usize> = match std::env::var("REGATTA_BENCH_WORKERS") {
+        Ok(s) => s
+            .split(',')
+            .map(|p| p.trim().parse().expect("REGATTA_BENCH_WORKERS"))
+            .collect(),
+        Err(_) => vec![1, 2, 4, 8],
+    };
+    // small regions = frequent boundaries (occupancy-bound pipelines);
+    // large regions = rare boundaries (coarse shards, planner stress)
+    let w = cfg.width;
+    let regions = [w / 8, w, 8 * w];
+    let rows = scaling_shards(&cfg, &workers, &regions).expect("scaling sweep");
+
+    // shape check: at every region size, max workers should not be slower
+    // than 1 worker (speedup >= 1 within noise)
+    for &region in &regions {
+        let series: Vec<_> = rows.iter().filter(|r| r.region == region).collect();
+        if let (Some(first), Some(last)) = (series.first(), series.last()) {
+            println!(
+                "\nshape check: region {region}: {}w {:.4}s -> {}w {:.4}s ({:.2}x)",
+                first.workers, first.seconds, last.workers, last.seconds, last.speedup
+            );
+        }
+    }
+}

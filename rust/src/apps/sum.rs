@@ -30,6 +30,10 @@ use anyhow::Result;
 use crate::coordinator::aggregate::{Aggregator, FilterMapLogic};
 use crate::coordinator::enumerate::Blob;
 use crate::coordinator::metrics::PipelineMetrics;
+use crate::exec::{
+    ExecConfig, KernelSpawn, PipelineFactory, ShardOutput, ShardWorker, ShardedRunner,
+    WorkerKernels,
+};
 use crate::coordinator::node::{Emitter, NodeLogic};
 use crate::coordinator::signal::{parent_as, ParentRef};
 use crate::coordinator::scheduler::Policy;
@@ -256,6 +260,38 @@ impl SumApp {
         Ok((outputs, pipe.metrics()))
     }
 
+    /// Process the stream sharded across `workers` OS threads (L3.5).
+    ///
+    /// The stream is partitioned at region boundaries, each worker runs a
+    /// fresh pipeline on this app's configuration and backend, and outputs
+    /// come back in stream order. For the enumerated modes the result is
+    /// bit-identical to [`SumApp::run`] at any worker count. The tagged
+    /// mode matches the single run's tag-sorted, coalesced output (partial
+    /// sums of a tag that spans shards are folded here), but values may
+    /// differ in float rounding — sharding changes how lanes pack into
+    /// ensembles. See [`crate::exec`].
+    pub fn run_sharded(&self, blobs: &[Blob], workers: usize) -> Result<SumReport> {
+        self.run_sharded_with(blobs, &ExecConfig::new(workers))
+    }
+
+    /// [`SumApp::run_sharded`] with full executor configuration.
+    pub fn run_sharded_with(&self, blobs: &[Blob], exec: &ExecConfig) -> Result<SumReport> {
+        if exec.workers <= 1 && exec.shard.shards_per_worker <= 1 {
+            // One worker, one shard, run inline: identical to a plain run,
+            // so reuse this app's kernel set instead of spawning a fresh
+            // engine (on the XLA backend that is a full PJRT spin-up).
+            return self.run(blobs);
+        }
+        let factory = SumFactory::new(self.cfg, KernelSpawn::from_backend(self.kernels.backend()));
+        let report = ShardedRunner::new(exec.clone()).run(&factory, blobs)?;
+        Ok(SumReport {
+            outputs: finish_sharded_outputs(self.cfg.mode, report.outputs),
+            metrics: report.metrics,
+            elapsed: report.elapsed,
+            invocations: report.invocations,
+        })
+    }
+
     fn run_tagged(&self, blobs: &[Blob]) -> Result<(Vec<(u64, f64)>, PipelineMetrics)> {
         let cfg = self.cfg;
         let ks = self.kernels.clone();
@@ -373,6 +409,89 @@ impl NodeLogic for TaggedSumLogic {
     }
 }
 
+/// [`PipelineFactory`] for the sum app: one fresh [`SumApp`] pipeline per
+/// worker thread, shards balanced by region element count.
+pub struct SumFactory {
+    cfg: SumConfig,
+    spawn: KernelSpawn,
+}
+
+impl SumFactory {
+    pub fn new(cfg: SumConfig, spawn: KernelSpawn) -> SumFactory {
+        SumFactory { cfg, spawn }
+    }
+}
+
+/// A worker-private sum pipeline (keeps its kernel engine alive).
+pub struct SumShardWorker {
+    app: SumApp,
+    _kernels: WorkerKernels,
+}
+
+impl PipelineFactory for SumFactory {
+    type In = Blob;
+    type Out = (u64, f64);
+    type Worker = SumShardWorker;
+
+    fn make_worker(&self, _worker_id: usize) -> Result<SumShardWorker> {
+        let kernels = self.spawn.spawn(self.cfg.width)?;
+        let app = SumApp::new(self.cfg, kernels.kernels.clone());
+        Ok(SumShardWorker {
+            app,
+            _kernels: kernels,
+        })
+    }
+
+    fn weight(&self, blob: &Blob) -> usize {
+        // Empty regions still cost a firing; weigh them 1 so the planner
+        // never builds a zero-weight shard.
+        blob.elems.len().max(1)
+    }
+}
+
+impl ShardWorker for SumShardWorker {
+    type In = Blob;
+    type Out = (u64, f64);
+
+    fn run_shard(&mut self, shard: &[Blob]) -> Result<ShardOutput<(u64, f64)>> {
+        let report = self.app.run(shard)?;
+        Ok(ShardOutput {
+            outputs: report.outputs,
+            metrics: report.metrics,
+            invocations: report.invocations,
+        })
+    }
+}
+
+/// The mode-appropriate post-merge fold for sharded outputs. Enumerated
+/// outputs are already one-per-region in stream order; the single tagged
+/// run emits one globally tag-sorted entry per tag, so per-shard tagged
+/// entries must be re-sorted and folded. Public (and used by
+/// [`SumApp::run_sharded_with`]) so callers driving
+/// [`crate::exec::ShardedRunner`] directly — the CLI, benches — apply the
+/// identical fold.
+pub fn finish_sharded_outputs(mode: SumMode, outputs: Vec<(u64, f64)>) -> Vec<(u64, f64)> {
+    match mode {
+        SumMode::Enumerated => outputs,
+        SumMode::Tagged => coalesce_tag_sums(outputs),
+    }
+}
+
+/// Fold per-shard tagged outputs into the single-run shape: globally
+/// tag-sorted, one entry per tag (stable sort keeps equal-tag partials in
+/// shard order before they fold).
+fn coalesce_tag_sums(mut outputs: Vec<(u64, f64)>) -> Vec<(u64, f64)> {
+    outputs.sort_by_key(|&(tag, _)| tag);
+    let mut folded: Vec<(u64, f64)> = Vec::with_capacity(outputs.len());
+    for (tag, sum) in outputs {
+        match folded.last_mut() {
+            Some((t, s)) if *t == tag => *s += sum,
+            _ => folded.push((tag, sum)),
+        }
+    }
+    folded
+}
+
 /// f64 reference sums (independent of ensemble grouping) for validation.
 pub fn reference_sums(blobs: &[Blob], threshold: f32) -> Vec<(u64, f64)> {
     blobs
@@ -461,6 +580,46 @@ mod tests {
         // and the invocation count (SIMD cost) reflects it
         assert!(tagged.metrics.node("tagsum").unwrap().ensembles
             < enumerated.metrics.node("sum").unwrap().ensembles);
+    }
+
+    #[test]
+    fn sharded_tagged_coalesces_nonmonotonic_region_ids() {
+        // Two regions share id 7 and ids arrive out of order: the single
+        // tagged run folds them into one tag-sorted entry; the sharded run
+        // must match (shape exactly, values within rounding).
+        let blobs = vec![
+            Blob::from_vec(7, vec![1.0, 2.0, 3.0]),
+            Blob::from_vec(3, vec![4.0; 10]),
+            Blob::from_vec(7, vec![5.0; 6]),
+        ];
+        let app = native_app(SumMode::Tagged, SumShape::Fused, 4);
+        let single = app.run(&blobs).unwrap();
+        assert_eq!(single.outputs.len(), 2); // tags 3 and 7
+        for workers in 1..=3 {
+            let sharded = app.run_sharded(&blobs, workers).unwrap();
+            assert_eq!(sharded.outputs.len(), 2, "workers {workers}");
+            for ((gi, gv), (wi, wv)) in sharded.outputs.iter().zip(&single.outputs) {
+                assert_eq!(gi, wi, "workers {workers}");
+                assert!(
+                    (gv - wv).abs() <= 1e-3 * (1.0 + wv.abs()),
+                    "workers {workers}: tag {gi}: {gv} vs {wv}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_run_is_bitwise_identical() {
+        let blobs = gen_blobs(1200, RegionSpec::Uniform { max: 24 }, 6);
+        let app = native_app(SumMode::Enumerated, SumShape::Fused, 8);
+        let single = app.run(&blobs).unwrap();
+        let sharded = app.run_sharded(&blobs, 4).unwrap();
+        assert_eq!(sharded.outputs.len(), single.outputs.len());
+        for ((gi, gv), (wi, wv)) in sharded.outputs.iter().zip(&single.outputs) {
+            assert_eq!(gi, wi);
+            assert_eq!(gv.to_bits(), wv.to_bits());
+        }
+        assert_eq!(sharded.invocations, single.invocations);
     }
 
     #[test]

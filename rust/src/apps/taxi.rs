@@ -26,6 +26,10 @@ use anyhow::Result;
 
 use crate::coordinator::aggregate::MapLogic;
 use crate::coordinator::metrics::PipelineMetrics;
+use crate::exec::{
+    ExecConfig, KernelSpawn, PipelineFactory, ShardOutput, ShardWorker, ShardedRunner,
+    WorkerKernels,
+};
 use crate::coordinator::node::{Emitter, NodeLogic};
 use crate::coordinator::scheduler::Policy;
 use crate::coordinator::signal::{parent_as, ParentRef};
@@ -251,10 +255,107 @@ impl TaxiApp {
         Ok((pairs, pipe.metrics()))
     }
 
+    /// Process the workload sharded across `workers` OS threads (L3.5).
+    ///
+    /// Lines are the regions here: shards cut between lines (balanced by
+    /// character count), each worker parses its shard with a fresh
+    /// pipeline against the shared text buffer, and pairs come back in
+    /// stream order — bit-identical to [`TaxiApp::run`] at any worker
+    /// count (each candidate's window parse is independent of ensemble
+    /// packing). See [`crate::exec`].
+    pub fn run_sharded(&self, w: &TaxiWorkload, workers: usize) -> Result<TaxiReport> {
+        self.run_sharded_with(w, &ExecConfig::new(workers))
+    }
+
+    /// [`TaxiApp::run_sharded`] with full executor configuration.
+    pub fn run_sharded_with(&self, w: &TaxiWorkload, exec: &ExecConfig) -> Result<TaxiReport> {
+        if exec.workers <= 1 && exec.shard.shards_per_worker <= 1 {
+            // One worker, one shard, run inline: identical to a plain run,
+            // so reuse this app's kernel set instead of spawning a fresh
+            // engine (on the XLA backend that is a full PJRT spin-up).
+            return self.run(w);
+        }
+        let factory = TaxiFactory::new(
+            self.cfg,
+            KernelSpawn::from_backend(self.kernels.backend()),
+            w.text.clone(),
+        );
+        let report = ShardedRunner::new(exec.clone()).run(&factory, &w.lines)?;
+        Ok(TaxiReport {
+            pairs: report.outputs,
+            metrics: report.metrics,
+            elapsed: report.elapsed,
+            invocations: report.invocations,
+        })
+    }
+
     fn feed_lines(src: &Rc<crate::coordinator::channel::Channel<TaxiLine>>, lines: &[TaxiLine]) {
         for line in lines {
             src.push(line.clone());
         }
+    }
+}
+
+/// [`PipelineFactory`] for the taxi app: one fresh [`TaxiApp`] pipeline
+/// per worker thread over the shared text buffer, shards balanced by line
+/// length.
+pub struct TaxiFactory {
+    cfg: TaxiConfig,
+    spawn: KernelSpawn,
+    text: Arc<Vec<u8>>,
+}
+
+impl TaxiFactory {
+    pub fn new(cfg: TaxiConfig, spawn: KernelSpawn, text: Arc<Vec<u8>>) -> TaxiFactory {
+        TaxiFactory { cfg, spawn, text }
+    }
+}
+
+/// A worker-private taxi pipeline (keeps its kernel engine alive).
+pub struct TaxiShardWorker {
+    app: TaxiApp,
+    text: Arc<Vec<u8>>,
+    _kernels: WorkerKernels,
+}
+
+impl PipelineFactory for TaxiFactory {
+    type In = TaxiLine;
+    type Out = TaxiPair;
+    type Worker = TaxiShardWorker;
+
+    fn make_worker(&self, _worker_id: usize) -> Result<TaxiShardWorker> {
+        let kernels = self.spawn.spawn(self.cfg.width)?;
+        let app = TaxiApp::new(self.cfg, kernels.kernels.clone());
+        Ok(TaxiShardWorker {
+            app,
+            text: self.text.clone(),
+            _kernels: kernels,
+        })
+    }
+
+    fn weight(&self, line: &TaxiLine) -> usize {
+        line.len.max(1)
+    }
+}
+
+impl ShardWorker for TaxiShardWorker {
+    type In = TaxiLine;
+    type Out = TaxiPair;
+
+    fn run_shard(&mut self, shard: &[TaxiLine]) -> Result<ShardOutput<TaxiPair>> {
+        // A shard-local view of the workload; `total_pairs` is ground
+        // truth for whole-workload validation and is not used by `run`.
+        let w = TaxiWorkload {
+            text: self.text.clone(),
+            lines: shard.to_vec(),
+            total_pairs: 0,
+        };
+        let report = self.app.run(&w)?;
+        Ok(ShardOutput {
+            outputs: report.pairs,
+            metrics: report.metrics,
+            invocations: report.invocations,
+        })
     }
 }
 
@@ -720,6 +821,29 @@ mod tests {
             "tagged stage1 occupancy {}",
             s1.occupancy()
         );
+    }
+
+    #[test]
+    fn sharded_run_is_bitwise_identical() {
+        let w = small_workload();
+        let app = TaxiApp::new(
+            TaxiConfig {
+                width: 8,
+                variant: TaxiVariant::Hybrid,
+                data_cap: 512,
+                signal_cap: 128,
+                policy: Policy::GreedyOccupancy,
+            },
+            Rc::new(KernelSet::native(8)),
+        );
+        let single = app.run(&w).unwrap();
+        let sharded = app.run_sharded(&w, 3).unwrap();
+        assert_eq!(sharded.pairs.len(), single.pairs.len());
+        for (a, b) in sharded.pairs.iter().zip(&single.pairs) {
+            assert_eq!(a.tag, b.tag);
+            assert_eq!(a.x.to_bits(), b.x.to_bits());
+            assert_eq!(a.y.to_bits(), b.y.to_bits());
+        }
     }
 
     #[test]

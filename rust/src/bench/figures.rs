@@ -10,9 +10,10 @@ use std::rc::Rc;
 
 use anyhow::Result;
 
-use crate::apps::sum::{SumApp, SumConfig, SumMode, SumShape};
+use crate::apps::sum::{SumApp, SumConfig, SumFactory, SumMode, SumShape};
 use crate::apps::taxi::{TaxiApp, TaxiConfig, TaxiVariant};
 use crate::coordinator::scheduler::Policy;
+use crate::exec::{ExecConfig, KernelSpawn, ShardPolicy, ShardedRunner};
 use crate::runtime::kernels::KernelSet;
 use crate::runtime::{ArtifactStore, Engine};
 use crate::util::stats::fmt_duration;
@@ -37,6 +38,15 @@ impl std::str::FromStr for BackendSel {
             "xla" => Ok(BackendSel::Xla),
             "native" => Ok(BackendSel::Native),
             other => anyhow::bail!("unknown backend {other:?} (use xla|native)"),
+        }
+    }
+}
+
+impl From<BackendSel> for KernelSpawn {
+    fn from(sel: BackendSel) -> KernelSpawn {
+        match sel {
+            BackendSel::Native => KernelSpawn::Native,
+            BackendSel::Xla => KernelSpawn::Xla,
         }
     }
 }
@@ -287,6 +297,109 @@ pub fn fig8(cfg: &SweepConfig, base_lines: usize, scales: &[usize]) -> Result<Ve
         ]);
     }
     println!("== Fig 8: taxi app, three context strategies ==");
+    t.print();
+    Ok(rows)
+}
+
+/// One measured row of the shard-scaling sweep.
+#[derive(Debug, Clone)]
+pub struct ScaleRow {
+    pub region: usize,
+    pub workers: usize,
+    pub shards: usize,
+    pub seconds: f64,
+    pub throughput: f64, // items/sec
+    /// Speedup over the 1-worker row at the same region size.
+    pub speedup: f64,
+    /// Busy-time utilization of the workers that ran.
+    pub utilization: f64,
+}
+
+/// Shard-scaling sweep (the L3.5 baseline curve): sum-app throughput vs
+/// worker count × region size. Region size is the paper's Fig. 6/7 axis —
+/// it sets the region-boundary frequency, and with it both per-pipeline
+/// occupancy *and* how finely the shard planner can balance the stream.
+///
+/// Each timed iteration includes per-worker pipeline construction (the
+/// runner builds workers lazily inside the run), which is the honest cost
+/// of a sharded run on the native backend. On the XLA backend it also
+/// includes per-worker engine spin-up and kernel compilation — dominant at
+/// small stream sizes — so XLA scaling curves here measure end-to-end run
+/// cost, not steady-state pipeline throughput (a per-worker engine cache
+/// is a ROADMAP item).
+pub fn scaling_shards(
+    cfg: &SweepConfig,
+    workers_axis: &[usize],
+    region_sizes: &[usize],
+) -> Result<Vec<ScaleRow>> {
+    let spawn = KernelSpawn::from(cfg.backend);
+    let mut rows = Vec::new();
+    for &region in region_sizes {
+        let blobs = gen_blobs(cfg.items, RegionSpec::Fixed { size: region }, cfg.seed);
+        let factory = SumFactory::new(
+            SumConfig {
+                width: cfg.width,
+                ..Default::default()
+            },
+            spawn,
+        );
+        let mut series = Vec::with_capacity(workers_axis.len());
+        for &workers in workers_axis {
+            // a few shards per worker gives the pool slack to balance
+            let runner = ShardedRunner::new(ExecConfig {
+                workers,
+                shard: ShardPolicy {
+                    shards_per_worker: 4,
+                    ..ShardPolicy::default()
+                },
+            });
+            let mut last = None;
+            let m = time_fn(cfg.bench, || {
+                last = Some(runner.run(&factory, &blobs).expect("sharded sum run"));
+            });
+            let report = last.unwrap();
+            anyhow::ensure!(
+                report.outputs.len() == blobs.len(),
+                "lost regions: {} of {}",
+                report.outputs.len(),
+                blobs.len()
+            );
+            series.push((workers, m.median(), report.shards, report.utilization()));
+        }
+        // speedup baseline: the 1-worker row if the axis has one, else the
+        // slowest row (so reordering the axis can't silently skew the curve)
+        let base = series
+            .iter()
+            .find(|&&(workers, ..)| workers == 1)
+            .map(|&(_, seconds, ..)| seconds)
+            .unwrap_or_else(|| series.iter().map(|&(_, s, ..)| s).fold(0.0, f64::max));
+        for (workers, seconds, shards, utilization) in series {
+            rows.push(ScaleRow {
+                region,
+                workers,
+                shards,
+                seconds,
+                throughput: cfg.items as f64 / seconds,
+                speedup: base / seconds,
+                utilization,
+            });
+        }
+    }
+    let mut t = Table::new(&[
+        "region", "workers", "shards", "time", "items/s", "speedup", "util%",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.region.to_string(),
+            r.workers.to_string(),
+            r.shards.to_string(),
+            fmt_duration(r.seconds),
+            format!("{:.2e}", r.throughput),
+            format!("{:.2}x", r.speedup),
+            format!("{:.0}", 100.0 * r.utilization),
+        ]);
+    }
+    println!("== Scaling: sharded sum app, workers × region size ==");
     t.print();
     Ok(rows)
 }

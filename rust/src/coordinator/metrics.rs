@@ -67,8 +67,10 @@ impl NodeMetrics {
     }
 
     /// Merge counters from another node instance (multi-worker runs).
+    /// Panics on width mismatch — summing histograms of different widths
+    /// would silently corrupt the occupancy statistics.
     pub fn merge(&mut self, other: &NodeMetrics) {
-        debug_assert_eq!(self.width, other.width);
+        assert_eq!(self.width, other.width, "metrics merge: width mismatch");
         self.firings += other.firings;
         self.ensembles += other.ensembles;
         self.full_ensembles += other.full_ensembles;
@@ -121,14 +123,23 @@ impl PipelineMetrics {
         self.nodes.iter().find(|(n, _)| n == name).map(|(_, m)| m)
     }
 
-    /// Merge another run's metrics (matching topology).
+    /// Merge another run's metrics. The topologies must match exactly —
+    /// same nodes, same order — which is what the sharded executor
+    /// guarantees (every worker builds the pipeline from the same
+    /// factory); a name mismatch is a bug and panics rather than folding
+    /// unrelated counters together.
     pub fn merge(&mut self, other: &PipelineMetrics) {
         if self.nodes.is_empty() {
             *self = other.clone();
             return;
         }
         assert_eq!(self.nodes.len(), other.nodes.len(), "topology mismatch");
-        for ((_, a), (_, b)) in self.nodes.iter_mut().zip(&other.nodes) {
+        for ((name_a, a), (name_b, b)) in self.nodes.iter_mut().zip(&other.nodes) {
+            assert_eq!(
+                name_a.as_str(),
+                name_b.as_str(),
+                "topology mismatch: node name/order"
+            );
             a.merge(b);
         }
         self.elapsed = self.elapsed.max(other.elapsed);
@@ -192,6 +203,46 @@ mod tests {
         assert_eq!(a.ensembles, 2);
         assert_eq!(a.items, 5);
         assert_eq!(a.firings, 3);
+    }
+
+    #[test]
+    fn pipeline_merge_folds_matching_topologies() {
+        let mk = |n: u64| {
+            let mut m = NodeMetrics::new(4);
+            for _ in 0..n {
+                m.record_ensemble(3);
+            }
+            PipelineMetrics {
+                nodes: vec![("enum".into(), NodeMetrics::new(4)), ("sum".into(), m)],
+                elapsed: n as f64,
+                idle_polls: 1,
+            }
+        };
+        let mut a = PipelineMetrics::default();
+        a.merge(&mk(2)); // empty adopts
+        a.merge(&mk(3));
+        assert_eq!(a.node("sum").unwrap().ensembles, 5);
+        assert_eq!(a.idle_polls, 2);
+        assert!((a.elapsed - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "topology mismatch")]
+    fn pipeline_merge_rejects_mismatched_names() {
+        let pm = |name: &str| PipelineMetrics {
+            nodes: vec![(name.to_string(), NodeMetrics::new(4))],
+            elapsed: 0.0,
+            idle_polls: 0,
+        };
+        let mut a = pm("sum");
+        a.merge(&pm("other"));
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn node_merge_rejects_mismatched_widths() {
+        let mut a = NodeMetrics::new(4);
+        a.merge(&NodeMetrics::new(8));
     }
 
     #[test]

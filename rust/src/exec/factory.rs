@@ -1,0 +1,134 @@
+//! How apps hand the executor a pipeline: a [`PipelineFactory`] describes
+//! how to build a fresh, fully private pipeline instance inside a worker
+//! thread, and the [`ShardWorker`] it returns runs one shard at a time.
+//!
+//! The coordinator is `Rc`-based and single-threaded by design; nothing in
+//! it is `Send`. The factory is the seam that keeps it that way: the
+//! factory itself crosses threads (`Sync`), the worker it builds never
+//! does — it is created, used and dropped inside one scoped thread.
+//! [`KernelSpawn`] plays the same role for kernel sets: PJRT client
+//! handles are thread-confined, so each worker owns its own engine
+//! (mirroring one CUDA context per SM in the paper's machine mapping).
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::PipelineMetrics;
+use crate::runtime::kernels::{Backend, KernelSet};
+use crate::runtime::{ArtifactStore, Engine};
+
+/// What one shard produced: outputs in stream order plus the shard
+/// pipeline's metrics and kernel-invocation count.
+#[derive(Debug, Clone)]
+pub struct ShardOutput<T> {
+    /// Pipeline outputs, in the shard's stream order.
+    pub outputs: Vec<T>,
+    /// Metrics of the pipeline instance that ran this shard.
+    pub metrics: PipelineMetrics,
+    /// Kernel invocations spent on this shard (the SIMD cost unit).
+    pub invocations: u64,
+}
+
+/// A per-worker pipeline instance. Not `Send`: it lives and dies inside
+/// one worker thread, and typically owns `Rc`-based coordinator state
+/// plus a thread-confined kernel engine.
+pub trait ShardWorker {
+    /// Region/composite type consumed from the shared stream.
+    type In;
+    /// Output item type.
+    type Out;
+
+    /// Run one shard (a contiguous slice of the input stream) through a
+    /// fresh-or-reused pipeline to quiescence.
+    fn run_shard(&mut self, shard: &[Self::In]) -> Result<ShardOutput<Self::Out>>;
+}
+
+/// Describes how to instantiate one pipeline per worker. Shared by
+/// reference across worker threads, so it must be `Sync`; the workers it
+/// makes need not be.
+pub trait PipelineFactory: Sync {
+    /// Region/composite type of the input stream.
+    type In: Sync;
+    /// Output item type (crosses back to the caller's thread).
+    type Out: Send;
+    /// The per-thread pipeline instance.
+    type Worker: ShardWorker<In = Self::In, Out = Self::Out>;
+
+    /// Build a fresh pipeline (and kernel engine) for worker `worker_id`.
+    /// Called lazily, inside the worker's own thread, the first time that
+    /// worker claims a shard.
+    fn make_worker(&self, worker_id: usize) -> Result<Self::Worker>;
+
+    /// Item weight of one region, used by the shard planner to balance
+    /// shards (default: every region counts 1).
+    fn weight(&self, _item: &Self::In) -> usize {
+        1
+    }
+}
+
+/// Per-thread kernel-set recipe: which backend every worker should build
+/// its private [`KernelSet`] on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelSpawn {
+    /// Pure-Rust kernel mirror — thread-safe to build anywhere.
+    Native,
+    /// AOT artifacts through PJRT — each worker creates its own engine
+    /// (client handles are thread-confined).
+    Xla,
+}
+
+/// A worker's kernel set, keeping its PJRT engine (if any) alive.
+pub struct WorkerKernels {
+    pub kernels: Rc<KernelSet>,
+    _engine: Option<Engine>,
+}
+
+impl KernelSpawn {
+    /// The spawn recipe matching an existing kernel set's backend.
+    pub fn from_backend(backend: Backend) -> KernelSpawn {
+        match backend {
+            Backend::Native => KernelSpawn::Native,
+            Backend::Xla => KernelSpawn::Xla,
+        }
+    }
+
+    /// Build a kernel set at `width` inside the calling thread.
+    pub fn spawn(self, width: usize) -> Result<WorkerKernels> {
+        match self {
+            KernelSpawn::Native => Ok(WorkerKernels {
+                kernels: Rc::new(KernelSet::native(width)),
+                _engine: None,
+            }),
+            KernelSpawn::Xla => {
+                let engine = Engine::new(ArtifactStore::discover()?)?;
+                let kernels = Rc::new(KernelSet::xla(&engine, width)?);
+                Ok(WorkerKernels {
+                    kernels,
+                    _engine: Some(engine),
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_spawn_builds_per_thread_kernels() {
+        let wk = KernelSpawn::Native.spawn(8).unwrap();
+        assert_eq!(wk.kernels.width(), 8);
+        assert_eq!(wk.kernels.backend(), Backend::Native);
+    }
+
+    #[test]
+    fn spawn_matches_backend() {
+        assert_eq!(
+            KernelSpawn::from_backend(Backend::Native),
+            KernelSpawn::Native
+        );
+        assert_eq!(KernelSpawn::from_backend(Backend::Xla), KernelSpawn::Xla);
+    }
+}

@@ -1,0 +1,190 @@
+//! Deterministic merge: reassemble per-shard outputs in original stream
+//! order and fold per-shard [`PipelineMetrics`] into one global report
+//! with a per-worker breakdown.
+//!
+//! Because shards are contiguous ranges of the region stream and the pool
+//! returns results sorted by shard index, concatenation *is* stream
+//! order — the merge involves no reordering heuristics and is independent
+//! of which worker ran what, or when. Metrics are folded in shard order
+//! too, so the global counters are identical run to run.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::metrics::PipelineMetrics;
+
+use super::pool::ShardResult;
+
+/// Aggregated execution stats for one worker of a sharded run.
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    /// Worker id (0-based).
+    pub worker: usize,
+    /// Shards this worker executed.
+    pub shards: usize,
+    /// Output items it produced.
+    pub outputs: usize,
+    /// Kernel invocations it spent.
+    pub invocations: u64,
+    /// Seconds spent actually running shards (its busy time).
+    pub busy: f64,
+    /// Its pipeline metrics, folded across its shards.
+    pub metrics: PipelineMetrics,
+}
+
+/// The merged result of a sharded run.
+#[derive(Debug, Clone)]
+pub struct ExecReport<T> {
+    /// All outputs, in original stream order.
+    pub outputs: Vec<T>,
+    /// Global pipeline metrics: every worker's counters folded together
+    /// (`elapsed` is the max pipeline-internal time, as in
+    /// [`PipelineMetrics::merge`]).
+    pub metrics: PipelineMetrics,
+    /// Total kernel invocations across workers.
+    pub invocations: u64,
+    /// Number of shards executed.
+    pub shards: usize,
+    /// Wall-clock seconds of the whole sharded run (plan + pool + merge).
+    pub elapsed: f64,
+    /// Per-worker breakdown, sorted by worker id (workers that never
+    /// claimed a shard are absent).
+    pub per_worker: Vec<WorkerStats>,
+}
+
+impl<T> ExecReport<T> {
+    /// Parallel efficiency proxy: total busy time over (wall × workers
+    /// observed). 1.0 = every worker busy the whole run.
+    pub fn utilization(&self) -> f64 {
+        if self.per_worker.is_empty() || self.elapsed <= 0.0 {
+            return 0.0;
+        }
+        let busy: f64 = self.per_worker.iter().map(|w| w.busy).sum();
+        busy / (self.elapsed * self.per_worker.len() as f64)
+    }
+
+    /// Render the per-worker breakdown (used by `--stats`).
+    pub fn worker_table(&self) -> String {
+        let mut out = String::from("worker   shards   outputs   kernel_inv   busy_s    occ%\n");
+        for w in &self.per_worker {
+            out.push_str(&format!(
+                "{:<8} {:>6}  {:>8}  {:>11}  {:>7.3}  {:>5.1}\n",
+                w.worker,
+                w.shards,
+                w.outputs,
+                w.invocations,
+                w.busy,
+                100.0 * w.metrics.occupancy(),
+            ));
+        }
+        out
+    }
+}
+
+/// Fold shard results (already in shard order) into an [`ExecReport`].
+pub fn merge_results<T>(results: Vec<ShardResult<T>>, elapsed: f64) -> ExecReport<T> {
+    let shards = results.len();
+    let mut outputs = Vec::with_capacity(results.iter().map(|r| r.outputs.len()).sum());
+    let mut metrics = PipelineMetrics::default();
+    let mut invocations = 0u64;
+    let mut per_worker: BTreeMap<usize, WorkerStats> = BTreeMap::new();
+    for r in results {
+        let n_out = r.outputs.len();
+        outputs.extend(r.outputs);
+        metrics.merge(&r.metrics);
+        invocations += r.invocations;
+        let w = per_worker.entry(r.worker).or_insert_with(|| WorkerStats {
+            worker: r.worker,
+            shards: 0,
+            outputs: 0,
+            invocations: 0,
+            busy: 0.0,
+            metrics: PipelineMetrics::default(),
+        });
+        w.shards += 1;
+        w.outputs += n_out;
+        w.invocations += r.invocations;
+        w.busy += r.elapsed;
+        w.metrics.merge(&r.metrics);
+    }
+    ExecReport {
+        outputs,
+        metrics,
+        invocations,
+        shards,
+        elapsed,
+        per_worker: per_worker.into_values().collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::NodeMetrics;
+
+    fn shard(shard: usize, worker: usize, outputs: Vec<i32>, items: usize) -> ShardResult<i32> {
+        let mut nm = NodeMetrics::new(4);
+        for _ in 0..items {
+            nm.record_ensemble(2);
+        }
+        let metrics = PipelineMetrics {
+            nodes: vec![("n".to_string(), nm)],
+            elapsed: 0.25,
+            idle_polls: 1,
+        };
+        ShardResult {
+            shard,
+            worker,
+            outputs,
+            metrics,
+            invocations: items as u64,
+            elapsed: 0.5,
+        }
+    }
+
+    #[test]
+    fn outputs_concatenate_in_shard_order() {
+        let report = merge_results(
+            vec![
+                shard(0, 1, vec![1, 2], 2),
+                shard(1, 0, vec![3], 1),
+                shard(2, 1, vec![4, 5], 2),
+            ],
+            2.0,
+        );
+        assert_eq!(report.outputs, vec![1, 2, 3, 4, 5]);
+        assert_eq!(report.shards, 3);
+        assert_eq!(report.invocations, 5);
+        assert_eq!(report.metrics.node("n").unwrap().ensembles, 5);
+    }
+
+    #[test]
+    fn per_worker_breakdown_aggregates() {
+        let report = merge_results(
+            vec![
+                shard(0, 1, vec![1, 2], 2),
+                shard(1, 0, vec![3], 1),
+                shard(2, 1, vec![4, 5], 2),
+            ],
+            2.0,
+        );
+        assert_eq!(report.per_worker.len(), 2);
+        assert_eq!(report.per_worker[0].worker, 0);
+        assert_eq!(report.per_worker[0].shards, 1);
+        assert_eq!(report.per_worker[1].worker, 1);
+        assert_eq!(report.per_worker[1].shards, 2);
+        assert_eq!(report.per_worker[1].outputs, 4);
+        assert!((report.per_worker[1].busy - 1.0).abs() < 1e-12);
+        let table = report.worker_table();
+        assert!(table.contains("worker"), "{table}");
+        assert!(report.utilization() > 0.0);
+    }
+
+    #[test]
+    fn empty_merge_is_empty_report() {
+        let report = merge_results(Vec::<ShardResult<i32>>::new(), 0.1);
+        assert!(report.outputs.is_empty());
+        assert_eq!(report.shards, 0);
+        assert!(report.per_worker.is_empty());
+        assert_eq!(report.utilization(), 0.0);
+    }
+}

@@ -1,0 +1,84 @@
+//! L3.5 — the sharded multi-worker pipeline executor.
+//!
+//! The paper extracts data parallelism *within* one SIMD pipeline; its
+//! regions, however, are mutually independent, which makes the whole
+//! stream shardable across **replicated pipelines** — the worker-
+//! replication model of timely dataflow, applied to the coordinator. This
+//! module scales any single-threaded coordinator pipeline across OS
+//! threads without touching the coordinator itself: the `Rc`-based
+//! scheduler, channels and nodes stay exactly as they are *inside* each
+//! worker; parallelism lives one layer above.
+//!
+//! ## The region-boundary sharding invariant
+//!
+//! A shard boundary may only fall **between** regions, never inside one: a
+//! [`Blob`](crate::coordinator::enumerate::Blob) (or any
+//! [`Composite`](crate::coordinator::enumerate::Composite)) is enumerated
+//! by exactly one worker, start to finish. Combined with two properties of
+//! the coordinator this makes sharded execution *deterministic and
+//! bit-identical* to the single-threaded run for region-local pipelines:
+//!
+//! 1. enumerated ensembles never mix two parents' elements (precise
+//!    region signals cap every ensemble at the boundary), so a region's
+//!    kernel invocations — and their floating-point grouping — depend only
+//!    on that region's own elements;
+//! 2. per-region state is reset at `RegionBegin` (the aggregator clones
+//!    its init), so no state flows across a shard boundary.
+//!
+//! Pipelines whose ensembles deliberately mix regions (the dense *tagged*
+//! baseline, which exists precisely to pack lanes across boundaries) lose
+//! the bit-identity guarantee: sharding changes how lanes group into
+//! ensembles (float rounding), and the generic merge concatenates
+//! per-shard outputs — an app whose single run emits *globally* sorted or
+//! coalesced results must fold the concatenation itself, as
+//! `SumApp::run_sharded_with` does for its tagged mode.
+//!
+//! ## Pieces
+//!
+//! * [`plan`] — [`ShardPlan`]: contiguous, boundary-respecting partition
+//!   of the region stream with greedy item-count balancing, under a
+//!   configurable [`ShardPolicy`] (shards per worker, max-shard cap,
+//!   minimum shard weight).
+//! * [`factory`] — [`PipelineFactory`]/[`ShardWorker`]: how an app
+//!   instantiates a fresh pipeline per worker thread (plus
+//!   [`KernelSpawn`], which builds per-thread kernel sets — PJRT client
+//!   handles are thread-confined, so each worker owns its engine).
+//! * [`pool`] — [`WorkerPool`]: `std::thread::scope`-based pool; workers
+//!   claim shards from an atomic cursor and run one scheduler each.
+//! * [`merge`] — [`ExecReport`]: deterministic reassembly of per-shard
+//!   outputs in original stream order plus a global
+//!   [`PipelineMetrics`](crate::coordinator::metrics::PipelineMetrics)
+//!   fold with a per-worker breakdown.
+//! * [`runner`] — [`ExecConfig`]/[`ShardedRunner`]: the front door.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use regatta::prelude::*;
+//! use regatta::workload::regions::{gen_blobs, RegionSpec};
+//!
+//! let blobs = gen_blobs(1 << 20, RegionSpec::Fixed { size: 96 }, 1);
+//! let factory = SumFactory::new(SumConfig::default(), KernelSpawn::Native);
+//! let report = ShardedRunner::new(ExecConfig::new(8))
+//!     .run(&factory, &blobs)
+//!     .unwrap();
+//! println!("{} sums from {} shards\n{}", report.outputs.len(),
+//!          report.shards, report.worker_table());
+//! ```
+//!
+//! With `workers = 1` the runner degenerates to a single shard executed
+//! inline — identical outputs and metrics counters to calling the app's
+//! `run` directly (the `exec_equivalence` suite pins this down for
+//! workers 1–8).
+
+pub mod factory;
+pub mod merge;
+pub mod plan;
+pub mod pool;
+pub mod runner;
+
+pub use factory::{KernelSpawn, PipelineFactory, ShardOutput, ShardWorker, WorkerKernels};
+pub use merge::{ExecReport, WorkerStats};
+pub use plan::{ShardPlan, ShardPolicy};
+pub use pool::{ShardResult, WorkerPool};
+pub use runner::{ExecConfig, ShardedRunner};

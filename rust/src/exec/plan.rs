@@ -1,0 +1,300 @@
+//! Shard planning: partition a region stream into contiguous per-worker
+//! shards, cutting **only at region boundaries**.
+//!
+//! The planner sees the stream as a sequence of region *weights* (element
+//! counts) and produces contiguous index ranges. Contiguity is what makes
+//! the downstream merge trivial and deterministic: concatenating shard
+//! outputs in shard order *is* original stream order.
+//!
+//! Balancing is greedy: each shard is closed once it reaches the ideal
+//! share of the remaining weight, recomputed as shards close (so one huge
+//! region early in the stream does not starve the tail). A shard is never
+//! empty and a region is never split — see the invariant in
+//! [`super`]'s module docs.
+
+/// Tunables for [`ShardPlan::build`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardPolicy {
+    /// Shards to aim for per worker. `1` gives the most deterministic
+    /// layout (and exact single-run equivalence at `workers = 1`); larger
+    /// values give the pool slack to balance load dynamically when shard
+    /// costs are skewed.
+    pub shards_per_worker: usize,
+    /// Hard cap on total shards, whatever the worker count asks for.
+    pub max_shards: usize,
+    /// Don't create shards lighter than this many items (prevents
+    /// pathological splintering of tiny streams). `1` disables.
+    pub min_shard_items: usize,
+}
+
+impl Default for ShardPolicy {
+    fn default() -> Self {
+        ShardPolicy {
+            shards_per_worker: 1,
+            max_shards: 1024,
+            min_shard_items: 1,
+        }
+    }
+}
+
+/// A boundary-respecting partition of `0..n` regions into contiguous
+/// shards, plus the per-shard weights the planner balanced on.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    ranges: Vec<std::ops::Range<usize>>,
+    weights: Vec<usize>,
+    total_weight: usize,
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+impl ShardPlan {
+    /// Plan shards for a stream of `region_weights.len()` regions.
+    ///
+    /// Produces `min(workers × shards_per_worker, max_shards, n_regions)`
+    /// shards (further reduced if `min_shard_items` demands it), each a
+    /// non-empty contiguous range. An empty stream yields an empty plan.
+    pub fn build(region_weights: &[usize], workers: usize, policy: &ShardPolicy) -> ShardPlan {
+        let n = region_weights.len();
+        let total: usize = region_weights.iter().sum();
+        if n == 0 {
+            return ShardPlan {
+                ranges: Vec::new(),
+                weights: Vec::new(),
+                total_weight: 0,
+            };
+        }
+        let mut k = workers
+            .max(1)
+            .saturating_mul(policy.shards_per_worker.max(1))
+            .min(policy.max_shards.max(1))
+            .min(n);
+        if policy.min_shard_items > 1 {
+            k = k.min((total / policy.min_shard_items).max(1));
+        }
+
+        let mut ranges = Vec::with_capacity(k);
+        let mut weights = Vec::with_capacity(k);
+        let mut remaining_weight = total;
+        let mut remaining_shards = k;
+        let mut target = ceil_div(remaining_weight.max(1), remaining_shards);
+        let mut start = 0usize;
+        let mut acc = 0usize;
+        for (i, &w) in region_weights.iter().enumerate() {
+            acc += w;
+            let regions_after = n - i - 1;
+            // Close the current shard when it has met its target — or when
+            // postponing would leave fewer regions than open shards (every
+            // shard must get at least one region).
+            let must_close = regions_after == remaining_shards - 1 && remaining_shards > 1;
+            let close = remaining_shards > 1 && (acc >= target || must_close);
+            if close || i == n - 1 {
+                ranges.push(start..i + 1);
+                weights.push(acc);
+                remaining_weight -= acc;
+                remaining_shards -= 1;
+                start = i + 1;
+                acc = 0;
+                if remaining_shards > 0 {
+                    target = ceil_div(remaining_weight.max(1), remaining_shards);
+                }
+            }
+        }
+        debug_assert_eq!(ranges.len(), k);
+        ShardPlan {
+            ranges,
+            weights,
+            total_weight: total,
+        }
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+
+    /// Region-index range of shard `i`.
+    pub fn range(&self, i: usize) -> std::ops::Range<usize> {
+        self.ranges[i].clone()
+    }
+
+    /// All ranges in shard order.
+    pub fn ranges(&self) -> &[std::ops::Range<usize>] {
+        &self.ranges
+    }
+
+    /// Total item weight of shard `i`.
+    pub fn shard_weight(&self, i: usize) -> usize {
+        self.weights[i]
+    }
+
+    /// Total item weight across the stream.
+    pub fn total_weight(&self) -> usize {
+        self.total_weight
+    }
+
+    /// Balance quality: heaviest shard weight over the ideal equal share
+    /// (1.0 = perfect; large regions force it higher).
+    pub fn imbalance(&self) -> f64 {
+        if self.ranges.is_empty() || self.total_weight == 0 {
+            return 1.0;
+        }
+        let max = self.weights.iter().copied().max().unwrap_or(0) as f64;
+        let ideal = self.total_weight as f64 / self.ranges.len() as f64;
+        max / ideal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn check_invariants(weights: &[usize], plan: &ShardPlan) {
+        // contiguous cover of 0..n, in order, no empty shard
+        let mut next = 0usize;
+        for i in 0..plan.len() {
+            let r = plan.range(i);
+            assert_eq!(r.start, next, "shards must be contiguous");
+            assert!(r.end > r.start, "no empty shards");
+            assert_eq!(
+                plan.shard_weight(i),
+                weights[r.clone()].iter().sum::<usize>(),
+                "shard weight bookkeeping"
+            );
+            next = r.end;
+        }
+        assert_eq!(next, weights.len(), "shards must cover the stream");
+        assert_eq!(
+            plan.total_weight(),
+            weights.iter().sum::<usize>(),
+            "total weight"
+        );
+    }
+
+    #[test]
+    fn single_worker_single_shard() {
+        let w = vec![5usize; 10];
+        let plan = ShardPlan::build(&w, 1, &ShardPolicy::default());
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.range(0), 0..10);
+        check_invariants(&w, &plan);
+    }
+
+    #[test]
+    fn balances_uniform_weights() {
+        let w = vec![10usize; 100];
+        let plan = ShardPlan::build(&w, 4, &ShardPolicy::default());
+        assert_eq!(plan.len(), 4);
+        check_invariants(&w, &plan);
+        for i in 0..4 {
+            assert_eq!(plan.shard_weight(i), 250);
+        }
+        assert!((plan.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn never_splits_a_heavy_region() {
+        // one region dwarfs the rest: it must land whole in one shard
+        let mut w = vec![1usize; 20];
+        w[3] = 1000;
+        let plan = ShardPlan::build(&w, 4, &ShardPolicy::default());
+        check_invariants(&w, &plan);
+        let heavy = (0..plan.len())
+            .find(|&i| plan.range(i).contains(&3))
+            .unwrap();
+        assert!(plan.shard_weight(heavy) >= 1000);
+    }
+
+    #[test]
+    fn more_workers_than_regions() {
+        let w = vec![7usize; 3];
+        let plan = ShardPlan::build(&w, 16, &ShardPolicy::default());
+        assert_eq!(plan.len(), 3, "at most one shard per region");
+        check_invariants(&w, &plan);
+    }
+
+    #[test]
+    fn max_shards_cap_applies() {
+        let w = vec![1usize; 100];
+        let plan = ShardPlan::build(
+            &w,
+            16,
+            &ShardPolicy {
+                shards_per_worker: 8,
+                max_shards: 5,
+                min_shard_items: 1,
+            },
+        );
+        assert_eq!(plan.len(), 5);
+        check_invariants(&w, &plan);
+    }
+
+    #[test]
+    fn min_shard_items_prevents_splintering() {
+        let w = vec![1usize; 8]; // 8 items total
+        let plan = ShardPlan::build(
+            &w,
+            8,
+            &ShardPolicy {
+                shards_per_worker: 1,
+                max_shards: 1024,
+                min_shard_items: 4,
+            },
+        );
+        assert_eq!(plan.len(), 2, "8 items / min 4 per shard");
+        check_invariants(&w, &plan);
+    }
+
+    #[test]
+    fn empty_stream_empty_plan() {
+        let plan = ShardPlan::build(&[], 4, &ShardPolicy::default());
+        assert!(plan.is_empty());
+        assert_eq!(plan.total_weight(), 0);
+    }
+
+    #[test]
+    fn zero_weight_regions_still_covered() {
+        let w = vec![0usize, 0, 5, 0, 3, 0];
+        let plan = ShardPlan::build(&w, 3, &ShardPolicy::default());
+        check_invariants(&w, &plan);
+    }
+
+    #[test]
+    fn random_streams_keep_invariants_and_rough_balance() {
+        let mut rng = Prng::new(42);
+        for _ in 0..50 {
+            let n = 1 + rng.below(400);
+            let weights: Vec<usize> = (0..n).map(|_| rng.below(64)).collect();
+            let workers = 1 + rng.below(12);
+            let spw = 1 + rng.below(4);
+            let policy = ShardPolicy {
+                shards_per_worker: spw,
+                ..ShardPolicy::default()
+            };
+            let plan = ShardPlan::build(&weights, workers, &policy);
+            check_invariants(&weights, &plan);
+            assert!(plan.len() <= workers * spw);
+            // greedy bound: a shard closes at the first region that meets
+            // its target, so it exceeds the ideal share by at most the
+            // heaviest single region (plus ceil-rounding slack).
+            let max_region = weights.iter().copied().max().unwrap_or(0);
+            let ideal = ceil_div(plan.total_weight().max(1), plan.len().max(1));
+            let slack = plan.len();
+            for i in 0..plan.len() {
+                assert!(
+                    plan.shard_weight(i) <= ideal + max_region + slack,
+                    "shard {i} weight {} vs ideal {ideal} + max region {max_region}",
+                    plan.shard_weight(i)
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! The worker pool: one scoped OS thread per worker, each running a
+//! private single-threaded pipeline over shards claimed from an atomic
+//! cursor (the paper's "pipelines compete to consume data from a common
+//! input stream ... atomic operations but no locking", lifted from GPU
+//! processors to OS threads).
+//!
+//! Error semantics: the first failure flips a stop flag so idle workers
+//! quit claiming, and the error (annotated with worker and shard) is
+//! returned after all threads join. Already-completed shards are
+//! discarded — a sharded run is all-or-nothing.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::factory::{PipelineFactory, ShardWorker};
+use super::plan::ShardPlan;
+use crate::coordinator::metrics::PipelineMetrics;
+
+/// One shard's results, tagged with where it ran.
+#[derive(Debug, Clone)]
+pub struct ShardResult<T> {
+    /// Shard index in plan (= stream) order.
+    pub shard: usize,
+    /// Worker that executed it.
+    pub worker: usize,
+    /// Outputs in the shard's stream order.
+    pub outputs: Vec<T>,
+    /// The shard pipeline's metrics.
+    pub metrics: PipelineMetrics,
+    /// Kernel invocations spent on the shard.
+    pub invocations: u64,
+    /// Wall-clock seconds this shard took on its worker.
+    pub elapsed: f64,
+}
+
+/// Best-effort text of a thread panic payload (panics carry `&str` or
+/// `String` in practice; anything else is reported generically).
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
+}
+
+/// Fixed-size pool of pipeline workers over a shard plan.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerPool {
+    workers: usize,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> WorkerPool {
+        WorkerPool {
+            workers: workers.max(1),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run every shard of `plan` over `stream`, one worker pipeline per
+    /// thread. Returns all shard results sorted back into shard order.
+    ///
+    /// With one worker (or one shard) everything runs inline on the
+    /// calling thread — no pool overhead, bit-identical to a plain
+    /// single-threaded run.
+    pub fn run<F: PipelineFactory>(
+        &self,
+        factory: &F,
+        stream: &[F::In],
+        plan: &ShardPlan,
+    ) -> Result<Vec<ShardResult<F::Out>>> {
+        if plan.is_empty() {
+            return Ok(Vec::new());
+        }
+        let threads = self.workers.min(plan.len());
+        let cursor = AtomicUsize::new(0);
+        let stop = AtomicBool::new(false);
+
+        /// Flips the stop flag if its thread unwinds, so a panicking
+        /// worker halts the rest of the pool just like an `Err` does.
+        struct StopOnPanic<'a>(&'a AtomicBool);
+        impl Drop for StopOnPanic<'_> {
+            fn drop(&mut self) {
+                if std::thread::panicking() {
+                    self.0.store(true, Ordering::Relaxed);
+                }
+            }
+        }
+
+        let worker_loop = |worker_id: usize| -> Result<Vec<ShardResult<F::Out>>> {
+            let _guard = StopOnPanic(&stop);
+            let mut done = Vec::new();
+            let mut pipeline: Option<F::Worker> = None;
+            loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let shard = cursor.fetch_add(1, Ordering::Relaxed);
+                if shard >= plan.len() {
+                    break;
+                }
+                if pipeline.is_none() {
+                    // Built lazily so workers that never claim a shard
+                    // never pay for an engine.
+                    match factory.make_worker(worker_id) {
+                        Ok(p) => pipeline = Some(p),
+                        Err(e) => {
+                            stop.store(true, Ordering::Relaxed);
+                            return Err(e.context(format!(
+                                "building pipeline for worker {worker_id}"
+                            )));
+                        }
+                    }
+                }
+                let p = pipeline.as_mut().expect("pipeline built above");
+                let t0 = Instant::now();
+                match p.run_shard(&stream[plan.range(shard)]) {
+                    Ok(out) => done.push(ShardResult {
+                        shard,
+                        worker: worker_id,
+                        outputs: out.outputs,
+                        metrics: out.metrics,
+                        invocations: out.invocations,
+                        elapsed: t0.elapsed().as_secs_f64(),
+                    }),
+                    Err(e) => {
+                        stop.store(true, Ordering::Relaxed);
+                        return Err(e.context(format!(
+                            "worker {worker_id} failed on shard {shard}"
+                        )));
+                    }
+                }
+            }
+            Ok(done)
+        };
+
+        let per_thread: Vec<Result<Vec<ShardResult<F::Out>>>> = if threads <= 1 {
+            vec![worker_loop(0)]
+        } else {
+            std::thread::scope(|scope| {
+                let worker_loop = &worker_loop;
+                let handles: Vec<_> = (0..threads)
+                    .map(|wid| scope.spawn(move || worker_loop(wid)))
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join().unwrap_or_else(|payload| {
+                            Err(anyhow!("worker thread panicked: {}", panic_msg(&payload)))
+                        })
+                    })
+                    .collect()
+            })
+        };
+
+        let mut all = Vec::with_capacity(plan.len());
+        for r in per_thread {
+            all.extend(r?);
+        }
+        all.sort_by_key(|r| r.shard);
+        ensure!(
+            all.len() == plan.len(),
+            "pool completed {} of {} shards",
+            all.len(),
+            plan.len()
+        );
+        Ok(all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::factory::ShardOutput;
+    use crate::exec::plan::ShardPolicy;
+
+    /// Toy factory: identity over u32 regions of weight 1, with a
+    /// configurable failure shard.
+    struct ToyFactory {
+        fail_on: Option<u32>,
+    }
+
+    struct ToyWorker {
+        fail_on: Option<u32>,
+    }
+
+    impl ShardWorker for ToyWorker {
+        type In = u32;
+        type Out = u32;
+
+        fn run_shard(&mut self, shard: &[u32]) -> Result<ShardOutput<u32>> {
+            if let Some(bad) = self.fail_on {
+                if shard.contains(&bad) {
+                    anyhow::bail!("poison item {bad}");
+                }
+            }
+            Ok(ShardOutput {
+                outputs: shard.to_vec(),
+                metrics: PipelineMetrics::default(),
+                invocations: shard.len() as u64,
+            })
+        }
+    }
+
+    impl PipelineFactory for ToyFactory {
+        type In = u32;
+        type Out = u32;
+        type Worker = ToyWorker;
+
+        fn make_worker(&self, _worker_id: usize) -> Result<ToyWorker> {
+            Ok(ToyWorker {
+                fail_on: self.fail_on,
+            })
+        }
+    }
+
+    fn items(n: u32) -> Vec<u32> {
+        (0..n).collect()
+    }
+
+    #[test]
+    fn results_come_back_in_shard_order() {
+        let stream = items(1000);
+        let weights = vec![1usize; 1000];
+        for workers in [1usize, 2, 4, 7] {
+            let plan = ShardPlan::build(
+                &weights,
+                workers,
+                &ShardPolicy {
+                    shards_per_worker: 3,
+                    ..ShardPolicy::default()
+                },
+            );
+            let results = WorkerPool::new(workers)
+                .run(&ToyFactory { fail_on: None }, &stream, &plan)
+                .unwrap();
+            assert_eq!(results.len(), plan.len());
+            let flat: Vec<u32> = results.iter().flat_map(|r| r.outputs.clone()).collect();
+            assert_eq!(flat, stream, "workers={workers}");
+            for (i, r) in results.iter().enumerate() {
+                assert_eq!(r.shard, i);
+                assert!(r.worker < workers);
+            }
+        }
+    }
+
+    #[test]
+    fn worker_errors_are_annotated_and_fatal() {
+        let stream = items(100);
+        let weights = vec![1usize; 100];
+        let plan = ShardPlan::build(&weights, 4, &ShardPolicy::default());
+        let err = WorkerPool::new(4)
+            .run(&ToyFactory { fail_on: Some(50) }, &stream, &plan)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("poison item 50"), "{msg}");
+        assert!(msg.contains("shard"), "{msg}");
+    }
+
+    #[test]
+    fn empty_plan_is_a_noop() {
+        let plan = ShardPlan::build(&[], 4, &ShardPolicy::default());
+        let results = WorkerPool::new(4)
+            .run(&ToyFactory { fail_on: None }, &[], &plan)
+            .unwrap();
+        assert!(results.is_empty());
+    }
+}

@@ -2,21 +2,28 @@
 //!
 //! A reproduction of *Timcheck & Buhler, "Streaming Computations with
 //! Region-Based State on SIMD Architectures" (PARMA-DITAM 2020)* as a
-//! three-layer Rust + JAX + Pallas stack:
+//! layered Rust + JAX + Pallas stack:
 //!
-//! * **Layer 3 (this crate)** — the streaming *coordinator*: compute nodes
-//!   connected by bounded data queues and out-of-band signal queues, the
-//!   paper's **credit protocol** for precise signal delivery under irregular
-//!   dataflow (§3), the **enumeration / aggregation** abstraction for
-//!   region-based contextual state (§4), a non-preemptive scheduler, and a
-//!   SIMD machine model in which each node firing processes a fixed-width
-//!   *ensemble* of lanes.
+//! * **Layer 3.5 ([`exec`])** — the sharded multi-worker executor: any
+//!   coordinator pipeline, replicated across OS threads. An input stream
+//!   is partitioned into shards **only at region boundaries** (a
+//!   `Blob`/`Composite` is never split), each worker runs a private
+//!   single-threaded pipeline, and a deterministic merger reassembles
+//!   outputs in original stream order with a global metrics fold.
+//! * **Layer 3 ([`coordinator`])** — the streaming *coordinator*: compute
+//!   nodes connected by bounded data queues and out-of-band signal queues,
+//!   the paper's **credit protocol** for precise signal delivery under
+//!   irregular dataflow (§3), the **enumeration / aggregation** abstraction
+//!   for region-based contextual state (§4), a non-preemptive scheduler,
+//!   and a SIMD machine model in which each node firing processes a
+//!   fixed-width *ensemble* of lanes.
 //! * **Layer 2 (python/compile/model.py)** — JAX ensemble functions, AOT
 //!   lowered to HLO text at build time (`make artifacts`).
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels called by L2.
 //!
 //! At runtime the coordinator executes ensembles by invoking the AOT
 //! artifacts through PJRT ([`runtime`]); Python is never on the data path.
+//! Without artifacts, the pure-Rust native kernel mirror runs everywhere.
 //!
 //! ## Quick start
 //!
@@ -34,14 +41,22 @@
 //! let report = app.run(&blobs).unwrap();
 //! println!("{} sums, occupancy {:.1}%", report.outputs.len(),
 //!          100.0 * report.metrics.occupancy());
+//!
+//! // Scale the same pipeline across 8 workers (L3.5): shards cut at
+//! // region boundaries, outputs bit-identical and in stream order.
+//! let report = app.run_sharded(&blobs, 8).unwrap();
+//! assert_eq!(report.outputs.len(), 4);
 //! ```
 //!
-//! See `examples/` for runnable applications and `rust/benches/` for the
-//! harnesses that regenerate every figure of the paper's evaluation.
+//! See `examples/` for runnable applications (`sharded_scaling` for the
+//! executor layer) and `rust/benches/` for the harnesses that regenerate
+//! every figure of the paper's evaluation plus the `scaling_shards`
+//! worker-scaling curve.
 
 pub mod apps;
 pub mod bench;
 pub mod coordinator;
+pub mod exec;
 pub mod runtime;
 pub mod simd;
 pub mod util;
@@ -49,8 +64,10 @@ pub mod workload;
 
 pub mod prelude {
     //! One-stop imports for application authors.
-    pub use crate::apps::sum::{SumApp, SumConfig, SumMode, SumReport, SumShape};
-    pub use crate::apps::taxi::{TaxiApp, TaxiConfig, TaxiPair, TaxiReport, TaxiVariant};
+    pub use crate::apps::sum::{SumApp, SumConfig, SumFactory, SumMode, SumReport, SumShape};
+    pub use crate::apps::taxi::{
+        TaxiApp, TaxiConfig, TaxiFactory, TaxiPair, TaxiReport, TaxiVariant,
+    };
     pub use crate::coordinator::{
         aggregate::{Aggregator, FilterMapLogic, MapLogic},
         channel::Channel,
@@ -62,6 +79,10 @@ pub mod prelude {
         signal::{parent_as, Credit, ParentRef, Signal, SignalKind},
         tagging::Tagged,
         topology::{Pipeline, PipelineBuilder},
+    };
+    pub use crate::exec::{
+        ExecConfig, ExecReport, KernelSpawn, PipelineFactory, ShardOutput, ShardPlan,
+        ShardPolicy, ShardWorker, ShardedRunner, WorkerPool, WorkerStats,
     };
     pub use crate::runtime::kernels::{Backend, KernelSet};
     pub use crate::runtime::{ArtifactStore, Engine, KernelName};

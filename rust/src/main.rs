@@ -12,19 +12,17 @@
 //! regatta --config <file.toml>   # load a [run] config (see configs/)
 //! ```
 
-use std::sync::Mutex;
-
 use anyhow::{bail, Context, Result};
 
-use regatta::apps::sum::{reference_sums, SumApp, SumConfig, SumMode, SumShape};
-use regatta::apps::taxi::{TaxiApp, TaxiConfig, TaxiVariant};
+use regatta::apps::sum::{reference_sums, SumApp, SumConfig, SumFactory, SumMode, SumShape};
+use regatta::apps::taxi::{TaxiApp, TaxiConfig, TaxiFactory, TaxiVariant};
 use regatta::bench::figures::{self, BackendSel, SweepConfig};
+use regatta::exec::{ExecConfig, KernelSpawn, ShardPolicy, ShardedRunner};
 use regatta::runtime::{ArtifactStore, Engine};
-use regatta::simd::{ChunkSource, SimdConfig, SimdMachine};
 use regatta::util::cli::Args;
 use regatta::util::config::Config;
 use regatta::util::stats::{fmt_count, fmt_duration};
-use regatta::workload::regions::{chunk_blobs, gen_blobs, RegionSpec};
+use regatta::workload::regions::{gen_blobs, RegionSpec};
 use regatta::workload::taxi::{generate, replicate, TaxiGenConfig};
 
 const USAGE: &str = "\
@@ -34,11 +32,13 @@ USAGE:
   regatta run sum   [--items N] [--region-size N | --region-max N]
                     [--mode enum|tagged] [--shape fused|two-stage]
                     [--width W] [--backend xla|native] [--threshold T]
-                    [--workers K] [--stats] [--verify]
+                    [--workers K] [--shards-per-worker S] [--stats] [--verify]
   regatta run taxi  [--lines N] [--replicate K] [--variant enum|hybrid|tagged]
-                    [--width W] [--backend xla|native] [--stats]
-  regatta bench <fig6|fig7|fig8|penalty|width|lanectx> [--items N] [--width W]
-                    [--backend xla|native]
+                    [--width W] [--backend xla|native]
+                    [--workers K] [--shards-per-worker S] [--stats]
+  regatta bench <fig6|fig7|fig8|scale|penalty|width|lanectx>
+                    [--items N] [--width W] [--backend xla|native]
+                    [--workers K1,K2,...]
   regatta info
   regatta --config <file.toml>
 ";
@@ -83,7 +83,7 @@ fn config_to_args(path: &str) -> Result<Args> {
     argv.extend(cmd.split_whitespace().map(str::to_string));
     for key in [
         "items", "region-size", "region-max", "mode", "shape", "width", "backend",
-        "threshold", "workers", "lines", "replicate", "variant",
+        "threshold", "workers", "shards-per-worker", "lines", "replicate", "variant",
     ] {
         if let Some(v) = cfg.get("run", &key.replace('-', "_")) {
             let vs = match v {
@@ -105,6 +105,25 @@ fn config_to_args(path: &str) -> Result<Args> {
 
 fn backend(args: &Args) -> Result<BackendSel> {
     args.str_or("backend", "xla").parse()
+}
+
+fn exec_config(args: &Args, workers: usize) -> Result<ExecConfig> {
+    Ok(ExecConfig {
+        workers,
+        shard: ShardPolicy {
+            shards_per_worker: args.get_or("shards-per-worker", 1)?,
+            ..ShardPolicy::default()
+        },
+    })
+}
+
+fn print_exec_stats<T>(report: &regatta::exec::ExecReport<T>) {
+    println!(
+        "{} shard(s), utilization {:.0}%",
+        report.shards,
+        100.0 * report.utilization()
+    );
+    print!("{}", report.worker_table());
 }
 
 fn run_sum(args: &Args) -> Result<()> {
@@ -151,29 +170,16 @@ fn run_sum(args: &Args) -> Result<()> {
         let report = app.run(&blobs)?;
         (report.outputs, report.metrics, report.elapsed)
     } else {
-        // multi-processor machine: workers claim region chunks atomically
-        let chunk_items = (items / (workers * 4)).max(width);
-        let chunks = chunk_blobs(blobs.clone(), chunk_items);
-        let source = ChunkSource::new(chunks);
-        let machine = SimdMachine::new(SimdConfig { width, workers });
-        let collected: Mutex<Vec<(u64, f64)>> = Mutex::new(Vec::new());
-        let merged: Mutex<regatta::coordinator::metrics::PipelineMetrics> =
-            Mutex::new(Default::default());
-        let t0 = std::time::Instant::now();
-        machine.run(source, |_wid, src| {
-            let p = figures::provider(sel, width)?; // engine per worker thread
-            let app = SumApp::new(cfg, p.kernels);
-            while let Some(chunk) = src.claim() {
-                let report = app.run(chunk)?;
-                collected.lock().unwrap().extend(report.outputs);
-                merged.lock().unwrap().merge(&report.metrics);
-            }
-            Ok(())
-        })?;
-        let elapsed = t0.elapsed().as_secs_f64();
-        let mut outputs = collected.into_inner().unwrap();
-        outputs.sort_by_key(|&(id, _)| id);
-        (outputs, merged.into_inner().unwrap(), elapsed)
+        // L3.5: shard at region boundaries, one pipeline replica per
+        // worker thread, deterministic merge back into stream order
+        let factory = SumFactory::new(cfg, KernelSpawn::from(sel));
+        let runner = ShardedRunner::new(exec_config(args, workers)?);
+        let report = runner.run(&factory, &blobs)?;
+        if args.flag("stats") {
+            print_exec_stats(&report);
+        }
+        let outputs = regatta::apps::sum::finish_sharded_outputs(mode, report.outputs);
+        (outputs, report.metrics, report.elapsed)
     };
 
     println!(
@@ -212,40 +218,52 @@ fn run_taxi(args: &Args) -> Result<()> {
         other => bail!("unknown variant {other:?}"),
     };
     let sel = backend(args)?;
+    let workers: usize = args.get_or("workers", 1)?;
     let base = generate(lines, TaxiGenConfig::default(), args.get_or("seed", 0xF16u64)?);
     let w = if reps > 1 { replicate(&base, reps) } else { base };
     let chars: usize = w.lines.iter().map(|l| l.len).sum();
     println!(
-        "taxi app: {} lines ({} chars, {} pairs), width {width}, {} variant, backend {sel:?}",
+        "taxi app: {} lines ({} chars, {} pairs), width {width}, {} variant, \
+         backend {sel:?}, {workers} worker(s)",
         w.lines.len(),
         fmt_count(chars as f64),
         w.total_pairs,
         variant.label()
     );
-    let p = figures::provider(sel, width)?;
-    let app = TaxiApp::new(
-        TaxiConfig {
-            width,
-            variant,
-            ..Default::default()
-        },
-        p.kernels,
-    );
-    let report = app.run(&w)?;
+    let cfg = TaxiConfig {
+        width,
+        variant,
+        ..Default::default()
+    };
+    let (pairs, metrics, elapsed) = if workers <= 1 {
+        let p = figures::provider(sel, width)?;
+        let report = TaxiApp::new(cfg, p.kernels).run(&w)?;
+        (report.pairs, report.metrics, report.elapsed)
+    } else {
+        // L3.5: lines are the regions — shard between lines, balanced by
+        // character count, pairs merged back in stream order
+        let factory = TaxiFactory::new(cfg, KernelSpawn::from(sel), w.text.clone());
+        let runner = ShardedRunner::new(exec_config(args, workers)?);
+        let report = runner.run(&factory, &w.lines)?;
+        if args.flag("stats") {
+            print_exec_stats(&report);
+        }
+        (report.outputs, report.metrics, report.elapsed)
+    };
     anyhow::ensure!(
-        report.pairs.len() == w.total_pairs,
+        pairs.len() == w.total_pairs,
         "parsed {} of {} pairs",
-        report.pairs.len(),
+        pairs.len(),
         w.total_pairs
     );
     println!(
         "-> {} pairs parsed in {} ({} chars/s)",
-        report.pairs.len(),
-        fmt_duration(report.elapsed),
-        fmt_count(chars as f64 / report.elapsed)
+        pairs.len(),
+        fmt_duration(elapsed),
+        fmt_count(chars as f64 / elapsed)
     );
     if args.flag("stats") {
-        print!("{}", report.metrics.table());
+        print!("{}", metrics.table());
     }
     Ok(())
 }
@@ -254,7 +272,7 @@ fn run_bench(args: &Args) -> Result<()> {
     let which = args
         .positional
         .get(1)
-        .context("bench target required: fig6|fig7|fig8|penalty|width|lanectx")?;
+        .context("bench target required: fig6|fig7|fig8|scale|penalty|width|lanectx")?;
     let mut cfg = SweepConfig {
         backend: backend(args)?,
         ..Default::default()
@@ -270,6 +288,12 @@ fn run_bench(args: &Args) -> Result<()> {
         }
         "fig8" => {
             figures::fig8(&cfg, args.get_or("lines", 32)?, &[1, 2, 4])?;
+        }
+        "scale" => {
+            let workers = args.list_or("workers", &[1usize, 2, 4, 8])?;
+            let w = cfg.width;
+            let regions = [(w / 8).max(1), w, 8 * w];
+            figures::scaling_shards(&cfg, &workers, &regions)?;
         }
         "penalty" => {
             figures::abstraction_penalty(&cfg)?;

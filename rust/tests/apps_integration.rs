@@ -1,6 +1,10 @@
 //! Apps on the real XLA backend: end-to-end through artifacts + PJRT
 //! (requires `make artifacts`). These are the measured configurations of
 //! the figure benches, validated for correctness at small scale.
+//!
+//! All `#[ignore]`d by default: they need the AOT artifacts **and** a
+//! real PJRT runtime (the workspace links an offline `xla` stub — see
+//! rust/vendor/xla). Run with `cargo test -- --ignored` when provisioned.
 
 use std::rc::Rc;
 
@@ -16,6 +20,7 @@ fn engine() -> Engine {
 }
 
 #[test]
+#[ignore = "needs AOT artifacts + a real PJRT runtime (offline xla stub by default)"]
 fn sum_app_xla_fused_matches_reference() {
     let eng = engine();
     let ks = Rc::new(KernelSet::xla(&eng, 32).unwrap());
@@ -41,6 +46,7 @@ fn sum_app_xla_fused_matches_reference() {
 }
 
 #[test]
+#[ignore = "needs AOT artifacts + a real PJRT runtime (offline xla stub by default)"]
 fn sum_app_xla_all_modes_agree() {
     let eng = engine();
     let ks = Rc::new(KernelSet::xla(&eng, 32).unwrap());
@@ -75,6 +81,7 @@ fn sum_app_xla_all_modes_agree() {
 }
 
 #[test]
+#[ignore = "needs AOT artifacts + a real PJRT runtime (offline xla stub by default)"]
 fn taxi_app_xla_all_variants_match_reference() {
     let eng = engine();
     let ks = Rc::new(KernelSet::xla(&eng, 32).unwrap());
@@ -114,6 +121,7 @@ fn taxi_app_xla_all_variants_match_reference() {
 /// The paper's occupancy statistic, on the real backend at width 128 with
 /// paper-shaped workloads: stage 1 mostly full, stage 2 mostly partial.
 #[test]
+#[ignore = "needs AOT artifacts + a real PJRT runtime (offline xla stub by default)"]
 fn taxi_xla_width128_occupancy_split() {
     let eng = engine();
     let ks = Rc::new(KernelSet::xla(&eng, 128).unwrap());

@@ -1,0 +1,268 @@
+//! Sharded execution ≡ single-threaded execution.
+//!
+//! The L3.5 executor's contract (see `regatta::exec` module docs): for
+//! region-local pipelines, sharding at region boundaries changes *nothing
+//! observable* — outputs are bit-for-bit identical and in the same order
+//! for every worker count, because (1) enumerated ensembles never mix
+//! parents, and (2) per-region state resets at `RegionBegin`. This suite
+//! pins that down across seeded random region mixes and workers 1–8, and
+//! checks the weaker order-only guarantee for the lane-mixing tagged mode.
+
+use std::rc::Rc;
+
+use regatta::apps::sum::{reference_sums, SumApp, SumConfig, SumMode, SumShape};
+use regatta::apps::taxi::{TaxiApp, TaxiConfig, TaxiVariant};
+use regatta::exec::{ExecConfig, ShardPolicy};
+use regatta::prelude::Policy;
+use regatta::runtime::kernels::KernelSet;
+use regatta::workload::regions::{gen_blobs, RegionSpec};
+use regatta::workload::taxi::{generate, TaxiGenConfig, TaxiWorkload};
+
+const WIDTH: usize = 8;
+
+fn sum_app(mode: SumMode, shape: SumShape) -> SumApp {
+    SumApp::new(
+        SumConfig {
+            width: WIDTH,
+            mode,
+            shape,
+            data_cap: 256,
+            signal_cap: 64,
+            ..Default::default()
+        },
+        Rc::new(KernelSet::native(WIDTH)),
+    )
+}
+
+fn region_mixes() -> Vec<(u64, RegionSpec)> {
+    vec![
+        (1, RegionSpec::Fixed { size: 1 }),
+        (2, RegionSpec::Fixed { size: 17 }),
+        (3, RegionSpec::Fixed { size: WIDTH }),
+        (4, RegionSpec::Fixed { size: 3 * WIDTH + 1 }),
+        (5, RegionSpec::Uniform { max: 5 }),
+        (6, RegionSpec::Uniform { max: 40 }),
+        (7, RegionSpec::Uniform { max: 200 }),
+    ]
+}
+
+fn assert_sums_bitwise(got: &[(u64, f64)], want: &[(u64, f64)], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: output count");
+    for (i, ((gi, gv), (wi, wv))) in got.iter().zip(want).enumerate() {
+        assert_eq!(gi, wi, "{ctx}: region id at {i}");
+        assert_eq!(
+            gv.to_bits(),
+            wv.to_bits(),
+            "{ctx}: region {gi} sum {gv} vs {wv}"
+        );
+    }
+}
+
+#[test]
+fn sharded_sum_is_bitwise_identical_for_workers_1_to_8() {
+    let app = sum_app(SumMode::Enumerated, SumShape::Fused);
+    for (seed, spec) in region_mixes() {
+        let blobs = gen_blobs(2000, spec, seed);
+        let single = app.run(&blobs).unwrap();
+        assert_sums_bitwise(
+            &single.outputs,
+            &reference_sums_close(&blobs, &single.outputs),
+            "sanity",
+        );
+        for workers in 1..=8 {
+            let sharded = app.run_sharded(&blobs, workers).unwrap();
+            assert_sums_bitwise(
+                &sharded.outputs,
+                &single.outputs,
+                &format!("{spec:?} seed {seed} workers {workers}"),
+            );
+            assert_eq!(
+                sharded.invocations, single.invocations,
+                "{spec:?} workers {workers}: kernel invocations"
+            );
+        }
+    }
+}
+
+/// The single run itself must agree with the f64 reference (tolerance);
+/// returns the single outputs so the bitwise helper can reuse them.
+fn reference_sums_close(
+    blobs: &[regatta::prelude::Blob],
+    got: &[(u64, f64)],
+) -> Vec<(u64, f64)> {
+    let want = reference_sums(blobs, 0.0);
+    assert_eq!(got.len(), want.len());
+    for ((gi, gv), (wi, wv)) in got.iter().zip(&want) {
+        assert_eq!(gi, wi);
+        assert!(
+            (gv - wv).abs() <= 1e-3 * (1.0 + wv.abs()),
+            "region {gi}: {gv} vs reference {wv}"
+        );
+    }
+    got.to_vec()
+}
+
+#[test]
+fn sharded_two_stage_sum_is_bitwise_identical() {
+    let app = sum_app(SumMode::Enumerated, SumShape::TwoStage);
+    let blobs = gen_blobs(1500, RegionSpec::Uniform { max: 30 }, 11);
+    let single = app.run(&blobs).unwrap();
+    for workers in [1usize, 3, 8] {
+        let sharded = app.run_sharded(&blobs, workers).unwrap();
+        assert_sums_bitwise(
+            &sharded.outputs,
+            &single.outputs,
+            &format!("two-stage workers {workers}"),
+        );
+    }
+}
+
+#[test]
+fn more_shards_than_workers_stays_bitwise_identical() {
+    let app = sum_app(SumMode::Enumerated, SumShape::Fused);
+    let blobs = gen_blobs(2000, RegionSpec::Uniform { max: 50 }, 12);
+    let single = app.run(&blobs).unwrap();
+    for (workers, spw) in [(2usize, 4usize), (3, 3), (8, 2)] {
+        let exec = ExecConfig {
+            workers,
+            shard: ShardPolicy {
+                shards_per_worker: spw,
+                ..ShardPolicy::default()
+            },
+        };
+        let sharded = app.run_sharded_with(&blobs, &exec).unwrap();
+        assert_sums_bitwise(
+            &sharded.outputs,
+            &single.outputs,
+            &format!("workers {workers} x {spw} shards"),
+        );
+    }
+}
+
+#[test]
+fn one_worker_metrics_match_single_run_exactly() {
+    let app = sum_app(SumMode::Enumerated, SumShape::Fused);
+    let blobs = gen_blobs(1000, RegionSpec::Uniform { max: 25 }, 13);
+    let single = app.run(&blobs).unwrap();
+    // `workers = 1` with the default policy short-circuits to a plain run;
+    // cap the plan at one shard while keeping shards_per_worker > 1 so the
+    // stream really goes through plan → pool → merge and we compare the
+    // full sharded path against the plain run.
+    let exec = ExecConfig {
+        workers: 1,
+        shard: ShardPolicy {
+            shards_per_worker: 2,
+            max_shards: 1,
+            min_shard_items: 1,
+        },
+    };
+    let sharded = app.run_sharded_with(&blobs, &exec).unwrap();
+    assert_sums_bitwise(&sharded.outputs, &single.outputs, "pooled single shard");
+    let (sm, hm) = (&single.metrics, &sharded.metrics);
+    assert_eq!(sm.nodes.len(), hm.nodes.len());
+    assert_eq!(sm.idle_polls, hm.idle_polls);
+    for ((sn, s), (hn, h)) in sm.nodes.iter().zip(&hm.nodes) {
+        assert_eq!(sn, hn, "node order");
+        assert_eq!(s.width, h.width, "{sn}: width");
+        assert_eq!(s.firings, h.firings, "{sn}: firings");
+        assert_eq!(s.ensembles, h.ensembles, "{sn}: ensembles");
+        assert_eq!(s.full_ensembles, h.full_ensembles, "{sn}: full ensembles");
+        assert_eq!(s.items, h.items, "{sn}: items");
+        assert_eq!(s.signals_consumed, h.signals_consumed, "{sn}: signals in");
+        assert_eq!(s.signals_emitted, h.signals_emitted, "{sn}: signals out");
+        assert_eq!(s.ensemble_hist, h.ensemble_hist, "{sn}: histogram");
+    }
+}
+
+#[test]
+fn sharded_tagged_sum_keeps_order_and_tolerance() {
+    // The dense tagged baseline deliberately packs lanes across region
+    // boundaries, so sharding changes ensemble grouping: order and ids
+    // must hold exactly, values within float-reassociation tolerance.
+    let app = sum_app(SumMode::Tagged, SumShape::Fused);
+    let blobs = gen_blobs(1200, RegionSpec::Fixed { size: 13 }, 21);
+    let want = reference_sums(&blobs, 0.0);
+    for workers in [1usize, 2, 5, 8] {
+        let sharded = app.run_sharded(&blobs, workers).unwrap();
+        assert_eq!(sharded.outputs.len(), want.len(), "workers {workers}");
+        for ((gi, gv), (wi, wv)) in sharded.outputs.iter().zip(&want) {
+            assert_eq!(gi, wi, "workers {workers}: tag order");
+            assert!(
+                (gv - wv).abs() <= 1e-3 * (1.0 + wv.abs()),
+                "workers {workers}: tag {gi}: {gv} vs {wv}"
+            );
+        }
+    }
+}
+
+fn taxi_app(variant: TaxiVariant) -> TaxiApp {
+    TaxiApp::new(
+        TaxiConfig {
+            width: WIDTH,
+            variant,
+            data_cap: 512,
+            signal_cap: 128,
+            policy: Policy::GreedyOccupancy,
+        },
+        Rc::new(KernelSet::native(WIDTH)),
+    )
+}
+
+fn taxi_workload() -> TaxiWorkload {
+    generate(
+        24,
+        TaxiGenConfig {
+            avg_pairs: 6,
+            avg_line_len: 160,
+        },
+        77,
+    )
+}
+
+#[test]
+fn sharded_taxi_is_bitwise_identical_for_workers_1_to_8() {
+    let w = taxi_workload();
+    for variant in TaxiVariant::all() {
+        let app = taxi_app(variant);
+        let single = app.run(&w).unwrap();
+        assert_eq!(single.pairs.len(), w.total_pairs, "{variant:?}: sanity");
+        for workers in 1..=8 {
+            let sharded = app.run_sharded(&w, workers).unwrap();
+            assert_eq!(
+                sharded.pairs.len(),
+                single.pairs.len(),
+                "{variant:?} workers {workers}: pair count"
+            );
+            for (i, (g, e)) in sharded.pairs.iter().zip(&single.pairs).enumerate() {
+                assert_eq!(g.tag, e.tag, "{variant:?} workers {workers}: tag at {i}");
+                assert_eq!(
+                    g.x.to_bits(),
+                    e.x.to_bits(),
+                    "{variant:?} workers {workers}: x at {i}"
+                );
+                assert_eq!(
+                    g.y.to_bits(),
+                    e.y.to_bits(),
+                    "{variant:?} workers {workers}: y at {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn empty_and_tiny_streams_shard_cleanly() {
+    let app = sum_app(SumMode::Enumerated, SumShape::Fused);
+    // tiny: fewer regions than workers
+    let blobs = gen_blobs(5, RegionSpec::Fixed { size: 2 }, 31);
+    let single = app.run(&blobs).unwrap();
+    let sharded = app.run_sharded(&blobs, 8).unwrap();
+    assert_sums_bitwise(&sharded.outputs, &single.outputs, "tiny stream");
+    // degenerate: all-empty regions
+    let empties: Vec<regatta::prelude::Blob> = (0..4)
+        .map(|i| regatta::prelude::Blob::from_vec(i, vec![]))
+        .collect();
+    let single = app.run(&empties).unwrap();
+    let sharded = app.run_sharded(&empties, 3).unwrap();
+    assert_sums_bitwise(&sharded.outputs, &single.outputs, "empty regions");
+}

@@ -1,0 +1,211 @@
+//! Offline stub of the `xla-rs` PJRT binding surface used by this
+//! workspace. The container image cannot build the real `xla_extension`
+//! bindings (no network, no prebuilt XLA), so this crate keeps the crate
+//! graph compiling and fails **at runtime, with a clear message**, the
+//! moment a PJRT client is requested. The coordinator's native kernel
+//! backend (`regatta::runtime::native`) is unaffected and fully
+//! functional.
+//!
+//! To run the measured XLA configuration, point the `xla` dependency in
+//! `rust/Cargo.toml` at the real xla-rs bindings; the API here mirrors the
+//! subset the workspace calls (`PjRtClient`, `PjRtLoadedExecutable`,
+//! `Literal`, `HloModuleProto`, `XlaComputation`).
+//!
+//! [`Literal`] is implemented for real (shape/count bookkeeping only, no
+//! device buffers) because literal construction is exercised by unit
+//! tests without any PJRT client.
+
+use std::fmt;
+
+/// Stub error type; converts into `anyhow::Error` at call sites.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: built against the offline `xla` stub (no PJRT runtime); \
+             use the native kernel backend, or link the real xla-rs bindings"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias (mirrors xla-rs).
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can hold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F64,
+    I32,
+    I64,
+    U8,
+    U32,
+}
+
+mod sealed {
+    pub trait Sealed {}
+}
+
+/// Rust scalar types storable in a [`Literal`].
+pub trait NativeType: sealed::Sealed + Copy {
+    const TY: ElementType;
+}
+
+macro_rules! native {
+    ($($t:ty => $e:ident),* $(,)?) => {
+        $(
+            impl sealed::Sealed for $t {}
+            impl NativeType for $t {
+                const TY: ElementType = ElementType::$e;
+            }
+        )*
+    };
+}
+
+native!(f32 => F32, f64 => F64, i32 => I32, i64 => I64, u8 => U8, u32 => U32);
+
+/// Host-side literal: shape and element-type bookkeeping only (the stub
+/// holds no data — nothing can execute to read it back).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(xs: &[T]) -> Literal {
+        Literal {
+            ty: T::TY,
+            dims: vec![xs.len() as i64],
+        }
+    }
+
+    /// Total number of elements.
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<i64>() as usize
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let new_count: i64 = dims.iter().product();
+        if new_count as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape: cannot view {} elements as {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal {
+            ty: self.ty,
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Copy out as a typed vector — unavailable in the stub (nothing can
+    /// have produced device data).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+
+    /// Decompose a tuple literal — unavailable in the stub.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module — stub never parses, so values cannot exist.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse HLO text from a file — always fails in the stub.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!(
+            "HloModuleProto::from_text_file({path})"
+        )))
+    }
+}
+
+/// Computation wrapper around a parsed module.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-side result buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Fetch the buffer as a host literal — unreachable in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given inputs — unreachable in the stub (no client
+    /// can compile an executable).
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] is the single entry point, and
+/// in the stub it fails immediately with an actionable message.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Create a CPU PJRT client — always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation — unreachable in the stub.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_bookkeeping() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.element_count(), 6);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.element_count(), 6);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn client_fails_with_actionable_message() {
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("stub"), "{err}");
+    }
+}
