@@ -197,9 +197,12 @@ impl SumApp {
         let src = b.source_with_cap::<Blob>(blobs.len().max(1));
         let elems = b.enumerate("enum", &src);
 
-        // Node f (paper Fig. 5): gather elements, filter+scale via kernel.
+        // Node f (paper Fig. 5): gather elements, filter+scale via the
+        // in-place kernel into firing-persistent output buffers.
         let f_vals = RefCell::new(vec![0.0f32; cfg.width]);
         let f_mask = RefCell::new(Vec::with_capacity(cfg.width));
+        let f_ov = RefCell::new(vec![0.0f32; cfg.width]);
+        let f_om = RefCell::new(vec![0i32; cfg.width]);
         let filtered = b.node(
             "f",
             &elems,
@@ -207,6 +210,8 @@ impl SumApp {
                 let blob = parent_as::<Blob>(parent.expect("enumerated")).expect("Blob");
                 let mut vals = f_vals.borrow_mut();
                 let mut mask = f_mask.borrow_mut();
+                let mut ov = f_ov.borrow_mut();
+                let mut om = f_om.borrow_mut();
                 for (slot, &i) in vals.iter_mut().zip(idxs) {
                     *slot = blob.get(i);
                 }
@@ -214,7 +219,7 @@ impl SumApp {
                     *slot = 0.0;
                 }
                 prefix_mask(&mut mask, idxs.len(), cfg.width);
-                let (ov, om) = ks_f.filter_scale(&vals, &mask, cfg.threshold)?;
+                ks_f.filter_scale_into(&vals, &mask, cfg.threshold, &mut ov, &mut om)?;
                 for i in 0..idxs.len() {
                     if om[i] != 0 {
                         out.push(ov[i]);
@@ -309,7 +314,7 @@ impl SumApp {
         let mut fed = 0usize;
         while fed < items.len() {
             let n = src.data_space().min(items.len() - fed);
-            src.push_iter(items[fed..fed + n].iter().copied());
+            src.push_slice(&items[fed..fed + n])?;
             fed += n;
             pipe.run()?;
         }
@@ -332,6 +337,9 @@ struct TaggedSumLogic {
     local: Vec<i32>,
     uniq: Vec<u64>,
     tags_scratch: Vec<u64>,
+    /// Kernel output staging, reused across firings (zero-alloc path).
+    sums: Vec<f32>,
+    counts: Vec<i32>,
     acc: std::collections::BTreeMap<u64, f64>,
 }
 
@@ -347,6 +355,8 @@ impl TaggedSumLogic {
             local: Vec::with_capacity(cfg.width),
             uniq: Vec::with_capacity(cfg.width),
             tags_scratch: Vec::with_capacity(cfg.width),
+            sums: vec![0.0; cfg.width],
+            counts: vec![0; cfg.width],
             acc: std::collections::BTreeMap::new(),
         }
     }
@@ -380,12 +390,18 @@ impl NodeLogic for TaggedSumLogic {
         }
         prefix_mask(&mut self.mask, items.len(), self.width);
         // fused filter+scale+segmented reduce — ONE invocation per
-        // ensemble (perf pass; was filter_scale + segmented_sum)
-        let (sums, _counts) =
-            self.kernels
-                .tagged_sum_region(&self.vals, &self.seg, &self.mask, self.threshold)?;
+        // ensemble (perf pass; was filter_scale + segmented_sum), written
+        // into the logic-owned staging buffers (no per-firing allocation)
+        self.kernels.tagged_sum_region_into(
+            &self.vals,
+            &self.seg,
+            &self.mask,
+            self.threshold,
+            &mut self.sums,
+            &mut self.counts,
+        )?;
         for s in 0..k {
-            *self.acc.entry(self.uniq[s]).or_insert(0.0) += sums[s] as f64;
+            *self.acc.entry(self.uniq[s]).or_insert(0.0) += self.sums[s] as f64;
         }
         Ok(())
     }

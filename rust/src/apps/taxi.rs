@@ -243,7 +243,7 @@ impl TaxiApp {
                     abs: base + k,
                     line_end: end,
                     tag,
-                }));
+                }))?;
                 off += n;
                 if off < line.len {
                     pipe.run()?;
@@ -374,6 +374,9 @@ struct ClassifyLogic {
     out_kind: StageOneOut,
     chars: Vec<i32>,
     mask: Vec<i32>,
+    /// Kernel output staging, reused across firings (zero-alloc path).
+    flags: Vec<i32>,
+    bits: Vec<i32>,
     line: Option<Rc<TaxiLine>>,
     tag: u32,
 }
@@ -386,6 +389,8 @@ impl ClassifyLogic {
             out_kind,
             chars: vec![0; width],
             mask: Vec::with_capacity(width),
+            flags: vec![0; width],
+            bits: vec![0; width],
             line: None,
             tag: 0,
         }
@@ -430,9 +435,10 @@ impl NodeLogic for ClassifyLogic {
             *slot = 0;
         }
         prefix_mask(&mut self.mask, items.len(), self.width);
-        let (flags, _bits) = self.kernels.char_classify(&self.chars, &self.mask)?;
+        self.kernels
+            .char_classify_into(&self.chars, &self.mask, &mut self.flags, &mut self.bits)?;
         for i in 0..items.len() {
-            if flags[i] != 0 {
+            if self.flags[i] != 0 {
                 match self.out_kind {
                     StageOneOut::InRegion => out.push(Stage1Item::Offset(items[i])),
                     StageOneOut::TaggedCandidates => out.push(Stage1Item::Cand(Candidate {
@@ -467,6 +473,10 @@ struct ParseEnumLogic {
     width: usize,
     windows: Vec<i32>,
     mask: Vec<i32>,
+    /// Kernel output staging, reused across firings (zero-alloc path).
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    oks: Vec<i32>,
     line: Option<Rc<TaxiLine>>,
     tag: u32,
 }
@@ -479,6 +489,9 @@ impl ParseEnumLogic {
             width,
             windows: vec![0; width * wl],
             mask: Vec::with_capacity(width),
+            xs: vec![0.0; width],
+            ys: vec![0.0; width],
+            oks: vec![0; width],
             line: None,
             tag: 0,
         }
@@ -533,13 +546,19 @@ impl NodeLogic for ParseEnumLogic {
             self.windows[i * wl..(i + 1) * wl].fill(0);
         }
         prefix_mask(&mut self.mask, items.len(), self.width);
-        let (xs, ys, oks) = self.kernels.coord_parse(&self.windows, &self.mask)?;
+        self.kernels.coord_parse_into(
+            &self.windows,
+            &self.mask,
+            &mut self.xs,
+            &mut self.ys,
+            &mut self.oks,
+        )?;
         for i in 0..items.len() {
-            if oks[i] != 0 {
+            if self.oks[i] != 0 {
                 out.push(TaxiPair {
                     tag: self.tag,
-                    x: xs[i],
-                    y: ys[i],
+                    x: self.xs[i],
+                    y: self.ys[i],
                 });
             }
         }
@@ -559,6 +578,10 @@ struct ParsePlainLogic {
     text: Arc<Vec<u8>>,
     windows: Vec<i32>,
     mask: Vec<i32>,
+    /// Kernel output staging, reused across firings (zero-alloc path).
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    oks: Vec<i32>,
 }
 
 impl ParsePlainLogic {
@@ -570,6 +593,9 @@ impl ParsePlainLogic {
             text,
             windows: vec![0; width * wl],
             mask: Vec::with_capacity(width),
+            xs: vec![0.0; width],
+            ys: vec![0.0; width],
+            oks: vec![0; width],
         }
     }
 }
@@ -601,17 +627,23 @@ impl NodeLogic for ParsePlainLogic {
             self.windows[i * wl..(i + 1) * wl].fill(0);
         }
         prefix_mask(&mut self.mask, items.len(), self.width);
-        let (xs, ys, oks) = self.kernels.coord_parse(&self.windows, &self.mask)?;
+        self.kernels.coord_parse_into(
+            &self.windows,
+            &self.mask,
+            &mut self.xs,
+            &mut self.ys,
+            &mut self.oks,
+        )?;
         for (i, item) in items.iter().enumerate() {
-            if oks[i] != 0 {
+            if self.oks[i] != 0 {
                 let tag = match item {
                     Stage1Item::Cand(c) => c.tag,
                     Stage1Item::Offset(_) => unreachable!(),
                 };
                 out.push(TaxiPair {
                     tag,
-                    x: xs[i],
-                    y: ys[i],
+                    x: self.xs[i],
+                    y: self.ys[i],
                 });
             }
         }
@@ -636,6 +668,10 @@ struct TaggedClassifyLogic {
     local: Vec<i32>,
     uniq: Vec<u64>,
     tag_scratch: Vec<u64>,
+    /// Kernel output staging, reused across firings (zero-alloc path).
+    flags: Vec<i32>,
+    bits: Vec<i32>,
+    counts: Vec<i32>,
 }
 
 impl TaggedClassifyLogic {
@@ -650,6 +686,9 @@ impl TaggedClassifyLogic {
             local: Vec::with_capacity(width),
             uniq: Vec::with_capacity(width),
             tag_scratch: Vec::with_capacity(width),
+            flags: vec![0; width],
+            bits: vec![0; width],
+            counts: vec![0; width],
         }
     }
 }
@@ -682,11 +721,16 @@ impl NodeLogic for TaggedClassifyLogic {
             *slot = 0;
         }
         prefix_mask(&mut self.mask, items.len(), self.width);
-        let (flags, _bits, _tag_counts) =
-            self.kernels
-                .tagged_char_stage(&self.chars, &self.tags_dense, &self.mask)?;
+        self.kernels.tagged_char_stage_into(
+            &self.chars,
+            &self.tags_dense,
+            &self.mask,
+            &mut self.flags,
+            &mut self.bits,
+            &mut self.counts,
+        )?;
         for (i, c) in items.iter().enumerate() {
-            if flags[i] != 0 {
+            if self.flags[i] != 0 {
                 out.push(Stage1Item::Cand(*c));
             }
         }

@@ -1,0 +1,486 @@
+//! `bench hotpath` — the zero-allocation firing-path sweep.
+//!
+//! Two measurement tiers, both on the native backend (the XLA backend's
+//! PJRT boundary owns its own buffers and would mask the coordinator
+//! cost this PR optimizes):
+//!
+//! 1. **Firing-path microbench** (`firing_path`): a two-stage
+//!    filter→sum flow over real [`DataQueue`]s, region by region, in two
+//!    modes:
+//!    * `legacy` — the pre-PR behaviour: per-item queue pops/pushes and
+//!      `Vec`-allocating scalar kernels ([`native::scalar`]);
+//!    * `hot` — the rewritten path: bulk `pop_into`/`push_slice`,
+//!      staging buffers, in-place branchless kernels.
+//!    The two modes produce bit-identical sums (asserted), so the
+//!    speedup isolates the overhead this PR removes. These are the
+//!    before/after numbers the acceptance criterion quotes.
+//! 2. **App sweep** (`app_rows`): full `SumApp` runs across
+//!    width × region size × scheduling policy, reporting items/sec,
+//!    occupancy and allocations-per-firing (per-thread allocation
+//!    counter over the whole run, construction included — the
+//!    steady-state zero is pinned exactly by `tests/hotpath_alloc.rs`).
+//!
+//! Results are emitted as `BENCH_hotpath.json` (hand-rolled writer; the
+//! vendored JSON module only parses) and checked against
+//! `rust/benches/baselines/hotpath_baseline.json` in CI: the firing-path
+//! speedup at the widest measured width must stay within 20% of the
+//! recorded baseline.
+
+use std::rc::Rc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::apps::sum::{SumApp, SumConfig, SumMode, SumShape};
+use crate::apps::prefix_mask;
+use crate::coordinator::queue::DataQueue;
+use crate::coordinator::scheduler::Policy;
+use crate::runtime::kernels::KernelSet;
+use crate::runtime::native;
+use crate::util::alloc_count;
+use crate::util::json::Json;
+use crate::util::stats::fmt_count;
+use crate::workload::regions::{gen_blobs, RegionSpec};
+
+use super::{time_fn, BenchConfig, Table};
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct HotpathConfig {
+    pub widths: Vec<usize>,
+    /// Total stream items per point.
+    pub items: usize,
+    pub policies: Vec<Policy>,
+    pub bench: BenchConfig,
+    pub seed: u64,
+}
+
+impl HotpathConfig {
+    /// CI smoke shape: small stream, but enough iterations (1 warmup +
+    /// median of 3) that the regression gate compares warmed medians,
+    /// not single cold samples.
+    pub fn smoke() -> HotpathConfig {
+        HotpathConfig {
+            widths: vec![32, 128],
+            items: 1 << 14,
+            policies: vec![Policy::GreedyOccupancy],
+            bench: BenchConfig {
+                warmup_iters: 1,
+                iters: 3,
+            },
+            seed: 0xF16,
+        }
+    }
+}
+
+impl Default for HotpathConfig {
+    fn default() -> Self {
+        HotpathConfig {
+            widths: vec![32, 128],
+            items: 1 << 18,
+            policies: vec![
+                Policy::GreedyOccupancy,
+                Policy::DeepestFirst,
+                Policy::RoundRobin,
+            ],
+            bench: BenchConfig::from_env(),
+            seed: 0xF16,
+        }
+    }
+}
+
+/// One firing-path comparison point.
+#[derive(Debug, Clone)]
+pub struct FiringRow {
+    pub width: usize,
+    pub region: usize,
+    pub legacy_items_per_sec: f64,
+    pub hot_items_per_sec: f64,
+    pub speedup: f64,
+    pub legacy_allocs_per_firing: f64,
+    pub hot_allocs_per_firing: f64,
+}
+
+/// One full-app sweep point.
+#[derive(Debug, Clone)]
+pub struct AppRow {
+    pub width: usize,
+    pub region: usize,
+    pub policy: &'static str,
+    pub items_per_sec: f64,
+    pub occupancy: f64,
+    pub allocs_per_firing: f64,
+}
+
+/// Full report (also the JSON payload).
+#[derive(Debug, Clone)]
+pub struct HotpathReport {
+    pub items: usize,
+    pub firing: Vec<FiringRow>,
+    pub apps: Vec<AppRow>,
+}
+
+/// Run the sweep and print the tables.
+pub fn run(cfg: &HotpathConfig) -> Result<HotpathReport> {
+    let mut firing = Vec::new();
+    let mut apps = Vec::new();
+    for &width in &cfg.widths {
+        for region in [width / 2, width, 4 * width] {
+            if region == 0 {
+                continue;
+            }
+            firing.push(firing_path_point(cfg, width, region)?);
+            for &policy in &cfg.policies {
+                apps.push(app_point(cfg, width, region, policy)?);
+            }
+        }
+    }
+
+    let mut t = Table::new(&[
+        "width", "region", "legacy/s", "hot/s", "speedup", "allocs/firing L", "allocs/firing H",
+    ]);
+    for r in &firing {
+        t.row(&[
+            r.width.to_string(),
+            r.region.to_string(),
+            fmt_count(r.legacy_items_per_sec),
+            fmt_count(r.hot_items_per_sec),
+            format!("{:.2}x", r.speedup),
+            format!("{:.2}", r.legacy_allocs_per_firing),
+            format!("{:.3}", r.hot_allocs_per_firing),
+        ]);
+    }
+    println!("== Hotpath: firing path, legacy (per-item + alloc) vs hot (bulk + in-place) ==");
+    t.print();
+
+    let mut t = Table::new(&["width", "region", "policy", "items/s", "occ%", "allocs/firing"]);
+    for r in &apps {
+        t.row(&[
+            r.width.to_string(),
+            r.region.to_string(),
+            r.policy.to_string(),
+            fmt_count(r.items_per_sec),
+            format!("{:.1}", 100.0 * r.occupancy),
+            format!("{:.3}", r.allocs_per_firing),
+        ]);
+    }
+    println!("== Hotpath: full sum app, width x region x policy ==");
+    t.print();
+
+    Ok(HotpathReport {
+        items: cfg.items,
+        firing,
+        apps,
+    })
+}
+
+/// The firing-path microbench: two-stage filter→sum over real queues.
+fn firing_path_point(cfg: &HotpathConfig, width: usize, region: usize) -> Result<FiringRow> {
+    let blobs = gen_blobs(cfg.items, RegionSpec::Fixed { size: region }, cfg.seed);
+    let (legacy_secs, legacy_allocs, legacy_firings, legacy_sum) =
+        firing_loop(cfg, width, &blobs, true);
+    let (hot_secs, hot_allocs, hot_firings, hot_sum) = firing_loop(cfg, width, &blobs, false);
+    // the two paths are bit-identical by construction (property-tested);
+    // a mismatch here means the bench itself diverged
+    ensure!(
+        legacy_sum.to_bits() == hot_sum.to_bits(),
+        "firing-path modes disagree: legacy {legacy_sum} vs hot {hot_sum}"
+    );
+    // allocations are counted over warmup + timed iterations; firings are
+    // per iteration
+    let iters = (cfg.bench.warmup_iters + cfg.bench.iters.max(1)) as u64;
+    Ok(FiringRow {
+        width,
+        region,
+        legacy_items_per_sec: cfg.items as f64 / legacy_secs,
+        hot_items_per_sec: cfg.items as f64 / hot_secs,
+        speedup: legacy_secs / hot_secs,
+        legacy_allocs_per_firing: legacy_allocs as f64 / (legacy_firings * iters).max(1) as f64,
+        hot_allocs_per_firing: hot_allocs as f64 / (hot_firings * iters).max(1) as f64,
+    })
+}
+
+/// One mode of the microbench. Returns (median secs, allocations during
+/// the timed+warmup iterations, firings per iteration, checksum).
+fn firing_loop(
+    cfg: &HotpathConfig,
+    width: usize,
+    blobs: &[crate::coordinator::enumerate::Blob],
+    legacy: bool,
+) -> (f64, u64, u64, f64) {
+    let mut q1: DataQueue<f32> = DataQueue::new(width);
+    let mut q2: DataQueue<f32> = DataQueue::new(width);
+    let mut vals = vec![0.0f32; width];
+    let mut mask: Vec<i32> = Vec::with_capacity(width);
+    let mut ov = vec![0.0f32; width];
+    let mut om = vec![0i32; width];
+    let mut scratch: Vec<f32> = Vec::with_capacity(width);
+    let mut stage: Vec<f32> = Vec::with_capacity(width);
+    let mut firings = 0u64;
+    let mut sum = 0.0f64;
+    let a0 = alloc_count::thread_allocations();
+    let m = time_fn(cfg.bench, || {
+        firings = 0;
+        sum = 0.0;
+        for blob in blobs {
+            for chunk in blob.elems.chunks(width) {
+                // ---- feed the stage-1 queue ----
+                if legacy {
+                    for &v in chunk {
+                        q1.push(v);
+                    }
+                } else {
+                    q1.push_slice(chunk);
+                }
+                // ---- firing f: filter+scale ----
+                let take = if legacy {
+                    scratch.clear();
+                    while let Some(v) = q1.pop() {
+                        scratch.push(v);
+                    }
+                    scratch.len()
+                } else {
+                    q1.pop_into(width, &mut scratch)
+                };
+                vals[..take].copy_from_slice(&scratch[..take]);
+                for s in vals[take..].iter_mut() {
+                    *s = 0.0;
+                }
+                prefix_mask(&mut mask, take, width);
+                let kept = if legacy {
+                    // pre-PR kernels: fresh output Vecs per firing,
+                    // per-item pushes downstream
+                    let (lov, lom) = native::scalar::filter_scale(&vals, &mask, 0.0);
+                    let mut kept = 0usize;
+                    for i in 0..take {
+                        if lom[i] != 0 {
+                            q2.push(lov[i]);
+                            kept += 1;
+                        }
+                    }
+                    kept
+                } else {
+                    native::filter_scale_into(&vals, &mask, 0.0, &mut ov, &mut om);
+                    stage.clear();
+                    for i in 0..take {
+                        if om[i] != 0 {
+                            stage.push(ov[i]);
+                        }
+                    }
+                    let kept = stage.len();
+                    q2.push_slice(&stage);
+                    kept
+                };
+                firings += 1;
+                // ---- firing a: masked reduction ----
+                let take2 = if legacy {
+                    scratch.clear();
+                    while let Some(v) = q2.pop() {
+                        scratch.push(v);
+                    }
+                    scratch.len()
+                } else {
+                    q2.pop_into(width, &mut scratch)
+                };
+                debug_assert_eq!(take2, kept);
+                vals[..take2].copy_from_slice(&scratch[..take2]);
+                for s in vals[take2..].iter_mut() {
+                    *s = 0.0;
+                }
+                prefix_mask(&mut mask, take2, width);
+                let (partial, _n) = if legacy {
+                    native::scalar::masked_sum(&vals, &mask)
+                } else {
+                    native::masked_sum(&vals, &mask)
+                };
+                sum += partial as f64;
+                firings += 1;
+            }
+        }
+        std::hint::black_box(sum);
+    });
+    let allocs = alloc_count::thread_allocations() - a0;
+    (m.median(), allocs, firings, sum)
+}
+
+/// One full-app sweep point (native backend).
+fn app_point(cfg: &HotpathConfig, width: usize, region: usize, policy: Policy) -> Result<AppRow> {
+    let blobs = gen_blobs(cfg.items, RegionSpec::Fixed { size: region }, cfg.seed);
+    let app = SumApp::new(
+        SumConfig {
+            width,
+            mode: SumMode::Enumerated,
+            shape: SumShape::TwoStage,
+            policy,
+            ..Default::default()
+        },
+        Rc::new(KernelSet::native(width)),
+    );
+    let mut last = None;
+    let mut runs = 0u64;
+    let a0 = alloc_count::thread_allocations();
+    let m = time_fn(cfg.bench, || {
+        last = Some(app.run(&blobs).expect("hotpath sum run"));
+        runs += 1;
+    });
+    let allocs = alloc_count::thread_allocations() - a0;
+    let report = last.expect("at least one iteration");
+    // `runs` counted every closure call (warmup + timed), matching the
+    // window the allocation delta covers
+    let firings_per_run: u64 = report.metrics.nodes.iter().map(|(_, m)| m.firings).sum();
+    let total_firings = firings_per_run * runs;
+    Ok(AppRow {
+        width,
+        region,
+        policy: policy.label(),
+        items_per_sec: cfg.items as f64 / m.median(),
+        occupancy: report.metrics.occupancy(),
+        allocs_per_firing: allocs as f64 / total_firings.max(1) as f64,
+    })
+}
+
+/// Render the report as the `BENCH_hotpath.json` artifact.
+pub fn to_json(report: &HotpathReport) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"hotpath\",\n");
+    s.push_str(&format!("  \"items\": {},\n", report.items));
+    s.push_str("  \"firing_path\": [\n");
+    for (i, r) in report.firing.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"width\": {}, \"region\": {}, \"legacy_items_per_sec\": {:.1}, \
+             \"hot_items_per_sec\": {:.1}, \"speedup\": {:.4}, \
+             \"legacy_allocs_per_firing\": {:.4}, \"hot_allocs_per_firing\": {:.4}}}{}\n",
+            r.width,
+            r.region,
+            r.legacy_items_per_sec,
+            r.hot_items_per_sec,
+            r.speedup,
+            r.legacy_allocs_per_firing,
+            r.hot_allocs_per_firing,
+            if i + 1 < report.firing.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"app_sweep\": [\n");
+    for (i, r) in report.apps.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"width\": {}, \"region\": {}, \"policy\": \"{}\", \
+             \"items_per_sec\": {:.1}, \"occupancy\": {:.4}, \"allocs_per_firing\": {:.4}}}{}\n",
+            r.width,
+            r.region,
+            r.policy,
+            r.items_per_sec,
+            r.occupancy,
+            r.allocs_per_firing,
+            if i + 1 < report.apps.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"best_speedup_at_max_width\": {:.4}\n",
+        best_speedup_at_max_width(report).unwrap_or(0.0)
+    ));
+    s.push_str("}\n");
+    s
+}
+
+/// The acceptance metric: best firing-path speedup among the rows at the
+/// widest measured width.
+pub fn best_speedup_at_max_width(report: &HotpathReport) -> Option<f64> {
+    let w = report.firing.iter().map(|r| r.width).max()?;
+    report
+        .firing
+        .iter()
+        .filter(|r| r.width == w)
+        .map(|r| r.speedup)
+        .fold(None, |acc, s| Some(acc.map_or(s, |a: f64| a.max(s))))
+}
+
+/// CI regression gate: the measured best speedup must stay within 20% of
+/// the checked-in baseline's `min_speedup`.
+pub fn check_against(report: &HotpathReport, baseline_path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(baseline_path)
+        .with_context(|| format!("reading hotpath baseline {baseline_path}"))?;
+    let json = Json::parse(&text).with_context(|| format!("parsing {baseline_path}"))?;
+    let min_speedup = json
+        .get("min_speedup")
+        .and_then(Json::as_f64)
+        .context("baseline missing numeric 'min_speedup'")?;
+    let measured = best_speedup_at_max_width(report).context("no firing-path rows measured")?;
+    let floor = 0.8 * min_speedup;
+    ensure!(
+        measured >= floor,
+        "hotpath regression: firing-path speedup {measured:.2}x is below {floor:.2}x \
+         (80% of the checked-in baseline {min_speedup:.2}x)"
+    );
+    println!("hotpath check: {measured:.2}x >= {floor:.2}x (baseline {min_speedup:.2}x) OK");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> HotpathConfig {
+        HotpathConfig {
+            widths: vec![8],
+            items: 1 << 10,
+            policies: vec![Policy::GreedyOccupancy],
+            bench: BenchConfig {
+                warmup_iters: 0,
+                iters: 1,
+            },
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn smoke_sweep_produces_rows_and_json() {
+        let report = run(&tiny_cfg()).unwrap();
+        assert!(!report.firing.is_empty());
+        assert!(!report.apps.is_empty());
+        for r in &report.firing {
+            assert!(r.hot_items_per_sec > 0.0);
+            assert!(r.speedup > 0.0);
+        }
+        let js = to_json(&report);
+        let parsed = Json::parse(&js).expect("emitted JSON parses");
+        assert!(parsed.get("firing_path").is_some());
+        assert!(parsed.get("app_sweep").is_some());
+    }
+
+    #[test]
+    #[cfg(feature = "count-allocs")] // without the counting allocator both ratios read 0
+    fn hot_mode_allocates_nothing_in_the_loop() {
+        // after the report's own warmup the hot firing loop must be
+        // allocation-free: its per-firing ratio is ~0 even counting the
+        // one-time buffer growth
+        let report = run(&tiny_cfg()).unwrap();
+        for r in &report.firing {
+            assert!(
+                r.hot_allocs_per_firing < 0.5,
+                "hot path allocs/firing {} at width {} region {}",
+                r.hot_allocs_per_firing,
+                r.width,
+                r.region
+            );
+            assert!(
+                r.legacy_allocs_per_firing >= 1.0,
+                "legacy path should allocate every firing, got {}",
+                r.legacy_allocs_per_firing
+            );
+        }
+    }
+
+    #[test]
+    fn check_against_accepts_and_rejects() {
+        let report = run(&tiny_cfg()).unwrap();
+        let dir = std::env::temp_dir();
+        let ok = dir.join("hotpath_baseline_ok.json");
+        std::fs::write(&ok, "{\"min_speedup\": 0.0001}").unwrap();
+        check_against(&report, ok.to_str().unwrap()).unwrap();
+        let bad = dir.join("hotpath_baseline_bad.json");
+        std::fs::write(&bad, "{\"min_speedup\": 1e9}").unwrap();
+        assert!(check_against(&report, bad.to_str().unwrap()).is_err());
+    }
+}

@@ -5,6 +5,7 @@
 //! of the paper's figures.
 
 pub mod figures;
+pub mod hotpath;
 
 use std::time::Instant;
 

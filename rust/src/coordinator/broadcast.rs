@@ -120,7 +120,7 @@ impl<T: Clone + 'static> NodeOps for Broadcast<T> {
         if limit > 0 {
             let take = self.input.pop_data_into(limit, &mut self.scratch);
             for child in &self.outputs {
-                child.push_iter(self.scratch[..take].iter().cloned());
+                child.push_slice(&self.scratch[..take])?;
             }
             if self.credit > 0 {
                 self.credit -= take as u64;

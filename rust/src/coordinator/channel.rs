@@ -11,15 +11,22 @@
 //!
 //! The receiver half (current-credit counter, rules 1/2a/2b) lives in
 //! [`super::node`], which owns the per-node counter.
+//!
+//! Channels carry a name (the builder derives it from the producing
+//! node) so bulk-push overflow surfaces as an error naming the edge
+//! instead of a bare queue panic.
 
 use std::cell::{Cell, RefCell};
 use std::rc::Rc;
+
+use anyhow::{ensure, Result};
 
 use super::queue::{DataQueue, SignalQueue};
 use super::signal::{Signal, SignalKind};
 
 /// A directed edge between two nodes: bounded data and signal queues.
 pub struct Channel<T> {
+    name: String,
     data: RefCell<DataQueue<T>>,
     signals: RefCell<SignalQueue>,
     /// Emitter-side counter for credit rule (2).
@@ -29,11 +36,21 @@ pub struct Channel<T> {
 impl<T> Channel<T> {
     /// New channel with the given queue capacities.
     pub fn new(data_cap: usize, signal_cap: usize) -> Rc<Channel<T>> {
+        Channel::named("chan", data_cap, signal_cap)
+    }
+
+    /// New channel carrying `name` (used in overflow diagnostics).
+    pub fn named(name: impl Into<String>, data_cap: usize, signal_cap: usize) -> Rc<Channel<T>> {
         Rc::new(Channel {
+            name: name.into(),
             data: RefCell::new(DataQueue::new(data_cap)),
             signals: RefCell::new(SignalQueue::new(signal_cap)),
             emitted_since_signal: Cell::new(0),
         })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
     }
 
     // ---- emitter side -----------------------------------------------
@@ -46,20 +63,40 @@ impl<T> Channel<T> {
             .set(self.emitted_since_signal.get() + 1);
     }
 
-    /// Emit a burst of data items with a single queue borrow (perf:
-    /// the per-item `RefCell` borrow in `push` dominates tight feed
-    /// loops — see EXPERIMENTS.md §Perf). Semantically identical to
-    /// pushing each item.
-    pub fn push_iter<I: IntoIterator<Item = T>>(&self, items: I) -> usize {
+    /// Emit a burst of data items with a single queue borrow and one bulk
+    /// append (perf: the per-item `RefCell` borrow in `push` dominates
+    /// tight feed loops — see EXPERIMENTS.md §Perf). Semantically
+    /// identical to pushing each item; overflow is reported as an error
+    /// naming this channel instead of panicking deep in the queue.
+    pub fn push_iter<I>(&self, items: I) -> Result<usize>
+    where
+        I: IntoIterator<Item = T>,
+        I::IntoIter: ExactSizeIterator,
+    {
+        let it = items.into_iter();
+        let n = it.len();
         let mut q = self.data.borrow_mut();
-        let mut n = 0u64;
-        for item in items {
-            q.push(item);
-            n += 1;
-        }
+        ensure!(
+            n <= q.space(),
+            "data queue overflow on channel '{}': pushing {} items into {} free slots (capacity {})",
+            self.name,
+            n,
+            q.space(),
+            q.capacity()
+        );
+        q.extend_bulk(it);
+        drop(q);
         self.emitted_since_signal
-            .set(self.emitted_since_signal.get() + n);
-        n as usize
+            .set(self.emitted_since_signal.get() + n as u64);
+        Ok(n)
+    }
+
+    /// [`Channel::push_iter`] over a slice (bulk clone-in).
+    pub fn push_slice(&self, items: &[T]) -> Result<usize>
+    where
+        T: Clone,
+    {
+        self.push_iter(items.iter().cloned())
     }
 
     /// Emit a signal, assigning credit per the emitter rules.
@@ -98,9 +135,16 @@ impl<T> Channel<T> {
         self.data_len() > 0 || self.signal_len() > 0
     }
 
-    /// Pop up to `n` data items into the ensemble scratch buffer.
+    /// Pop up to `n` data items into the ensemble scratch buffer (one
+    /// borrow, one bulk move).
     pub fn pop_data_into(&self, n: usize, out: &mut Vec<T>) -> usize {
         self.data.borrow_mut().pop_into(n, out)
+    }
+
+    /// Pop a single data item (composite-granularity consumers, e.g. the
+    /// enumerator opening its next parent).
+    pub fn pop_data(&self) -> Option<T> {
+        self.data.borrow_mut().pop()
     }
 
     /// Head signal credit (0 when no signal queued).
@@ -122,6 +166,7 @@ impl<T> Channel<T> {
 impl<T> std::fmt::Debug for Channel<T> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Channel")
+            .field("name", &self.name)
             .field("data_len", &self.data_len())
             .field("signal_len", &self.signal_len())
             .field("emitted_since_signal", &self.emitted_since_signal.get())
@@ -183,15 +228,50 @@ mod tests {
         for i in 0..5 {
             a.push(i);
         }
-        b.push_iter(0..5);
+        b.push_iter(0..5).unwrap();
         a.emit_signal(SignalKind::Custom(0));
         b.emit_signal(SignalKind::Custom(0));
         assert_eq!(a.head_signal_credit(), b.head_signal_credit());
         a.push(9);
-        b.push_iter(std::iter::once(9));
+        b.push_iter(std::iter::once(9)).unwrap();
         a.emit_signal(SignalKind::Custom(1));
         b.emit_signal(SignalKind::Custom(1));
         assert_eq!(a.data_len(), b.data_len());
+    }
+
+    #[test]
+    fn push_slice_matches_push_iter() {
+        let a: Rc<Channel<u32>> = Channel::new(64, 8);
+        let b: Rc<Channel<u32>> = Channel::new(64, 8);
+        a.push_slice(&[1, 2, 3]).unwrap();
+        b.push_iter([1u32, 2, 3].into_iter()).unwrap();
+        let (mut xa, mut xb) = (Vec::new(), Vec::new());
+        a.pop_data_into(8, &mut xa);
+        b.pop_data_into(8, &mut xb);
+        assert_eq!(xa, xb);
+    }
+
+    #[test]
+    fn push_iter_overflow_names_the_channel() {
+        let ch: Rc<Channel<u32>> = Channel::named("f.out", 2, 2);
+        ch.push(0);
+        let err = ch.push_iter(1..4).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("f.out"), "{msg}");
+        assert!(msg.contains("overflow"), "{msg}");
+        // nothing was partially pushed
+        assert_eq!(ch.data_len(), 1);
+    }
+
+    #[test]
+    fn pop_data_pops_single_items_in_order() {
+        let ch: Rc<Channel<u32>> = Channel::new(8, 2);
+        assert_eq!(ch.pop_data(), None);
+        ch.push(7);
+        ch.push(8);
+        assert_eq!(ch.pop_data(), Some(7));
+        assert_eq!(ch.pop_data(), Some(8));
+        assert_eq!(ch.pop_data(), None);
     }
 
     #[test]

@@ -151,11 +151,7 @@ impl<P: Composite> NodeOps for Enumerator<P> {
                     if self.output.signal_space() == 0 {
                         break;
                     }
-                    let Some(p) = ({
-                        let mut tmp = Vec::with_capacity(1);
-                        self.input.pop_data_into(1, &mut tmp);
-                        tmp.pop()
-                    }) else {
+                    let Some(p) = self.input.pop_data() else {
                         break;
                     };
                     let parent = Rc::new(p);
@@ -179,7 +175,7 @@ impl<P: Composite> NodeOps for Enumerator<P> {
                     let burst = (prog.count - prog.next).min(self.output.data_space());
                     if burst > 0 {
                         let lo = prog.next as u32;
-                        self.output.push_iter(lo..lo + burst as u32);
+                        self.output.push_iter(lo..lo + burst as u32)?;
                         prog.next += burst;
                         worked = true;
                     }

@@ -101,26 +101,51 @@ impl<T> Output<T> {
 }
 
 /// Push handle given to [`NodeLogic`] callbacks.
+///
+/// Pushes land in the node's reusable staging buffer — no queue borrow,
+/// no `RefCell` traffic per item. The node flushes the whole stage with a
+/// single bulk [`Channel::push_iter`] borrow after the callback returns
+/// (one queue borrow per phase — see EXPERIMENTS.md §Perf). Flush points
+/// are chosen so the downstream data/signal interleaving is identical to
+/// immediate pushes.
 pub struct Emitter<'a, T> {
-    out: &'a Output<T>,
+    stage: &'a mut Vec<T>,
     /// Items pushed during the current callback (checked against the
     /// logic's declared bounds in debug builds).
     pub pushed: usize,
 }
 
 impl<'a, T> Emitter<'a, T> {
-    pub(crate) fn new(out: &'a Output<T>) -> Emitter<'a, T> {
-        Emitter { out, pushed: 0 }
+    pub(crate) fn new(stage: &'a mut Vec<T>) -> Emitter<'a, T> {
+        // normally empty here (flush drains it), but a callback that
+        // pushed and then errored leaves stale items behind; clearing
+        // keeps a caller-retried fire() from flushing them downstream
+        stage.clear();
+        Emitter { stage, pushed: 0 }
     }
 
     /// Emit one output item.
     pub fn push(&mut self, item: T) {
-        match self.out {
-            Output::Chan(c) => c.push(item),
-            Output::Sink(s) => s.borrow_mut().push(item),
-        }
+        self.stage.push(item);
         self.pushed += 1;
     }
+}
+
+/// Flush a staging buffer downstream: one bulk move for a channel, one
+/// append for a sink. The stage keeps its capacity for the next firing.
+fn flush_stage<T>(stage: &mut Vec<T>, output: &Output<T>) -> Result<()> {
+    if stage.is_empty() {
+        return Ok(());
+    }
+    match output {
+        Output::Chan(c) => {
+            c.push_iter(stage.drain(..))?;
+        }
+        Output::Sink(s) => {
+            s.borrow_mut().append(stage);
+        }
+    }
+    Ok(())
 }
 
 /// Object-safe node interface driven by the scheduler.
@@ -163,6 +188,8 @@ pub struct Node<L: NodeLogic> {
     width: usize,
     metrics: NodeMetrics,
     scratch: Vec<L::In>,
+    /// Reusable output staging flushed once per phase (see [`Emitter`]).
+    stage: Vec<L::Out>,
 }
 
 impl<L: NodeLogic> Node<L> {
@@ -183,6 +210,7 @@ impl<L: NodeLogic> Node<L> {
             width,
             metrics: NodeMetrics::new(width),
             scratch: Vec::with_capacity(width),
+            stage: Vec::with_capacity(width),
         }
     }
 
@@ -241,16 +269,20 @@ impl<L: NodeLogic> Node<L> {
                         self.metrics.signals_emitted += 1;
                     }
                 }
-                let mut em = Emitter::new(&self.output);
+                let mut em = Emitter::new(&mut self.stage);
                 self.logic.begin(&parent, &mut em)?;
-                debug_assert!(em.pushed <= self.logic.max_outputs_per_signal());
+                let pushed = em.pushed;
+                debug_assert!(pushed <= self.logic.max_outputs_per_signal());
+                flush_stage(&mut self.stage, &self.output)?;
             }
             SignalKind::RegionEnd { parent } => {
                 // end() pushes (e.g. an aggregate) belong BEFORE the
-                // downstream region-end boundary
-                let mut em = Emitter::new(&self.output);
+                // downstream region-end boundary: flush before forwarding
+                let mut em = Emitter::new(&mut self.stage);
                 self.logic.end(&parent, &mut em)?;
-                debug_assert!(em.pushed <= self.logic.max_outputs_per_signal());
+                let pushed = em.pushed;
+                debug_assert!(pushed <= self.logic.max_outputs_per_signal());
+                flush_stage(&mut self.stage, &self.output)?;
                 self.parent = None;
                 if self.logic.forward_region_signals() {
                     if let Output::Chan(c) = &self.output {
@@ -260,9 +292,11 @@ impl<L: NodeLogic> Node<L> {
                 }
             }
             SignalKind::Custom(id) => {
-                let mut em = Emitter::new(&self.output);
+                let mut em = Emitter::new(&mut self.stage);
                 self.logic.on_custom(id, &mut em)?;
-                debug_assert!(em.pushed <= self.logic.max_outputs_per_signal());
+                let pushed = em.pushed;
+                debug_assert!(pushed <= self.logic.max_outputs_per_signal());
+                flush_stage(&mut self.stage, &self.output)?;
                 if self.logic.forward_region_signals() {
                     if let Output::Chan(c) = &self.output {
                         c.emit_signal(SignalKind::Custom(id));
@@ -326,14 +360,18 @@ impl<L: NodeLogic> NodeOps for Node<L> {
             let take = self.input.pop_data_into(limit, &mut self.scratch);
             debug_assert!(take >= 1);
             let max_pushed = take * self.logic.max_outputs_per_input().max(1);
-            let mut em = Emitter::new(&self.output);
+            let mut em = Emitter::new(&mut self.stage);
             let parent = self.parent.clone();
             self.logic.run(&self.scratch[..take], parent.as_ref(), &mut em)?;
+            let pushed = em.pushed;
             debug_assert!(
-                em.pushed <= max_pushed,
+                pushed <= max_pushed,
                 "node {} exceeded its declared output bound",
                 self.name
             );
+            // one bulk flush per data phase; space was reserved by
+            // data_limit(), so this cannot overflow
+            flush_stage(&mut self.stage, &self.output)?;
             if self.credit > 0 {
                 self.credit -= take as u64;
             }

@@ -1,10 +1,30 @@
-//! Non-preemptive node scheduler (paper §2.1/§3.2).
+//! Non-preemptive node scheduler (paper §2.1/§3.2) with ready-set
+//! selection.
 //!
 //! One node fires at a time; the scheduler repeatedly selects a fireable
 //! node until no node has pending inputs (quiescence, guaranteed to arrive
 //! by the paper's Lemma 2). If nothing is fireable while work remains the
 //! scheduler reports a deadlock — Lemma 2 says this cannot happen, and the
 //! property suite hammers on exactly that claim.
+//!
+//! ## Ready-set scheduling
+//!
+//! A node's fireability, ready hint and backpressure flag are pure
+//! functions of its queue state plus node-internal state that only
+//! changes when the node itself fires. So instead of re-probing every
+//! node's queues (several `RefCell` borrows each) on every firing, the
+//! scheduler caches a [`ReadyState`] per node and re-evaluates only the
+//! *dirty* set after a firing: the fired node plus the producers of its
+//! input channels and the consumers of its output channels (the
+//! adjacency the [`super::topology::PipelineBuilder`] records while
+//! wiring the graph). Selection then runs over the plain cached structs.
+//! The three-rule `GreedyOccupancy` semantics are bit-identical to the
+//! full rescan: cached values equal freshly computed values for every
+//! non-dirty node because its queues did not change.
+//!
+//! Callers without wiring information ([`Scheduler::run`]) fall back to
+//! refreshing every node after each firing — same decisions, original
+//! scan cost.
 
 use anyhow::{bail, Result};
 
@@ -25,16 +45,55 @@ pub enum Policy {
     RoundRobin,
 }
 
+impl Policy {
+    /// CLI label (round-trips through [`Policy::from_str`]).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::GreedyOccupancy => "greedy",
+            Policy::DeepestFirst => "deepest",
+            Policy::RoundRobin => "rr",
+        }
+    }
+}
+
+impl std::str::FromStr for Policy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Policy> {
+        match s {
+            "greedy" | "greedy-occupancy" => Ok(Policy::GreedyOccupancy),
+            "deepest" | "deepest-first" => Ok(Policy::DeepestFirst),
+            "rr" | "round-robin" => Ok(Policy::RoundRobin),
+            other => bail!("unknown policy {other:?} (use greedy|deepest|rr)"),
+        }
+    }
+}
+
+/// Cached fireability snapshot for one node (valid until one of its
+/// adjacent queues changes).
+#[derive(Debug, Clone, Copy, Default)]
+struct ReadyState {
+    fireable: bool,
+    /// Data-ensemble size a firing would process right now.
+    hint: usize,
+    /// `hint >= width`: could fire a full ensemble.
+    full: bool,
+    /// Input queue too full for upstream to stage a full ensemble.
+    pressured: bool,
+}
+
 /// Scheduler state and counters.
 #[derive(Debug)]
 pub struct Scheduler {
     policy: Policy,
     /// Total firings dispatched.
     pub firings: u64,
-    /// Fireability scans that found no node (should stay 0 mid-run;
-    /// the final quiescence scan is not counted).
+    /// Selection passes that found nothing fireable. A clean run ends
+    /// with exactly one (the final quiescence scan); anything more means
+    /// the scheduler spun without progress mid-run.
     pub idle_polls: u64,
     rr_cursor: usize,
+    /// Ready-set cache, one entry per node (rebuilt at each `run`).
+    states: Vec<ReadyState>,
 }
 
 impl Scheduler {
@@ -44,19 +103,45 @@ impl Scheduler {
             firings: 0,
             idle_polls: 0,
             rr_cursor: 0,
+            states: Vec::new(),
         }
     }
 
-    /// Run nodes to quiescence. `nodes` must be in topology order
-    /// (upstream first).
+    /// Run nodes to quiescence with no wiring information: every firing
+    /// refreshes every node (the pre-ready-set behaviour). `nodes` must
+    /// be in topology order (upstream first).
     pub fn run(&mut self, nodes: &mut [Box<dyn NodeOps>]) -> Result<()> {
+        self.run_with(nodes, None)
+    }
+
+    /// Run nodes to quiescence. When `affected` is given, `affected[i]`
+    /// lists the node indices whose cached state must be refreshed after
+    /// node `i` fires (always including `i` itself); the builder derives
+    /// it from channel wiring. Scheduling decisions are identical either
+    /// way.
+    pub fn run_with(
+        &mut self,
+        nodes: &mut [Box<dyn NodeOps>],
+        affected: Option<&[Vec<usize>]>,
+    ) -> Result<()> {
+        let n = nodes.len();
+        if let Some(adj) = affected {
+            debug_assert_eq!(adj.len(), n, "affected sets must cover every node");
+        }
+        // external feeding between runs invalidates everything
+        self.states.clear();
+        self.states.resize(n, ReadyState::default());
+        for i in 0..n {
+            self.refresh(nodes, i);
+        }
         loop {
-            let fired = match self.policy {
-                Policy::GreedyOccupancy => self.fire_greedy(nodes)?,
-                Policy::DeepestFirst => self.fire_deepest(nodes)?,
-                Policy::RoundRobin => self.fire_round_robin(nodes)?,
+            let pick = match self.policy {
+                Policy::GreedyOccupancy => self.select_greedy(),
+                Policy::DeepestFirst => self.select_deepest(),
+                Policy::RoundRobin => self.select_round_robin(),
             };
-            if !fired {
+            let Some(i) = pick else {
+                self.idle_polls += 1;
                 // Quiescent or deadlocked?
                 if let Some(stuck) = nodes.iter().find(|n| n.has_pending()) {
                     bail!(
@@ -66,72 +151,13 @@ impl Scheduler {
                     );
                 }
                 return Ok(());
+            };
+            let worked = nodes[i].fire()?;
+            self.firings += 1;
+            if matches!(self.policy, Policy::RoundRobin) {
+                self.rr_cursor = (i + 1) % n;
             }
-        }
-    }
-
-    fn fire_greedy(&mut self, nodes: &mut [Box<dyn NodeOps>]) -> Result<bool> {
-        // Three-rule occupancy heuristic:
-        //  1. if any node could fire a FULL ensemble, fire the deepest
-        //     such node (drain at maximum occupancy);
-        //  2. else, if any node is under input BACKPRESSURE (its queue is
-        //     too full for upstream to stage another full ensemble), fire
-        //     the largest-hint such node (ties: deepest): a sub-width
-        //     firing is necessary there, and draining it un-sticks the
-        //     pipeline — otherwise a full queue locks every stage into
-        //     fragmented sub-width firings forever;
-        //  3. else fire the shallowest fireable node, giving upstream
-        //     stages the chance to fill downstream queues before anyone
-        //     runs a premature partial ensemble.
-        // Partial ensembles still happen — at region boundaries (credit
-        // caps) and at end of stream — which is exactly the occupancy
-        // cost the paper measures.
-        let mut full: Option<usize> = None;
-        let mut pressured: Option<(usize, usize)> = None; // (hint, idx)
-        let mut shallowest: Option<usize> = None;
-        for i in 0..nodes.len() {
-            if nodes[i].fireable() {
-                if shallowest.is_none() {
-                    shallowest = Some(i);
-                }
-                let hint = nodes[i].ready_hint();
-                if hint >= nodes[i].metrics().width {
-                    full = Some(i); // keep scanning: deepest full wins
-                } else if nodes[i].input_pressure()
-                    && pressured.map(|(h, j)| (hint, i) >= (h, j)).unwrap_or(true)
-                {
-                    pressured = Some((hint, i));
-                }
-            }
-        }
-        match full.or(pressured.map(|(_, i)| i)).or(shallowest) {
-            Some(i) => {
-                let worked = nodes[i].fire()?;
-                self.firings += 1;
-                if worked {
-                    Ok(true)
-                } else {
-                    bail!(
-                        "node '{}' was fireable but made no progress",
-                        nodes[i].name()
-                    )
-                }
-            }
-            None => {
-                self.idle_polls += 1;
-                Ok(false)
-            }
-        }
-    }
-
-    fn fire_deepest(&mut self, nodes: &mut [Box<dyn NodeOps>]) -> Result<bool> {
-        for i in (0..nodes.len()).rev() {
-            if nodes[i].fireable() {
-                let worked = nodes[i].fire()?;
-                self.firings += 1;
-                if worked {
-                    return Ok(true);
-                }
+            if !worked {
                 // A fireable node that makes no progress would spin the
                 // scheduler forever; surface it loudly.
                 bail!(
@@ -139,30 +165,90 @@ impl Scheduler {
                     nodes[i].name()
                 );
             }
-        }
-        self.idle_polls += 1;
-        Ok(false)
-    }
-
-    fn fire_round_robin(&mut self, nodes: &mut [Box<dyn NodeOps>]) -> Result<bool> {
-        let n = nodes.len();
-        for k in 0..n {
-            let i = (self.rr_cursor + k) % n;
-            if nodes[i].fireable() {
-                let worked = nodes[i].fire()?;
-                self.firings += 1;
-                self.rr_cursor = (i + 1) % n;
-                if worked {
-                    return Ok(true);
+            match affected {
+                Some(adj) => {
+                    for &j in &adj[i] {
+                        self.refresh(nodes, j);
+                    }
                 }
-                bail!(
-                    "node '{}' was fireable but made no progress",
-                    nodes[i].name()
-                );
+                None => {
+                    for j in 0..n {
+                        self.refresh(nodes, j);
+                    }
+                }
             }
         }
-        self.idle_polls += 1;
-        Ok(false)
+    }
+
+    /// Re-probe node `i`'s queues and cache the result. Only the greedy
+    /// policy reads hint/full/pressured, so the other policies skip those
+    /// extra queue probes (the old per-policy scans only called
+    /// `fireable()`).
+    fn refresh(&mut self, nodes: &[Box<dyn NodeOps>], i: usize) {
+        let node = &nodes[i];
+        let fireable = node.fireable();
+        self.states[i] = if fireable && self.policy == Policy::GreedyOccupancy {
+            let hint = node.ready_hint();
+            ReadyState {
+                fireable,
+                hint,
+                full: hint >= node.metrics().width,
+                pressured: node.input_pressure(),
+            }
+        } else {
+            ReadyState {
+                fireable,
+                ..ReadyState::default()
+            }
+        };
+    }
+
+    /// Three-rule occupancy heuristic:
+    ///  1. if any node could fire a FULL ensemble, fire the deepest
+    ///     such node (drain at maximum occupancy);
+    ///  2. else, if any node is under input BACKPRESSURE (its queue is
+    ///     too full for upstream to stage another full ensemble), fire
+    ///     the largest-hint such node (ties: deepest): a sub-width
+    ///     firing is necessary there, and draining it un-sticks the
+    ///     pipeline — otherwise a full queue locks every stage into
+    ///     fragmented sub-width firings forever;
+    ///  3. else fire the shallowest fireable node, giving upstream
+    ///     stages the chance to fill downstream queues before anyone
+    ///     runs a premature partial ensemble.
+    /// Partial ensembles still happen — at region boundaries (credit
+    /// caps) and at end of stream — which is exactly the occupancy
+    /// cost the paper measures.
+    fn select_greedy(&self) -> Option<usize> {
+        let mut full: Option<usize> = None;
+        let mut pressured: Option<(usize, usize)> = None; // (hint, idx)
+        let mut shallowest: Option<usize> = None;
+        for (i, st) in self.states.iter().enumerate() {
+            if !st.fireable {
+                continue;
+            }
+            if shallowest.is_none() {
+                shallowest = Some(i);
+            }
+            if st.full {
+                full = Some(i); // keep scanning: deepest full wins
+            } else if st.pressured
+                && pressured.map(|(h, j)| (st.hint, i) >= (h, j)).unwrap_or(true)
+            {
+                pressured = Some((st.hint, i));
+            }
+        }
+        full.or(pressured.map(|(_, i)| i)).or(shallowest)
+    }
+
+    fn select_deepest(&self) -> Option<usize> {
+        (0..self.states.len()).rev().find(|&i| self.states[i].fireable)
+    }
+
+    fn select_round_robin(&self) -> Option<usize> {
+        let n = self.states.len();
+        (0..n)
+            .map(|k| (self.rr_cursor + k) % n.max(1))
+            .find(|&i| self.states[i].fireable)
     }
 }
 
@@ -175,7 +261,7 @@ mod tests {
     use std::cell::RefCell;
     use std::rc::Rc;
 
-    fn two_stage(policy: Policy) -> (Vec<Box<dyn NodeOps>>, Rc<RefCell<Vec<i64>>>) {
+    fn two_stage() -> (Vec<Box<dyn NodeOps>>, Rc<RefCell<Vec<i64>>>) {
         let ch0: Rc<Channel<i64>> = Channel::new(1024, 8);
         for i in 0..100 {
             ch0.push(i);
@@ -202,7 +288,7 @@ mod tests {
 
     #[test]
     fn deepest_first_drains_pipeline() {
-        let (mut nodes, sink) = two_stage(Policy::DeepestFirst);
+        let (mut nodes, sink) = two_stage();
         let mut s = Scheduler::new(Policy::DeepestFirst);
         s.run(&mut nodes).unwrap();
         let expect: Vec<i64> = (0..100).map(|v| v * 2 + 1).collect();
@@ -213,10 +299,47 @@ mod tests {
 
     #[test]
     fn round_robin_also_drains() {
-        let (mut nodes, sink) = two_stage(Policy::RoundRobin);
+        let (mut nodes, sink) = two_stage();
         let mut s = Scheduler::new(Policy::RoundRobin);
         s.run(&mut nodes).unwrap();
         assert_eq!(sink.borrow().len(), 100);
+    }
+
+    #[test]
+    fn ready_set_with_edges_matches_full_rescan() {
+        // same topology, run once with the all-dirty fallback and once
+        // with explicit adjacency: firings and outputs must be identical
+        let (mut a_nodes, a_sink) = two_stage();
+        let mut a = Scheduler::new(Policy::GreedyOccupancy);
+        a.run(&mut a_nodes).unwrap();
+
+        let (mut b_nodes, b_sink) = two_stage();
+        let mut b = Scheduler::new(Policy::GreedyOccupancy);
+        // chain wiring: firing 0 affects {0,1}; firing 1 affects {0,1}
+        let affected = vec![vec![0, 1], vec![0, 1]];
+        b.run_with(&mut b_nodes, Some(&affected)).unwrap();
+
+        assert_eq!(*a_sink.borrow(), *b_sink.borrow());
+        assert_eq!(a.firings, b.firings);
+        assert_eq!(a.idle_polls, b.idle_polls);
+    }
+
+    #[test]
+    fn policy_parses_and_labels() {
+        for (s, p) in [
+            ("greedy", Policy::GreedyOccupancy),
+            ("deepest", Policy::DeepestFirst),
+            ("rr", Policy::RoundRobin),
+            ("round-robin", Policy::RoundRobin),
+        ] {
+            assert_eq!(s.parse::<Policy>().unwrap(), p);
+        }
+        assert!("bogus".parse::<Policy>().is_err());
+        assert_eq!(Policy::GreedyOccupancy.label(), "greedy");
+        assert_eq!(
+            Policy::DeepestFirst.label().parse::<Policy>().unwrap(),
+            Policy::DeepestFirst
+        );
     }
 
     #[test]

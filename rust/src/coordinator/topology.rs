@@ -33,6 +33,7 @@
 //! ```
 
 use std::cell::RefCell;
+use std::collections::BTreeMap;
 use std::rc::Rc;
 use std::time::Instant;
 
@@ -49,6 +50,11 @@ pub const DEFAULT_DATA_CAP: usize = 4096;
 /// Default signal-queue capacity between stages.
 pub const DEFAULT_SIGNAL_CAP: usize = 1024;
 
+/// Type-erased channel identity (for wiring the scheduler's ready set).
+fn chan_key<T>(ch: &Rc<Channel<T>>) -> usize {
+    Rc::as_ptr(ch) as *const () as usize
+}
+
 /// Incrementally builds a [`Pipeline`].
 pub struct PipelineBuilder {
     width: usize,
@@ -56,6 +62,9 @@ pub struct PipelineBuilder {
     signal_cap: usize,
     policy: Policy,
     nodes: Vec<Box<dyn NodeOps>>,
+    /// Per node: (input channel keys, output channel keys) — the wiring
+    /// the scheduler's ready set is derived from at `build()`.
+    edges: Vec<(Vec<usize>, Vec<usize>)>,
 }
 
 impl PipelineBuilder {
@@ -67,6 +76,7 @@ impl PipelineBuilder {
             signal_cap: DEFAULT_SIGNAL_CAP,
             policy: Policy::GreedyOccupancy,
             nodes: Vec::new(),
+            edges: Vec::new(),
         }
     }
 
@@ -90,7 +100,7 @@ impl PipelineBuilder {
     /// Create the source channel the driver feeds (the paper's initial
     /// input stream). Sized `cap` items.
     pub fn source_with_cap<T: 'static>(&mut self, cap: usize) -> Rc<Channel<T>> {
-        Channel::new(cap, self.signal_cap)
+        Channel::named("source", cap, self.signal_cap)
     }
 
     /// Source channel with the default capacity.
@@ -105,7 +115,9 @@ impl PipelineBuilder {
         input: &Rc<Channel<L::In>>,
         logic: L,
     ) -> Rc<Channel<L::Out>> {
-        let out = Channel::new(self.data_cap, self.signal_cap);
+        let out = Channel::named(format!("{name}.out"), self.data_cap, self.signal_cap);
+        self.edges
+            .push((vec![chan_key(input)], vec![chan_key(&out)]));
         self.nodes.push(Box::new(Node::new(
             name,
             self.width,
@@ -124,7 +136,22 @@ impl PipelineBuilder {
         input: &Rc<Channel<L::In>>,
         logic: L,
     ) -> Rc<RefCell<Vec<L::Out>>> {
-        let sink = Rc::new(RefCell::new(Vec::new()));
+        self.sink_with_cap(name, input, logic, 0)
+    }
+
+    /// [`PipelineBuilder::sink`] with a pre-reserved output buffer, for
+    /// long-running drivers that want to keep sink growth out of the
+    /// steady state (the firing path itself is allocation-free either
+    /// way — sink reallocation is amortized output-buffer growth).
+    pub fn sink_with_cap<L: NodeLogic + 'static>(
+        &mut self,
+        name: &str,
+        input: &Rc<Channel<L::In>>,
+        logic: L,
+        cap: usize,
+    ) -> Rc<RefCell<Vec<L::Out>>> {
+        let sink = Rc::new(RefCell::new(Vec::with_capacity(cap)));
+        self.edges.push((vec![chan_key(input)], Vec::new()));
         self.nodes.push(Box::new(Node::new(
             name,
             self.width,
@@ -142,7 +169,9 @@ impl PipelineBuilder {
         name: &str,
         input: &Rc<Channel<P>>,
     ) -> Rc<Channel<u32>> {
-        let out = Channel::new(self.data_cap, self.signal_cap);
+        let out = Channel::named(format!("{name}.out"), self.data_cap, self.signal_cap);
+        self.edges
+            .push((vec![chan_key(input)], vec![chan_key(&out)]));
         self.nodes.push(Box::new(Enumerator::new(
             name,
             self.width,
@@ -162,8 +191,12 @@ impl PipelineBuilder {
         children: usize,
     ) -> Vec<Rc<Channel<T>>> {
         let outs: Vec<Rc<Channel<T>>> = (0..children)
-            .map(|_| Channel::new(self.data_cap, self.signal_cap))
+            .map(|i| Channel::named(format!("{name}.child{i}"), self.data_cap, self.signal_cap))
             .collect();
+        self.edges.push((
+            vec![chan_key(input)],
+            outs.iter().map(chan_key).collect(),
+        ));
         self.nodes.push(Box::new(super::broadcast::Broadcast::new(
             name,
             self.width,
@@ -173,12 +206,42 @@ impl PipelineBuilder {
         outs
     }
 
-    /// Finish assembly.
+    /// Finish assembly: derive the ready-set adjacency (which nodes to
+    /// re-evaluate after each node fires) from the recorded wiring.
     pub fn build(self) -> Pipeline {
+        let n = self.nodes.len();
+        // every node attached to a channel, in either role — a firing
+        // node can mutate both ends of every channel it touches (pop
+        // data/signals and drain credits on inputs, push data/signals on
+        // outputs), and any other node attached to one of those channels
+        // (sibling consumer of a shared input, sibling producer into a
+        // shared output, the opposite endpoint) reads that state in its
+        // fireable test
+        let mut attached: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, (ins, outs)) in self.edges.iter().enumerate() {
+            for &k in ins.iter().chain(outs) {
+                attached.entry(k).or_default().push(i);
+            }
+        }
+        // node i is attached to each of its own channels, so the pass
+        // below always includes i in affected[i]
+        let mut affected: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, (ins, outs)) in self.edges.iter().enumerate() {
+            for k in ins.iter().chain(outs) {
+                if let Some(nodes) = attached.get(k) {
+                    affected[i].extend(nodes.iter().copied());
+                }
+            }
+        }
+        for a in &mut affected {
+            a.sort_unstable();
+            a.dedup();
+        }
         Pipeline {
             nodes: self.nodes,
             scheduler: Scheduler::new(self.policy),
             elapsed: 0.0,
+            affected,
         }
     }
 }
@@ -188,6 +251,9 @@ pub struct Pipeline {
     nodes: Vec<Box<dyn NodeOps>>,
     scheduler: Scheduler,
     elapsed: f64,
+    /// Ready-set adjacency: `affected[i]` = nodes to re-evaluate after
+    /// node `i` fires.
+    affected: Vec<Vec<usize>>,
 }
 
 impl Pipeline {
@@ -195,7 +261,8 @@ impl Pipeline {
     /// channel between calls); metrics accumulate.
     pub fn run(&mut self) -> Result<()> {
         let start = Instant::now();
-        self.scheduler.run(&mut self.nodes)?;
+        self.scheduler
+            .run_with(&mut self.nodes, Some(&self.affected))?;
         self.elapsed += start.elapsed().as_secs_f64();
         Ok(())
     }

@@ -62,6 +62,20 @@ pub mod simd;
 pub mod util;
 pub mod workload;
 
+/// Counting wrapper over the system allocator: lets the test suite prove
+/// the zero-allocation steady-state firing path and `bench hotpath`
+/// report allocations-per-firing (see [`util::alloc_count`]). Pure
+/// pass-through plus one thread-local increment per allocation.
+///
+/// Gated behind the default-on `count-allocs` feature so embedders can
+/// opt out (`default-features = false`) and keep their own global
+/// allocator; without it [`util::alloc_count::thread_allocations`]
+/// reports a constant 0 and the allocation-proof tests become vacuous.
+#[cfg(feature = "count-allocs")]
+#[global_allocator]
+static GLOBAL_ALLOCATOR: util::alloc_count::CountingAllocator =
+    util::alloc_count::CountingAllocator;
+
 pub mod prelude {
     //! One-stop imports for application authors.
     pub use crate::apps::sum::{SumApp, SumConfig, SumFactory, SumMode, SumReport, SumShape};

@@ -32,13 +32,17 @@ USAGE:
   regatta run sum   [--items N] [--region-size N | --region-max N]
                     [--mode enum|tagged] [--shape fused|two-stage]
                     [--width W] [--backend xla|native] [--threshold T]
+                    [--policy greedy|deepest|rr]
                     [--workers K] [--shards-per-worker S] [--stats] [--verify]
   regatta run taxi  [--lines N] [--replicate K] [--variant enum|hybrid|tagged]
                     [--width W] [--backend xla|native]
+                    [--policy greedy|deepest|rr]
                     [--workers K] [--shards-per-worker S] [--stats]
   regatta bench <fig6|fig7|fig8|scale|penalty|width|lanectx>
                     [--items N] [--width W] [--backend xla|native]
                     [--workers K1,K2,...]
+  regatta bench hotpath [--smoke] [--items N] [--widths W1,W2,...]
+                    [--policy greedy|deepest|rr] [--json FILE] [--check BASELINE]
   regatta info
   regatta --config <file.toml>
 ";
@@ -84,6 +88,7 @@ fn config_to_args(path: &str) -> Result<Args> {
     for key in [
         "items", "region-size", "region-max", "mode", "shape", "width", "backend",
         "threshold", "workers", "shards-per-worker", "lines", "replicate", "variant",
+        "policy",
     ] {
         if let Some(v) = cfg.get("run", &key.replace('-', "_")) {
             let vs = match v {
@@ -105,6 +110,10 @@ fn config_to_args(path: &str) -> Result<Args> {
 
 fn backend(args: &Args) -> Result<BackendSel> {
     args.str_or("backend", "xla").parse()
+}
+
+fn policy(args: &Args) -> Result<regatta::prelude::Policy> {
+    args.str_or("policy", "greedy").parse()
 }
 
 fn exec_config(args: &Args, workers: usize) -> Result<ExecConfig> {
@@ -149,6 +158,7 @@ fn run_sum(args: &Args) -> Result<()> {
         }
     };
     let sel = backend(args)?;
+    let pol = policy(args)?;
     let blobs = gen_blobs(items, spec, args.get_or("seed", 0xF16u64)?);
     let n_regions = blobs.len();
     let cfg = SumConfig {
@@ -156,12 +166,14 @@ fn run_sum(args: &Args) -> Result<()> {
         threshold,
         mode,
         shape,
+        policy: pol,
         ..Default::default()
     };
 
     println!(
         "sum app: {items} items, {n_regions} regions ({spec:?}), width {width}, \
-         {mode:?}/{shape:?}, backend {sel:?}, {workers} worker(s)"
+         {mode:?}/{shape:?}, backend {sel:?}, policy {}, {workers} worker(s)",
+        pol.label()
     );
 
     let (outputs, metrics, elapsed) = if workers <= 1 {
@@ -218,21 +230,24 @@ fn run_taxi(args: &Args) -> Result<()> {
         other => bail!("unknown variant {other:?}"),
     };
     let sel = backend(args)?;
+    let pol = policy(args)?;
     let workers: usize = args.get_or("workers", 1)?;
     let base = generate(lines, TaxiGenConfig::default(), args.get_or("seed", 0xF16u64)?);
     let w = if reps > 1 { replicate(&base, reps) } else { base };
     let chars: usize = w.lines.iter().map(|l| l.len).sum();
     println!(
         "taxi app: {} lines ({} chars, {} pairs), width {width}, {} variant, \
-         backend {sel:?}, {workers} worker(s)",
+         backend {sel:?}, policy {}, {workers} worker(s)",
         w.lines.len(),
         fmt_count(chars as f64),
         w.total_pairs,
-        variant.label()
+        variant.label(),
+        pol.label()
     );
     let cfg = TaxiConfig {
         width,
         variant,
+        policy: pol,
         ..Default::default()
     };
     let (pairs, metrics, elapsed) = if workers <= 1 {
@@ -272,7 +287,10 @@ fn run_bench(args: &Args) -> Result<()> {
     let which = args
         .positional
         .get(1)
-        .context("bench target required: fig6|fig7|fig8|scale|penalty|width|lanectx")?;
+        .context("bench target required: fig6|fig7|fig8|scale|hotpath|penalty|width|lanectx")?;
+    if which == "hotpath" {
+        return run_bench_hotpath(args);
+    }
     let mut cfg = SweepConfig {
         backend: backend(args)?,
         ..Default::default()
@@ -306,6 +324,32 @@ fn run_bench(args: &Args) -> Result<()> {
             figures::ablation_policy(&cfg, args.get_or("lines", 32)?)?;
         }
         other => bail!("unknown bench {other:?}"),
+    }
+    Ok(())
+}
+
+/// `bench hotpath`: firing-path + app sweep, JSON artifact, optional
+/// baseline regression gate (see `rust/src/bench/hotpath.rs`).
+fn run_bench_hotpath(args: &Args) -> Result<()> {
+    use regatta::bench::hotpath;
+    let mut cfg = if args.flag("smoke") {
+        hotpath::HotpathConfig::smoke()
+    } else {
+        hotpath::HotpathConfig::default()
+    };
+    cfg.widths = args.list_or("widths", &cfg.widths)?;
+    cfg.items = args.get_or("items", cfg.items)?;
+    cfg.seed = args.get_or("seed", cfg.seed)?;
+    if args.opt("policy").is_some() {
+        cfg.policies = vec![policy(args)?];
+    }
+    let report = hotpath::run(&cfg)?;
+    let path = args.str_or("json", "BENCH_hotpath.json");
+    std::fs::write(&path, hotpath::to_json(&report))
+        .with_context(|| format!("writing {path}"))?;
+    println!("wrote {path}");
+    if let Some(baseline) = args.opt("check") {
+        hotpath::check_against(&report, baseline)?;
     }
     Ok(())
 }

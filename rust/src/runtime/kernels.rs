@@ -12,12 +12,24 @@
 //! All slices must be exactly `width` lanes; the coordinator owns padding
 //! and masking (occupancy is its concern, not the kernels').
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
 use anyhow::Result;
 
 use super::{lit_f32, lit_i32, lit_i32_2d, native, Engine, KernelName, LoadedKernel};
+
+/// Reusable staging buffers owned by a [`KernelSet`], so wrapper-internal
+/// intermediates (e.g. the native `tagged_char_stage` flag→f32 cast and
+/// segmented-sum outputs) are allocated once and reused across firings —
+/// part of the zero-allocation steady-state contract (EXPERIMENTS.md
+/// §Perf).
+#[derive(Default)]
+struct KernelScratch {
+    f32_a: Vec<f32>,
+    f32_b: Vec<f32>,
+    i32_a: Vec<i32>,
+}
 
 /// Which backend a [`KernelSet`] runs on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -48,6 +60,7 @@ pub struct KernelSet {
     window_len: usize,
     imp: SetImpl,
     native_invocations: Cell<u64>,
+    scratch: RefCell<KernelScratch>,
 }
 
 impl KernelSet {
@@ -58,6 +71,7 @@ impl KernelSet {
             window_len: native::WINDOW_LEN,
             imp: SetImpl::Native,
             native_invocations: Cell::new(0),
+            scratch: RefCell::new(KernelScratch::default()),
         }
     }
 
@@ -77,6 +91,7 @@ impl KernelSet {
                 tagged_char_stage: engine.kernel(KernelName::TaggedCharStage, width)?,
             },
             native_invocations: Cell::new(0),
+            scratch: RefCell::new(KernelScratch::default()),
         })
     }
 
@@ -291,26 +306,198 @@ impl KernelSet {
         tags: &[i32],
         mask: &[i32],
     ) -> Result<(Vec<i32>, Vec<i32>, Vec<i32>)> {
+        let w = chars.len();
+        let mut flags = vec![0i32; w];
+        let mut bits = vec![0i32; w];
+        let mut counts = vec![0i32; w];
+        self.tagged_char_stage_into(chars, tags, mask, &mut flags, &mut bits, &mut counts)?;
+        Ok((flags, bits, counts))
+    }
+
+    // ---- in-place variants (the allocation-free firing hot path) ------
+    //
+    // Each writes into caller-provided slices sized exactly `width`; the
+    // node logics own those buffers and reuse them across firings, so a
+    // steady-state firing performs zero heap allocations on the native
+    // backend. (The XLA backend still allocates inside the PJRT literal
+    // round-trip; buffer donation there is a ROADMAP item.)
+
+    /// [`KernelSet::filter_scale`] into caller slices.
+    pub fn filter_scale_into(
+        &self,
+        vals: &[f32],
+        mask: &[i32],
+        threshold: f32,
+        out_vals: &mut [f32],
+        out_mask: &mut [i32],
+    ) -> Result<()> {
+        self.check_w(vals.len());
+        match &self.imp {
+            SetImpl::Native => {
+                self.tick();
+                native::filter_scale_into(vals, mask, threshold, out_vals, out_mask);
+                Ok(())
+            }
+            SetImpl::Xla { filter_scale, .. } => {
+                let out =
+                    filter_scale.call(&[lit_f32(vals), lit_i32(mask), lit_f32(&[threshold])])?;
+                out_vals.copy_from_slice(&out[0].to_vec::<f32>()?);
+                out_mask.copy_from_slice(&out[1].to_vec::<i32>()?);
+                Ok(())
+            }
+        }
+    }
+
+    /// [`KernelSet::segmented_sum`] into caller slices.
+    pub fn segmented_sum_into(
+        &self,
+        vals: &[f32],
+        seg: &[i32],
+        mask: &[i32],
+        out_sums: &mut [f32],
+        out_counts: &mut [i32],
+    ) -> Result<()> {
+        self.check_w(vals.len());
+        match &self.imp {
+            SetImpl::Native => {
+                self.tick();
+                native::segmented_sum_into(vals, seg, mask, out_sums, out_counts);
+                Ok(())
+            }
+            SetImpl::Xla { segmented_sum, .. } => {
+                let out = segmented_sum.call(&[lit_f32(vals), lit_i32(seg), lit_i32(mask)])?;
+                out_sums.copy_from_slice(&out[0].to_vec::<f32>()?);
+                out_counts.copy_from_slice(&out[1].to_vec::<i32>()?);
+                Ok(())
+            }
+        }
+    }
+
+    /// [`KernelSet::tagged_sum_region`] into caller slices.
+    pub fn tagged_sum_region_into(
+        &self,
+        vals: &[f32],
+        seg: &[i32],
+        mask: &[i32],
+        threshold: f32,
+        out_sums: &mut [f32],
+        out_counts: &mut [i32],
+    ) -> Result<()> {
+        self.check_w(vals.len());
+        match &self.imp {
+            SetImpl::Native => {
+                self.tick();
+                native::tagged_sum_region_into(vals, seg, mask, threshold, out_sums, out_counts);
+                Ok(())
+            }
+            SetImpl::Xla {
+                tagged_sum_region, ..
+            } => {
+                let out = tagged_sum_region.call(&[
+                    lit_f32(vals),
+                    lit_i32(seg),
+                    lit_i32(mask),
+                    lit_f32(&[threshold]),
+                ])?;
+                out_sums.copy_from_slice(&out[0].to_vec::<f32>()?);
+                out_counts.copy_from_slice(&out[1].to_vec::<i32>()?);
+                Ok(())
+            }
+        }
+    }
+
+    /// [`KernelSet::char_classify`] into caller slices.
+    pub fn char_classify_into(
+        &self,
+        chars: &[i32],
+        mask: &[i32],
+        out_flags: &mut [i32],
+        out_bits: &mut [i32],
+    ) -> Result<()> {
         self.check_w(chars.len());
         match &self.imp {
             SetImpl::Native => {
                 self.tick();
-                let (flags, bits) = native::char_classify(chars, mask);
-                let fvals: Vec<f32> = flags.iter().map(|&f| f as f32).collect();
-                let (sums, _) = native::segmented_sum(&fvals, tags, mask);
-                let counts: Vec<i32> = sums.iter().map(|&s| s as i32).collect();
-                Ok((flags, bits, counts))
+                native::char_classify_into(chars, mask, out_flags, out_bits);
+                Ok(())
+            }
+            SetImpl::Xla { char_classify, .. } => {
+                let out = char_classify.call(&[lit_i32(chars), lit_i32(mask)])?;
+                out_flags.copy_from_slice(&out[0].to_vec::<i32>()?);
+                out_bits.copy_from_slice(&out[1].to_vec::<i32>()?);
+                Ok(())
+            }
+        }
+    }
+
+    /// [`KernelSet::coord_parse`] into caller slices.
+    pub fn coord_parse_into(
+        &self,
+        windows: &[i32],
+        mask: &[i32],
+        out_x: &mut [f32],
+        out_y: &mut [f32],
+        out_ok: &mut [i32],
+    ) -> Result<()> {
+        self.check_w(mask.len());
+        debug_assert_eq!(windows.len(), self.width * self.window_len);
+        match &self.imp {
+            SetImpl::Native => {
+                self.tick();
+                native::coord_parse_into(windows, self.window_len, mask, out_x, out_y, out_ok);
+                Ok(())
+            }
+            SetImpl::Xla { coord_parse, .. } => {
+                let out = coord_parse.call(&[
+                    lit_i32_2d(windows, self.width, self.window_len)?,
+                    lit_i32(mask),
+                ])?;
+                out_x.copy_from_slice(&out[0].to_vec::<f32>()?);
+                out_y.copy_from_slice(&out[1].to_vec::<f32>()?);
+                out_ok.copy_from_slice(&out[2].to_vec::<i32>()?);
+                Ok(())
+            }
+        }
+    }
+
+    /// [`KernelSet::tagged_char_stage`] into caller slices. The native
+    /// backend stages its flag→f32 cast and segmented-sum intermediates
+    /// in the set-owned scratch pool — no per-call allocation.
+    pub fn tagged_char_stage_into(
+        &self,
+        chars: &[i32],
+        tags: &[i32],
+        mask: &[i32],
+        out_flags: &mut [i32],
+        out_bits: &mut [i32],
+        out_counts: &mut [i32],
+    ) -> Result<()> {
+        self.check_w(chars.len());
+        match &self.imp {
+            SetImpl::Native => {
+                self.tick();
+                native::char_classify_into(chars, mask, out_flags, out_bits);
+                let mut scratch = self.scratch.borrow_mut();
+                let KernelScratch { f32_a, f32_b, i32_a } = &mut *scratch;
+                f32_a.clear();
+                f32_a.extend(out_flags.iter().map(|&f| f as f32));
+                f32_b.resize(self.width, 0.0);
+                i32_a.resize(self.width, 0);
+                native::segmented_sum_into(f32_a, tags, mask, f32_b, i32_a);
+                for (c, s) in out_counts.iter_mut().zip(f32_b.iter()) {
+                    *c = *s as i32;
+                }
+                Ok(())
             }
             SetImpl::Xla {
                 tagged_char_stage, ..
             } => {
                 let out =
                     tagged_char_stage.call(&[lit_i32(chars), lit_i32(tags), lit_i32(mask)])?;
-                Ok((
-                    out[0].to_vec::<i32>()?,
-                    out[1].to_vec::<i32>()?,
-                    out[2].to_vec::<i32>()?,
-                ))
+                out_flags.copy_from_slice(&out[0].to_vec::<i32>()?);
+                out_bits.copy_from_slice(&out[1].to_vec::<i32>()?);
+                out_counts.copy_from_slice(&out[2].to_vec::<i32>()?);
+                Ok(())
             }
         }
     }
@@ -342,6 +529,49 @@ mod tests {
         assert_eq!(flags, vec![1, 0, 1, 0]);
         assert_eq!(counts[0], 1);
         assert_eq!(counts[1], 1);
+    }
+
+    #[test]
+    fn into_variants_match_vec_apis() {
+        let ks = KernelSet::native(8);
+        let vals = [1.0f32, -2.0, 3.0, 4.0, -5.0, 6.0, 7.0, 8.0];
+        let mask = [1, 1, 1, 1, 1, 1, 0, 0];
+        let seg = [0, 0, 1, 1, 2, 2, 3, 3];
+
+        let (ov, om) = ks.filter_scale(&vals, &mask, 0.0).unwrap();
+        let mut iv = vec![9.0f32; 8];
+        let mut im = vec![9i32; 8];
+        ks.filter_scale_into(&vals, &mask, 0.0, &mut iv, &mut im)
+            .unwrap();
+        assert_eq!(om, im);
+        for (a, b) in ov.iter().zip(&iv) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        let (s, c) = ks.tagged_sum_region(&vals, &seg, &mask, 0.0).unwrap();
+        let mut is = vec![9.0f32; 8];
+        let mut ic = vec![9i32; 8];
+        ks.tagged_sum_region_into(&vals, &seg, &mask, 0.0, &mut is, &mut ic)
+            .unwrap();
+        assert_eq!(c, ic);
+        for (a, b) in s.iter().zip(&is) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn tagged_stage_into_reuses_scratch() {
+        let ks = KernelSet::native(4);
+        let chars: Vec<i32> = "{x{y".bytes().map(|b| b as i32).collect();
+        let tags = [0, 0, 1, 1];
+        let mask = [1, 1, 1, 1];
+        let (mut f, mut b, mut c) = (vec![9; 4], vec![9; 4], vec![9; 4]);
+        for _ in 0..3 {
+            ks.tagged_char_stage_into(&chars, &tags, &mask, &mut f, &mut b, &mut c)
+                .unwrap();
+            assert_eq!(f, vec![1, 0, 1, 0]);
+            assert_eq!(&c[..2], &[1, 1]);
+        }
     }
 
     #[test]

@@ -1,10 +1,25 @@
 //! Pure-Rust implementations of every L1 kernel.
 //!
-//! These mirror `python/compile/kernels/ref.py` operation-for-operation in
-//! f32, so they serve as (a) an in-process oracle for the XLA backend in
-//! integration tests and (b) a no-artifacts backend for fast unit tests of
-//! the coordinator. They are NOT the measured hot path — benches run the
-//! XLA backend.
+//! Two tiers:
+//!
+//! * **Vectorized in-place kernels** (`*_into` plus the scalar-returning
+//!   reductions) — the firing hot path. They write into caller-provided
+//!   `&mut [_]` slices, so a steady-state firing performs **zero heap
+//!   allocations**, and their inner loops are branch-free mask-selects
+//!   over `chunks_exact` blocks that LLVM autovectorizes (compare + blend
+//!   per lane instead of a per-lane branch). Reductions use
+//!   select-on-accumulator (`acc = if keep { acc + x } else { acc }`)
+//!   rather than adding a masked `0.0`, which keeps the f32 accumulation
+//!   bit-identical to the scalar references (adding `0.0` would flip a
+//!   `-0.0` accumulator).
+//! * **[`scalar`]** — the retained per-lane `if` reference
+//!   implementations, mirroring `python/compile/kernels/ref.py`
+//!   operation-for-operation. They are the oracle: the property suite
+//!   (`tests/hotpath_properties.rs`) proves the vectorized kernels
+//!   bit-identical across widths 1..=256, odd tails and all-masked lanes.
+//!
+//! Thin `Vec`-returning shims over the in-place kernels remain for tests
+//! and the XLA-oracle comparisons; they are not the measured hot path.
 
 /// The paper's Fig. 5 scale constant (must match `kernels/filter_scale.py`).
 pub const SCALE: f32 = 3.14;
@@ -15,113 +30,397 @@ pub const WINDOW_LEN: usize = 32;
 /// ASCII of the taxi candidate marker.
 pub const OPEN_BRACE: i32 = 0x7B;
 
-/// `filter_scale`: masked filter (`v > threshold`) + scale.
-pub fn filter_scale(vals: &[f32], mask: &[i32], threshold: f32) -> (Vec<f32>, Vec<i32>) {
-    let mut ov = vec![0.0f32; vals.len()];
-    let mut om = vec![0i32; vals.len()];
-    for i in 0..vals.len() {
-        if mask[i] != 0 && vals[i] > threshold {
-            ov[i] = SCALE * vals[i];
-            om[i] = 1;
+/// Block size for the `chunks_exact` inner loops (a SIMD register's worth
+/// of f32 lanes on the narrowest targets we care about).
+const LANES: usize = 8;
+
+pub mod scalar {
+    //! Retained scalar reference implementations (per-lane `if`s, fresh
+    //! output `Vec`s) — the oracle the vectorized in-place kernels are
+    //! property-tested bit-identical against, and the "pre-PR" baseline
+    //! the `bench hotpath` firing-path comparison measures.
+
+    use super::{parse_window, OPEN_BRACE, SCALE};
+
+    /// `filter_scale`: masked filter (`v > threshold`) + scale.
+    pub fn filter_scale(vals: &[f32], mask: &[i32], threshold: f32) -> (Vec<f32>, Vec<i32>) {
+        let mut ov = vec![0.0f32; vals.len()];
+        let mut om = vec![0i32; vals.len()];
+        for i in 0..vals.len() {
+            if mask[i] != 0 && vals[i] > threshold {
+                ov[i] = SCALE * vals[i];
+                om[i] = 1;
+            }
         }
+        (ov, om)
     }
-    (ov, om)
+
+    /// `masked_sum`: sum + count of active lanes.
+    pub fn masked_sum(vals: &[f32], mask: &[i32]) -> (f32, i32) {
+        let mut s = 0.0f32;
+        let mut c = 0i32;
+        for i in 0..vals.len() {
+            if mask[i] != 0 {
+                s += vals[i];
+                c += 1;
+            }
+        }
+        (s, c)
+    }
+
+    /// `sum_region`: fused filter+scale+sum.
+    pub fn sum_region(vals: &[f32], mask: &[i32], threshold: f32) -> (f32, i32) {
+        let mut s = 0.0f32;
+        let mut k = 0i32;
+        for i in 0..vals.len() {
+            if mask[i] != 0 && vals[i] > threshold {
+                s += SCALE * vals[i];
+                k += 1;
+            }
+        }
+        (s, k)
+    }
+
+    /// `segmented_sum`: per-segment sums/counts (segment ids in `[0, w)`).
+    pub fn segmented_sum(vals: &[f32], seg: &[i32], mask: &[i32]) -> (Vec<f32>, Vec<i32>) {
+        let w = vals.len();
+        let mut sums = vec![0.0f32; w];
+        let mut counts = vec![0i32; w];
+        for i in 0..w {
+            if mask[i] != 0 {
+                let s = seg[i] as usize;
+                sums[s] += vals[i];
+                counts[s] += 1;
+            }
+        }
+        (sums, counts)
+    }
+
+    /// `tagged_sum_region`: fused filter+scale+segmented-sum.
+    pub fn tagged_sum_region(
+        vals: &[f32],
+        seg: &[i32],
+        mask: &[i32],
+        threshold: f32,
+    ) -> (Vec<f32>, Vec<i32>) {
+        let w = vals.len();
+        let mut sums = vec![0.0f32; w];
+        let mut counts = vec![0i32; w];
+        for i in 0..w {
+            if mask[i] != 0 && vals[i] > threshold {
+                let s = seg[i] as usize;
+                sums[s] += SCALE * vals[i];
+                counts[s] += 1;
+            }
+        }
+        (sums, counts)
+    }
+
+    /// `char_classify`: candidate flag + class bitmap.
+    pub fn char_classify(chars: &[i32], mask: &[i32]) -> (Vec<i32>, Vec<i32>) {
+        let w = chars.len();
+        let mut flags = vec![0i32; w];
+        let mut bits = vec![0i32; w];
+        for i in 0..w {
+            if mask[i] == 0 {
+                continue;
+            }
+            let c = chars[i];
+            if c == OPEN_BRACE {
+                flags[i] = 1;
+            }
+            let mut k = 0;
+            if (0x30..=0x39).contains(&c) {
+                k += 1;
+            }
+            if c == 0x2E {
+                k += 2;
+            }
+            if c == 0x2C {
+                k += 4;
+            }
+            if c == 0x2D {
+                k += 8;
+            }
+            if c == 0x7D {
+                k += 16;
+            }
+            bits[i] = k;
+        }
+        (flags, bits)
+    }
+
+    /// `coord_parse`: per-lane window parse with swapped output.
+    pub fn coord_parse(
+        windows: &[i32],
+        window_len: usize,
+        mask: &[i32],
+    ) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+        let w = mask.len();
+        debug_assert_eq!(windows.len(), w * window_len);
+        let mut x = vec![0.0f32; w];
+        let mut y = vec![0.0f32; w];
+        let mut ok = vec![0i32; w];
+        for i in 0..w {
+            if mask[i] == 0 {
+                continue;
+            }
+            let (a, b, good) = parse_window(&windows[i * window_len..(i + 1) * window_len]);
+            if good {
+                x[i] = b;
+                y[i] = a;
+                ok[i] = 1;
+            }
+        }
+        (x, y, ok)
+    }
 }
 
-/// `masked_sum`: sum + count of active lanes.
+// ---- vectorized in-place kernels (the firing hot path) -----------------
+
+/// `filter_scale` into caller slices: per-lane `keep = mask & (v > t)`
+/// select, no branches, no allocation. Bit-identical to
+/// [`scalar::filter_scale`] (a rejected lane writes exactly `0.0`, not a
+/// mask-multiplied `-0.0`).
+pub fn filter_scale_into(
+    vals: &[f32],
+    mask: &[i32],
+    threshold: f32,
+    out_vals: &mut [f32],
+    out_mask: &mut [i32],
+) {
+    let n = vals.len();
+    debug_assert_eq!(mask.len(), n);
+    debug_assert_eq!(out_vals.len(), n);
+    debug_assert_eq!(out_mask.len(), n);
+    let mut vc = vals.chunks_exact(LANES);
+    let mut mc = mask.chunks_exact(LANES);
+    let mut ovc = out_vals.chunks_exact_mut(LANES);
+    let mut omc = out_mask.chunks_exact_mut(LANES);
+    for (((v, m), ov), om) in (&mut vc).zip(&mut mc).zip(&mut ovc).zip(&mut omc) {
+        for k in 0..LANES {
+            let keep = ((m[k] != 0) & (v[k] > threshold)) as i32;
+            om[k] = keep;
+            ov[k] = if keep != 0 { SCALE * v[k] } else { 0.0 };
+        }
+    }
+    for (((v, m), ov), om) in vc
+        .remainder()
+        .iter()
+        .zip(mc.remainder())
+        .zip(ovc.into_remainder())
+        .zip(omc.into_remainder())
+    {
+        let keep = ((*m != 0) & (*v > threshold)) as i32;
+        *om = keep;
+        *ov = if keep != 0 { SCALE * *v } else { 0.0 };
+    }
+}
+
+/// `masked_sum`: sum + count of active lanes. Select-on-accumulator keeps
+/// the accumulation order (and bits) identical to [`scalar::masked_sum`].
 pub fn masked_sum(vals: &[f32], mask: &[i32]) -> (f32, i32) {
+    debug_assert_eq!(mask.len(), vals.len());
     let mut s = 0.0f32;
     let mut c = 0i32;
-    for i in 0..vals.len() {
-        if mask[i] != 0 {
-            s += vals[i];
-            c += 1;
-        }
+    for (v, m) in vals.iter().zip(mask) {
+        let keep = *m != 0;
+        s = if keep { s + *v } else { s };
+        c += keep as i32;
     }
     (s, c)
 }
 
-/// `sum_region`: fused filter+scale+sum.
+/// `sum_region`: fused filter+scale+sum, branch-free select per lane.
 pub fn sum_region(vals: &[f32], mask: &[i32], threshold: f32) -> (f32, i32) {
+    debug_assert_eq!(mask.len(), vals.len());
     let mut s = 0.0f32;
     let mut k = 0i32;
-    for i in 0..vals.len() {
-        if mask[i] != 0 && vals[i] > threshold {
-            s += SCALE * vals[i];
-            k += 1;
-        }
+    for (v, m) in vals.iter().zip(mask) {
+        let keep = (*m != 0) & (*v > threshold);
+        s = if keep { s + SCALE * *v } else { s };
+        k += keep as i32;
     }
     (s, k)
 }
 
-/// `segmented_sum`: per-segment sums/counts (segment ids in `[0, w)`).
-pub fn segmented_sum(vals: &[f32], seg: &[i32], mask: &[i32]) -> (Vec<f32>, Vec<i32>) {
+/// `segmented_sum` into caller slices (`out_*` are fully overwritten).
+/// The per-lane scatter keeps its guard — a masked lane's segment id may
+/// be garbage and must not be touched.
+pub fn segmented_sum_into(
+    vals: &[f32],
+    seg: &[i32],
+    mask: &[i32],
+    out_sums: &mut [f32],
+    out_counts: &mut [i32],
+) {
     let w = vals.len();
-    let mut sums = vec![0.0f32; w];
-    let mut counts = vec![0i32; w];
+    debug_assert_eq!(seg.len(), w);
+    debug_assert_eq!(mask.len(), w);
+    debug_assert_eq!(out_sums.len(), w);
+    debug_assert_eq!(out_counts.len(), w);
+    out_sums.fill(0.0);
+    out_counts.fill(0);
     for i in 0..w {
         if mask[i] != 0 {
             let s = seg[i] as usize;
-            sums[s] += vals[i];
-            counts[s] += 1;
+            out_sums[s] += vals[i];
+            out_counts[s] += 1;
         }
     }
+}
+
+/// `tagged_sum_region` into caller slices: fused filter+scale+segmented
+/// sum, zero allocation (perf-pass kernel; one invocation per tagged
+/// ensemble instead of two).
+pub fn tagged_sum_region_into(
+    vals: &[f32],
+    seg: &[i32],
+    mask: &[i32],
+    threshold: f32,
+    out_sums: &mut [f32],
+    out_counts: &mut [i32],
+) {
+    let w = vals.len();
+    debug_assert_eq!(seg.len(), w);
+    debug_assert_eq!(mask.len(), w);
+    debug_assert_eq!(out_sums.len(), w);
+    debug_assert_eq!(out_counts.len(), w);
+    out_sums.fill(0.0);
+    out_counts.fill(0);
+    for i in 0..w {
+        if mask[i] != 0 && vals[i] > threshold {
+            let s = seg[i] as usize;
+            out_sums[s] += SCALE * vals[i];
+            out_counts[s] += 1;
+        }
+    }
+}
+
+/// `char_classify` into caller slices: fully branch-free integer lanes
+/// (`flag = act · (c=='{')`, `bits = act · Σ 2^j·(c==marker_j)`).
+pub fn char_classify_into(chars: &[i32], mask: &[i32], out_flags: &mut [i32], out_bits: &mut [i32]) {
+    let n = chars.len();
+    debug_assert_eq!(mask.len(), n);
+    debug_assert_eq!(out_flags.len(), n);
+    debug_assert_eq!(out_bits.len(), n);
+    let classify = |c: i32, m: i32| -> (i32, i32) {
+        let act = (m != 0) as i32;
+        let flag = act * (c == OPEN_BRACE) as i32;
+        let bits = ((0x30..=0x39).contains(&c) as i32)
+            + 2 * (c == 0x2E) as i32
+            + 4 * (c == 0x2C) as i32
+            + 8 * (c == 0x2D) as i32
+            + 16 * (c == 0x7D) as i32;
+        (flag, act * bits)
+    };
+    let mut cc = chars.chunks_exact(LANES);
+    let mut mc = mask.chunks_exact(LANES);
+    let mut fc = out_flags.chunks_exact_mut(LANES);
+    let mut bc = out_bits.chunks_exact_mut(LANES);
+    for (((c, m), f), b) in (&mut cc).zip(&mut mc).zip(&mut fc).zip(&mut bc) {
+        for k in 0..LANES {
+            let (flag, bits) = classify(c[k], m[k]);
+            f[k] = flag;
+            b[k] = bits;
+        }
+    }
+    for (((c, m), f), b) in cc
+        .remainder()
+        .iter()
+        .zip(mc.remainder())
+        .zip(fc.into_remainder())
+        .zip(bc.into_remainder())
+    {
+        let (flag, bits) = classify(*c, *m);
+        *f = flag;
+        *b = bits;
+    }
+}
+
+/// `coord_parse` into caller slices (`out_*` fully overwritten). The
+/// per-lane window parse is inherently branchy; the win here is the
+/// allocation-free output path.
+pub fn coord_parse_into(
+    windows: &[i32],
+    window_len: usize,
+    mask: &[i32],
+    out_x: &mut [f32],
+    out_y: &mut [f32],
+    out_ok: &mut [i32],
+) {
+    let w = mask.len();
+    debug_assert_eq!(windows.len(), w * window_len);
+    debug_assert_eq!(out_x.len(), w);
+    debug_assert_eq!(out_y.len(), w);
+    debug_assert_eq!(out_ok.len(), w);
+    for i in 0..w {
+        out_x[i] = 0.0;
+        out_y[i] = 0.0;
+        out_ok[i] = 0;
+        if mask[i] == 0 {
+            continue;
+        }
+        let (a, b, good) = parse_window(&windows[i * window_len..(i + 1) * window_len]);
+        if good {
+            out_x[i] = b;
+            out_y[i] = a;
+            out_ok[i] = 1;
+        }
+    }
+}
+
+// ---- Vec-returning shims (tests / XLA-oracle comparisons) --------------
+
+/// `filter_scale` shim over [`filter_scale_into`].
+pub fn filter_scale(vals: &[f32], mask: &[i32], threshold: f32) -> (Vec<f32>, Vec<i32>) {
+    let mut ov = vec![0.0f32; vals.len()];
+    let mut om = vec![0i32; vals.len()];
+    filter_scale_into(vals, mask, threshold, &mut ov, &mut om);
+    (ov, om)
+}
+
+/// `segmented_sum` shim over [`segmented_sum_into`].
+pub fn segmented_sum(vals: &[f32], seg: &[i32], mask: &[i32]) -> (Vec<f32>, Vec<i32>) {
+    let mut sums = vec![0.0f32; vals.len()];
+    let mut counts = vec![0i32; vals.len()];
+    segmented_sum_into(vals, seg, mask, &mut sums, &mut counts);
     (sums, counts)
 }
 
-/// `tagged_sum_region`: fused filter+scale+segmented-sum (perf-pass
-/// kernel; one invocation per tagged ensemble instead of two).
+/// `tagged_sum_region` shim over [`tagged_sum_region_into`].
 pub fn tagged_sum_region(
     vals: &[f32],
     seg: &[i32],
     mask: &[i32],
     threshold: f32,
 ) -> (Vec<f32>, Vec<i32>) {
-    let w = vals.len();
-    let mut sums = vec![0.0f32; w];
-    let mut counts = vec![0i32; w];
-    for i in 0..w {
-        if mask[i] != 0 && vals[i] > threshold {
-            let s = seg[i] as usize;
-            sums[s] += SCALE * vals[i];
-            counts[s] += 1;
-        }
-    }
+    let mut sums = vec![0.0f32; vals.len()];
+    let mut counts = vec![0i32; vals.len()];
+    tagged_sum_region_into(vals, seg, mask, threshold, &mut sums, &mut counts);
     (sums, counts)
 }
 
-/// `char_classify`: candidate flag + class bitmap.
+/// `char_classify` shim over [`char_classify_into`].
 pub fn char_classify(chars: &[i32], mask: &[i32]) -> (Vec<i32>, Vec<i32>) {
-    let w = chars.len();
-    let mut flags = vec![0i32; w];
-    let mut bits = vec![0i32; w];
-    for i in 0..w {
-        if mask[i] == 0 {
-            continue;
-        }
-        let c = chars[i];
-        if c == OPEN_BRACE {
-            flags[i] = 1;
-        }
-        let mut k = 0;
-        if (0x30..=0x39).contains(&c) {
-            k += 1;
-        }
-        if c == 0x2E {
-            k += 2;
-        }
-        if c == 0x2C {
-            k += 4;
-        }
-        if c == 0x2D {
-            k += 8;
-        }
-        if c == 0x7D {
-            k += 16;
-        }
-        bits[i] = k;
-    }
+    let mut flags = vec![0i32; chars.len()];
+    let mut bits = vec![0i32; chars.len()];
+    char_classify_into(chars, mask, &mut flags, &mut bits);
     (flags, bits)
+}
+
+/// `coord_parse` shim over [`coord_parse_into`].
+pub fn coord_parse(
+    windows: &[i32],
+    window_len: usize,
+    mask: &[i32],
+) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+    let w = mask.len();
+    let mut x = vec![0.0f32; w];
+    let mut y = vec![0.0f32; w];
+    let mut ok = vec![0i32; w];
+    coord_parse_into(windows, window_len, mask, &mut x, &mut y, &mut ok);
+    (x, y, ok)
 }
 
 /// Parse one `{a,b}` window. Returns `(a, b, ok)`; arithmetic is f32
@@ -188,32 +487,6 @@ pub fn parse_window(window: &[i32]) -> (f32, f32, bool) {
     (0.0, 0.0, false) // ran out of window without '}'
 }
 
-/// `coord_parse`: per-lane window parse with swapped output
-/// (`x` = second field, `y` = first field).
-pub fn coord_parse(
-    windows: &[i32],
-    window_len: usize,
-    mask: &[i32],
-) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
-    let w = mask.len();
-    debug_assert_eq!(windows.len(), w * window_len);
-    let mut x = vec![0.0f32; w];
-    let mut y = vec![0.0f32; w];
-    let mut ok = vec![0i32; w];
-    for i in 0..w {
-        if mask[i] == 0 {
-            continue;
-        }
-        let (a, b, good) = parse_window(&windows[i * window_len..(i + 1) * window_len]);
-        if good {
-            x[i] = b;
-            y[i] = a;
-            ok[i] = 1;
-        }
-    }
-    (x, y, ok)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,6 +505,33 @@ mod tests {
         assert_eq!(om, vec![1, 0, 0]);
         assert!((ov[0] - SCALE).abs() < 1e-6);
         assert_eq!(ov[1], 0.0);
+    }
+
+    #[test]
+    fn into_kernels_overwrite_stale_outputs() {
+        // caller slices start with garbage; every lane must be rewritten
+        let vals = [1.0f32, -2.0, 3.0, 4.0, 5.0, -6.0, 7.0, 8.0, 9.0];
+        let mask = [1, 1, 0, 1, 1, 1, 0, 1, 1];
+        let mut ov = vec![99.0f32; 9];
+        let mut om = vec![-7i32; 9];
+        filter_scale_into(&vals, &mask, 0.0, &mut ov, &mut om);
+        let (sv, sm) = scalar::filter_scale(&vals, &mask, 0.0);
+        assert_eq!(om, sm);
+        for (a, b) in ov.iter().zip(&sv) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn branchless_sums_match_scalar_bitwise() {
+        let vals = [1.5f32, -2.25, 3.0, 0.5, -0.75, 8.25, 1.125];
+        let mask = [1, 0, 1, 1, 1, 0, 1];
+        let (s, c) = masked_sum(&vals, &mask);
+        let (ss, sc) = scalar::masked_sum(&vals, &mask);
+        assert_eq!((s.to_bits(), c), (ss.to_bits(), sc));
+        let (r, k) = sum_region(&vals, &mask, 0.4);
+        let (sr, sk) = scalar::sum_region(&vals, &mask, 0.4);
+        assert_eq!((r.to_bits(), k), (sr.to_bits(), sk));
     }
 
     #[test]

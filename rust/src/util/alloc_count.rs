@@ -1,0 +1,90 @@
+//! Per-thread heap-allocation counting through a wrapping global
+//! allocator.
+//!
+//! [`CountingAllocator`] (installed as the crate's `#[global_allocator]`
+//! in `lib.rs`) forwards every request to the system allocator and bumps
+//! a thread-local counter on each `alloc`/`alloc_zeroed`/`realloc`. The
+//! counter is **per thread**, so a test can assert allocation behaviour
+//! of its own code without interference from sibling tests running
+//! concurrently in the same binary.
+//!
+//! This is how the suite *proves* the tentpole invariant — the
+//! steady-state firing path performs **zero heap allocations per
+//! ensemble** (see `tests/hotpath_alloc.rs`) — and how `bench hotpath`
+//! reports allocations-per-firing.
+//!
+//! Overhead: one thread-local increment per allocation; frees are not
+//! counted (a steady state is defined by not *requesting* memory).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Heap allocations made by the calling thread since it started
+/// (monotonic; take deltas around the code under measurement).
+pub fn thread_allocations() -> u64 {
+    ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+#[inline]
+fn bump() {
+    // try_with: the TLS slot may be unavailable during thread teardown
+    let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+/// System allocator wrapper that counts per-thread allocation requests.
+pub struct CountingAllocator;
+
+// SAFETY: pure pass-through to `System`; the counter is a const-initialized
+// thread-local Cell, so no allocation or locking happens on the count path.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg(feature = "count-allocs")]
+    fn counts_this_threads_allocations() {
+        let before = thread_allocations();
+        let v: Vec<u64> = Vec::with_capacity(32);
+        let after = thread_allocations();
+        assert!(after > before, "Vec::with_capacity must register");
+        drop(v);
+        // frees don't count
+        assert_eq!(thread_allocations(), after);
+    }
+
+    #[test]
+    fn counter_is_monotonic_and_cheap_for_alloc_free_code() {
+        let before = thread_allocations();
+        let mut x = 0u64;
+        for i in 0..1000u64 {
+            x = x.wrapping_add(i);
+        }
+        std::hint::black_box(x);
+        assert_eq!(thread_allocations(), before);
+    }
+}

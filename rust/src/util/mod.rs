@@ -5,6 +5,8 @@
 //! proptest, …) are unavailable. Everything the framework needs beyond that
 //! closure is implemented here as small, tested modules:
 //!
+//! * [`alloc_count`] — per-thread allocation counting (the zero-alloc
+//!   firing-path proof and the `bench hotpath` allocs-per-firing metric).
 //! * [`cli`] — argument parsing for the launcher.
 //! * [`config`] — TOML-subset config loader for launch configs.
 //! * [`json`] — minimal JSON parser (reads `artifacts/manifest.json`).
@@ -13,6 +15,7 @@
 //! * [`minicheck`] — property-based testing harness (sized generation,
 //!   seed-reproducible failures).
 
+pub mod alloc_count;
 pub mod cli;
 pub mod config;
 pub mod json;

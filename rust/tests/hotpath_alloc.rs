@@ -1,0 +1,236 @@
+//! The tentpole invariant, pinned: **the steady-state firing path
+//! performs zero heap allocations per ensemble.**
+//!
+//! The crate's global allocator counts per-thread allocations
+//! (`regatta::util::alloc_count`), so these tests are deterministic even
+//! with sibling tests running concurrently in the same binary.
+//!
+//! Two tiers:
+//! * node-level — after a warmup firing has grown every reusable buffer
+//!   (ensemble scratch, kernel staging, emitter stage, pre-reserved
+//!   rings), hundreds of further firings must allocate **exactly zero**
+//!   bytes;
+//! * pipeline-level — a full enumerated sum run's allocation count must
+//!   not scale with the number of ensembles (same region count, 50x the
+//!   elements → same allocations).
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use regatta::apps::prefix_mask;
+use regatta::apps::sum::{SumApp, SumConfig, SumMode, SumShape};
+use regatta::coordinator::channel::Channel;
+use regatta::coordinator::node::{Emitter, Node, NodeLogic, NodeOps, Output};
+use regatta::coordinator::signal::ParentRef;
+use regatta::runtime::kernels::KernelSet;
+use regatta::util::alloc_count;
+use regatta::workload::regions::{gen_blobs, RegionSpec};
+
+const W: usize = 16;
+
+/// Filter+scale stage using the in-place kernel with logic-owned buffers
+/// (the shape every app stage uses after this PR).
+struct FilterStage {
+    ks: Rc<KernelSet>,
+    vals: Vec<f32>,
+    mask: Vec<i32>,
+    ov: Vec<f32>,
+    om: Vec<i32>,
+}
+
+impl FilterStage {
+    fn new(ks: Rc<KernelSet>) -> FilterStage {
+        FilterStage {
+            ks,
+            vals: vec![0.0; W],
+            mask: Vec::with_capacity(W),
+            ov: vec![0.0; W],
+            om: vec![0; W],
+        }
+    }
+}
+
+impl NodeLogic for FilterStage {
+    type In = f32;
+    type Out = f32;
+
+    fn run(
+        &mut self,
+        items: &[f32],
+        _parent: Option<&ParentRef>,
+        out: &mut Emitter<'_, f32>,
+    ) -> Result<()> {
+        self.vals[..items.len()].copy_from_slice(items);
+        for s in self.vals[items.len()..].iter_mut() {
+            *s = 0.0;
+        }
+        prefix_mask(&mut self.mask, items.len(), W);
+        self.ks
+            .filter_scale_into(&self.vals, &self.mask, 0.0, &mut self.ov, &mut self.om)?;
+        for i in 0..items.len() {
+            if self.om[i] != 0 {
+                out.push(self.ov[i]);
+            }
+        }
+        Ok(())
+    }
+
+    fn max_outputs_per_input(&self) -> usize {
+        1
+    }
+}
+
+#[test]
+fn steady_state_node_firing_allocates_exactly_zero() {
+    let input: Rc<Channel<f32>> = Channel::new(4 * W, 8);
+    let out: Rc<Channel<f32>> = Channel::new(4 * W, 8);
+    let mut node = Node::new(
+        "f",
+        W,
+        input.clone(),
+        Output::Chan(out.clone()),
+        FilterStage::new(Rc::new(KernelSet::native(W))),
+    );
+    let mut drain: Vec<f32> = Vec::with_capacity(4 * W);
+
+    // warmup: grow every reusable buffer to steady state
+    for _ in 0..3 {
+        for i in 0..W {
+            input.push(i as f32 + 1.0);
+        }
+        assert!(node.fire().unwrap());
+        out.pop_data_into(usize::MAX, &mut drain);
+        assert_eq!(drain.len(), W); // all positive values survive
+    }
+
+    // steady state: feed + fire + drain, several hundred ensembles
+    let before = alloc_count::thread_allocations();
+    for _ in 0..300 {
+        for i in 0..W {
+            input.push(i as f32 + 1.0);
+        }
+        assert!(node.fire().unwrap());
+        out.pop_data_into(usize::MAX, &mut drain);
+    }
+    let delta = alloc_count::thread_allocations() - before;
+    assert_eq!(
+        delta, 0,
+        "steady-state firing path made {delta} heap allocations over 300 ensembles"
+    );
+}
+
+#[test]
+fn steady_state_reduction_firing_allocates_exactly_zero() {
+    /// Fused sum stage (scalar-returning kernel, accumulator only).
+    struct SumStage {
+        ks: Rc<KernelSet>,
+        vals: Vec<f32>,
+        mask: Vec<i32>,
+        acc: f64,
+    }
+    impl NodeLogic for SumStage {
+        type In = f32;
+        type Out = f32;
+        fn run(
+            &mut self,
+            items: &[f32],
+            _parent: Option<&ParentRef>,
+            _out: &mut Emitter<'_, f32>,
+        ) -> Result<()> {
+            self.vals[..items.len()].copy_from_slice(items);
+            for s in self.vals[items.len()..].iter_mut() {
+                *s = 0.0;
+            }
+            prefix_mask(&mut self.mask, items.len(), W);
+            let (partial, _) = self.ks.sum_region(&self.vals, &self.mask, 0.0)?;
+            self.acc += partial as f64;
+            Ok(())
+        }
+        fn max_outputs_per_input(&self) -> usize {
+            0
+        }
+    }
+
+    let input: Rc<Channel<f32>> = Channel::new(4 * W, 8);
+    let sink = Rc::new(std::cell::RefCell::new(Vec::new()));
+    let mut node = Node::new(
+        "sum",
+        W,
+        input.clone(),
+        Output::Sink(sink),
+        SumStage {
+            ks: Rc::new(KernelSet::native(W)),
+            vals: vec![0.0; W],
+            mask: Vec::with_capacity(W),
+            acc: 0.0,
+        },
+    );
+    for _ in 0..2 {
+        for i in 0..W {
+            input.push(i as f32);
+        }
+        assert!(node.fire().unwrap());
+    }
+    let before = alloc_count::thread_allocations();
+    for _ in 0..300 {
+        for i in 0..W {
+            input.push(i as f32);
+        }
+        assert!(node.fire().unwrap());
+    }
+    let delta = alloc_count::thread_allocations() - before;
+    assert_eq!(delta, 0, "reduction firing path made {delta} allocations");
+}
+
+#[test]
+fn pipeline_allocations_do_not_scale_with_ensemble_count() {
+    // same number of regions (so identical counts of region-granular
+    // allocations: Rc parents, sink growth, feed clones), but 50x the
+    // elements — i.e. ~50x the ensembles. A per-ensemble allocation
+    // anywhere on the firing path would separate the two counts by
+    // thousands.
+    let app = |width: usize| {
+        SumApp::new(
+            SumConfig {
+                width,
+                mode: SumMode::Enumerated,
+                shape: SumShape::Fused,
+                data_cap: 256,
+                signal_cap: 64,
+                ..Default::default()
+            },
+            Rc::new(KernelSet::native(width)),
+        )
+    };
+    const REGIONS: usize = 100;
+    let small = gen_blobs(REGIONS * 8, RegionSpec::Fixed { size: 8 }, 42);
+    let large = gen_blobs(REGIONS * 400, RegionSpec::Fixed { size: 400 }, 42);
+    assert_eq!(small.len(), REGIONS);
+    assert_eq!(large.len(), REGIONS);
+
+    let a = app(8);
+    // warm the process (lazy statics, first-run effects)
+    a.run(&small).unwrap();
+
+    let before = alloc_count::thread_allocations();
+    let rs = a.run(&small).unwrap();
+    let allocs_small = alloc_count::thread_allocations() - before;
+
+    let before = alloc_count::thread_allocations();
+    let rl = a.run(&large).unwrap();
+    let allocs_large = alloc_count::thread_allocations() - before;
+
+    let ens_small = rs.metrics.node("sum").unwrap().ensembles;
+    let ens_large = rl.metrics.node("sum").unwrap().ensembles;
+    assert!(
+        ens_large >= 40 * ens_small,
+        "expected ~50x ensembles, got {ens_small} vs {ens_large}"
+    );
+    // identical region-granular work => near-identical allocation counts;
+    // a tiny slack absorbs amortized growth of long-lived buffers
+    assert!(
+        allocs_large <= allocs_small + 16,
+        "allocations scale with ensembles: {allocs_small} (x{ens_small} ensembles) vs \
+         {allocs_large} (x{ens_large} ensembles)"
+    );
+}

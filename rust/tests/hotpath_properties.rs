@@ -1,0 +1,235 @@
+//! Hot-path equivalence properties (minicheck).
+//!
+//! 1. The vectorized in-place kernels (`native::*_into` + the branchless
+//!    reductions) are **bit-identical** to the retained scalar reference
+//!    implementations (`native::scalar::*`) across widths 1..=256,
+//!    including odd tails past the `chunks_exact` blocks, all-masked
+//!    ensembles, and stale garbage in the caller-provided output slices.
+//! 2. `DataQueue`'s bulk `pop_into`/`push_slice` match a per-item
+//!    `VecDeque` model across ring wrap-around boundaries.
+
+use regatta::coordinator::queue::DataQueue;
+use regatta::runtime::native;
+use regatta::util::minicheck::{Checker, Gen};
+use std::collections::VecDeque;
+
+/// Random ensemble width covering the chunks_exact main blocks (multiples
+/// of 8), odd tails, and the degenerate width-1 case.
+fn gen_width(g: &mut Gen) -> usize {
+    match g.below(4) {
+        0 => g.int_in(1, 8),       // tail-only
+        1 => 8 * g.int_in(1, 32),  // exact blocks
+        _ => g.int_in(1, 256),     // anything
+    }
+}
+
+/// Mask with forced special shapes: all-active, all-masked, or random.
+fn gen_mask(g: &mut Gen, w: usize) -> Vec<i32> {
+    match g.below(4) {
+        0 => vec![1; w],
+        1 => vec![0; w], // all lanes masked off
+        _ => (0..w).map(|_| if g.chance(0.6) { 1 } else { 0 }).collect(),
+    }
+}
+
+fn gen_vals(g: &mut Gen, w: usize) -> Vec<f32> {
+    (0..w).map(|_| g.f32_in(-100.0, 100.0)).collect()
+}
+
+fn assert_f32_bits(got: &[f32], want: &[f32], ctx: &str) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{ctx}: length {} vs {}", got.len(), want.len()));
+    }
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            return Err(format!("{ctx}: lane {i}: {a} ({:#x}) vs {b} ({:#x})",
+                a.to_bits(), b.to_bits()));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_filter_scale_into_matches_scalar() {
+    Checker::new("filter-scale-into-bitwise").runs(300).check(|g| {
+        let w = gen_width(g);
+        let vals = gen_vals(g, w);
+        let mask = gen_mask(g, w);
+        let threshold = g.f32_in(-50.0, 50.0);
+        // stale garbage in the out slices must be fully overwritten
+        let mut ov = vec![123.5f32; w];
+        let mut om = vec![-9i32; w];
+        native::filter_scale_into(&vals, &mask, threshold, &mut ov, &mut om);
+        let (sv, sm) = native::scalar::filter_scale(&vals, &mask, threshold);
+        if om != sm {
+            return Err(format!("mask mismatch at width {w}: {om:?} vs {sm:?}"));
+        }
+        assert_f32_bits(&ov, &sv, &format!("vals at width {w}"))
+    });
+}
+
+#[test]
+fn prop_reductions_match_scalar() {
+    Checker::new("reductions-bitwise").runs(300).check(|g| {
+        let w = gen_width(g);
+        let vals = gen_vals(g, w);
+        let mask = gen_mask(g, w);
+        let threshold = g.f32_in(-50.0, 50.0);
+        let (s, c) = native::masked_sum(&vals, &mask);
+        let (ss, sc) = native::scalar::masked_sum(&vals, &mask);
+        if s.to_bits() != ss.to_bits() || c != sc {
+            return Err(format!("masked_sum at width {w}: ({s},{c}) vs ({ss},{sc})"));
+        }
+        let (r, k) = native::sum_region(&vals, &mask, threshold);
+        let (sr, sk) = native::scalar::sum_region(&vals, &mask, threshold);
+        if r.to_bits() != sr.to_bits() || k != sk {
+            return Err(format!("sum_region at width {w}: ({r},{k}) vs ({sr},{sk})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_segmented_kernels_match_scalar() {
+    Checker::new("segmented-into-bitwise").runs(300).check(|g| {
+        let w = gen_width(g);
+        let vals = gen_vals(g, w);
+        let mask = gen_mask(g, w);
+        let seg: Vec<i32> = (0..w).map(|_| g.int_in(0, w - 1) as i32).collect();
+        let threshold = g.f32_in(-50.0, 50.0);
+
+        let mut sums = vec![55.5f32; w];
+        let mut counts = vec![77i32; w];
+        native::segmented_sum_into(&vals, &seg, &mask, &mut sums, &mut counts);
+        let (ss, sc) = native::scalar::segmented_sum(&vals, &seg, &mask);
+        if counts != sc {
+            return Err(format!("segmented counts at width {w}"));
+        }
+        assert_f32_bits(&sums, &ss, &format!("segmented sums at width {w}"))?;
+
+        native::tagged_sum_region_into(&vals, &seg, &mask, threshold, &mut sums, &mut counts);
+        let (ts, tc) = native::scalar::tagged_sum_region(&vals, &seg, &mask, threshold);
+        if counts != tc {
+            return Err(format!("tagged counts at width {w}"));
+        }
+        assert_f32_bits(&sums, &ts, &format!("tagged sums at width {w}"))
+    });
+}
+
+#[test]
+fn prop_char_classify_into_matches_scalar() {
+    // interesting char set: digits, markers, braces, noise
+    const CHARS: [i32; 12] = [
+        0x30, 0x35, 0x39, 0x2E, 0x2C, 0x2D, 0x7B, 0x7D, 0x41, 0x20, 0x00, 0x7F,
+    ];
+    Checker::new("char-classify-into").runs(300).check(|g| {
+        let w = gen_width(g);
+        let chars: Vec<i32> = (0..w).map(|_| *g.choose(&CHARS)).collect();
+        let mask = gen_mask(g, w);
+        let mut flags = vec![-1i32; w];
+        let mut bits = vec![-1i32; w];
+        native::char_classify_into(&chars, &mask, &mut flags, &mut bits);
+        let (sf, sb) = native::scalar::char_classify(&chars, &mask);
+        if flags != sf || bits != sb {
+            return Err(format!("classify mismatch at width {w}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coord_parse_into_matches_scalar() {
+    Checker::new("coord-parse-into").runs(150).check(|g| {
+        let w = g.int_in(1, 48);
+        let wl = native::WINDOW_LEN;
+        let mut windows = vec![0i32; w * wl];
+        for lane in 0..w {
+            let win = &mut windows[lane * wl..(lane + 1) * wl];
+            if g.chance(0.6) {
+                // a mostly-valid `{a.b,-c.d}` pair (sometimes truncated)
+                let text = format!(
+                    "{{{}.{},{}{}.{}}}",
+                    g.int_in(0, 500),
+                    g.int_in(0, 99),
+                    if g.chance(0.5) { "-" } else { "" },
+                    g.int_in(0, 500),
+                    g.int_in(0, 99)
+                );
+                let cut = if g.chance(0.15) {
+                    g.int_in(1, text.len())
+                } else {
+                    text.len()
+                };
+                for (k, b) in text.bytes().take(cut.min(wl)).enumerate() {
+                    win[k] = b as i32;
+                }
+            } else {
+                for slot in win.iter_mut() {
+                    *slot = g.int_in(0, 127) as i32;
+                }
+            }
+        }
+        let mask = gen_mask(g, w);
+        let (mut x, mut y, mut ok) = (vec![9.0f32; w], vec![9.0f32; w], vec![9i32; w]);
+        native::coord_parse_into(&windows, wl, &mask, &mut x, &mut y, &mut ok);
+        let (sx, sy, sok) = native::scalar::coord_parse(&windows, wl, &mask);
+        if ok != sok {
+            return Err(format!("ok mismatch at width {w}"));
+        }
+        assert_f32_bits(&x, &sx, "x")?;
+        assert_f32_bits(&y, &sy, "y")
+    });
+}
+
+#[test]
+fn prop_queue_bulk_ops_match_per_item_model() {
+    Checker::new("queue-bulk-vs-per-item").runs(300).check(|g| {
+        let cap = g.int_in(1, 48);
+        let mut q: DataQueue<u32> = DataQueue::new(cap);
+        let mut model: VecDeque<u32> = VecDeque::new();
+        let mut next = 0u32;
+        let steps = g.int_in(1, 80);
+        for step in 0..steps {
+            if g.chance(0.5) {
+                // bulk push of a run that fits
+                let n = g.int_in(0, cap - model.len());
+                let items: Vec<u32> = (0..n)
+                    .map(|_| {
+                        next += 1;
+                        next
+                    })
+                    .collect();
+                q.push_slice(&items);
+                model.extend(items.iter().copied());
+            } else {
+                // bulk pop vs per-item model pops
+                let n = g.int_in(0, cap);
+                let mut out = Vec::new();
+                let got = q.pop_into(n, &mut out);
+                let want: Vec<u32> = (0..n.min(model.len()))
+                    .map(|_| model.pop_front().expect("model length checked"))
+                    .collect();
+                if got != want.len() || out != want {
+                    return Err(format!(
+                        "step {step}: popped {out:?} (n={got}), want {want:?}"
+                    ));
+                }
+            }
+            if q.len() != model.len() || q.space() != cap - model.len() {
+                return Err(format!(
+                    "step {step}: len {} vs model {}",
+                    q.len(),
+                    model.len()
+                ));
+            }
+        }
+        // drain the rest and confirm order
+        let mut out = Vec::new();
+        q.pop_into(cap, &mut out);
+        let rest: Vec<u32> = model.drain(..).collect();
+        if out != rest {
+            return Err(format!("final drain {out:?} vs {rest:?}"));
+        }
+        Ok(())
+    });
+}
