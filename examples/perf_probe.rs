@@ -13,7 +13,9 @@ fn main() -> anyhow::Result<()> {
     const N: u32 = 5000;
     // (a) full typed call
     let t = Instant::now();
-    for _ in 0..N { ks.sum_region(&vals, &mask, 0.0)?; }
+    for _ in 0..N {
+        ks.sum_region(&vals, &mask, 0.0)?;
+    }
     let full = t.elapsed().as_secs_f64() / N as f64;
 
     // (b) literal creation only

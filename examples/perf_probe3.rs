@@ -5,7 +5,9 @@ use std::time::Instant;
 
 fn time<F: FnMut()>(n: u32, mut f: F) -> f64 {
     let t = Instant::now();
-    for _ in 0..n { f(); }
+    for _ in 0..n {
+        f();
+    }
     t.elapsed().as_secs_f64() / n as f64 * 1e6
 }
 
@@ -27,13 +29,37 @@ fn main() -> anyhow::Result<()> {
     ks.tagged_char_stage(&chars, &seg, &mask)?;
     ks.coord_parse(&windows, &mask)?;
     const N: u32 = 2000;
-    println!("sum_region        {:8.1} us", time(N, || { ks.sum_region(&vals, &mask, 0.0).unwrap(); }));
-    println!("filter_scale      {:8.1} us", time(N, || { ks.filter_scale(&vals, &mask, 0.0).unwrap(); }));
-    println!("masked_sum        {:8.1} us", time(N, || { ks.masked_sum(&vals, &mask).unwrap(); }));
-    println!("segmented_sum     {:8.1} us", time(N, || { ks.segmented_sum(&vals, &seg, &mask).unwrap(); }));
-    println!("tagged_sum_region {:8.1} us", time(N, || { ks.tagged_sum_region(&vals, &seg, &mask, 0.0).unwrap(); }));
-    println!("char_classify     {:8.1} us", time(N, || { ks.char_classify(&chars, &mask).unwrap(); }));
-    println!("tagged_char_stage {:8.1} us", time(N, || { ks.tagged_char_stage(&chars, &seg, &mask).unwrap(); }));
-    println!("coord_parse       {:8.1} us", time(500, || { ks.coord_parse(&windows, &mask).unwrap(); }));
+    let us = time(N, || {
+        ks.sum_region(&vals, &mask, 0.0).unwrap();
+    });
+    println!("sum_region        {us:8.1} us");
+    let us = time(N, || {
+        ks.filter_scale(&vals, &mask, 0.0).unwrap();
+    });
+    println!("filter_scale      {us:8.1} us");
+    let us = time(N, || {
+        ks.masked_sum(&vals, &mask).unwrap();
+    });
+    println!("masked_sum        {us:8.1} us");
+    let us = time(N, || {
+        ks.segmented_sum(&vals, &seg, &mask).unwrap();
+    });
+    println!("segmented_sum     {us:8.1} us");
+    let us = time(N, || {
+        ks.tagged_sum_region(&vals, &seg, &mask, 0.0).unwrap();
+    });
+    println!("tagged_sum_region {us:8.1} us");
+    let us = time(N, || {
+        ks.char_classify(&chars, &mask).unwrap();
+    });
+    println!("char_classify     {us:8.1} us");
+    let us = time(N, || {
+        ks.tagged_char_stage(&chars, &seg, &mask).unwrap();
+    });
+    println!("tagged_char_stage {us:8.1} us");
+    let us = time(500, || {
+        ks.coord_parse(&windows, &mask).unwrap();
+    });
+    println!("coord_parse       {us:8.1} us");
     Ok(())
 }

@@ -59,5 +59,19 @@ fn main() -> anyhow::Result<()> {
         100.0 * report.utilization(),
         report.worker_table()
     );
+
+    // v2: the same computation streamed — regions generated lazily, at
+    // most 1024 in flight, work-stealing workers, same bit-exact sums.
+    let source = GenBlobSource::new(1 << 20, RegionSpec::Uniform { max: 2 * WIDTH }, 7);
+    let streamed = ShardedRunner::new(ExecConfig::new(4).streaming(1024))
+        .run_stream(&factory, source)?;
+    assert_eq!(streamed.outputs.len(), single.outputs.len());
+    for (a, b) in streamed.outputs.iter().zip(&single.outputs) {
+        assert_eq!(a.1.to_bits(), b.1.to_bits());
+    }
+    println!(
+        "4 workers, streaming ingest: {:.3}s, {} shards, {} stolen",
+        streamed.elapsed, streamed.shards, streamed.steals
+    );
     Ok(())
 }

@@ -65,8 +65,14 @@ fn main() -> anyhow::Result<()> {
             (
                 r.pairs,
                 r.elapsed,
-                r.metrics.node("classify").map(|n| n.full_fraction()).unwrap_or(0.0),
-                r.metrics.node("parse").map(|n| n.full_fraction()).unwrap_or(0.0),
+                r.metrics
+                    .node("classify")
+                    .map(|n| n.full_fraction())
+                    .unwrap_or(0.0),
+                r.metrics
+                    .node("parse")
+                    .map(|n| n.full_fraction())
+                    .unwrap_or(0.0),
             )
         } else {
             run_parallel(&w, variant, workers)?
@@ -75,10 +81,17 @@ fn main() -> anyhow::Result<()> {
         // verify against ground truth
         let mut got = pairs;
         sort_pairs(&mut got);
-        anyhow::ensure!(got.len() == truth.len(), "{variant:?}: {} vs {} pairs", got.len(), truth.len());
+        anyhow::ensure!(
+            got.len() == truth.len(),
+            "{variant:?}: {} vs {} pairs",
+            got.len(),
+            truth.len()
+        );
         for (g, e) in got.iter().zip(&truth) {
-            anyhow::ensure!(g.tag == e.tag && (g.x - e.x).abs() < 1e-4 && (g.y - e.y).abs() < 1e-4,
-                "{variant:?}: pair mismatch");
+            anyhow::ensure!(
+                g.tag == e.tag && (g.x - e.x).abs() < 1e-4 && (g.y - e.y).abs() < 1e-4,
+                "{variant:?}: pair mismatch"
+            );
         }
 
         println!(

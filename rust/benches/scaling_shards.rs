@@ -5,10 +5,11 @@
 //!
 //! Env knobs: `REGATTA_BENCH_ITEMS` (stream size), `REGATTA_BENCH_BACKEND`
 //! (`native`|`xla`; default native so the harness runs without AOT
-//! artifacts), `REGATTA_BENCH_WORKERS` (comma list), plus the usual
+//! artifacts), `REGATTA_BENCH_WORKERS` (comma list), `REGATTA_BENCH_JSON`
+//! (artifact path; default `BENCH_scaling_shards.json`), plus the usual
 //! `REGATTA_BENCH_ITERS` / `REGATTA_BENCH_WARMUP`.
 
-use regatta::bench::figures::{scaling_shards, BackendSel, SweepConfig};
+use regatta::bench::figures::{scaling_shards, scaling_to_json, BackendSel, SweepConfig};
 
 fn main() {
     let mut cfg = SweepConfig {
@@ -33,6 +34,12 @@ fn main() {
     let w = cfg.width;
     let regions = [w / 8, w, 8 * w];
     let rows = scaling_shards(&cfg, &workers, &regions).expect("scaling sweep");
+
+    // CI uploads this next to BENCH_hotpath.json / BENCH_ingest.json
+    let json_path = std::env::var("REGATTA_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_scaling_shards.json".to_string());
+    std::fs::write(&json_path, scaling_to_json(&rows)).expect("write scaling JSON");
+    println!("wrote {json_path}");
 
     // shape check: at every region size, max workers should not be slower
     // than 1 worker (speedup >= 1 within noise)

@@ -281,6 +281,7 @@ impl SumApp {
 
     /// [`SumApp::run_sharded`] with full executor configuration.
     pub fn run_sharded_with(&self, blobs: &[Blob], exec: &ExecConfig) -> Result<SumReport> {
+        exec.validate()?;
         if exec.workers <= 1 && exec.shard.shards_per_worker <= 1 {
             // One worker, one shard, run inline: identical to a plain run,
             // so reuse this app's kernel set instead of spawning a fresh
@@ -289,6 +290,30 @@ impl SumApp {
         }
         let factory = SumFactory::new(self.cfg, KernelSpawn::from_backend(self.kernels.backend()));
         let report = ShardedRunner::new(exec.clone()).run(&factory, blobs)?;
+        Ok(SumReport {
+            outputs: finish_sharded_outputs(self.cfg.mode, report.outputs),
+            metrics: report.metrics,
+            elapsed: report.elapsed,
+            invocations: report.invocations,
+        })
+    }
+
+    /// Streaming execution (L3.5 v2): pull regions from `source`
+    /// incrementally, shard them on the fly under `exec.ingest`'s
+    /// in-flight budget, and execute with work stealing. For the
+    /// enumerated modes the outputs are bit-identical to [`SumApp::run`]
+    /// over the materialized stream at any worker count; the tagged mode
+    /// gets the same post-merge fold as [`SumApp::run_sharded_with`].
+    /// Input memory is bounded by the budget, never by stream length —
+    /// pair with [`GenBlobSource`](crate::workload::regions::GenBlobSource)
+    /// (or any out-of-core reader) for streams that don't fit in memory.
+    pub fn run_streaming<S>(&self, source: S, exec: &ExecConfig) -> Result<SumReport>
+    where
+        S: crate::workload::source::RegionSource<Region = Blob>,
+    {
+        exec.validate()?;
+        let factory = SumFactory::new(self.cfg, KernelSpawn::from_backend(self.kernels.backend()));
+        let report = ShardedRunner::new(exec.clone()).run_stream(&factory, source)?;
         Ok(SumReport {
             outputs: finish_sharded_outputs(self.cfg.mode, report.outputs),
             metrics: report.metrics,
@@ -583,12 +608,8 @@ mod tests {
     #[test]
     fn tagged_occupancy_beats_enumerated_on_small_regions() {
         let blobs = gen_blobs(800, RegionSpec::Fixed { size: 3 }, 4);
-        let enumerated = native_app(SumMode::Enumerated, SumShape::Fused, 8)
-            .run(&blobs)
-            .unwrap();
-        let tagged = native_app(SumMode::Tagged, SumShape::Fused, 8)
-            .run(&blobs)
-            .unwrap();
+        let enumerated = native_app(SumMode::Enumerated, SumShape::Fused, 8).run(&blobs).unwrap();
+        let tagged = native_app(SumMode::Tagged, SumShape::Fused, 8).run(&blobs).unwrap();
         let occ_enum = enumerated.metrics.node("sum").unwrap().occupancy();
         let occ_tag = tagged.metrics.node("tagsum").unwrap().occupancy();
         assert!(occ_enum < 0.5, "enumerated occupancy {occ_enum}");
@@ -636,6 +657,38 @@ mod tests {
             assert_eq!(gv.to_bits(), wv.to_bits());
         }
         assert_eq!(sharded.invocations, single.invocations);
+    }
+
+    #[test]
+    fn streamed_run_is_bitwise_identical() {
+        let blobs = gen_blobs(1500, RegionSpec::Uniform { max: 24 }, 8);
+        let app = native_app(SumMode::Enumerated, SumShape::Fused, 8);
+        let single = app.run(&blobs).unwrap();
+        let exec = ExecConfig::new(3).streaming(64);
+        let streamed = app
+            .run_streaming(crate::workload::source::SliceSource::new(&blobs), &exec)
+            .unwrap();
+        assert_eq!(streamed.outputs.len(), single.outputs.len());
+        for ((gi, gv), (wi, wv)) in streamed.outputs.iter().zip(&single.outputs) {
+            assert_eq!(gi, wi);
+            assert_eq!(gv.to_bits(), wv.to_bits());
+        }
+        assert_eq!(streamed.invocations, single.invocations);
+    }
+
+    #[test]
+    fn zero_workers_errors_instead_of_clamping() {
+        let blobs = gen_blobs(100, RegionSpec::Fixed { size: 10 }, 1);
+        let app = native_app(SumMode::Enumerated, SumShape::Fused, 8);
+        let err = app.run_sharded(&blobs, 0).unwrap_err();
+        assert!(err.to_string().contains("workers = 0"), "{err}");
+        let err = app
+            .run_streaming(
+                crate::workload::source::SliceSource::new(&blobs),
+                &ExecConfig::new(0),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("workers = 0"), "{err}");
     }
 
     #[test]

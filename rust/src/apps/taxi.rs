@@ -269,6 +269,7 @@ impl TaxiApp {
 
     /// [`TaxiApp::run_sharded`] with full executor configuration.
     pub fn run_sharded_with(&self, w: &TaxiWorkload, exec: &ExecConfig) -> Result<TaxiReport> {
+        exec.validate()?;
         if exec.workers <= 1 && exec.shard.shards_per_worker <= 1 {
             // One worker, one shard, run inline: identical to a plain run,
             // so reuse this app's kernel set instead of spawning a fresh
@@ -281,6 +282,37 @@ impl TaxiApp {
             w.text.clone(),
         );
         let report = ShardedRunner::new(exec.clone()).run(&factory, &w.lines)?;
+        Ok(TaxiReport {
+            pairs: report.outputs,
+            metrics: report.metrics,
+            elapsed: report.elapsed,
+            invocations: report.invocations,
+        })
+    }
+
+    /// Streaming execution (L3.5 v2): lines arrive incrementally from
+    /// `source` (all viewing the shared `text` buffer), are sharded on
+    /// the fly under `exec.ingest`'s in-flight budget, and execute with
+    /// work stealing — pairs come back in stream order, bit-identical to
+    /// [`TaxiApp::run`] over the materialized line list at any worker
+    /// count. Line-index memory is bounded by the budget, not by how
+    /// many lines the stream carries.
+    pub fn run_streaming<S>(
+        &self,
+        text: Arc<Vec<u8>>,
+        source: S,
+        exec: &ExecConfig,
+    ) -> Result<TaxiReport>
+    where
+        S: crate::workload::source::RegionSource<Region = TaxiLine>,
+    {
+        exec.validate()?;
+        let factory = TaxiFactory::new(
+            self.cfg,
+            KernelSpawn::from_backend(self.kernels.backend()),
+            text,
+        );
+        let report = ShardedRunner::new(exec.clone()).run_stream(&factory, source)?;
         Ok(TaxiReport {
             pairs: report.outputs,
             metrics: report.metrics,
@@ -884,6 +916,36 @@ mod tests {
         let sharded = app.run_sharded(&w, 3).unwrap();
         assert_eq!(sharded.pairs.len(), single.pairs.len());
         for (a, b) in sharded.pairs.iter().zip(&single.pairs) {
+            assert_eq!(a.tag, b.tag);
+            assert_eq!(a.x.to_bits(), b.x.to_bits());
+            assert_eq!(a.y.to_bits(), b.y.to_bits());
+        }
+    }
+
+    #[test]
+    fn streamed_run_is_bitwise_identical() {
+        let w = small_workload();
+        let app = TaxiApp::new(
+            TaxiConfig {
+                width: 8,
+                variant: TaxiVariant::Hybrid,
+                data_cap: 512,
+                signal_cap: 128,
+                policy: Policy::GreedyOccupancy,
+            },
+            Rc::new(KernelSet::native(8)),
+        );
+        let single = app.run(&w).unwrap();
+        let exec = crate::exec::ExecConfig::new(3).streaming(8);
+        let streamed = app
+            .run_streaming(
+                w.text.clone(),
+                crate::workload::source::SliceSource::new(&w.lines),
+                &exec,
+            )
+            .unwrap();
+        assert_eq!(streamed.pairs.len(), single.pairs.len());
+        for (a, b) in streamed.pairs.iter().zip(&single.pairs) {
             assert_eq!(a.tag, b.tag);
             assert_eq!(a.x.to_bits(), b.x.to_bits());
             assert_eq!(a.y.to_bits(), b.y.to_bits());

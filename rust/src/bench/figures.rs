@@ -13,7 +13,7 @@ use anyhow::Result;
 use crate::apps::sum::{SumApp, SumConfig, SumFactory, SumMode, SumShape};
 use crate::apps::taxi::{TaxiApp, TaxiConfig, TaxiVariant};
 use crate::coordinator::scheduler::Policy;
-use crate::exec::{ExecConfig, KernelSpawn, ShardPolicy, ShardedRunner};
+use crate::exec::{ExecConfig, KernelSpawn, ShardedRunner};
 use crate::runtime::kernels::KernelSet;
 use crate::runtime::{ArtifactStore, Engine};
 use crate::util::stats::fmt_duration;
@@ -346,13 +346,7 @@ pub fn scaling_shards(
         let mut series = Vec::with_capacity(workers_axis.len());
         for &workers in workers_axis {
             // a few shards per worker gives the pool slack to balance
-            let runner = ShardedRunner::new(ExecConfig {
-                workers,
-                shard: ShardPolicy {
-                    shards_per_worker: 4,
-                    ..ShardPolicy::default()
-                },
-            });
+            let runner = ShardedRunner::new(ExecConfig::new(workers).with_shards_per_worker(4));
             let mut last = None;
             let m = time_fn(cfg.bench, || {
                 last = Some(runner.run(&factory, &blobs).expect("sharded sum run"));
@@ -402,6 +396,29 @@ pub fn scaling_shards(
     println!("== Scaling: sharded sum app, workers × region size ==");
     t.print();
     Ok(rows)
+}
+
+/// Render scaling rows as the `BENCH_scaling_shards.json` artifact
+/// (uploaded by CI next to the hotpath and ingest ones).
+pub fn scaling_to_json(rows: &[ScaleRow]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"scaling_shards\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"region\": {}, \"workers\": {}, \"shards\": {}, \"seconds\": {:.6}, \
+             \"items_per_sec\": {:.1}, \"speedup\": {:.4}, \"utilization\": {:.4}}}{}\n",
+            r.region,
+            r.workers,
+            r.shards,
+            r.seconds,
+            r.throughput,
+            r.speedup,
+            r.utilization,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
 }
 
 /// §5 "abstraction penalty" check: an app that uses no signals pays ~0 for

@@ -1,0 +1,292 @@
+//! `bench ingest` — streaming shard ingest + work stealing sweep.
+//!
+//! Crosses region-size **distribution** (uniform vs heavy-tailed skewed)
+//! with worker count and executor mode:
+//!
+//! * `cursor` — materialized plan, legacy single atomic cursor (the
+//!   pre-stealing baseline, kept exactly for this comparison);
+//! * `steal` — materialized plan, per-worker deques with LIFO-local /
+//!   FIFO-steal claiming;
+//! * `stream-nosteal` — streaming ingest onto per-worker deques, no
+//!   stealing (isolates what stealing buys once ingest is online);
+//! * `stream-steal` — the full v2 path: bounded-budget streaming ingest
+//!   plus stealing.
+//!
+//! Skewed streams put most of the weight into a few huge regions, so
+//! static round-robin dealing strands work behind them — the
+//! configuration where stealing should win. Every mode's sum outputs are
+//! asserted **bit-identical** to the cursor baseline before its time is
+//! recorded, so the sweep doubles as an equivalence check.
+//!
+//! Results are emitted as `BENCH_ingest.json` and uploaded as a CI
+//! artifact (`--smoke` runs a small shape in the pipeline).
+
+use anyhow::{ensure, Result};
+
+use crate::apps::sum::{SumConfig, SumFactory};
+use crate::exec::{ClaimMode, ExecConfig, KernelSpawn, ShardedRunner};
+use crate::util::stats::fmt_count;
+use crate::workload::regions::{gen_blobs, RegionSpec};
+use crate::workload::source::SliceSource;
+
+use super::{time_fn, BenchConfig, Table};
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct IngestConfig {
+    pub width: usize,
+    /// Total stream items per point.
+    pub items: usize,
+    pub workers: Vec<usize>,
+    /// Streaming in-flight budget (regions).
+    pub buffer_regions: usize,
+    pub bench: BenchConfig,
+    pub seed: u64,
+}
+
+impl IngestConfig {
+    /// CI smoke shape: small stream, warmed medians.
+    pub fn smoke() -> IngestConfig {
+        IngestConfig {
+            width: 32,
+            items: 1 << 14,
+            workers: vec![2, 4],
+            buffer_regions: 256,
+            bench: BenchConfig {
+                warmup_iters: 1,
+                iters: 3,
+            },
+            seed: 0xF16,
+        }
+    }
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        IngestConfig {
+            width: 128,
+            items: 1 << 18,
+            workers: vec![1, 2, 4, 8],
+            buffer_regions: 1024,
+            bench: BenchConfig::from_env(),
+            seed: 0xF16,
+        }
+    }
+}
+
+/// One measured point.
+#[derive(Debug, Clone)]
+pub struct IngestRow {
+    pub dist: &'static str,
+    pub workers: usize,
+    pub mode: &'static str,
+    pub seconds: f64,
+    pub items_per_sec: f64,
+    pub shards: usize,
+    pub steals: usize,
+    pub utilization: f64,
+}
+
+/// Full report (also the JSON payload).
+#[derive(Debug, Clone)]
+pub struct IngestReport {
+    pub items: usize,
+    pub buffer_regions: usize,
+    pub rows: Vec<IngestRow>,
+}
+
+fn distributions(width: usize) -> [(&'static str, RegionSpec); 2] {
+    [
+        ("uniform", RegionSpec::Uniform { max: 2 * width }),
+        ("skewed", RegionSpec::Skewed { max: 16 * width }),
+    ]
+}
+
+/// Run the sweep and print the table.
+pub fn run(cfg: &IngestConfig) -> Result<IngestReport> {
+    let mut rows = Vec::new();
+    for (dist, spec) in distributions(cfg.width) {
+        let blobs = gen_blobs(cfg.items, spec, cfg.seed);
+        let factory = SumFactory::new(
+            SumConfig {
+                width: cfg.width,
+                ..Default::default()
+            },
+            KernelSpawn::Native,
+        );
+        for &workers in &cfg.workers {
+            let mut baseline: Option<Vec<(u64, f64)>> = None;
+            for (mode, claim, streamed) in [
+                ("cursor", ClaimMode::Cursor, false),
+                ("steal", ClaimMode::Steal, false),
+                ("stream-nosteal", ClaimMode::NoSteal, true),
+                ("stream-steal", ClaimMode::Steal, true),
+            ] {
+                let exec = ExecConfig::new(workers)
+                    .with_shards_per_worker(4)
+                    .streaming(cfg.buffer_regions)
+                    .with_claim(claim);
+                let runner = ShardedRunner::new(exec);
+                let mut last = None;
+                let m = time_fn(cfg.bench, || {
+                    // streamed rows replay the SAME materialized blobs
+                    // through a SliceSource, so the mode comparison
+                    // measures the executor, not stream generation (the
+                    // per-region clone is the minimal owned-region cost
+                    // any real source pays; lazy generation itself is
+                    // GenBlobSource's job and is covered by the tests)
+                    let report = if streamed {
+                        runner
+                            .run_stream(&factory, SliceSource::new(&blobs))
+                            .expect("streamed ingest run")
+                    } else {
+                        runner.run(&factory, &blobs).expect("materialized run")
+                    };
+                    last = Some(report);
+                });
+                let report = last.expect("at least one iteration");
+                ensure!(
+                    report.outputs.len() == blobs.len(),
+                    "{dist}/{mode}/{workers}w: lost regions: {} of {}",
+                    report.outputs.len(),
+                    blobs.len()
+                );
+                // every mode must be bit-identical to the cursor baseline
+                // (region-local pipeline: sharding must change nothing)
+                match &baseline {
+                    None => baseline = Some(report.outputs.clone()),
+                    Some(base) => {
+                        for (i, ((gi, gv), (bi, bv))) in
+                            report.outputs.iter().zip(base).enumerate()
+                        {
+                            ensure!(
+                                gi == bi && gv.to_bits() == bv.to_bits(),
+                                "{dist}/{mode}/{workers}w: output {i} diverged from cursor"
+                            );
+                        }
+                    }
+                }
+                rows.push(IngestRow {
+                    dist,
+                    workers,
+                    mode,
+                    seconds: m.median(),
+                    items_per_sec: cfg.items as f64 / m.median(),
+                    shards: report.shards,
+                    steals: report.steals,
+                    utilization: report.utilization(),
+                });
+            }
+        }
+    }
+
+    let mut t = Table::new(&[
+        "dist", "workers", "mode", "time_s", "items/s", "shards", "steals", "util%",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.dist.to_string(),
+            r.workers.to_string(),
+            r.mode.to_string(),
+            format!("{:.4}", r.seconds),
+            fmt_count(r.items_per_sec),
+            r.shards.to_string(),
+            r.steals.to_string(),
+            format!("{:.0}", 100.0 * r.utilization),
+        ]);
+    }
+    println!("== Ingest: streaming + stealing vs materialized cursor ==");
+    t.print();
+
+    Ok(IngestReport {
+        items: cfg.items,
+        buffer_regions: cfg.buffer_regions,
+        rows,
+    })
+}
+
+/// Headline metric: skewed-distribution speedup of the full streaming +
+/// stealing path over the legacy cursor at the largest measured worker
+/// count (`None` if either point is missing).
+pub fn skew_speedup(report: &IngestReport) -> Option<f64> {
+    let max_workers = report.rows.iter().map(|r| r.workers).max()?;
+    let pick = |mode: &str| {
+        report
+            .rows
+            .iter()
+            .find(|r| r.dist == "skewed" && r.workers == max_workers && r.mode == mode)
+            .map(|r| r.seconds)
+    };
+    Some(pick("cursor")? / pick("stream-steal")?)
+}
+
+/// Render the report as the `BENCH_ingest.json` artifact.
+pub fn to_json(report: &IngestReport) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"ingest\",\n");
+    s.push_str(&format!("  \"items\": {},\n", report.items));
+    s.push_str(&format!(
+        "  \"buffer_regions\": {},\n",
+        report.buffer_regions
+    ));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in report.rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"dist\": \"{}\", \"workers\": {}, \"mode\": \"{}\", \
+             \"seconds\": {:.6}, \"items_per_sec\": {:.1}, \"shards\": {}, \
+             \"steals\": {}, \"utilization\": {:.4}}}{}\n",
+            r.dist,
+            r.workers,
+            r.mode,
+            r.seconds,
+            r.items_per_sec,
+            r.shards,
+            r.steals,
+            r.utilization,
+            if i + 1 < report.rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"skew_steal_vs_cursor_speedup\": {:.4}\n",
+        skew_speedup(report).unwrap_or(0.0)
+    ));
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn tiny_cfg() -> IngestConfig {
+        IngestConfig {
+            width: 8,
+            items: 1 << 10,
+            workers: vec![1, 2],
+            buffer_regions: 32,
+            bench: BenchConfig {
+                warmup_iters: 0,
+                iters: 1,
+            },
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn sweep_produces_rows_and_json() {
+        let report = run(&tiny_cfg()).unwrap();
+        assert_eq!(report.rows.len(), 2 * 2 * 4, "dists x workers x modes");
+        for r in &report.rows {
+            assert!(r.items_per_sec > 0.0, "{}/{}", r.dist, r.mode);
+            assert!(r.shards > 0);
+        }
+        let js = to_json(&report);
+        let parsed = Json::parse(&js).expect("emitted JSON parses");
+        assert!(parsed.get("rows").is_some());
+        assert!(parsed.get("skew_steal_vs_cursor_speedup").is_some());
+        assert!(skew_speedup(&report).is_some());
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod figures;
 pub mod hotpath;
+pub mod ingest;
 
 use std::time::Instant;
 
@@ -32,16 +33,10 @@ impl BenchConfig {
     /// `REGATTA_BENCH_WARMUP`) for quick CI runs.
     pub fn from_env() -> BenchConfig {
         let mut cfg = BenchConfig::default();
-        if let Some(n) = std::env::var("REGATTA_BENCH_ITERS")
-            .ok()
-            .and_then(|s| s.parse().ok())
-        {
+        if let Some(n) = std::env::var("REGATTA_BENCH_ITERS").ok().and_then(|s| s.parse().ok()) {
             cfg.iters = n;
         }
-        if let Some(n) = std::env::var("REGATTA_BENCH_WARMUP")
-            .ok()
-            .and_then(|s| s.parse().ok())
-        {
+        if let Some(n) = std::env::var("REGATTA_BENCH_WARMUP").ok().and_then(|s| s.parse().ok()) {
             cfg.warmup_iters = n;
         }
         cfg
@@ -68,10 +63,7 @@ impl Measurement {
     }
 
     pub fn min(&self) -> f64 {
-        self.samples
-            .iter()
-            .cloned()
-            .fold(f64::INFINITY, f64::min)
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 }
 

@@ -49,19 +49,11 @@ impl<T: Clone + 'static> Broadcast<T> {
     }
 
     fn min_child_data_space(&self) -> usize {
-        self.outputs
-            .iter()
-            .map(|c| c.data_space())
-            .min()
-            .unwrap_or(0)
+        self.outputs.iter().map(|c| c.data_space()).min().unwrap_or(0)
     }
 
     fn min_child_signal_space(&self) -> usize {
-        self.outputs
-            .iter()
-            .map(|c| c.signal_space())
-            .min()
-            .unwrap_or(0)
+        self.outputs.iter().map(|c| c.signal_space()).min().unwrap_or(0)
     }
 
     fn data_limit(&mut self) -> usize {

@@ -59,8 +59,7 @@ impl<T> Channel<T> {
     /// scheduler's fireable test reserves space before firing.
     pub fn push(&self, item: T) {
         self.data.borrow_mut().push(item);
-        self.emitted_since_signal
-            .set(self.emitted_since_signal.get() + 1);
+        self.emitted_since_signal.set(self.emitted_since_signal.get() + 1);
     }
 
     /// Emit a burst of data items with a single queue borrow and one bulk

@@ -375,9 +375,7 @@ mod tests {
             MapLogic::new(|&v: &i64| v),
         );
         let mut nodes: Vec<Box<dyn NodeOps>> = vec![Box::new(n1), Box::new(n2)];
-        let err = Scheduler::new(Policy::DeepestFirst)
-            .run(&mut nodes)
-            .unwrap_err();
+        let err = Scheduler::new(Policy::DeepestFirst).run(&mut nodes).unwrap_err();
         assert!(err.to_string().contains("deadlock"), "{err}");
     }
 }

@@ -116,8 +116,7 @@ impl PipelineBuilder {
         logic: L,
     ) -> Rc<Channel<L::Out>> {
         let out = Channel::named(format!("{name}.out"), self.data_cap, self.signal_cap);
-        self.edges
-            .push((vec![chan_key(input)], vec![chan_key(&out)]));
+        self.edges.push((vec![chan_key(input)], vec![chan_key(&out)]));
         self.nodes.push(Box::new(Node::new(
             name,
             self.width,
@@ -170,8 +169,7 @@ impl PipelineBuilder {
         input: &Rc<Channel<P>>,
     ) -> Rc<Channel<u32>> {
         let out = Channel::named(format!("{name}.out"), self.data_cap, self.signal_cap);
-        self.edges
-            .push((vec![chan_key(input)], vec![chan_key(&out)]));
+        self.edges.push((vec![chan_key(input)], vec![chan_key(&out)]));
         self.nodes.push(Box::new(Enumerator::new(
             name,
             self.width,
@@ -261,8 +259,7 @@ impl Pipeline {
     /// channel between calls); metrics accumulate.
     pub fn run(&mut self) -> Result<()> {
         let start = Instant::now();
-        self.scheduler
-            .run_with(&mut self.nodes, Some(&self.affected))?;
+        self.scheduler.run_with(&mut self.nodes, Some(&self.affected))?;
         self.elapsed += start.elapsed().as_secs_f64();
         Ok(())
     }

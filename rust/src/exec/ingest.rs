@@ -1,0 +1,345 @@
+//! Streaming shard ingest: convert regions into shards **as they
+//! arrive**, against a bounded in-flight budget.
+//!
+//! The materialized path ([`ShardPlan::build`](super::plan::ShardPlan))
+//! needs the whole region stream up front to balance shards against the
+//! total weight. A stream has no total: the [`IngestPlanner`] instead
+//! cuts shards online — close the open shard once it holds
+//! `shard_regions` regions *or* once its weight reaches `shard_regions ×`
+//! the mean weight of previously seen regions (so one huge region closes
+//! a shard promptly and becomes a unit of stealing, while runs of tiny
+//! regions coalesce). Boundaries depend only on the region sequence, never on
+//! worker timing, so shard layout — and therefore merged output order —
+//! is deterministic for a given stream.
+//!
+//! Memory is governed by [`IngestPolicy::buffer_regions`]: the executor
+//! stops pulling from the source while `submitted − emitted` regions
+//! would exceed the budget (backpressure when workers lag). Shard
+//! containers are recycled through a [`ContainerPool`] — workers hand
+//! emptied `Vec`s back and the planner refills them — so steady-state
+//! ingest performs no per-region heap allocation: the allocation
+//! high-water mark is set by the budget, not by stream length
+//! (`rust/tests/ingest_stream.rs` proves this with the counting
+//! allocator).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Tunables for streaming ingest (see [`ExecConfig::streaming`]).
+///
+/// [`ExecConfig::streaming`]: super::runner::ExecConfig::streaming
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IngestPolicy {
+    /// In-flight budget: the maximum number of regions submitted to the
+    /// pool but not yet merged out. Bounds both payload memory and the
+    /// reassembly window; ingest blocks (backpressure) at the limit.
+    pub buffer_regions: usize,
+    /// Regions per streaming shard. `0` = auto: derived from the budget
+    /// and worker count so several shards per worker are in flight
+    /// (stealing slack). Always clamped to the budget.
+    pub shard_regions: usize,
+}
+
+impl Default for IngestPolicy {
+    fn default() -> Self {
+        IngestPolicy {
+            buffer_regions: 1024,
+            shard_regions: 0,
+        }
+    }
+}
+
+impl IngestPolicy {
+    /// Resolve the effective regions-per-shard granule for `workers`.
+    pub fn effective_shard_regions(&self, workers: usize) -> usize {
+        let budget = self.buffer_regions.max(1);
+        let granule = if self.shard_regions == 0 {
+            // aim for ~4 in-flight shards per worker within the budget
+            budget / (4 * workers.max(1))
+        } else {
+            self.shard_regions
+        };
+        granule.clamp(1, budget)
+    }
+}
+
+/// One streaming shard: a contiguous run of regions, tagged with its
+/// stream-order index (the merge key).
+#[derive(Debug)]
+pub struct ShardTask<T> {
+    /// Shard index in stream order (assigned by the planner).
+    pub index: usize,
+    /// The regions, in stream order. Ownership moves to the worker; the
+    /// emptied container comes back through the [`ContainerPool`].
+    pub regions: Vec<T>,
+    /// Total item weight (the planner's balancing unit).
+    pub weight: usize,
+}
+
+/// Online shard builder. Single-threaded (driven by the ingest thread);
+/// all cross-thread coordination lives in the pool.
+#[derive(Debug)]
+pub struct IngestPlanner<T> {
+    shard_regions: usize,
+    open: Vec<T>,
+    open_weight: usize,
+    next_index: usize,
+    spare: Vec<Vec<T>>,
+    total_regions: u64,
+    total_weight: u64,
+}
+
+impl<T> IngestPlanner<T> {
+    /// Planner closing shards at `shard_regions` regions (or the
+    /// equivalent running-mean weight). Use
+    /// [`IngestPolicy::effective_shard_regions`] to derive the granule.
+    pub fn new(shard_regions: usize) -> IngestPlanner<T> {
+        IngestPlanner {
+            shard_regions: shard_regions.max(1),
+            open: Vec::new(),
+            open_weight: 0,
+            next_index: 0,
+            spare: Vec::new(),
+            total_regions: 0,
+            total_weight: 0,
+        }
+    }
+
+    /// Feed one region; returns a closed shard when this region completes
+    /// one. The region always lands in the shard returned now or later —
+    /// regions are never dropped or reordered.
+    pub fn push_region(&mut self, region: T, weight: usize) -> Option<ShardTask<T>> {
+        // Weight baseline: the mean of regions seen *before* this one, so
+        // an outlier region is measured against the stream's typical
+        // weight rather than against a target it inflated itself. No
+        // baseline before the first region — the count rule governs.
+        let prior_mean = (self.total_regions > 0)
+            .then(|| (self.total_weight / self.total_regions).max(1) as usize);
+        self.open.push(region);
+        self.open_weight += weight;
+        self.total_regions += 1;
+        self.total_weight += weight as u64;
+        let close_by_weight = prior_mean.is_some_and(|mean| {
+            self.open_weight >= self.shard_regions.saturating_mul(mean)
+        });
+        if self.open.len() >= self.shard_regions || close_by_weight {
+            self.close_open()
+        } else {
+            None
+        }
+    }
+
+    /// Flush the partial shard at end of stream (if any).
+    pub fn finish(&mut self) -> Option<ShardTask<T>> {
+        if self.open.is_empty() {
+            None
+        } else {
+            self.close_open()
+        }
+    }
+
+    /// Hand back an emptied shard container for reuse.
+    pub fn recycle(&mut self, mut container: Vec<T>) {
+        container.clear();
+        self.spare.push(container);
+    }
+
+    /// Shards emitted so far.
+    pub fn shards_planned(&self) -> usize {
+        self.next_index
+    }
+
+    /// Regions accepted so far.
+    pub fn regions_seen(&self) -> u64 {
+        self.total_regions
+    }
+
+    fn close_open(&mut self) -> Option<ShardTask<T>> {
+        let fresh = self.spare.pop().unwrap_or_default();
+        let regions = std::mem::replace(&mut self.open, fresh);
+        let task = ShardTask {
+            index: self.next_index,
+            regions,
+            weight: self.open_weight,
+        };
+        self.next_index += 1;
+        self.open_weight = 0;
+        Some(task)
+    }
+}
+
+/// Cross-thread free-list of emptied shard containers: workers `put`,
+/// the ingest driver drains into [`IngestPlanner::recycle`]. Capacity
+/// travels with the `Vec`s, which is what makes steady-state ingest
+/// allocation-free.
+#[derive(Debug)]
+pub struct ContainerPool<T> {
+    spare: Mutex<VecDeque<Vec<T>>>,
+}
+
+impl<T> Default for ContainerPool<T> {
+    fn default() -> Self {
+        ContainerPool::new()
+    }
+}
+
+impl<T> ContainerPool<T> {
+    pub fn new() -> ContainerPool<T> {
+        ContainerPool {
+            spare: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Return an emptied container (called from worker threads).
+    pub fn put(&self, mut container: Vec<T>) {
+        container.clear();
+        let mut spare = lock_ignore_poison(&self.spare);
+        spare.push_back(container);
+    }
+
+    /// Take one recycled container, if any (called from the driver).
+    pub fn take(&self) -> Option<Vec<T>> {
+        lock_ignore_poison(&self.spare).pop_front()
+    }
+}
+
+/// Lock a mutex, proceeding through poisoning: shutdown paths must keep
+/// working after a worker panic (the panic itself is reported separately).
+pub(crate) fn lock_ignore_poison<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain<T>(planner: &mut IngestPlanner<T>, regions: Vec<(T, usize)>) -> Vec<ShardTask<T>> {
+        let mut out = Vec::new();
+        for (r, w) in regions {
+            if let Some(t) = planner.push_region(r, w) {
+                out.push(t);
+            }
+        }
+        out.extend(planner.finish());
+        out
+    }
+
+    fn check_cover(tasks: &[ShardTask<u32>], n_regions: usize) {
+        let mut next_region = 0u32;
+        for (i, t) in tasks.iter().enumerate() {
+            assert_eq!(t.index, i, "shard indices are sequential");
+            assert!(!t.regions.is_empty(), "no empty shards");
+            for &r in &t.regions {
+                assert_eq!(r, next_region, "regions stay in stream order");
+                next_region += 1;
+            }
+        }
+        assert_eq!(next_region as usize, n_regions, "every region lands once");
+    }
+
+    #[test]
+    fn uniform_regions_close_on_count() {
+        let mut p = IngestPlanner::new(4);
+        let tasks = drain(&mut p, (0..10u32).map(|i| (i, 5)).collect());
+        check_cover(&tasks, 10);
+        assert_eq!(tasks.len(), 3, "4 + 4 + 2");
+        assert_eq!(tasks[0].weight, 20);
+        assert_eq!(tasks[2].regions.len(), 2);
+    }
+
+    #[test]
+    fn huge_region_closes_a_shard_immediately() {
+        let mut p = IngestPlanner::new(8);
+        let mut stream: Vec<(u32, usize)> = (0..4u32).map(|i| (i, 1)).collect();
+        stream.push((4, 1000)); // giant region: must close the shard now
+        stream.extend((5..9u32).map(|i| (i, 1)));
+        let tasks = drain(&mut p, stream);
+        check_cover(&tasks, 9);
+        assert!(
+            tasks[0].regions.contains(&4) && *tasks[0].regions.last().unwrap() == 4,
+            "giant region terminates shard 0: {:?}",
+            tasks[0].regions
+        );
+    }
+
+    #[test]
+    fn empty_stream_plans_nothing() {
+        let mut p: IngestPlanner<u32> = IngestPlanner::new(4);
+        assert!(p.finish().is_none());
+        assert_eq!(p.shards_planned(), 0);
+        assert_eq!(p.regions_seen(), 0);
+    }
+
+    #[test]
+    fn zero_weight_regions_close_on_count_rule() {
+        let mut p = IngestPlanner::new(3);
+        let tasks = drain(&mut p, (0..7u32).map(|i| (i, 0)).collect());
+        check_cover(&tasks, 7);
+        assert_eq!(tasks.len(), 3, "3 + 3 + 1");
+    }
+
+    #[test]
+    fn recycled_containers_are_reused() {
+        let mut p = IngestPlanner::new(2);
+        assert!(p.push_region(0u32, 1).is_none());
+        let t = p.push_region(1, 1).unwrap();
+        let ptr_before = t.regions.as_ptr();
+        p.recycle(t.regions);
+        // shard 1 closes into whatever container was swapped in when
+        // shard 0 closed; the recycled one becomes the open shard then
+        assert!(p.push_region(2, 1).is_none());
+        let t2 = p.push_region(3, 1).unwrap();
+        assert_eq!(t2.regions, vec![2, 3]);
+        assert_eq!(t2.index, 1);
+        // shard 2 lands in the recycled container: same allocation
+        assert!(p.push_region(4, 1).is_none());
+        let t3 = p.push_region(5, 1).unwrap();
+        assert_eq!(t3.regions.as_ptr(), ptr_before, "container is reused");
+        assert_eq!(t3.regions, vec![4, 5]);
+        assert_eq!(t3.index, 2);
+    }
+
+    #[test]
+    fn container_pool_round_trips() {
+        let pool: ContainerPool<u32> = ContainerPool::new();
+        assert!(pool.take().is_none());
+        pool.put(vec![1, 2, 3]);
+        let v = pool.take().unwrap();
+        assert!(v.is_empty(), "put clears");
+        assert!(v.capacity() >= 3, "capacity survives");
+        assert!(pool.take().is_none());
+    }
+
+    #[test]
+    fn boundaries_are_deterministic_in_the_stream_prefix() {
+        // same stream → same boundaries, independent of anything else
+        let stream: Vec<(u32, usize)> =
+            (0..100u32).map(|i| (i, (i as usize * 7) % 13 + 1)).collect();
+        let a = drain(&mut IngestPlanner::new(5), stream.clone());
+        let b = drain(&mut IngestPlanner::new(5), stream);
+        let cuts = |ts: &[ShardTask<u32>]| -> Vec<usize> {
+            ts.iter().map(|t| t.regions.len()).collect()
+        };
+        assert_eq!(cuts(&a), cuts(&b));
+        check_cover(&a, 100);
+    }
+
+    #[test]
+    fn effective_shard_regions_respects_budget() {
+        let auto = IngestPolicy {
+            buffer_regions: 256,
+            shard_regions: 0,
+        };
+        assert_eq!(auto.effective_shard_regions(4), 16);
+        assert_eq!(auto.effective_shard_regions(1000), 1, "never zero");
+        let explicit = IngestPolicy {
+            buffer_regions: 8,
+            shard_regions: 64,
+        };
+        assert_eq!(
+            explicit.effective_shard_regions(2),
+            8,
+            "clamped to the budget"
+        );
+    }
+}

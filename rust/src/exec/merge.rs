@@ -2,13 +2,25 @@
 //! order and fold per-shard [`PipelineMetrics`] into one global report
 //! with a per-worker breakdown.
 //!
-//! Because shards are contiguous ranges of the region stream and the pool
-//! returns results sorted by shard index, concatenation *is* stream
-//! order — the merge involves no reordering heuristics and is independent
-//! of which worker ran what, or when. Metrics are folded in shard order
-//! too, so the global counters are identical run to run.
+//! Because shards are contiguous ranges of the region stream,
+//! concatenation in shard-index order *is* stream order — the merge
+//! involves no reordering heuristics and is independent of which worker
+//! ran what, or when (stealing included). Metrics are folded in shard
+//! order too, so the global counters are identical run to run.
+//!
+//! Two shapes:
+//!
+//! * [`merge_results`] — the materialized join: all shard results at
+//!   once, already sorted.
+//! * [`StreamMerger`] — the streaming window: accepts results in
+//!   completion order and releases them in stream order as soon as the
+//!   prefix is complete, over a fixed pre-allocated ring sized by the
+//!   ingest budget (no per-shard allocation). [`ReportBuilder`] folds the
+//!   released results into the same [`ExecReport`] incrementally.
 
 use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
 
 use crate::coordinator::metrics::PipelineMetrics;
 
@@ -21,6 +33,8 @@ pub struct WorkerStats {
     pub worker: usize,
     /// Shards this worker executed.
     pub shards: usize,
+    /// How many of those it stole from another worker's deque.
+    pub steals: usize,
     /// Output items it produced.
     pub outputs: usize,
     /// Kernel invocations it spent.
@@ -34,7 +48,8 @@ pub struct WorkerStats {
 /// The merged result of a sharded run.
 #[derive(Debug, Clone)]
 pub struct ExecReport<T> {
-    /// All outputs, in original stream order.
+    /// All outputs, in original stream order (empty when a streaming
+    /// sink consumed them instead).
     pub outputs: Vec<T>,
     /// Global pipeline metrics: every worker's counters folded together
     /// (`elapsed` is the max pipeline-internal time, as in
@@ -44,6 +59,8 @@ pub struct ExecReport<T> {
     pub invocations: u64,
     /// Number of shards executed.
     pub shards: usize,
+    /// Shards that changed workers via stealing.
+    pub steals: usize,
     /// Wall-clock seconds of the whole sharded run (plan + pool + merge).
     pub elapsed: f64,
     /// Per-worker breakdown, sorted by worker id (workers that never
@@ -64,12 +81,14 @@ impl<T> ExecReport<T> {
 
     /// Render the per-worker breakdown (used by `--stats`).
     pub fn worker_table(&self) -> String {
-        let mut out = String::from("worker   shards   outputs   kernel_inv   busy_s    occ%\n");
+        let mut out =
+            String::from("worker   shards   stolen   outputs   kernel_inv   busy_s    occ%\n");
         for w in &self.per_worker {
             out.push_str(&format!(
-                "{:<8} {:>6}  {:>8}  {:>11}  {:>7.3}  {:>5.1}\n",
+                "{:<8} {:>6}  {:>6}  {:>8}  {:>11}  {:>7.3}  {:>5.1}\n",
                 w.worker,
                 w.shards,
+                w.steals,
                 w.outputs,
                 w.invocations,
                 w.busy,
@@ -80,39 +99,140 @@ impl<T> ExecReport<T> {
     }
 }
 
-/// Fold shard results (already in shard order) into an [`ExecReport`].
-pub fn merge_results<T>(results: Vec<ShardResult<T>>, elapsed: f64) -> ExecReport<T> {
-    let shards = results.len();
-    let mut outputs = Vec::with_capacity(results.iter().map(|r| r.outputs.len()).sum());
-    let mut metrics = PipelineMetrics::default();
-    let mut invocations = 0u64;
-    let mut per_worker: BTreeMap<usize, WorkerStats> = BTreeMap::new();
-    for r in results {
-        let n_out = r.outputs.len();
-        outputs.extend(r.outputs);
-        metrics.merge(&r.metrics);
-        invocations += r.invocations;
-        let w = per_worker.entry(r.worker).or_insert_with(|| WorkerStats {
+/// Incremental fold of shard results into an [`ExecReport`]: the
+/// materialized join and the streaming path share the exact same
+/// accounting, so their reports are comparable number for number.
+pub struct ReportBuilder<T> {
+    outputs: Vec<T>,
+    metrics: PipelineMetrics,
+    invocations: u64,
+    shards: usize,
+    steals: usize,
+    per_worker: BTreeMap<usize, WorkerStats>,
+}
+
+impl<T> Default for ReportBuilder<T> {
+    fn default() -> Self {
+        ReportBuilder::new()
+    }
+}
+
+impl<T> ReportBuilder<T> {
+    pub fn new() -> ReportBuilder<T> {
+        ReportBuilder {
+            outputs: Vec::new(),
+            metrics: PipelineMetrics::default(),
+            invocations: 0,
+            shards: 0,
+            steals: 0,
+            per_worker: BTreeMap::new(),
+        }
+    }
+
+    /// Fold one shard's counters (not its outputs — the caller decides
+    /// whether outputs are collected or streamed to a sink).
+    pub fn add_stats(&mut self, r: &ShardResult<T>) {
+        self.metrics.merge(&r.metrics);
+        self.invocations += r.invocations;
+        self.shards += 1;
+        self.steals += r.stolen as usize;
+        let w = self.per_worker.entry(r.worker).or_insert_with(|| WorkerStats {
             worker: r.worker,
             shards: 0,
+            steals: 0,
             outputs: 0,
             invocations: 0,
             busy: 0.0,
             metrics: PipelineMetrics::default(),
         });
         w.shards += 1;
-        w.outputs += n_out;
+        w.steals += r.stolen as usize;
+        w.outputs += r.outputs.len();
         w.invocations += r.invocations;
         w.busy += r.elapsed;
         w.metrics.merge(&r.metrics);
     }
-    ExecReport {
-        outputs,
-        metrics,
-        invocations,
-        shards,
-        elapsed,
-        per_worker: per_worker.into_values().collect(),
+
+    /// Fold one shard completely, collecting its outputs.
+    pub fn add(&mut self, mut r: ShardResult<T>) {
+        self.add_stats(&r);
+        self.outputs.append(&mut r.outputs);
+    }
+
+    /// Finish into a report. `outputs` holds whatever [`ReportBuilder::add`]
+    /// collected (empty for sink-consumed streaming runs).
+    pub fn finish(self, elapsed: f64) -> ExecReport<T> {
+        ExecReport {
+            outputs: self.outputs,
+            metrics: self.metrics,
+            invocations: self.invocations,
+            shards: self.shards,
+            steals: self.steals,
+            elapsed,
+            per_worker: self.per_worker.into_values().collect(),
+        }
+    }
+}
+
+/// Fold shard results (already in shard order) into an [`ExecReport`].
+pub fn merge_results<T>(results: Vec<ShardResult<T>>, elapsed: f64) -> ExecReport<T> {
+    let mut b = ReportBuilder::new();
+    for r in results {
+        b.add(r);
+    }
+    b.finish(elapsed)
+}
+
+/// Order-restoring window for streaming runs: shard results arrive in
+/// completion order, leave in stream order, as soon as the contiguous
+/// prefix is complete.
+///
+/// Backed by a ring of `capacity` pre-allocated slots — enough for every
+/// shard the ingest budget allows in flight, so accepting and releasing
+/// results allocates nothing per shard. Indices outside the window
+/// (`[next_expected, next_expected + capacity)`) are executor bugs and
+/// reported as errors, not silently buffered.
+#[derive(Debug)]
+pub struct StreamMerger<T> {
+    slots: Vec<Option<ShardResult<T>>>,
+    next: usize,
+}
+
+impl<T> StreamMerger<T> {
+    pub fn with_capacity(capacity: usize) -> StreamMerger<T> {
+        StreamMerger {
+            slots: (0..capacity.max(1)).map(|_| None).collect(),
+            next: 0,
+        }
+    }
+
+    /// Accept one completed shard result (any completion order).
+    pub fn accept(&mut self, r: ShardResult<T>) -> Result<()> {
+        let cap = self.slots.len();
+        ensure!(
+            r.shard >= self.next && r.shard < self.next + cap,
+            "stream merger: shard {} outside the reassembly window [{}, {})",
+            r.shard,
+            self.next,
+            self.next + cap
+        );
+        let slot = &mut self.slots[r.shard % cap];
+        ensure!(slot.is_none(), "stream merger: duplicate shard {}", r.shard);
+        *slot = Some(r);
+        Ok(())
+    }
+
+    /// Release the next in-order result, if it has arrived.
+    pub fn pop_ready(&mut self) -> Option<ShardResult<T>> {
+        let cap = self.slots.len();
+        let r = self.slots[self.next % cap].take()?;
+        self.next += 1;
+        Some(r)
+    }
+
+    /// The shard index the stream is waiting on.
+    pub fn next_expected(&self) -> usize {
+        self.next
     }
 }
 
@@ -134,6 +254,8 @@ mod tests {
         ShardResult {
             shard,
             worker,
+            regions: outputs.len(),
+            stolen: worker == 1,
             outputs,
             metrics,
             invocations: items as u64,
@@ -154,6 +276,7 @@ mod tests {
         assert_eq!(report.outputs, vec![1, 2, 3, 4, 5]);
         assert_eq!(report.shards, 3);
         assert_eq!(report.invocations, 5);
+        assert_eq!(report.steals, 2, "worker 1's shards are marked stolen");
         assert_eq!(report.metrics.node("n").unwrap().ensembles, 5);
     }
 
@@ -170,12 +293,15 @@ mod tests {
         assert_eq!(report.per_worker.len(), 2);
         assert_eq!(report.per_worker[0].worker, 0);
         assert_eq!(report.per_worker[0].shards, 1);
+        assert_eq!(report.per_worker[0].steals, 0);
         assert_eq!(report.per_worker[1].worker, 1);
         assert_eq!(report.per_worker[1].shards, 2);
+        assert_eq!(report.per_worker[1].steals, 2);
         assert_eq!(report.per_worker[1].outputs, 4);
         assert!((report.per_worker[1].busy - 1.0).abs() < 1e-12);
         let table = report.worker_table();
         assert!(table.contains("worker"), "{table}");
+        assert!(table.contains("stolen"), "{table}");
         assert!(report.utilization() > 0.0);
     }
 
@@ -186,5 +312,59 @@ mod tests {
         assert_eq!(report.shards, 0);
         assert!(report.per_worker.is_empty());
         assert_eq!(report.utilization(), 0.0);
+    }
+
+    #[test]
+    fn stream_merger_reorders_within_the_window() {
+        let mut m: StreamMerger<i32> = StreamMerger::with_capacity(4);
+        assert!(m.pop_ready().is_none());
+        m.accept(shard(2, 0, vec![30], 1)).unwrap();
+        m.accept(shard(0, 0, vec![10], 1)).unwrap();
+        assert_eq!(m.pop_ready().unwrap().shard, 0);
+        assert!(m.pop_ready().is_none(), "shard 1 still missing");
+        m.accept(shard(1, 0, vec![20], 1)).unwrap();
+        assert_eq!(m.pop_ready().unwrap().shard, 1);
+        assert_eq!(m.pop_ready().unwrap().shard, 2);
+        assert!(m.pop_ready().is_none());
+        assert_eq!(m.next_expected(), 3);
+        // the window slid: shard 5 is now acceptable, 7 is not
+        m.accept(shard(5, 0, vec![50], 1)).unwrap();
+        let err = m.accept(shard(7, 0, vec![70], 1)).unwrap_err();
+        assert!(err.to_string().contains("window"), "{err}");
+    }
+
+    #[test]
+    fn stream_merger_rejects_duplicates() {
+        let mut m: StreamMerger<i32> = StreamMerger::with_capacity(2);
+        m.accept(shard(0, 0, vec![1], 1)).unwrap();
+        let err = m.accept(shard(0, 0, vec![1], 1)).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn streamed_stats_match_materialized_merge() {
+        let results = vec![
+            shard(0, 1, vec![1, 2], 2),
+            shard(1, 0, vec![3], 1),
+            shard(2, 1, vec![4, 5], 2),
+        ];
+        let want = merge_results(results.clone(), 2.0);
+        let mut b = ReportBuilder::new();
+        let mut sunk = Vec::new();
+        for r in results {
+            b.add_stats(&r);
+            sunk.extend(r.outputs);
+        }
+        let got = b.finish(2.0);
+        assert!(got.outputs.is_empty(), "sink consumed the outputs");
+        assert_eq!(sunk, want.outputs);
+        assert_eq!(got.shards, want.shards);
+        assert_eq!(got.steals, want.steals);
+        assert_eq!(got.invocations, want.invocations);
+        assert_eq!(got.per_worker.len(), want.per_worker.len());
+        for (g, w) in got.per_worker.iter().zip(&want.per_worker) {
+            assert_eq!(g.shards, w.shards);
+            assert_eq!(g.outputs, w.outputs);
+        }
     }
 }

@@ -36,26 +36,38 @@
 //! ## Pieces
 //!
 //! * [`plan`] — [`ShardPlan`]: contiguous, boundary-respecting partition
-//!   of the region stream with greedy item-count balancing, under a
-//!   configurable [`ShardPolicy`] (shards per worker, max-shard cap,
-//!   minimum shard weight).
+//!   of a **materialized** region stream with greedy item-count
+//!   balancing, under a configurable [`ShardPolicy`] (shards per worker,
+//!   max-shard cap, minimum shard weight).
+//! * [`ingest`] — [`IngestPlanner`]: the streaming twin of the plan —
+//!   converts regions arriving from a
+//!   [`RegionSource`](crate::workload::source::RegionSource) into shards
+//!   on the fly, against a bounded in-flight budget ([`IngestPolicy`])
+//!   with backpressure and container recycling.
 //! * [`factory`] — [`PipelineFactory`]/[`ShardWorker`]: how an app
 //!   instantiates a fresh pipeline per worker thread (plus
 //!   [`KernelSpawn`], which builds per-thread kernel sets — PJRT client
 //!   handles are thread-confined, so each worker owns its engine).
-//! * [`pool`] — [`WorkerPool`]: `std::thread::scope`-based pool; workers
-//!   claim shards from an atomic cursor and run one scheduler each.
+//! * [`steal`] — [`StealQueues`]: per-worker shard deques with
+//!   LIFO-local / FIFO-steal claiming ([`ClaimMode`] selects stealing,
+//!   no-steal, or the legacy atomic cursor for benchmarking).
+//! * [`pool`] — [`WorkerPool`]: `std::thread::scope`-based pool; one
+//!   scheduler per worker, shards claimed from the deques. In streaming
+//!   mode the calling thread drives ingest while workers execute.
 //! * [`merge`] — [`ExecReport`]: deterministic reassembly of per-shard
 //!   outputs in original stream order plus a global
 //!   [`PipelineMetrics`](crate::coordinator::metrics::PipelineMetrics)
-//!   fold with a per-worker breakdown.
-//! * [`runner`] — [`ExecConfig`]/[`ShardedRunner`]: the front door.
+//!   fold with a per-worker breakdown. [`StreamMerger`] releases results
+//!   in stream order as shards complete, not after a global join.
+//! * [`runner`] — [`ExecConfig`]/[`ShardedRunner`]: the front door
+//!   (`run` for materialized streams, `run_stream`/`run_stream_with`
+//!   for incremental sources).
 //!
 //! ## Quick start
 //!
 //! ```no_run
 //! use regatta::prelude::*;
-//! use regatta::workload::regions::{gen_blobs, RegionSpec};
+//! use regatta::workload::regions::{gen_blobs, GenBlobSource, RegionSpec};
 //!
 //! let blobs = gen_blobs(1 << 20, RegionSpec::Fixed { size: 96 }, 1);
 //! let factory = SumFactory::new(SumConfig::default(), KernelSpawn::Native);
@@ -64,21 +76,33 @@
 //!     .unwrap();
 //! println!("{} sums from {} shards\n{}", report.outputs.len(),
 //!          report.shards, report.worker_table());
+//!
+//! // The same computation as a stream: regions are generated lazily and
+//! // at most 1024 are in flight at once, whatever the stream length.
+//! let source = GenBlobSource::new(1 << 20, RegionSpec::Fixed { size: 96 }, 1);
+//! let streamed = ShardedRunner::new(ExecConfig::new(8).streaming(1024))
+//!     .run_stream(&factory, source)
+//!     .unwrap();
+//! assert_eq!(streamed.outputs.len(), report.outputs.len());
 //! ```
 //!
 //! With `workers = 1` the runner degenerates to a single shard executed
 //! inline — identical outputs and metrics counters to calling the app's
 //! `run` directly (the `exec_equivalence` suite pins this down for
-//! workers 1–8).
+//! workers 1–8; `ingest_stream` does the same for the streaming path).
 
 pub mod factory;
+pub mod ingest;
 pub mod merge;
 pub mod plan;
 pub mod pool;
 pub mod runner;
+pub mod steal;
 
 pub use factory::{KernelSpawn, PipelineFactory, ShardOutput, ShardWorker, WorkerKernels};
-pub use merge::{ExecReport, WorkerStats};
+pub use ingest::{ContainerPool, IngestPlanner, IngestPolicy, ShardTask};
+pub use merge::{ExecReport, ReportBuilder, StreamMerger, WorkerStats};
 pub use plan::{ShardPlan, ShardPolicy};
 pub use pool::{ShardResult, WorkerPool};
 pub use runner::{ExecConfig, ShardedRunner};
+pub use steal::{Claim, ClaimMode, CompletionBuffer, StealQueues};

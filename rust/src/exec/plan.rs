@@ -207,9 +207,7 @@ mod tests {
         w[3] = 1000;
         let plan = ShardPlan::build(&w, 4, &ShardPolicy::default());
         check_invariants(&w, &plan);
-        let heavy = (0..plan.len())
-            .find(|&i| plan.range(i).contains(&3))
-            .unwrap();
+        let heavy = (0..plan.len()).find(|&i| plan.range(i).contains(&3)).unwrap();
         assert!(plan.shard_weight(heavy) >= 1000);
     }
 

@@ -1,13 +1,28 @@
 //! The worker pool: one scoped OS thread per worker, each running a
-//! private single-threaded pipeline over shards claimed from an atomic
-//! cursor (the paper's "pipelines compete to consume data from a common
-//! input stream ... atomic operations but no locking", lifted from GPU
-//! processors to OS threads).
+//! private single-threaded pipeline over shards claimed from per-worker
+//! deques with LIFO-local / FIFO-steal work stealing (the paper's
+//! "pipelines compete to consume data from a common input stream ...
+//! atomic operations but no locking", lifted from GPU processors to OS
+//! threads — here the competition is stealing whole region-aligned
+//! shards, so region state never crosses a worker mid-region).
 //!
-//! Error semantics: the first failure flips a stop flag so idle workers
-//! quit claiming, and the error (annotated with worker and shard) is
-//! returned after all threads join. Already-completed shards are
-//! discarded — a sharded run is all-or-nothing.
+//! Two execution modes:
+//!
+//! * [`WorkerPool::run`] — a materialized [`ShardPlan`]: every shard is
+//!   dealt round-robin into the deques up front, workers drain and steal.
+//!   The original single-atomic-cursor claimer survives as
+//!   [`ClaimMode::Cursor`], the `bench ingest` baseline.
+//! * [`WorkerPool::run_stream`] — streaming ingest: the calling thread
+//!   becomes the ingest driver, pulling regions from a
+//!   [`RegionSource`], cutting shards on the fly
+//!   ([`IngestPlanner`]), dealing them into the deques under a bounded
+//!   in-flight budget, and emitting merged results **in stream order as
+//!   shards complete** (not after a global join).
+//!
+//! Error semantics (both modes): the first failure flips a stop flag so
+//! idle workers quit claiming, and the error (annotated with worker and
+//! shard) reaches the caller after all threads join. Already-completed
+//! shards are discarded — a sharded run is all-or-nothing.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::time::Instant;
@@ -15,8 +30,12 @@ use std::time::Instant;
 use anyhow::{anyhow, ensure, Result};
 
 use super::factory::{PipelineFactory, ShardWorker};
+use super::ingest::{ContainerPool, IngestPlanner, IngestPolicy, ShardTask};
+use super::merge::StreamMerger;
 use super::plan::ShardPlan;
+use super::steal::{Claim, ClaimMode, CompletionBuffer, StealQueues};
 use crate::coordinator::metrics::PipelineMetrics;
+use crate::workload::source::RegionSource;
 
 /// One shard's results, tagged with where it ran.
 #[derive(Debug, Clone)]
@@ -25,6 +44,10 @@ pub struct ShardResult<T> {
     pub shard: usize,
     /// Worker that executed it.
     pub worker: usize,
+    /// Regions the shard spanned.
+    pub regions: usize,
+    /// Whether the executing worker stole it from another deque.
+    pub stolen: bool,
     /// Outputs in the shard's stream order.
     pub outputs: Vec<T>,
     /// The shard pipeline's metrics.
@@ -45,17 +68,98 @@ fn panic_msg(payload: &(dyn std::any::Any + Send)) -> &str {
         .unwrap_or("non-string panic payload")
 }
 
-/// Fixed-size pool of pipeline workers over a shard plan.
+/// Flips the stop flag if its thread unwinds, so a panicking worker
+/// halts the rest of the pool just like an `Err` does.
+struct StopOnPanic<'a>(&'a AtomicBool);
+
+impl Drop for StopOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Streaming variant of [`StopOnPanic`]: also records a failure in the
+/// completion buffer so the (possibly sleeping) ingest driver wakes and
+/// aborts instead of waiting forever for a shard that will never finish.
+struct PanicSignal<'a, R> {
+    stop: &'a AtomicBool,
+    completion: &'a CompletionBuffer<R>,
+}
+
+impl<R> Drop for PanicSignal<'_, R> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.stop.store(true, Ordering::Relaxed);
+            self.completion
+                .fail(anyhow!("worker thread panicked while running a shard"));
+        }
+    }
+}
+
+/// How a materialized run hands out shard indices.
+enum ShardClaimer {
+    /// Legacy single shared cursor (kept for the `bench ingest` ablation).
+    Cursor { next: AtomicUsize, len: usize },
+    /// Per-worker deques, LIFO-local / FIFO-steal.
+    Deques(StealQueues<usize>),
+}
+
+impl ShardClaimer {
+    fn for_plan(mode: ClaimMode, threads: usize, shards: usize) -> ShardClaimer {
+        match mode {
+            ClaimMode::Cursor => ShardClaimer::Cursor {
+                next: AtomicUsize::new(0),
+                len: shards,
+            },
+            ClaimMode::Steal | ClaimMode::NoSteal => {
+                let queues = StealQueues::new(threads, mode == ClaimMode::Steal);
+                for shard in 0..shards {
+                    queues.push(shard);
+                }
+                // the full plan is loaded: close now so claims never block
+                queues.close();
+                ShardClaimer::Deques(queues)
+            }
+        }
+    }
+
+    /// `(shard index, stolen)`, or `None` when the plan is exhausted.
+    fn next(&self, worker: usize) -> Option<(usize, bool)> {
+        match self {
+            ShardClaimer::Cursor { next, len } => {
+                let shard = next.fetch_add(1, Ordering::Relaxed);
+                (shard < *len).then_some((shard, false))
+            }
+            ShardClaimer::Deques(queues) => match queues.claim(worker) {
+                Claim::Task { work, stolen } => Some((work, stolen)),
+                Claim::Done => None,
+            },
+        }
+    }
+}
+
+/// Fixed-size pool of pipeline workers over a shard plan or region
+/// stream.
 #[derive(Debug, Clone, Copy)]
 pub struct WorkerPool {
     workers: usize,
+    claim: ClaimMode,
 }
 
 impl WorkerPool {
     pub fn new(workers: usize) -> WorkerPool {
         WorkerPool {
-            workers: workers.max(1),
+            workers,
+            claim: ClaimMode::default(),
         }
+    }
+
+    /// Override the claim discipline (default: [`ClaimMode::Steal`]).
+    pub fn with_claim(mut self, claim: ClaimMode) -> WorkerPool {
+        self.claim = claim;
+        self
     }
 
     pub fn workers(&self) -> usize {
@@ -74,36 +178,25 @@ impl WorkerPool {
         stream: &[F::In],
         plan: &ShardPlan,
     ) -> Result<Vec<ShardResult<F::Out>>> {
+        ensure!(
+            self.workers >= 1,
+            "worker pool misconfigured: workers = 0 (need at least one worker thread)"
+        );
         if plan.is_empty() {
             return Ok(Vec::new());
         }
         let threads = self.workers.min(plan.len());
-        let cursor = AtomicUsize::new(0);
+        let claimer = ShardClaimer::for_plan(self.claim, threads, plan.len());
         let stop = AtomicBool::new(false);
-
-        /// Flips the stop flag if its thread unwinds, so a panicking
-        /// worker halts the rest of the pool just like an `Err` does.
-        struct StopOnPanic<'a>(&'a AtomicBool);
-        impl Drop for StopOnPanic<'_> {
-            fn drop(&mut self) {
-                if std::thread::panicking() {
-                    self.0.store(true, Ordering::Relaxed);
-                }
-            }
-        }
 
         let worker_loop = |worker_id: usize| -> Result<Vec<ShardResult<F::Out>>> {
             let _guard = StopOnPanic(&stop);
             let mut done = Vec::new();
             let mut pipeline: Option<F::Worker> = None;
-            loop {
-                if stop.load(Ordering::Relaxed) {
+            while !stop.load(Ordering::Relaxed) {
+                let Some((shard, stolen)) = claimer.next(worker_id) else {
                     break;
-                }
-                let shard = cursor.fetch_add(1, Ordering::Relaxed);
-                if shard >= plan.len() {
-                    break;
-                }
+                };
                 if pipeline.is_none() {
                     // Built lazily so workers that never claim a shard
                     // never pay for an engine.
@@ -118,11 +211,14 @@ impl WorkerPool {
                     }
                 }
                 let p = pipeline.as_mut().expect("pipeline built above");
+                let range = plan.range(shard);
                 let t0 = Instant::now();
-                match p.run_shard(&stream[plan.range(shard)]) {
+                match p.run_shard(&stream[range.clone()]) {
                     Ok(out) => done.push(ShardResult {
                         shard,
                         worker: worker_id,
+                        regions: range.len(),
+                        stolen,
                         outputs: out.outputs,
                         metrics: out.metrics,
                         invocations: out.invocations,
@@ -171,6 +267,272 @@ impl WorkerPool {
         );
         Ok(all)
     }
+
+    /// Streaming execution: pull regions from `source` on the calling
+    /// thread, cut shards on the fly against `ingest`'s in-flight budget,
+    /// execute them on `self.workers` threads with work stealing, and
+    /// hand each merged [`ShardResult`] to `emit` **in stream order, as
+    /// soon as its prefix is complete**.
+    ///
+    /// Backpressure: while `submitted − emitted` regions would exceed
+    /// [`IngestPolicy::buffer_regions`], the driver stops pulling from
+    /// the source and sleeps until workers catch up, so in-flight payload
+    /// is bounded by the budget (+ one open shard) regardless of stream
+    /// length. Shard containers are recycled through a [`ContainerPool`],
+    /// making steady-state ingest allocation-free.
+    ///
+    /// [`ClaimMode::Cursor`] has no streaming form (there is no global
+    /// plan to index); it runs as [`ClaimMode::Steal`].
+    pub fn run_stream<F, S, K>(
+        &self,
+        factory: &F,
+        mut source: S,
+        ingest: &IngestPolicy,
+        emit: K,
+    ) -> Result<()>
+    where
+        F: PipelineFactory,
+        F::In: Send,
+        S: RegionSource<Region = F::In>,
+        K: FnMut(ShardResult<F::Out>) -> Result<()>,
+    {
+        ensure!(
+            self.workers >= 1,
+            "worker pool misconfigured: workers = 0 (need at least one worker thread)"
+        );
+        let threads = self.workers;
+        let budget = ingest.buffer_regions.max(1);
+        let granule = ingest.effective_shard_regions(threads);
+        let queues: StealQueues<ShardTask<F::In>> =
+            StealQueues::new(threads, self.claim != ClaimMode::NoSteal);
+        let completion: CompletionBuffer<ShardResult<F::Out>> = CompletionBuffer::new();
+        let containers: ContainerPool<F::In> = ContainerPool::new();
+        let stop = AtomicBool::new(false);
+
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|wid| {
+                    let (queues, completion) = (&queues, &completion);
+                    let (containers, stop) = (&containers, &stop);
+                    scope.spawn(move || {
+                        stream_worker(wid, factory, queues, completion, containers, stop)
+                    })
+                })
+                .collect();
+
+            let mut driver = StreamDriver {
+                queues: &queues,
+                completion: &completion,
+                merger: StreamMerger::with_capacity(budget + 1),
+                emit,
+                inbox: Vec::new(),
+                budget,
+                submitted_regions: 0,
+                submitted_shards: 0,
+                emitted_regions: 0,
+                emitted_shards: 0,
+            };
+            let mut planner: IngestPlanner<F::In> = IngestPlanner::new(granule);
+            let fed = drive_ingest(factory, &mut source, &mut planner, &containers, &mut driver);
+
+            // Shut the pool down whether ingest finished or aborted.
+            stop.store(true, Ordering::Relaxed);
+            queues.close();
+            let mut first_err: Option<anyhow::Error> = None;
+            for h in handles {
+                if let Err(payload) = h.join() {
+                    first_err.get_or_insert_with(|| {
+                        anyhow!("worker thread panicked: {}", panic_msg(&payload))
+                    });
+                }
+            }
+            // A detailed panic message beats the driver's generic
+            // "worker thread panicked" wake-up error; otherwise the
+            // driver error is the root cause.
+            match (fed, first_err) {
+                (Err(e), Some(p)) if e.to_string().contains("panicked") => Err(p),
+                (Err(e), _) => Err(e),
+                (Ok(()), Some(p)) => Err(p),
+                (Ok(()), None) => Ok(()),
+            }
+        })
+    }
+}
+
+/// The ingest side of [`WorkerPool::run_stream`]: source → planner →
+/// deques, with completions merged and emitted opportunistically.
+fn drive_ingest<F, S, K>(
+    factory: &F,
+    source: &mut S,
+    planner: &mut IngestPlanner<F::In>,
+    containers: &ContainerPool<F::In>,
+    driver: &mut StreamDriver<'_, F::In, F::Out, K>,
+) -> Result<()>
+where
+    F: PipelineFactory,
+    F::In: Send,
+    S: RegionSource<Region = F::In>,
+    K: FnMut(ShardResult<F::Out>) -> Result<()>,
+{
+    loop {
+        // return emptied shard containers to the planner (the
+        // steady-state zero-allocation loop) and emit whatever is ready
+        while let Some(container) = containers.take() {
+            planner.recycle(container);
+        }
+        driver.pump()?;
+
+        let Some(region) = source.next_region() else {
+            break;
+        };
+        let weight = factory.weight(&region);
+        if let Some(task) = planner.push_region(region, weight) {
+            driver.submit(task)?;
+        }
+    }
+    if let Some(task) = planner.finish() {
+        driver.submit(task)?;
+    }
+    // end of stream: no more work will be dealt; let idle workers exit
+    driver.queues.close();
+    driver.drain_rest()
+}
+
+/// Driver-side state for a streaming run: budget accounting, the ordered
+/// reassembly window, and the emission sink.
+struct StreamDriver<'s, I, O, K> {
+    queues: &'s StealQueues<ShardTask<I>>,
+    completion: &'s CompletionBuffer<ShardResult<O>>,
+    merger: StreamMerger<O>,
+    emit: K,
+    inbox: Vec<ShardResult<O>>,
+    budget: usize,
+    submitted_regions: usize,
+    submitted_shards: usize,
+    emitted_regions: usize,
+    emitted_shards: usize,
+}
+
+impl<I, O, K> StreamDriver<'_, I, O, K>
+where
+    K: FnMut(ShardResult<O>) -> Result<()>,
+{
+    /// Non-blocking: absorb any completed shards and emit the ready
+    /// prefix.
+    fn pump(&mut self) -> Result<()> {
+        if let Some(err) = self.completion.drain_into(&mut self.inbox) {
+            return Err(err);
+        }
+        self.absorb()
+    }
+
+    /// Blocking: sleep until at least one completion (or a failure)
+    /// arrives, then absorb.
+    fn pump_wait(&mut self) -> Result<()> {
+        if let Some(err) = self.completion.wait_drain_into(&mut self.inbox) {
+            return Err(err);
+        }
+        self.absorb()
+    }
+
+    fn absorb(&mut self) -> Result<()> {
+        for r in self.inbox.drain(..) {
+            self.merger.accept(r)?;
+        }
+        while let Some(r) = self.merger.pop_ready() {
+            self.emitted_regions += r.regions;
+            self.emitted_shards += 1;
+            (self.emit)(r)?;
+        }
+        Ok(())
+    }
+
+    /// Deal one shard into the deques, first waiting out the in-flight
+    /// budget (backpressure). An oversized shard (more regions than the
+    /// whole budget) is admitted alone, once everything before it has
+    /// drained.
+    fn submit(&mut self, task: ShardTask<I>) -> Result<()> {
+        let regions = task.regions.len();
+        loop {
+            self.pump()?;
+            let in_flight = self.submitted_regions - self.emitted_regions;
+            if in_flight == 0 || in_flight + regions <= self.budget {
+                break;
+            }
+            self.pump_wait()?;
+        }
+        self.submitted_regions += regions;
+        self.submitted_shards += 1;
+        self.queues.push(task);
+        Ok(())
+    }
+
+    /// After the source is exhausted: wait for every submitted shard to
+    /// come back and be emitted.
+    fn drain_rest(&mut self) -> Result<()> {
+        while self.emitted_shards < self.submitted_shards {
+            self.pump_wait()?;
+        }
+        Ok(())
+    }
+}
+
+/// One streaming worker thread: claim → (lazily build pipeline) → run →
+/// recycle container → report completion.
+fn stream_worker<F: PipelineFactory>(
+    worker_id: usize,
+    factory: &F,
+    queues: &StealQueues<ShardTask<F::In>>,
+    completion: &CompletionBuffer<ShardResult<F::Out>>,
+    containers: &ContainerPool<F::In>,
+    stop: &AtomicBool,
+) {
+    let _guard = PanicSignal { stop, completion };
+    let mut pipeline: Option<F::Worker> = None;
+    while !stop.load(Ordering::Relaxed) {
+        let (task, stolen) = match queues.claim(worker_id) {
+            Claim::Task { work, stolen } => (work, stolen),
+            Claim::Done => return,
+        };
+        if pipeline.is_none() {
+            match factory.make_worker(worker_id) {
+                Ok(p) => pipeline = Some(p),
+                Err(e) => {
+                    stop.store(true, Ordering::Relaxed);
+                    completion.fail(e.context(format!(
+                        "building pipeline for worker {worker_id}"
+                    )));
+                    return;
+                }
+            }
+        }
+        let p = pipeline.as_mut().expect("pipeline built above");
+        let t0 = Instant::now();
+        match p.run_shard(&task.regions) {
+            Ok(out) => {
+                let result = ShardResult {
+                    shard: task.index,
+                    worker: worker_id,
+                    regions: task.regions.len(),
+                    stolen,
+                    outputs: out.outputs,
+                    metrics: out.metrics,
+                    invocations: out.invocations,
+                    elapsed: t0.elapsed().as_secs_f64(),
+                };
+                containers.put(task.regions);
+                completion.push(result);
+            }
+            Err(e) => {
+                stop.store(true, Ordering::Relaxed);
+                completion.fail(e.context(format!(
+                    "worker {worker_id} failed on streaming shard {}",
+                    task.index
+                )));
+                return;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -178,15 +540,27 @@ mod tests {
     use super::*;
     use crate::exec::factory::ShardOutput;
     use crate::exec::plan::ShardPolicy;
+    use crate::workload::source::IterSource;
 
     /// Toy factory: identity over u32 regions of weight 1, with a
-    /// configurable failure shard.
+    /// configurable failure item and optional per-item busy sleep.
     struct ToyFactory {
         fail_on: Option<u32>,
+        sleep_heavy: Option<u32>,
+    }
+
+    impl ToyFactory {
+        fn plain() -> ToyFactory {
+            ToyFactory {
+                fail_on: None,
+                sleep_heavy: None,
+            }
+        }
     }
 
     struct ToyWorker {
         fail_on: Option<u32>,
+        sleep_heavy: Option<u32>,
     }
 
     impl ShardWorker for ToyWorker {
@@ -197,6 +571,11 @@ mod tests {
             if let Some(bad) = self.fail_on {
                 if shard.contains(&bad) {
                     anyhow::bail!("poison item {bad}");
+                }
+            }
+            if let Some(heavy) = self.sleep_heavy {
+                if shard.contains(&heavy) {
+                    std::thread::sleep(std::time::Duration::from_millis(25));
                 }
             }
             Ok(ShardOutput {
@@ -215,6 +594,7 @@ mod tests {
         fn make_worker(&self, _worker_id: usize) -> Result<ToyWorker> {
             Ok(ToyWorker {
                 fail_on: self.fail_on,
+                sleep_heavy: self.sleep_heavy,
             })
         }
     }
@@ -227,24 +607,28 @@ mod tests {
     fn results_come_back_in_shard_order() {
         let stream = items(1000);
         let weights = vec![1usize; 1000];
-        for workers in [1usize, 2, 4, 7] {
-            let plan = ShardPlan::build(
-                &weights,
-                workers,
-                &ShardPolicy {
-                    shards_per_worker: 3,
-                    ..ShardPolicy::default()
-                },
-            );
-            let results = WorkerPool::new(workers)
-                .run(&ToyFactory { fail_on: None }, &stream, &plan)
-                .unwrap();
-            assert_eq!(results.len(), plan.len());
-            let flat: Vec<u32> = results.iter().flat_map(|r| r.outputs.clone()).collect();
-            assert_eq!(flat, stream, "workers={workers}");
-            for (i, r) in results.iter().enumerate() {
-                assert_eq!(r.shard, i);
-                assert!(r.worker < workers);
+        for claim in [ClaimMode::Steal, ClaimMode::NoSteal, ClaimMode::Cursor] {
+            for workers in [1usize, 2, 4, 7] {
+                let plan = ShardPlan::build(
+                    &weights,
+                    workers,
+                    &ShardPolicy {
+                        shards_per_worker: 3,
+                        ..ShardPolicy::default()
+                    },
+                );
+                let results = WorkerPool::new(workers)
+                    .with_claim(claim)
+                    .run(&ToyFactory::plain(), &stream, &plan)
+                    .unwrap();
+                assert_eq!(results.len(), plan.len());
+                let flat: Vec<u32> = results.iter().flat_map(|r| r.outputs.clone()).collect();
+                assert_eq!(flat, stream, "workers={workers} claim={claim:?}");
+                for (i, r) in results.iter().enumerate() {
+                    assert_eq!(r.shard, i);
+                    assert!(r.worker < workers);
+                    assert_eq!(r.regions, plan.range(i).len());
+                }
             }
         }
     }
@@ -255,7 +639,14 @@ mod tests {
         let weights = vec![1usize; 100];
         let plan = ShardPlan::build(&weights, 4, &ShardPolicy::default());
         let err = WorkerPool::new(4)
-            .run(&ToyFactory { fail_on: Some(50) }, &stream, &plan)
+            .run(
+                &ToyFactory {
+                    fail_on: Some(50),
+                    sleep_heavy: None,
+                },
+                &stream,
+                &plan,
+            )
             .unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("poison item 50"), "{msg}");
@@ -265,9 +656,136 @@ mod tests {
     #[test]
     fn empty_plan_is_a_noop() {
         let plan = ShardPlan::build(&[], 4, &ShardPolicy::default());
-        let results = WorkerPool::new(4)
-            .run(&ToyFactory { fail_on: None }, &[], &plan)
-            .unwrap();
+        let results = WorkerPool::new(4).run(&ToyFactory::plain(), &[], &plan).unwrap();
         assert!(results.is_empty());
+    }
+
+    #[test]
+    fn zero_workers_is_a_named_error() {
+        let plan = ShardPlan::build(&[1], 1, &ShardPolicy::default());
+        let err = WorkerPool::new(0).run(&ToyFactory::plain(), &[7], &plan).unwrap_err();
+        assert!(err.to_string().contains("workers = 0"), "{err}");
+    }
+
+    #[test]
+    fn skewed_plan_under_stealing_produces_every_index_exactly_once() {
+        // Steal-heavy shape: region 0 is heavy (its shard sleeps), the
+        // rest are trivial — idle workers must steal the backlog behind
+        // the sleeper, and the merged output must still be exactly the
+        // stream, each index exactly once.
+        let stream = items(600);
+        let mut weights = vec![1usize; 600];
+        weights[0] = 500;
+        let plan = ShardPlan::build(
+            &weights,
+            4,
+            &ShardPolicy {
+                shards_per_worker: 8,
+                ..ShardPolicy::default()
+            },
+        );
+        let results = WorkerPool::new(4)
+            .with_claim(ClaimMode::Steal)
+            .run(
+                &ToyFactory {
+                    fail_on: None,
+                    sleep_heavy: Some(0),
+                },
+                &stream,
+                &plan,
+            )
+            .unwrap();
+        let mut seen = vec![0u32; 600];
+        for r in &results {
+            for &v in &r.outputs {
+                seen[v as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "every index exactly once");
+        let stolen = results.iter().filter(|r| r.stolen).count();
+        assert!(
+            stolen > 0,
+            "idle workers must steal behind the sleeping shard"
+        );
+    }
+
+    #[test]
+    fn streaming_emits_in_stream_order_with_bounded_budget() {
+        for workers in [1usize, 2, 4] {
+            let pool = WorkerPool::new(workers);
+            let ingest = IngestPolicy {
+                buffer_regions: 16,
+                shard_regions: 3,
+            };
+            let mut got = Vec::new();
+            let mut shards = 0usize;
+            pool.run_stream(
+                &ToyFactory::plain(),
+                IterSource::new(0..500u32),
+                &ingest,
+                |r| {
+                    shards += 1;
+                    got.extend(r.outputs);
+                    Ok(())
+                },
+            )
+            .unwrap();
+            assert_eq!(got, items(500), "workers={workers}");
+            assert!(shards >= 500 / 3, "workers={workers}: {shards} shards");
+        }
+    }
+
+    #[test]
+    fn streaming_empty_source_is_a_noop() {
+        let mut calls = 0usize;
+        WorkerPool::new(3)
+            .run_stream(
+                &ToyFactory::plain(),
+                IterSource::new(std::iter::empty::<u32>()),
+                &IngestPolicy::default(),
+                |_| {
+                    calls += 1;
+                    Ok(())
+                },
+            )
+            .unwrap();
+        assert_eq!(calls, 0);
+    }
+
+    #[test]
+    fn streaming_worker_error_aborts_the_run() {
+        let err = WorkerPool::new(3)
+            .run_stream(
+                &ToyFactory {
+                    fail_on: Some(123),
+                    sleep_heavy: None,
+                },
+                IterSource::new(0..1000u32),
+                &IngestPolicy {
+                    buffer_regions: 32,
+                    shard_regions: 4,
+                },
+                |_| Ok(()),
+            )
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("poison item 123"), "{msg}");
+        assert!(msg.contains("streaming shard"), "{msg}");
+    }
+
+    #[test]
+    fn streaming_sink_error_aborts_the_run() {
+        let err = WorkerPool::new(2)
+            .run_stream(
+                &ToyFactory::plain(),
+                IterSource::new(0..100u32),
+                &IngestPolicy {
+                    buffer_regions: 8,
+                    shard_regions: 2,
+                },
+                |_| anyhow::bail!("sink refused"),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("sink refused"), "{err}");
     }
 }

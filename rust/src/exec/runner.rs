@@ -1,38 +1,48 @@
 //! The executor front door: [`ExecConfig`] (how many workers, how to
-//! shard) and [`ShardedRunner`] (plan → pool → merge).
+//! shard, how to ingest) and [`ShardedRunner`] (materialized: plan →
+//! pool → merge; streaming: ingest → steal → ordered emit).
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use super::factory::PipelineFactory;
-use super::merge::{merge_results, ExecReport};
+use super::ingest::IngestPolicy;
+use super::merge::{merge_results, ExecReport, ReportBuilder};
 use super::plan::{ShardPlan, ShardPolicy};
-use super::pool::WorkerPool;
+use super::pool::{ShardResult, WorkerPool};
+use super::steal::ClaimMode;
+use crate::workload::source::RegionSource;
 
 /// Executor configuration.
 #[derive(Debug, Clone)]
 pub struct ExecConfig {
-    /// Worker threads (pipeline replicas). 1 = run inline.
+    /// Worker threads (pipeline replicas). Must be ≥ 1 — validated by
+    /// the runner with a named error, never silently clamped.
     pub workers: usize,
-    /// Shard-planning policy.
+    /// Shard-planning policy (materialized runs).
     pub shard: ShardPolicy,
+    /// Streaming-ingest policy ([`ShardedRunner::run_stream`]).
+    pub ingest: IngestPolicy,
+    /// How workers claim shards (default: work stealing).
+    pub claim: ClaimMode,
 }
 
 impl ExecConfig {
-    /// `workers` threads with the default (one shard per worker) policy.
+    /// `workers` threads with the default (one shard per worker,
+    /// work-stealing) policy.
     pub fn new(workers: usize) -> ExecConfig {
         ExecConfig {
-            workers: workers.max(1),
+            workers,
             shard: ShardPolicy::default(),
+            ingest: IngestPolicy::default(),
+            claim: ClaimMode::default(),
         }
     }
 
     /// One worker per available CPU.
     pub fn auto() -> ExecConfig {
-        let workers = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         ExecConfig::new(workers)
     }
 
@@ -40,6 +50,33 @@ impl ExecConfig {
     pub fn with_shards_per_worker(mut self, shards_per_worker: usize) -> ExecConfig {
         self.shard.shards_per_worker = shards_per_worker.max(1);
         self
+    }
+
+    /// Builder-style streaming budget: at most `buffer_regions` regions
+    /// in flight between ingest and the ordered merge (backpressure
+    /// beyond it). Shard granularity stays on auto unless
+    /// [`IngestPolicy::shard_regions`] is set explicitly.
+    pub fn streaming(mut self, buffer_regions: usize) -> ExecConfig {
+        self.ingest.buffer_regions = buffer_regions.max(1);
+        self
+    }
+
+    /// Builder-style claim-mode override.
+    pub fn with_claim(mut self, claim: ClaimMode) -> ExecConfig {
+        self.claim = claim;
+        self
+    }
+
+    /// Check the configuration, naming the offending field. The runner
+    /// (and the apps' `run_sharded*` fronts) call this up front so a
+    /// zero-worker config fails loudly instead of being clamped.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.workers >= 1,
+            "invalid exec config: workers = 0 (need at least one worker thread; \
+             use ExecConfig::auto() for one per CPU)"
+        );
+        Ok(())
     }
 }
 
@@ -70,6 +107,10 @@ impl ShardedRunner {
         &self.cfg
     }
 
+    fn pool(&self) -> WorkerPool {
+        WorkerPool::new(self.cfg.workers).with_claim(self.cfg.claim)
+    }
+
     /// Plan shards at region boundaries, fan them out over the worker
     /// pool, and merge outputs back into stream order.
     pub fn run<F: PipelineFactory>(
@@ -77,11 +118,63 @@ impl ShardedRunner {
         factory: &F,
         stream: &[F::In],
     ) -> Result<ExecReport<F::Out>> {
+        self.cfg.validate()?;
         let t0 = Instant::now();
         let weights: Vec<usize> = stream.iter().map(|r| factory.weight(r)).collect();
         let plan = ShardPlan::build(&weights, self.cfg.workers, &self.cfg.shard);
-        let results = WorkerPool::new(self.cfg.workers).run(factory, stream, &plan)?;
+        let results = self.pool().run(factory, stream, &plan)?;
         Ok(merge_results(results, t0.elapsed().as_secs_f64()))
+    }
+
+    /// Streaming execution with collected outputs: regions are pulled
+    /// from `source` incrementally (the calling thread is the ingest
+    /// driver), sharded on the fly under the configured in-flight budget,
+    /// executed with work stealing, and merged back into stream order —
+    /// output-identical to [`ShardedRunner::run`] over the materialized
+    /// stream. Input memory is bounded by the budget; outputs are still
+    /// collected in full (use [`ShardedRunner::run_stream_with`] to
+    /// consume them incrementally instead).
+    pub fn run_stream<F, S>(&self, factory: &F, source: S) -> Result<ExecReport<F::Out>>
+    where
+        F: PipelineFactory,
+        F::In: Send,
+        S: RegionSource<Region = F::In>,
+    {
+        let mut outputs = Vec::new();
+        let mut report = self.run_stream_with(factory, source, |mut r: ShardResult<F::Out>| {
+            outputs.append(&mut r.outputs);
+            Ok(())
+        })?;
+        report.outputs = outputs;
+        Ok(report)
+    }
+
+    /// Streaming execution with a sink: `sink` receives each
+    /// [`ShardResult`] in stream order as soon as its prefix is complete
+    /// (not after a global join), so results can be forwarded or folded
+    /// with memory bounded by the ingest budget end to end. The returned
+    /// report carries the merged metrics; its `outputs` is empty.
+    pub fn run_stream_with<F, S, K>(
+        &self,
+        factory: &F,
+        source: S,
+        mut sink: K,
+    ) -> Result<ExecReport<F::Out>>
+    where
+        F: PipelineFactory,
+        F::In: Send,
+        S: RegionSource<Region = F::In>,
+        K: FnMut(ShardResult<F::Out>) -> Result<()>,
+    {
+        self.cfg.validate()?;
+        let t0 = Instant::now();
+        let mut builder = ReportBuilder::new();
+        self.pool()
+            .run_stream(factory, source, &self.cfg.ingest, |r| {
+                builder.add_stats(&r);
+                sink(r)
+            })?;
+        Ok(builder.finish(t0.elapsed().as_secs_f64()))
     }
 }
 
@@ -89,6 +182,7 @@ impl ShardedRunner {
 mod tests {
     use super::*;
     use crate::exec::factory::{ShardOutput, ShardWorker};
+    use crate::workload::source::SliceSource;
     use anyhow::Result;
 
     /// Weighted toy: regions are `(id, weight)`; output echoes ids.
@@ -123,9 +217,13 @@ mod tests {
         }
     }
 
+    fn stream_of(n: u32) -> Vec<(u32, usize)> {
+        (0..n).map(|i| (i, 1 + (i as usize % 13))).collect()
+    }
+
     #[test]
     fn runner_preserves_stream_order_for_any_worker_count() {
-        let stream: Vec<(u32, usize)> = (0..500).map(|i| (i, 1 + (i as usize % 13))).collect();
+        let stream = stream_of(500);
         let expect: Vec<u32> = (0..500).collect();
         for workers in 1..=8 {
             let report = ShardedRunner::with_workers(workers)
@@ -138,20 +236,75 @@ mod tests {
     }
 
     #[test]
+    fn streaming_matches_materialized_run() {
+        let stream = stream_of(400);
+        for workers in [1usize, 2, 5, 8] {
+            let cfg = ExecConfig::new(workers).streaming(32);
+            let materialized = ShardedRunner::new(cfg.clone())
+                .run(&WeightedFactory, &stream)
+                .unwrap();
+            let streamed = ShardedRunner::new(cfg)
+                .run_stream(&WeightedFactory, SliceSource::new(&stream))
+                .unwrap();
+            assert_eq!(streamed.outputs, materialized.outputs, "workers={workers}");
+            assert!(streamed.shards >= materialized.shards, "finer granules");
+        }
+    }
+
+    #[test]
+    fn streaming_sink_sees_stream_order_and_report_stays_lean() {
+        let stream = stream_of(300);
+        let mut next_shard = 0usize;
+        let mut sunk: Vec<u32> = Vec::new();
+        let report = ShardedRunner::new(ExecConfig::new(4).streaming(16))
+            .run_stream_with(&WeightedFactory, SliceSource::new(&stream), |r| {
+                assert_eq!(r.shard, next_shard, "sink sees stream order");
+                next_shard += 1;
+                sunk.extend(r.outputs);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(sunk, (0..300).collect::<Vec<u32>>());
+        assert!(report.outputs.is_empty(), "sink consumed the outputs");
+        assert_eq!(report.shards, next_shard);
+    }
+
+    #[test]
     fn empty_stream_yields_empty_report() {
+        let report = ShardedRunner::with_workers(4).run(&WeightedFactory, &[]).unwrap();
+        assert!(report.outputs.is_empty());
+        assert_eq!(report.shards, 0);
         let report = ShardedRunner::with_workers(4)
-            .run(&WeightedFactory, &[])
+            .run_stream(&WeightedFactory, SliceSource::new(&[]))
             .unwrap();
         assert!(report.outputs.is_empty());
         assert_eq!(report.shards, 0);
     }
 
     #[test]
+    fn zero_workers_is_a_named_error_not_a_clamp() {
+        let cfg = ExecConfig::new(0);
+        assert_eq!(cfg.workers, 0, "no silent clamp");
+        let err = ShardedRunner::new(cfg.clone())
+            .run(&WeightedFactory, &stream_of(10))
+            .unwrap_err();
+        assert!(err.to_string().contains("workers = 0"), "{err}");
+        let err = ShardedRunner::new(cfg)
+            .run_stream(&WeightedFactory, SliceSource::new(&stream_of(10)))
+            .unwrap_err();
+        assert!(err.to_string().contains("workers = 0"), "{err}");
+    }
+
+    #[test]
     fn exec_config_builders() {
-        let c = ExecConfig::new(0);
-        assert_eq!(c.workers, 1);
         let c = ExecConfig::new(3).with_shards_per_worker(4);
         assert_eq!(c.shard.shards_per_worker, 4);
+        let c = ExecConfig::new(2).streaming(64);
+        assert_eq!(c.ingest.buffer_regions, 64);
+        let c = ExecConfig::new(2).with_claim(ClaimMode::Cursor);
+        assert_eq!(c.claim, ClaimMode::Cursor);
         assert!(ExecConfig::auto().workers >= 1);
+        assert!(ExecConfig::auto().validate().is_ok());
+        assert!(ExecConfig::new(0).validate().is_err());
     }
 }

@@ -1,0 +1,315 @@
+//! Per-worker work deques with LIFO-local / FIFO-steal claiming, plus the
+//! completion buffer workers report through.
+//!
+//! This replaces the pool's original single atomic shard cursor. Each
+//! worker owns a deque; new work is dealt round-robin across deques; a
+//! worker pops its **own newest** item (LIFO — hot caches, and in
+//! streaming mode the most recently ingested shard), and when its deque
+//! is empty it steals the **oldest** item from another worker's deque
+//! (FIFO — the shard that has waited longest, classic Arora/Blumofe/
+//! Plaxton discipline). Stolen units are whole region-aligned shards,
+//! never parts of one, so region-scoped state stays private to whichever
+//! worker runs the shard (the state-access-pattern argument from
+//! Danelutto et al.; see PAPERS.md).
+//!
+//! Shards are coarse (milliseconds, not nanoseconds), so a plain
+//! mutex+condvar around all deques is the right tool: claims are rare,
+//! contention is negligible, and blocked workers sleep instead of
+//! spinning. The condvar matters only in streaming mode, where deques
+//! refill as ingest proceeds; for materialized plans every deque is
+//! loaded before the pool starts and `close` is called up front, so a
+//! worker never waits.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use super::ingest::lock_ignore_poison;
+
+/// How workers claim shards from the pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ClaimMode {
+    /// Per-worker deques, LIFO-local pop, FIFO steal when empty.
+    #[default]
+    Steal,
+    /// Per-worker deques without stealing (ablation: shows what stealing
+    /// buys on skewed streams).
+    NoSteal,
+    /// The original single shared atomic cursor (materialized plans
+    /// only; kept as the `bench ingest` baseline).
+    Cursor,
+}
+
+impl ClaimMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ClaimMode::Steal => "steal",
+            ClaimMode::NoSteal => "no-steal",
+            ClaimMode::Cursor => "cursor",
+        }
+    }
+}
+
+/// What a claim returned.
+pub enum Claim<W> {
+    /// A unit of work, with `stolen = true` if it came off another
+    /// worker's deque.
+    Task { work: W, stolen: bool },
+    /// The queues are closed and drained: no more work will ever come.
+    Done,
+}
+
+struct QueuesInner<W> {
+    deques: Vec<VecDeque<W>>,
+    next_push: usize,
+    closed: bool,
+}
+
+/// The deque set. `W` is the unit of claimable work: a shard index for
+/// materialized plans, an owned [`ShardTask`](super::ingest::ShardTask)
+/// for streaming ingest.
+pub struct StealQueues<W> {
+    inner: Mutex<QueuesInner<W>>,
+    work_cv: Condvar,
+    steal: bool,
+}
+
+impl<W> StealQueues<W> {
+    /// `workers` empty deques. `steal = false` disables cross-deque
+    /// claiming (the [`ClaimMode::NoSteal`] ablation).
+    pub fn new(workers: usize, steal: bool) -> StealQueues<W> {
+        StealQueues {
+            inner: Mutex::new(QueuesInner {
+                deques: (0..workers.max(1)).map(|_| VecDeque::new()).collect(),
+                next_push: 0,
+                closed: false,
+            }),
+            work_cv: Condvar::new(),
+            steal,
+        }
+    }
+
+    /// Deal one unit of work to the next deque round-robin and wake the
+    /// sleepers. `notify_all`, not `notify_one`: in no-steal mode a
+    /// single wakeup could land on a worker whose own deque is empty,
+    /// stranding the task (and deadlocking a backpressured ingest
+    /// driver) — shards are coarse, so the broadcast costs nothing.
+    pub fn push(&self, work: W) {
+        let mut q = lock_ignore_poison(&self.inner);
+        let target = q.next_push;
+        q.next_push = (q.next_push + 1) % q.deques.len();
+        q.deques[target].push_back(work);
+        drop(q);
+        self.work_cv.notify_all();
+    }
+
+    /// No more work will arrive; wake everyone so idle workers can exit.
+    pub fn close(&self) {
+        lock_ignore_poison(&self.inner).closed = true;
+        self.work_cv.notify_all();
+    }
+
+    /// Claim work for `worker`: own deque LIFO, then (if enabled) steal
+    /// FIFO from the others, scanning round-robin from the next worker.
+    /// Blocks while all deques are empty and the queues are still open.
+    pub fn claim(&self, worker: usize) -> Claim<W> {
+        let mut q = lock_ignore_poison(&self.inner);
+        loop {
+            if let Some(work) = q.deques[worker].pop_back() {
+                return Claim::Task {
+                    work,
+                    stolen: false,
+                };
+            }
+            if self.steal {
+                let n = q.deques.len();
+                for off in 1..n {
+                    let victim = (worker + off) % n;
+                    if let Some(work) = q.deques[victim].pop_front() {
+                        return Claim::Task {
+                            work,
+                            stolen: true,
+                        };
+                    }
+                }
+            }
+            if q.closed {
+                return Claim::Done;
+            }
+            q = self
+                .work_cv
+                .wait(q)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+
+    /// Units currently queued across all deques.
+    pub fn queued(&self) -> usize {
+        lock_ignore_poison(&self.inner).deques.iter().map(VecDeque::len).sum()
+    }
+}
+
+/// Where streaming workers report finished (or failed) shards; the ingest
+/// driver drains it to merge, emit, and release budget.
+pub struct CompletionBuffer<R> {
+    inner: Mutex<CompletionInner<R>>,
+    done_cv: Condvar,
+}
+
+struct CompletionInner<R> {
+    ready: Vec<R>,
+    failure: Option<anyhow::Error>,
+}
+
+impl<R> Default for CompletionBuffer<R> {
+    fn default() -> Self {
+        CompletionBuffer::new()
+    }
+}
+
+impl<R> CompletionBuffer<R> {
+    pub fn new() -> CompletionBuffer<R> {
+        CompletionBuffer {
+            inner: Mutex::new(CompletionInner {
+                ready: Vec::new(),
+                failure: None,
+            }),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    /// Report one finished shard (worker side).
+    pub fn push(&self, result: R) {
+        lock_ignore_poison(&self.inner).ready.push(result);
+        self.done_cv.notify_all();
+    }
+
+    /// Report a failure (worker side). The first failure wins; the run
+    /// aborts once the driver observes it.
+    pub fn fail(&self, err: anyhow::Error) {
+        let mut c = lock_ignore_poison(&self.inner);
+        c.failure.get_or_insert(err);
+        drop(c);
+        self.done_cv.notify_all();
+    }
+
+    /// Has a failure been reported?
+    pub fn failed(&self) -> bool {
+        lock_ignore_poison(&self.inner).failure.is_some()
+    }
+
+    /// Move any ready results into `out` without blocking. Returns the
+    /// recorded failure, if one has been reported (taking it).
+    pub fn drain_into(&self, out: &mut Vec<R>) -> Option<anyhow::Error> {
+        let mut c = lock_ignore_poison(&self.inner);
+        out.append(&mut c.ready);
+        c.failure.take()
+    }
+
+    /// Like [`CompletionBuffer::drain_into`], but blocks until at least
+    /// one result (or a failure) is available.
+    pub fn wait_drain_into(&self, out: &mut Vec<R>) -> Option<anyhow::Error> {
+        let mut c = lock_ignore_poison(&self.inner);
+        while c.ready.is_empty() && c.failure.is_none() {
+            c = self
+                .done_cv
+                .wait(c)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        out.append(&mut c.ready);
+        c.failure.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain_claims(q: &StealQueues<u32>, worker: usize) -> Vec<(u32, bool)> {
+        let mut got = Vec::new();
+        loop {
+            match q.claim(worker) {
+                Claim::Task { work, stolen } => got.push((work, stolen)),
+                Claim::Done => return got,
+            }
+        }
+    }
+
+    #[test]
+    fn own_deque_pops_lifo() {
+        let q: StealQueues<u32> = StealQueues::new(2, true);
+        // round-robin: 0,2,4 → worker 0; 1,3 → worker 1
+        for i in 0..5 {
+            q.push(i);
+        }
+        q.close();
+        let got = drain_claims(&q, 0);
+        let own: Vec<u32> = got.iter().filter(|(_, s)| !s).map(|&(w, _)| w).collect();
+        assert_eq!(own, vec![4, 2, 0], "own deque is LIFO");
+    }
+
+    #[test]
+    fn steals_come_fifo_from_victims() {
+        let q: StealQueues<u32> = StealQueues::new(2, true);
+        for i in 0..6 {
+            q.push(i); // worker 0 gets 0,2,4; worker 1 gets 1,3,5
+        }
+        q.close();
+        // worker 1 drains everything: its own LIFO first, then steals
+        // worker 0's deque front-first
+        let got = drain_claims(&q, 1);
+        assert_eq!(
+            got,
+            vec![
+                (5, false),
+                (3, false),
+                (1, false),
+                (0, true),
+                (2, true),
+                (4, true)
+            ]
+        );
+        assert_eq!(q.queued(), 0);
+    }
+
+    #[test]
+    fn no_steal_mode_leaves_other_deques_alone() {
+        let q: StealQueues<u32> = StealQueues::new(2, false);
+        for i in 0..4 {
+            q.push(i);
+        }
+        q.close();
+        assert_eq!(drain_claims(&q, 1), vec![(3, false), (1, false)]);
+        assert_eq!(q.queued(), 2, "worker 0's work is untouched");
+    }
+
+    #[test]
+    fn blocked_claim_wakes_on_push_and_close() {
+        let q: StealQueues<u32> = StealQueues::new(1, true);
+        std::thread::scope(|s| {
+            let h = s.spawn(|| drain_claims(&q, 0));
+            // give the claimer a moment to block, then feed + close
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            q.push(7);
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            q.close();
+            assert_eq!(h.join().unwrap(), vec![(7, false)]);
+        });
+    }
+
+    #[test]
+    fn completion_buffer_delivers_results_then_failure() {
+        let c: CompletionBuffer<u32> = CompletionBuffer::new();
+        let mut out = Vec::new();
+        assert!(c.drain_into(&mut out).is_none());
+        c.push(1);
+        c.push(2);
+        assert!(c.wait_drain_into(&mut out).is_none());
+        assert_eq!(out, vec![1, 2]);
+        c.fail(anyhow::anyhow!("boom"));
+        c.fail(anyhow::anyhow!("second, ignored"));
+        assert!(c.failed());
+        let err = c.drain_into(&mut out).expect("failure surfaces");
+        assert_eq!(err.to_string(), "boom");
+        assert!(c.drain_into(&mut out).is_none(), "failure is taken once");
+    }
+}

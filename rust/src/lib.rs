@@ -10,6 +10,10 @@
 //!   `Blob`/`Composite` is never split), each worker runs a private
 //!   single-threaded pipeline, and a deterministic merger reassembles
 //!   outputs in original stream order with a global metrics fold.
+//!   Streams can be materialized up front or ingested incrementally from
+//!   a [`workload::source::RegionSource`] under a bounded in-flight
+//!   budget, with per-worker deques and LIFO-local/FIFO-steal work
+//!   stealing absorbing skewed region sizes.
 //! * **Layer 3 ([`coordinator`])** — the streaming *coordinator*: compute
 //!   nodes connected by bounded data queues and out-of-band signal queues,
 //!   the paper's **credit protocol** for precise signal delivery under
@@ -95,12 +99,14 @@ pub mod prelude {
         topology::{Pipeline, PipelineBuilder},
     };
     pub use crate::exec::{
-        ExecConfig, ExecReport, KernelSpawn, PipelineFactory, ShardOutput, ShardPlan,
-        ShardPolicy, ShardWorker, ShardedRunner, WorkerPool, WorkerStats,
+        ClaimMode, ExecConfig, ExecReport, IngestPolicy, KernelSpawn, PipelineFactory,
+        ShardOutput, ShardPlan, ShardPolicy, ShardWorker, ShardedRunner, WorkerPool,
+        WorkerStats,
     };
     pub use crate::runtime::kernels::{Backend, KernelSet};
     pub use crate::runtime::{ArtifactStore, Engine, KernelName};
     pub use crate::simd::{ChunkSource, SimdConfig, SimdMachine};
-    pub use crate::workload::regions::RegionSpec;
+    pub use crate::workload::regions::{GenBlobSource, RegionSpec};
+    pub use crate::workload::source::{IterSource, RegionSource, SliceSource};
     pub use crate::workload::taxi::TaxiWorkload;
 }

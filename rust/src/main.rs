@@ -1,13 +1,14 @@
 //! `regatta` — launcher CLI for the REGATTA streaming framework.
 //!
 //! ```text
-//! regatta run sum   [--items N] [--region-size N | --region-max N]
+//! regatta run sum   [--items N] [--region-size N | --region-max N | --region-skew N]
 //!                   [--mode enum|tagged] [--shape fused|two-stage]
 //!                   [--width W] [--backend xla|native] [--threshold T]
-//!                   [--workers K] [--stats]
+//!                   [--workers K] [--stream] [--ingest-buffer R] [--stats]
 //! regatta run taxi  [--lines N] [--replicate K] [--variant enum|hybrid|tagged]
-//!                   [--width W] [--backend xla|native] [--stats]
-//! regatta bench <fig6|fig7|fig8|penalty|width|lanectx> [--items N] [--width W]
+//!                   [--width W] [--backend xla|native]
+//!                   [--workers K] [--stream] [--ingest-buffer R] [--stats]
+//! regatta bench <fig6|fig7|fig8|scale|hotpath|ingest|penalty|width|lanectx>
 //! regatta info      # artifact manifest + platform
 //! regatta --config <file.toml>   # load a [run] config (see configs/)
 //! ```
@@ -17,34 +18,43 @@ use anyhow::{bail, Context, Result};
 use regatta::apps::sum::{reference_sums, SumApp, SumConfig, SumFactory, SumMode, SumShape};
 use regatta::apps::taxi::{TaxiApp, TaxiConfig, TaxiFactory, TaxiVariant};
 use regatta::bench::figures::{self, BackendSel, SweepConfig};
-use regatta::exec::{ExecConfig, KernelSpawn, ShardPolicy, ShardedRunner};
+use regatta::exec::{ExecConfig, KernelSpawn, ShardedRunner};
 use regatta::runtime::{ArtifactStore, Engine};
 use regatta::util::cli::Args;
 use regatta::util::config::Config;
 use regatta::util::stats::{fmt_count, fmt_duration};
-use regatta::workload::regions::{gen_blobs, RegionSpec};
+use regatta::workload::regions::{gen_blobs, GenBlobSource, RegionSpec};
+use regatta::workload::source::SliceSource;
 use regatta::workload::taxi::{generate, replicate, TaxiGenConfig};
 
 const USAGE: &str = "\
 regatta — region-based state for streaming computations on SIMD architectures
 
 USAGE:
-  regatta run sum   [--items N] [--region-size N | --region-max N]
+  regatta run sum   [--items N] [--region-size N | --region-max N | --region-skew N]
                     [--mode enum|tagged] [--shape fused|two-stage]
                     [--width W] [--backend xla|native] [--threshold T]
                     [--policy greedy|deepest|rr]
-                    [--workers K] [--shards-per-worker S] [--stats] [--verify]
+                    [--workers K] [--shards-per-worker S]
+                    [--stream] [--ingest-buffer R] [--stats] [--verify]
   regatta run taxi  [--lines N] [--replicate K] [--variant enum|hybrid|tagged]
                     [--width W] [--backend xla|native]
                     [--policy greedy|deepest|rr]
-                    [--workers K] [--shards-per-worker S] [--stats]
+                    [--workers K] [--shards-per-worker S]
+                    [--stream] [--ingest-buffer R] [--stats]
   regatta bench <fig6|fig7|fig8|scale|penalty|width|lanectx>
                     [--items N] [--width W] [--backend xla|native]
-                    [--workers K1,K2,...]
+                    [--workers K1,K2,...] [--json FILE]
   regatta bench hotpath [--smoke] [--items N] [--widths W1,W2,...]
                     [--policy greedy|deepest|rr] [--json FILE] [--check BASELINE]
+  regatta bench ingest  [--smoke] [--items N] [--width W] [--workers K1,K2,...]
+                    [--ingest-buffer R] [--json FILE]
   regatta info
   regatta --config <file.toml>
+
+  --stream runs the app through the v2 streaming executor: regions are
+  ingested incrementally (at most R in flight, backpressure beyond) and
+  executed by work-stealing workers; outputs stay in stream order.
 ";
 
 fn main() {
@@ -86,9 +96,9 @@ fn config_to_args(path: &str) -> Result<Args> {
     }
     argv.extend(cmd.split_whitespace().map(str::to_string));
     for key in [
-        "items", "region-size", "region-max", "mode", "shape", "width", "backend",
-        "threshold", "workers", "shards-per-worker", "lines", "replicate", "variant",
-        "policy",
+        "items", "region-size", "region-max", "region-skew", "mode", "shape", "width",
+        "backend", "threshold", "workers", "shards-per-worker", "ingest-buffer", "lines",
+        "replicate", "variant", "policy",
     ] {
         if let Some(v) = cfg.get("run", &key.replace('-', "_")) {
             let vs = match v {
@@ -102,8 +112,10 @@ fn config_to_args(path: &str) -> Result<Args> {
             argv.push(vs);
         }
     }
-    if cfg.bool_or("run", "stats", false)? {
-        argv.push("--stats".into());
+    for flag in ["stats", "stream", "verify"] {
+        if cfg.bool_or("run", flag, false)? {
+            argv.push(format!("--{flag}"));
+        }
     }
     Args::parse(argv)
 }
@@ -117,13 +129,9 @@ fn policy(args: &Args) -> Result<regatta::prelude::Policy> {
 }
 
 fn exec_config(args: &Args, workers: usize) -> Result<ExecConfig> {
-    Ok(ExecConfig {
-        workers,
-        shard: ShardPolicy {
-            shards_per_worker: args.get_or("shards-per-worker", 1)?,
-            ..ShardPolicy::default()
-        },
-    })
+    Ok(ExecConfig::new(workers)
+        .with_shards_per_worker(args.get_or("shards-per-worker", 1)?)
+        .streaming(args.get_or("ingest-buffer", 1024)?))
 }
 
 fn print_exec_stats<T>(report: &regatta::exec::ExecReport<T>) {
@@ -140,6 +148,7 @@ fn run_sum(args: &Args) -> Result<()> {
     let items: usize = args.get_or("items", 1 << 20)?;
     let threshold: f32 = args.get_or("threshold", 0.0)?;
     let workers: usize = args.get_or("workers", 1)?;
+    anyhow::ensure!(workers >= 1, "--workers must be >= 1 (got {workers})");
     let mode = match args.str_or("mode", "enum").as_str() {
         "enum" => SumMode::Enumerated,
         "tagged" => SumMode::Tagged,
@@ -152,6 +161,8 @@ fn run_sum(args: &Args) -> Result<()> {
     };
     let spec = if let Some(max) = args.get::<usize>("region-max")? {
         RegionSpec::Uniform { max }
+    } else if let Some(max) = args.get::<usize>("region-skew")? {
+        RegionSpec::Skewed { max }
     } else {
         RegionSpec::Fixed {
             size: args.get_or("region-size", 128)?,
@@ -159,8 +170,15 @@ fn run_sum(args: &Args) -> Result<()> {
     };
     let sel = backend(args)?;
     let pol = policy(args)?;
-    let blobs = gen_blobs(items, spec, args.get_or("seed", 0xF16u64)?);
-    let n_regions = blobs.len();
+    let seed = args.get_or("seed", 0xF16u64)?;
+    let streaming = args.flag("stream");
+    // the streaming path never materializes the blob stream — that is
+    // its point; --verify regenerates it separately below
+    let blobs = if streaming {
+        Vec::new()
+    } else {
+        gen_blobs(items, spec, seed)
+    };
     let cfg = SumConfig {
         width,
         threshold,
@@ -170,13 +188,31 @@ fn run_sum(args: &Args) -> Result<()> {
         ..Default::default()
     };
 
+    let regions_label = if streaming {
+        "streamed regions".to_string()
+    } else {
+        format!("{} regions", blobs.len())
+    };
     println!(
-        "sum app: {items} items, {n_regions} regions ({spec:?}), width {width}, \
-         {mode:?}/{shape:?}, backend {sel:?}, policy {}, {workers} worker(s)",
-        pol.label()
+        "sum app: {items} items, {regions_label} ({spec:?}), width {width}, \
+         {mode:?}/{shape:?}, backend {sel:?}, policy {}, {workers} worker(s){}",
+        pol.label(),
+        if streaming { ", streaming ingest" } else { "" }
     );
 
-    let (outputs, metrics, elapsed) = if workers <= 1 {
+    let (outputs, metrics, elapsed) = if streaming {
+        // L3.5 v2: regions are generated lazily on the ingest thread,
+        // sharded on the fly under the --ingest-buffer budget, and run
+        // by work-stealing workers; outputs stay in stream order
+        let factory = SumFactory::new(cfg, KernelSpawn::from(sel));
+        let runner = ShardedRunner::new(exec_config(args, workers)?);
+        let report = runner.run_stream(&factory, GenBlobSource::new(items, spec, seed))?;
+        if args.flag("stats") {
+            print_exec_stats(&report);
+        }
+        let outputs = regatta::apps::sum::finish_sharded_outputs(mode, report.outputs);
+        (outputs, report.metrics, report.elapsed)
+    } else if workers <= 1 {
         let p = figures::provider(sel, width)?;
         let app = SumApp::new(cfg, p.kernels);
         let report = app.run(&blobs)?;
@@ -201,6 +237,11 @@ fn run_sum(args: &Args) -> Result<()> {
         fmt_count(items as f64 / elapsed)
     );
     if args.flag("verify") {
+        let blobs = if streaming {
+            gen_blobs(items, spec, seed)
+        } else {
+            blobs
+        };
         let want = reference_sums(&blobs, threshold);
         anyhow::ensure!(outputs.len() == want.len(), "sum count mismatch");
         for ((gi, gv), (wi, wv)) in outputs.iter().zip(&want) {
@@ -232,17 +273,20 @@ fn run_taxi(args: &Args) -> Result<()> {
     let sel = backend(args)?;
     let pol = policy(args)?;
     let workers: usize = args.get_or("workers", 1)?;
+    anyhow::ensure!(workers >= 1, "--workers must be >= 1 (got {workers})");
+    let streaming = args.flag("stream");
     let base = generate(lines, TaxiGenConfig::default(), args.get_or("seed", 0xF16u64)?);
     let w = if reps > 1 { replicate(&base, reps) } else { base };
     let chars: usize = w.lines.iter().map(|l| l.len).sum();
     println!(
         "taxi app: {} lines ({} chars, {} pairs), width {width}, {} variant, \
-         backend {sel:?}, policy {}, {workers} worker(s)",
+         backend {sel:?}, policy {}, {workers} worker(s){}",
         w.lines.len(),
         fmt_count(chars as f64),
         w.total_pairs,
         variant.label(),
-        pol.label()
+        pol.label(),
+        if streaming { ", streaming ingest" } else { "" }
     );
     let cfg = TaxiConfig {
         width,
@@ -250,7 +294,17 @@ fn run_taxi(args: &Args) -> Result<()> {
         policy: pol,
         ..Default::default()
     };
-    let (pairs, metrics, elapsed) = if workers <= 1 {
+    let (pairs, metrics, elapsed) = if streaming {
+        // L3.5 v2: lines flow through the bounded ingest buffer and are
+        // parsed by work-stealing workers over the shared text
+        let factory = TaxiFactory::new(cfg, KernelSpawn::from(sel), w.text.clone());
+        let runner = ShardedRunner::new(exec_config(args, workers)?);
+        let report = runner.run_stream(&factory, SliceSource::new(&w.lines))?;
+        if args.flag("stats") {
+            print_exec_stats(&report);
+        }
+        (report.outputs, report.metrics, report.elapsed)
+    } else if workers <= 1 {
         let p = figures::provider(sel, width)?;
         let report = TaxiApp::new(cfg, p.kernels).run(&w)?;
         (report.pairs, report.metrics, report.elapsed)
@@ -284,12 +338,14 @@ fn run_taxi(args: &Args) -> Result<()> {
 }
 
 fn run_bench(args: &Args) -> Result<()> {
-    let which = args
-        .positional
-        .get(1)
-        .context("bench target required: fig6|fig7|fig8|scale|hotpath|penalty|width|lanectx")?;
+    let which = args.positional.get(1).context(
+        "bench target required: fig6|fig7|fig8|scale|hotpath|ingest|penalty|width|lanectx",
+    )?;
     if which == "hotpath" {
         return run_bench_hotpath(args);
+    }
+    if which == "ingest" {
+        return run_bench_ingest(args);
     }
     let mut cfg = SweepConfig {
         backend: backend(args)?,
@@ -311,7 +367,12 @@ fn run_bench(args: &Args) -> Result<()> {
             let workers = args.list_or("workers", &[1usize, 2, 4, 8])?;
             let w = cfg.width;
             let regions = [(w / 8).max(1), w, 8 * w];
-            figures::scaling_shards(&cfg, &workers, &regions)?;
+            let rows = figures::scaling_shards(&cfg, &workers, &regions)?;
+            if let Some(path) = args.opt("json") {
+                std::fs::write(path, figures::scaling_to_json(&rows))
+                    .with_context(|| format!("writing {path}"))?;
+                println!("wrote {path}");
+            }
         }
         "penalty" => {
             figures::abstraction_penalty(&cfg)?;
@@ -345,11 +406,35 @@ fn run_bench_hotpath(args: &Args) -> Result<()> {
     }
     let report = hotpath::run(&cfg)?;
     let path = args.str_or("json", "BENCH_hotpath.json");
-    std::fs::write(&path, hotpath::to_json(&report))
-        .with_context(|| format!("writing {path}"))?;
+    std::fs::write(&path, hotpath::to_json(&report)).with_context(|| format!("writing {path}"))?;
     println!("wrote {path}");
     if let Some(baseline) = args.opt("check") {
         hotpath::check_against(&report, baseline)?;
+    }
+    Ok(())
+}
+
+/// `bench ingest`: streaming ingest + work stealing vs the legacy cursor
+/// across region-size distributions, with a JSON artifact (see
+/// `rust/src/bench/ingest.rs`).
+fn run_bench_ingest(args: &Args) -> Result<()> {
+    use regatta::bench::ingest;
+    let mut cfg = if args.flag("smoke") {
+        ingest::IngestConfig::smoke()
+    } else {
+        ingest::IngestConfig::default()
+    };
+    cfg.width = args.get_or("width", cfg.width)?;
+    cfg.items = args.get_or("items", cfg.items)?;
+    cfg.workers = args.list_or("workers", &cfg.workers)?;
+    cfg.buffer_regions = args.get_or("ingest-buffer", cfg.buffer_regions)?;
+    cfg.seed = args.get_or("seed", cfg.seed)?;
+    let report = ingest::run(&cfg)?;
+    let path = args.str_or("json", "BENCH_ingest.json");
+    std::fs::write(&path, ingest::to_json(&report)).with_context(|| format!("writing {path}"))?;
+    println!("wrote {path}");
+    if let Some(speedup) = ingest::skew_speedup(&report) {
+        println!("skewed stream, stealing vs cursor at max workers: {speedup:.2}x");
     }
     Ok(())
 }

@@ -142,8 +142,7 @@ impl KernelSet {
     }
 
     fn tick(&self) {
-        self.native_invocations
-            .set(self.native_invocations.get() + 1);
+        self.native_invocations.set(self.native_invocations.get() + 1);
     }
 
     fn check_w(&self, n: usize) {
@@ -164,7 +163,8 @@ impl KernelSet {
                 Ok(native::filter_scale(vals, mask, threshold))
             }
             SetImpl::Xla { filter_scale, .. } => {
-                let out = filter_scale.call(&[lit_f32(vals), lit_i32(mask), lit_f32(&[threshold])])?;
+                let out =
+                    filter_scale.call(&[lit_f32(vals), lit_i32(mask), lit_f32(&[threshold])])?;
                 Ok((out[0].to_vec::<f32>()?, out[1].to_vec::<i32>()?))
             }
         }

@@ -92,9 +92,7 @@ impl LoadedKernel {
             .exe
             .execute::<xla::Literal>(inputs)
             .with_context(|| format!("executing {}@w{}", self.name.stem(), self.width))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
+        let lit = result[0][0].to_literal_sync().context("fetching result literal")?;
         // L2 entries are lowered with return_tuple=True.
         Ok(lit.to_tuple()?)
     }
@@ -166,11 +164,7 @@ impl Engine {
 
     /// Total executable invocations across all cached kernels.
     pub fn total_invocations(&self) -> u64 {
-        self.cache
-            .borrow()
-            .values()
-            .map(|k| k.invocations.get())
-            .sum()
+        self.cache.borrow().values().map(|k| k.invocations.get()).sum()
     }
 }
 

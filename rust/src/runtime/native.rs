@@ -299,7 +299,12 @@ pub fn tagged_sum_region_into(
 
 /// `char_classify` into caller slices: fully branch-free integer lanes
 /// (`flag = act · (c=='{')`, `bits = act · Σ 2^j·(c==marker_j)`).
-pub fn char_classify_into(chars: &[i32], mask: &[i32], out_flags: &mut [i32], out_bits: &mut [i32]) {
+pub fn char_classify_into(
+    chars: &[i32],
+    mask: &[i32],
+    out_flags: &mut [i32],
+    out_bits: &mut [i32],
+) {
     let n = chars.len();
     debug_assert_eq!(mask.len(), n);
     debug_assert_eq!(out_flags.len(), n);

@@ -40,11 +40,7 @@ impl Args {
                 }
                 if let Some((k, v)) = body.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
-                } else if iter
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
                     let v = iter.next().unwrap();
                     out.options.insert(body.to_string(), v);
                 } else {

@@ -137,7 +137,12 @@ impl Config {
         self.sections.get(section).and_then(|s| s.get(key))
     }
 
-    fn want<T>(&self, section: &str, key: &str, conv: impl Fn(&Value) -> Option<T>) -> Result<Option<T>> {
+    fn want<T>(
+        &self,
+        section: &str,
+        key: &str,
+        conv: impl Fn(&Value) -> Option<T>,
+    ) -> Result<Option<T>> {
         match self.get(section, key) {
             None => Ok(None),
             Some(v) => conv(v)

@@ -167,9 +167,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "property 'always-fails' failed")]
     fn failing_property_reports() {
-        Checker::new("always-fails")
-            .runs(8)
-            .check(|_| Err("nope".into()));
+        Checker::new("always-fails").runs(8).check(|_| Err("nope".into()));
     }
 
     #[test]

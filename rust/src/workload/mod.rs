@@ -5,6 +5,11 @@
 //! * [`taxi`] — synthetic DIBS-like `tstcsv` text: tagged lines of GPS
 //!   coordinate pairs matching the paper's corpus statistics (no DIBS
 //!   data ships with this repo; see DESIGN.md substitution notes).
+//! * [`source`] — the [`RegionSource`](source::RegionSource) trait:
+//!   incremental, region-delimited input for the streaming executor,
+//!   plus slice/iterator adapters (the lazy blob generator lives in
+//!   [`regions::GenBlobSource`]).
 
 pub mod regions;
+pub mod source;
 pub mod taxi;

@@ -8,6 +8,7 @@
 use crate::coordinator::enumerate::Blob;
 use crate::coordinator::tagging::Tagged;
 use crate::util::prng::Prng;
+use crate::workload::source::RegionSource;
 
 /// How region sizes are drawn.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -16,6 +17,12 @@ pub enum RegionSpec {
     Fixed { size: usize },
     /// Region sizes uniform in `[0, max]` (Fig. 7).
     Uniform { max: usize },
+    /// Heavy-tailed bimodal mix: most regions are small (uniform in
+    /// `[0, max/8]`), but one in sixteen is large (uniform in
+    /// `[max/2, max]`). The skew stresses dynamic load balancing — a few
+    /// shards carry most of the weight, which is exactly where
+    /// work-stealing should beat static assignment (`bench ingest`).
+    Skewed { max: usize },
 }
 
 impl RegionSpec {
@@ -23,6 +30,13 @@ impl RegionSpec {
         match *self {
             RegionSpec::Fixed { size } => size,
             RegionSpec::Uniform { max } => rng.below(max + 1),
+            RegionSpec::Skewed { max } => {
+                if rng.below(16) == 0 {
+                    max / 2 + rng.below(max - max / 2 + 1)
+                } else {
+                    rng.below(max / 8 + 1)
+                }
+            }
         }
     }
 
@@ -31,7 +45,68 @@ impl RegionSpec {
         match *self {
             RegionSpec::Fixed { size } => size as f64,
             RegionSpec::Uniform { max } => max as f64 / 2.0,
+            // 15/16 small regions averaging max/16, 1/16 large averaging
+            // 3*max/4
+            RegionSpec::Skewed { max } => {
+                (15.0 * (max as f64 / 16.0) + 0.75 * max as f64) / 16.0
+            }
         }
+    }
+}
+
+/// Lazy twin of [`gen_blobs`]: a [`RegionSource`] producing the identical
+/// blob sequence (same spec, same seed ⇒ bit-identical regions in the
+/// same order) one region at a time, so the streaming executor can run
+/// arbitrarily long synthetic streams without materializing them —
+/// memory is set by the executor's ingest budget, not by `total_items`.
+pub struct GenBlobSource {
+    rng: Prng,
+    spec: RegionSpec,
+    total_items: usize,
+    produced: usize,
+    next_id: u64,
+    done: bool,
+}
+
+impl GenBlobSource {
+    pub fn new(total_items: usize, spec: RegionSpec, seed: u64) -> GenBlobSource {
+        GenBlobSource {
+            rng: Prng::new(seed),
+            spec,
+            total_items,
+            produced: 0,
+            next_id: 0,
+            done: false,
+        }
+    }
+
+    /// Regions generated so far.
+    pub fn regions_produced(&self) -> u64 {
+        self.next_id
+    }
+}
+
+impl RegionSource for GenBlobSource {
+    type Region = Blob;
+
+    fn next_region(&mut self) -> Option<Blob> {
+        if self.done || self.produced >= self.total_items {
+            return None;
+        }
+        let size = self
+            .spec
+            .next_size(&mut self.rng)
+            .min(self.total_items - self.produced);
+        // Uniform/Skewed specs may draw 0: an empty region, which is
+        // legal and exercises the empty-parent path — keep it.
+        let elems: Vec<f32> = (0..size).map(|_| self.rng.range_f32(-1.0, 1.0)).collect();
+        let blob = Blob::from_vec(self.next_id, elems);
+        self.next_id += 1;
+        self.produced += size;
+        if size == 0 && matches!(self.spec, RegionSpec::Fixed { size: 0 }) {
+            self.done = true; // degenerate fixed-zero spec cannot make progress
+        }
+        Some(blob)
     }
 }
 
@@ -40,23 +115,14 @@ impl RegionSpec {
 ///
 /// Values are uniform in `[-1, 1)`: with the sum app's threshold at 0,
 /// about half the elements survive the filter — the irregular-dataflow
-/// regime the framework exists for.
+/// regime the framework exists for. This is the materialized drain of
+/// [`GenBlobSource`], so streaming and materialized runs see the exact
+/// same stream.
 pub fn gen_blobs(total_items: usize, spec: RegionSpec, seed: u64) -> Vec<Blob> {
-    let mut rng = Prng::new(seed);
+    let mut src = GenBlobSource::new(total_items, spec, seed);
     let mut blobs = Vec::new();
-    let mut produced = 0usize;
-    let mut id = 0u64;
-    while produced < total_items {
-        let size = spec.next_size(&mut rng).min(total_items - produced);
-        // Uniform spec may draw 0: an empty region, which is legal and
-        // exercises the empty-parent path — keep it.
-        let elems: Vec<f32> = (0..size).map(|_| rng.range_f32(-1.0, 1.0)).collect();
-        blobs.push(Blob::from_vec(id, elems));
-        id += 1;
-        produced += size;
-        if size == 0 && matches!(spec, RegionSpec::Fixed { size: 0 }) {
-            break; // degenerate fixed-zero spec cannot make progress
-        }
+    while let Some(b) = src.next_region() {
+        blobs.push(b);
     }
     blobs
 }
@@ -151,6 +217,53 @@ mod tests {
         assert_eq!(flat.len(), 3);
         assert_eq!(flat[0], Tagged::new(0, 1.0));
         assert_eq!(flat[2], Tagged::new(1, 3.0));
+    }
+
+    #[test]
+    fn gen_blob_source_matches_gen_blobs_exactly() {
+        for spec in [
+            RegionSpec::Fixed { size: 96 },
+            RegionSpec::Uniform { max: 64 },
+            RegionSpec::Skewed { max: 256 },
+        ] {
+            let want = gen_blobs(5000, spec, 9);
+            let mut src = GenBlobSource::new(5000, spec, 9);
+            let mut got = Vec::new();
+            while let Some(b) = src.next_region() {
+                got.push(b);
+            }
+            assert_eq!(got, want, "{spec:?}");
+            assert_eq!(src.regions_produced() as usize, want.len());
+        }
+    }
+
+    #[test]
+    fn skewed_spec_is_heavy_tailed() {
+        let blobs = gen_blobs(100_000, RegionSpec::Skewed { max: 1024 }, 4);
+        let total: usize = blobs.iter().map(|b| b.elems.len()).sum();
+        assert_eq!(total, 100_000);
+        let sizes: Vec<usize> = blobs.iter().map(|b| b.elems.len()).collect();
+        let small = sizes.iter().filter(|&&s| s <= 1024 / 8).count();
+        let large = sizes.iter().filter(|&&s| s >= 1024 / 2).count();
+        assert!(large > 0, "tail regions must appear");
+        assert!(
+            small as f64 / sizes.len() as f64 > 0.8,
+            "most regions are small ({small}/{})",
+            sizes.len()
+        );
+        // the rare large regions carry a disproportionate weight share
+        let large_weight: usize = sizes.iter().filter(|&&s| s >= 1024 / 2).sum();
+        assert!(
+            large_weight as f64 / total as f64 > 0.3,
+            "tail weight share {large_weight}/{total}"
+        );
+        // mean() predicts the empirical mean (workload sizing contract)
+        let empirical = total as f64 / sizes.len() as f64;
+        let predicted = RegionSpec::Skewed { max: 1024 }.mean();
+        assert!(
+            (empirical - predicted).abs() / predicted < 0.25,
+            "mean(): predicted {predicted}, empirical {empirical}"
+        );
     }
 
     #[test]

@@ -1,0 +1,119 @@
+//! Incremental region sources: the input side of streaming execution.
+//!
+//! The materialized executor path consumes a complete `&[T]` region
+//! stream; out-of-core inputs can't afford that. A [`RegionSource`] yields
+//! region-delimited chunks one at a time, so the streaming executor
+//! (`regatta::exec`) can convert regions into shards on the fly against a
+//! bounded in-flight budget — memory is governed by the budget, never by
+//! stream length.
+//!
+//! A source is pulled from exactly one thread (the ingest driver), so it
+//! needs no synchronization and may own mutable generator state (a PRNG,
+//! a file reader, a decoder). Region *boundaries* are the source's
+//! responsibility: one yielded item is one region, and the executor never
+//! splits it (see the region-boundary invariant in `regatta::exec`).
+//!
+//! Implementations here:
+//!
+//! * [`SliceSource`] — adapts a materialized `&[T]` (clones per region),
+//!   so every materialized workload can also be replayed as a stream.
+//! * [`IterSource`] — adapts any iterator of owned regions.
+//! * [`GenBlobSource`](crate::workload::regions::GenBlobSource) — the
+//!   lazy twin of [`gen_blobs`](crate::workload::regions::gen_blobs),
+//!   producing the identical blob sequence without materializing it.
+
+/// A stream of regions, pulled one region at a time.
+pub trait RegionSource {
+    /// The region/composite type (one item = one whole region).
+    type Region;
+
+    /// Pull the next region, or `None` at end of stream.
+    fn next_region(&mut self) -> Option<Self::Region>;
+
+    /// `(lower, upper)` bound on the number of regions still to come —
+    /// advisory only (sizing hints for planners), like
+    /// [`Iterator::size_hint`].
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (0, None)
+    }
+}
+
+/// [`RegionSource`] over a materialized slice: clones each region on
+/// demand. Lets every existing workload drive the streaming executor, and
+/// pins down streaming-vs-materialized equivalence in tests.
+pub struct SliceSource<'a, T: Clone> {
+    items: &'a [T],
+    next: usize,
+}
+
+impl<'a, T: Clone> SliceSource<'a, T> {
+    pub fn new(items: &'a [T]) -> SliceSource<'a, T> {
+        SliceSource { items, next: 0 }
+    }
+}
+
+impl<T: Clone> RegionSource for SliceSource<'_, T> {
+    type Region = T;
+
+    fn next_region(&mut self) -> Option<T> {
+        let item = self.items.get(self.next)?.clone();
+        self.next += 1;
+        Some(item)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = self.items.len() - self.next;
+        (left, Some(left))
+    }
+}
+
+/// [`RegionSource`] over any iterator of owned regions.
+pub struct IterSource<I> {
+    iter: I,
+}
+
+impl<I: Iterator> IterSource<I> {
+    pub fn new(iter: I) -> IterSource<I> {
+        IterSource { iter }
+    }
+}
+
+impl<I: Iterator> RegionSource for IterSource<I> {
+    type Region = I::Item;
+
+    fn next_region(&mut self) -> Option<I::Item> {
+        self.iter.next()
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        self.iter.size_hint()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_source_replays_in_order() {
+        let items = vec![10u32, 20, 30];
+        let mut src = SliceSource::new(&items);
+        assert_eq!(src.size_hint(), (3, Some(3)));
+        assert_eq!(src.next_region(), Some(10));
+        assert_eq!(src.next_region(), Some(20));
+        assert_eq!(src.size_hint(), (1, Some(1)));
+        assert_eq!(src.next_region(), Some(30));
+        assert_eq!(src.next_region(), None);
+        assert_eq!(src.next_region(), None, "stays exhausted");
+    }
+
+    #[test]
+    fn iter_source_adapts_iterators() {
+        let mut src = IterSource::new((0..4u64).map(|i| i * i));
+        let mut got = Vec::new();
+        while let Some(r) = src.next_region() {
+            got.push(r);
+        }
+        assert_eq!(got, vec![0, 1, 4, 9]);
+    }
+}

@@ -123,13 +123,7 @@ fn more_shards_than_workers_stays_bitwise_identical() {
     let blobs = gen_blobs(2000, RegionSpec::Uniform { max: 50 }, 12);
     let single = app.run(&blobs).unwrap();
     for (workers, spw) in [(2usize, 4usize), (3, 3), (8, 2)] {
-        let exec = ExecConfig {
-            workers,
-            shard: ShardPolicy {
-                shards_per_worker: spw,
-                ..ShardPolicy::default()
-            },
-        };
+        let exec = ExecConfig::new(workers).with_shards_per_worker(spw);
         let sharded = app.run_sharded_with(&blobs, &exec).unwrap();
         assert_sums_bitwise(
             &sharded.outputs,
@@ -148,13 +142,11 @@ fn one_worker_metrics_match_single_run_exactly() {
     // cap the plan at one shard while keeping shards_per_worker > 1 so the
     // stream really goes through plan → pool → merge and we compare the
     // full sharded path against the plain run.
-    let exec = ExecConfig {
-        workers: 1,
-        shard: ShardPolicy {
-            shards_per_worker: 2,
-            max_shards: 1,
-            min_shard_items: 1,
-        },
+    let mut exec = ExecConfig::new(1);
+    exec.shard = ShardPolicy {
+        shards_per_worker: 2,
+        max_shards: 1,
+        min_shard_items: 1,
     };
     let sharded = app.run_sharded_with(&blobs, &exec).unwrap();
     assert_sums_bitwise(&sharded.outputs, &single.outputs, "pooled single shard");

@@ -36,9 +36,7 @@ fn prop_lemma1_precise_delivery() {
             Ok(())
         }
         fn on_custom(&mut self, id: u64, _o: &mut Emitter<'_, u64>) -> anyhow::Result<()> {
-            self.deliveries
-                .borrow_mut()
-                .push((id, *self.consumed.borrow()));
+            self.deliveries.borrow_mut().push((id, *self.consumed.borrow()));
             Ok(())
         }
         fn max_outputs_per_input(&self) -> usize {
@@ -210,9 +208,7 @@ fn prop_policies_agree() {
         );
 
         let run = |policy: Policy| -> Result<Vec<(u64, u64)>, String> {
-            let mut b = PipelineBuilder::new(width)
-                .queue_caps(64.max(width), 32)
-                .policy(policy);
+            let mut b = PipelineBuilder::new(width).queue_caps(64.max(width), 32).policy(policy);
             let src = b.source_with_cap::<Blob>(blobs.len());
             let elems = b.enumerate("enum", &src);
             let out = b.sink(
