@@ -24,15 +24,16 @@
 
 use std::cell::RefCell;
 use std::rc::Rc;
+use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::coordinator::aggregate::{Aggregator, FilterMapLogic};
 use crate::coordinator::enumerate::Blob;
 use crate::coordinator::metrics::PipelineMetrics;
 use crate::exec::{
-    ExecConfig, KernelSpawn, PipelineFactory, ShardOutput, ShardWorker, ShardedRunner,
-    WorkerKernels,
+    ContainerPool, ExecConfig, KernelSpawn, PipelineFactory, ShardOutput, ShardWorker,
+    ShardedRunner, WorkerKernels,
 };
 use crate::coordinator::node::{Emitter, NodeLogic};
 use crate::coordinator::signal::{parent_as, ParentRef};
@@ -322,6 +323,48 @@ impl SumApp {
         })
     }
 
+    /// [`SumApp::run_streaming`] with results landed in a
+    /// [`ResultSink`](crate::io::ResultSink) instead of collected:
+    /// each shard's `(region id, sum)` rows are written as soon as
+    /// their stream-order prefix completes, so a file-backed source
+    /// plus a file sink keeps the whole run's memory bounded by the
+    /// ingest budget. The returned report's `outputs` is empty; the
+    /// caller still owns the sink and calls
+    /// [`finish`](crate::io::ResultSink::finish) once to flush and
+    /// collect [`SinkStats`](crate::io::SinkStats).
+    ///
+    /// Enumerated modes only: the tagged baseline's outputs need a
+    /// global sort+fold after the run
+    /// ([`finish_sharded_outputs`]), which contradicts incremental
+    /// emission — asking for it is a named error, not silent
+    /// misordered output.
+    pub fn run_streaming_into<S, K>(
+        &self,
+        source: S,
+        exec: &ExecConfig,
+        sink: &mut K,
+    ) -> Result<SumReport>
+    where
+        S: crate::workload::source::RegionSource<Region = Blob>,
+        K: crate::io::ResultSink<(u64, f64)> + ?Sized,
+    {
+        exec.validate()?;
+        ensure!(
+            self.cfg.mode == SumMode::Enumerated,
+            "streaming sinks need stream-order outputs: SumMode::Tagged emits \
+             per-shard partials that require a global fold after the run \
+             (use run_streaming + finish_sharded_outputs instead)"
+        );
+        let factory = SumFactory::new(self.cfg, KernelSpawn::from_backend(self.kernels.backend()));
+        let report = ShardedRunner::new(exec.clone()).run_stream_into(&factory, source, sink)?;
+        Ok(SumReport {
+            outputs: Vec::new(),
+            metrics: report.metrics,
+            elapsed: report.elapsed,
+            invocations: report.invocations,
+        })
+    }
+
     fn run_tagged(&self, blobs: &[Blob]) -> Result<(Vec<(u64, f64)>, PipelineMetrics)> {
         let cfg = self.cfg;
         let ks = self.kernels.clone();
@@ -455,11 +498,28 @@ impl NodeLogic for TaggedSumLogic {
 pub struct SumFactory {
     cfg: SumConfig,
     spawn: KernelSpawn,
+    elem_pool: Option<Arc<ContainerPool<f32>>>,
 }
 
 impl SumFactory {
     pub fn new(cfg: SumConfig, spawn: KernelSpawn) -> SumFactory {
-        SumFactory { cfg, spawn }
+        SumFactory {
+            cfg,
+            spawn,
+            elem_pool: None,
+        }
+    }
+
+    /// Share an element-container pool with the region source: workers
+    /// return each completed region's `Vec<f32>` here instead of
+    /// dropping it, and a pooled source
+    /// ([`GenBlobSource::with_pool`](crate::workload::regions::GenBlobSource::with_pool),
+    /// [`BlobFileSource::with_pool`](crate::io::BlobFileSource::with_pool))
+    /// takes them back on the ingest driver — closing the loop that
+    /// makes steady-state streaming allocation-free end to end.
+    pub fn with_elem_pool(mut self, pool: Arc<ContainerPool<f32>>) -> SumFactory {
+        self.elem_pool = Some(pool);
+        self
     }
 }
 
@@ -487,6 +547,12 @@ impl PipelineFactory for SumFactory {
         // Empty regions still cost a firing; weigh them 1 so the planner
         // never builds a zero-weight shard.
         blob.elems.len().max(1)
+    }
+
+    fn recycle_region(&self, blob: Blob) {
+        if let Some(pool) = &self.elem_pool {
+            pool.put(blob.elems);
+        }
     }
 }
 

@@ -321,6 +321,41 @@ impl TaxiApp {
         })
     }
 
+    /// [`TaxiApp::run_streaming`] with pairs landed in a
+    /// [`ResultSink`](crate::io::ResultSink) instead of collected: each
+    /// shard's pairs are written as soon as their stream-order prefix
+    /// completes (all three variants emit in stream order, so no
+    /// post-run fold is needed). Pair with
+    /// [`TextSource`](crate::io::TextSource) for the file-backed path;
+    /// the returned report's `pairs` is empty and the caller calls
+    /// [`finish`](crate::io::ResultSink::finish) once to flush and
+    /// collect [`SinkStats`](crate::io::SinkStats).
+    pub fn run_streaming_into<S, K>(
+        &self,
+        text: Arc<Vec<u8>>,
+        source: S,
+        exec: &ExecConfig,
+        sink: &mut K,
+    ) -> Result<TaxiReport>
+    where
+        S: crate::workload::source::RegionSource<Region = TaxiLine>,
+        K: crate::io::ResultSink<TaxiPair> + ?Sized,
+    {
+        exec.validate()?;
+        let factory = TaxiFactory::new(
+            self.cfg,
+            KernelSpawn::from_backend(self.kernels.backend()),
+            text,
+        );
+        let report = ShardedRunner::new(exec.clone()).run_stream_into(&factory, source, sink)?;
+        Ok(TaxiReport {
+            pairs: Vec::new(),
+            metrics: report.metrics,
+            elapsed: report.elapsed,
+            invocations: report.invocations,
+        })
+    }
+
     fn feed_lines(src: &Rc<crate::coordinator::channel::Channel<TaxiLine>>, lines: &[TaxiLine]) {
         for line in lines {
             src.push(line.clone());

@@ -1,0 +1,316 @@
+//! `bench io` — file-backed vs in-memory streaming ingest throughput.
+//!
+//! Materializes one synthetic blob stream to a temporary `.rgn`
+//! container (the write is timed too), then crosses the ingest **buffer
+//! budget** with three sources feeding the same streaming executor:
+//!
+//! * `mem-slice` — a materialized stream replayed through `SliceSource`
+//!   (the all-in-memory upper bound: no generation, no decode);
+//! * `mem-gen` — the lazy `GenBlobSource` generator with pooled element
+//!   containers (in-memory, but paying per-region production);
+//! * `file` — `BlobFileSource` over the `.rgn` file with the same pool
+//!   (the out-of-core path: read + checksum + decode per region).
+//!
+//! Every row's sum outputs are asserted **bit-identical** to a
+//! materialized single-pass baseline before its time is recorded, so the
+//! sweep doubles as a round-trip equivalence check. The interesting
+//! read-out is the `file`/`mem-gen` throughput ratio across budgets: if
+//! the file path tracks the generator within a small factor, ingest is
+//! compute-bound, not I/O-bound, and the constant-memory path is free.
+//!
+//! Results are emitted as `BENCH_io.json` and uploaded as a CI artifact
+//! (`--smoke` runs a small shape in the pipeline).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::apps::sum::{SumConfig, SumFactory};
+use crate::exec::{ContainerPool, ExecConfig, KernelSpawn, ShardedRunner};
+use crate::io::{write_rgn_file, BlobFileSource, BlobStats};
+use crate::util::stats::fmt_count;
+use crate::workload::regions::{gen_blobs, GenBlobSource, RegionSpec};
+use crate::workload::source::SliceSource;
+
+use super::{time_fn, BenchConfig, Table};
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct IoConfig {
+    pub width: usize,
+    /// Total stream items.
+    pub items: usize,
+    /// Worker threads (fixed; the budget is the swept axis).
+    pub workers: usize,
+    /// Ingest buffer budgets (regions) to cross with each source.
+    pub budgets: Vec<usize>,
+    pub bench: BenchConfig,
+    pub seed: u64,
+}
+
+impl IoConfig {
+    /// CI smoke shape: small stream, warmed medians.
+    pub fn smoke() -> IoConfig {
+        IoConfig {
+            width: 32,
+            items: 1 << 14,
+            workers: 2,
+            budgets: vec![64, 256],
+            bench: BenchConfig {
+                warmup_iters: 1,
+                iters: 3,
+            },
+            seed: 0xF16,
+        }
+    }
+}
+
+impl Default for IoConfig {
+    fn default() -> Self {
+        IoConfig {
+            width: 128,
+            items: 1 << 18,
+            workers: 4,
+            budgets: vec![256, 1024, 4096],
+            bench: BenchConfig::from_env(),
+            seed: 0xF16,
+        }
+    }
+}
+
+/// One measured point.
+#[derive(Debug, Clone)]
+pub struct IoRow {
+    pub source: &'static str,
+    pub budget: usize,
+    pub seconds: f64,
+    pub items_per_sec: f64,
+    pub shards: usize,
+}
+
+/// Full report (also the JSON payload).
+#[derive(Debug, Clone)]
+pub struct IoReport {
+    pub items: usize,
+    pub workers: usize,
+    /// Stats of the materialized `.rgn` container.
+    pub file: BlobStats,
+    /// Seconds to write the container (one pass).
+    pub write_seconds: f64,
+    pub rows: Vec<IoRow>,
+}
+
+/// Best-effort self-deleting temp path.
+struct TempPath(PathBuf);
+
+impl Drop for TempPath {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+/// Run the sweep and print the table.
+pub fn run(cfg: &IoConfig) -> Result<IoReport> {
+    ensure!(!cfg.budgets.is_empty(), "bench io needs at least one budget");
+    let spec = RegionSpec::Uniform { max: 2 * cfg.width };
+    let path = TempPath(std::env::temp_dir().join(format!(
+        "regatta_bench_io_{}_{}.rgn",
+        std::process::id(),
+        cfg.seed
+    )));
+
+    let t0 = Instant::now();
+    let file = write_rgn_file(&path.0, GenBlobSource::new(cfg.items, spec, cfg.seed))
+        .context("materializing the bench .rgn container")?;
+    let write_seconds = t0.elapsed().as_secs_f64();
+
+    let blobs = gen_blobs(cfg.items, spec, cfg.seed);
+    let sum_cfg = SumConfig {
+        width: cfg.width,
+        ..Default::default()
+    };
+    let plain = SumFactory::new(sum_cfg, KernelSpawn::Native);
+    // one materialized single-threaded pass is the bit-identity oracle
+    let baseline = ShardedRunner::with_workers(1).run(&plain, &blobs)?.outputs;
+
+    let mut rows = Vec::new();
+    for &budget in &cfg.budgets {
+        let exec = ExecConfig::new(cfg.workers)
+            .with_shards_per_worker(4)
+            .streaming(budget);
+        let runner = ShardedRunner::new(exec);
+        for source in ["mem-slice", "mem-gen", "file"] {
+            // gen/file circulate element containers with the workers;
+            // the slice replay has nowhere to return them, so it runs
+            // the plain factory
+            let pool = Arc::new(ContainerPool::new());
+            let pooled = SumFactory::new(sum_cfg, KernelSpawn::Native)
+                .with_elem_pool(pool.clone());
+            let mut last = None;
+            let m = time_fn(cfg.bench, || {
+                let report = match source {
+                    "mem-slice" => runner
+                        .run_stream(&plain, SliceSource::new(&blobs))
+                        .expect("mem-slice run"),
+                    "mem-gen" => runner
+                        .run_stream(
+                            &pooled,
+                            GenBlobSource::new(cfg.items, spec, cfg.seed)
+                                .with_pool(pool.clone()),
+                        )
+                        .expect("mem-gen run"),
+                    _ => runner
+                        .run_stream(
+                            &pooled,
+                            BlobFileSource::open(&path.0)
+                                .expect("open bench .rgn")
+                                .with_pool(pool.clone()),
+                        )
+                        .expect("file run"),
+                };
+                last = Some(report);
+            });
+            let report = last.expect("at least one iteration");
+            ensure!(
+                report.outputs.len() == baseline.len(),
+                "{source}/{budget}: lost regions: {} of {}",
+                report.outputs.len(),
+                baseline.len()
+            );
+            for (i, ((gi, gv), (bi, bv))) in report.outputs.iter().zip(&baseline).enumerate() {
+                ensure!(
+                    gi == bi && gv.to_bits() == bv.to_bits(),
+                    "{source}/{budget}: output {i} diverged from the materialized baseline"
+                );
+            }
+            rows.push(IoRow {
+                source,
+                budget,
+                seconds: m.median(),
+                items_per_sec: cfg.items as f64 / m.median(),
+                shards: report.shards,
+            });
+        }
+    }
+
+    let mut t = Table::new(&["source", "budget", "time_s", "items/s", "shards"]);
+    for r in &rows {
+        t.row(&[
+            r.source.to_string(),
+            r.budget.to_string(),
+            format!("{:.4}", r.seconds),
+            fmt_count(r.items_per_sec),
+            r.shards.to_string(),
+        ]);
+    }
+    println!(
+        "== IO: file-backed vs in-memory streaming ingest ({} items, {} worker(s), \
+         .rgn = {} bytes written in {:.3}s) ==",
+        cfg.items, cfg.workers, file.bytes, write_seconds
+    );
+    t.print();
+
+    Ok(IoReport {
+        items: cfg.items,
+        workers: cfg.workers,
+        file,
+        write_seconds,
+        rows,
+    })
+}
+
+/// Headline metric: file-backed over lazy-generator throughput at the
+/// largest measured budget (`None` if either point is missing). Near
+/// 1.0 means the out-of-core path costs ~nothing over in-memory.
+pub fn file_vs_mem_ratio(report: &IoReport) -> Option<f64> {
+    let max_budget = report.rows.iter().map(|r| r.budget).max()?;
+    let pick = |source: &str| {
+        report
+            .rows
+            .iter()
+            .find(|r| r.budget == max_budget && r.source == source)
+            .map(|r| r.items_per_sec)
+    };
+    Some(pick("file")? / pick("mem-gen")?)
+}
+
+/// Render the report as the `BENCH_io.json` artifact.
+pub fn to_json(report: &IoReport) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"io\",\n");
+    s.push_str(&format!("  \"items\": {},\n", report.items));
+    s.push_str(&format!("  \"workers\": {},\n", report.workers));
+    s.push_str(&format!(
+        "  \"file\": {{\"regions\": {}, \"items\": {}, \"bytes\": {}}},\n",
+        report.file.regions, report.file.items, report.file.bytes
+    ));
+    s.push_str(&format!("  \"write_seconds\": {:.6},\n", report.write_seconds));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in report.rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"source\": \"{}\", \"budget\": {}, \"seconds\": {:.6}, \
+             \"items_per_sec\": {:.1}, \"shards\": {}}}{}\n",
+            r.source,
+            r.budget,
+            r.seconds,
+            r.items_per_sec,
+            r.shards,
+            if i + 1 < report.rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"file_vs_memgen_throughput_ratio\": {:.4}\n",
+        file_vs_mem_ratio(report).unwrap_or(0.0)
+    ));
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn tiny_cfg() -> IoConfig {
+        IoConfig {
+            width: 8,
+            items: 1 << 10,
+            workers: 2,
+            budgets: vec![16, 64],
+            bench: BenchConfig {
+                warmup_iters: 0,
+                iters: 1,
+            },
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn sweep_produces_rows_and_json_and_cleans_up() {
+        let cfg = tiny_cfg();
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.rows.len(), 2 * 3, "budgets x sources");
+        for r in &report.rows {
+            assert!(r.items_per_sec > 0.0, "{}/{}", r.source, r.budget);
+            assert!(r.shards > 0);
+        }
+        assert!(report.file.regions > 0);
+        assert!(report.file.items as usize == cfg.items);
+        let js = to_json(&report);
+        let parsed = Json::parse(&js).expect("emitted JSON parses");
+        assert!(parsed.get("rows").is_some());
+        assert!(parsed.get("file_vs_memgen_throughput_ratio").is_some());
+        assert!(file_vs_mem_ratio(&report).is_some());
+        // the temp container is gone
+        let leftover = std::env::temp_dir().join(format!(
+            "regatta_bench_io_{}_{}.rgn",
+            std::process::id(),
+            cfg.seed
+        ));
+        assert!(!leftover.exists(), "temp .rgn was removed");
+    }
+}

@@ -7,6 +7,7 @@
 pub mod figures;
 pub mod hotpath;
 pub mod ingest;
+pub mod io_bench;
 
 use std::time::Instant;
 

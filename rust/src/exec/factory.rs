@@ -65,6 +65,17 @@ pub trait PipelineFactory: Sync {
     fn weight(&self, _item: &Self::In) -> usize {
         1
     }
+
+    /// Reclaim one region after its shard completes (streaming runs
+    /// only; called on the executing worker's thread). The default
+    /// drops the region; a factory that shares a
+    /// [`ContainerPool`](super::ingest::ContainerPool) with its source
+    /// returns the region's heap buffers instead — closing the recycling
+    /// loop that makes file-backed ingest allocation-free end to end
+    /// (`SumFactory::with_elem_pool` + `BlobFileSource::with_pool`).
+    fn recycle_region(&self, region: Self::In) {
+        drop(region);
+    }
 }
 
 /// Per-thread kernel-set recipe: which backend every worker should build

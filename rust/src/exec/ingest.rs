@@ -52,6 +52,10 @@ impl Default for IngestPolicy {
 impl IngestPolicy {
     /// Resolve the effective regions-per-shard granule for `workers`.
     pub fn effective_shard_regions(&self, workers: usize) -> usize {
+        // A zero budget is rejected upstream (`ExecConfig::validate`,
+        // `WorkerPool::run_stream`) as a named error; the floor here only
+        // keeps this pure helper total (clamp(1, 0) would panic), it is
+        // not a config clamp.
         let budget = self.buffer_regions.max(1);
         let granule = if self.shard_regions == 0 {
             // aim for ~4 in-flight shards per worker within the budget

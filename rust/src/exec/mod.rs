@@ -61,7 +61,9 @@
 //!   in stream order as shards complete, not after a global join.
 //! * [`runner`] — [`ExecConfig`]/[`ShardedRunner`]: the front door
 //!   (`run` for materialized streams, `run_stream`/`run_stream_with`
-//!   for incremental sources).
+//!   for incremental sources, `run_stream_into` to land outputs in a
+//!   [`ResultSink`](crate::io::ResultSink) — pair with the out-of-core
+//!   readers in [`crate::io`] for the end-to-end constant-memory path).
 //!
 //! ## Quick start
 //!
@@ -104,5 +106,5 @@ pub use ingest::{ContainerPool, IngestPlanner, IngestPolicy, ShardTask};
 pub use merge::{ExecReport, ReportBuilder, StreamMerger, WorkerStats};
 pub use plan::{ShardPlan, ShardPolicy};
 pub use pool::{ShardResult, WorkerPool};
-pub use runner::{ExecConfig, ShardedRunner};
+pub use runner::{ExecConfig, ShardedRunner, MAX_INGEST_BUFFER};
 pub use steal::{Claim, ClaimMode, CompletionBuffer, StealQueues};

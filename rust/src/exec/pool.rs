@@ -300,8 +300,24 @@ impl WorkerPool {
             self.workers >= 1,
             "worker pool misconfigured: workers = 0 (need at least one worker thread)"
         );
+        ensure!(
+            ingest.buffer_regions >= 1,
+            "worker pool misconfigured: ingest buffer_regions = 0 (the in-flight \
+             budget must admit at least one region)"
+        );
+        // Also capped here (not just at ExecConfig::validate): the budget
+        // pre-sizes the reassembly ring below, so a unit-mistake value
+        // must be a named error, never a giant allocation or an overflow
+        // at `budget + 1`.
+        ensure!(
+            ingest.buffer_regions <= super::runner::MAX_INGEST_BUFFER,
+            "worker pool misconfigured: ingest buffer_regions = {} exceeds the \
+             sanity cap {} (the budget is counted in regions, not bytes)",
+            ingest.buffer_regions,
+            super::runner::MAX_INGEST_BUFFER
+        );
         let threads = self.workers;
-        let budget = ingest.buffer_regions.max(1);
+        let budget = ingest.buffer_regions;
         let granule = ingest.effective_shard_regions(threads);
         let queues: StealQueues<ShardTask<F::In>> =
             StealQueues::new(threads, self.claim != ClaimMode::NoSteal);
@@ -390,6 +406,10 @@ where
             driver.submit(task)?;
         }
     }
+    // A fallible source (file reader, decoder) ends its stream on error
+    // and reports it here: abort the run instead of merging a silently
+    // short prefix as if it were the whole stream.
+    source.close()?;
     if let Some(task) = planner.finish() {
         driver.submit(task)?;
     }
@@ -520,7 +540,15 @@ fn stream_worker<F: PipelineFactory>(
                     invocations: out.invocations,
                     elapsed: t0.elapsed().as_secs_f64(),
                 };
-                containers.put(task.regions);
+                // Hand each region back through the factory (a pooled
+                // factory reclaims its element buffers for the ingest
+                // driver; the default just drops), then recycle the
+                // emptied shard container.
+                let mut regions = task.regions;
+                for region in regions.drain(..) {
+                    factory.recycle_region(region);
+                }
+                containers.put(regions);
                 completion.push(result);
             }
             Err(e) => {

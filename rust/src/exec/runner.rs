@@ -55,9 +55,11 @@ impl ExecConfig {
     /// Builder-style streaming budget: at most `buffer_regions` regions
     /// in flight between ingest and the ordered merge (backpressure
     /// beyond it). Shard granularity stays on auto unless
-    /// [`IngestPolicy::shard_regions`] is set explicitly.
+    /// [`IngestPolicy::shard_regions`] is set explicitly. A zero (or
+    /// absurd) budget is **not** clamped here — [`ExecConfig::validate`]
+    /// rejects it by name, exactly like `workers = 0`.
     pub fn streaming(mut self, buffer_regions: usize) -> ExecConfig {
-        self.ingest.buffer_regions = buffer_regions.max(1);
+        self.ingest.buffer_regions = buffer_regions;
         self
     }
 
@@ -68,17 +70,40 @@ impl ExecConfig {
     }
 
     /// Check the configuration, naming the offending field. The runner
-    /// (and the apps' `run_sharded*` fronts) call this up front so a
-    /// zero-worker config fails loudly instead of being clamped.
+    /// (and the apps' `run_sharded*`/`run_streaming*` fronts) call this
+    /// up front so a zero-worker or zero-budget config fails loudly
+    /// instead of being clamped.
     pub fn validate(&self) -> Result<()> {
         ensure!(
             self.workers >= 1,
             "invalid exec config: workers = 0 (need at least one worker thread; \
              use ExecConfig::auto() for one per CPU)"
         );
+        ensure!(
+            self.ingest.buffer_regions >= 1,
+            "invalid exec config: ingest buffer_regions = 0 (the streaming \
+             budget must admit at least one region; pass --ingest-buffer >= 1)"
+        );
+        ensure!(
+            self.ingest.buffer_regions <= MAX_INGEST_BUFFER,
+            "invalid exec config: ingest buffer_regions = {} exceeds the sanity \
+             cap {MAX_INGEST_BUFFER} (the budget is counted in regions, not bytes)",
+            self.ingest.buffer_regions
+        );
         Ok(())
     }
 }
+
+/// Sanity cap on [`IngestPolicy::buffer_regions`]: a budget past a
+/// million *regions* in flight is almost certainly a unit mistake
+/// (bytes or items passed where regions were meant). Sized by what the
+/// budget actually pre-allocates: the stream merger's reassembly ring
+/// holds one slot per in-flight region in the worst case (every shard a
+/// single region), ~128 B each — ~130 MB at this cap, versus
+/// out-of-memory territory for byte-sized mistakes. Enforced by
+/// [`ExecConfig::validate`] and again by `WorkerPool::run_stream` for
+/// direct pool callers.
+pub const MAX_INGEST_BUFFER: usize = 1 << 20;
 
 impl Default for ExecConfig {
     fn default() -> Self {
@@ -175,6 +200,31 @@ impl ShardedRunner {
                 sink(r)
             })?;
         Ok(builder.finish(t0.elapsed().as_secs_f64()))
+    }
+
+    /// Streaming execution into a [`ResultSink`]: each shard's outputs
+    /// are written as soon as the stream-order prefix completes, so with
+    /// a file-backed source on one side and a file sink on the other the
+    /// whole run — read, compute, write — holds memory bounded by the
+    /// ingest budget, never by input or output size. The sink is **not**
+    /// finished here: call [`ResultSink::finish`] after the run to flush
+    /// and collect [`SinkStats`](crate::io::SinkStats).
+    ///
+    /// [`ResultSink`]: crate::io::ResultSink
+    /// [`ResultSink::finish`]: crate::io::ResultSink::finish
+    pub fn run_stream_into<F, S, K>(
+        &self,
+        factory: &F,
+        source: S,
+        sink: &mut K,
+    ) -> Result<ExecReport<F::Out>>
+    where
+        F: PipelineFactory,
+        F::In: Send,
+        S: RegionSource<Region = F::In>,
+        K: crate::io::ResultSink<F::Out> + ?Sized,
+    {
+        self.run_stream_with(factory, source, |r| sink.write_batch(&r.outputs))
     }
 }
 
@@ -306,5 +356,64 @@ mod tests {
         assert!(ExecConfig::auto().workers >= 1);
         assert!(ExecConfig::auto().validate().is_ok());
         assert!(ExecConfig::new(0).validate().is_err());
+    }
+
+    #[test]
+    fn zero_ingest_buffer_is_a_named_error_not_a_clamp() {
+        let cfg = ExecConfig::new(2).streaming(0);
+        assert_eq!(cfg.ingest.buffer_regions, 0, "no silent clamp");
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("buffer_regions = 0"), "{err}");
+        let err = ShardedRunner::new(cfg)
+            .run_stream(&WeightedFactory, SliceSource::new(&stream_of(10)))
+            .unwrap_err();
+        assert!(err.to_string().contains("buffer_regions = 0"), "{err}");
+        // materialized runs validate the same config object
+        let err = ShardedRunner::new(ExecConfig::new(2).streaming(0))
+            .run(&WeightedFactory, &stream_of(10))
+            .unwrap_err();
+        assert!(err.to_string().contains("buffer_regions = 0"), "{err}");
+    }
+
+    #[test]
+    fn absurd_ingest_buffer_is_a_named_error() {
+        let cfg = ExecConfig::new(2).streaming(MAX_INGEST_BUFFER + 1);
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("sanity cap"), "{err}");
+        assert!(ExecConfig::new(2).streaming(MAX_INGEST_BUFFER).validate().is_ok());
+        assert!(ExecConfig::new(2).streaming(1).validate().is_ok());
+    }
+
+    #[test]
+    fn run_stream_into_feeds_the_sink_in_stream_order() {
+        use crate::io::{JsonlSink, ResultSink};
+        struct CountSink {
+            batches: usize,
+            records: Vec<u32>,
+        }
+        impl ResultSink<u32> for CountSink {
+            fn write_batch(&mut self, outputs: &[u32]) -> Result<()> {
+                self.batches += 1;
+                self.records.extend_from_slice(outputs);
+                Ok(())
+            }
+            fn finish(&mut self) -> Result<crate::io::SinkStats> {
+                Ok(crate::io::SinkStats::default())
+            }
+        }
+        let stream = stream_of(200);
+        let mut sink = CountSink {
+            batches: 0,
+            records: Vec::new(),
+        };
+        let report = ShardedRunner::new(ExecConfig::new(3).streaming(16))
+            .run_stream_into(&WeightedFactory, SliceSource::new(&stream), &mut sink)
+            .unwrap();
+        assert_eq!(sink.records, (0..200).collect::<Vec<u32>>());
+        assert_eq!(sink.batches, report.shards);
+        assert!(report.outputs.is_empty(), "sink consumed the outputs");
+        // the JSONL sink slots straight in for (u64, f64) outputs
+        let mut jsonl = JsonlSink::new(Vec::new());
+        ResultSink::<(u64, f64)>::write_batch(&mut jsonl, &[(1, 2.0)]).unwrap();
     }
 }

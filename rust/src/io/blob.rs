@@ -1,0 +1,621 @@
+//! `.rgn` writer and file-backed region source.
+//!
+//! [`BlobWriter`] serializes **any** [`RegionSource`] of [`Blob`] regions
+//! (the lazy [`GenBlobSource`](crate::workload::regions::GenBlobSource),
+//! a slice replay, another file…) into the container format specified in
+//! [`super::format`], streaming: one region in memory at a time, totals
+//! accumulated into the footer.
+//!
+//! [`BlobFileSource`] is the reading half: a [`RegionSource`] over a
+//! `.rgn` file (or any `Read`), pulling one frame at a time through a
+//! **reusable** payload buffer, with element containers recycled through
+//! the executor's [`ContainerPool`] — so steady-state reads perform no
+//! per-region heap allocation and driver-side memory is governed by the
+//! ingest budget, never by file size (`rust/tests/io_memory.rs` proves
+//! this with the counting allocator).
+//!
+//! I/O errors and corruption cannot surface through
+//! [`RegionSource::next_region`] (it returns a bare `Option`), so the
+//! source stashes the first failure and ends the stream; the executor
+//! calls [`RegionSource::close`] after draining and the stashed error —
+//! named with file, frame index and cause — propagates out of
+//! `run_stream*`. Direct users can call [`BlobFileSource::try_next`]
+//! instead and see errors immediately.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, ErrorKind, Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::format::{
+    encode_header, fnv1a64, Footer, FOOTER_BODY_BYTES, FOOTER_SENTINEL, FRAME_HEAD_BYTES,
+    HEADER_BYTES, MAGIC, MAX_FRAME_BYTES, PAYLOAD_BLOB_F32, VERSION,
+};
+use crate::coordinator::enumerate::Blob;
+use crate::exec::ingest::ContainerPool;
+use crate::workload::source::RegionSource;
+
+/// What a completed write (or a fully validated read) covered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlobStats {
+    /// Region frames written/read.
+    pub regions: u64,
+    /// Total elements across all regions.
+    pub items: u64,
+    /// Container bytes, header and footer included.
+    pub bytes: u64,
+}
+
+/// Streaming `.rgn` writer over any [`Write`].
+///
+/// `new` emits the header; [`BlobWriter::write_region`] appends one
+/// checksummed frame through a reusable encode buffer;
+/// [`BlobWriter::finish`] appends the footer and returns the totals.
+/// Dropping a writer without `finish` leaves a truncated container —
+/// which readers then reject by name, so a crashed producer cannot pass
+/// for a complete stream.
+pub struct BlobWriter<W: Write> {
+    out: W,
+    frame: Vec<u8>,
+    regions: u64,
+    items: u64,
+    bytes: u64,
+}
+
+impl<W: Write> BlobWriter<W> {
+    /// Start a container: writes the header immediately.
+    pub fn new(mut out: W) -> Result<BlobWriter<W>> {
+        out.write_all(&encode_header()).context("writing .rgn header")?;
+        Ok(BlobWriter {
+            out,
+            frame: Vec::new(),
+            regions: 0,
+            items: 0,
+            bytes: HEADER_BYTES as u64,
+        })
+    }
+
+    /// Append one region as a checksummed frame.
+    pub fn write_region(&mut self, blob: &Blob) -> Result<()> {
+        let payload = FRAME_HEAD_BYTES + 4 * blob.elems.len();
+        ensure!(
+            payload <= MAX_FRAME_BYTES as usize,
+            "region {} too large for a .rgn frame: {payload} bytes (cap {MAX_FRAME_BYTES})",
+            blob.id
+        );
+        self.frame.clear();
+        self.frame.extend_from_slice(&blob.id.to_le_bytes());
+        self.frame.extend_from_slice(&(blob.elems.len() as u32).to_le_bytes());
+        for &v in &blob.elems {
+            self.frame.extend_from_slice(&v.to_le_bytes());
+        }
+        let sum = fnv1a64(&self.frame);
+        let frame_index = self.regions;
+        let write = |out: &mut W, frame: &[u8]| -> std::io::Result<()> {
+            out.write_all(&(payload as u32).to_le_bytes())?;
+            out.write_all(&sum.to_le_bytes())?;
+            out.write_all(frame)
+        };
+        write(&mut self.out, &self.frame)
+            .with_context(|| format!("writing .rgn frame {frame_index}"))?;
+        self.regions += 1;
+        self.items += blob.elems.len() as u64;
+        self.bytes += (4 + 8 + payload) as u64;
+        Ok(())
+    }
+
+    /// Drain `source` into the container (regions stay in stream order).
+    pub fn write_source<S>(&mut self, mut source: S) -> Result<()>
+    where
+        S: RegionSource<Region = Blob>,
+    {
+        while let Some(blob) = source.next_region() {
+            self.write_region(&blob)?;
+        }
+        source.close().context("region source failed while writing .rgn")
+    }
+
+    /// Append the footer, flush, and return the totals.
+    pub fn finish(mut self) -> Result<BlobStats> {
+        let footer = Footer {
+            regions: self.regions,
+            items: self.items,
+        };
+        self.out.write_all(&footer.encode()).context("writing .rgn footer")?;
+        self.out.flush().context("flushing .rgn output")?;
+        Ok(BlobStats {
+            regions: self.regions,
+            items: self.items,
+            bytes: self.bytes + 4 + FOOTER_BODY_BYTES as u64,
+        })
+    }
+}
+
+/// Materialize `source` into a `.rgn` file at `path` (the `regatta gen`
+/// entry point).
+pub fn write_rgn_file<S>(path: impl AsRef<Path>, source: S) -> Result<BlobStats>
+where
+    S: RegionSource<Region = Blob>,
+{
+    let path = path.as_ref();
+    let file = File::create(path)
+        .with_context(|| format!("creating .rgn file {}", path.display()))?;
+    let mut writer = BlobWriter::new(BufWriter::new(file))?;
+    writer
+        .write_source(source)
+        .with_context(|| format!("writing {}", path.display()))?;
+    writer.finish()
+}
+
+/// Reader progress.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReadState {
+    /// Frames may follow.
+    Active,
+    /// Footer seen and validated.
+    Finished,
+    /// A stashed error ended the stream (reported at `close`).
+    Failed,
+}
+
+/// File-backed [`RegionSource`]: streams `Blob` regions out of a `.rgn`
+/// container one frame at a time.
+///
+/// Memory contract: one reusable frame buffer (high-water sized by the
+/// largest region), element containers taken from an optional shared
+/// [`ContainerPool`] (refilled by the executor via
+/// [`PipelineFactory::recycle_region`]), and whatever the `Read`
+/// implementation buffers ([`BlobFileSource::open`] uses a fixed-size
+/// [`BufReader`]). Nothing scales with file length.
+///
+/// [`PipelineFactory::recycle_region`]: crate::exec::PipelineFactory::recycle_region
+pub struct BlobFileSource<R: Read> {
+    input: R,
+    /// Where the bytes come from, for error messages.
+    label: String,
+    /// Reusable frame payload buffer.
+    frame: Vec<u8>,
+    /// Recycled element containers (worker-refilled when wired).
+    pool: Option<Arc<ContainerPool<f32>>>,
+    regions: u64,
+    items: u64,
+    state: ReadState,
+    error: Option<anyhow::Error>,
+}
+
+impl BlobFileSource<BufReader<File>> {
+    /// Open a `.rgn` file, validating the header eagerly (a wrong-format
+    /// file fails here, not mid-stream).
+    pub fn open(path: impl AsRef<Path>) -> Result<BlobFileSource<BufReader<File>>> {
+        let path = path.as_ref();
+        let file = File::open(path)
+            .with_context(|| format!("opening .rgn file {}", path.display()))?;
+        BlobFileSource::from_reader(BufReader::new(file), path.display().to_string())
+    }
+}
+
+/// Validate a container header, naming `label` in every failure.
+fn check_header(label: &str, header: &[u8; HEADER_BYTES]) -> Result<()> {
+    ensure!(
+        header[..8] == MAGIC,
+        "{label}: not a .rgn container (bad magic {:02x?})",
+        &header[..8]
+    );
+    let version = u32::from_le_bytes(header[8..12].try_into().expect("4 bytes"));
+    ensure!(
+        version == VERSION,
+        "{label}: unsupported .rgn version {version} (this build reads {VERSION})"
+    );
+    let payload = u32::from_le_bytes(header[12..16].try_into().expect("4 bytes"));
+    ensure!(
+        payload == PAYLOAD_BLOB_F32,
+        "{label}: unsupported payload schema {payload} (expected {PAYLOAD_BLOB_F32})"
+    );
+    Ok(())
+}
+
+impl<R: Read> BlobFileSource<R> {
+    /// Wrap any reader positioned at the start of a container; validates
+    /// the header eagerly. `label` names the source in errors.
+    pub fn from_reader(mut input: R, label: impl Into<String>) -> Result<BlobFileSource<R>> {
+        let label = label.into();
+        let mut header = [0u8; HEADER_BYTES];
+        input
+            .read_exact(&mut header)
+            .with_context(|| format!("{label}: reading .rgn header"))?;
+        check_header(&label, &header)?;
+        Ok(BlobFileSource {
+            input,
+            label,
+            frame: Vec::new(),
+            pool: None,
+            regions: 0,
+            items: 0,
+            state: ReadState::Active,
+            error: None,
+        })
+    }
+
+    /// Share an element-container pool: freshly read regions take their
+    /// `Vec<f32>` from it instead of allocating, closing the recycling
+    /// loop with `SumFactory::with_elem_pool` (workers return containers
+    /// after each shard).
+    pub fn with_pool(mut self, pool: Arc<ContainerPool<f32>>) -> BlobFileSource<R> {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Regions read so far.
+    pub fn regions_read(&self) -> u64 {
+        self.regions
+    }
+
+    /// Elements read so far.
+    pub fn items_read(&self) -> u64 {
+        self.items
+    }
+
+    /// Fallible pull: the next region, `Ok(None)` after a validated
+    /// footer, or a named error on truncation/corruption. Unlike
+    /// [`RegionSource::next_region`] the failure is returned here
+    /// directly, for callers outside the executor.
+    pub fn try_next(&mut self) -> Result<Option<Blob>> {
+        match self.state {
+            ReadState::Active => {}
+            ReadState::Finished | ReadState::Failed => return Ok(None),
+        }
+        match self.read_frame() {
+            Ok(blob) => Ok(blob),
+            Err(e) => {
+                self.state = ReadState::Failed;
+                Err(e)
+            }
+        }
+    }
+
+    fn read_frame(&mut self) -> Result<Option<Blob>> {
+        let mut len4 = [0u8; 4];
+        if let Err(e) = self.input.read_exact(&mut len4) {
+            if e.kind() == ErrorKind::UnexpectedEof {
+                bail!(
+                    "{}: truncated .rgn container: end of file after {} region(s) \
+                     with no footer (incomplete write?)",
+                    self.label,
+                    self.regions
+                );
+            }
+            return Err(e).with_context(|| format!("{}: reading frame length", self.label));
+        }
+        let len = u32::from_le_bytes(len4);
+        if len == FOOTER_SENTINEL {
+            return self.read_footer().map(|()| None);
+        }
+        ensure!(
+            (FRAME_HEAD_BYTES as u32..=MAX_FRAME_BYTES).contains(&len),
+            "{}: corrupted frame {}: absurd payload length {len} bytes \
+             (valid: {FRAME_HEAD_BYTES}..={MAX_FRAME_BYTES})",
+            self.label,
+            self.regions
+        );
+        let mut sum8 = [0u8; 8];
+        self.read_body(&mut sum8, "frame checksum")?;
+        let stored = u64::from_le_bytes(sum8);
+        self.frame.resize(len as usize, 0);
+        let mut frame = std::mem::take(&mut self.frame);
+        let body = self.read_body(&mut frame, "frame payload");
+        self.frame = frame;
+        body?;
+        let actual = fnv1a64(&self.frame);
+        ensure!(
+            actual == stored,
+            "{}: corrupted frame {}: checksum mismatch \
+             (stored {stored:#018x}, computed {actual:#018x})",
+            self.label,
+            self.regions
+        );
+        let id = u64::from_le_bytes(self.frame[..8].try_into().expect("8 bytes"));
+        let count = u32::from_le_bytes(self.frame[8..12].try_into().expect("4 bytes")) as usize;
+        ensure!(
+            len as usize == FRAME_HEAD_BYTES + 4 * count,
+            "{}: corrupted frame {}: element count {count} disagrees with \
+             payload length {len}",
+            self.label,
+            self.regions
+        );
+        let mut elems = self
+            .pool
+            .as_ref()
+            .and_then(|p| p.take())
+            .unwrap_or_default();
+        elems.extend(
+            self.frame[FRAME_HEAD_BYTES..]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes"))),
+        );
+        self.regions += 1;
+        self.items += count as u64;
+        Ok(Some(Blob { id, elems }))
+    }
+
+    fn read_body(&mut self, buf: &mut [u8], what: &str) -> Result<()> {
+        self.input.read_exact(buf).with_context(|| {
+            format!(
+                "{}: truncated .rgn container: end of file inside {what} of frame {}",
+                self.label, self.regions
+            )
+        })
+    }
+
+    fn read_footer(&mut self) -> Result<()> {
+        let mut body = [0u8; FOOTER_BODY_BYTES];
+        self.read_body(&mut body, "the footer")?;
+        let footer = Footer::decode(&body).with_context(|| {
+            format!("{}: corrupted .rgn footer (bad magic or checksum)", self.label)
+        })?;
+        ensure!(
+            footer.regions == self.regions && footer.items == self.items,
+            "{}: .rgn footer disagrees with the stream: footer says \
+             {} region(s) / {} item(s), file held {} / {}",
+            self.label,
+            footer.regions,
+            footer.items,
+            self.regions,
+            self.items
+        );
+        // trailing garbage after the footer is also a malformed container
+        let mut one = [0u8; 1];
+        match self.input.read(&mut one) {
+            Ok(0) => {}
+            Ok(_) => bail!("{}: trailing bytes after the .rgn footer", self.label),
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("{}: reading past the footer", self.label));
+            }
+        }
+        self.state = ReadState::Finished;
+        Ok(())
+    }
+}
+
+impl<R: Read> RegionSource for BlobFileSource<R> {
+    type Region = Blob;
+
+    fn next_region(&mut self) -> Option<Blob> {
+        match self.try_next() {
+            Ok(blob) => blob,
+            Err(e) => {
+                self.error = Some(e);
+                None
+            }
+        }
+    }
+
+    fn close(&mut self) -> Result<()> {
+        match self.error.take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Read just the footer of a `.rgn` file by seeking to the end: cheap
+/// totals (region/item counts) for logging and validation before
+/// streaming the frames — and an up-front truncation check, since an
+/// interrupted writer never wrote one.
+pub fn peek_rgn_footer(path: impl AsRef<Path>) -> Result<Footer> {
+    use std::io::{Seek, SeekFrom};
+    let path = path.as_ref();
+    let mut file = File::open(path)
+        .with_context(|| format!("opening .rgn file {}", path.display()))?;
+    let len = file
+        .metadata()
+        .with_context(|| format!("inspecting {}", path.display()))?
+        .len();
+    let record = (4 + FOOTER_BODY_BYTES) as u64;
+    ensure!(
+        len >= HEADER_BYTES as u64 + record,
+        "{}: too short to be a .rgn container ({len} bytes)",
+        path.display()
+    );
+    // Validate the header first so a wrong-format file is named as such
+    // (and a future-version container is rejected) instead of its tail
+    // bytes being trusted as a footer.
+    let mut header = [0u8; HEADER_BYTES];
+    file.read_exact(&mut header)
+        .with_context(|| format!("{}: reading .rgn header", path.display()))?;
+    check_header(&path.display().to_string(), &header)?;
+    file.seek(SeekFrom::End(-(record as i64)))
+        .with_context(|| format!("seeking to the footer of {}", path.display()))?;
+    let mut buf = [0u8; 4 + FOOTER_BODY_BYTES];
+    file.read_exact(&mut buf)
+        .with_context(|| format!("reading the footer of {}", path.display()))?;
+    ensure!(
+        u32::from_le_bytes(buf[..4].try_into().expect("4 bytes")) == FOOTER_SENTINEL,
+        "{}: missing .rgn footer (truncated or interrupted write?)",
+        path.display()
+    );
+    let body: [u8; FOOTER_BODY_BYTES] = buf[4..].try_into().expect("32 bytes");
+    Footer::decode(&body).with_context(|| {
+        format!("{}: corrupted .rgn footer (bad magic or checksum)", path.display())
+    })
+}
+
+/// Materialize a whole `.rgn` file (verification paths and small inputs;
+/// the streaming executor should use [`BlobFileSource`] directly).
+pub fn read_rgn_file(path: impl AsRef<Path>) -> Result<Vec<Blob>> {
+    let mut source = BlobFileSource::open(path)?;
+    let mut blobs = Vec::new();
+    while let Some(blob) = source.try_next()? {
+        blobs.push(blob);
+    }
+    Ok(blobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn sample_blobs() -> Vec<Blob> {
+        vec![
+            Blob::from_vec(0, vec![1.0, -2.5, 0.25]),
+            Blob::from_vec(1, vec![]),
+            Blob::from_vec(7, (0..100).map(|i| i as f32 / 3.0).collect()),
+        ]
+    }
+
+    fn encode_finished(blobs: &[Blob]) -> (Vec<u8>, BlobStats) {
+        struct Probe<'a>(&'a mut Vec<u8>);
+        impl Write for Probe<'_> {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.0.extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut bytes = Vec::new();
+        let mut w = BlobWriter::new(Probe(&mut bytes)).unwrap();
+        for b in blobs {
+            w.write_region(b).unwrap();
+        }
+        let stats = w.finish().unwrap();
+        (bytes, stats)
+    }
+
+    fn encode(blobs: &[Blob]) -> Vec<u8> {
+        encode_finished(blobs).0
+    }
+
+    fn drain(bytes: Vec<u8>) -> Result<Vec<Blob>> {
+        let mut src = BlobFileSource::from_reader(Cursor::new(bytes), "<mem>")?;
+        let mut out = Vec::new();
+        while let Some(b) = src.try_next()? {
+            out.push(b);
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn round_trip_in_memory() {
+        let blobs = sample_blobs();
+        let (bytes, stats) = encode_finished(&blobs);
+        assert_eq!(stats.regions, 3);
+        assert_eq!(stats.items, 103);
+        assert_eq!(stats.bytes as usize, bytes.len());
+        let got = drain(bytes).unwrap();
+        assert_eq!(got, blobs);
+    }
+
+    #[test]
+    fn empty_container_round_trips() {
+        let (bytes, stats) = encode_finished(&[]);
+        assert_eq!(stats.regions, 0);
+        assert!(drain(bytes).unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_magic_is_named() {
+        let mut bytes = encode(&sample_blobs());
+        bytes[0] = b'X';
+        let err = BlobFileSource::from_reader(Cursor::new(bytes), "<mem>").unwrap_err();
+        assert!(err.to_string().contains("not a .rgn container"), "{err}");
+    }
+
+    #[test]
+    fn corrupted_payload_is_named() {
+        let mut bytes = encode(&sample_blobs());
+        // flip a bit inside the first frame's payload (header 16 + len 4
+        // + checksum 8 puts payload at 28)
+        bytes[30] ^= 0x01;
+        let err = drain(bytes).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("corrupted frame 0"), "{msg}");
+        assert!(msg.contains("checksum mismatch"), "{msg}");
+    }
+
+    #[test]
+    fn truncation_is_named() {
+        let full = encode(&sample_blobs());
+        // cut inside the last frame (before the footer)
+        let cut = full.len() - (4 + FOOTER_BODY_BYTES) - 10;
+        let err = drain(full[..cut].to_vec()).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        // cut exactly at a frame boundary (footer missing entirely)
+        let cut = full.len() - (4 + FOOTER_BODY_BYTES);
+        let err = drain(full[..cut].to_vec()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("no footer"), "{msg}");
+    }
+
+    #[test]
+    fn footer_total_mismatch_is_named() {
+        // valid frames + a footer that lies about the totals (its own
+        // checksum is valid, so only the cross-check can catch it)
+        let full = encode(&sample_blobs());
+        let mut bytes = full[..full.len() - (4 + FOOTER_BODY_BYTES)].to_vec();
+        bytes.extend_from_slice(
+            &Footer {
+                regions: 4,
+                items: 103,
+            }
+            .encode(),
+        );
+        let err = drain(bytes).unwrap_err();
+        assert!(err.to_string().contains("footer disagrees"), "{err}");
+    }
+
+    #[test]
+    fn trailing_garbage_is_named() {
+        let mut bytes = encode(&sample_blobs());
+        bytes.push(0xEE);
+        let err = drain(bytes).unwrap_err();
+        assert!(err.to_string().contains("trailing bytes"), "{err}");
+    }
+
+    #[test]
+    fn absurd_frame_length_is_named() {
+        let mut bytes = encode(&sample_blobs());
+        // overwrite the first frame's length with a huge value
+        bytes[16..20].copy_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        let err = drain(bytes).unwrap_err();
+        assert!(err.to_string().contains("absurd payload length"), "{err}");
+    }
+
+    #[test]
+    fn region_source_stashes_errors_for_close() {
+        let mut bytes = encode(&sample_blobs());
+        bytes[30] ^= 0x01;
+        let mut src = BlobFileSource::from_reader(Cursor::new(bytes), "<mem>").unwrap();
+        assert!(src.next_region().is_none(), "error ends the stream");
+        let err = src.close().unwrap_err();
+        assert!(err.to_string().contains("corrupted frame 0"), "{err}");
+        assert!(src.close().is_ok(), "error is reported once");
+    }
+
+    #[test]
+    fn pooled_containers_are_reused() {
+        let blobs = vec![
+            Blob::from_vec(0, vec![1.0; 16]),
+            Blob::from_vec(1, vec![2.0; 16]),
+        ];
+        let (bytes, _) = encode_finished(&blobs);
+        let pool = Arc::new(ContainerPool::new());
+        let seeded: Vec<f32> = Vec::with_capacity(64);
+        let seeded_ptr = seeded.as_ptr();
+        pool.put(seeded);
+        let mut src = BlobFileSource::from_reader(Cursor::new(bytes), "<mem>")
+            .unwrap()
+            .with_pool(pool.clone());
+        let first = src.try_next().unwrap().unwrap();
+        assert_eq!(first.elems.as_ptr(), seeded_ptr, "container came from the pool");
+        assert_eq!(first.elems, vec![1.0; 16]);
+        pool.put(first.elems);
+        let second = src.try_next().unwrap().unwrap();
+        assert_eq!(second.elems.as_ptr(), seeded_ptr, "recycled again");
+        assert!(src.try_next().unwrap().is_none());
+    }
+}

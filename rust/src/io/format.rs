@@ -1,0 +1,176 @@
+//! The `.rgn` on-disk region container format (byte-level spec).
+//!
+//! A `.rgn` file is a header, a sequence of length-prefixed **region
+//! frames**, and a footer. All integers are little-endian; the layout is
+//! deliberately trivial so any language can read it:
+//!
+//! ```text
+//! header:  magic "RGNBLOB1" (8) | version u32 | payload u32
+//! frame:   len u32 | checksum u64 | payload[len]
+//!          payload = region id u64 | count u32 | count × f32
+//! footer:  sentinel u32 = 0xFFFF_FFFF | magic "RGNEND.1" (8)
+//!          | regions u64 | items u64 | checksum u64
+//! ```
+//!
+//! * `len` is the frame payload size in bytes, so a reader skips or
+//!   streams frames through one reusable buffer without knowing the
+//!   payload schema. The footer is recognized by the `len` sentinel
+//!   (`u32::MAX`), which no real frame can carry — a payload always holds
+//!   at least the 12-byte `id + count` head and is capped far below it by
+//!   [`MAX_FRAME_BYTES`].
+//! * Every frame carries an FNV-1a 64 checksum of its payload; the footer
+//!   checksums its own `magic | regions | items` bytes. A flipped bit
+//!   anywhere is reported as a **named error** (file, frame index,
+//!   expected/actual), never a panic or a garbage region.
+//! * The footer's `regions`/`items` totals let a reader prove it saw the
+//!   whole stream: hitting EOF before the footer is a *truncation* error,
+//!   and totals that disagree with the frames actually read are a
+//!   *mismatch* error.
+//!
+//! This module holds the constants and the checksum; the writer/reader
+//! live in [`super::blob`].
+
+/// File magic opening every `.rgn` container.
+pub const MAGIC: [u8; 8] = *b"RGNBLOB1";
+
+/// Footer magic, after the frame-length sentinel.
+pub const FOOTER_MAGIC: [u8; 8] = *b"RGNEND.1";
+
+/// Format version written (and the only one accepted) by this crate.
+pub const VERSION: u32 = 1;
+
+/// Payload schema id: `Blob` regions — `id u64 | count u32 | count × f32`.
+pub const PAYLOAD_BLOB_F32: u32 = 1;
+
+/// Frame-length sentinel marking the footer record.
+pub const FOOTER_SENTINEL: u32 = u32::MAX;
+
+/// Sanity cap on a single frame's payload bytes: a `len` beyond this is
+/// treated as corruption (a real region would be gigabytes), so a flipped
+/// length byte fails fast instead of attempting an absurd allocation.
+pub const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+/// Bytes in the fixed header.
+pub const HEADER_BYTES: usize = 16;
+
+/// Minimum frame payload: `id u64 + count u32`.
+pub const FRAME_HEAD_BYTES: usize = 12;
+
+/// FNV-1a 64-bit over `bytes` — the per-frame checksum. Not
+/// cryptographic; it exists to catch truncation, bit rot and torn writes
+/// with zero dependencies and one multiply per byte.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Render the 16-byte header.
+pub fn encode_header() -> [u8; HEADER_BYTES] {
+    let mut out = [0u8; HEADER_BYTES];
+    out[..8].copy_from_slice(&MAGIC);
+    out[8..12].copy_from_slice(&VERSION.to_le_bytes());
+    out[12..16].copy_from_slice(&PAYLOAD_BLOB_F32.to_le_bytes());
+    out
+}
+
+/// Footer body (everything after the sentinel): magic, totals, checksum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Footer {
+    /// Region frames in the file.
+    pub regions: u64,
+    /// Total elements across all regions.
+    pub items: u64,
+}
+
+/// Bytes in the footer body (after the 4-byte sentinel).
+pub const FOOTER_BODY_BYTES: usize = 32;
+
+impl Footer {
+    /// Render sentinel + body (the full on-disk footer record).
+    pub fn encode(&self) -> [u8; 4 + FOOTER_BODY_BYTES] {
+        let mut out = [0u8; 4 + FOOTER_BODY_BYTES];
+        out[..4].copy_from_slice(&FOOTER_SENTINEL.to_le_bytes());
+        out[4..12].copy_from_slice(&FOOTER_MAGIC);
+        out[12..20].copy_from_slice(&self.regions.to_le_bytes());
+        out[20..28].copy_from_slice(&self.items.to_le_bytes());
+        let sum = fnv1a64(&out[4..28]);
+        out[28..36].copy_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse and verify a footer body (the 32 bytes after the sentinel).
+    /// Returns `None` if the magic or checksum is wrong.
+    pub fn decode(body: &[u8; FOOTER_BODY_BYTES]) -> Option<Footer> {
+        if body[..8] != FOOTER_MAGIC {
+            return None;
+        }
+        let stored = u64::from_le_bytes(body[24..32].try_into().expect("8 bytes"));
+        if fnv1a64(&body[..24]) != stored {
+            return None;
+        }
+        Some(Footer {
+            regions: u64::from_le_bytes(body[8..16].try_into().expect("8 bytes")),
+            items: u64::from_le_bytes(body[16..24].try_into().expect("8 bytes")),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn header_layout_is_stable() {
+        let h = encode_header();
+        assert_eq!(&h[..8], b"RGNBLOB1");
+        assert_eq!(u32::from_le_bytes(h[8..12].try_into().unwrap()), VERSION);
+        assert_eq!(
+            u32::from_le_bytes(h[12..16].try_into().unwrap()),
+            PAYLOAD_BLOB_F32
+        );
+    }
+
+    #[test]
+    fn footer_round_trips() {
+        let f = Footer {
+            regions: 12345,
+            items: 987654321,
+        };
+        let enc = f.encode();
+        assert_eq!(
+            u32::from_le_bytes(enc[..4].try_into().unwrap()),
+            FOOTER_SENTINEL
+        );
+        let body: [u8; FOOTER_BODY_BYTES] = enc[4..].try_into().unwrap();
+        assert_eq!(Footer::decode(&body), Some(f));
+    }
+
+    #[test]
+    fn footer_rejects_corruption() {
+        let enc = Footer {
+            regions: 7,
+            items: 70,
+        }
+        .encode();
+        for flip in [4usize, 13, 21, 29] {
+            let mut bad = enc;
+            bad[flip] ^= 0x40;
+            let body: [u8; FOOTER_BODY_BYTES] = bad[4..].try_into().unwrap();
+            assert_eq!(Footer::decode(&body), None, "flip at byte {flip}");
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! Out-of-core region storage: on-disk containers, file-backed
+//! [`RegionSource`]s, and streaming result sinks.
+//!
+//! The paper's streams are "massive data sets" that never fit in memory;
+//! PR 3 built the executor half of that story (bounded-budget streaming
+//! ingest, backpressure, ordered merge) but every run still synthesized
+//! its regions in-process. This module is the other half — real readers
+//! and writers — closing the constant-memory loop end to end:
+//!
+//! ```text
+//!   .rgn file ─ BlobFileSource ─┐                 ┌─ JsonlSink ─ .jsonl
+//!   taxi text ─ TextSource ─────┤ run_stream_into ├─ BinarySink ─ .bin
+//!   generator ─ GenBlobSource ──┘ (bounded budget)└─ any ResultSink
+//! ```
+//!
+//! * [`format`] — the `.rgn` byte layout: magic + versioned header,
+//!   length-prefixed region frames with per-frame FNV-1a checksums, and
+//!   a footer carrying region/item totals so a reader can prove it saw
+//!   the whole stream. Truncation and corruption are named errors.
+//! * [`blob`] — [`BlobWriter`] (serialize any `RegionSource` of
+//!   [`Blob`](crate::coordinator::enumerate::Blob)s; `regatta gen sum`)
+//!   and [`BlobFileSource`] (stream a `.rgn` back through one reusable
+//!   frame buffer + pool-recycled element containers — steady-state
+//!   reads allocate nothing per region).
+//! * [`text`] — [`TextSource`]: line-delimited taxi records keyed by
+//!   their `T<digits>` tag, scanned incrementally over the shared text
+//!   buffer.
+//! * [`sink`] — [`ResultSink`] with [`JsonlSink`] and [`BinarySink`],
+//!   fed in stream order by
+//!   [`ShardedRunner::run_stream_into`](crate::exec::ShardedRunner::run_stream_into).
+//!
+//! The memory invariant (proved in `rust/tests/io_memory.rs` with the
+//! counting allocator): driver-side allocations while streaming a `.rgn`
+//! file are governed by the ingest budget, not file size — a 100× larger
+//! file adds no measurable driver allocations. Round-trip bit-identity
+//! (write → read → run ≡ in-memory run, workers 1–8) is pinned by
+//! `rust/tests/io_roundtrip.rs`; see EXPERIMENTS.md §IO for how to
+//! regenerate the `BENCH_io.json` throughput artifact.
+//!
+//! [`RegionSource`]: crate::workload::source::RegionSource
+
+pub mod blob;
+pub mod format;
+pub mod sink;
+pub mod text;
+
+pub use blob::{
+    peek_rgn_footer, read_rgn_file, write_rgn_file, BlobFileSource, BlobStats, BlobWriter,
+};
+pub use format::Footer;
+pub use sink::{BinRecord, BinarySink, JsonRecord, JsonlSink, ResultSink, SinkStats};
+pub use text::{write_taxi_file, TextSource};

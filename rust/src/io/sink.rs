@@ -1,0 +1,370 @@
+//! Streaming result sinks: the output side of the constant-memory path.
+//!
+//! `run_stream` collects every output before returning — fine for tests,
+//! fatal for out-of-core runs. A [`ResultSink`] instead receives each
+//! shard's outputs **incrementally, in stream order** (wired through
+//! [`ShardedRunner::run_stream_into`] /
+//! [`ShardedRunner::run_stream_with`]), so results land on disk while
+//! upstream regions are still being read: end-to-end memory is the
+//! ingest budget plus the sink's write buffer.
+//!
+//! Two encodings ship:
+//!
+//! * [`JsonlSink`] — one JSON object per record, newline-delimited.
+//!   Finite floats are rendered with Rust's shortest-round-trip
+//!   formatter, so a parser recovers the exact bits; two runs producing
+//!   bit-identical results produce byte-identical files (the
+//!   equivalence tests compare the bytes). Non-finite values render as
+//!   `null` — `NaN`/`inf` tokens are not legal JSON.
+//! * [`BinarySink`] — fixed-size little-endian records behind a small
+//!   header (`magic | version | record size`), for downstream tools that
+//!   want the raw values back without parsing text.
+//!
+//! Both reuse one encode buffer across batches (no per-record
+//! allocation) and count records/bytes for the [`SinkStats`] returned by
+//! [`ResultSink::finish`].
+//!
+//! [`ShardedRunner::run_stream_into`]: crate::exec::ShardedRunner::run_stream_into
+//! [`ShardedRunner::run_stream_with`]: crate::exec::ShardedRunner::run_stream_with
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::apps::taxi::TaxiPair;
+
+/// Where results go on a streaming run. Batches arrive in stream order;
+/// `finish` flushes and reports totals.
+pub trait ResultSink<T> {
+    /// Write one shard's outputs (called in stream order, as each
+    /// shard's prefix completes).
+    fn write_batch(&mut self, outputs: &[T]) -> Result<()>;
+
+    /// Flush buffered bytes and return what was written. Call exactly
+    /// once, after the run completes.
+    fn finish(&mut self) -> Result<SinkStats>;
+}
+
+/// Totals reported by [`ResultSink::finish`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SinkStats {
+    /// Records written.
+    pub records: u64,
+    /// Payload bytes written (headers included).
+    pub bytes: u64,
+}
+
+/// A record that can render itself as one JSONL line (sans newline).
+pub trait JsonRecord {
+    fn push_json(&self, line: &mut String);
+}
+
+/// A record with a fixed-size little-endian binary encoding.
+pub trait BinRecord {
+    /// Encoded size in bytes (every record identical).
+    const RECORD_BYTES: u32;
+
+    fn encode(&self, out: &mut Vec<u8>);
+}
+
+/// Render one float as a JSON value: Rust's shortest-round-trip `{:?}`
+/// for finite values (a parser recovers the exact bits), `null` for the
+/// non-finite ones — `NaN`/`inf` tokens are not legal JSON, and a
+/// hand-crafted `.rgn` can carry any f32 payload. Kept width-specific
+/// so an `f32` prints its own shortest form, not its widened `f64` one.
+fn push_json_f64(line: &mut String, v: f64) {
+    use std::fmt::Write as _;
+    if v.is_finite() {
+        let _ = write!(line, "{v:?}");
+    } else {
+        line.push_str("null");
+    }
+}
+
+/// [`push_json_f64`], for `f32` records.
+fn push_json_f32(line: &mut String, v: f32) {
+    use std::fmt::Write as _;
+    if v.is_finite() {
+        let _ = write!(line, "{v:?}");
+    } else {
+        line.push_str("null");
+    }
+}
+
+/// Sum output: `(region id, sum)`.
+impl JsonRecord for (u64, f64) {
+    fn push_json(&self, line: &mut String) {
+        use std::fmt::Write as _;
+        let _ = write!(line, "{{\"region\":{},\"sum\":", self.0);
+        push_json_f64(line, self.1);
+        line.push('}');
+    }
+}
+
+impl BinRecord for (u64, f64) {
+    const RECORD_BYTES: u32 = 16;
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.0.to_le_bytes());
+        out.extend_from_slice(&self.1.to_le_bytes());
+    }
+}
+
+/// Taxi output: a tagged, swapped coordinate pair.
+impl JsonRecord for TaxiPair {
+    fn push_json(&self, line: &mut String) {
+        use std::fmt::Write as _;
+        let _ = write!(line, "{{\"tag\":{},\"x\":", self.tag);
+        push_json_f32(line, self.x);
+        line.push_str(",\"y\":");
+        push_json_f32(line, self.y);
+        line.push('}');
+    }
+}
+
+impl BinRecord for TaxiPair {
+    const RECORD_BYTES: u32 = 12;
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.tag.to_le_bytes());
+        out.extend_from_slice(&self.x.to_le_bytes());
+        out.extend_from_slice(&self.y.to_le_bytes());
+    }
+}
+
+/// Newline-delimited JSON over any writer.
+pub struct JsonlSink<W: Write> {
+    out: W,
+    /// Reusable line buffer.
+    line: String,
+    records: u64,
+    bytes: u64,
+}
+
+impl JsonlSink<BufWriter<File>> {
+    /// Create (truncate) a `.jsonl` file sink.
+    pub fn create(path: impl AsRef<Path>) -> Result<JsonlSink<BufWriter<File>>> {
+        let path = path.as_ref();
+        let file = File::create(path)
+            .with_context(|| format!("creating result file {}", path.display()))?;
+        Ok(JsonlSink::new(BufWriter::new(file)))
+    }
+}
+
+impl<W: Write> JsonlSink<W> {
+    pub fn new(out: W) -> JsonlSink<W> {
+        JsonlSink {
+            out,
+            line: String::new(),
+            records: 0,
+            bytes: 0,
+        }
+    }
+
+    /// Unwrap the underlying writer (after `finish`).
+    pub fn into_inner(self) -> W {
+        self.out
+    }
+}
+
+impl<W: Write, T: JsonRecord> ResultSink<T> for JsonlSink<W> {
+    fn write_batch(&mut self, outputs: &[T]) -> Result<()> {
+        for r in outputs {
+            self.line.clear();
+            r.push_json(&mut self.line);
+            self.line.push('\n');
+            self.out
+                .write_all(self.line.as_bytes())
+                .context("writing JSONL record")?;
+            self.records += 1;
+            self.bytes += self.line.len() as u64;
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<SinkStats> {
+        self.out.flush().context("flushing JSONL sink")?;
+        Ok(SinkStats {
+            records: self.records,
+            bytes: self.bytes,
+        })
+    }
+}
+
+/// Magic opening a binary result file.
+pub const RESULT_MAGIC: [u8; 8] = *b"RGNRES.1";
+
+/// Binary result-file format version.
+pub const RESULT_VERSION: u32 = 1;
+
+/// Fixed-size binary records over any writer. Layout:
+/// `magic "RGNRES.1" | version u32 | record_bytes u32 | records…`
+/// (header written lazily with the first batch, so `record_bytes` can
+/// come from the record type actually sunk).
+pub struct BinarySink<W: Write> {
+    out: W,
+    buf: Vec<u8>,
+    header_written: bool,
+    records: u64,
+    bytes: u64,
+}
+
+impl BinarySink<BufWriter<File>> {
+    /// Create (truncate) a binary result file sink.
+    pub fn create(path: impl AsRef<Path>) -> Result<BinarySink<BufWriter<File>>> {
+        let path = path.as_ref();
+        let file = File::create(path)
+            .with_context(|| format!("creating result file {}", path.display()))?;
+        Ok(BinarySink::new(BufWriter::new(file)))
+    }
+}
+
+impl<W: Write> BinarySink<W> {
+    pub fn new(out: W) -> BinarySink<W> {
+        BinarySink {
+            out,
+            buf: Vec::new(),
+            header_written: false,
+            records: 0,
+            bytes: 0,
+        }
+    }
+
+    /// Unwrap the underlying writer (after `finish`).
+    pub fn into_inner(self) -> W {
+        self.out
+    }
+
+    fn write_header(&mut self, record_bytes: u32) -> Result<()> {
+        if self.header_written {
+            return Ok(());
+        }
+        let mut head = [0u8; 16];
+        head[..8].copy_from_slice(&RESULT_MAGIC);
+        head[8..12].copy_from_slice(&RESULT_VERSION.to_le_bytes());
+        head[12..16].copy_from_slice(&record_bytes.to_le_bytes());
+        self.out.write_all(&head).context("writing binary result header")?;
+        self.header_written = true;
+        self.bytes += head.len() as u64;
+        Ok(())
+    }
+}
+
+impl<W: Write, T: BinRecord> ResultSink<T> for BinarySink<W> {
+    fn write_batch(&mut self, outputs: &[T]) -> Result<()> {
+        self.write_header(T::RECORD_BYTES)?;
+        self.buf.clear();
+        for r in outputs {
+            r.encode(&mut self.buf);
+        }
+        self.out
+            .write_all(&self.buf)
+            .context("writing binary result batch")?;
+        self.records += outputs.len() as u64;
+        self.bytes += self.buf.len() as u64;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<SinkStats> {
+        // an empty run still gets a well-formed header
+        self.write_header(T::RECORD_BYTES)?;
+        self.out.flush().context("flushing binary sink")?;
+        Ok(SinkStats {
+            records: self.records,
+            bytes: self.bytes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_renders_one_record_per_line() {
+        let mut sink = JsonlSink::new(Vec::new());
+        ResultSink::<(u64, f64)>::write_batch(&mut sink, &[(0, 1.5), (1, -0.25)]).unwrap();
+        ResultSink::<(u64, f64)>::write_batch(&mut sink, &[(2, 3.0)]).unwrap();
+        let stats = ResultSink::<(u64, f64)>::finish(&mut sink).unwrap();
+        assert_eq!(stats.records, 3);
+        let text = String::from_utf8(sink.out).unwrap();
+        assert_eq!(
+            text,
+            "{\"region\":0,\"sum\":1.5}\n{\"region\":1,\"sum\":-0.25}\n\
+             {\"region\":2,\"sum\":3.0}\n"
+        );
+        assert_eq!(stats.bytes as usize, text.len());
+    }
+
+    #[test]
+    fn jsonl_non_finite_floats_render_as_null() {
+        let mut sink = JsonlSink::new(Vec::new());
+        sink.write_batch(&[(0u64, f64::NAN), (1, f64::INFINITY)]).unwrap();
+        sink.write_batch(&[TaxiPair {
+            tag: 2,
+            x: f32::NEG_INFINITY,
+            y: 1.5,
+        }])
+        .unwrap();
+        let text = String::from_utf8(sink.out).unwrap();
+        assert_eq!(
+            text,
+            "{\"region\":0,\"sum\":null}\n{\"region\":1,\"sum\":null}\n\
+             {\"tag\":2,\"x\":null,\"y\":1.5}\n"
+        );
+    }
+
+    #[test]
+    fn jsonl_floats_round_trip_bits() {
+        let vals = [0.1f64, 1.0 / 3.0, f64::MIN_POSITIVE, -1e300];
+        let mut sink = JsonlSink::new(Vec::new());
+        let recs: Vec<(u64, f64)> = vals.iter().enumerate().map(|(i, &v)| (i as u64, v)).collect();
+        sink.write_batch(&recs).unwrap();
+        let text = String::from_utf8(sink.out).unwrap();
+        for (line, &want) in text.lines().zip(&vals) {
+            let num = line.split("\"sum\":").nth(1).unwrap().trim_end_matches('}');
+            let got: f64 = num.parse().unwrap();
+            assert_eq!(got.to_bits(), want.to_bits(), "{line}");
+        }
+    }
+
+    #[test]
+    fn binary_header_and_records_decode() {
+        let mut sink = BinarySink::new(Vec::new());
+        let pairs = [
+            TaxiPair {
+                tag: 3,
+                x: 1.5,
+                y: -2.25,
+            },
+            TaxiPair {
+                tag: 9,
+                x: 0.0,
+                y: 7.0,
+            },
+        ];
+        sink.write_batch(&pairs).unwrap();
+        let stats = ResultSink::<TaxiPair>::finish(&mut sink).unwrap();
+        assert_eq!(stats.records, 2);
+        let bytes = sink.out;
+        assert_eq!(&bytes[..8], b"RGNRES.1");
+        assert_eq!(
+            u32::from_le_bytes(bytes[12..16].try_into().unwrap()),
+            TaxiPair::RECORD_BYTES
+        );
+        assert_eq!(bytes.len(), 16 + 2 * TaxiPair::RECORD_BYTES as usize);
+        let tag = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+        let x = f32::from_le_bytes(bytes[20..24].try_into().unwrap());
+        assert_eq!((tag, x.to_bits()), (3, 1.5f32.to_bits()));
+    }
+
+    #[test]
+    fn empty_binary_run_still_writes_a_header() {
+        let mut sink = BinarySink::new(Vec::new());
+        let stats = ResultSink::<(u64, f64)>::finish(&mut sink).unwrap();
+        assert_eq!(stats.records, 0);
+        assert_eq!(sink.out.len(), 16);
+    }
+}

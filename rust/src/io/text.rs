@@ -1,0 +1,261 @@
+//! Line-delimited taxi text files as a [`RegionSource`].
+//!
+//! The taxi app's regions are *lines*: `T<tag>,{lat,lon},…,<filler>`
+//! records keyed by their numeric tag (see [`crate::workload::taxi`]).
+//! [`TextSource`] scans a text buffer incrementally and yields one
+//! [`TaxiLine`] region per record — start offset, length and the parsed
+//! tag key — without ever materializing a line index: index memory is
+//! bounded by the executor's ingest budget, not by how many lines the
+//! file holds.
+//!
+//! The raw text itself is loaded once into a shared `Arc<Vec<u8>>` and
+//! stays resident for the whole run: it models the paper's device-side
+//! input buffer, which every worker processor views (each emitted
+//! `TaxiLine` is a `(start, len)` window into it — a few words of index
+//! per in-flight region, whatever the line length).
+//!
+//! Malformed records — a line that does not open with the `T<digits>,`
+//! key — are **named errors** carrying the line number, stashed for
+//! [`RegionSource::close`] exactly like [`BlobFileSource`]'s I/O errors,
+//! so `run_stream*` aborts with the cause instead of silently skipping
+//! data.
+//!
+//! [`BlobFileSource`]: super::blob::BlobFileSource
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::workload::source::RegionSource;
+use crate::workload::taxi::TaxiLine;
+
+/// Streaming line scanner over a shared taxi text buffer.
+pub struct TextSource {
+    text: Arc<Vec<u8>>,
+    /// Next unscanned byte.
+    pos: usize,
+    /// 1-based line number of the next record (for error messages).
+    line_no: u64,
+    /// Where the bytes came from, for error messages.
+    label: String,
+    /// A failure ends the stream permanently (reported once).
+    failed: bool,
+    error: Option<anyhow::Error>,
+}
+
+impl TextSource {
+    /// Load a taxi text file and stream its records.
+    pub fn open(path: impl AsRef<Path>) -> Result<TextSource> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading taxi text file {}", path.display()))?;
+        Ok(TextSource::from_text(
+            Arc::new(bytes),
+            path.display().to_string(),
+        ))
+    }
+
+    /// Stream records out of an in-memory buffer (tests, generated
+    /// workloads). `label` names the source in errors.
+    pub fn from_text(text: Arc<Vec<u8>>, label: impl Into<String>) -> TextSource {
+        TextSource {
+            text,
+            pos: 0,
+            line_no: 1,
+            label: label.into(),
+            failed: false,
+            error: None,
+        }
+    }
+
+    /// The shared text buffer — hand this to
+    /// [`TaxiFactory`](crate::apps::taxi::TaxiFactory) /
+    /// [`TaxiApp::run_streaming`](crate::apps::taxi::TaxiApp::run_streaming)
+    /// so workers parse the same bytes the source indexes.
+    pub fn text(&self) -> Arc<Vec<u8>> {
+        self.text.clone()
+    }
+
+    /// Fallible pull (named errors surface here immediately; the
+    /// [`RegionSource`] impl stashes them for `close`).
+    pub fn try_next(&mut self) -> Result<Option<TaxiLine>> {
+        if self.failed || self.error.is_some() {
+            return Ok(None);
+        }
+        let bytes: &[u8] = &self.text;
+        if self.pos >= bytes.len() {
+            return Ok(None);
+        }
+        let start = self.pos;
+        let len = match bytes[start..].iter().position(|&b| b == b'\n') {
+            Some(n) => n,
+            None => bytes.len() - start, // final record without a newline
+        };
+        self.pos = start + len + 1;
+        let record = &bytes[start..start + len];
+        let Some(tag) = parse_record_key(record) else {
+            self.failed = true;
+            bail!(
+                "{}: malformed taxi record at line {}: expected a `T<digits>,` key, \
+                 got {:?}",
+                self.label,
+                self.line_no,
+                String::from_utf8_lossy(&record[..record.len().min(16)])
+            );
+        };
+        self.line_no += 1;
+        Ok(Some(TaxiLine {
+            text: self.text.clone(),
+            start,
+            len,
+            tag,
+        }))
+    }
+}
+
+/// Parse the `T<digits>,` record key, or `None` if the head is malformed
+/// (empty line, missing `T`, no digits, no separator).
+fn parse_record_key(record: &[u8]) -> Option<u32> {
+    let rest = record.strip_prefix(b"T")?;
+    let digits = rest.iter().take_while(|b| b.is_ascii_digit()).count();
+    if digits == 0 || rest.get(digits) != Some(&b',') {
+        return None;
+    }
+    std::str::from_utf8(&rest[..digits]).ok()?.parse().ok()
+}
+
+impl RegionSource for TextSource {
+    type Region = TaxiLine;
+
+    fn next_region(&mut self) -> Option<TaxiLine> {
+        match self.try_next() {
+            Ok(line) => line,
+            Err(e) => {
+                self.error = Some(e);
+                None
+            }
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        // lines average >1 byte, so remaining bytes is a safe upper bound
+        (0, Some(self.text.len().saturating_sub(self.pos)))
+    }
+
+    fn close(&mut self) -> Result<()> {
+        match self.error.take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Write a workload's text to `path`, repeated `reps` times (the paper
+/// scales the DIBS input by replicating the file) — the `regatta gen
+/// taxi` entry point. Returns total bytes written. `reps = 0` is a
+/// named error, not a silent clamp (same convention as the executor's
+/// zero-budget validation).
+pub fn write_taxi_file(path: impl AsRef<Path>, text: &[u8], reps: usize) -> Result<u64> {
+    use std::io::Write;
+    anyhow::ensure!(
+        reps >= 1,
+        "taxi file replication count = 0 (need at least one replica; \
+         pass --replicate >= 1)"
+    );
+    let path = path.as_ref();
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating taxi text file {}", path.display()))?;
+    let mut out = std::io::BufWriter::new(file);
+    for _ in 0..reps {
+        out.write_all(text)
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+    out.flush().with_context(|| format!("flushing {}", path.display()))?;
+    Ok((text.len() * reps) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::taxi::{generate, parse_tag, TaxiGenConfig};
+
+    fn drain(src: &mut TextSource) -> Result<Vec<TaxiLine>> {
+        let mut out = Vec::new();
+        while let Some(l) = src.try_next()? {
+            out.push(l);
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn scans_generated_workload_identically() {
+        let w = generate(
+            8,
+            TaxiGenConfig {
+                avg_pairs: 4,
+                avg_line_len: 80,
+            },
+            11,
+        );
+        let mut src = TextSource::from_text(w.text.clone(), "<mem>");
+        let lines = drain(&mut src).unwrap();
+        assert_eq!(lines.len(), w.lines.len());
+        for (got, want) in lines.iter().zip(&w.lines) {
+            assert_eq!(got.start, want.start);
+            assert_eq!(got.len, want.len);
+            assert_eq!(got.tag, want.tag);
+            assert_eq!(got.bytes(), want.bytes());
+            assert_eq!(parse_tag(got), got.tag);
+        }
+        assert!(src.try_next().unwrap().is_none(), "stays exhausted");
+    }
+
+    #[test]
+    fn final_record_without_newline_is_kept() {
+        let text = Arc::new(b"T0,{1.0,2.0},x\nT1,{3.0,4.0},y".to_vec());
+        let mut src = TextSource::from_text(text, "<mem>");
+        let lines = drain(&mut src).unwrap();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[1].tag, 1);
+        assert_eq!(lines[1].bytes(), b"T1,{3.0,4.0},y");
+    }
+
+    #[test]
+    fn malformed_record_is_a_named_error_with_line_number() {
+        for bad in ["X0,oops\n", "T,missing-digits\n", "Tabc,\n", "\n"] {
+            let text = Arc::new(format!("T0,{{1.0,2.0}},x\n{bad}").into_bytes());
+            let mut src = TextSource::from_text(text, "<mem>");
+            assert!(src.try_next().unwrap().is_some(), "first record parses");
+            let err = src.try_next().unwrap_err().to_string();
+            assert!(err.contains("line 2"), "{bad:?}: {err}");
+            assert!(err.contains("malformed taxi record"), "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn region_source_stashes_errors_for_close() {
+        let text = Arc::new(b"not-a-record\n".to_vec());
+        let mut src = TextSource::from_text(text, "<mem>");
+        assert!(src.next_region().is_none());
+        let err = src.close().unwrap_err();
+        assert!(err.to_string().contains("malformed"), "{err}");
+        assert!(src.close().is_ok(), "error is reported once");
+    }
+
+    #[test]
+    fn empty_text_is_an_empty_stream() {
+        let mut src = TextSource::from_text(Arc::new(Vec::new()), "<mem>");
+        assert!(drain(&mut src).unwrap().is_empty());
+        assert!(src.close().is_ok());
+    }
+
+    #[test]
+    fn zero_replication_is_a_named_error_not_a_clamp() {
+        // the ensure fires before the file is created — nothing to clean up
+        let path = std::env::temp_dir().join("regatta_test_zero_reps.txt");
+        let err = write_taxi_file(&path, b"T0,{1.0,2.0}\n", 0).unwrap_err();
+        assert!(err.to_string().contains("replication count = 0"), "{err}");
+        assert!(!path.exists());
+    }
+}

@@ -61,6 +61,7 @@ pub mod apps;
 pub mod bench;
 pub mod coordinator;
 pub mod exec;
+pub mod io;
 pub mod runtime;
 pub mod simd;
 pub mod util;
@@ -102,6 +103,9 @@ pub mod prelude {
         ClaimMode, ExecConfig, ExecReport, IngestPolicy, KernelSpawn, PipelineFactory,
         ShardOutput, ShardPlan, ShardPolicy, ShardWorker, ShardedRunner, WorkerPool,
         WorkerStats,
+    };
+    pub use crate::io::{
+        BinarySink, BlobFileSource, BlobWriter, JsonlSink, ResultSink, TextSource,
     };
     pub use crate::runtime::kernels::{Backend, KernelSet};
     pub use crate::runtime::{ArtifactStore, Engine, KernelName};

@@ -5,26 +5,37 @@
 //!                   [--mode enum|tagged] [--shape fused|two-stage]
 //!                   [--width W] [--backend xla|native] [--threshold T]
 //!                   [--workers K] [--stream] [--ingest-buffer R] [--stats]
+//!                   [--input data.rgn] [--output results.jsonl|.bin]
 //! regatta run taxi  [--lines N] [--replicate K] [--variant enum|hybrid|tagged]
 //!                   [--width W] [--backend xla|native]
 //!                   [--workers K] [--stream] [--ingest-buffer R] [--stats]
-//! regatta bench <fig6|fig7|fig8|scale|hotpath|ingest|penalty|width|lanectx>
+//!                   [--input trips.txt] [--output pairs.jsonl|.bin]
+//! regatta gen sum   --out data.rgn  [--items N] [--region-*] [--seed S]
+//! regatta gen taxi  --out trips.txt [--lines N] [--replicate K] [--seed S]
+//! regatta bench <fig6|fig7|fig8|scale|hotpath|ingest|io|penalty|width|lanectx>
 //! regatta info      # artifact manifest + platform
 //! regatta --config <file.toml>   # load a [run] config (see configs/)
 //! ```
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
 use regatta::apps::sum::{reference_sums, SumApp, SumConfig, SumFactory, SumMode, SumShape};
-use regatta::apps::taxi::{TaxiApp, TaxiConfig, TaxiFactory, TaxiVariant};
+use regatta::apps::taxi::{TaxiApp, TaxiConfig, TaxiFactory, TaxiPair, TaxiVariant};
 use regatta::bench::figures::{self, BackendSel, SweepConfig};
-use regatta::exec::{ExecConfig, KernelSpawn, ShardedRunner};
+use regatta::coordinator::enumerate::Blob;
+use regatta::exec::{ContainerPool, ExecConfig, KernelSpawn, ShardedRunner};
+use regatta::io::{
+    peek_rgn_footer, read_rgn_file, write_rgn_file, write_taxi_file, BinRecord, BinarySink,
+    BlobFileSource, JsonRecord, JsonlSink, ResultSink, TextSource,
+};
 use regatta::runtime::{ArtifactStore, Engine};
 use regatta::util::cli::Args;
 use regatta::util::config::Config;
 use regatta::util::stats::{fmt_count, fmt_duration};
 use regatta::workload::regions::{gen_blobs, GenBlobSource, RegionSpec};
-use regatta::workload::source::SliceSource;
+use regatta::workload::source::{RegionSource, SliceSource};
 use regatta::workload::taxi::{generate, replicate, TaxiGenConfig};
 
 const USAGE: &str = "\
@@ -37,11 +48,16 @@ USAGE:
                     [--policy greedy|deepest|rr]
                     [--workers K] [--shards-per-worker S]
                     [--stream] [--ingest-buffer R] [--stats] [--verify]
+                    [--input data.rgn] [--output results.jsonl|.bin]
   regatta run taxi  [--lines N] [--replicate K] [--variant enum|hybrid|tagged]
                     [--width W] [--backend xla|native]
                     [--policy greedy|deepest|rr]
                     [--workers K] [--shards-per-worker S]
                     [--stream] [--ingest-buffer R] [--stats]
+                    [--input trips.txt] [--output pairs.jsonl|.bin]
+  regatta gen sum   --out data.rgn  [--items N] [--region-size N | --region-max N |
+                    --region-skew N] [--seed S]
+  regatta gen taxi  --out trips.txt [--lines N] [--replicate K] [--seed S]
   regatta bench <fig6|fig7|fig8|scale|penalty|width|lanectx>
                     [--items N] [--width W] [--backend xla|native]
                     [--workers K1,K2,...] [--json FILE]
@@ -49,12 +65,22 @@ USAGE:
                     [--policy greedy|deepest|rr] [--json FILE] [--check BASELINE]
   regatta bench ingest  [--smoke] [--items N] [--width W] [--workers K1,K2,...]
                     [--ingest-buffer R] [--json FILE]
+  regatta bench io      [--smoke] [--items N] [--width W] [--workers K]
+                    [--buffers R1,R2,...] [--json FILE]
   regatta info
   regatta --config <file.toml>
 
   --stream runs the app through the v2 streaming executor: regions are
   ingested incrementally (at most R in flight, backpressure beyond) and
   executed by work-stealing workers; outputs stay in stream order.
+
+  --input streams regions out of a file written by `regatta gen` (sum:
+  .rgn containers, taxi: line-delimited text) and --output lands results
+  incrementally in stream order (.bin = fixed-record binary, anything
+  else JSONL); either flag implies --stream. For sum, input + output
+  memory is bounded by --ingest-buffer, not by file size; for taxi the
+  raw text stays resident (it models the shared device buffer) but the
+  line index and results are budget-bound.
 ";
 
 fn main() {
@@ -76,6 +102,7 @@ fn real_main() -> Result<()> {
             Some("taxi") => run_taxi(&args),
             other => bail!("unknown app {other:?} (use sum|taxi)"),
         },
+        Some("gen") => run_gen(&args),
         Some("bench") => run_bench(&args),
         Some("info") => info(),
         Some(other) => bail!("unknown subcommand {other:?}"),
@@ -98,7 +125,7 @@ fn config_to_args(path: &str) -> Result<Args> {
     for key in [
         "items", "region-size", "region-max", "region-skew", "mode", "shape", "width",
         "backend", "threshold", "workers", "shards-per-worker", "ingest-buffer", "lines",
-        "replicate", "variant", "policy",
+        "replicate", "variant", "policy", "input", "output",
     ] {
         if let Some(v) = cfg.get("run", &key.replace('-', "_")) {
             let vs = match v {
@@ -129,9 +156,52 @@ fn policy(args: &Args) -> Result<regatta::prelude::Policy> {
 }
 
 fn exec_config(args: &Args, workers: usize) -> Result<ExecConfig> {
-    Ok(ExecConfig::new(workers)
+    let cfg = ExecConfig::new(workers)
         .with_shards_per_worker(args.get_or("shards-per-worker", 1)?)
-        .streaming(args.get_or("ingest-buffer", 1024)?))
+        .streaming(args.get_or("ingest-buffer", 1024)?);
+    // names zero and absurd (unit-mistake) budgets, mentioning the flag
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// The region-size spec shared by `run sum`, `gen sum` and the benches.
+fn region_spec(args: &Args) -> Result<RegionSpec> {
+    Ok(if let Some(max) = args.get::<usize>("region-max")? {
+        RegionSpec::Uniform { max }
+    } else if let Some(max) = args.get::<usize>("region-skew")? {
+        RegionSpec::Skewed { max }
+    } else {
+        RegionSpec::Fixed {
+            size: args.get_or("region-size", 128)?,
+        }
+    })
+}
+
+/// Pick the result encoding from the output path: `.bin` gets the
+/// fixed-record binary sink, everything else JSONL.
+fn file_sink<T>(path: &str) -> Result<Box<dyn ResultSink<T>>>
+where
+    T: JsonRecord + BinRecord + 'static,
+{
+    Ok(if path.ends_with(".bin") {
+        Box::new(BinarySink::create(path)?)
+    } else {
+        Box::new(JsonlSink::create(path)?)
+    })
+}
+
+/// Refuse `--output` aliasing `--input`: creating the sink truncates the
+/// output file, which would destroy the input mid-read.
+fn ensure_distinct_io(input: &str, output: &str) -> Result<()> {
+    let resolve = |p: &str| {
+        std::fs::canonicalize(p).unwrap_or_else(|_| std::path::PathBuf::from(p))
+    };
+    anyhow::ensure!(
+        resolve(input) != resolve(output),
+        "--output {output} is the same file as --input {input}: refusing to \
+         truncate the input while reading it"
+    );
+    Ok(())
 }
 
 fn print_exec_stats<T>(report: &regatta::exec::ExecReport<T>) {
@@ -145,7 +215,6 @@ fn print_exec_stats<T>(report: &regatta::exec::ExecReport<T>) {
 
 fn run_sum(args: &Args) -> Result<()> {
     let width: usize = args.get_or("width", 128)?;
-    let items: usize = args.get_or("items", 1 << 20)?;
     let threshold: f32 = args.get_or("threshold", 0.0)?;
     let workers: usize = args.get_or("workers", 1)?;
     anyhow::ensure!(workers >= 1, "--workers must be >= 1 (got {workers})");
@@ -159,19 +228,24 @@ fn run_sum(args: &Args) -> Result<()> {
         "two-stage" => SumShape::TwoStage,
         other => bail!("unknown shape {other:?}"),
     };
-    let spec = if let Some(max) = args.get::<usize>("region-max")? {
-        RegionSpec::Uniform { max }
-    } else if let Some(max) = args.get::<usize>("region-skew")? {
-        RegionSpec::Skewed { max }
-    } else {
-        RegionSpec::Fixed {
-            size: args.get_or("region-size", 128)?,
-        }
-    };
+    let spec = region_spec(args)?;
     let sel = backend(args)?;
     let pol = policy(args)?;
     let seed = args.get_or("seed", 0xF16u64)?;
-    let streaming = args.flag("stream");
+    let input = args.opt("input").map(str::to_string);
+    let output = args.opt("output").map(str::to_string);
+    // file I/O always runs through the streaming executor — bounded
+    // memory is its point
+    let streaming = args.flag("stream") || input.is_some() || output.is_some();
+    anyhow::ensure!(
+        !(args.flag("verify") && output.is_some()),
+        "--verify compares collected outputs and cannot be combined with --output"
+    );
+    let items: usize = match &input {
+        // totals come from the file's validated footer, not from flags
+        Some(path) => peek_rgn_footer(path)?.items as usize,
+        None => args.get_or("items", 1 << 20)?,
+    };
     // the streaming path never materializes the blob stream — that is
     // its point; --verify regenerates it separately below
     let blobs = if streaming {
@@ -188,25 +262,58 @@ fn run_sum(args: &Args) -> Result<()> {
         ..Default::default()
     };
 
-    let regions_label = if streaming {
-        "streamed regions".to_string()
-    } else {
-        format!("{} regions", blobs.len())
+    let source_label = match &input {
+        Some(path) => format!("file {path}"),
+        None if streaming => format!("streamed regions ({spec:?})"),
+        None => format!("{} regions ({spec:?})", blobs.len()),
     };
     println!(
-        "sum app: {items} items, {regions_label} ({spec:?}), width {width}, \
+        "sum app: {items} items, {source_label}, width {width}, \
          {mode:?}/{shape:?}, backend {sel:?}, policy {}, {workers} worker(s){}",
         pol.label(),
         if streaming { ", streaming ingest" } else { "" }
     );
 
     let (outputs, metrics, elapsed) = if streaming {
-        // L3.5 v2: regions are generated lazily on the ingest thread,
-        // sharded on the fly under the --ingest-buffer budget, and run
-        // by work-stealing workers; outputs stay in stream order
-        let factory = SumFactory::new(cfg, KernelSpawn::from(sel));
+        // L3.5 v2: regions arrive incrementally — generated lazily or
+        // read from a .rgn container — sharded on the fly under the
+        // --ingest-buffer budget and run by work-stealing workers;
+        // element containers circulate through a shared pool (source
+        // takes, workers return), so steady-state driver allocations
+        // are governed by the budget, not stream length
+        let pool = Arc::new(ContainerPool::new());
+        let factory = SumFactory::new(cfg, KernelSpawn::from(sel)).with_elem_pool(pool.clone());
         let runner = ShardedRunner::new(exec_config(args, workers)?);
-        let report = runner.run_stream(&factory, GenBlobSource::new(items, spec, seed))?;
+        let source: Box<dyn RegionSource<Region = Blob>> = match &input {
+            Some(path) => Box::new(BlobFileSource::open(path)?.with_pool(pool.clone())),
+            None => Box::new(GenBlobSource::new(items, spec, seed).with_pool(pool)),
+        };
+        if let Some(out_path) = &output {
+            anyhow::ensure!(
+                mode == SumMode::Enumerated,
+                "--output needs stream-order results; tagged-mode outputs are \
+                 folded only after the whole run (drop --output or use --mode enum)"
+            );
+            if let Some(in_path) = &input {
+                ensure_distinct_io(in_path, out_path)?;
+            }
+            let mut sink = file_sink::<(u64, f64)>(out_path)?;
+            let report = runner.run_stream_into(&factory, source, &mut *sink)?;
+            let stats = sink.finish()?;
+            if args.flag("stats") {
+                print_exec_stats(&report);
+                print!("{}", report.metrics.table());
+            }
+            println!(
+                "-> {} region sums streamed to {out_path} ({} bytes) in {} ({} items/s)",
+                stats.records,
+                stats.bytes,
+                fmt_duration(report.elapsed),
+                fmt_count(items as f64 / report.elapsed)
+            );
+            return Ok(());
+        }
+        let report = runner.run_stream(&factory, source)?;
         if args.flag("stats") {
             print_exec_stats(&report);
         }
@@ -237,7 +344,9 @@ fn run_sum(args: &Args) -> Result<()> {
         fmt_count(items as f64 / elapsed)
     );
     if args.flag("verify") {
-        let blobs = if streaming {
+        let blobs = if let Some(path) = &input {
+            read_rgn_file(path)? // small-input materialization for the oracle
+        } else if streaming {
             gen_blobs(items, spec, seed)
         } else {
             blobs
@@ -274,7 +383,11 @@ fn run_taxi(args: &Args) -> Result<()> {
     let pol = policy(args)?;
     let workers: usize = args.get_or("workers", 1)?;
     anyhow::ensure!(workers >= 1, "--workers must be >= 1 (got {workers})");
-    let streaming = args.flag("stream");
+    let output = args.opt("output").map(str::to_string);
+    if let Some(path) = args.opt("input").map(str::to_string) {
+        return run_taxi_file(args, &path, output.as_deref(), variant, width, pol, workers);
+    }
+    let streaming = args.flag("stream") || output.is_some();
     let base = generate(lines, TaxiGenConfig::default(), args.get_or("seed", 0xF16u64)?);
     let w = if reps > 1 { replicate(&base, reps) } else { base };
     let chars: usize = w.lines.iter().map(|l| l.len).sum();
@@ -299,6 +412,29 @@ fn run_taxi(args: &Args) -> Result<()> {
         // parsed by work-stealing workers over the shared text
         let factory = TaxiFactory::new(cfg, KernelSpawn::from(sel), w.text.clone());
         let runner = ShardedRunner::new(exec_config(args, workers)?);
+        if let Some(out_path) = &output {
+            let mut sink = file_sink::<TaxiPair>(out_path)?;
+            let report =
+                runner.run_stream_into(&factory, SliceSource::new(&w.lines), &mut *sink)?;
+            let stats = sink.finish()?;
+            if args.flag("stats") {
+                print_exec_stats(&report);
+                print!("{}", report.metrics.table());
+            }
+            anyhow::ensure!(
+                stats.records as usize == w.total_pairs,
+                "streamed {} of {} pairs",
+                stats.records,
+                w.total_pairs
+            );
+            println!(
+                "-> {} pairs streamed to {out_path} ({} bytes) in {}",
+                stats.records,
+                stats.bytes,
+                fmt_duration(report.elapsed)
+            );
+            return Ok(());
+        }
         let report = runner.run_stream(&factory, SliceSource::new(&w.lines))?;
         if args.flag("stats") {
             print_exec_stats(&report);
@@ -337,15 +473,114 @@ fn run_taxi(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `run taxi --input`: stream records out of a line-delimited taxi file
+/// (no generated ground truth — the text is whatever the file holds).
+fn run_taxi_file(
+    args: &Args,
+    path: &str,
+    output: Option<&str>,
+    variant: TaxiVariant,
+    width: usize,
+    pol: regatta::prelude::Policy,
+    workers: usize,
+) -> Result<()> {
+    let sel = backend(args)?;
+    let source = TextSource::open(path)?;
+    let text = source.text();
+    println!(
+        "taxi app: input {path} ({} chars), width {width}, {} variant, \
+         backend {sel:?}, policy {}, {workers} worker(s), streaming ingest",
+        fmt_count(text.len() as f64),
+        variant.label(),
+        pol.label()
+    );
+    let cfg = TaxiConfig {
+        width,
+        variant,
+        policy: pol,
+        ..Default::default()
+    };
+    let factory = TaxiFactory::new(cfg, KernelSpawn::from(sel), text.clone());
+    let runner = ShardedRunner::new(exec_config(args, workers)?);
+    if let Some(out_path) = output {
+        ensure_distinct_io(path, out_path)?;
+        let mut sink = file_sink::<TaxiPair>(out_path)?;
+        let report = runner.run_stream_into(&factory, source, &mut *sink)?;
+        let stats = sink.finish()?;
+        if args.flag("stats") {
+            print_exec_stats(&report);
+            print!("{}", report.metrics.table());
+        }
+        println!(
+            "-> {} pairs streamed to {out_path} ({} bytes) in {}",
+            stats.records,
+            stats.bytes,
+            fmt_duration(report.elapsed)
+        );
+    } else {
+        let report = runner.run_stream(&factory, source)?;
+        if args.flag("stats") {
+            print_exec_stats(&report);
+            print!("{}", report.metrics.table());
+        }
+        println!(
+            "-> {} pairs parsed in {} ({} chars/s)",
+            report.outputs.len(),
+            fmt_duration(report.elapsed),
+            fmt_count(text.len() as f64 / report.elapsed)
+        );
+    }
+    Ok(())
+}
+
+/// `regatta gen`: materialize a synthetic stream to disk so later runs
+/// (and other tools) can go file-backed.
+fn run_gen(args: &Args) -> Result<()> {
+    let out = args
+        .opt("out")
+        .or_else(|| args.opt("output"))
+        .map(str::to_string)
+        .context("gen needs --out FILE")?;
+    let seed = args.get_or("seed", 0xF16u64)?;
+    match args.positional.get(1).map(String::as_str) {
+        Some("sum") => {
+            let items: usize = args.get_or("items", 1 << 20)?;
+            let spec = region_spec(args)?;
+            let stats = write_rgn_file(&out, GenBlobSource::new(items, spec, seed))?;
+            println!(
+                "wrote {out}: {} region(s), {} item(s), {} bytes ({spec:?}, seed {seed:#x})",
+                stats.regions, stats.items, stats.bytes
+            );
+        }
+        Some("taxi") => {
+            let lines: usize = args.get_or("lines", 64)?;
+            let reps: usize = args.get_or("replicate", 1)?;
+            let w = generate(lines, TaxiGenConfig::default(), seed);
+            let bytes = write_taxi_file(&out, &w.text, reps)?;
+            println!(
+                "wrote {out}: {} line(s) x {reps} replica(s), {} pair(s)/replica, \
+                 {bytes} bytes (seed {seed:#x})",
+                w.lines.len(),
+                w.total_pairs
+            );
+        }
+        other => bail!("unknown gen target {other:?} (use sum|taxi)"),
+    }
+    Ok(())
+}
+
 fn run_bench(args: &Args) -> Result<()> {
     let which = args.positional.get(1).context(
-        "bench target required: fig6|fig7|fig8|scale|hotpath|ingest|penalty|width|lanectx",
+        "bench target required: fig6|fig7|fig8|scale|hotpath|ingest|io|penalty|width|lanectx",
     )?;
     if which == "hotpath" {
         return run_bench_hotpath(args);
     }
     if which == "ingest" {
         return run_bench_ingest(args);
+    }
+    if which == "io" {
+        return run_bench_io(args);
     }
     let mut cfg = SweepConfig {
         backend: backend(args)?,
@@ -435,6 +670,35 @@ fn run_bench_ingest(args: &Args) -> Result<()> {
     println!("wrote {path}");
     if let Some(speedup) = ingest::skew_speedup(&report) {
         println!("skewed stream, stealing vs cursor at max workers: {speedup:.2}x");
+    }
+    Ok(())
+}
+
+/// `bench io`: file-backed vs in-memory streaming ingest throughput
+/// across buffer budgets, with a JSON artifact (see
+/// `rust/src/bench/io_bench.rs`).
+fn run_bench_io(args: &Args) -> Result<()> {
+    use regatta::bench::io_bench;
+    let mut cfg = if args.flag("smoke") {
+        io_bench::IoConfig::smoke()
+    } else {
+        io_bench::IoConfig::default()
+    };
+    cfg.width = args.get_or("width", cfg.width)?;
+    cfg.items = args.get_or("items", cfg.items)?;
+    cfg.workers = args.get_or("workers", cfg.workers)?;
+    cfg.budgets = args.list_or("buffers", &cfg.budgets)?;
+    anyhow::ensure!(
+        cfg.budgets.iter().all(|&b| b >= 1),
+        "--buffers entries must be >= 1 (the streaming budget admits at least one region)"
+    );
+    cfg.seed = args.get_or("seed", cfg.seed)?;
+    let report = io_bench::run(&cfg)?;
+    let path = args.str_or("json", "BENCH_io.json");
+    std::fs::write(&path, io_bench::to_json(&report)).with_context(|| format!("writing {path}"))?;
+    println!("wrote {path}");
+    if let Some(r) = io_bench::file_vs_mem_ratio(&report) {
+        println!("file-backed vs lazy-generator ingest throughput at max budget: {r:.2}x");
     }
     Ok(())
 }

@@ -59,6 +59,14 @@ impl RegionSpec {
 /// same order) one region at a time, so the streaming executor can run
 /// arbitrarily long synthetic streams without materializing them —
 /// memory is set by the executor's ingest budget, not by `total_items`.
+///
+/// With [`GenBlobSource::with_pool`] the generator draws its element
+/// containers from a shared
+/// [`ContainerPool`](crate::exec::ingest::ContainerPool) that streaming
+/// workers refill after each shard (`SumFactory::with_elem_pool`), giving the
+/// synthetic source the same zero-steady-state-allocation contract as
+/// the file-backed [`BlobFileSource`](crate::io::BlobFileSource): the
+/// generated *values* are bit-identical with or without a pool.
 pub struct GenBlobSource {
     rng: Prng,
     spec: RegionSpec,
@@ -66,6 +74,7 @@ pub struct GenBlobSource {
     produced: usize,
     next_id: u64,
     done: bool,
+    pool: Option<std::sync::Arc<crate::exec::ingest::ContainerPool<f32>>>,
 }
 
 impl GenBlobSource {
@@ -77,7 +86,18 @@ impl GenBlobSource {
             produced: 0,
             next_id: 0,
             done: false,
+            pool: None,
         }
+    }
+
+    /// Draw element containers from `pool` instead of allocating
+    /// (recycled back by a pool-aware factory on the worker side).
+    pub fn with_pool(
+        mut self,
+        pool: std::sync::Arc<crate::exec::ingest::ContainerPool<f32>>,
+    ) -> GenBlobSource {
+        self.pool = Some(pool);
+        self
     }
 
     /// Regions generated so far.
@@ -99,7 +119,12 @@ impl RegionSource for GenBlobSource {
             .min(self.total_items - self.produced);
         // Uniform/Skewed specs may draw 0: an empty region, which is
         // legal and exercises the empty-parent path — keep it.
-        let elems: Vec<f32> = (0..size).map(|_| self.rng.range_f32(-1.0, 1.0)).collect();
+        let mut elems = self
+            .pool
+            .as_ref()
+            .and_then(|p| p.take())
+            .unwrap_or_default();
+        elems.extend((0..size).map(|_| self.rng.range_f32(-1.0, 1.0)));
         let blob = Blob::from_vec(self.next_id, elems);
         self.next_id += 1;
         self.produced += size;
@@ -235,6 +260,30 @@ mod tests {
             assert_eq!(got, want, "{spec:?}");
             assert_eq!(src.regions_produced() as usize, want.len());
         }
+    }
+
+    #[test]
+    fn pooled_gen_blob_source_is_bit_identical_and_reuses_containers() {
+        use crate::exec::ingest::ContainerPool;
+        use std::sync::Arc;
+        let spec = RegionSpec::Fixed { size: 32 };
+        let want = gen_blobs(200, spec, 13);
+        let pool = Arc::new(ContainerPool::new());
+        let seeded: Vec<f32> = Vec::with_capacity(64);
+        let seeded_ptr = seeded.as_ptr();
+        pool.put(seeded);
+        let mut src = GenBlobSource::new(200, spec, 13).with_pool(pool.clone());
+        let first = src.next_region().unwrap();
+        assert_eq!(first.elems.as_ptr(), seeded_ptr, "container came from the pool");
+        let mut got = vec![first];
+        while let Some(b) = src.next_region() {
+            // recycle as a worker would: values must not depend on it
+            if let Some(prev) = got.last() {
+                assert_eq!(prev.id + 1, b.id);
+            }
+            got.push(b);
+        }
+        assert_eq!(got, want, "pooled containers change nothing about the values");
     }
 
     #[test]

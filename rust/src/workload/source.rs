@@ -21,6 +21,11 @@
 //! * [`GenBlobSource`](crate::workload::regions::GenBlobSource) — the
 //!   lazy twin of [`gen_blobs`](crate::workload::regions::gen_blobs),
 //!   producing the identical blob sequence without materializing it.
+//! * [`BlobFileSource`](crate::io::BlobFileSource) /
+//!   [`TextSource`](crate::io::TextSource) — out-of-core readers over
+//!   `.rgn` containers and line-delimited taxi text (`regatta::io`).
+
+use anyhow::Result;
 
 /// A stream of regions, pulled one region at a time.
 pub trait RegionSource {
@@ -35,6 +40,37 @@ pub trait RegionSource {
     /// [`Iterator::size_hint`].
     fn size_hint(&self) -> (usize, Option<usize>) {
         (0, None)
+    }
+
+    /// Surface any deferred failure once the stream has ended.
+    ///
+    /// [`RegionSource::next_region`] returns a bare `Option`, so a
+    /// fallible source (file reader, decoder, network) cannot report
+    /// *why* it ended: it stashes the first error, returns `None`, and
+    /// the executor calls `close` after draining — turning a silently
+    /// short stream into a named `run_stream*` failure. Infallible
+    /// sources keep the default `Ok(())`.
+    fn close(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Boxed sources forward, so callers that pick a source at runtime
+/// (`--input` file vs. generator) can hand the executor a
+/// `Box<dyn RegionSource<Region = T>>`.
+impl<S: RegionSource + ?Sized> RegionSource for Box<S> {
+    type Region = S::Region;
+
+    fn next_region(&mut self) -> Option<S::Region> {
+        (**self).next_region()
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (**self).size_hint()
+    }
+
+    fn close(&mut self) -> Result<()> {
+        (**self).close()
     }
 }
 

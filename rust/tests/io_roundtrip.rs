@@ -1,0 +1,451 @@
+//! Out-of-core round-trip equivalence: `.rgn` files, taxi text files and
+//! streaming result sinks against the in-memory oracles.
+//!
+//! The io subsystem's contract (see `regatta::io`):
+//!
+//! 1. **Round-trip bit-identity** — `BlobWriter(GenBlobSource)` →
+//!    `BlobFileSource` reproduces the generator's blob sequence exactly,
+//!    and a file-backed streaming run is bit-identical to the
+//!    materialized single-threaded run for workers 1–8, across uniform
+//!    and skewed region mixes (same for taxi text files).
+//! 2. **Named failures** — corrupted frames, truncated containers and
+//!    malformed text records surface as named `run_stream*` errors via
+//!    `RegionSource::close`, never as panics or silently short output.
+//! 3. **Stream-order sinks** — `run_streaming_into` + JSONL/binary sink
+//!    produces byte-identical files to rendering the materialized run's
+//!    outputs, for both apps.
+//!
+//! Plus the satellite validations: `--ingest-buffer 0` (and absurd
+//! budgets) are named `ExecConfig::validate` errors through every app
+//! entry point.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use regatta::apps::sum::{SumApp, SumConfig, SumMode, SumShape};
+use regatta::apps::taxi::{TaxiApp, TaxiConfig, TaxiPair, TaxiVariant};
+use regatta::exec::ExecConfig;
+use regatta::io::{
+    peek_rgn_footer, read_rgn_file, write_rgn_file, write_taxi_file, BinarySink,
+    BlobFileSource, JsonRecord, JsonlSink, ResultSink, TextSource,
+};
+use regatta::prelude::Policy;
+use regatta::runtime::kernels::KernelSet;
+use regatta::workload::regions::{gen_blobs, GenBlobSource, RegionSpec};
+use regatta::workload::taxi::{generate, TaxiGenConfig};
+
+const WIDTH: usize = 8;
+
+/// Unique self-deleting temp file per test.
+struct TempFile(PathBuf);
+
+impl TempFile {
+    fn new(name: &str) -> TempFile {
+        TempFile(std::env::temp_dir().join(format!(
+            "regatta_test_{}_{name}",
+            std::process::id()
+        )))
+    }
+}
+
+impl Drop for TempFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+fn sum_app(mode: SumMode, shape: SumShape) -> SumApp {
+    SumApp::new(
+        SumConfig {
+            width: WIDTH,
+            mode,
+            shape,
+            data_cap: 256,
+            signal_cap: 64,
+            ..Default::default()
+        },
+        Rc::new(KernelSet::native(WIDTH)),
+    )
+}
+
+fn taxi_app(variant: TaxiVariant) -> TaxiApp {
+    TaxiApp::new(
+        TaxiConfig {
+            width: WIDTH,
+            variant,
+            data_cap: 512,
+            signal_cap: 128,
+            policy: Policy::GreedyOccupancy,
+        },
+        Rc::new(KernelSet::native(WIDTH)),
+    )
+}
+
+fn assert_sums_bitwise(got: &[(u64, f64)], want: &[(u64, f64)], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: output count");
+    for (i, ((gi, gv), (wi, wv))) in got.iter().zip(want).enumerate() {
+        assert_eq!(gi, wi, "{ctx}: region id at {i}");
+        assert_eq!(gv.to_bits(), wv.to_bits(), "{ctx}: region {gi}");
+    }
+}
+
+// ---- .rgn round trips ----------------------------------------------
+
+#[test]
+fn rgn_file_reproduces_the_generator_exactly() {
+    for (name, spec, seed) in [
+        ("uniform", RegionSpec::Uniform { max: 40 }, 5u64),
+        ("skewed", RegionSpec::Skewed { max: 400 }, 6),
+    ] {
+        let want = gen_blobs(3000, spec, seed);
+        let tmp = TempFile::new(&format!("roundtrip_{name}.rgn"));
+        let stats = write_rgn_file(&tmp.0, GenBlobSource::new(3000, spec, seed)).unwrap();
+        assert_eq!(stats.regions as usize, want.len(), "{name}");
+        assert_eq!(stats.items, 3000, "{name}");
+        let footer = peek_rgn_footer(&tmp.0).unwrap();
+        assert_eq!(footer.regions as usize, want.len(), "{name}");
+        assert_eq!(footer.items, 3000, "{name}");
+        let got = read_rgn_file(&tmp.0).unwrap();
+        assert_eq!(got, want, "{name}: bit-identical blob sequence");
+    }
+}
+
+#[test]
+fn file_backed_sum_is_bitwise_identical_for_workers_1_to_8() {
+    for (name, spec, seed) in [
+        ("uniform", RegionSpec::Uniform { max: 40 }, 2u64),
+        ("skewed", RegionSpec::Skewed { max: 300 }, 3),
+    ] {
+        let blobs = gen_blobs(2000, spec, seed);
+        let tmp = TempFile::new(&format!("exec_{name}.rgn"));
+        write_rgn_file(&tmp.0, GenBlobSource::new(2000, spec, seed)).unwrap();
+        let app = sum_app(SumMode::Enumerated, SumShape::Fused);
+        let single = app.run(&blobs).unwrap();
+        for workers in 1..=8 {
+            // tight budget so backpressure engages on the file reader
+            let exec = ExecConfig::new(workers).streaming(32);
+            let streamed = app
+                .run_streaming(BlobFileSource::open(&tmp.0).unwrap(), &exec)
+                .unwrap();
+            assert_sums_bitwise(
+                &streamed.outputs,
+                &single.outputs,
+                &format!("{name} workers {workers}"),
+            );
+            assert_eq!(
+                streamed.invocations, single.invocations,
+                "{name} workers {workers}: kernel invocations"
+            );
+        }
+    }
+}
+
+#[test]
+fn file_backed_two_stage_also_round_trips() {
+    let blobs = gen_blobs(800, RegionSpec::Uniform { max: 24 }, 9);
+    let tmp = TempFile::new("two_stage.rgn");
+    write_rgn_file(&tmp.0, GenBlobSource::new(800, RegionSpec::Uniform { max: 24 }, 9)).unwrap();
+    let app = sum_app(SumMode::Enumerated, SumShape::TwoStage);
+    let single = app.run(&blobs).unwrap();
+    let exec = ExecConfig::new(3).streaming(16);
+    let streamed = app
+        .run_streaming(BlobFileSource::open(&tmp.0).unwrap(), &exec)
+        .unwrap();
+    assert_sums_bitwise(&streamed.outputs, &single.outputs, "two-stage");
+}
+
+// ---- named failures through the executor ---------------------------
+
+#[test]
+fn corrupted_frame_aborts_the_streaming_run_with_a_named_error() {
+    let tmp = TempFile::new("corrupt.rgn");
+    write_rgn_file(&tmp.0, GenBlobSource::new(500, RegionSpec::Fixed { size: 16 }, 4)).unwrap();
+    let mut bytes = std::fs::read(&tmp.0).unwrap();
+    // header 16 | frame0: len@16 checksum@20 payload@28.. — byte 40 sits
+    // inside frame 0's payload, so the checksum must catch the flip
+    bytes[40] ^= 0x01;
+    std::fs::write(&tmp.0, &bytes).unwrap();
+    let app = sum_app(SumMode::Enumerated, SumShape::Fused);
+    let exec = ExecConfig::new(3).streaming(8);
+    let err = app
+        .run_streaming(BlobFileSource::open(&tmp.0).unwrap(), &exec)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("corrupted frame"), "{msg}");
+}
+
+#[test]
+fn truncated_file_aborts_the_streaming_run_with_a_named_error() {
+    let tmp = TempFile::new("truncated.rgn");
+    write_rgn_file(&tmp.0, GenBlobSource::new(500, RegionSpec::Fixed { size: 16 }, 4)).unwrap();
+    let bytes = std::fs::read(&tmp.0).unwrap();
+    std::fs::write(&tmp.0, &bytes[..bytes.len() * 2 / 3]).unwrap();
+    // the footer peek already names the truncation…
+    let err = peek_rgn_footer(&tmp.0).unwrap_err();
+    assert!(format!("{err:#}").contains("missing .rgn footer"), "{err:#}");
+    // …and so does the streaming run itself
+    let app = sum_app(SumMode::Enumerated, SumShape::Fused);
+    let exec = ExecConfig::new(2).streaming(8);
+    let err = app
+        .run_streaming(BlobFileSource::open(&tmp.0).unwrap(), &exec)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("truncated"), "{msg}");
+}
+
+#[test]
+fn peek_footer_names_wrong_format_files() {
+    let tmp = TempFile::new("not_rgn.bin");
+    std::fs::write(&tmp.0, vec![0u8; 128]).unwrap();
+    let err = peek_rgn_footer(&tmp.0).unwrap_err();
+    assert!(err.to_string().contains("not a .rgn container"), "{err}");
+}
+
+#[test]
+fn malformed_taxi_text_aborts_the_streaming_run_with_a_named_error() {
+    let tmp = TempFile::new("malformed.txt");
+    std::fs::write(&tmp.0, b"T0,{1.0,2.0},ok\nnot-a-record\n").unwrap();
+    let app = taxi_app(TaxiVariant::Hybrid);
+    let source = TextSource::open(&tmp.0).unwrap();
+    let text = source.text();
+    let exec = ExecConfig::new(2).streaming(8);
+    let err = app.run_streaming(text, source, &exec).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("malformed taxi record"), "{msg}");
+    assert!(msg.contains("line 2"), "{msg}");
+}
+
+// ---- taxi text round trip ------------------------------------------
+
+#[test]
+fn file_backed_taxi_is_bitwise_identical_for_workers_1_to_8() {
+    let w = generate(
+        24,
+        TaxiGenConfig {
+            avg_pairs: 6,
+            avg_line_len: 160,
+        },
+        77,
+    );
+    let tmp = TempFile::new("taxi.txt");
+    write_taxi_file(&tmp.0, &w.text, 1).unwrap();
+    for variant in TaxiVariant::all() {
+        let app = taxi_app(variant);
+        let single = app.run(&w).unwrap();
+        assert_eq!(single.pairs.len(), w.total_pairs, "{variant:?}: sanity");
+        for workers in [1usize, 3, 8] {
+            let source = TextSource::open(&tmp.0).unwrap();
+            let text = source.text();
+            let exec = ExecConfig::new(workers).streaming(8);
+            let streamed = app.run_streaming(text, source, &exec).unwrap();
+            assert_eq!(streamed.pairs.len(), single.pairs.len());
+            for (i, (g, e)) in streamed.pairs.iter().zip(&single.pairs).enumerate() {
+                assert_eq!(g.tag, e.tag, "{variant:?} w{workers}: tag at {i}");
+                assert_eq!(g.x.to_bits(), e.x.to_bits(), "{variant:?} w{workers} x {i}");
+                assert_eq!(g.y.to_bits(), e.y.to_bits(), "{variant:?} w{workers} y {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn replicated_taxi_file_matches_replicated_workload() {
+    let base = generate(
+        6,
+        TaxiGenConfig {
+            avg_pairs: 4,
+            avg_line_len: 100,
+        },
+        21,
+    );
+    let replicated = regatta::workload::taxi::replicate(&base, 3);
+    let tmp = TempFile::new("taxi_x3.txt");
+    write_taxi_file(&tmp.0, &base.text, 3).unwrap();
+    let app = taxi_app(TaxiVariant::Hybrid);
+    let single = app.run(&replicated).unwrap();
+    let source = TextSource::open(&tmp.0).unwrap();
+    let text = source.text();
+    let exec = ExecConfig::new(2).streaming(8);
+    let streamed = app.run_streaming(text, source, &exec).unwrap();
+    assert_eq!(streamed.pairs.len(), single.pairs.len());
+    for (g, e) in streamed.pairs.iter().zip(&single.pairs) {
+        assert_eq!((g.tag, g.x.to_bits(), g.y.to_bits()), (e.tag, e.x.to_bits(), e.y.to_bits()));
+    }
+}
+
+// ---- streaming sinks -----------------------------------------------
+
+fn jsonl_of<T: JsonRecord>(records: &[T]) -> String {
+    let mut s = String::new();
+    for r in records {
+        r.push_json(&mut s);
+        s.push('\n');
+    }
+    s
+}
+
+#[test]
+fn file_backed_sum_through_jsonl_sink_matches_the_in_memory_run_bytes() {
+    let spec = RegionSpec::Uniform { max: 30 };
+    let blobs = gen_blobs(1200, spec, 8);
+    let tmp = TempFile::new("sink_sum.rgn");
+    write_rgn_file(&tmp.0, GenBlobSource::new(1200, spec, 8)).unwrap();
+    let app = sum_app(SumMode::Enumerated, SumShape::Fused);
+    let want = jsonl_of(&app.run(&blobs).unwrap().outputs);
+
+    let exec = ExecConfig::new(4).streaming(16);
+    let mut sink = JsonlSink::new(Vec::new());
+    let report = app
+        .run_streaming_into(BlobFileSource::open(&tmp.0).unwrap(), &exec, &mut sink)
+        .unwrap();
+    assert!(report.outputs.is_empty(), "sink consumed the outputs");
+    let stats = ResultSink::<(u64, f64)>::finish(&mut sink).unwrap();
+    assert_eq!(stats.records as usize, blobs.len());
+    let got = String::from_utf8(sink.into_inner()).unwrap();
+    assert_eq!(got, want, "byte-identical JSONL from the file-backed run");
+}
+
+#[test]
+fn file_backed_taxi_through_jsonl_sink_matches_the_in_memory_run_bytes() {
+    let w = generate(
+        16,
+        TaxiGenConfig {
+            avg_pairs: 5,
+            avg_line_len: 140,
+        },
+        31,
+    );
+    let tmp = TempFile::new("sink_taxi.txt");
+    write_taxi_file(&tmp.0, &w.text, 1).unwrap();
+    let app = taxi_app(TaxiVariant::Hybrid);
+    let want = jsonl_of(&app.run(&w).unwrap().pairs);
+
+    let source = TextSource::open(&tmp.0).unwrap();
+    let text = source.text();
+    let exec = ExecConfig::new(3).streaming(8);
+    let mut sink = JsonlSink::new(Vec::new());
+    let report = app.run_streaming_into(text, source, &exec, &mut sink).unwrap();
+    assert!(report.pairs.is_empty());
+    let stats = ResultSink::<TaxiPair>::finish(&mut sink).unwrap();
+    assert_eq!(stats.records as usize, w.total_pairs);
+    let got = String::from_utf8(sink.into_inner()).unwrap();
+    assert_eq!(got, want, "byte-identical JSONL from the file-backed run");
+}
+
+#[test]
+fn binary_sink_decodes_back_to_the_exact_sums() {
+    let spec = RegionSpec::Fixed { size: 17 };
+    let blobs = gen_blobs(600, spec, 12);
+    let app = sum_app(SumMode::Enumerated, SumShape::Fused);
+    let want = app.run(&blobs).unwrap().outputs;
+
+    let exec = ExecConfig::new(2).streaming(16);
+    let mut sink = BinarySink::new(Vec::new());
+    app.run_streaming_into(GenBlobSource::new(600, spec, 12), &exec, &mut sink)
+        .unwrap();
+    let stats = ResultSink::<(u64, f64)>::finish(&mut sink).unwrap();
+    assert_eq!(stats.records as usize, want.len());
+    let bytes = sink.into_inner();
+    assert_eq!(&bytes[..8], b"RGNRES.1");
+    let mut got = Vec::new();
+    for rec in bytes[16..].chunks_exact(16) {
+        got.push((
+            u64::from_le_bytes(rec[..8].try_into().unwrap()),
+            f64::from_le_bytes(rec[8..].try_into().unwrap()),
+        ));
+    }
+    assert_sums_bitwise(&got, &want, "binary sink");
+}
+
+#[test]
+fn tagged_mode_refuses_streaming_sinks_by_name() {
+    let app = sum_app(SumMode::Tagged, SumShape::Fused);
+    let exec = ExecConfig::new(2).streaming(16);
+    let mut sink = JsonlSink::new(Vec::new());
+    let err = app
+        .run_streaming_into(
+            GenBlobSource::new(100, RegionSpec::Fixed { size: 5 }, 1),
+            &exec,
+            &mut sink,
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("Tagged"), "{err}");
+}
+
+// ---- ingest-buffer validation through the app fronts ---------------
+
+#[test]
+fn zero_ingest_buffer_is_a_named_error_through_every_entry_point() {
+    let exec = ExecConfig::new(2).streaming(0);
+    let app = sum_app(SumMode::Enumerated, SumShape::Fused);
+    let err = app
+        .run_streaming(GenBlobSource::new(100, RegionSpec::Fixed { size: 5 }, 1), &exec)
+        .unwrap_err();
+    assert!(err.to_string().contains("buffer_regions = 0"), "{err}");
+
+    let w = generate(
+        4,
+        TaxiGenConfig {
+            avg_pairs: 3,
+            avg_line_len: 60,
+        },
+        2,
+    );
+    let taxi = taxi_app(TaxiVariant::Hybrid);
+    let err = taxi
+        .run_streaming(
+            w.text.clone(),
+            regatta::workload::source::SliceSource::new(&w.lines),
+            &exec,
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("buffer_regions = 0"), "{err}");
+
+    let mut sink = JsonlSink::new(Vec::new());
+    let err = app
+        .run_streaming_into(
+            GenBlobSource::new(100, RegionSpec::Fixed { size: 5 }, 1),
+            &exec,
+            &mut sink,
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("buffer_regions = 0"), "{err}");
+}
+
+#[test]
+fn absurd_ingest_buffer_is_a_named_error() {
+    let exec = ExecConfig::new(2).streaming(usize::MAX);
+    let app = sum_app(SumMode::Enumerated, SumShape::Fused);
+    let err = app
+        .run_streaming(GenBlobSource::new(10, RegionSpec::Fixed { size: 5 }, 1), &exec)
+        .unwrap_err();
+    assert!(err.to_string().contains("sanity cap"), "{err}");
+}
+
+// ---- pooled synthetic source through the executor ------------------
+
+#[test]
+fn pooled_gen_source_streams_bit_identically() {
+    use regatta::apps::sum::SumFactory;
+    use regatta::exec::{ContainerPool, KernelSpawn, ShardedRunner};
+
+    let spec = RegionSpec::Skewed { max: 200 };
+    let blobs = gen_blobs(2000, spec, 14);
+    let app = sum_app(SumMode::Enumerated, SumShape::Fused);
+    let single = app.run(&blobs).unwrap();
+
+    let pool = Arc::new(ContainerPool::new());
+    let cfg = SumConfig {
+        width: WIDTH,
+        data_cap: 256,
+        signal_cap: 64,
+        ..Default::default()
+    };
+    let factory = SumFactory::new(cfg, KernelSpawn::Native).with_elem_pool(pool.clone());
+    let runner = ShardedRunner::new(ExecConfig::new(4).streaming(32));
+    let report = runner
+        .run_stream(&factory, GenBlobSource::new(2000, spec, 14).with_pool(pool))
+        .unwrap();
+    assert_sums_bitwise(&report.outputs, &single.outputs, "pooled gen source");
+}
