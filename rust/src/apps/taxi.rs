@@ -19,6 +19,7 @@
 //!   (dense context), both stages run full but stage 1 pays the per-char
 //!   tag overhead — ~30 % slower than hybrid at scale.
 
+use std::cell::RefCell;
 use std::rc::Rc;
 use std::sync::Arc;
 
@@ -30,10 +31,11 @@ use crate::exec::{
     ExecConfig, KernelSpawn, PipelineFactory, ShardOutput, ShardWorker, ShardedRunner,
     WorkerKernels,
 };
+use crate::coordinator::channel::Channel;
 use crate::coordinator::node::{Emitter, NodeLogic};
 use crate::coordinator::scheduler::Policy;
 use crate::coordinator::signal::{parent_as, ParentRef};
-use crate::coordinator::topology::PipelineBuilder;
+use crate::coordinator::topology::{Pipeline, PipelineBuilder};
 use crate::runtime::kernels::KernelSet;
 use crate::workload::taxi::{TaxiLine, TaxiWorkload};
 
@@ -145,114 +147,22 @@ impl TaxiApp {
     }
 
     /// Process a workload; returns the parsed pairs and metrics.
+    ///
+    /// Builds a one-shot [`TaxiPipeline`] over the workload's text and
+    /// runs the line stream as a single shard. Long-lived callers — the
+    /// sharded executor's workers — build the pipeline once and call
+    /// [`TaxiPipeline::run_shard`] repeatedly instead (reset, not
+    /// rebuild).
     pub fn run(&self, w: &TaxiWorkload) -> Result<TaxiReport> {
         let inv0 = self.kernels.invocations();
-        let (pairs, metrics) = match self.cfg.variant {
-            TaxiVariant::Enumerated => self.run_enumerated(w)?,
-            TaxiVariant::Hybrid => self.run_hybrid(w)?,
-            TaxiVariant::Tagged => self.run_tagged(w)?,
-        };
+        let mut pipeline = TaxiPipeline::build(self.cfg, self.kernels.clone(), w.text.clone());
+        let (pairs, metrics) = pipeline.run_shard(&w.lines)?;
         Ok(TaxiReport {
             pairs,
             elapsed: metrics.elapsed,
             invocations: self.kernels.invocations() - inv0,
             metrics,
         })
-    }
-
-    fn run_enumerated(&self, w: &TaxiWorkload) -> Result<(Vec<TaxiPair>, PipelineMetrics)> {
-        let cfg = self.cfg;
-        let mut b = PipelineBuilder::new(cfg.width)
-            .queue_caps(cfg.data_cap, cfg.signal_cap)
-            .policy(cfg.policy);
-        let src = b.source_with_cap::<TaxiLine>(w.lines.len().max(1));
-        let chars = b.enumerate("enum_chars", &src);
-        let cands = b.node(
-            "classify",
-            &chars,
-            ClassifyLogic::new(self.kernels.clone(), cfg.width, StageOneOut::InRegion),
-        );
-        let parsed = b.node(
-            "parse",
-            &cands,
-            ParseEnumLogic::new(self.kernels.clone(), cfg.width),
-        );
-        let sink = b.sink("out", &parsed, MapLogic::new(|p: &TaxiPair| *p));
-        Self::feed_lines(&src, &w.lines);
-        let mut pipe = b.build();
-        pipe.run()?;
-        let pairs = sink.borrow().clone();
-        Ok((pairs, pipe.metrics()))
-    }
-
-    fn run_hybrid(&self, w: &TaxiWorkload) -> Result<(Vec<TaxiPair>, PipelineMetrics)> {
-        let cfg = self.cfg;
-        let mut b = PipelineBuilder::new(cfg.width)
-            .queue_caps(cfg.data_cap, cfg.signal_cap)
-            .policy(cfg.policy);
-        let src = b.source_with_cap::<TaxiLine>(w.lines.len().max(1));
-        let chars = b.enumerate("enum_chars", &src);
-        // stage 1 closes the region and tags each candidate explicitly
-        let cands = b.node(
-            "classify",
-            &chars,
-            ClassifyLogic::new(self.kernels.clone(), cfg.width, StageOneOut::TaggedCandidates),
-        );
-        let parsed = b.node(
-            "parse",
-            &cands,
-            ParsePlainLogic::new(self.kernels.clone(), cfg.width, w.text.clone()),
-        );
-        let sink = b.sink("out", &parsed, MapLogic::new(|p: &TaxiPair| *p));
-        Self::feed_lines(&src, &w.lines);
-        let mut pipe = b.build();
-        pipe.run()?;
-        let pairs = sink.borrow().clone();
-        Ok((pairs, pipe.metrics()))
-    }
-
-    fn run_tagged(&self, w: &TaxiWorkload) -> Result<(Vec<TaxiPair>, PipelineMetrics)> {
-        let cfg = self.cfg;
-        let mut b = PipelineBuilder::new(cfg.width)
-            .queue_caps(cfg.data_cap, cfg.signal_cap)
-            .policy(cfg.policy);
-        let src = b.source_with_cap::<Candidate>(cfg.data_cap);
-        let cands = b.node(
-            "classify",
-            &src,
-            TaggedClassifyLogic::new(self.kernels.clone(), cfg.width, w.text.clone()),
-        );
-        let parsed = b.node(
-            "parse",
-            &cands,
-            ParsePlainLogic::new(self.kernels.clone(), cfg.width, w.text.clone()),
-        );
-        let sink = b.sink("out", &parsed, MapLogic::new(|p: &TaxiPair| *p));
-        let mut pipe = b.build();
-
-        // Dense representation: EVERY character becomes a tagged item.
-        // Feed in queue-capacity batches, draining between refills.
-        for line in &w.lines {
-            let tag = parse_tag(line);
-            let end = (line.start + line.len) as u32;
-            let mut off = 0usize;
-            while off < line.len {
-                let n = src.data_space().min(line.len - off);
-                let base = (line.start + off) as u32;
-                src.push_iter((0..n as u32).map(|k| Candidate {
-                    abs: base + k,
-                    line_end: end,
-                    tag,
-                }))?;
-                off += n;
-                if off < line.len {
-                    pipe.run()?;
-                }
-            }
-        }
-        pipe.run()?;
-        let pairs = sink.borrow().clone();
-        Ok((pairs, pipe.metrics()))
     }
 
     /// Process the workload sharded across `workers` OS threads (L3.5).
@@ -355,17 +265,160 @@ impl TaxiApp {
             invocations: report.invocations,
         })
     }
+}
 
-    fn feed_lines(src: &Rc<crate::coordinator::channel::Channel<TaxiLine>>, lines: &[TaxiLine]) {
-        for line in lines {
-            src.push(line.clone());
+/// A persistent, reusable taxi pipeline over one shared text buffer —
+/// the worker-side half of the zero-rebuild contract (see
+/// [`SumPipeline`](crate::apps::sum::SumPipeline) for the sum twin).
+/// Built once per worker; every shard of lines runs `reset → feed →
+/// drain` on the same graph with per-shard outputs and metrics
+/// bit-identical to a fresh build's.
+pub struct TaxiPipeline {
+    kind: TaxiPipelineKind,
+}
+
+enum TaxiPipelineKind {
+    /// Enumerated and hybrid variants: `TaxiLine` source → … → pair sink.
+    Lines {
+        pipe: Pipeline,
+        src: Rc<Channel<TaxiLine>>,
+        sink: Rc<RefCell<Vec<TaxiPair>>>,
+    },
+    /// Pure tagging: every character fed as a tagged `Candidate`.
+    Tagged {
+        pipe: Pipeline,
+        src: Rc<Channel<Candidate>>,
+        sink: Rc<RefCell<Vec<TaxiPair>>>,
+    },
+}
+
+impl TaxiPipeline {
+    /// Assemble the graph for `cfg` over `kernels`, parsing against the
+    /// shared `text` buffer (widths must match).
+    pub fn build(cfg: TaxiConfig, kernels: Rc<KernelSet>, text: Arc<Vec<u8>>) -> TaxiPipeline {
+        assert_eq!(cfg.width, kernels.width(), "config/kernel width mismatch");
+        let kind = match cfg.variant {
+            TaxiVariant::Enumerated | TaxiVariant::Hybrid => {
+                TaxiPipeline::build_lines(cfg, kernels, text)
+            }
+            TaxiVariant::Tagged => TaxiPipeline::build_tagged(cfg, kernels, text),
+        };
+        TaxiPipeline { kind }
+    }
+
+    /// Run one shard of lines to quiescence on the persistent graph.
+    /// Counters are zero at entry (the reset), so the returned
+    /// [`PipelineMetrics`] cover exactly this shard.
+    pub fn run_shard(&mut self, lines: &[TaxiLine]) -> Result<(Vec<TaxiPair>, PipelineMetrics)> {
+        match &mut self.kind {
+            TaxiPipelineKind::Lines { pipe, src, sink } => {
+                pipe.reset();
+                // a failed previous shard may have left partial pairs in
+                // the driver-owned sink; a fresh build starts empty
+                sink.borrow_mut().clear();
+                // same per-shard source sizing as a fresh build (see
+                // SumPipeline::run_shard): backpressure, and therefore
+                // scheduling, matches the rebuild behaviour exactly
+                src.set_data_capacity(lines.len().max(1));
+                for line in lines {
+                    src.push(line.clone());
+                }
+                pipe.run()?;
+                Ok((super::sum::take_outputs(sink), pipe.metrics()))
+            }
+            TaxiPipelineKind::Tagged { pipe, src, sink } => {
+                pipe.reset();
+                sink.borrow_mut().clear(); // see the Lines branch
+                // Dense representation: EVERY character becomes a tagged
+                // item. Feed in queue-capacity batches, draining between
+                // refills.
+                for line in lines {
+                    let tag = parse_tag(line);
+                    let end = (line.start + line.len) as u32;
+                    let mut off = 0usize;
+                    while off < line.len {
+                        let n = src.data_space().min(line.len - off);
+                        let base = (line.start + off) as u32;
+                        src.push_iter((0..n as u32).map(|k| Candidate {
+                            abs: base + k,
+                            line_end: end,
+                            tag,
+                        }))?;
+                        off += n;
+                        if off < line.len {
+                            pipe.run()?;
+                        }
+                    }
+                }
+                pipe.run()?;
+                Ok((super::sum::take_outputs(sink), pipe.metrics()))
+            }
+        }
+    }
+
+    fn build_lines(cfg: TaxiConfig, ks: Rc<KernelSet>, text: Arc<Vec<u8>>) -> TaxiPipelineKind {
+        let mut b = PipelineBuilder::new(cfg.width)
+            .queue_caps(cfg.data_cap, cfg.signal_cap)
+            .policy(cfg.policy);
+        // capacity is re-targeted per shard in run_shard
+        let src = b.source_with_cap::<TaxiLine>(1);
+        let chars = b.enumerate("enum_chars", &src);
+        // pure enumeration keeps candidates in the line's region; hybrid
+        // closes the region and tags each candidate explicitly
+        let stage1_out = match cfg.variant {
+            TaxiVariant::Enumerated => StageOneOut::InRegion,
+            _ => StageOneOut::TaggedCandidates,
+        };
+        let cands = b.node(
+            "classify",
+            &chars,
+            ClassifyLogic::new(ks.clone(), cfg.width, stage1_out),
+        );
+        let parsed = match cfg.variant {
+            TaxiVariant::Enumerated => b.node(
+                "parse",
+                &cands,
+                ParseEnumLogic::new(ks.clone(), cfg.width),
+            ),
+            // hybrid: stage 1 closed the region; stage 2 parses tagged
+            // candidates against the shared text
+            _ => b.node(
+                "parse",
+                &cands,
+                ParsePlainLogic::new(ks.clone(), cfg.width, text),
+            ),
+        };
+        let sink = b.sink("out", &parsed, MapLogic::new(|p: &TaxiPair| *p));
+        TaxiPipelineKind::Lines {
+            pipe: b.build(),
+            src,
+            sink,
+        }
+    }
+
+    fn build_tagged(cfg: TaxiConfig, ks: Rc<KernelSet>, text: Arc<Vec<u8>>) -> TaxiPipelineKind {
+        let mut b = PipelineBuilder::new(cfg.width)
+            .queue_caps(cfg.data_cap, cfg.signal_cap)
+            .policy(cfg.policy);
+        let src = b.source_with_cap::<Candidate>(cfg.data_cap);
+        let cands = b.node(
+            "classify",
+            &src,
+            TaggedClassifyLogic::new(ks.clone(), cfg.width, text.clone()),
+        );
+        let parsed = b.node("parse", &cands, ParsePlainLogic::new(ks, cfg.width, text));
+        let sink = b.sink("out", &parsed, MapLogic::new(|p: &TaxiPair| *p));
+        TaxiPipelineKind::Tagged {
+            pipe: b.build(),
+            src,
+            sink,
         }
     }
 }
 
-/// [`PipelineFactory`] for the taxi app: one fresh [`TaxiApp`] pipeline
-/// per worker thread over the shared text buffer, shards balanced by line
-/// length.
+/// [`PipelineFactory`] for the taxi app: one persistent [`TaxiPipeline`]
+/// per worker thread over the shared text buffer (built in
+/// `make_worker`, reset between shards), shards balanced by line length.
 pub struct TaxiFactory {
     cfg: TaxiConfig,
     spawn: KernelSpawn,
@@ -378,11 +431,16 @@ impl TaxiFactory {
     }
 }
 
-/// A worker-private taxi pipeline (keeps its kernel engine alive).
+/// A worker-private persistent taxi pipeline: the kernel engine **and**
+/// the built node graph (over the shared text) live as long as the
+/// worker; every shard runs `reset → feed → drain` on the same
+/// [`TaxiPipeline`] (zero rebuild).
 pub struct TaxiShardWorker {
-    app: TaxiApp,
-    text: Arc<Vec<u8>>,
-    _kernels: WorkerKernels,
+    pipeline: TaxiPipeline,
+    kernels: WorkerKernels,
+    /// Node graphs built over this worker's lifetime — the reuse proof:
+    /// stays at 1 however many shards the worker runs.
+    builds: u64,
 }
 
 impl PipelineFactory for TaxiFactory {
@@ -392,11 +450,11 @@ impl PipelineFactory for TaxiFactory {
 
     fn make_worker(&self, _worker_id: usize) -> Result<TaxiShardWorker> {
         let kernels = self.spawn.spawn(self.cfg.width)?;
-        let app = TaxiApp::new(self.cfg, kernels.kernels.clone());
+        let pipeline = TaxiPipeline::build(self.cfg, kernels.kernels.clone(), self.text.clone());
         Ok(TaxiShardWorker {
-            app,
-            text: self.text.clone(),
-            _kernels: kernels,
+            pipeline,
+            kernels,
+            builds: 1,
         })
     }
 
@@ -410,19 +468,17 @@ impl ShardWorker for TaxiShardWorker {
     type Out = TaxiPair;
 
     fn run_shard(&mut self, shard: &[TaxiLine]) -> Result<ShardOutput<TaxiPair>> {
-        // A shard-local view of the workload; `total_pairs` is ground
-        // truth for whole-workload validation and is not used by `run`.
-        let w = TaxiWorkload {
-            text: self.text.clone(),
-            lines: shard.to_vec(),
-            total_pairs: 0,
-        };
-        let report = self.app.run(&w)?;
+        let inv0 = self.kernels.kernels.invocations();
+        let (outputs, metrics) = self.pipeline.run_shard(shard)?;
         Ok(ShardOutput {
-            outputs: report.pairs,
-            metrics: report.metrics,
-            invocations: report.invocations,
+            outputs,
+            metrics,
+            invocations: self.kernels.kernels.invocations() - inv0,
         })
+    }
+
+    fn pipelines_built(&self) -> u64 {
+        self.builds
     }
 }
 
@@ -531,6 +587,13 @@ impl NodeLogic for ClassifyLogic {
     fn forward_region_signals(&self) -> bool {
         matches!(self.out_kind, StageOneOut::InRegion)
     }
+
+    fn reset(&mut self) {
+        // cross-shard reuse: a clean run closes the line at end(), but
+        // reset guarantees no region context leaks into the next shard
+        self.line = None;
+        self.tag = 0;
+    }
 }
 
 /// Stage 2 inside the enumeration region (pure-enumeration variant):
@@ -634,6 +697,11 @@ impl NodeLogic for ParseEnumLogic {
 
     fn max_outputs_per_input(&self) -> usize {
         1
+    }
+
+    fn reset(&mut self) {
+        self.line = None;
+        self.tag = 0;
     }
 }
 
@@ -984,6 +1052,53 @@ mod tests {
             assert_eq!(a.tag, b.tag);
             assert_eq!(a.x.to_bits(), b.x.to_bits());
             assert_eq!(a.y.to_bits(), b.y.to_bits());
+        }
+    }
+
+    #[test]
+    fn persistent_pipeline_reuse_matches_fresh_runs() {
+        let w = generate(
+            30,
+            TaxiGenConfig {
+                avg_pairs: 5,
+                avg_line_len: 200,
+            },
+            13,
+        );
+        for variant in TaxiVariant::all() {
+            let app = TaxiApp::new(
+                TaxiConfig {
+                    width: 8,
+                    variant,
+                    data_cap: 512,
+                    signal_cap: 128,
+                    policy: Policy::GreedyOccupancy,
+                },
+                Rc::new(KernelSet::native(8)),
+            );
+            let mut pipeline =
+                TaxiPipeline::build(*app.config(), Rc::new(KernelSet::native(8)), w.text.clone());
+            for shard in w.lines.chunks(7) {
+                let shard_w = TaxiWorkload {
+                    text: w.text.clone(),
+                    lines: shard.to_vec(),
+                    total_pairs: 0,
+                };
+                let fresh = app.run(&shard_w).unwrap(); // builds per call: the oracle
+                let (pairs, metrics) = pipeline.run_shard(shard).unwrap();
+                assert_eq!(pairs.len(), fresh.pairs.len(), "{variant:?}");
+                for (g, e) in pairs.iter().zip(&fresh.pairs) {
+                    assert_eq!(g.tag, e.tag, "{variant:?}");
+                    assert_eq!(g.x.to_bits(), e.x.to_bits(), "{variant:?}");
+                    assert_eq!(g.y.to_bits(), e.y.to_bits(), "{variant:?}");
+                }
+                let (g, e) = (
+                    metrics.node("parse").unwrap(),
+                    fresh.metrics.node("parse").unwrap(),
+                );
+                assert_eq!(g.firings, e.firings, "{variant:?}");
+                assert_eq!(g.ensemble_hist, e.ensemble_hist, "{variant:?}");
+            }
         }
     }
 

@@ -19,6 +19,14 @@
 //!    occupancy and allocations-per-firing (per-thread allocation
 //!    counter over the whole run, construction included — the
 //!    steady-state zero is pinned exactly by `tests/hotpath_alloc.rs`).
+//! 3. **Rebuild-vs-reuse sweep** (`reuse`): the same region stream cut
+//!    into shards at several granularities, run once building a fresh
+//!    pipeline per shard (the pre-reuse executor behaviour) and once
+//!    resetting a persistent [`SumPipeline`] — outputs asserted
+//!    bit-identical, so the speedup isolates the graph-rebuild overhead.
+//!    The `reuse_vs_rebuild_speedup` headline (finest granularity =
+//!    many small shards) is gated by the baseline's
+//!    `min_reuse_speedup`.
 //!
 //! Results are emitted as `BENCH_hotpath.json` (hand-rolled writer; the
 //! vendored JSON module only parses) and checked against
@@ -30,7 +38,7 @@ use std::rc::Rc;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::apps::sum::{SumApp, SumConfig, SumMode, SumShape};
+use crate::apps::sum::{SumApp, SumConfig, SumMode, SumPipeline, SumShape};
 use crate::apps::prefix_mask;
 use crate::coordinator::queue::DataQueue;
 use crate::coordinator::scheduler::Policy;
@@ -50,6 +58,9 @@ pub struct HotpathConfig {
     /// Total stream items per point.
     pub items: usize,
     pub policies: Vec<Policy>,
+    /// Shard granularities (regions per shard) for the rebuild-vs-reuse
+    /// sweep — smallest first = the many-small-shards headline point.
+    pub reuse_granules: Vec<usize>,
     pub bench: BenchConfig,
     pub seed: u64,
 }
@@ -63,6 +74,7 @@ impl HotpathConfig {
             widths: vec![32, 128],
             items: 1 << 14,
             policies: vec![Policy::GreedyOccupancy],
+            reuse_granules: vec![1, 4, 16],
             bench: BenchConfig {
                 warmup_iters: 1,
                 iters: 3,
@@ -82,6 +94,7 @@ impl Default for HotpathConfig {
                 Policy::DeepestFirst,
                 Policy::RoundRobin,
             ],
+            reuse_granules: vec![1, 4, 16, 64],
             bench: BenchConfig::from_env(),
             seed: 0xF16,
         }
@@ -111,12 +124,26 @@ pub struct AppRow {
     pub allocs_per_firing: f64,
 }
 
+/// One rebuild-vs-reuse comparison point (persistent-pipeline sweep).
+#[derive(Debug, Clone)]
+pub struct ReuseRow {
+    /// Shard granularity: regions per shard.
+    pub regions_per_shard: usize,
+    /// Shards the stream was cut into.
+    pub shards: usize,
+    pub rebuild_items_per_sec: f64,
+    pub reuse_items_per_sec: f64,
+    /// rebuild time / reuse time (> 1 = reuse wins).
+    pub speedup: f64,
+}
+
 /// Full report (also the JSON payload).
 #[derive(Debug, Clone)]
 pub struct HotpathReport {
     pub items: usize,
     pub firing: Vec<FiringRow>,
     pub apps: Vec<AppRow>,
+    pub reuse: Vec<ReuseRow>,
 }
 
 /// Run the sweep and print the tables.
@@ -132,6 +159,15 @@ pub fn run(cfg: &HotpathConfig) -> Result<HotpathReport> {
             for &policy in &cfg.policies {
                 apps.push(app_point(cfg, width, region, policy)?);
             }
+        }
+    }
+    // rebuild-vs-reuse at the widest measured width only: the sweep
+    // isolates coordinator-graph construction cost, which does not vary
+    // with width nearly as much as it does with shard granularity
+    let mut reuse = Vec::new();
+    if let Some(&width) = cfg.widths.iter().max() {
+        for &granule in &cfg.reuse_granules {
+            reuse.push(reuse_point(cfg, width, granule)?);
         }
     }
 
@@ -166,10 +202,85 @@ pub fn run(cfg: &HotpathConfig) -> Result<HotpathReport> {
     println!("== Hotpath: full sum app, width x region x policy ==");
     t.print();
 
+    let mut t = Table::new(&["regions/shard", "shards", "rebuild/s", "reuse/s", "speedup"]);
+    for r in &reuse {
+        t.row(&[
+            r.regions_per_shard.to_string(),
+            r.shards.to_string(),
+            fmt_count(r.rebuild_items_per_sec),
+            fmt_count(r.reuse_items_per_sec),
+            format!("{:.2}x", r.speedup),
+        ]);
+    }
+    println!("== Hotpath: per-shard pipeline, rebuild vs reset-and-reuse ==");
+    t.print();
+
     Ok(HotpathReport {
         items: cfg.items,
         firing,
         apps,
+        reuse,
+    })
+}
+
+/// One rebuild-vs-reuse point: the same region stream cut into shards of
+/// `regions_per_shard` items each, run (a) building a fresh pipeline per
+/// shard — the pre-reuse executor behaviour — and (b) resetting one
+/// persistent [`SumPipeline`]. Outputs are asserted bit-identical, so
+/// the speedup isolates exactly the graph-rebuild overhead.
+fn reuse_point(cfg: &HotpathConfig, width: usize, regions_per_shard: usize) -> Result<ReuseRow> {
+    // small regions: per-shard compute is tiny, so the rebuild series is
+    // dominated by the construction cost this sweep isolates
+    let region = (width / 4).max(1);
+    let blobs = gen_blobs(cfg.items, RegionSpec::Fixed { size: region }, cfg.seed);
+    let granule = regions_per_shard.max(1);
+    let sum_cfg = SumConfig {
+        width,
+        mode: SumMode::Enumerated,
+        shape: SumShape::Fused,
+        ..Default::default()
+    };
+    let kernels = Rc::new(KernelSet::native(width));
+    let app = SumApp::new(sum_cfg, kernels.clone());
+
+    let mut rebuild_out: Vec<(u64, f64)> = Vec::new();
+    let m_rebuild = time_fn(cfg.bench, || {
+        rebuild_out.clear();
+        for shard in blobs.chunks(granule) {
+            let r = app.run(shard).expect("rebuild shard run");
+            rebuild_out.extend(r.outputs);
+        }
+    });
+
+    let mut pipeline = SumPipeline::build(sum_cfg, kernels);
+    let mut reuse_out: Vec<(u64, f64)> = Vec::new();
+    let m_reuse = time_fn(cfg.bench, || {
+        reuse_out.clear();
+        for shard in blobs.chunks(granule) {
+            let (outputs, _metrics) = pipeline.run_shard(shard).expect("reuse shard run");
+            reuse_out.extend(outputs);
+        }
+    });
+
+    ensure!(
+        rebuild_out.len() == reuse_out.len(),
+        "reuse sweep: output counts diverged ({} vs {})",
+        rebuild_out.len(),
+        reuse_out.len()
+    );
+    for ((gi, gv), (wi, wv)) in reuse_out.iter().zip(&rebuild_out) {
+        ensure!(
+            gi == wi && gv.to_bits() == wv.to_bits(),
+            "reuse sweep: outputs diverged at region {gi} ({gv} vs {wv})"
+        );
+    }
+
+    Ok(ReuseRow {
+        regions_per_shard: granule,
+        shards: blobs.chunks(granule).count(),
+        rebuild_items_per_sec: cfg.items as f64 / m_rebuild.median(),
+        reuse_items_per_sec: cfg.items as f64 / m_reuse.median(),
+        speedup: m_rebuild.median() / m_reuse.median(),
     })
 }
 
@@ -376,12 +487,42 @@ pub fn to_json(report: &HotpathReport) -> String {
         ));
     }
     s.push_str("  ],\n");
+    s.push_str("  \"reuse\": [\n");
+    for (i, r) in report.reuse.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"regions_per_shard\": {}, \"shards\": {}, \
+             \"rebuild_items_per_sec\": {:.1}, \"reuse_items_per_sec\": {:.1}, \
+             \"speedup\": {:.4}}}{}\n",
+            r.regions_per_shard,
+            r.shards,
+            r.rebuild_items_per_sec,
+            r.reuse_items_per_sec,
+            r.speedup,
+            if i + 1 < report.reuse.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"reuse_vs_rebuild_speedup\": {:.4},\n",
+        reuse_vs_rebuild_speedup(report).unwrap_or(0.0)
+    ));
     s.push_str(&format!(
         "  \"best_speedup_at_max_width\": {:.4}\n",
         best_speedup_at_max_width(report).unwrap_or(0.0)
     ));
     s.push_str("}\n");
     s
+}
+
+/// The reuse headline: speedup at the finest shard granularity measured
+/// (many small shards — where rebuild overhead bites hardest and the
+/// persistent-pipeline contract matters most).
+pub fn reuse_vs_rebuild_speedup(report: &HotpathReport) -> Option<f64> {
+    report
+        .reuse
+        .iter()
+        .min_by_key(|r| r.regions_per_shard)
+        .map(|r| r.speedup)
 }
 
 /// The acceptance metric: best firing-path speedup among the rows at the
@@ -396,8 +537,11 @@ pub fn best_speedup_at_max_width(report: &HotpathReport) -> Option<f64> {
         .fold(None, |acc, s| Some(acc.map_or(s, |a: f64| a.max(s))))
 }
 
-/// CI regression gate: the measured best speedup must stay within 20% of
-/// the checked-in baseline's `min_speedup`.
+/// CI regression gate: the measured best firing-path speedup must stay
+/// within 20% of the checked-in baseline's `min_speedup`, and — when the
+/// baseline carries `min_reuse_speedup` — the rebuild-vs-reuse headline
+/// must meet it outright (the acceptance floor, not a ratchet value, so
+/// no slack factor).
 pub fn check_against(report: &HotpathReport, baseline_path: &str) -> Result<()> {
     let text = std::fs::read_to_string(baseline_path)
         .with_context(|| format!("reading hotpath baseline {baseline_path}"))?;
@@ -414,6 +558,16 @@ pub fn check_against(report: &HotpathReport, baseline_path: &str) -> Result<()> 
          (80% of the checked-in baseline {min_speedup:.2}x)"
     );
     println!("hotpath check: {measured:.2}x >= {floor:.2}x (baseline {min_speedup:.2}x) OK");
+    if let Some(min_reuse) = json.get("min_reuse_speedup").and_then(Json::as_f64) {
+        let reuse = reuse_vs_rebuild_speedup(report)
+            .context("baseline demands a reuse gate but no reuse rows were measured")?;
+        ensure!(
+            reuse >= min_reuse,
+            "reuse regression: rebuild-vs-reuse speedup {reuse:.2}x on the \
+             many-small-shards configuration is below the {min_reuse:.2}x floor"
+        );
+        println!("reuse check: {reuse:.2}x >= {min_reuse:.2}x OK");
+    }
     Ok(())
 }
 
@@ -426,6 +580,7 @@ mod tests {
             widths: vec![8],
             items: 1 << 10,
             policies: vec![Policy::GreedyOccupancy],
+            reuse_granules: vec![1, 8],
             bench: BenchConfig {
                 warmup_iters: 0,
                 iters: 1,
@@ -439,14 +594,24 @@ mod tests {
         let report = run(&tiny_cfg()).unwrap();
         assert!(!report.firing.is_empty());
         assert!(!report.apps.is_empty());
+        assert_eq!(report.reuse.len(), 2);
         for r in &report.firing {
             assert!(r.hot_items_per_sec > 0.0);
             assert!(r.speedup > 0.0);
         }
+        for r in &report.reuse {
+            assert!(r.shards >= 1);
+            assert!(r.speedup > 0.0);
+        }
+        // headline = the finest-granularity (many-small-shards) row
+        let fine = report.reuse.iter().min_by_key(|r| r.regions_per_shard).unwrap();
+        assert_eq!(reuse_vs_rebuild_speedup(&report), Some(fine.speedup));
         let js = to_json(&report);
         let parsed = Json::parse(&js).expect("emitted JSON parses");
         assert!(parsed.get("firing_path").is_some());
         assert!(parsed.get("app_sweep").is_some());
+        assert!(parsed.get("reuse").is_some());
+        assert!(parsed.get("reuse_vs_rebuild_speedup").is_some());
     }
 
     #[test]
@@ -482,5 +647,22 @@ mod tests {
         let bad = dir.join("hotpath_baseline_bad.json");
         std::fs::write(&bad, "{\"min_speedup\": 1e9}").unwrap();
         assert!(check_against(&report, bad.to_str().unwrap()).is_err());
+    }
+
+    #[test]
+    fn reuse_gate_accepts_and_rejects() {
+        let report = run(&tiny_cfg()).unwrap();
+        let dir = std::env::temp_dir();
+        let ok = dir.join("hotpath_baseline_reuse_ok.json");
+        std::fs::write(
+            &ok,
+            "{\"min_speedup\": 0.0001, \"min_reuse_speedup\": 0.0001}",
+        )
+        .unwrap();
+        check_against(&report, ok.to_str().unwrap()).unwrap();
+        let bad = dir.join("hotpath_baseline_reuse_bad.json");
+        std::fs::write(&bad, "{\"min_speedup\": 0.0001, \"min_reuse_speedup\": 1e9}").unwrap();
+        let err = check_against(&report, bad.to_str().unwrap()).unwrap_err();
+        assert!(err.to_string().contains("reuse regression"), "{err}");
     }
 }

@@ -99,6 +99,14 @@ where
     fn forward_region_signals(&self) -> bool {
         false // `aggregate` closes the enumeration scope
     }
+
+    fn reset(&mut self) {
+        // pipeline reuse: drop any residue from an aborted or completed
+        // stream so the first region of the next shard folds from `init`,
+        // exactly like a freshly built node (begin() also re-inits, but
+        // reset keeps the guarantee independent of signal arrival)
+        self.acc = self.init.clone();
+    }
 }
 
 /// Stateless per-ensemble map/filter logic from a closure
@@ -268,6 +276,24 @@ mod tests {
             node.fire().unwrap();
         }
         assert!(sink.borrow().is_empty());
+    }
+
+    #[test]
+    fn aggregator_reset_restores_init() {
+        let mut agg = Aggregator::new(
+            0.0f64,
+            |acc: &mut f64, items: &[f32], _p| {
+                *acc += items.len() as f64;
+                Ok(())
+            },
+            |acc: &mut f64, _p| Ok(Some(*acc)),
+        );
+        let mut stage = Vec::new();
+        let mut em = Emitter::new(&mut stage);
+        agg.run(&[1.0, 2.0], None, &mut em).unwrap();
+        assert_eq!(*agg.acc(), 2.0);
+        NodeLogic::reset(&mut agg);
+        assert_eq!(*agg.acc(), 0.0);
     }
 
     #[test]

@@ -154,6 +154,13 @@ impl<T: Clone + 'static> NodeOps for Broadcast<T> {
         Ok(worked)
     }
 
+    fn reset(&mut self) {
+        self.input.reset();
+        self.credit = 0;
+        self.scratch.clear();
+        self.metrics.reset();
+    }
+
     fn metrics(&self) -> &NodeMetrics {
         &self.metrics
     }
@@ -271,6 +278,32 @@ mod tests {
             };
             assert_eq!(got, Some(42));
         }
+    }
+
+    #[test]
+    fn reset_rearms_credit_and_metrics() {
+        let input: Rc<Channel<u32>> = Channel::new(64, 16);
+        let c1: Rc<Channel<u32>> = Channel::new(64, 16);
+        input.push(1);
+        input.push(2);
+        input.emit_signal(SignalKind::Custom(1));
+        let mut b = Broadcast::new("tee", 4, input.clone(), vec![c1.clone()]);
+        b.fire().unwrap(); // ensemble of 2 + the signal
+        input.push(3); // left pending
+        b.reset();
+        c1.reset(); // downstream node resets its own input channel
+        assert!(!b.has_pending());
+        assert_eq!(b.metrics().ensembles, 0);
+        assert_eq!(b.metrics().signals_consumed, 0);
+        // rerun: indistinguishable from a fresh node
+        input.push(9);
+        while b.fireable() {
+            b.fire().unwrap();
+        }
+        let (items, sigs) = drain(&c1);
+        assert_eq!(items, vec![9]);
+        assert!(sigs.is_empty());
+        assert_eq!(b.metrics().ensembles, 1);
     }
 
     #[test]

@@ -110,6 +110,31 @@ impl<T> Channel<T> {
         self.emitted_since_signal.set(0);
     }
 
+    // ---- reuse (persistent pipelines) ---------------------------------
+
+    /// Return the channel to its just-built state **in place**: queued
+    /// data/signals are discarded and the emitter-side credit counter is
+    /// re-armed, while both rings keep their capacity — a reset on the
+    /// steady-state reuse path performs no heap allocation. Called per
+    /// node by [`Pipeline::reset`](crate::coordinator::topology::Pipeline::reset)
+    /// (each node resets its input channel).
+    pub fn reset(&self) {
+        self.data.borrow_mut().clear();
+        self.signals.borrow_mut().clear();
+        self.emitted_since_signal.set(0);
+    }
+
+    /// Re-target the data queue's logical capacity (per-shard source
+    /// sizing: a persistent pipeline's source channel is re-sized to the
+    /// incoming shard's length so backpressure — and therefore scheduling
+    /// — matches a freshly built pipeline bit for bit). The ring's
+    /// allocation only grows, and only when `cap` exceeds every previous
+    /// shard's (the capacity-regrowth path). Call on an empty channel
+    /// (i.e. after [`Channel::reset`]).
+    pub fn set_data_capacity(&self, cap: usize) {
+        self.data.borrow_mut().set_capacity(cap);
+    }
+
     // ---- capacity (for the fireable test) ----------------------------
 
     pub fn data_space(&self) -> usize {
@@ -281,6 +306,40 @@ mod tests {
         assert_eq!(ch.head_signal_credit(), 0);
         ch.pop_signal();
         assert_eq!(ch.head_signal_credit(), 0);
+    }
+
+    #[test]
+    fn reset_restores_the_just_built_state() {
+        let ch: Rc<Channel<u32>> = Channel::new(8, 4);
+        ch.push(1);
+        ch.push(2);
+        ch.emit_signal(SignalKind::Custom(0));
+        ch.push(3); // emitted_since_signal now 1
+        ch.reset();
+        assert_eq!(ch.data_len(), 0);
+        assert_eq!(ch.signal_len(), 0);
+        assert_eq!(ch.data_space(), 8);
+        assert_eq!(ch.signal_space(), 4);
+        // the emitter counter was re-armed: rule (1) applies afresh
+        ch.push(9);
+        ch.emit_signal(SignalKind::Custom(1));
+        assert_eq!(ch.head_signal_credit(), 1);
+    }
+
+    #[test]
+    fn set_data_capacity_resizes_the_source_per_shard() {
+        let ch: Rc<Channel<u32>> = Channel::new(1, 4);
+        ch.set_data_capacity(3);
+        ch.push(1);
+        ch.push(2);
+        ch.push(3);
+        assert_eq!(ch.data_space(), 0);
+        let mut buf = Vec::new();
+        ch.pop_data_into(3, &mut buf);
+        ch.reset();
+        ch.set_data_capacity(2);
+        ch.push(4);
+        assert_eq!(ch.data_space(), 1);
     }
 
     #[test]

@@ -197,6 +197,12 @@ impl<P: Composite> NodeOps for Enumerator<P> {
         Ok(worked)
     }
 
+    fn reset(&mut self) {
+        self.input.reset();
+        self.state = None;
+        self.metrics.reset();
+    }
+
     fn metrics(&self) -> &NodeMetrics {
         &self.metrics
     }
@@ -304,6 +310,29 @@ mod tests {
         assert_eq!(output.signal_len(), 2); // Begin + End
         assert!(!e.has_pending());
         assert!(!e.fireable());
+    }
+
+    #[test]
+    fn reset_clears_mid_parent_progress() {
+        let input: Rc<Channel<Blob>> = Channel::new(8, 4);
+        let output: Rc<Channel<u32>> = Channel::new(2, 16); // tiny: parent stays open
+        input.push(Blob::from_vec(0, vec![0.0; 5]));
+        let mut e = Enumerator::new("enum", 4, input.clone(), output.clone());
+        e.fire().unwrap(); // opens the blob, emits 2 indices, stalls
+        assert!(e.has_pending(), "parent still open");
+        e.reset();
+        output.reset(); // downstream node resets its own input channel
+        assert!(!e.has_pending());
+        assert_eq!(e.metrics().firings, 0);
+        assert_eq!(e.metrics().items, 0);
+        // a fresh parent enumerates as if the node were newly built
+        input.push(Blob::from_vec(1, vec![1.0, 2.0]));
+        while e.fireable() {
+            e.fire().unwrap();
+        }
+        assert_eq!(output.data_len(), 2);
+        assert_eq!(output.signal_len(), 2); // Begin + End
+        assert_eq!(e.metrics().items, 1); // one composite consumed
     }
 
     #[test]

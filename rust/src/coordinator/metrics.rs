@@ -66,6 +66,21 @@ impl NodeMetrics {
         self.full_ensembles as f64 / self.ensembles as f64
     }
 
+    /// Zero every counter in place — the histogram buffer is retained, so
+    /// a reset on the pipeline-reuse path allocates nothing. After a
+    /// reset the metrics are indistinguishable from `NodeMetrics::new`,
+    /// which is what makes a reused pipeline's per-shard metrics fold
+    /// identically to a rebuilt one's.
+    pub fn reset(&mut self) {
+        self.firings = 0;
+        self.ensembles = 0;
+        self.full_ensembles = 0;
+        self.items = 0;
+        self.signals_consumed = 0;
+        self.signals_emitted = 0;
+        self.ensemble_hist.fill(0);
+    }
+
     /// Merge counters from another node instance (multi-worker runs).
     /// Panics on width mismatch — summing histograms of different widths
     /// would silently corrupt the occupancy statistics.
@@ -190,6 +205,26 @@ mod tests {
         let m = NodeMetrics::new(8);
         assert_eq!(m.occupancy(), 0.0);
         assert_eq!(m.full_fraction(), 0.0);
+    }
+
+    #[test]
+    fn reset_matches_a_fresh_instance() {
+        let mut m = NodeMetrics::new(4);
+        m.firings = 7;
+        m.record_ensemble(4);
+        m.record_ensemble(2);
+        m.signals_consumed = 3;
+        m.signals_emitted = 5;
+        m.reset();
+        let fresh = NodeMetrics::new(4);
+        assert_eq!(m.firings, fresh.firings);
+        assert_eq!(m.ensembles, fresh.ensembles);
+        assert_eq!(m.full_ensembles, fresh.full_ensembles);
+        assert_eq!(m.items, fresh.items);
+        assert_eq!(m.signals_consumed, fresh.signals_consumed);
+        assert_eq!(m.signals_emitted, fresh.signals_emitted);
+        assert_eq!(m.ensemble_hist, fresh.ensemble_hist);
+        assert_eq!(m.width, 4);
     }
 
     #[test]

@@ -75,6 +75,15 @@ pub trait NodeLogic {
     fn forward_region_signals(&self) -> bool {
         true
     }
+
+    /// Clear cross-region / cross-run logic state so a reused pipeline is
+    /// indistinguishable from a freshly built one
+    /// ([`Pipeline::reset`](crate::coordinator::topology::Pipeline::reset)).
+    /// Stateless logics — and logics whose state is fully re-initialized
+    /// by `begin()` or overwritten every firing — keep the default no-op;
+    /// logics with stream-scoped accumulation (e.g. the tagged sum's
+    /// per-tag map) must clear it here.
+    fn reset(&mut self) {}
 }
 
 /// Where a node's outputs go: a downstream channel, or a terminal sink
@@ -158,6 +167,13 @@ pub trait NodeOps {
     /// One firing: data phase + signal phase. Returns true if progress
     /// was made.
     fn fire(&mut self) -> Result<bool>;
+    /// Return the node to its just-built state **in place** (pipeline
+    /// reuse): clear the input channel (each node owns resetting its own
+    /// input; outputs are some downstream node's input), re-arm
+    /// credit/region state, clear logic state, and zero metrics — all
+    /// without releasing any buffer capacity. Sink buffers are owned by
+    /// the driver, which collects-and-clears them per shard.
+    fn reset(&mut self);
     fn metrics(&self) -> &NodeMetrics;
     /// Size of the data ensemble a firing would process right now
     /// (0 if only signal work is possible). The occupancy-greedy
@@ -401,6 +417,16 @@ impl<L: NodeLogic> NodeOps for Node<L> {
         Ok(worked)
     }
 
+    fn reset(&mut self) {
+        self.input.reset();
+        self.credit = 0;
+        self.parent = None;
+        self.scratch.clear();
+        self.stage.clear();
+        self.metrics.reset();
+        self.logic.reset();
+    }
+
     fn metrics(&self) -> &NodeMetrics {
         &self.metrics
     }
@@ -582,6 +608,41 @@ mod tests {
         // items of different regions never shared an ensemble
         assert_eq!(node.metrics().ensemble_hist[2], 1);
         assert_eq!(node.metrics().ensemble_hist[1], 1);
+    }
+
+    #[test]
+    fn reset_rearms_credit_parent_and_metrics() {
+        let ch = Channel::new(64, 8);
+        let p: ParentRef = Rc::new(3u64);
+        ch.emit_signal(SignalKind::RegionBegin { parent: p.clone() });
+        ch.push(1.0);
+        ch.push(2.0);
+        // open the region (firing 1 consumes the Begin), run one ensemble
+        // (firing 2), then leave unconsumed data behind
+        let (mut node, sink) = sink_node(4, ch.clone());
+        node.fire().unwrap();
+        node.fire().unwrap();
+        assert_eq!(node.metrics().ensembles, 1);
+        ch.push(7.0); // pending data inside the still-open region
+
+        node.reset();
+        assert!(!node.has_pending(), "input channel cleared");
+        assert!(!node.fireable());
+        assert_eq!(node.metrics().firings, 0);
+        assert_eq!(node.metrics().ensembles, 0);
+
+        // a rerun behaves exactly like a fresh node over a fresh channel
+        sink.borrow_mut().clear();
+        let q: ParentRef = Rc::new(9u64);
+        ch.emit_signal(SignalKind::RegionBegin { parent: q.clone() });
+        ch.push(5.0);
+        ch.emit_signal(SignalKind::RegionEnd { parent: q });
+        while node.fireable() {
+            node.fire().unwrap();
+        }
+        assert_eq!(*sink.borrow(), vec![10.0]);
+        assert_eq!(node.metrics().ensembles, 1);
+        assert_eq!(node.metrics().signals_consumed, 2);
     }
 
     #[test]

@@ -105,6 +105,32 @@ impl<T> DataQueue<T> {
     pub fn pop(&mut self) -> Option<T> {
         self.buf.pop_front()
     }
+
+    /// Discard all queued items in place. The ring keeps its allocation,
+    /// so a clear on the reuse path ([`Channel::reset`]) costs no
+    /// allocator traffic.
+    ///
+    /// [`Channel::reset`]: super::channel::Channel::reset
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Re-target the logical capacity (per-shard source sizing for
+    /// persistent pipelines). The ring's allocation never shrinks; it
+    /// grows only when `cap` exceeds every previously requested capacity
+    /// — the capacity-regrowth path, amortized to zero across shards.
+    pub fn set_capacity(&mut self, cap: usize) {
+        debug_assert!(
+            self.buf.is_empty(),
+            "set_capacity on a non-empty queue would strand queued items \
+             past the new bound"
+        );
+        self.capacity = cap;
+        let target = cap.min(PRE_RESERVE_CAP);
+        if self.buf.capacity() < target {
+            self.buf.reserve(target - self.buf.len());
+        }
+    }
 }
 
 /// Fixed-capacity FIFO of signals.
@@ -165,6 +191,12 @@ impl SignalQueue {
     pub fn pop(&mut self) -> Option<Signal> {
         debug_assert_eq!(self.head_credit(), 0, "consuming signal with credit");
         self.buf.pop_front()
+    }
+
+    /// Discard all queued signals in place (capacity retained — see
+    /// [`DataQueue::clear`]).
+    pub fn clear(&mut self) {
+        self.buf.clear();
     }
 }
 
@@ -237,6 +269,57 @@ mod tests {
         let mut q = DataQueue::new(2);
         q.push(9);
         q.push_slice(&[1, 2]);
+    }
+
+    #[test]
+    fn clear_empties_without_touching_capacity() {
+        let mut q = DataQueue::new(4);
+        q.push_slice(&[1, 2, 3]);
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.capacity(), 4);
+        assert_eq!(q.space(), 4);
+        // still usable after the clear
+        q.push_slice(&[9, 8, 7, 6]);
+        assert_eq!(q.len(), 4);
+    }
+
+    #[test]
+    fn set_capacity_retargets_the_bound() {
+        let mut q: DataQueue<u32> = DataQueue::new(2);
+        q.push(1);
+        q.pop();
+        q.set_capacity(5);
+        assert_eq!(q.capacity(), 5);
+        q.push_slice(&[1, 2, 3, 4, 5]);
+        assert_eq!(q.space(), 0);
+        // shrinking the logical bound keeps the ring allocation
+        let mut out = Vec::new();
+        q.pop_into(5, &mut out);
+        q.set_capacity(1);
+        assert_eq!(q.capacity(), 1);
+        q.push(7);
+        assert_eq!(q.space(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "data queue overflow")]
+    fn shrunk_capacity_is_enforced() {
+        let mut q: DataQueue<u32> = DataQueue::new(8);
+        q.set_capacity(1);
+        q.push(1);
+        q.push(2);
+    }
+
+    #[test]
+    fn signal_queue_clear_keeps_capacity() {
+        let mut s = SignalQueue::new(2);
+        s.push(Signal::new(SignalKind::Custom(1), 3));
+        s.push(Signal::new(SignalKind::Custom(2), 0));
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.space(), 2);
+        assert_eq!(s.head_credit(), 0);
     }
 
     #[test]

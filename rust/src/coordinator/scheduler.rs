@@ -22,9 +22,12 @@
 //! full rescan: cached values equal freshly computed values for every
 //! non-dirty node because its queues did not change.
 //!
-//! Callers without wiring information ([`Scheduler::run`]) fall back to
-//! refreshing every node after each firing — same decisions, original
-//! scan cost.
+//! The builder hands the recorded adjacency to the scheduler once, at
+//! assembly time ([`Scheduler::set_adjacency`]), so plain
+//! [`Scheduler::run`] gets the fast path. Callers without wiring
+//! information (no adjacency set, or an explicit
+//! `run_with(nodes, None)`) fall back to refreshing every node after
+//! each firing — same decisions, original scan cost.
 
 use anyhow::{bail, Result};
 
@@ -94,6 +97,9 @@ pub struct Scheduler {
     rr_cursor: usize,
     /// Ready-set cache, one entry per node (rebuilt at each `run`).
     states: Vec<ReadyState>,
+    /// Builder-recorded channel adjacency (see
+    /// [`Scheduler::set_adjacency`]); `None` until wired.
+    adjacency: Option<Vec<Vec<usize>>>,
 }
 
 impl Scheduler {
@@ -104,21 +110,49 @@ impl Scheduler {
             idle_polls: 0,
             rr_cursor: 0,
             states: Vec::new(),
+            adjacency: None,
         }
     }
 
-    /// Run nodes to quiescence with no wiring information: every firing
-    /// refreshes every node (the pre-ready-set behaviour). `nodes` must
-    /// be in topology order (upstream first).
-    pub fn run(&mut self, nodes: &mut [Box<dyn NodeOps>]) -> Result<()> {
-        self.run_with(nodes, None)
+    /// Record the channel adjacency derived while wiring the graph:
+    /// `affected[i]` lists the node indices whose cached ready state must
+    /// be refreshed after node `i` fires (always including `i`). Once
+    /// set, plain [`Scheduler::run`] gets the ready-set fast path —
+    /// callers no longer need to thread the adjacency through
+    /// [`Scheduler::run_with`] themselves.
+    pub fn set_adjacency(&mut self, affected: Vec<Vec<usize>>) {
+        self.adjacency = Some(affected);
     }
 
-    /// Run nodes to quiescence. When `affected` is given, `affected[i]`
-    /// lists the node indices whose cached state must be refreshed after
-    /// node `i` fires (always including `i` itself); the builder derives
-    /// it from channel wiring. Scheduling decisions are identical either
-    /// way.
+    /// Zero the run counters, cursor and ready-set cache so a following
+    /// `run` behaves exactly like a freshly constructed scheduler
+    /// (pipeline reuse). The recorded adjacency is structural wiring, not
+    /// run state, and survives the reset.
+    pub fn reset(&mut self) {
+        self.firings = 0;
+        self.idle_polls = 0;
+        self.rr_cursor = 0;
+        self.states.clear();
+    }
+
+    /// Run nodes to quiescence. Uses the adjacency recorded by
+    /// [`Scheduler::set_adjacency`] when available (the ready-set fast
+    /// path); without it every firing refreshes every node (the
+    /// pre-ready-set behaviour — same decisions, original scan cost).
+    /// `nodes` must be in topology order (upstream first).
+    pub fn run(&mut self, nodes: &mut [Box<dyn NodeOps>]) -> Result<()> {
+        let adjacency = self.adjacency.take();
+        let result = self.run_with(nodes, adjacency.as_deref());
+        self.adjacency = adjacency;
+        result
+    }
+
+    /// Run nodes to quiescence with an explicit adjacency override. When
+    /// `affected` is given, `affected[i]` lists the node indices whose
+    /// cached state must be refreshed after node `i` fires (always
+    /// including `i` itself); `None` forces the refresh-all fallback
+    /// regardless of any recorded adjacency. Scheduling decisions are
+    /// identical either way.
     pub fn run_with(
         &mut self,
         nodes: &mut [Box<dyn NodeOps>],
@@ -322,6 +356,44 @@ mod tests {
         assert_eq!(*a_sink.borrow(), *b_sink.borrow());
         assert_eq!(a.firings, b.firings);
         assert_eq!(a.idle_polls, b.idle_polls);
+    }
+
+    #[test]
+    fn run_uses_recorded_adjacency_and_matches_fallback() {
+        // run() with set_adjacency must make decisions identical to both
+        // the refresh-all fallback and an explicit run_with override
+        let (mut a_nodes, a_sink) = two_stage();
+        let mut a = Scheduler::new(Policy::GreedyOccupancy);
+        a.run(&mut a_nodes).unwrap(); // no adjacency: refresh-all
+
+        let (mut b_nodes, b_sink) = two_stage();
+        let mut b = Scheduler::new(Policy::GreedyOccupancy);
+        b.set_adjacency(vec![vec![0, 1], vec![0, 1]]);
+        b.run(&mut b_nodes).unwrap(); // recorded adjacency: fast path
+
+        assert_eq!(*a_sink.borrow(), *b_sink.borrow());
+        assert_eq!(a.firings, b.firings);
+        assert_eq!(a.idle_polls, b.idle_polls);
+    }
+
+    #[test]
+    fn reset_restores_fresh_counters_but_keeps_adjacency() {
+        let (mut nodes, sink) = two_stage();
+        let mut s = Scheduler::new(Policy::GreedyOccupancy);
+        s.set_adjacency(vec![vec![0, 1], vec![0, 1]]);
+        s.run(&mut nodes).unwrap();
+        let (firings, idle) = (s.firings, s.idle_polls);
+        assert!(firings > 0);
+        s.reset();
+        assert_eq!(s.firings, 0);
+        assert_eq!(s.idle_polls, 0);
+        // a second identical run over a fresh graph reproduces the first
+        // run's counters exactly (adjacency survived the reset)
+        let (mut nodes2, sink2) = two_stage();
+        s.run(&mut nodes2).unwrap();
+        assert_eq!(s.firings, firings);
+        assert_eq!(s.idle_polls, idle);
+        assert_eq!(*sink.borrow(), *sink2.borrow());
     }
 
     #[test]

@@ -235,23 +235,25 @@ impl PipelineBuilder {
             a.sort_unstable();
             a.dedup();
         }
+        // the adjacency is structural wiring: hand it to the scheduler
+        // once so every later `run` (and any direct `Scheduler::run`
+        // caller) gets the ready-set fast path
+        let mut scheduler = Scheduler::new(self.policy);
+        scheduler.set_adjacency(affected);
         Pipeline {
             nodes: self.nodes,
-            scheduler: Scheduler::new(self.policy),
+            scheduler,
             elapsed: 0.0,
-            affected,
         }
     }
 }
 
-/// An assembled pipeline: nodes in topology order plus a scheduler.
+/// An assembled pipeline: nodes in topology order plus a scheduler
+/// (carrying the builder-recorded ready-set adjacency).
 pub struct Pipeline {
     nodes: Vec<Box<dyn NodeOps>>,
     scheduler: Scheduler,
     elapsed: f64,
-    /// Ready-set adjacency: `affected[i]` = nodes to re-evaluate after
-    /// node `i` fires.
-    affected: Vec<Vec<usize>>,
 }
 
 impl Pipeline {
@@ -259,9 +261,29 @@ impl Pipeline {
     /// channel between calls); metrics accumulate.
     pub fn run(&mut self) -> Result<()> {
         let start = Instant::now();
-        self.scheduler.run_with(&mut self.nodes, Some(&self.affected))?;
+        self.scheduler.run(&mut self.nodes)?;
         self.elapsed += start.elapsed().as_secs_f64();
         Ok(())
+    }
+
+    /// Return the pipeline to its just-built state **without releasing
+    /// any capacity** — the reset-not-rebuild half of the zero-rebuild
+    /// worker contract. Every node re-arms its credit/region/logic state
+    /// and clears its input channel in place (rings keep their
+    /// allocations), and all metrics and scheduler counters zero, so a
+    /// following feed + [`Pipeline::run`] produces outputs *and metrics*
+    /// bit-identical to a freshly built pipeline fed the same stream.
+    /// Sink buffers are driver-owned: collect and clear them per shard.
+    ///
+    /// On the steady-state reuse path a reset performs no heap
+    /// allocation (`rust/tests/hotpath_alloc.rs` pins this across
+    /// shards).
+    pub fn reset(&mut self) {
+        for node in &mut self.nodes {
+            node.reset();
+        }
+        self.scheduler.reset();
+        self.elapsed = 0.0;
     }
 
     /// Collected metrics snapshot.
@@ -341,6 +363,64 @@ mod tests {
         assert!(m.node("f").unwrap().occupancy() < 1.0);
         assert_eq!(m.node("a").unwrap().signals_consumed, 6);
         assert_eq!(m.idle_polls, 1);
+    }
+
+    /// Reset-not-rebuild: a reused pipeline re-fed the same stream must
+    /// reproduce a fresh build's outputs AND metrics exactly.
+    #[test]
+    fn reset_pipeline_reruns_identically() {
+        let build = || {
+            let mut b = PipelineBuilder::new(4).queue_caps(64, 32);
+            let src = b.source_with_cap::<Blob>(8);
+            let elems = b.enumerate("enum", &src);
+            let sums = b.sink(
+                "a",
+                &elems,
+                Aggregator::new(
+                    0u64,
+                    |acc: &mut u64, items: &[u32], _| {
+                        *acc += items.iter().map(|&i| i as u64).sum::<u64>();
+                        Ok(())
+                    },
+                    |acc: &mut u64, _| Ok(Some(*acc)),
+                ),
+            );
+            (b.build(), src, sums)
+        };
+        let feed = |src: &Rc<crate::coordinator::channel::Channel<Blob>>| {
+            for id in 0..5 {
+                src.push(Blob::from_vec(id, vec![1.0; 3 + id as usize]));
+            }
+        };
+
+        let (mut fresh, src_f, sums_f) = build();
+        feed(&src_f);
+        fresh.run().unwrap();
+        let want = sums_f.borrow().clone();
+        let want_m = fresh.metrics();
+
+        let (mut reused, src_r, sums_r) = build();
+        // first use: a different stream, then reset and replay the real one
+        src_r.push(Blob::from_vec(99, vec![2.0; 17]));
+        reused.run().unwrap();
+        reused.reset();
+        sums_r.borrow_mut().clear(); // sinks are driver-owned
+        feed(&src_r);
+        reused.run().unwrap();
+
+        assert_eq!(*sums_r.borrow(), want);
+        let got_m = reused.metrics();
+        assert_eq!(got_m.idle_polls, want_m.idle_polls);
+        for ((gn, g), (wn, w)) in got_m.nodes.iter().zip(&want_m.nodes) {
+            assert_eq!(gn, wn);
+            assert_eq!(g.firings, w.firings, "{gn}: firings");
+            assert_eq!(g.ensembles, w.ensembles, "{gn}: ensembles");
+            assert_eq!(g.items, w.items, "{gn}: items");
+            assert_eq!(g.signals_consumed, w.signals_consumed, "{gn}");
+            assert_eq!(g.signals_emitted, w.signals_emitted, "{gn}");
+            assert_eq!(g.ensemble_hist, w.ensemble_hist, "{gn}: histogram");
+        }
+        assert_eq!(reused.firings(), fresh.firings());
     }
 
     /// Region boundaries cap ensembles: with region size == width,

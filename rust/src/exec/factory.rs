@@ -1,6 +1,11 @@
 //! How apps hand the executor a pipeline: a [`PipelineFactory`] describes
 //! how to build a fresh, fully private pipeline instance inside a worker
 //! thread, and the [`ShardWorker`] it returns runs one shard at a time.
+//! A worker's pipeline is built **once** (in `make_worker`) and lives as
+//! long as the worker: `run_shard` resets the persistent graph between
+//! shards instead of rebuilding it, and
+//! [`ShardWorker::pipelines_built`] reports the build count so reports
+//! can prove builds scale with workers, not shards.
 //!
 //! The coordinator is `Rc`-based and single-threaded by design; nothing in
 //! it is `Send`. The factory is the seam that keeps it that way: the
@@ -42,6 +47,17 @@ pub trait ShardWorker {
     /// Run one shard (a contiguous slice of the input stream) through a
     /// fresh-or-reused pipeline to quiescence.
     fn run_shard(&mut self, shard: &[Self::In]) -> Result<ShardOutput<Self::Out>>;
+
+    /// Cumulative node-graph builds this worker has performed so far —
+    /// the zero-rebuild proof. A persistent worker builds once in
+    /// `make_worker` and reports 1 however many shards it runs; a worker
+    /// that rebuilds per `run_shard` reports the build count. The pool
+    /// samples this after every shard and the merge folds it per worker
+    /// ([`WorkerStats::pipelines_built`](super::merge::WorkerStats)), so
+    /// `ExecReport::pipelines_built == workers` is testable end to end.
+    fn pipelines_built(&self) -> u64 {
+        1
+    }
 }
 
 /// Describes how to instantiate one pipeline per worker. Shared by
@@ -57,7 +73,9 @@ pub trait PipelineFactory: Sync {
 
     /// Build a fresh pipeline (and kernel engine) for worker `worker_id`.
     /// Called lazily, inside the worker's own thread, the first time that
-    /// worker claims a shard.
+    /// worker claims a shard — and only then: the returned worker's
+    /// pipeline is expected to persist across every shard that worker
+    /// runs (reset, not rebuild).
     fn make_worker(&self, worker_id: usize) -> Result<Self::Worker>;
 
     /// Item weight of one region, used by the shard planner to balance

@@ -41,6 +41,10 @@ pub struct WorkerStats {
     pub invocations: u64,
     /// Seconds spent actually running shards (its busy time).
     pub busy: f64,
+    /// Node graphs this worker built over its lifetime (the maximum
+    /// cumulative count its shard results reported) — 1 for a
+    /// persistent reset-not-rebuild worker, regardless of `shards`.
+    pub pipelines_built: u64,
     /// Its pipeline metrics, folded across its shards.
     pub metrics: PipelineMetrics,
 }
@@ -61,6 +65,11 @@ pub struct ExecReport<T> {
     pub shards: usize,
     /// Shards that changed workers via stealing.
     pub steals: usize,
+    /// Total node-graph builds across workers. The zero-rebuild
+    /// invariant: equals the number of workers that claimed ≥ 1 shard
+    /// (`per_worker.len()`), **not** `shards` — each worker builds its
+    /// pipeline once and resets it between shards.
+    pub pipelines_built: u64,
     /// Wall-clock seconds of the whole sharded run (plan + pool + merge).
     pub elapsed: f64,
     /// Per-worker breakdown, sorted by worker id (workers that never
@@ -81,14 +90,16 @@ impl<T> ExecReport<T> {
 
     /// Render the per-worker breakdown (used by `--stats`).
     pub fn worker_table(&self) -> String {
-        let mut out =
-            String::from("worker   shards   stolen   outputs   kernel_inv   busy_s    occ%\n");
+        let mut out = String::from(
+            "worker   shards   stolen   built   outputs   kernel_inv   busy_s    occ%\n",
+        );
         for w in &self.per_worker {
             out.push_str(&format!(
-                "{:<8} {:>6}  {:>6}  {:>8}  {:>11}  {:>7.3}  {:>5.1}\n",
+                "{:<8} {:>6}  {:>6}  {:>5}  {:>8}  {:>11}  {:>7.3}  {:>5.1}\n",
                 w.worker,
                 w.shards,
                 w.steals,
+                w.pipelines_built,
                 w.outputs,
                 w.invocations,
                 w.busy,
@@ -143,6 +154,7 @@ impl<T> ReportBuilder<T> {
             outputs: 0,
             invocations: 0,
             busy: 0.0,
+            pipelines_built: 0,
             metrics: PipelineMetrics::default(),
         });
         w.shards += 1;
@@ -150,6 +162,9 @@ impl<T> ReportBuilder<T> {
         w.outputs += r.outputs.len();
         w.invocations += r.invocations;
         w.busy += r.elapsed;
+        // the result carries the worker's CUMULATIVE build count, so the
+        // per-worker figure is a max-fold, not a sum
+        w.pipelines_built = w.pipelines_built.max(r.pipelines_built);
         w.metrics.merge(&r.metrics);
     }
 
@@ -162,14 +177,17 @@ impl<T> ReportBuilder<T> {
     /// Finish into a report. `outputs` holds whatever [`ReportBuilder::add`]
     /// collected (empty for sink-consumed streaming runs).
     pub fn finish(self, elapsed: f64) -> ExecReport<T> {
+        let per_worker: Vec<WorkerStats> = self.per_worker.into_values().collect();
+        let pipelines_built = per_worker.iter().map(|w| w.pipelines_built).sum();
         ExecReport {
             outputs: self.outputs,
             metrics: self.metrics,
             invocations: self.invocations,
             shards: self.shards,
             steals: self.steals,
+            pipelines_built,
             elapsed,
-            per_worker: self.per_worker.into_values().collect(),
+            per_worker,
         }
     }
 }
@@ -260,6 +278,7 @@ mod tests {
             metrics,
             invocations: items as u64,
             elapsed: 0.5,
+            pipelines_built: 1,
         }
     }
 
@@ -302,7 +321,35 @@ mod tests {
         let table = report.worker_table();
         assert!(table.contains("worker"), "{table}");
         assert!(table.contains("stolen"), "{table}");
+        assert!(table.contains("built"), "{table}");
         assert!(report.utilization() > 0.0);
+    }
+
+    #[test]
+    fn pipeline_builds_fold_per_worker_not_per_shard() {
+        // worker 1 ran two shards on ONE persistent pipeline (cumulative
+        // build count 1 on both results); worker 0 ran one shard. The
+        // report must show builds == workers (2), not shards (3).
+        let report = merge_results(
+            vec![
+                shard(0, 1, vec![1, 2], 2),
+                shard(1, 0, vec![3], 1),
+                shard(2, 1, vec![4, 5], 2),
+            ],
+            2.0,
+        );
+        assert_eq!(report.shards, 3);
+        assert_eq!(report.pipelines_built, 2);
+        assert_eq!(report.per_worker[0].pipelines_built, 1);
+        assert_eq!(report.per_worker[1].pipelines_built, 1);
+
+        // a worker that rebuilt per shard reports a growing cumulative
+        // count; the max-fold surfaces the rebuild instead of hiding it
+        let mut rebuilt = vec![shard(0, 0, vec![1], 1), shard(1, 0, vec![2], 1)];
+        rebuilt[1].pipelines_built = 2;
+        let report = merge_results(rebuilt, 1.0);
+        assert_eq!(report.pipelines_built, 2, "rebuild must be visible");
+        assert_eq!(report.per_worker[0].pipelines_built, 2);
     }
 
     #[test]

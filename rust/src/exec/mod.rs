@@ -45,9 +45,12 @@
 //!   on the fly, against a bounded in-flight budget ([`IngestPolicy`])
 //!   with backpressure and container recycling.
 //! * [`factory`] — [`PipelineFactory`]/[`ShardWorker`]: how an app
-//!   instantiates a fresh pipeline per worker thread (plus
-//!   [`KernelSpawn`], which builds per-thread kernel sets — PJRT client
-//!   handles are thread-confined, so each worker owns its engine).
+//!   instantiates one **persistent** pipeline per worker thread — built
+//!   once in `make_worker`, reset (not rebuilt) between shards, with
+//!   [`ShardWorker::pipelines_built`] proving builds scale with workers
+//!   and never shards (plus [`KernelSpawn`], which builds per-thread
+//!   kernel sets — PJRT client handles are thread-confined, so each
+//!   worker owns its engine).
 //! * [`steal`] — [`StealQueues`]: per-worker shard deques with
 //!   LIFO-local / FIFO-steal claiming ([`ClaimMode`] selects stealing,
 //!   no-steal, or the legacy atomic cursor for benchmarking).

@@ -56,6 +56,10 @@ pub struct ShardResult<T> {
     pub invocations: u64,
     /// Wall-clock seconds this shard took on its worker.
     pub elapsed: f64,
+    /// The executing worker's cumulative pipeline-build count when this
+    /// shard finished ([`ShardWorker::pipelines_built`]) — 1 for every
+    /// shard of a persistent (reset-not-rebuild) worker.
+    pub pipelines_built: u64,
 }
 
 /// Best-effort text of a thread panic payload (panics carry `&str` or
@@ -223,6 +227,7 @@ impl WorkerPool {
                         metrics: out.metrics,
                         invocations: out.invocations,
                         elapsed: t0.elapsed().as_secs_f64(),
+                        pipelines_built: p.pipelines_built(),
                     }),
                     Err(e) => {
                         stop.store(true, Ordering::Relaxed);
@@ -539,6 +544,7 @@ fn stream_worker<F: PipelineFactory>(
                     metrics: out.metrics,
                     invocations: out.invocations,
                     elapsed: t0.elapsed().as_secs_f64(),
+                    pipelines_built: p.pipelines_built(),
                 };
                 // Hand each region back through the factory (a pooled
                 // factory reclaims its element buffers for the ingest
@@ -658,6 +664,25 @@ mod tests {
                     assert_eq!(r.regions, plan.range(i).len());
                 }
             }
+        }
+    }
+
+    #[test]
+    fn shard_results_carry_the_worker_build_count() {
+        let stream = items(200);
+        let weights = vec![1usize; 200];
+        let plan = ShardPlan::build(
+            &weights,
+            3,
+            &ShardPolicy {
+                shards_per_worker: 4,
+                ..ShardPolicy::default()
+            },
+        );
+        let results = WorkerPool::new(3).run(&ToyFactory::plain(), &stream, &plan).unwrap();
+        assert!(results.len() > 3, "want several shards per worker");
+        for r in &results {
+            assert_eq!(r.pipelines_built, 1, "shard {}", r.shard);
         }
     }
 

@@ -83,9 +83,11 @@ static GLOBAL_ALLOCATOR: util::alloc_count::CountingAllocator =
 
 pub mod prelude {
     //! One-stop imports for application authors.
-    pub use crate::apps::sum::{SumApp, SumConfig, SumFactory, SumMode, SumReport, SumShape};
+    pub use crate::apps::sum::{
+        SumApp, SumConfig, SumFactory, SumMode, SumPipeline, SumReport, SumShape,
+    };
     pub use crate::apps::taxi::{
-        TaxiApp, TaxiConfig, TaxiFactory, TaxiPair, TaxiReport, TaxiVariant,
+        TaxiApp, TaxiConfig, TaxiFactory, TaxiPair, TaxiPipeline, TaxiReport, TaxiVariant,
     };
     pub use crate::coordinator::{
         aggregate::{Aggregator, FilterMapLogic, MapLogic},

@@ -62,7 +62,8 @@ USAGE:
                     [--items N] [--width W] [--backend xla|native]
                     [--workers K1,K2,...] [--json FILE]
   regatta bench hotpath [--smoke] [--items N] [--widths W1,W2,...]
-                    [--policy greedy|deepest|rr] [--json FILE] [--check BASELINE]
+                    [--policy greedy|deepest|rr] [--reuse-granules G1,G2,...]
+                    [--json FILE] [--check BASELINE]
   regatta bench ingest  [--smoke] [--items N] [--width W] [--workers K1,K2,...]
                     [--ingest-buffer R] [--json FILE]
   regatta bench io      [--smoke] [--items N] [--width W] [--workers K]
@@ -636,6 +637,11 @@ fn run_bench_hotpath(args: &Args) -> Result<()> {
     cfg.widths = args.list_or("widths", &cfg.widths)?;
     cfg.items = args.get_or("items", cfg.items)?;
     cfg.seed = args.get_or("seed", cfg.seed)?;
+    cfg.reuse_granules = args.list_or("reuse-granules", &cfg.reuse_granules)?;
+    anyhow::ensure!(
+        cfg.reuse_granules.iter().all(|&g| g >= 1),
+        "--reuse-granules entries must be >= 1 (regions per shard)"
+    );
     if args.opt("policy").is_some() {
         cfg.policies = vec![policy(args)?];
     }

@@ -183,6 +183,105 @@ fn steady_state_reduction_firing_allocates_exactly_zero() {
 }
 
 #[test]
+fn cross_shard_reuse_allocations_do_not_scale_with_shard_count() {
+    // The worker-side reuse contract: a persistent SumPipeline, reset
+    // between shards, pays only the inherent per-shard costs (feeding
+    // region clones, one Rc parent per region, the output vector, the
+    // metrics snapshot) — never a graph rebuild. Three checks:
+    //  1. re-running the same warmed shard window costs the same
+    //     (constant per-shard slope — reset itself allocates nothing);
+    //  2. the reused slope is a fraction of the rebuild-per-shard cost
+    //     (the overhead this PR removes);
+    use regatta::apps::sum::SumPipeline;
+    let cfg = SumConfig {
+        width: W,
+        mode: SumMode::Enumerated,
+        shape: SumShape::Fused,
+        data_cap: 256,
+        signal_cap: 64,
+        ..Default::default()
+    };
+    let ks = Rc::new(KernelSet::native(W));
+    let blobs = gen_blobs(240 * W, RegionSpec::Fixed { size: W }, 5); // 240 regions
+    let shards: Vec<&[regatta::prelude::Blob]> = blobs.chunks(2).collect();
+
+    let mut pipeline = SumPipeline::build(cfg, ks.clone());
+    for shard in shards.iter().take(20) {
+        pipeline.run_shard(shard).unwrap(); // warmup: grow every buffer
+    }
+    let run_window = |pipeline: &mut SumPipeline| -> u64 {
+        let before = alloc_count::thread_allocations();
+        for shard in &shards[20..70] {
+            pipeline.run_shard(shard).unwrap();
+        }
+        alloc_count::thread_allocations() - before
+    };
+    let first = run_window(&mut pipeline);
+    let second = run_window(&mut pipeline);
+    assert!(
+        second <= first + 8,
+        "reused pipeline accumulates allocations across shards: {first} then {second} \
+         over the same 50-shard window"
+    );
+
+    let app = SumApp::new(cfg, ks);
+    let before = alloc_count::thread_allocations();
+    for shard in &shards[20..70] {
+        app.run(shard).unwrap(); // fresh build per shard: the old behaviour
+    }
+    let rebuilt = alloc_count::thread_allocations() - before;
+    assert!(
+        2 * second <= rebuilt,
+        "reuse should cost well under half of rebuild per shard: reused {second} vs \
+         rebuilt {rebuilt} allocations over 50 shards"
+    );
+}
+
+#[test]
+fn cross_shard_reuse_allocations_do_not_scale_with_ensembles() {
+    // same regions per shard, 50x the elements (≈50x the ensembles):
+    // a warmed reused pipeline shows the same allocation count, because
+    // every per-shard allocation is region-granular (clone-feed, Rc
+    // parent, output vector) — reset adds nothing ensemble-shaped
+    use regatta::apps::sum::SumPipeline;
+    let cfg = SumConfig {
+        width: 8,
+        mode: SumMode::Enumerated,
+        shape: SumShape::Fused,
+        data_cap: 256,
+        signal_cap: 64,
+        ..Default::default()
+    };
+    let small = gen_blobs(40 * 8, RegionSpec::Fixed { size: 8 }, 42); // 40 regions
+    let large = gen_blobs(40 * 400, RegionSpec::Fixed { size: 400 }, 42); // 40 regions
+    let mut pipeline = SumPipeline::build(cfg, Rc::new(KernelSet::native(8)));
+    for shard in large.chunks(4) {
+        pipeline.run_shard(shard).unwrap(); // warm on the big shape
+    }
+    for shard in small.chunks(4) {
+        pipeline.run_shard(shard).unwrap();
+    }
+
+    let before = alloc_count::thread_allocations();
+    for shard in small.chunks(4) {
+        pipeline.run_shard(shard).unwrap();
+    }
+    let allocs_small = alloc_count::thread_allocations() - before;
+
+    let before = alloc_count::thread_allocations();
+    for shard in large.chunks(4) {
+        pipeline.run_shard(shard).unwrap();
+    }
+    let allocs_large = alloc_count::thread_allocations() - before;
+
+    assert!(
+        allocs_large <= allocs_small + 16,
+        "cross-shard allocations scale with ensembles: {allocs_small} (small shards) vs \
+         {allocs_large} (50x elements)"
+    );
+}
+
+#[test]
 fn pipeline_allocations_do_not_scale_with_ensemble_count() {
     // same number of regions (so identical counts of region-granular
     // allocations: Rc parents, sink growth, feed clones), but 50x the

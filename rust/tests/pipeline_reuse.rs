@@ -1,0 +1,333 @@
+//! Reset-not-rebuild correctness: a persistent worker pipeline
+//! ([`SumPipeline`]/[`TaxiPipeline`]), reset between shards, must be
+//! observationally identical — outputs *and* per-shard metrics — to
+//! building a fresh pipeline for every shard (the PR 1 single-threaded
+//! oracle). The shard sequences deliberately include empty shards,
+//! shards larger than every previous one (the source-capacity regrowth
+//! path), and tagged-mode streams whose per-tag state would leak across
+//! shards if reset missed it.
+//!
+//! The executor half: `ExecReport::pipelines_built` must equal the
+//! number of workers that claimed a shard — never the shard count — for
+//! materialized and streamed runs across workers 1–8 and every app
+//! mode, with merged outputs still matching the single-run oracle.
+
+use std::rc::Rc;
+
+use regatta::apps::sum::{
+    finish_sharded_outputs, SumApp, SumConfig, SumFactory, SumMode, SumPipeline, SumShape,
+};
+use regatta::apps::taxi::{TaxiApp, TaxiConfig, TaxiFactory, TaxiPipeline, TaxiVariant};
+use regatta::coordinator::metrics::PipelineMetrics;
+use regatta::exec::{ExecConfig, ExecReport, KernelSpawn, ShardedRunner};
+use regatta::prelude::{Blob, Policy};
+use regatta::runtime::kernels::KernelSet;
+use regatta::workload::regions::{gen_blobs, RegionSpec};
+use regatta::workload::source::SliceSource;
+use regatta::workload::taxi::{generate, TaxiGenConfig, TaxiWorkload};
+
+const WIDTH: usize = 8;
+
+fn sum_cfg(mode: SumMode, shape: SumShape) -> SumConfig {
+    SumConfig {
+        width: WIDTH,
+        mode,
+        shape,
+        data_cap: 256,
+        signal_cap: 64,
+        ..Default::default()
+    }
+}
+
+fn taxi_cfg(variant: TaxiVariant) -> TaxiConfig {
+    TaxiConfig {
+        width: WIDTH,
+        variant,
+        data_cap: 512,
+        signal_cap: 128,
+        policy: Policy::GreedyOccupancy,
+    }
+}
+
+/// Deterministic irregular shard cuts over `total` regions: empty
+/// shards, a spread of small/medium/large sizes, and (by construction
+/// below) shards that outsize every earlier one.
+fn shard_sizes(seed: u64, total: usize) -> Vec<usize> {
+    let mut s = seed | 1;
+    let mut step = || {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        s
+    };
+    let mut sizes = Vec::new();
+    let mut used = 0usize;
+    while used < total {
+        let r = step();
+        let pick = match r % 7 {
+            0 => 0, // empty shard: reset → feed nothing → drain nothing
+            1..=3 => (r / 7 % 5) as usize + 1,
+            4 | 5 => (r / 7 % 40) as usize + 10,
+            _ => (r / 7 % 200) as usize + 50,
+        };
+        let pick = pick.min(total - used);
+        sizes.push(pick);
+        used += pick;
+    }
+    sizes
+}
+
+fn assert_metrics_equal(got: &PipelineMetrics, want: &PipelineMetrics, ctx: &str) {
+    assert_eq!(got.idle_polls, want.idle_polls, "{ctx}: idle polls");
+    assert_eq!(got.nodes.len(), want.nodes.len(), "{ctx}: node count");
+    for ((gn, g), (wn, w)) in got.nodes.iter().zip(&want.nodes) {
+        assert_eq!(gn, wn, "{ctx}: node order");
+        assert_eq!(g.firings, w.firings, "{ctx}/{gn}: firings");
+        assert_eq!(g.ensembles, w.ensembles, "{ctx}/{gn}: ensembles");
+        assert_eq!(g.full_ensembles, w.full_ensembles, "{ctx}/{gn}: full");
+        assert_eq!(g.items, w.items, "{ctx}/{gn}: items");
+        assert_eq!(g.signals_consumed, w.signals_consumed, "{ctx}/{gn}: sig in");
+        assert_eq!(g.signals_emitted, w.signals_emitted, "{ctx}/{gn}: sig out");
+        assert_eq!(g.ensemble_hist, w.ensemble_hist, "{ctx}/{gn}: histogram");
+    }
+}
+
+fn assert_sums_bitwise(got: &[(u64, f64)], want: &[(u64, f64)], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: output count");
+    for ((gi, gv), (wi, wv)) in got.iter().zip(want) {
+        assert_eq!(gi, wi, "{ctx}: region id");
+        assert_eq!(gv.to_bits(), wv.to_bits(), "{ctx}: region {gi}");
+    }
+}
+
+#[test]
+fn reused_sum_pipeline_is_bit_identical_to_fresh_builds_across_shard_sequences() {
+    let shapes = [
+        (SumMode::Enumerated, SumShape::Fused),
+        (SumMode::Enumerated, SumShape::TwoStage),
+        (SumMode::Tagged, SumShape::Fused),
+    ];
+    for (mode, shape) in shapes {
+        for (seed, spec) in [
+            (31u64, RegionSpec::Uniform { max: 30 }),
+            (32, RegionSpec::Fixed { size: WIDTH }),
+            (33, RegionSpec::Skewed { max: 80 }),
+        ] {
+            let cfg = sum_cfg(mode, shape);
+            let app = SumApp::new(cfg, Rc::new(KernelSet::native(WIDTH)));
+            let blobs = gen_blobs(3000, spec, seed);
+            let mut reused = SumPipeline::build(cfg, Rc::new(KernelSet::native(WIDTH)));
+            let mut off = 0usize;
+            for (k, size) in shard_sizes(seed * 77, blobs.len()).into_iter().enumerate() {
+                let shard = &blobs[off..off + size];
+                off += size;
+                let ctx = format!("{mode:?}/{shape:?} {spec:?} shard {k} ({size} regions)");
+                let fresh = app.run(shard).unwrap(); // fresh build: the oracle
+                let (outputs, metrics) = reused.run_shard(shard).unwrap();
+                assert_sums_bitwise(&outputs, &fresh.outputs, &ctx);
+                assert_metrics_equal(&metrics, &fresh.metrics, &ctx);
+            }
+            assert_eq!(off, blobs.len());
+        }
+    }
+}
+
+#[test]
+fn capacity_regrows_when_a_shard_outsizes_every_previous_one() {
+    // source capacity is retargeted per shard: after tiny shards, a
+    // shard larger than all predecessors must grow the ring and still be
+    // bit-identical to a fresh build (then shrink back logically)
+    let cfg = sum_cfg(SumMode::Enumerated, SumShape::Fused);
+    let app = SumApp::new(cfg, Rc::new(KernelSet::native(WIDTH)));
+    // gen_blobs counts ITEMS: fixed 6-item regions → exactly 2000
+    // regions, comfortably covering the 1564 the cut list consumes
+    let blobs = gen_blobs(12000, RegionSpec::Fixed { size: 6 }, 41);
+    let mut reused = SumPipeline::build(cfg, Rc::new(KernelSet::native(WIDTH)));
+    let mut off = 0usize;
+    for (k, size) in [1usize, 0, 3, 50, 2, 400, 7, 1100, 1].into_iter().enumerate() {
+        let shard = &blobs[off..off + size];
+        off += size;
+        let ctx = format!("regrowth shard {k} ({size} regions)");
+        let fresh = app.run(shard).unwrap();
+        let (outputs, metrics) = reused.run_shard(shard).unwrap();
+        assert_sums_bitwise(&outputs, &fresh.outputs, &ctx);
+        assert_metrics_equal(&metrics, &fresh.metrics, &ctx);
+    }
+}
+
+#[test]
+fn tagged_mode_state_is_provably_cleared_between_shards() {
+    // tags repeat across shards: any per-tag accumulator carryover
+    // would surface as extra (or inflated) entries vs the fresh oracle
+    let blobs: Vec<Blob> = (0..60)
+        .map(|i| Blob::from_vec(i % 5, vec![1.0 + i as f32; 7]))
+        .collect();
+    let cfg = sum_cfg(SumMode::Tagged, SumShape::Fused);
+    let app = SumApp::new(cfg, Rc::new(KernelSet::native(WIDTH)));
+    let mut reused = SumPipeline::build(cfg, Rc::new(KernelSet::native(WIDTH)));
+    for (k, shard) in blobs.chunks(9).enumerate() {
+        let ctx = format!("tagged shard {k}");
+        let fresh = app.run(shard).unwrap();
+        let (outputs, metrics) = reused.run_shard(shard).unwrap();
+        assert_sums_bitwise(&outputs, &fresh.outputs, &ctx);
+        assert_metrics_equal(&metrics, &fresh.metrics, &ctx);
+    }
+}
+
+#[test]
+fn reused_taxi_pipeline_is_bit_identical_to_fresh_builds() {
+    let w = generate(
+        40,
+        TaxiGenConfig {
+            avg_pairs: 6,
+            avg_line_len: 180,
+        },
+        51,
+    );
+    for variant in TaxiVariant::all() {
+        let cfg = taxi_cfg(variant);
+        let app = TaxiApp::new(cfg, Rc::new(KernelSet::native(WIDTH)));
+        let mut reused =
+            TaxiPipeline::build(cfg, Rc::new(KernelSet::native(WIDTH)), w.text.clone());
+        let mut off = 0usize;
+        for (k, size) in shard_sizes(91, w.lines.len()).into_iter().enumerate() {
+            let shard = &w.lines[off..off + size];
+            off += size;
+            let ctx = format!("{variant:?} shard {k} ({size} lines)");
+            let shard_w = TaxiWorkload {
+                text: w.text.clone(),
+                lines: shard.to_vec(),
+                total_pairs: 0,
+            };
+            let fresh = app.run(&shard_w).unwrap(); // fresh build: the oracle
+            let (pairs, metrics) = reused.run_shard(shard).unwrap();
+            assert_eq!(pairs.len(), fresh.pairs.len(), "{ctx}");
+            for (g, e) in pairs.iter().zip(&fresh.pairs) {
+                assert_eq!(g.tag, e.tag, "{ctx}");
+                assert_eq!(g.x.to_bits(), e.x.to_bits(), "{ctx}");
+                assert_eq!(g.y.to_bits(), e.y.to_bits(), "{ctx}");
+            }
+            assert_metrics_equal(&metrics, &fresh.metrics, &ctx);
+        }
+    }
+}
+
+/// The executor proof shared by the sum and taxi halves below: builds
+/// scale with claiming workers, never shards.
+fn assert_builds_equal_workers<T>(report: &ExecReport<T>, workers: usize, ctx: &str) {
+    assert!(!report.per_worker.is_empty(), "{ctx}: no worker ran");
+    assert_eq!(
+        report.pipelines_built,
+        report.per_worker.len() as u64,
+        "{ctx}: builds must equal claiming workers"
+    );
+    assert!(
+        report.per_worker.len() <= workers,
+        "{ctx}: more claimants than workers"
+    );
+    for w in &report.per_worker {
+        assert_eq!(
+            w.pipelines_built, 1,
+            "{ctx}: worker {} rebuilt its pipeline ({} builds over {} shards)",
+            w.worker, w.pipelines_built, w.shards
+        );
+    }
+    if report.shards > workers {
+        assert!(
+            (report.pipelines_built as usize) < report.shards,
+            "{ctx}: builds ({}) should not scale with shards ({})",
+            report.pipelines_built,
+            report.shards
+        );
+    }
+}
+
+#[test]
+fn exec_report_proves_builds_equal_workers_for_all_sum_modes() {
+    let shapes = [
+        (SumMode::Enumerated, SumShape::Fused),
+        (SumMode::Enumerated, SumShape::TwoStage),
+        (SumMode::Tagged, SumShape::Fused),
+    ];
+    let blobs = gen_blobs(2500, RegionSpec::Uniform { max: 25 }, 61);
+    for (mode, shape) in shapes {
+        let cfg = sum_cfg(mode, shape);
+        let app = SumApp::new(cfg, Rc::new(KernelSet::native(WIDTH)));
+        let single = app.run(&blobs).unwrap();
+        let factory = SumFactory::new(cfg, KernelSpawn::Native);
+        for workers in 1..=8 {
+            let exec = ExecConfig::new(workers).with_shards_per_worker(3).streaming(64);
+            for streamed in [false, true] {
+                let ctx = format!(
+                    "{mode:?}/{shape:?} workers {workers} {}",
+                    if streamed { "streamed" } else { "materialized" }
+                );
+                let report = if streamed {
+                    ShardedRunner::new(exec.clone())
+                        .run_stream(&factory, SliceSource::new(&blobs))
+                        .unwrap()
+                } else {
+                    ShardedRunner::new(exec.clone()).run(&factory, &blobs).unwrap()
+                };
+                assert_builds_equal_workers(&report, workers, &ctx);
+                let outputs = finish_sharded_outputs(mode, report.outputs);
+                match mode {
+                    // enumerated: bit-identical to the single-run oracle
+                    SumMode::Enumerated => assert_sums_bitwise(&outputs, &single.outputs, &ctx),
+                    // tagged: sharding regroups lanes — order + tolerance
+                    SumMode::Tagged => {
+                        assert_eq!(outputs.len(), single.outputs.len(), "{ctx}");
+                        for ((gi, gv), (wi, wv)) in outputs.iter().zip(&single.outputs) {
+                            assert_eq!(gi, wi, "{ctx}");
+                            assert!(
+                                (gv - wv).abs() <= 1e-3 * (1.0 + wv.abs()),
+                                "{ctx}: tag {gi}: {gv} vs {wv}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn exec_report_proves_builds_equal_workers_for_all_taxi_variants() {
+    let w = generate(
+        32,
+        TaxiGenConfig {
+            avg_pairs: 6,
+            avg_line_len: 160,
+        },
+        71,
+    );
+    for variant in TaxiVariant::all() {
+        let cfg = taxi_cfg(variant);
+        let app = TaxiApp::new(cfg, Rc::new(KernelSet::native(WIDTH)));
+        let single = app.run(&w).unwrap();
+        let factory = TaxiFactory::new(cfg, KernelSpawn::Native, w.text.clone());
+        for workers in 1..=8 {
+            let exec = ExecConfig::new(workers).with_shards_per_worker(2).streaming(16);
+            for streamed in [false, true] {
+                let ctx = format!(
+                    "{variant:?} workers {workers} {}",
+                    if streamed { "streamed" } else { "materialized" }
+                );
+                let report = if streamed {
+                    ShardedRunner::new(exec.clone())
+                        .run_stream(&factory, SliceSource::new(&w.lines))
+                        .unwrap()
+                } else {
+                    ShardedRunner::new(exec.clone()).run(&factory, &w.lines).unwrap()
+                };
+                assert_builds_equal_workers(&report, workers, &ctx);
+                assert_eq!(report.outputs.len(), single.pairs.len(), "{ctx}");
+                for (g, e) in report.outputs.iter().zip(&single.pairs) {
+                    assert_eq!(g.tag, e.tag, "{ctx}");
+                    assert_eq!(g.x.to_bits(), e.x.to_bits(), "{ctx}");
+                    assert_eq!(g.y.to_bits(), e.y.to_bits(), "{ctx}");
+                }
+            }
+        }
+    }
+}
