@@ -152,10 +152,12 @@ impl SumApp {
     /// [`SumApp::run_sharded`] with full executor configuration.
     pub fn run_sharded_with(&self, blobs: &[Blob], exec: &ExecConfig) -> Result<SumReport> {
         exec.validate()?;
-        if exec.workers <= 1 && exec.shard.shards_per_worker <= 1 {
-            // One worker, one shard, run inline: identical to a plain run,
-            // so reuse this app's kernel set instead of spawning a fresh
-            // engine (on the XLA backend that is a full PJRT spin-up).
+        if exec.workers <= 1 && exec.shard.shards_per_worker <= 1 && exec.trace.is_none() {
+            // One worker, one shard, untraced, run inline: identical to a
+            // plain run, so reuse this app's kernel set instead of
+            // spawning a fresh engine (on the XLA backend that is a full
+            // PJRT spin-up). A traced run always goes through the
+            // executor, which owns the trace lanes.
             return self.run(blobs);
         }
         let factory = SumFactory::new(self.cfg, KernelSpawn::from_backend(self.kernels.backend()));
@@ -314,6 +316,18 @@ impl SumPipeline {
                 src.emit_signal(SignalKind::Custom(FLUSH));
                 pipe.run()?;
                 Ok((take_outputs(sums), pipe.metrics()))
+            }
+        }
+    }
+
+    /// Install a trace sink on the underlying pipeline's scheduler so
+    /// every firing is recorded (see [`crate::trace`]). The sink
+    /// survives per-shard resets, so one install covers the worker's
+    /// whole lifetime.
+    pub fn set_trace(&mut self, sink: crate::trace::TraceSink) {
+        match &mut self.kind {
+            SumPipelineKind::Enumerated { pipe, .. } | SumPipelineKind::Tagged { pipe, .. } => {
+                pipe.set_trace(sink)
             }
         }
     }
@@ -654,6 +668,10 @@ impl ShardWorker for SumShardWorker {
 
     fn pipelines_built(&self) -> u64 {
         self.builds
+    }
+
+    fn set_trace(&mut self, sink: crate::trace::TraceSink) {
+        self.pipeline.set_trace(sink);
     }
 }
 

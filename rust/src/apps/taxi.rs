@@ -180,10 +180,12 @@ impl TaxiApp {
     /// [`TaxiApp::run_sharded`] with full executor configuration.
     pub fn run_sharded_with(&self, w: &TaxiWorkload, exec: &ExecConfig) -> Result<TaxiReport> {
         exec.validate()?;
-        if exec.workers <= 1 && exec.shard.shards_per_worker <= 1 {
-            // One worker, one shard, run inline: identical to a plain run,
-            // so reuse this app's kernel set instead of spawning a fresh
-            // engine (on the XLA backend that is a full PJRT spin-up).
+        if exec.workers <= 1 && exec.shard.shards_per_worker <= 1 && exec.trace.is_none() {
+            // One worker, one shard, untraced, run inline: identical to a
+            // plain run, so reuse this app's kernel set instead of
+            // spawning a fresh engine (on the XLA backend that is a full
+            // PJRT spin-up). A traced run always goes through the
+            // executor, which owns the trace lanes.
             return self.run(w);
         }
         let factory = TaxiFactory::new(
@@ -356,6 +358,18 @@ impl TaxiPipeline {
         }
     }
 
+    /// Install a trace sink on the underlying pipeline's scheduler so
+    /// every firing is recorded (see [`crate::trace`]). The sink
+    /// survives per-shard resets, so one install covers the worker's
+    /// whole lifetime.
+    pub fn set_trace(&mut self, sink: crate::trace::TraceSink) {
+        match &mut self.kind {
+            TaxiPipelineKind::Lines { pipe, .. } | TaxiPipelineKind::Tagged { pipe, .. } => {
+                pipe.set_trace(sink)
+            }
+        }
+    }
+
     fn build_lines(cfg: TaxiConfig, ks: Rc<KernelSet>, text: Arc<Vec<u8>>) -> TaxiPipelineKind {
         let mut b = PipelineBuilder::new(cfg.width)
             .queue_caps(cfg.data_cap, cfg.signal_cap)
@@ -479,6 +493,10 @@ impl ShardWorker for TaxiShardWorker {
 
     fn pipelines_built(&self) -> u64 {
         self.builds
+    }
+
+    fn set_trace(&mut self, sink: crate::trace::TraceSink) {
+        self.pipeline.set_trace(sink);
     }
 }
 

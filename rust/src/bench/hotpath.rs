@@ -27,6 +27,12 @@
 //!    The `reuse_vs_rebuild_speedup` headline (finest granularity =
 //!    many small shards) is gated by the baseline's
 //!    `min_reuse_speedup`.
+//! 4. **Trace-overhead tier** (`trace_overhead`): the same sharded sum
+//!    run through the executor untraced and with event tracing on
+//!    (`ExecConfig::with_trace`), outputs asserted bit-identical.
+//!    *Informational only* — tracing is opt-in and off by default, so
+//!    the cost is reported, not gated; it keeps the "cheap when on"
+//!    claim honest in every benchmark artifact.
 //!
 //! Results are emitted as `BENCH_hotpath.json` (hand-rolled writer; the
 //! vendored JSON module only parses) and checked against
@@ -38,12 +44,14 @@ use std::rc::Rc;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::apps::sum::{SumApp, SumConfig, SumMode, SumPipeline, SumShape};
+use crate::apps::sum::{SumApp, SumConfig, SumFactory, SumMode, SumPipeline, SumShape};
 use crate::apps::prefix_mask;
 use crate::coordinator::queue::DataQueue;
 use crate::coordinator::scheduler::Policy;
-use crate::runtime::kernels::KernelSet;
+use crate::exec::{ExecConfig, KernelSpawn, ShardedRunner};
+use crate::runtime::kernels::{Backend, KernelSet};
 use crate::runtime::native;
+use crate::trace::TraceOptions;
 use crate::util::alloc_count;
 use crate::util::json::Json;
 use crate::util::stats::fmt_count;
@@ -137,6 +145,18 @@ pub struct ReuseRow {
     pub speedup: f64,
 }
 
+/// One trace-overhead comparison point. Informational — tracing is
+/// opt-in and off by default, so this row is reported, never gated.
+#[derive(Debug, Clone)]
+pub struct TraceRow {
+    pub workers: usize,
+    pub untraced_items_per_sec: f64,
+    pub traced_items_per_sec: f64,
+    /// `traced time / untraced time - 1`, as a percentage (> 0 = the
+    /// traced run was slower).
+    pub overhead_pct: f64,
+}
+
 /// Full report (also the JSON payload).
 #[derive(Debug, Clone)]
 pub struct HotpathReport {
@@ -144,6 +164,7 @@ pub struct HotpathReport {
     pub firing: Vec<FiringRow>,
     pub apps: Vec<AppRow>,
     pub reuse: Vec<ReuseRow>,
+    pub trace: Vec<TraceRow>,
 }
 
 /// Run the sweep and print the tables.
@@ -168,6 +189,13 @@ pub fn run(cfg: &HotpathConfig) -> Result<HotpathReport> {
     if let Some(&width) = cfg.widths.iter().max() {
         for &granule in &cfg.reuse_granules {
             reuse.push(reuse_point(cfg, width, granule)?);
+        }
+    }
+    // trace overhead at the widest width, inline and threaded
+    let mut trace = Vec::new();
+    if let Some(&width) = cfg.widths.iter().max() {
+        for workers in [1usize, 4] {
+            trace.push(trace_point(cfg, width, workers)?);
         }
     }
 
@@ -215,11 +243,71 @@ pub fn run(cfg: &HotpathConfig) -> Result<HotpathReport> {
     println!("== Hotpath: per-shard pipeline, rebuild vs reset-and-reuse ==");
     t.print();
 
+    let mut t = Table::new(&["workers", "untraced/s", "traced/s", "overhead%"]);
+    for r in &trace {
+        t.row(&[
+            r.workers.to_string(),
+            fmt_count(r.untraced_items_per_sec),
+            fmt_count(r.traced_items_per_sec),
+            format!("{:+.1}", r.overhead_pct),
+        ]);
+    }
+    println!("== Hotpath: event tracing off vs on (informational, no gate) ==");
+    t.print();
+
     Ok(HotpathReport {
         items: cfg.items,
         firing,
         apps,
         reuse,
+        trace,
+    })
+}
+
+/// One trace-overhead point: the same materialized sum stream through
+/// the sharded executor untraced and with tracing on, outputs asserted
+/// bit-identical so the delta isolates the recording cost (a clock read
+/// plus a 32-byte store per firing/shard event).
+fn trace_point(cfg: &HotpathConfig, width: usize, workers: usize) -> Result<TraceRow> {
+    let blobs = gen_blobs(cfg.items, RegionSpec::Fixed { size: width }, cfg.seed);
+    let factory = SumFactory::new(
+        SumConfig {
+            width,
+            mode: SumMode::Enumerated,
+            shape: SumShape::Fused,
+            ..Default::default()
+        },
+        KernelSpawn::from_backend(Backend::Native),
+    );
+    let untraced = ShardedRunner::new(ExecConfig::new(workers));
+    let traced = ShardedRunner::new(
+        ExecConfig::new(workers).with_trace(Some(TraceOptions { capacity: 1 << 16 })),
+    );
+    let mut out_off: Vec<(u64, f64)> = Vec::new();
+    let m_off = time_fn(cfg.bench, || {
+        out_off = untraced.run(&factory, &blobs).expect("untraced run").outputs;
+    });
+    let mut out_on: Vec<(u64, f64)> = Vec::new();
+    let m_on = time_fn(cfg.bench, || {
+        out_on = traced.run(&factory, &blobs).expect("traced run").outputs;
+    });
+    ensure!(
+        out_off.len() == out_on.len(),
+        "trace sweep: output counts diverged ({} vs {})",
+        out_off.len(),
+        out_on.len()
+    );
+    for ((gi, gv), (wi, wv)) in out_on.iter().zip(&out_off) {
+        ensure!(
+            gi == wi && gv.to_bits() == wv.to_bits(),
+            "trace sweep: outputs diverged at region {gi} ({gv} vs {wv})"
+        );
+    }
+    Ok(TraceRow {
+        workers,
+        untraced_items_per_sec: cfg.items as f64 / m_off.median(),
+        traced_items_per_sec: cfg.items as f64 / m_on.median(),
+        overhead_pct: 100.0 * (m_on.median() / m_off.median() - 1.0),
     })
 }
 
@@ -502,6 +590,19 @@ pub fn to_json(report: &HotpathReport) -> String {
         ));
     }
     s.push_str("  ],\n");
+    s.push_str("  \"trace_overhead\": [\n");
+    for (i, r) in report.trace.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workers\": {}, \"untraced_items_per_sec\": {:.1}, \
+             \"traced_items_per_sec\": {:.1}, \"overhead_pct\": {:.4}}}{}\n",
+            r.workers,
+            r.untraced_items_per_sec,
+            r.traced_items_per_sec,
+            r.overhead_pct,
+            if i + 1 < report.trace.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
     s.push_str(&format!(
         "  \"reuse_vs_rebuild_speedup\": {:.4},\n",
         reuse_vs_rebuild_speedup(report).unwrap_or(0.0)
@@ -606,11 +707,18 @@ mod tests {
         // headline = the finest-granularity (many-small-shards) row
         let fine = report.reuse.iter().min_by_key(|r| r.regions_per_shard).unwrap();
         assert_eq!(reuse_vs_rebuild_speedup(&report), Some(fine.speedup));
+        // trace tier: inline + threaded point, both with live throughput
+        assert_eq!(report.trace.len(), 2);
+        for r in &report.trace {
+            assert!(r.untraced_items_per_sec > 0.0);
+            assert!(r.traced_items_per_sec > 0.0);
+        }
         let js = to_json(&report);
         let parsed = Json::parse(&js).expect("emitted JSON parses");
         assert!(parsed.get("firing_path").is_some());
         assert!(parsed.get("app_sweep").is_some());
         assert!(parsed.get("reuse").is_some());
+        assert!(parsed.get("trace_overhead").is_some());
         assert!(parsed.get("reuse_vs_rebuild_speedup").is_some());
     }
 

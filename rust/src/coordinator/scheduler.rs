@@ -31,6 +31,8 @@
 
 use anyhow::{bail, Result};
 
+use crate::trace::{TraceEvent, TraceSink};
+
 use super::node::NodeOps;
 
 /// Node-selection policy.
@@ -100,6 +102,9 @@ pub struct Scheduler {
     /// Builder-recorded channel adjacency (see
     /// [`Scheduler::set_adjacency`]); `None` until wired.
     adjacency: Option<Vec<Vec<usize>>>,
+    /// Firing-event sink; disabled (a single branch per firing) unless
+    /// [`Scheduler::set_trace`] installed an enabled one.
+    trace: TraceSink,
 }
 
 impl Scheduler {
@@ -111,7 +116,18 @@ impl Scheduler {
             rr_cursor: 0,
             states: Vec::new(),
             adjacency: None,
+            trace: TraceSink::default(),
         }
+    }
+
+    /// Install a trace sink: every subsequent firing records one
+    /// [`TraceEvent::Firing`] span with that firing's ensemble/item
+    /// deltas (read from the node's own counters, so trace totals
+    /// reconcile with [`NodeMetrics`](super::metrics::NodeMetrics)
+    /// exactly). The sink, like the adjacency, is structural and
+    /// survives [`Scheduler::reset`].
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = sink;
     }
 
     /// Record the channel adjacency derived while wiring the graph:
@@ -186,8 +202,28 @@ impl Scheduler {
                 }
                 return Ok(());
             };
+            let tracing = self.trace.enabled();
+            let (t0, ens0, items0) = if tracing {
+                let m = nodes[i].metrics();
+                (self.trace.now_ns(), m.ensembles, m.items)
+            } else {
+                (0, 0, 0)
+            };
             let worked = nodes[i].fire()?;
             self.firings += 1;
+            if tracing {
+                let t1 = self.trace.now_ns();
+                let m = nodes[i].metrics();
+                self.trace.record(
+                    t0,
+                    t1,
+                    TraceEvent::Firing {
+                        node: i as u32,
+                        ensembles: (m.ensembles - ens0) as u32,
+                        items: (m.items - items0) as u32,
+                    },
+                );
+            }
             if matches!(self.policy, Policy::RoundRobin) {
                 self.rr_cursor = (i + 1) % n;
             }

@@ -303,6 +303,15 @@ impl Pipeline {
     pub fn firings(&self) -> u64 {
         self.scheduler.firings
     }
+
+    /// Install a trace sink on the scheduler: every firing records a
+    /// [`TraceEvent::Firing`](crate::trace::TraceEvent) span. Like the
+    /// ready-set adjacency the sink is structural, so it survives
+    /// [`Pipeline::reset`] — a traced worker keeps tracing across every
+    /// shard it runs.
+    pub fn set_trace(&mut self, sink: crate::trace::TraceSink) {
+        self.scheduler.set_trace(sink);
+    }
 }
 
 #[cfg(test)]

@@ -22,6 +22,7 @@ use anyhow::Result;
 use crate::coordinator::metrics::PipelineMetrics;
 use crate::runtime::kernels::{Backend, KernelSet};
 use crate::runtime::{ArtifactStore, Engine};
+use crate::trace::TraceSink;
 
 /// What one shard produced: outputs in stream order plus the shard
 /// pipeline's metrics and kernel-invocation count.
@@ -58,6 +59,15 @@ pub trait ShardWorker {
     fn pipelines_built(&self) -> u64 {
         1
     }
+
+    /// Install a trace sink into the worker's pipeline so scheduler
+    /// firings are recorded (see [`crate::trace`]). Called once per
+    /// worker, right after `make_worker`, when the pool runs traced;
+    /// the default ignores it, so untraceable workers still execute
+    /// correctly (their firings simply don't appear in the trace).
+    fn set_trace(&mut self, sink: TraceSink) {
+        let _ = sink;
+    }
 }
 
 /// Describes how to instantiate one pipeline per worker. Shared by
@@ -72,10 +82,11 @@ pub trait PipelineFactory: Sync {
     type Worker: ShardWorker<In = Self::In, Out = Self::Out>;
 
     /// Build a fresh pipeline (and kernel engine) for worker `worker_id`.
-    /// Called lazily, inside the worker's own thread, the first time that
-    /// worker claims a shard — and only then: the returned worker's
-    /// pipeline is expected to persist across every shard that worker
-    /// runs (reset, not rebuild).
+    /// Called once, inside the worker's own thread, during the pool's
+    /// prewarm phase — before the timed claim loop starts, so the first
+    /// shard never pays graph construction inside the measurement. The
+    /// returned worker's pipeline is expected to persist across every
+    /// shard that worker runs (reset, not rebuild).
     fn make_worker(&self, worker_id: usize) -> Result<Self::Worker>;
 
     /// Item weight of one region, used by the shard planner to balance

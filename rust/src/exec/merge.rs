@@ -23,6 +23,7 @@ use std::collections::BTreeMap;
 use anyhow::{ensure, Result};
 
 use crate::coordinator::metrics::PipelineMetrics;
+use crate::trace::Trace;
 
 use super::pool::ShardResult;
 
@@ -75,6 +76,13 @@ pub struct ExecReport<T> {
     /// Per-worker breakdown, sorted by worker id (workers that never
     /// claimed a shard are absent).
     pub per_worker: Vec<WorkerStats>,
+    /// Folded event trace of the run; `Some` only when the run was
+    /// launched with tracing enabled ([`ExecConfig::with_trace`]).
+    /// With zero drops its firing/ensemble/item totals reconcile
+    /// exactly with `metrics` (see [`crate::trace`]).
+    ///
+    /// [`ExecConfig::with_trace`]: super::runner::ExecConfig::with_trace
+    pub trace: Option<Trace>,
 }
 
 impl<T> ExecReport<T> {
@@ -88,14 +96,22 @@ impl<T> ExecReport<T> {
         busy / (self.elapsed * self.per_worker.len() as f64)
     }
 
-    /// Render the per-worker breakdown (used by `--stats`).
+    /// Render the per-worker breakdown (used by `--stats`). `occ%` is
+    /// SIMD lane occupancy; `idle%` is the share of the run's wall clock
+    /// the worker spent not executing shards (claim waits, steal
+    /// attempts, end-of-stream drain).
     pub fn worker_table(&self) -> String {
         let mut out = String::from(
-            "worker   shards   stolen   built   outputs   kernel_inv   busy_s    occ%\n",
+            "worker   shards   stolen   built   outputs   kernel_inv   busy_s    occ%   idle%\n",
         );
         for w in &self.per_worker {
+            let idle = if self.elapsed > 0.0 {
+                100.0 * ((self.elapsed - w.busy).max(0.0) / self.elapsed)
+            } else {
+                0.0
+            };
             out.push_str(&format!(
-                "{:<8} {:>6}  {:>6}  {:>5}  {:>8}  {:>11}  {:>7.3}  {:>5.1}\n",
+                "{:<8} {:>6}  {:>6}  {:>5}  {:>8}  {:>11}  {:>7.3}  {:>5.1}  {:>5.1}\n",
                 w.worker,
                 w.shards,
                 w.steals,
@@ -104,6 +120,7 @@ impl<T> ExecReport<T> {
                 w.invocations,
                 w.busy,
                 100.0 * w.metrics.occupancy(),
+                idle,
             ));
         }
         out
@@ -188,6 +205,7 @@ impl<T> ReportBuilder<T> {
             pipelines_built,
             elapsed,
             per_worker,
+            trace: None,
         }
     }
 }
@@ -322,6 +340,10 @@ mod tests {
         assert!(table.contains("worker"), "{table}");
         assert!(table.contains("stolen"), "{table}");
         assert!(table.contains("built"), "{table}");
+        assert!(table.contains("occ%"), "{table}");
+        assert!(table.contains("idle%"), "{table}");
+        // worker 1: busy 1.0 of wall 2.0 → 50% idle
+        assert!(table.contains(" 50.0\n"), "{table}");
         assert!(report.utilization() > 0.0);
     }
 

@@ -108,6 +108,6 @@ pub use factory::{KernelSpawn, PipelineFactory, ShardOutput, ShardWorker, Worker
 pub use ingest::{ContainerPool, IngestPlanner, IngestPolicy, ShardTask};
 pub use merge::{ExecReport, ReportBuilder, StreamMerger, WorkerStats};
 pub use plan::{ShardPlan, ShardPolicy};
-pub use pool::{ShardResult, WorkerPool};
+pub use pool::{PoolRun, ShardResult, StreamRun, WorkerPool};
 pub use runner::{ExecConfig, ShardedRunner, MAX_INGEST_BUFFER};
 pub use steal::{Claim, ClaimMode, CompletionBuffer, StealQueues};

@@ -23,8 +23,22 @@
 //! idle workers quit claiming, and the error (annotated with worker and
 //! shard) reaches the caller after all threads join. Already-completed
 //! shards are discarded — a sharded run is all-or-nothing.
+//!
+//! ## Prewarm
+//!
+//! Both modes build every worker's pipeline **eagerly, before the timed
+//! region**: workers construct their engines, then rendezvous on a
+//! barrier with the coordinating thread, and only then does the
+//! claim/ingest phase (and the clock behind
+//! [`PoolRun::elapsed`]/[`StreamRun::elapsed`]) start. The first shard
+//! never pays graph construction inside the measurement, and under
+//! tracing the build shows up as its own `Prewarm` span. A build error
+//! or panic still reaches the barrier first, so the coordinator never
+//! waits on a worker that already gave up.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Barrier, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Result};
@@ -35,6 +49,7 @@ use super::merge::StreamMerger;
 use super::plan::ShardPlan;
 use super::steal::{Claim, ClaimMode, CompletionBuffer, StealQueues};
 use crate::coordinator::metrics::PipelineMetrics;
+use crate::trace::{TraceEvent, TraceSink, TraceSpec, WorkerTrace, DRIVER_LANE};
 use crate::workload::source::RegionSource;
 
 /// One shard's results, tagged with where it ran.
@@ -144,12 +159,37 @@ impl ShardClaimer {
     }
 }
 
+/// A materialized run's full yield: shard results (in shard order),
+/// per-lane traces (empty unless the pool was traced), and the
+/// wall-clock seconds of the claim/execute phase — measured from the
+/// post-prewarm barrier, so pipeline construction is excluded.
+#[derive(Debug)]
+pub struct PoolRun<T> {
+    pub results: Vec<ShardResult<T>>,
+    /// Per-worker drained trace lanes, sorted by worker id.
+    pub traces: Vec<WorkerTrace>,
+    /// Seconds spent claiming and executing shards (prewarm excluded).
+    pub elapsed: f64,
+}
+
+/// A streaming run's yield: results went to the caller's `emit` sink,
+/// so only the traces (workers plus the [`DRIVER_LANE`]) and the timed
+/// ingest/execute/merge phase remain.
+#[derive(Debug)]
+pub struct StreamRun {
+    /// Drained trace lanes: workers sorted by id, driver lane last.
+    pub traces: Vec<WorkerTrace>,
+    /// Seconds from the post-prewarm barrier to the last worker join.
+    pub elapsed: f64,
+}
+
 /// Fixed-size pool of pipeline workers over a shard plan or region
 /// stream.
 #[derive(Debug, Clone, Copy)]
 pub struct WorkerPool {
     workers: usize,
     claim: ClaimMode,
+    trace: Option<TraceSpec>,
 }
 
 impl WorkerPool {
@@ -157,6 +197,7 @@ impl WorkerPool {
         WorkerPool {
             workers,
             claim: ClaimMode::default(),
+            trace: None,
         }
     }
 
@@ -166,69 +207,133 @@ impl WorkerPool {
         self
     }
 
+    /// Trace this pool's runs: every worker (and the streaming driver)
+    /// builds a [`TraceSink`] from `spec` and the collected lanes come
+    /// back in [`PoolRun::traces`]/[`StreamRun::traces`]. `None`
+    /// (default) disables tracing — the hot path then pays one branch
+    /// per event site and nothing else.
+    pub fn with_trace(mut self, spec: Option<TraceSpec>) -> WorkerPool {
+        self.trace = spec;
+        self
+    }
+
     pub fn workers(&self) -> usize {
         self.workers
     }
 
     /// Run every shard of `plan` over `stream`, one worker pipeline per
     /// thread. Returns all shard results sorted back into shard order.
-    ///
-    /// With one worker (or one shard) everything runs inline on the
-    /// calling thread — no pool overhead, bit-identical to a plain
-    /// single-threaded run.
+    /// Convenience wrapper over [`WorkerPool::run_collect`].
     pub fn run<F: PipelineFactory>(
         &self,
         factory: &F,
         stream: &[F::In],
         plan: &ShardPlan,
     ) -> Result<Vec<ShardResult<F::Out>>> {
+        Ok(self.run_collect(factory, stream, plan)?.results)
+    }
+
+    /// [`WorkerPool::run`] plus the run's traces and post-prewarm
+    /// elapsed time: every worker builds its pipeline eagerly, all
+    /// workers (and the caller) rendezvous on a barrier, and only then
+    /// does the timed claim/execute phase begin.
+    ///
+    /// With one worker (or one shard) everything runs inline on the
+    /// calling thread — no pool overhead, no barrier, bit-identical to
+    /// a plain single-threaded run (construction still happens before
+    /// the claim phase's clock starts).
+    pub fn run_collect<F: PipelineFactory>(
+        &self,
+        factory: &F,
+        stream: &[F::In],
+        plan: &ShardPlan,
+    ) -> Result<PoolRun<F::Out>> {
         ensure!(
             self.workers >= 1,
             "worker pool misconfigured: workers = 0 (need at least one worker thread)"
         );
         if plan.is_empty() {
-            return Ok(Vec::new());
+            return Ok(PoolRun {
+                results: Vec::new(),
+                traces: Vec::new(),
+                elapsed: 0.0,
+            });
         }
         let threads = self.workers.min(plan.len());
         let claimer = ShardClaimer::for_plan(self.claim, threads, plan.len());
         let stop = AtomicBool::new(false);
+        let traces: Mutex<Vec<WorkerTrace>> = Mutex::new(Vec::new());
+        let spec = self.trace;
+        // prewarm rendezvous: absent on the inline path, where the
+        // caller IS the worker and a barrier would deadlock
+        let barrier = (threads > 1).then(|| Barrier::new(threads + 1));
 
-        let worker_loop = |worker_id: usize| -> Result<Vec<ShardResult<F::Out>>> {
+        // returns this worker's results plus its own claim-phase
+        // seconds (used for elapsed on the inline path only)
+        let worker_loop = |worker_id: usize| -> Result<(Vec<ShardResult<F::Out>>, f64)> {
             let _guard = StopOnPanic(&stop);
+            let sink = match &spec {
+                Some(s) => s.sink(),
+                None => TraceSink::default(),
+            };
+            // eager build; an error or panic must still reach the
+            // barrier, or the coordinating thread would wait forever
+            let p0 = sink.now_ns();
+            let built = catch_unwind(AssertUnwindSafe(|| factory.make_worker(worker_id)));
+            let p1 = sink.now_ns();
+            if let Some(b) = &barrier {
+                b.wait();
+            }
+            let mut pipeline = match built {
+                Ok(Ok(p)) => p,
+                Ok(Err(e)) => {
+                    stop.store(true, Ordering::Relaxed);
+                    return Err(e.context(format!("building pipeline for worker {worker_id}")));
+                }
+                Err(payload) => {
+                    stop.store(true, Ordering::Relaxed);
+                    return Err(anyhow!(
+                        "worker {worker_id} panicked during prewarm: {}",
+                        panic_msg(&payload)
+                    ));
+                }
+            };
+            if sink.enabled() {
+                sink.record(p0, p1, TraceEvent::Prewarm);
+                pipeline.set_trace(sink.clone());
+            }
+            let claim_t0 = Instant::now();
             let mut done = Vec::new();
-            let mut pipeline: Option<F::Worker> = None;
             while !stop.load(Ordering::Relaxed) {
                 let Some((shard, stolen)) = claimer.next(worker_id) else {
                     break;
                 };
-                if pipeline.is_none() {
-                    // Built lazily so workers that never claim a shard
-                    // never pay for an engine.
-                    match factory.make_worker(worker_id) {
-                        Ok(p) => pipeline = Some(p),
-                        Err(e) => {
-                            stop.store(true, Ordering::Relaxed);
-                            return Err(e.context(format!(
-                                "building pipeline for worker {worker_id}"
-                            )));
-                        }
-                    }
-                }
-                let p = pipeline.as_mut().expect("pipeline built above");
                 let range = plan.range(shard);
+                let s0 = sink.now_ns();
                 let t0 = Instant::now();
-                match p.run_shard(&stream[range.clone()]) {
-                    Ok(out) => done.push(ShardResult {
-                        shard,
-                        worker: worker_id,
-                        regions: range.len(),
-                        stolen,
-                        outputs: out.outputs,
-                        metrics: out.metrics,
-                        invocations: out.invocations,
-                        elapsed: t0.elapsed().as_secs_f64(),
-                        pipelines_built: p.pipelines_built(),
-                    }),
+                match pipeline.run_shard(&stream[range.clone()]) {
+                    Ok(out) => {
+                        sink.record(
+                            s0,
+                            sink.now_ns(),
+                            TraceEvent::Shard {
+                                shard: shard as u32,
+                                regions: range.len() as u32,
+                                stolen,
+                            },
+                        );
+                        done.push(ShardResult {
+                            shard,
+                            worker: worker_id,
+                            regions: range.len(),
+                            stolen,
+                            outputs: out.outputs,
+                            metrics: out.metrics,
+                            invocations: out.invocations,
+                            elapsed: t0.elapsed().as_secs_f64(),
+                            pipelines_built: pipeline.pipelines_built(),
+                        });
+                    }
                     Err(e) => {
                         stop.store(true, Ordering::Relaxed);
                         return Err(e.context(format!(
@@ -237,31 +342,50 @@ impl WorkerPool {
                     }
                 }
             }
-            Ok(done)
+            if sink.enabled() {
+                let (records, dropped) = sink.take();
+                traces.lock().unwrap_or_else(|e| e.into_inner()).push(WorkerTrace {
+                    worker: worker_id,
+                    records,
+                    dropped,
+                });
+            }
+            Ok((done, claim_t0.elapsed().as_secs_f64()))
         };
 
-        let per_thread: Vec<Result<Vec<ShardResult<F::Out>>>> = if threads <= 1 {
-            vec![worker_loop(0)]
-        } else {
-            std::thread::scope(|scope| {
-                let worker_loop = &worker_loop;
-                let handles: Vec<_> = (0..threads)
-                    .map(|wid| scope.spawn(move || worker_loop(wid)))
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| {
-                        h.join().unwrap_or_else(|payload| {
-                            Err(anyhow!("worker thread panicked: {}", panic_msg(&payload)))
+        let (per_thread, elapsed): (Vec<Result<(Vec<ShardResult<F::Out>>, f64)>>, f64) =
+            if threads <= 1 {
+                let r = worker_loop(0);
+                let elapsed = match &r {
+                    Ok((_, secs)) => *secs,
+                    Err(_) => 0.0,
+                };
+                (vec![r], elapsed)
+            } else {
+                std::thread::scope(|scope| {
+                    let worker_loop = &worker_loop;
+                    let handles: Vec<_> = (0..threads)
+                        .map(|wid| scope.spawn(move || worker_loop(wid)))
+                        .collect();
+                    // all workers have built their pipelines once this
+                    // returns: the measured region starts here
+                    barrier.as_ref().expect("threaded path has a barrier").wait();
+                    let t0 = Instant::now();
+                    let per_thread: Vec<_> = handles
+                        .into_iter()
+                        .map(|h| {
+                            h.join().unwrap_or_else(|payload| {
+                                Err(anyhow!("worker thread panicked: {}", panic_msg(&payload)))
+                            })
                         })
-                    })
-                    .collect()
-            })
-        };
+                        .collect();
+                    (per_thread, t0.elapsed().as_secs_f64())
+                })
+            };
 
         let mut all = Vec::with_capacity(plan.len());
         for r in per_thread {
-            all.extend(r?);
+            all.extend(r?.0);
         }
         all.sort_by_key(|r| r.shard);
         ensure!(
@@ -270,7 +394,13 @@ impl WorkerPool {
             all.len(),
             plan.len()
         );
-        Ok(all)
+        let mut lanes = traces.into_inner().unwrap_or_else(|e| e.into_inner());
+        lanes.sort_by_key(|t| t.worker);
+        Ok(PoolRun {
+            results: all,
+            traces: lanes,
+            elapsed,
+        })
     }
 
     /// Streaming execution: pull regions from `source` on the calling
@@ -288,13 +418,37 @@ impl WorkerPool {
     ///
     /// [`ClaimMode::Cursor`] has no streaming form (there is no global
     /// plan to index); it runs as [`ClaimMode::Steal`].
+    /// Convenience wrapper over [`WorkerPool::run_stream_collect`].
     pub fn run_stream<F, S, K>(
+        &self,
+        factory: &F,
+        source: S,
+        ingest: &IngestPolicy,
+        emit: K,
+    ) -> Result<()>
+    where
+        F: PipelineFactory,
+        F::In: Send,
+        S: RegionSource<Region = F::In>,
+        K: FnMut(ShardResult<F::Out>) -> Result<()>,
+    {
+        self.run_stream_collect(factory, source, ingest, emit)
+            .map(|_| ())
+    }
+
+    /// [`WorkerPool::run_stream`] plus the run's traces and post-prewarm
+    /// elapsed time. All worker pipelines are built eagerly behind a
+    /// barrier before the driver starts pulling from the source, so the
+    /// measured region covers ingest + execute + merge but not graph
+    /// construction. The driver's own ingest/merge events land in an
+    /// extra [`DRIVER_LANE`] trace lane.
+    pub fn run_stream_collect<F, S, K>(
         &self,
         factory: &F,
         mut source: S,
         ingest: &IngestPolicy,
         emit: K,
-    ) -> Result<()>
+    ) -> Result<StreamRun>
     where
         F: PipelineFactory,
         F::In: Send,
@@ -329,14 +483,29 @@ impl WorkerPool {
         let completion: CompletionBuffer<ShardResult<F::Out>> = CompletionBuffer::new();
         let containers: ContainerPool<F::In> = ContainerPool::new();
         let stop = AtomicBool::new(false);
+        let traces: Mutex<Vec<WorkerTrace>> = Mutex::new(Vec::new());
+        let spec = self.trace;
+        // every worker + the driver rendezvous after prewarm
+        let barrier = Barrier::new(threads + 1);
+        // Created on this thread and cloned into the driver inside the
+        // scope (TraceSink is Rc-based and never crosses threads; the
+        // scope closure runs right here).
+        let driver_sink = match &spec {
+            Some(s) => s.sink(),
+            None => TraceSink::default(),
+        };
 
-        std::thread::scope(|scope| {
+        let elapsed = std::thread::scope(|scope| -> Result<f64> {
             let handles: Vec<_> = (0..threads)
                 .map(|wid| {
                     let (queues, completion) = (&queues, &completion);
                     let (containers, stop) = (&containers, &stop);
+                    let (barrier, traces) = (&barrier, &traces);
                     scope.spawn(move || {
-                        stream_worker(wid, factory, queues, completion, containers, stop)
+                        stream_worker(
+                            wid, factory, queues, completion, containers, stop, barrier, spec,
+                            traces,
+                        )
                     })
                 })
                 .collect();
@@ -352,9 +521,15 @@ impl WorkerPool {
                 submitted_shards: 0,
                 emitted_regions: 0,
                 emitted_shards: 0,
+                sink: driver_sink.clone(),
             };
             let mut planner: IngestPlanner<F::In> = IngestPlanner::new(granule);
+            // all pipelines are built once this returns; the measured
+            // region (and the first source pull) starts here
+            barrier.wait();
+            let t0 = Instant::now();
             let fed = drive_ingest(factory, &mut source, &mut planner, &containers, &mut driver);
+            let elapsed = t0.elapsed().as_secs_f64();
 
             // Shut the pool down whether ingest finished or aborted.
             stop.store(true, Ordering::Relaxed);
@@ -374,8 +549,23 @@ impl WorkerPool {
                 (Err(e), Some(p)) if e.to_string().contains("panicked") => Err(p),
                 (Err(e), _) => Err(e),
                 (Ok(()), Some(p)) => Err(p),
-                (Ok(()), None) => Ok(()),
+                (Ok(()), None) => Ok(elapsed),
             }
+        })?;
+
+        let mut lanes = traces.into_inner().unwrap_or_else(|e| e.into_inner());
+        if driver_sink.enabled() {
+            let (records, dropped) = driver_sink.take();
+            lanes.push(WorkerTrace {
+                worker: DRIVER_LANE,
+                records,
+                dropped,
+            });
+        }
+        lanes.sort_by_key(|t| t.worker);
+        Ok(StreamRun {
+            traces: lanes,
+            elapsed,
         })
     }
 }
@@ -436,6 +626,7 @@ struct StreamDriver<'s, I, O, K> {
     submitted_shards: usize,
     emitted_regions: usize,
     emitted_shards: usize,
+    sink: TraceSink,
 }
 
 impl<I, O, K> StreamDriver<'_, I, O, K>
@@ -467,6 +658,17 @@ where
         while let Some(r) = self.merger.pop_ready() {
             self.emitted_regions += r.regions;
             self.emitted_shards += 1;
+            if self.sink.enabled() {
+                let t = self.sink.now_ns();
+                self.sink.record(
+                    t,
+                    t,
+                    TraceEvent::Emit {
+                        shard: r.shard as u32,
+                        regions: r.regions as u32,
+                    },
+                );
+            }
             (self.emit)(r)?;
         }
         Ok(())
@@ -478,16 +680,43 @@ where
     /// drained.
     fn submit(&mut self, task: ShardTask<I>) -> Result<()> {
         let regions = task.regions.len();
+        let mut stalled = false;
+        let mut stall_t0 = 0u64;
         loop {
             self.pump()?;
             let in_flight = self.submitted_regions - self.emitted_regions;
             if in_flight == 0 || in_flight + regions <= self.budget {
                 break;
             }
+            if !stalled && self.sink.enabled() {
+                stalled = true;
+                stall_t0 = self.sink.now_ns();
+            }
             self.pump_wait()?;
+        }
+        if stalled {
+            let in_flight = self.submitted_regions - self.emitted_regions;
+            self.sink.record(
+                stall_t0,
+                self.sink.now_ns(),
+                TraceEvent::Stall {
+                    in_flight: in_flight as u32,
+                },
+            );
         }
         self.submitted_regions += regions;
         self.submitted_shards += 1;
+        if self.sink.enabled() {
+            let t = self.sink.now_ns();
+            self.sink.record(
+                t,
+                t,
+                TraceEvent::Submit {
+                    shard: task.index as u32,
+                    regions: regions as u32,
+                },
+            );
+        }
         self.queues.push(task);
         Ok(())
     }
@@ -502,8 +731,9 @@ where
     }
 }
 
-/// One streaming worker thread: claim → (lazily build pipeline) → run →
-/// recycle container → report completion.
+/// One streaming worker thread: prewarm (build pipeline, rendezvous on
+/// the barrier) → claim → run → recycle container → report completion.
+#[allow(clippy::too_many_arguments)]
 fn stream_worker<F: PipelineFactory>(
     worker_id: usize,
     factory: &F,
@@ -511,30 +741,60 @@ fn stream_worker<F: PipelineFactory>(
     completion: &CompletionBuffer<ShardResult<F::Out>>,
     containers: &ContainerPool<F::In>,
     stop: &AtomicBool,
+    barrier: &Barrier,
+    trace: Option<TraceSpec>,
+    traces: &Mutex<Vec<WorkerTrace>>,
 ) {
     let _guard = PanicSignal { stop, completion };
-    let mut pipeline: Option<F::Worker> = None;
+    let sink = match &trace {
+        Some(s) => s.sink(),
+        None => TraceSink::default(),
+    };
+    // eager build; errors and panics must still reach the barrier, or
+    // the driver (and the other workers) would wait forever
+    let p0 = sink.now_ns();
+    let built = catch_unwind(AssertUnwindSafe(|| factory.make_worker(worker_id)));
+    let p1 = sink.now_ns();
+    barrier.wait();
+    let mut pipeline = match built {
+        Ok(Ok(p)) => p,
+        Ok(Err(e)) => {
+            stop.store(true, Ordering::Relaxed);
+            completion.fail(e.context(format!("building pipeline for worker {worker_id}")));
+            return;
+        }
+        Err(payload) => {
+            stop.store(true, Ordering::Relaxed);
+            completion.fail(anyhow!(
+                "worker {worker_id} panicked during prewarm: {}",
+                panic_msg(&payload)
+            ));
+            return;
+        }
+    };
+    if sink.enabled() {
+        sink.record(p0, p1, TraceEvent::Prewarm);
+        pipeline.set_trace(sink.clone());
+    }
     while !stop.load(Ordering::Relaxed) {
         let (task, stolen) = match queues.claim(worker_id) {
             Claim::Task { work, stolen } => (work, stolen),
-            Claim::Done => return,
+            Claim::Done => break,
         };
-        if pipeline.is_none() {
-            match factory.make_worker(worker_id) {
-                Ok(p) => pipeline = Some(p),
-                Err(e) => {
-                    stop.store(true, Ordering::Relaxed);
-                    completion.fail(e.context(format!(
-                        "building pipeline for worker {worker_id}"
-                    )));
-                    return;
-                }
-            }
-        }
-        let p = pipeline.as_mut().expect("pipeline built above");
+        let p = &mut pipeline;
+        let s0 = sink.now_ns();
         let t0 = Instant::now();
         match p.run_shard(&task.regions) {
             Ok(out) => {
+                sink.record(
+                    s0,
+                    sink.now_ns(),
+                    TraceEvent::Shard {
+                        shard: task.index as u32,
+                        regions: task.regions.len() as u32,
+                        stolen,
+                    },
+                );
                 let result = ShardResult {
                     shard: task.index,
                     worker: worker_id,
@@ -566,6 +826,14 @@ fn stream_worker<F: PipelineFactory>(
                 return;
             }
         }
+    }
+    if sink.enabled() {
+        let (records, dropped) = sink.take();
+        traces.lock().unwrap_or_else(|e| e.into_inner()).push(WorkerTrace {
+            worker: worker_id,
+            records,
+            dropped,
+        });
     }
 }
 
@@ -824,6 +1092,83 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("poison item 123"), "{msg}");
         assert!(msg.contains("streaming shard"), "{msg}");
+    }
+
+    #[test]
+    fn traced_run_collects_prewarm_and_shard_events() {
+        let stream = items(120);
+        let weights = vec![1usize; 120];
+        for workers in [1usize, 3] {
+            let plan = ShardPlan::build(
+                &weights,
+                workers,
+                &ShardPolicy {
+                    shards_per_worker: 2,
+                    ..ShardPolicy::default()
+                },
+            );
+            let run = WorkerPool::new(workers)
+                .with_trace(Some(TraceSpec::new(1 << 12)))
+                .run_collect(&ToyFactory::plain(), &stream, &plan)
+                .unwrap();
+            assert_eq!(run.results.len(), plan.len());
+            let trace = crate::trace::Trace {
+                workers: run.traces,
+                nodes: Vec::new(),
+            };
+            assert_eq!(trace.dropped(), 0);
+            assert_eq!(trace.shards(), plan.len() as u64, "workers={workers}");
+            let prewarms = trace
+                .workers
+                .iter()
+                .flat_map(|w| &w.records)
+                .filter(|r| matches!(r.event, TraceEvent::Prewarm))
+                .count();
+            // every lane that shows up prewarmed exactly once
+            assert_eq!(prewarms, trace.workers.len());
+            assert!(run.elapsed >= 0.0);
+        }
+    }
+
+    #[test]
+    fn traced_streaming_run_reconciles_driver_lane() {
+        let run = WorkerPool::new(2)
+            .with_trace(Some(TraceSpec::new(1 << 12)))
+            .run_stream_collect(
+                &ToyFactory::plain(),
+                IterSource::new(0..200u32),
+                &IngestPolicy {
+                    buffer_regions: 16,
+                    shard_regions: 4,
+                },
+                |_| Ok(()),
+            )
+            .unwrap();
+        let trace = crate::trace::Trace {
+            workers: run.traces,
+            nodes: Vec::new(),
+        };
+        assert_eq!(trace.dropped(), 0);
+        assert!(trace.shards() > 0);
+        assert_eq!(trace.submits(), trace.shards());
+        assert_eq!(trace.emits(), trace.shards());
+        let driver = trace
+            .workers
+            .iter()
+            .find(|w| w.worker == DRIVER_LANE)
+            .expect("driver lane present when traced");
+        assert!(!driver.records.is_empty());
+    }
+
+    #[test]
+    fn untraced_run_collects_no_lanes() {
+        let stream = items(50);
+        let weights = vec![1usize; 50];
+        let plan = ShardPlan::build(&weights, 2, &ShardPolicy::default());
+        let run = WorkerPool::new(2)
+            .run_collect(&ToyFactory::plain(), &stream, &plan)
+            .unwrap();
+        assert!(run.traces.is_empty());
     }
 
     #[test]

@@ -12,6 +12,7 @@ use super::merge::{merge_results, ExecReport, ReportBuilder};
 use super::plan::{ShardPlan, ShardPolicy};
 use super::pool::{ShardResult, WorkerPool};
 use super::steal::ClaimMode;
+use crate::trace::{Trace, TraceOptions, TraceSpec, WorkerTrace};
 use crate::workload::source::RegionSource;
 
 /// Executor configuration.
@@ -26,6 +27,11 @@ pub struct ExecConfig {
     pub ingest: IngestPolicy,
     /// How workers claim shards (default: work stealing).
     pub claim: ClaimMode,
+    /// Event tracing: `None` (the default) disables it completely —
+    /// workers run the exact untraced hot path. `Some` records
+    /// firing/shard/ingest/merge events into per-worker ring buffers and
+    /// attaches the folded [`Trace`] to the report.
+    pub trace: Option<TraceOptions>,
 }
 
 impl ExecConfig {
@@ -37,6 +43,7 @@ impl ExecConfig {
             shard: ShardPolicy::default(),
             ingest: IngestPolicy::default(),
             claim: ClaimMode::default(),
+            trace: None,
         }
     }
 
@@ -66,6 +73,13 @@ impl ExecConfig {
     /// Builder-style claim-mode override.
     pub fn with_claim(mut self, claim: ClaimMode) -> ExecConfig {
         self.claim = claim;
+        self
+    }
+
+    /// Builder-style tracing override: `Some` enables event tracing for
+    /// runs launched with this config (see [`crate::trace`]).
+    pub fn with_trace(mut self, trace: Option<TraceOptions>) -> ExecConfig {
+        self.trace = trace;
         self
     }
 
@@ -133,11 +147,36 @@ impl ShardedRunner {
     }
 
     fn pool(&self) -> WorkerPool {
-        WorkerPool::new(self.cfg.workers).with_claim(self.cfg.claim)
+        // the trace epoch (and thus t=0 of every event stamp) is the
+        // moment the run is launched
+        WorkerPool::new(self.cfg.workers)
+            .with_claim(self.cfg.claim)
+            .with_trace(self.cfg.trace.map(TraceSpec::from_options))
+    }
+
+    /// Attach the folded trace lanes to a finished report, pairing them
+    /// with the node table (name, SIMD width) the metrics fold produced,
+    /// so consumers can resolve `Firing { node }` ids to names.
+    fn attach_trace<T>(report: &mut ExecReport<T>, traces: Vec<WorkerTrace>) {
+        let nodes = report
+            .metrics
+            .nodes
+            .iter()
+            .map(|(name, m)| (name.clone(), m.width))
+            .collect();
+        report.trace = Some(Trace {
+            workers: traces,
+            nodes,
+        });
     }
 
     /// Plan shards at region boundaries, fan them out over the worker
     /// pool, and merge outputs back into stream order.
+    ///
+    /// `elapsed` on the report covers the claim/execute phase only:
+    /// every worker's pipeline is prewarmed behind a barrier first, so
+    /// graph construction never pollutes the measurement (shard planning
+    /// is included — it is part of the work a run does).
     pub fn run<F: PipelineFactory>(
         &self,
         factory: &F,
@@ -147,8 +186,13 @@ impl ShardedRunner {
         let t0 = Instant::now();
         let weights: Vec<usize> = stream.iter().map(|r| factory.weight(r)).collect();
         let plan = ShardPlan::build(&weights, self.cfg.workers, &self.cfg.shard);
-        let results = self.pool().run(factory, stream, &plan)?;
-        Ok(merge_results(results, t0.elapsed().as_secs_f64()))
+        let planning = t0.elapsed().as_secs_f64();
+        let run = self.pool().run_collect(factory, stream, &plan)?;
+        let mut report = merge_results(run.results, planning + run.elapsed);
+        if self.cfg.trace.is_some() {
+            Self::attach_trace(&mut report, run.traces);
+        }
+        Ok(report)
     }
 
     /// Streaming execution with collected outputs: regions are pulled
@@ -192,14 +236,18 @@ impl ShardedRunner {
         K: FnMut(ShardResult<F::Out>) -> Result<()>,
     {
         self.cfg.validate()?;
-        let t0 = Instant::now();
         let mut builder = ReportBuilder::new();
-        self.pool()
-            .run_stream(factory, source, &self.cfg.ingest, |r| {
+        let run = self
+            .pool()
+            .run_stream_collect(factory, source, &self.cfg.ingest, |r| {
                 builder.add_stats(&r);
                 sink(r)
             })?;
-        Ok(builder.finish(t0.elapsed().as_secs_f64()))
+        let mut report = builder.finish(run.elapsed);
+        if self.cfg.trace.is_some() {
+            Self::attach_trace(&mut report, run.traces);
+        }
+        Ok(report)
     }
 
     /// Streaming execution into a [`ResultSink`]: each shard's outputs
@@ -356,6 +404,30 @@ mod tests {
         assert!(ExecConfig::auto().workers >= 1);
         assert!(ExecConfig::auto().validate().is_ok());
         assert!(ExecConfig::new(0).validate().is_err());
+    }
+
+    #[test]
+    fn traced_config_attaches_a_reconciling_trace() {
+        let stream = stream_of(100);
+        let cfg = ExecConfig::new(3).with_trace(Some(crate::trace::TraceOptions::default()));
+        let traced = ShardedRunner::new(cfg.clone()).run(&WeightedFactory, &stream).unwrap();
+        let trace = traced.trace.as_ref().expect("trace attached when configured");
+        assert_eq!(trace.dropped(), 0);
+        assert_eq!(trace.shards(), traced.shards as u64);
+
+        let streamed = ShardedRunner::new(cfg)
+            .run_stream(&WeightedFactory, SliceSource::new(&stream))
+            .unwrap();
+        let trace = streamed.trace.as_ref().expect("trace attached when configured");
+        assert_eq!(trace.shards(), streamed.shards as u64);
+        assert_eq!(trace.submits(), trace.shards());
+        assert_eq!(trace.emits(), trace.shards());
+
+        // outputs identical traced vs untraced, and untraced reports
+        // carry no trace at all
+        let untraced = ShardedRunner::with_workers(3).run(&WeightedFactory, &stream).unwrap();
+        assert!(untraced.trace.is_none());
+        assert_eq!(untraced.outputs, traced.outputs);
     }
 
     #[test]

@@ -64,6 +64,7 @@ pub mod exec;
 pub mod io;
 pub mod runtime;
 pub mod simd;
+pub mod trace;
 pub mod util;
 pub mod workload;
 
@@ -112,6 +113,7 @@ pub mod prelude {
     pub use crate::runtime::kernels::{Backend, KernelSet};
     pub use crate::runtime::{ArtifactStore, Engine, KernelName};
     pub use crate::simd::{ChunkSource, SimdConfig, SimdMachine};
+    pub use crate::trace::{Trace, TraceEvent, TraceOptions, TraceSink, TraceSpec, WorkerTrace};
     pub use crate::workload::regions::{GenBlobSource, RegionSpec};
     pub use crate::workload::source::{IterSource, RegionSource, SliceSource};
     pub use crate::workload::taxi::TaxiWorkload;

@@ -13,6 +13,7 @@
 //! regatta gen sum   --out data.rgn  [--items N] [--region-*] [--seed S]
 //! regatta gen taxi  --out trips.txt [--lines N] [--replicate K] [--seed S]
 //! regatta bench <fig6|fig7|fig8|scale|hotpath|ingest|io|penalty|width|lanectx>
+//! regatta trace summarize --input out.trace.json [--buckets N]
 //! regatta info      # artifact manifest + platform
 //! regatta --config <file.toml>   # load a [run] config (see configs/)
 //! ```
@@ -49,12 +50,14 @@ USAGE:
                     [--workers K] [--shards-per-worker S]
                     [--stream] [--ingest-buffer R] [--stats] [--verify]
                     [--input data.rgn] [--output results.jsonl|.bin]
+                    [--trace out.trace.json]
   regatta run taxi  [--lines N] [--replicate K] [--variant enum|hybrid|tagged]
                     [--width W] [--backend xla|native]
                     [--policy greedy|deepest|rr]
                     [--workers K] [--shards-per-worker S]
                     [--stream] [--ingest-buffer R] [--stats]
                     [--input trips.txt] [--output pairs.jsonl|.bin]
+                    [--trace out.trace.json]
   regatta gen sum   --out data.rgn  [--items N] [--region-size N | --region-max N |
                     --region-skew N] [--seed S]
   regatta gen taxi  --out trips.txt [--lines N] [--replicate K] [--seed S]
@@ -68,8 +71,16 @@ USAGE:
                     [--ingest-buffer R] [--json FILE]
   regatta bench io      [--smoke] [--items N] [--width W] [--workers K]
                     [--buffers R1,R2,...] [--json FILE]
+  regatta trace summarize --input out.trace.json [--buckets N]
   regatta info
   regatta --config <file.toml>
+
+  --trace FILE records every scheduler firing, shard execution, ingest
+  cut and merge emission into per-worker ring buffers and writes one
+  Chrome-trace JSON artifact (load in Perfetto or chrome://tracing, or
+  run `regatta trace summarize` for an occupancy timeline, straggler
+  table and steal/backpressure report). Tracing never changes outputs;
+  without the flag the hot path runs exactly as untraced.
 
   --stream runs the app through the v2 streaming executor: regions are
   ingested incrementally (at most R in flight, backpressure beyond) and
@@ -105,6 +116,7 @@ fn real_main() -> Result<()> {
         },
         Some("gen") => run_gen(&args),
         Some("bench") => run_bench(&args),
+        Some("trace") => run_trace(&args),
         Some("info") => info(),
         Some(other) => bail!("unknown subcommand {other:?}"),
         None => {
@@ -126,7 +138,7 @@ fn config_to_args(path: &str) -> Result<Args> {
     for key in [
         "items", "region-size", "region-max", "region-skew", "mode", "shape", "width",
         "backend", "threshold", "workers", "shards-per-worker", "ingest-buffer", "lines",
-        "replicate", "variant", "policy", "input", "output",
+        "replicate", "variant", "policy", "input", "output", "trace",
     ] {
         if let Some(v) = cfg.get("run", &key.replace('-', "_")) {
             let vs = match v {
@@ -159,10 +171,51 @@ fn policy(args: &Args) -> Result<regatta::prelude::Policy> {
 fn exec_config(args: &Args, workers: usize) -> Result<ExecConfig> {
     let cfg = ExecConfig::new(workers)
         .with_shards_per_worker(args.get_or("shards-per-worker", 1)?)
-        .streaming(args.get_or("ingest-buffer", 1024)?);
+        .streaming(args.get_or("ingest-buffer", 1024)?)
+        .with_trace(
+            args.opt("trace")
+                .map(|_| regatta::trace::TraceOptions::default()),
+        );
     // names zero and absurd (unit-mistake) budgets, mentioning the flag
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// `--trace FILE`: write the run's Chrome-trace artifact.
+fn write_trace_artifact<T>(report: &regatta::exec::ExecReport<T>, path: &str) -> Result<()> {
+    let trace = report
+        .trace
+        .as_ref()
+        .context("run was launched with tracing but carries no trace (internal error)")?;
+    std::fs::write(path, regatta::trace::chrome::to_chrome_json(trace))
+        .with_context(|| format!("writing {path}"))?;
+    println!(
+        "trace: {} event(s) across {} lane(s), {} dropped -> {path}\n\
+         trace: load in Perfetto / chrome://tracing, or run \
+         `regatta trace summarize --input {path}`",
+        trace.events(),
+        trace.workers.len(),
+        trace.dropped()
+    );
+    Ok(())
+}
+
+/// `regatta trace summarize`: occupancy timeline, straggler table and
+/// steal/backpressure report from a `--trace` artifact.
+fn run_trace(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("summarize") => {
+            let path = args
+                .opt("input")
+                .context("trace summarize needs --input FILE (a --trace artifact)")?;
+            let text =
+                std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            let buckets: usize = args.get_or("buckets", 24)?;
+            print!("{}", regatta::trace::summary::summarize(&text, buckets)?);
+            Ok(())
+        }
+        other => bail!("unknown trace action {other:?} (use summarize)"),
+    }
 }
 
 /// The region-size spec shared by `run sum`, `gen sum` and the benches.
@@ -235,6 +288,7 @@ fn run_sum(args: &Args) -> Result<()> {
     let seed = args.get_or("seed", 0xF16u64)?;
     let input = args.opt("input").map(str::to_string);
     let output = args.opt("output").map(str::to_string);
+    let trace_path = args.opt("trace").map(str::to_string);
     // file I/O always runs through the streaming executor — bounded
     // memory is its point
     let streaming = args.flag("stream") || input.is_some() || output.is_some();
@@ -301,6 +355,9 @@ fn run_sum(args: &Args) -> Result<()> {
             let mut sink = file_sink::<(u64, f64)>(out_path)?;
             let report = runner.run_stream_into(&factory, source, &mut *sink)?;
             let stats = sink.finish()?;
+            if let Some(tp) = &trace_path {
+                write_trace_artifact(&report, tp)?;
+            }
             if args.flag("stats") {
                 print_exec_stats(&report);
                 print!("{}", report.metrics.table());
@@ -315,22 +372,30 @@ fn run_sum(args: &Args) -> Result<()> {
             return Ok(());
         }
         let report = runner.run_stream(&factory, source)?;
+        if let Some(tp) = &trace_path {
+            write_trace_artifact(&report, tp)?;
+        }
         if args.flag("stats") {
             print_exec_stats(&report);
         }
         let outputs = regatta::apps::sum::finish_sharded_outputs(mode, report.outputs);
         (outputs, report.metrics, report.elapsed)
-    } else if workers <= 1 {
+    } else if workers <= 1 && trace_path.is_none() {
         let p = figures::provider(sel, width)?;
         let app = SumApp::new(cfg, p.kernels);
         let report = app.run(&blobs)?;
         (report.outputs, report.metrics, report.elapsed)
     } else {
         // L3.5: shard at region boundaries, one pipeline replica per
-        // worker thread, deterministic merge back into stream order
+        // worker thread, deterministic merge back into stream order (a
+        // traced run takes this path even at one worker — the executor
+        // owns the trace lanes)
         let factory = SumFactory::new(cfg, KernelSpawn::from(sel));
         let runner = ShardedRunner::new(exec_config(args, workers)?);
         let report = runner.run(&factory, &blobs)?;
+        if let Some(tp) = &trace_path {
+            write_trace_artifact(&report, tp)?;
+        }
         if args.flag("stats") {
             print_exec_stats(&report);
         }
@@ -385,6 +450,7 @@ fn run_taxi(args: &Args) -> Result<()> {
     let workers: usize = args.get_or("workers", 1)?;
     anyhow::ensure!(workers >= 1, "--workers must be >= 1 (got {workers})");
     let output = args.opt("output").map(str::to_string);
+    let trace_path = args.opt("trace").map(str::to_string);
     if let Some(path) = args.opt("input").map(str::to_string) {
         return run_taxi_file(args, &path, output.as_deref(), variant, width, pol, workers);
     }
@@ -418,6 +484,9 @@ fn run_taxi(args: &Args) -> Result<()> {
             let report =
                 runner.run_stream_into(&factory, SliceSource::new(&w.lines), &mut *sink)?;
             let stats = sink.finish()?;
+            if let Some(tp) = &trace_path {
+                write_trace_artifact(&report, tp)?;
+            }
             if args.flag("stats") {
                 print_exec_stats(&report);
                 print!("{}", report.metrics.table());
@@ -437,20 +506,27 @@ fn run_taxi(args: &Args) -> Result<()> {
             return Ok(());
         }
         let report = runner.run_stream(&factory, SliceSource::new(&w.lines))?;
+        if let Some(tp) = &trace_path {
+            write_trace_artifact(&report, tp)?;
+        }
         if args.flag("stats") {
             print_exec_stats(&report);
         }
         (report.outputs, report.metrics, report.elapsed)
-    } else if workers <= 1 {
+    } else if workers <= 1 && trace_path.is_none() {
         let p = figures::provider(sel, width)?;
         let report = TaxiApp::new(cfg, p.kernels).run(&w)?;
         (report.pairs, report.metrics, report.elapsed)
     } else {
         // L3.5: lines are the regions — shard between lines, balanced by
-        // character count, pairs merged back in stream order
+        // character count, pairs merged back in stream order (a traced
+        // run takes this path even at one worker)
         let factory = TaxiFactory::new(cfg, KernelSpawn::from(sel), w.text.clone());
         let runner = ShardedRunner::new(exec_config(args, workers)?);
         let report = runner.run(&factory, &w.lines)?;
+        if let Some(tp) = &trace_path {
+            write_trace_artifact(&report, tp)?;
+        }
         if args.flag("stats") {
             print_exec_stats(&report);
         }
@@ -503,11 +579,15 @@ fn run_taxi_file(
     };
     let factory = TaxiFactory::new(cfg, KernelSpawn::from(sel), text.clone());
     let runner = ShardedRunner::new(exec_config(args, workers)?);
+    let trace_path = args.opt("trace").map(str::to_string);
     if let Some(out_path) = output {
         ensure_distinct_io(path, out_path)?;
         let mut sink = file_sink::<TaxiPair>(out_path)?;
         let report = runner.run_stream_into(&factory, source, &mut *sink)?;
         let stats = sink.finish()?;
+        if let Some(tp) = &trace_path {
+            write_trace_artifact(&report, tp)?;
+        }
         if args.flag("stats") {
             print_exec_stats(&report);
             print!("{}", report.metrics.table());
@@ -520,6 +600,9 @@ fn run_taxi_file(
         );
     } else {
         let report = runner.run_stream(&factory, source)?;
+        if let Some(tp) = &trace_path {
+            write_trace_artifact(&report, tp)?;
+        }
         if args.flag("stats") {
             print_exec_stats(&report);
             print!("{}", report.metrics.table());

@@ -1,0 +1,321 @@
+//! Chrome trace-event JSON export.
+//!
+//! Renders a folded [`Trace`] in the Trace Event Format understood by
+//! Perfetto (<https://ui.perfetto.dev>) and `chrome://tracing`: one
+//! track per lane (`tid 0` = streaming driver, `tid n+1` = worker `n`),
+//! complete events (`"ph": "X"`, microsecond `ts`/`dur`) for firings,
+//! shard executions, prewarm and stalls, plus counter tracks
+//! (`"ph": "C"`) for per-worker occupancy and the driver's in-flight
+//! region budget.
+//!
+//! Alongside the standard `traceEvents` array the artifact carries a
+//! `"regatta"` object with the folded totals (firings, ensembles,
+//! items, shards, drops) and the node table — that object is what CI
+//! and `trace summarize` reconcile against `NodeMetrics`, and what the
+//! tests parse back with the vendored [`crate::util::json`] reader (the
+//! writer therefore emits pure ASCII).
+
+use super::{Trace, TraceEvent, DRIVER_LANE};
+
+/// Escape a string for a JSON literal, staying ASCII-only so the
+/// vendored byte-wise parser round-trips it exactly.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) > 0xFFFF => out.push_str("\\ufffd"),
+            c if (c as u32) < 0x20 || !c.is_ascii() => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Chrome thread id for a lane: driver first, then workers in order.
+fn lane_tid(worker: usize) -> usize {
+    if worker == DRIVER_LANE {
+        0
+    } else {
+        worker + 1
+    }
+}
+
+/// Human name for a lane's track.
+fn lane_name(worker: usize) -> String {
+    if worker == DRIVER_LANE {
+        "driver (ingest+merge)".to_string()
+    } else {
+        format!("worker {worker}")
+    }
+}
+
+/// Render the folded trace as a Chrome trace-event JSON document.
+pub fn to_chrome_json(trace: &Trace) -> String {
+    let mut ev: Vec<String> = Vec::new();
+    ev.push(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+         \"args\":{\"name\":\"regatta\"}}"
+            .to_string(),
+    );
+    for lane in &trace.workers {
+        let tid = lane_tid(lane.worker);
+        let name = esc(&lane_name(lane.worker));
+        ev.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+             \"args\":{{\"name\":\"{name}\"}}}}"
+        ));
+    }
+
+    for lane in &trace.workers {
+        let tid = lane_tid(lane.worker);
+        // running in-flight region count, driven by this lane's
+        // Submit/Emit events (only the driver lane records those)
+        let mut in_flight: i64 = 0;
+        for rec in &lane.records {
+            let ts = rec.t0_ns as f64 / 1000.0;
+            let dur = rec.t1_ns.saturating_sub(rec.t0_ns) as f64 / 1000.0;
+            match rec.event {
+                TraceEvent::Firing {
+                    node,
+                    ensembles,
+                    items,
+                } => {
+                    let (name, width) = trace
+                        .nodes
+                        .get(node as usize)
+                        .map(|(n, w)| (n.as_str(), *w))
+                        .unwrap_or(("node", 0));
+                    let name = esc(name);
+                    ev.push(format!(
+                        "{{\"name\":\"fire {name}\",\"cat\":\"firing\",\"ph\":\"X\",\
+                         \"pid\":1,\"tid\":{tid},\"ts\":{ts:.3},\"dur\":{dur:.3},\
+                         \"args\":{{\"node\":{node},\"ensembles\":{ensembles},\
+                         \"items\":{items}}}}}"
+                    ));
+                    if ensembles > 0 && width > 0 {
+                        let occ = 100.0 * items as f64 / (ensembles as f64 * width as f64);
+                        let w = lane.worker;
+                        ev.push(format!(
+                            "{{\"name\":\"occupancy w{w}\",\"ph\":\"C\",\"pid\":1,\
+                             \"tid\":{tid},\"ts\":{ts:.3},\"args\":{{\"occ\":{occ:.2}}}}}"
+                        ));
+                    }
+                }
+                TraceEvent::Shard {
+                    shard,
+                    regions,
+                    stolen,
+                } => {
+                    ev.push(format!(
+                        "{{\"name\":\"shard {shard}\",\"cat\":\"shard\",\"ph\":\"X\",\
+                         \"pid\":1,\"tid\":{tid},\"ts\":{ts:.3},\"dur\":{dur:.3},\
+                         \"args\":{{\"shard\":{shard},\"regions\":{regions},\
+                         \"stolen\":{stolen}}}}}"
+                    ));
+                }
+                TraceEvent::Prewarm => {
+                    ev.push(format!(
+                        "{{\"name\":\"prewarm\",\"cat\":\"prewarm\",\"ph\":\"X\",\
+                         \"pid\":1,\"tid\":{tid},\"ts\":{ts:.3},\"dur\":{dur:.3},\
+                         \"args\":{{}}}}"
+                    ));
+                }
+                TraceEvent::Submit { shard, regions } => {
+                    in_flight += regions as i64;
+                    ev.push(format!(
+                        "{{\"name\":\"submit {shard}\",\"cat\":\"ingest\",\"ph\":\"X\",\
+                         \"pid\":1,\"tid\":{tid},\"ts\":{ts:.3},\"dur\":{dur:.3},\
+                         \"args\":{{\"shard\":{shard},\"regions\":{regions}}}}}"
+                    ));
+                    ev.push(format!(
+                        "{{\"name\":\"in-flight regions\",\"ph\":\"C\",\"pid\":1,\
+                         \"tid\":{tid},\"ts\":{ts:.3},\"args\":{{\"regions\":{in_flight}}}}}"
+                    ));
+                }
+                TraceEvent::Stall { in_flight: held } => {
+                    ev.push(format!(
+                        "{{\"name\":\"stall\",\"cat\":\"ingest\",\"ph\":\"X\",\
+                         \"pid\":1,\"tid\":{tid},\"ts\":{ts:.3},\"dur\":{dur:.3},\
+                         \"args\":{{\"in_flight\":{held}}}}}"
+                    ));
+                }
+                TraceEvent::Emit { shard, regions } => {
+                    in_flight -= regions as i64;
+                    ev.push(format!(
+                        "{{\"name\":\"emit {shard}\",\"cat\":\"merge\",\"ph\":\"X\",\
+                         \"pid\":1,\"tid\":{tid},\"ts\":{ts:.3},\"dur\":{dur:.3},\
+                         \"args\":{{\"shard\":{shard},\"regions\":{regions}}}}}"
+                    ));
+                    ev.push(format!(
+                        "{{\"name\":\"in-flight regions\",\"ph\":\"C\",\"pid\":1,\
+                         \"tid\":{tid},\"ts\":{ts:.3},\"args\":{{\"regions\":{in_flight}}}}}"
+                    ));
+                }
+            }
+        }
+    }
+
+    let nodes = trace
+        .nodes
+        .iter()
+        .map(|(name, width)| format!("{{\"name\":\"{}\",\"width\":{width}}}", esc(name)))
+        .collect::<Vec<_>>()
+        .join(",");
+    let mut out = String::new();
+    out.push_str("{\"traceEvents\":[\n");
+    out.push_str(&ev.join(",\n"));
+    out.push_str("\n],\n\"regatta\":{");
+    out.push_str(&format!(
+        "\"firings\":{},\"ensembles\":{},\"items\":{},\"shards\":{},\
+         \"stolen\":{},\"submits\":{},\"emits\":{},\"stalls\":{},\
+         \"events\":{},\"dropped\":{},\"lanes\":{},\"nodes\":[{}]",
+        trace.firings(),
+        trace.ensembles(),
+        trace.items(),
+        trace.shards(),
+        trace.stolen_shards(),
+        trace.submits(),
+        trace.emits(),
+        trace.stalls(),
+        trace.events(),
+        trace.dropped(),
+        trace.workers.len(),
+        nodes
+    ));
+    out.push_str("}}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{TraceRecord, WorkerTrace};
+    use crate::util::json::Json;
+
+    fn sample_trace() -> Trace {
+        let rec = |t0: u64, t1: u64, event| TraceRecord {
+            t0_ns: t0,
+            t1_ns: t1,
+            event,
+        };
+        Trace {
+            workers: vec![
+                WorkerTrace {
+                    worker: 0,
+                    records: vec![
+                        rec(0, 500, TraceEvent::Prewarm),
+                        rec(
+                            1_000,
+                            2_000,
+                            TraceEvent::Firing {
+                                node: 1,
+                                ensembles: 2,
+                                items: 12,
+                            },
+                        ),
+                        rec(
+                            1_000,
+                            3_000,
+                            TraceEvent::Shard {
+                                shard: 0,
+                                regions: 4,
+                                stolen: true,
+                            },
+                        ),
+                    ],
+                    dropped: 0,
+                },
+                WorkerTrace {
+                    worker: DRIVER_LANE,
+                    records: vec![
+                        rec(
+                            900,
+                            900,
+                            TraceEvent::Submit {
+                                shard: 0,
+                                regions: 4,
+                            },
+                        ),
+                        rec(950, 980, TraceEvent::Stall { in_flight: 4 }),
+                        rec(
+                            3_100,
+                            3_100,
+                            TraceEvent::Emit {
+                                shard: 0,
+                                regions: 4,
+                            },
+                        ),
+                    ],
+                    dropped: 2,
+                },
+            ],
+            nodes: vec![("enum".into(), 8), ("sum".into(), 8)],
+        }
+    }
+
+    #[test]
+    fn emitted_json_parses_and_reconciles() {
+        let trace = sample_trace();
+        let text = to_chrome_json(&trace);
+        let json = Json::parse(&text).expect("chrome JSON parses with the vendored reader");
+        let events = json.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        // every event is an object with the required phase field
+        for e in events {
+            assert!(e.get("ph").and_then(Json::as_str).is_some());
+        }
+        let meta = json.get("regatta").expect("totals object present");
+        assert_eq!(meta.get("firings").unwrap().as_usize(), Some(1));
+        assert_eq!(meta.get("ensembles").unwrap().as_usize(), Some(2));
+        assert_eq!(meta.get("items").unwrap().as_usize(), Some(12));
+        assert_eq!(meta.get("shards").unwrap().as_usize(), Some(1));
+        assert_eq!(meta.get("stolen").unwrap().as_usize(), Some(1));
+        assert_eq!(meta.get("dropped").unwrap().as_usize(), Some(2));
+        let nodes = meta.get("nodes").unwrap().as_arr().unwrap();
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[1].get("name").unwrap().as_str(), Some("sum"));
+        assert_eq!(nodes[1].get("width").unwrap().as_usize(), Some(8));
+    }
+
+    #[test]
+    fn tracks_and_counters_are_present() {
+        let text = to_chrome_json(&sample_trace());
+        let json = Json::parse(&text).unwrap();
+        let events = json.get("traceEvents").unwrap().as_arr().unwrap();
+        let named = |name: &str| {
+            events
+                .iter()
+                .filter(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                .count()
+        };
+        assert_eq!(named("thread_name"), 2);
+        assert_eq!(named("occupancy w0"), 1);
+        assert_eq!(named("in-flight regions"), 2, "one per submit/emit");
+        assert_eq!(named("fire sum"), 1);
+        // the shard span is on worker 0's track (tid 1), stolen tagged
+        let shard = events
+            .iter()
+            .find(|e| e.get("cat").and_then(Json::as_str) == Some("shard"))
+            .unwrap();
+        assert_eq!(shard.get("tid").unwrap().as_usize(), Some(1));
+        assert_eq!(shard.get("args").unwrap().get("stolen"), Some(&Json::Bool(true)));
+        // driver events land on tid 0
+        let submit = events
+            .iter()
+            .find(|e| e.get("cat").and_then(Json::as_str) == Some("ingest"))
+            .unwrap();
+        assert_eq!(submit.get("tid").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn escapes_stay_ascii() {
+        assert_eq!(esc("plain"), "plain");
+        assert_eq!(esc("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(esc("tab\there"), "tab\\u0009here");
+        assert_eq!(esc("π"), "\\u03c0");
+    }
+}

@@ -1,0 +1,489 @@
+//! Structured event tracing across the whole stack — zero overhead when
+//! off.
+//!
+//! The paper's central performance quantity is SIMD occupancy *over
+//! time*: how region-boundary frequency caps ensemble width per firing.
+//! End-of-run aggregates ([`NodeMetrics`](crate::coordinator::metrics))
+//! cannot show a straggler shard, a steal storm, or an occupancy
+//! collapse mid-stream — this module can. It records typed events from
+//! every layer:
+//!
+//! * **scheduler firings** — node id plus the ensemble/item deltas of
+//!   that one firing (occupancy per firing), hooked inside
+//!   [`Scheduler::run`](crate::coordinator::scheduler::Scheduler);
+//! * **shard lifecycle** — claim→execute→complete as one span per shard,
+//!   tagged stolen-or-local, from the worker pool;
+//! * **ingest** — planner cuts (shard submission) and backpressure
+//!   stalls from the streaming driver;
+//! * **merge** — in-order emission from the stream merger ring;
+//! * **prewarm** — each worker's eager pipeline build, as its own span
+//!   outside the timed region.
+//!
+//! ## Design rules
+//!
+//! * **Zero overhead when off.** A disabled [`TraceSink`] is a single
+//!   `Option` branch on the hot path; no clock reads, no stores, no
+//!   allocation. The count-allocs suite pins the steady-state firing
+//!   path at exactly zero allocations with tracing off *and* on.
+//! * **No steady-state allocation when on.** Each lane owns one
+//!   preallocated [`TraceBuffer`]; recording is a bounds check plus a
+//!   32-byte store. When the buffer fills, events are dropped — counted
+//!   honestly in [`TraceBuffer::dropped`] and surfaced through every
+//!   export — never reallocated.
+//! * **Reconciliation.** One [`TraceEvent::Firing`] is recorded per
+//!   scheduler firing with deltas read from the node's own counters, so
+//!   with zero drops the folded trace's firing/ensemble/item totals
+//!   equal the `NodeMetrics` sums *exactly* (`tests/trace_observe.rs`).
+//! * **Clock model.** All stamps are nanoseconds since one shared
+//!   [`Instant`] epoch ([`TraceSpec::epoch`]) captured before workers
+//!   start. `Instant` is monotonic, so per-lane event order is exact and
+//!   cross-lane skew is bounded by the OS clocksource, not by wall-clock
+//!   adjustments.
+//!
+//! Exports: [`chrome`] renders the folded [`Trace`] as Chrome
+//! trace-event JSON (open in Perfetto or `chrome://tracing`); [`summary`]
+//! turns that artifact back into a windowed occupancy timeline, a
+//! straggler table and a steal/backpressure report (`regatta trace
+//! summarize`).
+
+pub mod chrome;
+pub mod summary;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Lane id used for events recorded by the streaming driver (ingest +
+/// merge), which runs on the calling thread rather than in a worker.
+pub const DRIVER_LANE: usize = usize::MAX;
+
+/// User-facing trace knobs, carried by
+/// [`ExecConfig`](crate::exec::ExecConfig).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceOptions {
+    /// Per-lane event capacity. Each worker (and the streaming driver)
+    /// preallocates one buffer of this many records; events beyond it
+    /// are dropped and counted, never grown.
+    pub capacity: usize,
+}
+
+impl Default for TraceOptions {
+    fn default() -> Self {
+        TraceOptions { capacity: 1 << 20 }
+    }
+}
+
+/// The cross-thread recipe for building per-worker sinks: the shared
+/// clock epoch plus the buffer capacity. `Copy + Send` so the pool can
+/// hand it to every worker thread; each worker builds its own
+/// [`TraceSink`] from it, inside its own thread.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceSpec {
+    /// Shared monotonic epoch: every stamp is nanoseconds since this.
+    pub epoch: Instant,
+    /// Per-lane buffer capacity in records.
+    pub capacity: usize,
+}
+
+impl TraceSpec {
+    /// A spec whose epoch is "now".
+    pub fn new(capacity: usize) -> TraceSpec {
+        TraceSpec {
+            epoch: Instant::now(),
+            capacity,
+        }
+    }
+
+    /// Spec from user-facing options.
+    pub fn from_options(opts: TraceOptions) -> TraceSpec {
+        TraceSpec::new(opts.capacity)
+    }
+
+    /// Build an enabled sink (one preallocated buffer) on the calling
+    /// thread.
+    pub fn sink(&self) -> TraceSink {
+        TraceSink {
+            inner: Some(Rc::new(SinkInner {
+                epoch: self.epoch,
+                buf: RefCell::new(TraceBuffer::new(self.capacity)),
+            })),
+        }
+    }
+}
+
+/// One typed trace event. `Copy` and pointer-free: recording is a plain
+/// store into a preallocated buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// One scheduler firing of node `node`, with the ensemble and item
+    /// deltas of exactly that firing (0 ensembles = signal-only firing).
+    Firing { node: u32, ensembles: u32, items: u32 },
+    /// One shard executed to quiescence by this lane's worker.
+    Shard { shard: u32, regions: u32, stolen: bool },
+    /// Eager pipeline construction, before the timed region.
+    Prewarm,
+    /// Driver: shard cut by the ingest planner and pushed to the deques.
+    Submit { shard: u32, regions: u32 },
+    /// Driver: backpressure stall — the in-flight region budget was
+    /// full, with `in_flight` regions outstanding when the stall began.
+    Stall { in_flight: u32 },
+    /// Driver: shard released in stream order by the merge ring.
+    Emit { shard: u32, regions: u32 },
+}
+
+/// A stamped event: `[t0_ns, t1_ns]` nanoseconds since the shared
+/// epoch. Instantaneous events carry `t0_ns == t1_ns`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceRecord {
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+    pub event: TraceEvent,
+}
+
+/// Fixed-capacity event buffer: preallocated up front, drop-and-count
+/// when full, never grown. This is what keeps the traced hot path
+/// allocation-free and memory bounded on arbitrarily long runs.
+#[derive(Debug)]
+pub struct TraceBuffer {
+    records: Vec<TraceRecord>,
+    capacity: usize,
+    dropped: u64,
+}
+
+impl TraceBuffer {
+    /// Preallocate space for `capacity` records.
+    pub fn new(capacity: usize) -> TraceBuffer {
+        TraceBuffer {
+            records: Vec::with_capacity(capacity),
+            capacity,
+            dropped: 0,
+        }
+    }
+
+    /// Record one event, or count it as dropped if the buffer is full.
+    /// Never allocates: `records` was reserved to `capacity` in `new`.
+    #[inline]
+    pub fn push(&mut self, rec: TraceRecord) {
+        if self.records.len() < self.capacity {
+            self.records.push(rec);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Events dropped because the buffer was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn records(&self) -> &[TraceRecord] {
+        &self.records
+    }
+}
+
+#[derive(Debug)]
+struct SinkInner {
+    epoch: Instant,
+    buf: RefCell<TraceBuffer>,
+}
+
+/// The recording handle threaded through scheduler, pool and driver.
+/// Disabled (the default) it is a `None` and every call is a single
+/// predictable branch; enabled it stamps against the shared epoch and
+/// stores into the lane's preallocated buffer. `Rc`-based and
+/// thread-confined, like the coordinator it instruments.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSink {
+    inner: Option<Rc<SinkInner>>,
+}
+
+impl TraceSink {
+    /// The disabled sink (same as `Default`).
+    pub fn disabled() -> TraceSink {
+        TraceSink { inner: None }
+    }
+
+    /// Is this sink recording?
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Nanoseconds since the shared epoch; 0 when disabled (callers
+    /// gate on [`enabled`](TraceSink::enabled) before reading clocks).
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        match &self.inner {
+            Some(inner) => inner.epoch.elapsed().as_nanos() as u64,
+            None => 0,
+        }
+    }
+
+    /// Record one stamped event; no-op when disabled.
+    #[inline]
+    pub fn record(&self, t0_ns: u64, t1_ns: u64, event: TraceEvent) {
+        if let Some(inner) = &self.inner {
+            inner.buf.borrow_mut().push(TraceRecord { t0_ns, t1_ns, event });
+        }
+    }
+
+    /// Drain this lane's buffer: `(records, dropped)`. Leaves the sink
+    /// enabled but empty.
+    pub fn take(&self) -> (Vec<TraceRecord>, u64) {
+        match &self.inner {
+            Some(inner) => {
+                let mut buf = inner.buf.borrow_mut();
+                (std::mem::take(&mut buf.records), buf.dropped)
+            }
+            None => (Vec::new(), 0),
+        }
+    }
+}
+
+/// One lane's drained events: a worker's, or the streaming driver's
+/// ([`DRIVER_LANE`]).
+#[derive(Debug, Clone)]
+pub struct WorkerTrace {
+    /// Worker id, or [`DRIVER_LANE`] for the ingest/merge driver.
+    pub worker: usize,
+    /// Events in the order the lane recorded them.
+    pub records: Vec<TraceRecord>,
+    /// Events this lane dropped because its buffer was full.
+    pub dropped: u64,
+}
+
+/// The folded post-run trace: every lane's events plus the node table
+/// (name, ensemble width) that firing events index into. Attached to
+/// [`ExecReport`](crate::exec::ExecReport) when tracing is on.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// Per-lane events, workers sorted by id, driver lane last.
+    pub workers: Vec<WorkerTrace>,
+    /// `(name, width)` per pipeline node, indexed by
+    /// [`TraceEvent::Firing::node`].
+    pub nodes: Vec<(String, usize)>,
+}
+
+impl Trace {
+    /// Total recorded events across all lanes.
+    pub fn events(&self) -> usize {
+        self.workers.iter().map(|w| w.records.len()).sum()
+    }
+
+    /// Total dropped events across all lanes.
+    pub fn dropped(&self) -> u64 {
+        self.workers.iter().map(|w| w.dropped).sum()
+    }
+
+    fn fold<F: Fn(&TraceEvent) -> u64>(&self, f: F) -> u64 {
+        self.workers
+            .iter()
+            .flat_map(|w| w.records.iter())
+            .map(|r| f(&r.event))
+            .sum()
+    }
+
+    /// Recorded firing events (== scheduler firings when nothing was
+    /// dropped).
+    pub fn firings(&self) -> u64 {
+        self.fold(|e| matches!(e, TraceEvent::Firing { .. }) as u64)
+    }
+
+    /// Sum of per-firing ensemble deltas.
+    pub fn ensembles(&self) -> u64 {
+        self.fold(|e| match e {
+            TraceEvent::Firing { ensembles, .. } => *ensembles as u64,
+            _ => 0,
+        })
+    }
+
+    /// Sum of per-firing item deltas.
+    pub fn items(&self) -> u64 {
+        self.fold(|e| match e {
+            TraceEvent::Firing { items, .. } => *items as u64,
+            _ => 0,
+        })
+    }
+
+    /// Recorded shard-execution spans.
+    pub fn shards(&self) -> u64 {
+        self.fold(|e| matches!(e, TraceEvent::Shard { .. }) as u64)
+    }
+
+    /// Shard spans tagged as stolen.
+    pub fn stolen_shards(&self) -> u64 {
+        self.fold(|e| matches!(e, TraceEvent::Shard { stolen: true, .. }) as u64)
+    }
+
+    /// Driver submissions (streaming runs only).
+    pub fn submits(&self) -> u64 {
+        self.fold(|e| matches!(e, TraceEvent::Submit { .. }) as u64)
+    }
+
+    /// Driver in-order emissions (streaming runs only).
+    pub fn emits(&self) -> u64 {
+        self.fold(|e| matches!(e, TraceEvent::Emit { .. }) as u64)
+    }
+
+    /// Driver backpressure stalls (streaming runs only).
+    pub fn stalls(&self) -> u64 {
+        self.fold(|e| matches!(e, TraceEvent::Stall { .. }) as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffer_drops_and_counts_past_capacity() {
+        let mut buf = TraceBuffer::new(2);
+        let rec = |t| TraceRecord {
+            t0_ns: t,
+            t1_ns: t,
+            event: TraceEvent::Prewarm,
+        };
+        buf.push(rec(1));
+        buf.push(rec(2));
+        buf.push(rec(3));
+        buf.push(rec(4));
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf.dropped(), 2);
+        assert_eq!(buf.records()[1].t0_ns, 2);
+    }
+
+    #[test]
+    #[cfg(feature = "count-allocs")]
+    fn buffer_push_never_allocates() {
+        use crate::util::alloc_count;
+        let mut buf = TraceBuffer::new(1024);
+        let before = alloc_count::thread_allocations();
+        for t in 0..2048u64 {
+            buf.push(TraceRecord {
+                t0_ns: t,
+                t1_ns: t + 1,
+                event: TraceEvent::Firing {
+                    node: 0,
+                    ensembles: 1,
+                    items: 8,
+                },
+            });
+        }
+        let delta = alloc_count::thread_allocations() - before;
+        assert_eq!(delta, 0, "TraceBuffer::push allocated {delta} times");
+        assert_eq!(buf.len(), 1024);
+        assert_eq!(buf.dropped(), 1024);
+    }
+
+    #[test]
+    fn disabled_sink_is_inert() {
+        let sink = TraceSink::default();
+        assert!(!sink.enabled());
+        assert_eq!(sink.now_ns(), 0);
+        sink.record(0, 1, TraceEvent::Prewarm);
+        let (records, dropped) = sink.take();
+        assert!(records.is_empty());
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn sink_records_against_shared_epoch() {
+        let spec = TraceSpec::new(16);
+        let sink = spec.sink();
+        assert!(sink.enabled());
+        let t0 = sink.now_ns();
+        let t1 = sink.now_ns();
+        assert!(t1 >= t0, "shared-epoch clock must be monotonic");
+        sink.record(
+            t0,
+            t1,
+            TraceEvent::Shard {
+                shard: 3,
+                regions: 7,
+                stolen: true,
+            },
+        );
+        let (records, dropped) = sink.take();
+        assert_eq!(records.len(), 1);
+        assert_eq!(dropped, 0);
+        assert_eq!(
+            records[0].event,
+            TraceEvent::Shard {
+                shard: 3,
+                regions: 7,
+                stolen: true
+            }
+        );
+        // take drains but keeps recording
+        sink.record(t1, t1, TraceEvent::Prewarm);
+        assert_eq!(sink.take().0.len(), 1);
+    }
+
+    #[test]
+    fn trace_totals_fold_all_lanes() {
+        let rec = |event| TraceRecord {
+            t0_ns: 0,
+            t1_ns: 1,
+            event,
+        };
+        let trace = Trace {
+            workers: vec![
+                WorkerTrace {
+                    worker: 0,
+                    records: vec![
+                        rec(TraceEvent::Firing {
+                            node: 0,
+                            ensembles: 2,
+                            items: 13,
+                        }),
+                        rec(TraceEvent::Firing {
+                            node: 1,
+                            ensembles: 0,
+                            items: 0,
+                        }),
+                        rec(TraceEvent::Shard {
+                            shard: 0,
+                            regions: 4,
+                            stolen: false,
+                        }),
+                    ],
+                    dropped: 1,
+                },
+                WorkerTrace {
+                    worker: DRIVER_LANE,
+                    records: vec![
+                        rec(TraceEvent::Submit {
+                            shard: 0,
+                            regions: 4,
+                        }),
+                        rec(TraceEvent::Stall { in_flight: 4 }),
+                        rec(TraceEvent::Emit {
+                            shard: 0,
+                            regions: 4,
+                        }),
+                    ],
+                    dropped: 0,
+                },
+            ],
+            nodes: vec![("enum".into(), 8), ("sum".into(), 8)],
+        };
+        assert_eq!(trace.events(), 6);
+        assert_eq!(trace.dropped(), 1);
+        assert_eq!(trace.firings(), 2);
+        assert_eq!(trace.ensembles(), 2);
+        assert_eq!(trace.items(), 13);
+        assert_eq!(trace.shards(), 1);
+        assert_eq!(trace.stolen_shards(), 0);
+        assert_eq!(trace.submits(), 1);
+        assert_eq!(trace.emits(), 1);
+        assert_eq!(trace.stalls(), 1);
+    }
+}

@@ -1,0 +1,363 @@
+//! `regatta trace summarize` — windowed occupancy timeline, straggler
+//! table and steal/backpressure report from a Chrome trace artifact.
+//!
+//! Reads the JSON back with the vendored [`crate::util::json`] parser
+//! (no external deps), so the exporter and this reader pin each other:
+//! anything [`chrome::to_chrome_json`](super::chrome::to_chrome_json)
+//! writes must round-trip here. The occupancy timeline buckets the run's
+//! wall-clock span and reports, per node, the item-weighted SIMD
+//! occupancy of the firings that *started* in each bucket — the
+//! time-resolved version of
+//! [`NodeMetrics::occupancy`](crate::coordinator::metrics::NodeMetrics).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One parsed firing event.
+struct FiringEv {
+    node: usize,
+    ts: f64,
+    ensembles: f64,
+    items: f64,
+}
+
+/// One parsed shard-execution span.
+struct ShardEv {
+    shard: usize,
+    worker: usize,
+    dur: f64,
+    regions: usize,
+    stolen: bool,
+}
+
+fn arg_f64(e: &Json, key: &str) -> f64 {
+    e.get("args")
+        .and_then(|a| a.get(key))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0)
+}
+
+fn top_f64(e: &Json, key: &str) -> f64 {
+    e.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+/// Summarize a Chrome trace artifact (as produced by `--trace`) into a
+/// text report: run totals, a per-node occupancy timeline over
+/// `buckets` equal time windows, the longest shard executions, and the
+/// steal/backpressure picture.
+pub fn summarize(text: &str, buckets: usize) -> Result<String> {
+    let json = Json::parse(text).context("parsing trace JSON")?;
+    let events = json
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .context("trace JSON has no traceEvents array")?;
+    if events.is_empty() {
+        bail!("trace contains no events");
+    }
+    let meta = json.get("regatta");
+    let nodes: Vec<(String, usize)> = meta
+        .and_then(|m| m.get("nodes"))
+        .and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|n| {
+                    Some((
+                        n.get("name")?.as_str()?.to_string(),
+                        n.get("width")?.as_usize()?,
+                    ))
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+
+    let mut firings: Vec<FiringEv> = Vec::new();
+    let mut shards: Vec<ShardEv> = Vec::new();
+    let mut lanes = 0usize;
+    let mut stall_count = 0usize;
+    let mut stall_us = 0.0f64;
+    let mut prewarm_count = 0usize;
+    let mut prewarm_us = 0.0f64;
+    let mut submits = 0usize;
+    let mut emits = 0usize;
+    let mut span_lo = f64::INFINITY;
+    let mut span_hi = f64::NEG_INFINITY;
+    for e in events {
+        let ph = e.get("ph").and_then(Json::as_str).unwrap_or("");
+        if ph == "M" && e.get("name").and_then(Json::as_str) == Some("thread_name") {
+            lanes += 1;
+        }
+        if ph != "X" {
+            continue;
+        }
+        let ts = top_f64(e, "ts");
+        let dur = top_f64(e, "dur");
+        span_lo = span_lo.min(ts);
+        span_hi = span_hi.max(ts + dur);
+        match e.get("cat").and_then(Json::as_str).unwrap_or("") {
+            "firing" => firings.push(FiringEv {
+                node: arg_f64(e, "node") as usize,
+                ts,
+                ensembles: arg_f64(e, "ensembles"),
+                items: arg_f64(e, "items"),
+            }),
+            "shard" => shards.push(ShardEv {
+                shard: arg_f64(e, "shard") as usize,
+                worker: (e.get("tid").and_then(Json::as_usize).unwrap_or(1)).saturating_sub(1),
+                dur,
+                regions: arg_f64(e, "regions") as usize,
+                stolen: e.get("args").and_then(|a| a.get("stolen")) == Some(&Json::Bool(true)),
+            }),
+            "ingest" => {
+                if e.get("name").and_then(Json::as_str) == Some("stall") {
+                    stall_count += 1;
+                    stall_us += dur;
+                } else {
+                    submits += 1;
+                }
+            }
+            "merge" => emits += 1,
+            "prewarm" => {
+                prewarm_count += 1;
+                prewarm_us += dur;
+            }
+            _ => {}
+        }
+    }
+    if !span_hi.is_finite() {
+        bail!("trace contains no spans (ph \"X\" events)");
+    }
+    let span_us = (span_hi - span_lo).max(1e-9);
+    let dropped = meta
+        .and_then(|m| m.get("dropped"))
+        .and_then(Json::as_usize)
+        .unwrap_or(0);
+
+    let mut out = String::new();
+    out.push_str("== trace summary ==\n");
+    out.push_str(&format!(
+        "events {}, lanes {}, span {:.3} ms, dropped {}\n",
+        events.len(),
+        lanes,
+        span_us / 1000.0,
+        dropped
+    ));
+    let total_ens: f64 = firings.iter().map(|f| f.ensembles).sum();
+    let total_items: f64 = firings.iter().map(|f| f.items).sum();
+    out.push_str(&format!(
+        "firings {} (ensembles {}, items {}), shards {} ({} stolen), prewarm {} ({:.3} ms)\n",
+        firings.len(),
+        total_ens as u64,
+        total_items as u64,
+        shards.len(),
+        shards.iter().filter(|s| s.stolen).count(),
+        prewarm_count,
+        prewarm_us / 1000.0
+    ));
+
+    // -- per-node occupancy over time buckets --
+    let buckets = buckets.clamp(1, 120);
+    out.push_str(&format!(
+        "\n== occupancy% by node over {} buckets of {:.3} ms ==\n",
+        buckets,
+        span_us / buckets as f64 / 1000.0
+    ));
+    if firings.is_empty() {
+        out.push_str("(no firing events in trace)\n");
+    } else {
+        // acc[node][bucket] = (sum items, sum ensembles)
+        let nnodes = nodes
+            .len()
+            .max(firings.iter().map(|f| f.node + 1).max().unwrap_or(0));
+        let mut acc = vec![vec![(0.0f64, 0.0f64); buckets]; nnodes];
+        for f in &firings {
+            let b = (((f.ts - span_lo) / span_us) * buckets as f64) as usize;
+            let cell = &mut acc[f.node][b.min(buckets - 1)];
+            cell.0 += f.items;
+            cell.1 += f.ensembles;
+        }
+        for (ni, row) in acc.iter().enumerate() {
+            let (name, width) = nodes
+                .get(ni)
+                .map(|(n, w)| (n.as_str(), *w))
+                .unwrap_or(("?", 0));
+            let mut line = format!("{name:<12} w{width:<4} |");
+            for &(items, ens) in row {
+                if ens > 0.0 && width > 0 {
+                    let occ = 100.0 * items / (ens * width as f64);
+                    line.push_str(&format!(" {occ:>5.1}"));
+                } else {
+                    line.push_str("     -");
+                }
+            }
+            line.push('\n');
+            out.push_str(&line);
+        }
+    }
+
+    // -- straggler table --
+    out.push_str("\n== straggler shards (longest executions) ==\n");
+    if shards.is_empty() {
+        out.push_str("(no shard events in trace)\n");
+    } else {
+        out.push_str("shard    worker   stolen   regions       ms\n");
+        let mut by_dur: Vec<&ShardEv> = shards.iter().collect();
+        by_dur.sort_by(|a, b| b.dur.total_cmp(&a.dur));
+        for s in by_dur.iter().take(8) {
+            out.push_str(&format!(
+                "{:<8} {:<8} {:<8} {:>7}  {:>7.3}\n",
+                s.shard,
+                s.worker,
+                if s.stolen { "yes" } else { "no" },
+                s.regions,
+                s.dur / 1000.0
+            ));
+        }
+    }
+
+    // -- steal / backpressure --
+    let stolen = shards.iter().filter(|s| s.stolen).count();
+    out.push_str("\n== steal / backpressure ==\n");
+    out.push_str(&format!(
+        "stolen shards: {} of {} ({:.1}%)\n",
+        stolen,
+        shards.len(),
+        100.0 * stolen as f64 / shards.len().max(1) as f64
+    ));
+    out.push_str(&format!(
+        "backpressure stalls: {} totaling {:.3} ms\n",
+        stall_count,
+        stall_us / 1000.0
+    ));
+    out.push_str(&format!("ingest submits {submits}, merge emits {emits}\n"));
+    out.push_str(&format!("dropped events: {dropped}\n"));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::chrome::to_chrome_json;
+    use crate::trace::{Trace, TraceEvent, TraceRecord, WorkerTrace, DRIVER_LANE};
+
+    fn sample_trace() -> Trace {
+        let rec = |t0: u64, t1: u64, event| TraceRecord {
+            t0_ns: t0,
+            t1_ns: t1,
+            event,
+        };
+        let firing = |t0: u64, node: u32, ensembles: u32, items: u32| {
+            rec(
+                t0,
+                t0 + 400,
+                TraceEvent::Firing {
+                    node,
+                    ensembles,
+                    items,
+                },
+            )
+        };
+        Trace {
+            workers: vec![
+                WorkerTrace {
+                    worker: 0,
+                    records: vec![
+                        rec(0, 900, TraceEvent::Prewarm),
+                        firing(1_000, 0, 1, 8),
+                        firing(2_000, 1, 2, 9),
+                        firing(9_000, 1, 1, 4),
+                        rec(
+                            1_000,
+                            10_000,
+                            TraceEvent::Shard {
+                                shard: 0,
+                                regions: 3,
+                                stolen: false,
+                            },
+                        ),
+                    ],
+                    dropped: 0,
+                },
+                WorkerTrace {
+                    worker: 1,
+                    records: vec![
+                        firing(3_000, 0, 1, 2),
+                        rec(
+                            3_000,
+                            5_000,
+                            TraceEvent::Shard {
+                                shard: 1,
+                                regions: 1,
+                                stolen: true,
+                            },
+                        ),
+                    ],
+                    dropped: 0,
+                },
+                WorkerTrace {
+                    worker: DRIVER_LANE,
+                    records: vec![
+                        rec(
+                            500,
+                            500,
+                            TraceEvent::Submit {
+                                shard: 0,
+                                regions: 3,
+                            },
+                        ),
+                        rec(600, 800, TraceEvent::Stall { in_flight: 3 }),
+                        rec(
+                            10_100,
+                            10_100,
+                            TraceEvent::Emit {
+                                shard: 0,
+                                regions: 3,
+                            },
+                        ),
+                    ],
+                    dropped: 0,
+                },
+            ],
+            nodes: vec![("enum".into(), 8), ("sum".into(), 8)],
+        }
+    }
+
+    #[test]
+    fn summarize_roundtrips_the_chrome_artifact() {
+        let text = to_chrome_json(&sample_trace());
+        let report = summarize(&text, 4).unwrap();
+        assert!(report.contains("firings 4"), "{report}");
+        assert!(report.contains("shards 2 (1 stolen)"), "{report}");
+        assert!(report.contains("enum"), "{report}");
+        assert!(report.contains("sum"), "{report}");
+        assert!(report.contains("straggler"), "{report}");
+        assert!(report.contains("backpressure stalls: 1"), "{report}");
+        assert!(report.contains("ingest submits 1, merge emits 1"), "{report}");
+        assert!(report.contains("dropped events: 0"), "{report}");
+    }
+
+    #[test]
+    fn straggler_table_ranks_by_duration() {
+        let text = to_chrome_json(&sample_trace());
+        let report = summarize(&text, 2).unwrap();
+        let straggler_at = report.find("straggler").unwrap();
+        let shard0_at = report[straggler_at..].find("\n0 ").map(|i| i + straggler_at);
+        let shard1_at = report[straggler_at..].find("\n1 ").map(|i| i + straggler_at);
+        let (s0, s1) = (shard0_at.unwrap(), shard1_at.unwrap());
+        assert!(s0 < s1, "longest shard (0, 9ms) must rank above shard 1 (2ms)");
+    }
+
+    #[test]
+    fn rejects_non_trace_json() {
+        assert!(summarize("{\"not\": \"a trace\"}", 4).is_err());
+        assert!(summarize("{\"traceEvents\": []}", 4).is_err());
+        assert!(summarize("not json", 4).is_err());
+    }
+
+    #[test]
+    fn bucket_count_is_clamped() {
+        let text = to_chrome_json(&sample_trace());
+        assert!(summarize(&text, 0).is_ok());
+        assert!(summarize(&text, 10_000).is_ok());
+    }
+}

@@ -22,7 +22,9 @@ use regatta::apps::sum::{SumApp, SumConfig, SumMode, SumShape};
 use regatta::coordinator::channel::Channel;
 use regatta::coordinator::node::{Emitter, Node, NodeLogic, NodeOps, Output};
 use regatta::coordinator::signal::ParentRef;
+use regatta::coordinator::{Policy, Scheduler};
 use regatta::runtime::kernels::KernelSet;
+use regatta::trace::TraceSpec;
 use regatta::util::alloc_count;
 use regatta::workload::regions::{gen_blobs, RegionSpec};
 
@@ -117,6 +119,80 @@ fn steady_state_node_firing_allocates_exactly_zero() {
         delta, 0,
         "steady-state firing path made {delta} heap allocations over 300 ensembles"
     );
+}
+
+/// One-node scheduler graph over [`FilterStage`], for driving the
+/// *scheduler's* firing loop (where the trace hook lives) rather than
+/// `Node::fire` directly.
+fn filter_graph() -> (Vec<Box<dyn NodeOps>>, Rc<Channel<f32>>, Rc<Channel<f32>>) {
+    let input: Rc<Channel<f32>> = Channel::new(4 * W, 8);
+    let out: Rc<Channel<f32>> = Channel::new(4 * W, 8);
+    let node = Node::new(
+        "f",
+        W,
+        input.clone(),
+        Output::Chan(out.clone()),
+        FilterStage::new(Rc::new(KernelSet::native(W))),
+    );
+    (vec![Box::new(node)], input, out)
+}
+
+/// Feed + run-to-quiescence + drain, `rounds` times; returns the
+/// allocation delta across those rounds.
+fn scheduler_rounds(
+    sched: &mut Scheduler,
+    nodes: &mut [Box<dyn NodeOps>],
+    input: &Channel<f32>,
+    out: &Channel<f32>,
+    drain: &mut Vec<f32>,
+    rounds: usize,
+) -> u64 {
+    let before = alloc_count::thread_allocations();
+    for _ in 0..rounds {
+        for i in 0..W {
+            input.push(i as f32 + 1.0);
+        }
+        sched.run(nodes).unwrap();
+        out.pop_data_into(usize::MAX, drain);
+    }
+    alloc_count::thread_allocations() - before
+}
+
+#[test]
+fn scheduler_steady_state_allocates_zero_with_tracing_off() {
+    // the trace subsystem's first invariant: with tracing off (the
+    // default) the scheduler's per-firing hook is a single branch —
+    // the steady-state loop stays at exactly zero allocations
+    let (mut nodes, input, out) = filter_graph();
+    let mut sched = Scheduler::new(Policy::GreedyOccupancy);
+    let mut drain: Vec<f32> = Vec::with_capacity(4 * W);
+    scheduler_rounds(&mut sched, &mut nodes, &input, &out, &mut drain, 3); // warmup
+    let delta = scheduler_rounds(&mut sched, &mut nodes, &input, &out, &mut drain, 300);
+    assert_eq!(
+        delta, 0,
+        "untraced scheduler loop made {delta} heap allocations over 300 rounds"
+    );
+}
+
+#[test]
+fn scheduler_steady_state_allocates_zero_with_tracing_on() {
+    // the second invariant: with tracing ON, recording is a clock read
+    // plus a store into the sink's preallocated buffer — still exactly
+    // zero steady-state allocations (the buffer was reserved up front)
+    let (mut nodes, input, out) = filter_graph();
+    let mut sched = Scheduler::new(Policy::GreedyOccupancy);
+    let sink = TraceSpec::new(1 << 16).sink();
+    sched.set_trace(sink.clone());
+    let mut drain: Vec<f32> = Vec::with_capacity(4 * W);
+    scheduler_rounds(&mut sched, &mut nodes, &input, &out, &mut drain, 3); // warmup
+    let delta = scheduler_rounds(&mut sched, &mut nodes, &input, &out, &mut drain, 300);
+    assert_eq!(
+        delta, 0,
+        "traced scheduler loop made {delta} heap allocations over 300 rounds"
+    );
+    let (records, dropped) = sink.take();
+    assert!(records.len() >= 300, "one firing event per round at least");
+    assert_eq!(dropped, 0, "capacity 64Ki must not drop a ~600-event run");
 }
 
 #[test]

@@ -1,0 +1,307 @@
+//! Tracing is an observer, not a participant.
+//!
+//! The trace subsystem's contract (`regatta::trace` module docs): turning
+//! tracing on changes *nothing observable* about a run — outputs are
+//! bit-for-bit identical for every worker count, app and ingest mode —
+//! and with zero dropped events the folded trace reconciles *exactly*
+//! with the end-of-run `NodeMetrics` aggregates (one `Firing` event per
+//! scheduler firing, deltas read from the node's own counters). This
+//! suite pins both halves down, end to end through the Chrome JSON
+//! artifact and the `trace summarize` renderer.
+
+use std::rc::Rc;
+
+use regatta::apps::sum::{SumApp, SumConfig, SumFactory, SumMode, SumShape};
+use regatta::apps::taxi::{TaxiApp, TaxiConfig, TaxiVariant};
+use regatta::exec::{ExecConfig, KernelSpawn, ShardedRunner};
+use regatta::prelude::Policy;
+use regatta::runtime::kernels::{Backend, KernelSet};
+use regatta::trace::{TraceEvent, TraceOptions, DRIVER_LANE};
+use regatta::util::json::Json;
+use regatta::workload::regions::{gen_blobs, RegionSpec};
+use regatta::workload::source::SliceSource;
+use regatta::workload::taxi::{generate, TaxiGenConfig};
+
+const WIDTH: usize = 8;
+
+fn sum_app(mode: SumMode) -> SumApp {
+    SumApp::new(
+        SumConfig {
+            width: WIDTH,
+            mode,
+            shape: SumShape::Fused,
+            data_cap: 256,
+            signal_cap: 64,
+            ..Default::default()
+        },
+        Rc::new(KernelSet::native(WIDTH)),
+    )
+}
+
+fn sum_factory(mode: SumMode) -> SumFactory {
+    SumFactory::new(
+        SumConfig {
+            width: WIDTH,
+            mode,
+            shape: SumShape::Fused,
+            data_cap: 256,
+            signal_cap: 64,
+            ..Default::default()
+        },
+        KernelSpawn::from_backend(Backend::Native),
+    )
+}
+
+fn traced(workers: usize) -> ExecConfig {
+    // far above any event count these streams produce (dropped == 0 is
+    // asserted), but small enough that parallel test threads don't each
+    // pin the 2^20-record default buffer
+    ExecConfig::new(workers).with_trace(Some(TraceOptions { capacity: 1 << 16 }))
+}
+
+fn assert_outputs_bitwise(got: &[(u64, f64)], want: &[(u64, f64)], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: output count");
+    for (i, ((gi, gv), (wi, wv))) in got.iter().zip(want).enumerate() {
+        assert_eq!(gi, wi, "{ctx}: region id at {i}");
+        assert_eq!(
+            gv.to_bits(),
+            wv.to_bits(),
+            "{ctx}: region {gi} sum {gv} vs {wv}"
+        );
+    }
+}
+
+#[test]
+fn traced_sum_is_bitwise_identical_workers_1_to_8() {
+    for mode in [SumMode::Enumerated, SumMode::Tagged] {
+        let app = sum_app(mode);
+        let blobs = gen_blobs(1500, RegionSpec::Uniform { max: 40 }, 42);
+        for workers in 1..=8 {
+            let plain = app
+                .run_sharded_with(&blobs, &ExecConfig::new(workers))
+                .unwrap();
+            let traced = app.run_sharded_with(&blobs, &traced(workers)).unwrap();
+            assert_outputs_bitwise(
+                &traced.outputs,
+                &plain.outputs,
+                &format!("{mode:?} workers {workers}"),
+            );
+            assert_eq!(
+                traced.invocations, plain.invocations,
+                "{mode:?} workers {workers}: kernel invocations"
+            );
+        }
+    }
+}
+
+#[test]
+fn traced_streaming_sum_is_bitwise_identical() {
+    let app = sum_app(SumMode::Enumerated);
+    let blobs = gen_blobs(1200, RegionSpec::Uniform { max: 30 }, 7);
+    for workers in [1usize, 2, 4, 8] {
+        let plain = app
+            .run_streaming(SliceSource::new(&blobs), &ExecConfig::new(workers))
+            .unwrap();
+        let traced = app
+            .run_streaming(SliceSource::new(&blobs), &traced(workers))
+            .unwrap();
+        assert_outputs_bitwise(
+            &traced.outputs,
+            &plain.outputs,
+            &format!("streamed workers {workers}"),
+        );
+    }
+}
+
+#[test]
+fn traced_taxi_is_bitwise_identical() {
+    let w = generate(
+        20,
+        TaxiGenConfig {
+            avg_pairs: 6,
+            avg_line_len: 160,
+        },
+        99,
+    );
+    for variant in TaxiVariant::all() {
+        let app = TaxiApp::new(
+            TaxiConfig {
+                width: WIDTH,
+                variant,
+                data_cap: 512,
+                signal_cap: 128,
+                policy: Policy::GreedyOccupancy,
+            },
+            Rc::new(KernelSet::native(WIDTH)),
+        );
+        for workers in [1usize, 3] {
+            let plain = app.run_sharded_with(&w, &ExecConfig::new(workers)).unwrap();
+            let traced = app.run_sharded_with(&w, &traced(workers)).unwrap();
+            assert_eq!(
+                traced.pairs.len(),
+                plain.pairs.len(),
+                "{variant:?} workers {workers}: pair count"
+            );
+            for (i, (g, e)) in traced.pairs.iter().zip(&plain.pairs).enumerate() {
+                assert_eq!(g.tag, e.tag, "{variant:?} workers {workers}: tag at {i}");
+                assert_eq!(
+                    g.x.to_bits(),
+                    e.x.to_bits(),
+                    "{variant:?} workers {workers}: x at {i}"
+                );
+                assert_eq!(
+                    g.y.to_bits(),
+                    e.y.to_bits(),
+                    "{variant:?} workers {workers}: y at {i}"
+                );
+            }
+        }
+    }
+}
+
+/// With zero drops, trace totals equal the `NodeMetrics` sums *exactly*
+/// — not approximately: both read the same per-firing counters.
+#[test]
+fn materialized_trace_reconciles_with_node_metrics() {
+    let factory = sum_factory(SumMode::Enumerated);
+    let blobs = gen_blobs(2000, RegionSpec::Uniform { max: 25 }, 5);
+    for workers in [1usize, 3, 8] {
+        let report = ShardedRunner::new(traced(workers))
+            .run(&factory, &blobs)
+            .unwrap();
+        let trace = report.trace.as_ref().expect("trace attached");
+        let ctx = format!("workers {workers}");
+        assert_eq!(trace.dropped(), 0, "{ctx}: drops");
+        let want_firings: u64 = report.metrics.nodes.iter().map(|(_, m)| m.firings).sum();
+        let want_ensembles: u64 = report.metrics.nodes.iter().map(|(_, m)| m.ensembles).sum();
+        let want_items: u64 = report.metrics.nodes.iter().map(|(_, m)| m.items).sum();
+        assert_eq!(trace.firings(), want_firings, "{ctx}: firings");
+        assert_eq!(trace.ensembles(), want_ensembles, "{ctx}: ensembles");
+        assert_eq!(trace.items(), want_items, "{ctx}: items");
+        assert_eq!(trace.shards(), report.shards as u64, "{ctx}: shard spans");
+        assert_eq!(
+            trace.stolen_shards(),
+            report.steals as u64,
+            "{ctx}: stolen spans"
+        );
+        // node table mirrors the metrics table, in order
+        assert_eq!(trace.nodes.len(), report.metrics.nodes.len(), "{ctx}");
+        for ((tn, tw), (mn, m)) in trace.nodes.iter().zip(&report.metrics.nodes) {
+            assert_eq!(tn, mn, "{ctx}: node name");
+            assert_eq!(*tw, m.width, "{ctx}: node width");
+        }
+        // every lane that ran a shard prewarmed exactly once, before its
+        // first shard span
+        for lane in &trace.workers {
+            let prewarms = lane
+                .records
+                .iter()
+                .filter(|r| r.event == TraceEvent::Prewarm)
+                .count();
+            assert_eq!(prewarms, 1, "{ctx}: worker {} prewarms", lane.worker);
+            assert_eq!(
+                lane.records[0].event,
+                TraceEvent::Prewarm,
+                "{ctx}: worker {} prewarm ordering",
+                lane.worker
+            );
+        }
+    }
+}
+
+/// Streaming runs add the driver lane: every planner cut is matched by
+/// an in-order emission, and both match the executed shard spans.
+#[test]
+fn streaming_trace_reconciles_driver_and_workers() {
+    let factory = sum_factory(SumMode::Enumerated);
+    let blobs = gen_blobs(1600, RegionSpec::Uniform { max: 20 }, 17);
+    for workers in [1usize, 4] {
+        let report = ShardedRunner::new(traced(workers))
+            .run_stream(&factory, SliceSource::new(&blobs))
+            .unwrap();
+        let trace = report.trace.as_ref().expect("trace attached");
+        let ctx = format!("streamed workers {workers}");
+        assert_eq!(trace.dropped(), 0, "{ctx}: drops");
+        assert_eq!(trace.shards(), report.shards as u64, "{ctx}: shard spans");
+        assert_eq!(trace.submits(), trace.shards(), "{ctx}: submits");
+        assert_eq!(trace.emits(), trace.shards(), "{ctx}: emits");
+        let want_firings: u64 = report.metrics.nodes.iter().map(|(_, m)| m.firings).sum();
+        assert_eq!(trace.firings(), want_firings, "{ctx}: firings");
+        let driver = trace
+            .workers
+            .iter()
+            .find(|w| w.worker == DRIVER_LANE)
+            .expect("driver lane present");
+        assert!(
+            driver
+                .records
+                .iter()
+                .all(|r| matches!(r.event, TraceEvent::Submit { .. }
+                    | TraceEvent::Stall { .. }
+                    | TraceEvent::Emit { .. })),
+            "{ctx}: driver lane records only ingest/merge events"
+        );
+        // driver lane sorts last; worker lanes are sorted by id
+        assert_eq!(trace.workers.last().unwrap().worker, DRIVER_LANE, "{ctx}");
+    }
+}
+
+/// The `--trace` artifact round-trips through the vendored JSON reader
+/// and its `"regatta"` totals object matches the live trace and the
+/// run's own metrics. `trace summarize` renders it without error.
+#[test]
+fn chrome_artifact_parses_and_reconciles() {
+    let factory = sum_factory(SumMode::Enumerated);
+    let blobs = gen_blobs(1000, RegionSpec::Uniform { max: 30 }, 23);
+    let report = ShardedRunner::new(traced(3))
+        .run_stream(&factory, SliceSource::new(&blobs))
+        .unwrap();
+    let trace = report.trace.as_ref().unwrap();
+    let text = regatta::trace::chrome::to_chrome_json(trace);
+    let json = Json::parse(&text).expect("artifact parses with util::json");
+
+    let events = json.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    for e in events {
+        assert!(e.get("ph").and_then(Json::as_str).is_some(), "phase field");
+        assert!(e.get("tid").and_then(Json::as_usize).is_some(), "tid field");
+    }
+    let spans = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .count();
+    assert_eq!(spans, trace.events(), "one X event per trace record");
+
+    let meta = json.get("regatta").expect("totals footer");
+    let total = |key: &str| meta.get(key).and_then(Json::as_usize).unwrap() as u64;
+    assert_eq!(total("firings"), trace.firings());
+    assert_eq!(total("ensembles"), trace.ensembles());
+    assert_eq!(total("items"), trace.items());
+    assert_eq!(total("shards"), report.shards as u64);
+    assert_eq!(total("submits"), total("emits"));
+    assert_eq!(total("dropped"), 0);
+    let want_items: u64 = report.metrics.nodes.iter().map(|(_, m)| m.items).sum();
+    assert_eq!(total("items"), want_items, "artifact ≡ NodeMetrics");
+    let nodes = meta.get("nodes").unwrap().as_arr().unwrap();
+    assert_eq!(nodes.len(), report.metrics.nodes.len());
+
+    let rendered = regatta::trace::summary::summarize(&text, 12).unwrap();
+    assert!(rendered.contains("occupancy"), "summary renders timeline");
+    assert!(rendered.contains("worker"), "summary renders lanes");
+}
+
+/// An untraced config attaches nothing: the report stays trace-free and
+/// the hot path never sees an enabled sink.
+#[test]
+fn untraced_run_attaches_no_trace() {
+    let factory = sum_factory(SumMode::Enumerated);
+    let blobs = gen_blobs(400, RegionSpec::Fixed { size: 9 }, 3);
+    let report = ShardedRunner::new(ExecConfig::new(3))
+        .run(&factory, &blobs)
+        .unwrap();
+    assert!(report.trace.is_none());
+    let report = ShardedRunner::new(ExecConfig::new(2))
+        .run_stream(&factory, SliceSource::new(&blobs))
+        .unwrap();
+    assert!(report.trace.is_none());
+}
