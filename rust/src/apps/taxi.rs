@@ -180,12 +180,17 @@ impl TaxiApp {
     /// [`TaxiApp::run_sharded`] with full executor configuration.
     pub fn run_sharded_with(&self, w: &TaxiWorkload, exec: &ExecConfig) -> Result<TaxiReport> {
         exec.validate()?;
-        if exec.workers <= 1 && exec.shard.shards_per_worker <= 1 && exec.trace.is_none() {
-            // One worker, one shard, untraced, run inline: identical to a
-            // plain run, so reuse this app's kernel set instead of
-            // spawning a fresh engine (on the XLA backend that is a full
-            // PJRT spin-up). A traced run always goes through the
-            // executor, which owns the trace lanes.
+        if exec.workers <= 1
+            && exec.shard.shards_per_worker <= 1
+            && exec.trace.is_none()
+            && matches!(exec.fault, crate::exec::FaultPolicy::FailFast)
+        {
+            // One worker, one shard, untraced, fail-fast, run inline:
+            // identical to a plain run, so reuse this app's kernel set
+            // instead of spawning a fresh engine (on the XLA backend
+            // that is a full PJRT spin-up). Traced runs and non-default
+            // fault policies always go through the executor, which owns
+            // the trace lanes and the recovery machinery.
             return self.run(w);
         }
         let factory = TaxiFactory::new(

@@ -1,0 +1,418 @@
+//! `bench faults` — fault-injection recovery sweep.
+//!
+//! Measures what fault tolerance costs and proves what it promises, in
+//! one deterministic harness:
+//!
+//! * `baseline` — fault-free fail-fast run (the reference time and the
+//!   reference outputs);
+//! * `retry` — the same stream under [`FaultPolicy::retry`] with a
+//!   seeded [`FaultPlan`] injecting panics/errors into live shards. The
+//!   run must **recover bit-identically**: outputs equal the baseline's
+//!   to the last bit, the report's retry count equals the plan's shot
+//!   count exactly, and the plan is fully consumed;
+//! * `retry-traced` — one traced recovery run asserting the trace's
+//!   `Fault`/`Retry` event totals reconcile with the report;
+//! * `quarantine` — a planned panic on one shard; the run keeps going
+//!   and the report names exactly that shard;
+//! * `salvage` — a `.rgn` container with deterministically corrupted
+//!   frames read back under [`CorruptFramePolicy::Skip`]: every
+//!   uncorrupted frame survives bit-identically, every corrupted frame
+//!   is counted.
+//!
+//! The headline metric is the retry run's elapsed time over the
+//! baseline's — the price of recovery including the injected faults
+//! themselves. Results are emitted as `BENCH_faults.json` and uploaded
+//! as a CI artifact (`--smoke` runs a small shape in the pipeline).
+//!
+//! [`FaultPolicy::retry`]: crate::exec::FaultPolicy::retry
+//! [`CorruptFramePolicy::Skip`]: crate::io::CorruptFramePolicy
+
+use std::io::Cursor;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::apps::sum::{SumConfig, SumFactory};
+use crate::exec::{
+    ExecConfig, FaultPlan, FaultPolicy, FaultyFactory, KernelSpawn, ShardedRunner,
+};
+use crate::io::{corrupt_frame, BlobFileSource, BlobWriter, CorruptFramePolicy};
+use crate::trace::TraceOptions;
+use crate::util::prng::Prng;
+use crate::workload::regions::{gen_blobs, RegionSpec};
+
+use super::{time_fn, BenchConfig, Table};
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct FaultsConfig {
+    pub width: usize,
+    /// Total stream items.
+    pub items: usize,
+    pub workers: usize,
+    /// Per-shard (and per-frame) fault probability for the seeded plan.
+    pub fault_rate: f64,
+    pub seed: u64,
+    pub bench: BenchConfig,
+}
+
+impl FaultsConfig {
+    /// CI smoke shape: small stream, warmed medians.
+    pub fn smoke() -> FaultsConfig {
+        FaultsConfig {
+            width: 32,
+            items: 1 << 14,
+            workers: 4,
+            fault_rate: 0.25,
+            seed: 0xFA_17,
+            bench: BenchConfig {
+                warmup_iters: 1,
+                iters: 3,
+            },
+        }
+    }
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            width: 128,
+            items: 1 << 17,
+            workers: 4,
+            fault_rate: 0.25,
+            seed: 0xFA_17,
+            bench: BenchConfig::from_env(),
+        }
+    }
+}
+
+/// One measured leg.
+#[derive(Debug, Clone)]
+pub struct FaultsRow {
+    pub leg: &'static str,
+    pub seconds: f64,
+    /// Extra shard attempts the run made (retry legs).
+    pub retries: u64,
+    /// Shards dropped into the fault ledger (quarantine leg).
+    pub quarantined: usize,
+    /// What the leg proved (already asserted before the row is built).
+    pub check: String,
+}
+
+/// Full report (also the JSON payload).
+#[derive(Debug, Clone)]
+pub struct FaultsReport {
+    pub items: usize,
+    pub workers: usize,
+    pub shards: usize,
+    /// Faults the seeded plan injected into the retry legs.
+    pub injected: usize,
+    pub rows: Vec<FaultsRow>,
+    /// Salvage leg: frames written / corrupted / read back intact.
+    pub frames: usize,
+    pub corrupted: usize,
+    pub recovered: usize,
+}
+
+fn factory(cfg: &FaultsConfig) -> SumFactory {
+    SumFactory::new(
+        SumConfig {
+            width: cfg.width,
+            ..Default::default()
+        },
+        KernelSpawn::Native,
+    )
+}
+
+fn exec(cfg: &FaultsConfig) -> ExecConfig {
+    ExecConfig::new(cfg.workers).with_shards_per_worker(4)
+}
+
+/// Outputs must match the baseline to the last bit — the retry-recovery
+/// determinism claim, checked not eyeballed.
+fn ensure_bit_identical(leg: &str, got: &[(u64, f64)], want: &[(u64, f64)]) -> Result<()> {
+    ensure!(
+        got.len() == want.len(),
+        "{leg}: {} outputs vs baseline's {}",
+        got.len(),
+        want.len()
+    );
+    for (i, ((gi, gv), (bi, bv))) in got.iter().zip(want).enumerate() {
+        ensure!(
+            gi == bi && gv.to_bits() == bv.to_bits(),
+            "{leg}: output {i} diverged from the fault-free baseline"
+        );
+    }
+    Ok(())
+}
+
+/// Run the sweep and print the table.
+pub fn run(cfg: &FaultsConfig) -> Result<FaultsReport> {
+    let blobs = gen_blobs(cfg.items, RegionSpec::Uniform { max: 2 * cfg.width }, cfg.seed);
+    let mut rows = Vec::new();
+
+    // -- baseline: fault-free fail-fast ---------------------------------
+    let runner = ShardedRunner::new(exec(cfg));
+    let mut last = None;
+    let m = time_fn(cfg.bench, || {
+        last = Some(runner.run(&factory(cfg), &blobs).expect("fault-free baseline"));
+    });
+    let base = last.expect("at least one iteration");
+    let shards = base.shards;
+    ensure!(base.retries == 0 && base.faults.is_empty(), "baseline saw faults");
+    rows.push(FaultsRow {
+        leg: "baseline",
+        seconds: m.median(),
+        retries: 0,
+        quarantined: 0,
+        check: format!("{} shard(s), fault-free", shards),
+    });
+
+    // -- retry: seeded injection, bit-identical recovery ----------------
+    // An unlucky (seed, rate) pair may draw an empty plan; recovery with
+    // nothing to recover proves nothing, so guarantee at least one shot.
+    let mut plan = FaultPlan::seeded(cfg.seed, shards, cfg.fault_rate);
+    if plan.is_empty() {
+        plan = plan.panic_at(0);
+    }
+    let injected = plan.injected();
+    let retry_runner = ShardedRunner::new(exec(cfg).with_fault(FaultPolicy::retry(3)));
+    let mut last = None;
+    let m = time_fn(cfg.bench, || {
+        let faulty = FaultyFactory::new(factory(cfg), &plan);
+        let report = retry_runner.run(&faulty, &blobs).expect("retry run recovers");
+        last = Some((report, faulty.remaining()));
+    });
+    let (retry, remaining) = last.expect("at least one iteration");
+    ensure_bit_identical("retry", &retry.outputs, &base.outputs)?;
+    ensure!(
+        retry.retries == injected as u64,
+        "retry: report counts {} retries, plan injected {injected}",
+        retry.retries
+    );
+    ensure!(remaining == 0, "retry: {remaining} planned shot(s) never fired");
+    ensure!(retry.faults.is_empty(), "retry: recovered run must not quarantine");
+    rows.push(FaultsRow {
+        leg: "retry",
+        seconds: m.median(),
+        retries: retry.retries,
+        quarantined: 0,
+        check: format!("{injected} injected, bit-identical"),
+    });
+
+    // -- retry-traced: trace totals reconcile with the report -----------
+    let traced_runner = ShardedRunner::new(
+        exec(cfg)
+            .with_fault(FaultPolicy::retry(3))
+            .with_trace(Some(TraceOptions::default())),
+    );
+    let t0 = Instant::now();
+    let traced = traced_runner.run(&FaultyFactory::new(factory(cfg), &plan), &blobs)?;
+    let traced_s = t0.elapsed().as_secs_f64();
+    ensure_bit_identical("retry-traced", &traced.outputs, &base.outputs)?;
+    let trace = traced.trace.as_ref().expect("trace attached when configured");
+    ensure!(
+        trace.retries() == traced.retries,
+        "retry-traced: {} Retry events vs report's {} retries",
+        trace.retries(),
+        traced.retries
+    );
+    ensure!(
+        trace.faults() == injected as u64,
+        "retry-traced: {} Fault events vs {injected} injected",
+        trace.faults()
+    );
+    ensure!(
+        trace.shards() == traced.shards as u64,
+        "retry-traced: {} Shard events vs {} shards",
+        trace.shards(),
+        traced.shards
+    );
+    rows.push(FaultsRow {
+        leg: "retry-traced",
+        seconds: traced_s,
+        retries: traced.retries,
+        quarantined: 0,
+        check: "trace/report reconciled".to_string(),
+    });
+
+    // -- quarantine: one poisoned shard, run survives, ledger names it --
+    let target = shards / 2;
+    let q_runner = ShardedRunner::new(exec(cfg).with_fault(FaultPolicy::Quarantine));
+    let t0 = Instant::now();
+    let q = q_runner
+        .run(&FaultyFactory::new(factory(cfg), &FaultPlan::new().panic_at(target)), &blobs)?;
+    let q_s = t0.elapsed().as_secs_f64();
+    ensure!(
+        q.faults.len() == 1 && q.faults[0].shard == target,
+        "quarantine: expected exactly shard {target} in the ledger, got {:?}",
+        q.faults.iter().map(|f| f.shard).collect::<Vec<_>>()
+    );
+    ensure!(
+        q.outputs.len() < base.outputs.len(),
+        "quarantine: the dropped shard must cost its output slot"
+    );
+    rows.push(FaultsRow {
+        leg: "quarantine",
+        seconds: q_s,
+        retries: 0,
+        quarantined: q.faults.len(),
+        check: format!("shard {target} dropped, run survived"),
+    });
+
+    // -- salvage: corrupted .rgn frames skipped, survivors bit-exact ----
+    let mut bytes: Vec<u8> = Vec::new();
+    let mut writer = BlobWriter::new(&mut bytes)?;
+    for b in &blobs {
+        writer.write_region(b)?;
+    }
+    writer.finish()?;
+    let mut rng = Prng::new(cfg.seed ^ 0xD15C);
+    let mut corrupt: Vec<usize> =
+        (0..blobs.len()).filter(|_| rng.chance(cfg.fault_rate)).collect();
+    if corrupt.is_empty() {
+        corrupt.push(0);
+    }
+    for &f in &corrupt {
+        corrupt_frame(&mut bytes, f)?;
+    }
+    let t0 = Instant::now();
+    let mut src = BlobFileSource::from_reader(Cursor::new(&bytes[..]), "bench-salvage")?
+        .with_corrupt_policy(CorruptFramePolicy::Skip);
+    let mut survivors = Vec::new();
+    while let Some(b) = src.try_next()? {
+        survivors.push(b);
+    }
+    let salvage_s = t0.elapsed().as_secs_f64();
+    ensure!(
+        src.skipped() == corrupt.len() as u64,
+        "salvage: skipped {} frame(s), corrupted {}",
+        src.skipped(),
+        corrupt.len()
+    );
+    let intact: Vec<&crate::coordinator::enumerate::Blob> = blobs
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !corrupt.contains(i))
+        .map(|(_, b)| b)
+        .collect();
+    ensure!(
+        survivors.len() == intact.len(),
+        "salvage: read {} of {} intact frame(s)",
+        survivors.len(),
+        intact.len()
+    );
+    for (got, want) in survivors.iter().zip(&intact) {
+        ensure!(got == *want, "salvage: surviving region {} diverged", got.id);
+    }
+    rows.push(FaultsRow {
+        leg: "salvage",
+        seconds: salvage_s,
+        retries: 0,
+        quarantined: corrupt.len(),
+        check: format!("{}/{} frames recovered", survivors.len(), blobs.len()),
+    });
+
+    let mut t = Table::new(&["leg", "time_s", "retries", "dropped", "check"]);
+    for r in &rows {
+        t.row(&[
+            r.leg.to_string(),
+            format!("{:.4}", r.seconds),
+            r.retries.to_string(),
+            r.quarantined.to_string(),
+            r.check.clone(),
+        ]);
+    }
+    println!("== Faults: recovery overhead and determinism ==");
+    t.print();
+
+    Ok(FaultsReport {
+        items: cfg.items,
+        workers: cfg.workers,
+        shards,
+        injected,
+        rows,
+        frames: blobs.len(),
+        corrupted: corrupt.len(),
+        recovered: survivors.len(),
+    })
+}
+
+/// Headline metric: retry-policy elapsed over the fault-free baseline —
+/// what recovery (faults included) costs in wall clock. `None` if either
+/// leg is missing.
+pub fn retry_overhead(report: &FaultsReport) -> Option<f64> {
+    let pick = |leg: &str| report.rows.iter().find(|r| r.leg == leg).map(|r| r.seconds);
+    let base = pick("baseline")?;
+    if base <= 0.0 {
+        return None;
+    }
+    Some(pick("retry")? / base)
+}
+
+/// Render the report as the `BENCH_faults.json` artifact.
+pub fn to_json(report: &FaultsReport) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"faults\",\n");
+    s.push_str(&format!("  \"items\": {},\n", report.items));
+    s.push_str(&format!("  \"workers\": {},\n", report.workers));
+    s.push_str(&format!("  \"shards\": {},\n", report.shards));
+    s.push_str(&format!("  \"injected\": {},\n", report.injected));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in report.rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"leg\": \"{}\", \"seconds\": {:.6}, \"retries\": {}, \
+             \"quarantined\": {}, \"check\": \"{}\"}}{}\n",
+            r.leg,
+            r.seconds,
+            r.retries,
+            r.quarantined,
+            r.check,
+            if i + 1 < report.rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"salvage\": {{\"frames\": {}, \"corrupted\": {}, \"recovered\": {}}},\n",
+        report.frames, report.corrupted, report.recovered
+    ));
+    s.push_str(&format!(
+        "  \"retry_overhead\": {:.4}\n",
+        retry_overhead(report).unwrap_or(0.0)
+    ));
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn sweep_recovers_and_emits_json() {
+        let cfg = FaultsConfig {
+            width: 8,
+            items: 1 << 10,
+            workers: 2,
+            fault_rate: 0.3,
+            seed: 7,
+            bench: BenchConfig {
+                warmup_iters: 0,
+                iters: 1,
+            },
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.rows.len(), 5, "baseline/retry/traced/quarantine/salvage");
+        assert!(report.injected >= 1, "the plan always injects something");
+        assert!(report.corrupted >= 1, "the salvage leg always corrupts something");
+        assert_eq!(report.recovered, report.frames - report.corrupted);
+        let js = to_json(&report);
+        let parsed = Json::parse(&js).expect("emitted JSON parses");
+        assert!(parsed.get("rows").is_some());
+        assert!(parsed.get("salvage").is_some());
+        assert!(parsed.get("retry_overhead").is_some());
+        assert!(retry_overhead(&report).is_some());
+    }
+}

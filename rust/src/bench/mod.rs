@@ -4,6 +4,7 @@
 //! summary statistics, and aligned table output matching the rows/series
 //! of the paper's figures.
 
+pub mod faults;
 pub mod figures;
 pub mod hotpath;
 pub mod ingest;

@@ -49,6 +49,15 @@ pub trait ShardWorker {
     /// fresh-or-reused pipeline to quiescence.
     fn run_shard(&mut self, shard: &[Self::In]) -> Result<ShardOutput<Self::Out>>;
 
+    /// The pool announces the stream-order index of the shard it is
+    /// about to run (again before every retry attempt). Workers don't
+    /// need it to execute — shards arrive as plain slices — but the
+    /// fault-injection harness keys its planned faults on this index,
+    /// and a worker may use it for diagnostics. Default: ignored.
+    fn begin_shard(&mut self, shard: usize) {
+        let _ = shard;
+    }
+
     /// Cumulative node-graph builds this worker has performed so far —
     /// the zero-rebuild proof. A persistent worker builds once in
     /// `make_worker` and reports 1 however many shards it runs; a worker

@@ -1,0 +1,394 @@
+//! Fault tolerance for the sharded executor: recovery policies, the
+//! per-shard fault ledger, and a seeded fault-injection harness.
+//!
+//! The executor's unit of recovery is the **shard**: all cross-item
+//! state is region-scoped and regions never span shards, so a failed
+//! shard can be re-run (or dropped) without touching any other shard's
+//! state. Three policies cover the useful points on that spectrum:
+//!
+//! * [`FaultPolicy::FailFast`] — the historical behaviour (and still the
+//!   default): the first shard panic or error aborts the whole run.
+//! * [`FaultPolicy::Retry`] — the worker's persistent pipeline is
+//!   discarded (a panic may have left it mid-reset), a fresh one is
+//!   built through the factory, and the same shard is re-run, up to
+//!   `max_attempts` total attempts. Because a rebuilt pipeline is
+//!   bit-identical to a fresh one (the PR 5 reuse ≡ fresh proof), a
+//!   recovered run's output is **bit-identical** to a fault-free run.
+//! * [`FaultPolicy::Quarantine`] — the shard is given one attempt; on
+//!   failure its id and error land in [`ExecReport::faults`] and the
+//!   stream-order merge emits an empty slot for it instead of stalling
+//!   the runs behind it.
+//!
+//! The injection harness ([`FaultPlan`] + [`FaultyFactory`]) makes every
+//! recovery path deterministically testable: a plan is a list of
+//! "shard `k` panics (or errors) on its next `times` attempts",
+//! either written explicitly or drawn from a seeded PRNG, and the
+//! factory wrapper detonates those shots from inside `run_shard` —
+//! upstream of the pool's `catch_unwind` guard, exactly where a real
+//! kernel fault would fire.
+//!
+//! [`ExecReport::faults`]: crate::exec::ExecReport::faults
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::exec::factory::{PipelineFactory, ShardOutput, ShardWorker};
+use crate::exec::ingest::lock_ignore_poison;
+use crate::trace::TraceSink;
+use crate::util::prng::Prng;
+
+/// What the pool does when a shard's `run_shard` panics or errors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultPolicy {
+    /// Abort the whole run on the first shard failure (the default).
+    #[default]
+    FailFast,
+    /// Rebuild the worker's pipeline fresh and re-run the failed shard,
+    /// up to `max_attempts` **total** attempts per shard, sleeping
+    /// `backoff` between attempts. Recovered output is bit-identical to
+    /// a fault-free run; exhausting the attempts fails the run.
+    Retry {
+        /// Total attempts per shard (>= 1; 1 behaves like fail-fast).
+        max_attempts: u32,
+        /// Sleep between attempts (transient-fault damping).
+        backoff: Duration,
+    },
+    /// Give each shard one attempt; record failures in
+    /// [`ExecReport::faults`](crate::exec::ExecReport::faults) and keep
+    /// the run going, emitting an empty slot in stream order.
+    Quarantine,
+}
+
+impl FaultPolicy {
+    /// Retry with no backoff — the common test/CLI shape.
+    pub fn retry(max_attempts: u32) -> FaultPolicy {
+        FaultPolicy::Retry {
+            max_attempts,
+            backoff: Duration::ZERO,
+        }
+    }
+
+    /// Stable CLI/report name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultPolicy::FailFast => "fail-fast",
+            FaultPolicy::Retry { .. } => "retry",
+            FaultPolicy::Quarantine => "quarantine",
+        }
+    }
+
+    /// Total attempts a shard gets before the policy gives up on it.
+    pub fn max_attempts(&self) -> u32 {
+        match self {
+            FaultPolicy::FailFast | FaultPolicy::Quarantine => 1,
+            FaultPolicy::Retry { max_attempts, .. } => (*max_attempts).max(1),
+        }
+    }
+
+    /// Sleep between attempts (zero outside `Retry`).
+    pub fn backoff(&self) -> Duration {
+        match self {
+            FaultPolicy::Retry { backoff, .. } => *backoff,
+            _ => Duration::ZERO,
+        }
+    }
+}
+
+/// One shard failure recorded by a `Quarantine` run (or surfaced in a
+/// report after recovery): where it happened and what the worker said.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultRecord {
+    /// Stream-order shard index.
+    pub shard: usize,
+    /// Worker that ran the failing attempt(s).
+    pub worker: usize,
+    /// Attempts made (1 = failed on its only attempt).
+    pub attempts: u32,
+    /// Rendered error (panic payload or `run_shard` error chain).
+    pub error: String,
+}
+
+/// How an injected fault manifests inside `run_shard`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` — exercises the `catch_unwind` guard.
+    Panic,
+    /// `bail!` — exercises the plain error path.
+    Error,
+}
+
+/// One planned fault: shard `shard` fails on its next `times` attempts,
+/// optionally only when claimed by worker `worker`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultShot {
+    /// Stream-order shard index that fails.
+    pub shard: usize,
+    /// Restrict to one worker id (`None` = whichever worker claims it).
+    pub worker: Option<usize>,
+    /// Panic or plain error.
+    pub kind: FaultKind,
+    /// Attempts this shot poisons; a `Retry` run recovers on attempt
+    /// `times + 1`.
+    pub times: u32,
+}
+
+/// A deterministic plan of injected faults. Build one explicitly
+/// (`panic_at`, `error_at`) or draw one from a seeded PRNG (`seeded`);
+/// thread it through a [`FaultyFactory`] to detonate the shots.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    shots: Vec<FaultShot>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Shard `shard` panics on its next attempt (any worker).
+    pub fn panic_at(self, shard: usize) -> FaultPlan {
+        self.with_shot(FaultShot {
+            shard,
+            worker: None,
+            kind: FaultKind::Panic,
+            times: 1,
+        })
+    }
+
+    /// Shard `shard` errors on its next attempt (any worker).
+    pub fn error_at(self, shard: usize) -> FaultPlan {
+        self.with_shot(FaultShot {
+            shard,
+            worker: None,
+            kind: FaultKind::Error,
+            times: 1,
+        })
+    }
+
+    /// Shard `shard` panics on its next `times` attempts — `times`
+    /// beyond `max_attempts - 1` makes a `Retry` run exhaust and fail.
+    pub fn panic_at_times(self, shard: usize, times: u32) -> FaultPlan {
+        self.with_shot(FaultShot {
+            shard,
+            worker: None,
+            kind: FaultKind::Panic,
+            times,
+        })
+    }
+
+    /// Append an explicit shot.
+    pub fn with_shot(mut self, shot: FaultShot) -> FaultPlan {
+        self.shots.push(shot);
+        self
+    }
+
+    /// Draw a plan from a seeded PRNG: each shard index in
+    /// `0..shards` fails once with probability `rate`, panic or error
+    /// chosen 50/50. Same seed + shard count → same plan, always.
+    pub fn seeded(seed: u64, shards: usize, rate: f64) -> FaultPlan {
+        let mut rng = Prng::new(seed);
+        let mut plan = FaultPlan::new();
+        for shard in 0..shards {
+            if rng.chance(rate) {
+                let kind = if rng.chance(0.5) {
+                    FaultKind::Panic
+                } else {
+                    FaultKind::Error
+                };
+                plan.shots.push(FaultShot {
+                    shard,
+                    worker: None,
+                    kind,
+                    times: 1,
+                });
+            }
+        }
+        plan
+    }
+
+    /// Total faults the plan will inject (sum of every shot's `times`).
+    pub fn injected(&self) -> usize {
+        self.shots.iter().map(|s| s.times as usize).sum()
+    }
+
+    /// Distinct shard indices the plan poisons, ascending.
+    pub fn shards(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self.shots.iter().filter(|s| s.times > 0).map(|s| s.shard).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shots.iter().all(|s| s.times == 0)
+    }
+}
+
+/// Live shot ledger shared by every worker of one injected run.
+type Shots = Arc<Mutex<Vec<FaultShot>>>;
+
+/// Consume one matching shot, if any (first match wins).
+fn claim_shot(shots: &Shots, shard: usize, worker: usize) -> Option<FaultKind> {
+    let mut shots = lock_ignore_poison(shots);
+    for s in shots.iter_mut() {
+        if s.shard == shard && s.times > 0 && s.worker.is_none_or(|w| w == worker) {
+            s.times -= 1;
+            return Some(s.kind);
+        }
+    }
+    None
+}
+
+/// A [`PipelineFactory`] wrapper that injects a [`FaultPlan`]'s shots
+/// into `run_shard` — the fault-injection harness. Wrapping is
+/// transparent when the plan is empty; shots fire from inside the
+/// worker, upstream of the pool's `catch_unwind` guard, so every
+/// recovery path (retry, quarantine, fail-fast) is exercised exactly
+/// where a real kernel fault would fire.
+pub struct FaultyFactory<F> {
+    inner: F,
+    shots: Shots,
+}
+
+impl<F: PipelineFactory> FaultyFactory<F> {
+    pub fn new(inner: F, plan: &FaultPlan) -> FaultyFactory<F> {
+        FaultyFactory {
+            inner,
+            shots: Arc::new(Mutex::new(plan.shots.clone())),
+        }
+    }
+
+    /// Shots not yet fired — zero after a run proves the plan landed
+    /// exactly (the injection-count reconciliation tests pin this).
+    pub fn remaining(&self) -> usize {
+        lock_ignore_poison(&self.shots)
+            .iter()
+            .map(|s| s.times as usize)
+            .sum()
+    }
+
+    /// The wrapped factory.
+    pub fn inner(&self) -> &F {
+        &self.inner
+    }
+}
+
+impl<F: PipelineFactory> PipelineFactory for FaultyFactory<F> {
+    type In = F::In;
+    type Out = F::Out;
+    type Worker = FaultyWorker<F::Worker>;
+
+    fn make_worker(&self, worker_id: usize) -> Result<FaultyWorker<F::Worker>> {
+        Ok(FaultyWorker {
+            inner: self.inner.make_worker(worker_id)?,
+            worker: worker_id,
+            shard: usize::MAX,
+            shots: self.shots.clone(),
+        })
+    }
+
+    fn weight(&self, region: &F::In) -> usize {
+        self.inner.weight(region)
+    }
+
+    fn recycle_region(&self, region: F::In) {
+        self.inner.recycle_region(region)
+    }
+}
+
+/// The worker half of [`FaultyFactory`]: delegates everything to the
+/// wrapped worker, except that a planned shot for the shard in flight
+/// panics or errors **before** the real `run_shard` touches state.
+pub struct FaultyWorker<W> {
+    inner: W,
+    worker: usize,
+    /// Shard in flight (set by `begin_shard`; `usize::MAX` = none).
+    shard: usize,
+    shots: Shots,
+}
+
+impl<W: ShardWorker> ShardWorker for FaultyWorker<W> {
+    type In = W::In;
+    type Out = W::Out;
+
+    fn begin_shard(&mut self, shard: usize) {
+        self.shard = shard;
+        self.inner.begin_shard(shard);
+    }
+
+    fn run_shard(&mut self, shard: &[W::In]) -> Result<ShardOutput<W::Out>> {
+        if let Some(kind) = claim_shot(&self.shots, self.shard, self.worker) {
+            match kind {
+                FaultKind::Panic => panic!(
+                    "injected fault: shard {} panics on worker {}",
+                    self.shard, self.worker
+                ),
+                FaultKind::Error => bail!(
+                    "injected fault: shard {} errors on worker {}",
+                    self.shard,
+                    self.worker
+                ),
+            }
+        }
+        self.inner.run_shard(shard)
+    }
+
+    fn pipelines_built(&self) -> u64 {
+        self.inner.pipelines_built()
+    }
+
+    fn set_trace(&mut self, sink: TraceSink) {
+        self.inner.set_trace(sink);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_attempts_and_labels() {
+        assert_eq!(FaultPolicy::FailFast.max_attempts(), 1);
+        assert_eq!(FaultPolicy::Quarantine.max_attempts(), 1);
+        assert_eq!(FaultPolicy::retry(3).max_attempts(), 3);
+        assert_eq!(FaultPolicy::retry(0).max_attempts(), 1, "clamped, never zero");
+        assert_eq!(FaultPolicy::default(), FaultPolicy::FailFast);
+        assert_eq!(FaultPolicy::FailFast.label(), "fail-fast");
+        assert_eq!(FaultPolicy::retry(2).label(), "retry");
+        assert_eq!(FaultPolicy::Quarantine.label(), "quarantine");
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic() {
+        let a = FaultPlan::seeded(0xBAD, 64, 0.25);
+        let b = FaultPlan::seeded(0xBAD, 64, 0.25);
+        assert_eq!(a.shots, b.shots, "same seed, same plan");
+        assert!(!a.is_empty(), "1/4 rate over 64 shards injects something");
+        assert!(a.injected() < 64, "and not everything");
+        let c = FaultPlan::seeded(0xF00D, 64, 0.25);
+        assert_ne!(a.shots, c.shots, "different seed, different plan");
+    }
+
+    #[test]
+    fn shots_are_claimed_once_and_respect_worker_filters() {
+        let plan = FaultPlan::new()
+            .panic_at(3)
+            .with_shot(FaultShot {
+                shard: 5,
+                worker: Some(1),
+                kind: FaultKind::Error,
+                times: 2,
+            });
+        let shots: Shots = Arc::new(Mutex::new(plan.shots.clone()));
+        assert_eq!(claim_shot(&shots, 3, 0), Some(FaultKind::Panic));
+        assert_eq!(claim_shot(&shots, 3, 0), None, "one shot, one fault");
+        assert_eq!(claim_shot(&shots, 5, 0), None, "wrong worker");
+        assert_eq!(claim_shot(&shots, 5, 1), Some(FaultKind::Error));
+        assert_eq!(claim_shot(&shots, 5, 1), Some(FaultKind::Error), "times = 2");
+        assert_eq!(claim_shot(&shots, 5, 1), None);
+        assert_eq!(plan.injected(), 3);
+        assert_eq!(plan.shards(), vec![3, 5]);
+    }
+}

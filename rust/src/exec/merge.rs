@@ -25,6 +25,7 @@ use anyhow::{ensure, Result};
 use crate::coordinator::metrics::PipelineMetrics;
 use crate::trace::Trace;
 
+use super::fault::FaultRecord;
 use super::pool::ShardResult;
 
 /// Aggregated execution stats for one worker of a sharded run.
@@ -44,8 +45,14 @@ pub struct WorkerStats {
     pub busy: f64,
     /// Node graphs this worker built over its lifetime (the maximum
     /// cumulative count its shard results reported) — 1 for a
-    /// persistent reset-not-rebuild worker, regardless of `shards`.
+    /// persistent reset-not-rebuild worker, regardless of `shards`, plus
+    /// one per fault-recovery rebuild.
     pub pipelines_built: u64,
+    /// Extra shard attempts this worker ran under
+    /// [`FaultPolicy::Retry`](super::fault::FaultPolicy) (0 fault-free).
+    pub retries: u64,
+    /// Shards this worker quarantined.
+    pub faults: u64,
     /// Its pipeline metrics, folded across its shards.
     pub metrics: PipelineMetrics,
 }
@@ -71,6 +78,15 @@ pub struct ExecReport<T> {
     /// (`per_worker.len()`), **not** `shards` — each worker builds its
     /// pipeline once and resets it between shards.
     pub pipelines_built: u64,
+    /// Total extra shard attempts across workers (one per
+    /// rebuild-and-rerun recovery cycle; 0 on a fault-free run). Under
+    /// injection this reconciles exactly with the plan's shot count.
+    pub retries: u64,
+    /// Quarantined shards, in stream order: each failed all its attempts
+    /// under [`FaultPolicy::Quarantine`](super::fault::FaultPolicy) and
+    /// contributed an empty output slot. Empty on fault-free, fail-fast
+    /// and fully-recovered retry runs.
+    pub faults: Vec<FaultRecord>,
     /// Wall-clock seconds of the whole sharded run (plan + pool + merge).
     pub elapsed: f64,
     /// Per-worker breakdown, sorted by worker id (workers that never
@@ -102,7 +118,8 @@ impl<T> ExecReport<T> {
     /// attempts, end-of-stream drain).
     pub fn worker_table(&self) -> String {
         let mut out = String::from(
-            "worker   shards   stolen   built   outputs   kernel_inv   busy_s    occ%   idle%\n",
+            "worker   shards   stolen   built   retry   fault   outputs   kernel_inv   \
+             busy_s    occ%   idle%\n",
         );
         for w in &self.per_worker {
             let idle = if self.elapsed > 0.0 {
@@ -111,16 +128,36 @@ impl<T> ExecReport<T> {
                 0.0
             };
             out.push_str(&format!(
-                "{:<8} {:>6}  {:>6}  {:>5}  {:>8}  {:>11}  {:>7.3}  {:>5.1}  {:>5.1}\n",
+                "{:<8} {:>6}  {:>6}  {:>5}  {:>5}  {:>5}  {:>8}  {:>11}  {:>7.3}  {:>5.1}  \
+                 {:>5.1}\n",
                 w.worker,
                 w.shards,
                 w.steals,
                 w.pipelines_built,
+                w.retries,
+                w.faults,
                 w.outputs,
                 w.invocations,
                 w.busy,
                 100.0 * w.metrics.occupancy(),
                 idle,
+            ));
+        }
+        out
+    }
+
+    /// Render the quarantine ledger (used by `--stats`): one line per
+    /// quarantined shard, stream order. Empty string when the run had no
+    /// faults, so callers can print it unconditionally.
+    pub fn fault_table(&self) -> String {
+        if self.faults.is_empty() {
+            return String::new();
+        }
+        let mut out = String::from("shard    worker   attempts   error\n");
+        for f in &self.faults {
+            out.push_str(&format!(
+                "{:<8} {:>6}  {:>8}   {}\n",
+                f.shard, f.worker, f.attempts, f.error
             ));
         }
         out
@@ -136,6 +173,8 @@ pub struct ReportBuilder<T> {
     invocations: u64,
     shards: usize,
     steals: usize,
+    retries: u64,
+    faults: Vec<FaultRecord>,
     per_worker: BTreeMap<usize, WorkerStats>,
 }
 
@@ -153,6 +192,8 @@ impl<T> ReportBuilder<T> {
             invocations: 0,
             shards: 0,
             steals: 0,
+            retries: 0,
+            faults: Vec::new(),
             per_worker: BTreeMap::new(),
         }
     }
@@ -164,6 +205,15 @@ impl<T> ReportBuilder<T> {
         self.invocations += r.invocations;
         self.shards += 1;
         self.steals += r.stolen as usize;
+        self.retries += u64::from(r.retries);
+        if let Some(error) = &r.fault {
+            self.faults.push(FaultRecord {
+                shard: r.shard,
+                worker: r.worker,
+                attempts: r.retries + 1,
+                error: error.clone(),
+            });
+        }
         let w = self.per_worker.entry(r.worker).or_insert_with(|| WorkerStats {
             worker: r.worker,
             shards: 0,
@@ -172,6 +222,8 @@ impl<T> ReportBuilder<T> {
             invocations: 0,
             busy: 0.0,
             pipelines_built: 0,
+            retries: 0,
+            faults: 0,
             metrics: PipelineMetrics::default(),
         });
         w.shards += 1;
@@ -179,6 +231,8 @@ impl<T> ReportBuilder<T> {
         w.outputs += r.outputs.len();
         w.invocations += r.invocations;
         w.busy += r.elapsed;
+        w.retries += u64::from(r.retries);
+        w.faults += u64::from(r.fault.is_some());
         // the result carries the worker's CUMULATIVE build count, so the
         // per-worker figure is a max-fold, not a sum
         w.pipelines_built = w.pipelines_built.max(r.pipelines_built);
@@ -196,6 +250,10 @@ impl<T> ReportBuilder<T> {
     pub fn finish(self, elapsed: f64) -> ExecReport<T> {
         let per_worker: Vec<WorkerStats> = self.per_worker.into_values().collect();
         let pipelines_built = per_worker.iter().map(|w| w.pipelines_built).sum();
+        // results arrive in stream order on both paths, but sort anyway
+        // so the fault ledger is deterministic however it was fed
+        let mut faults = self.faults;
+        faults.sort_by_key(|f| f.shard);
         ExecReport {
             outputs: self.outputs,
             metrics: self.metrics,
@@ -203,6 +261,8 @@ impl<T> ReportBuilder<T> {
             shards: self.shards,
             steals: self.steals,
             pipelines_built,
+            retries: self.retries,
+            faults,
             elapsed,
             per_worker,
             trace: None,
@@ -297,6 +357,8 @@ mod tests {
             invocations: items as u64,
             elapsed: 0.5,
             pipelines_built: 1,
+            retries: 0,
+            fault: None,
         }
     }
 
@@ -372,6 +434,39 @@ mod tests {
         let report = merge_results(rebuilt, 1.0);
         assert_eq!(report.pipelines_built, 2, "rebuild must be visible");
         assert_eq!(report.per_worker[0].pipelines_built, 2);
+    }
+
+    #[test]
+    fn retries_and_quarantines_fold_into_the_report() {
+        let mut results = vec![
+            shard(0, 0, vec![1, 2], 2),
+            shard(1, 1, vec![], 0),
+            shard(2, 0, vec![3], 1),
+        ];
+        // shard 0 recovered after 2 retries; shard 1 was quarantined
+        results[0].retries = 2;
+        results[0].pipelines_built = 3;
+        results[1].fault = Some("injected fault: shard 1 panics on worker 1".to_string());
+        let report = merge_results(results, 2.0);
+        assert_eq!(report.retries, 2);
+        assert_eq!(report.faults.len(), 1);
+        let f = &report.faults[0];
+        assert_eq!((f.shard, f.worker, f.attempts), (1, 1, 1));
+        assert!(f.error.contains("injected fault"), "{}", f.error);
+        assert_eq!(report.per_worker[0].retries, 2);
+        assert_eq!(report.per_worker[0].faults, 0);
+        assert_eq!(report.per_worker[1].retries, 0);
+        assert_eq!(report.per_worker[1].faults, 1);
+        // the recovery rebuilds stay visible in the build count
+        assert_eq!(report.per_worker[0].pipelines_built, 3);
+        let table = report.worker_table();
+        assert!(table.contains("retry"), "{table}");
+        assert!(table.contains("fault"), "{table}");
+        let faults = report.fault_table();
+        assert!(faults.contains("shard"), "{faults}");
+        assert!(faults.contains("injected fault"), "{faults}");
+        // fault-free runs render an empty ledger
+        assert_eq!(merge_results(vec![shard(0, 0, vec![1], 1)], 1.0).fault_table(), "");
     }
 
     #[test]

@@ -51,9 +51,18 @@
 //!   and never shards (plus [`KernelSpawn`], which builds per-thread
 //!   kernel sets — PJRT client handles are thread-confined, so each
 //!   worker owns its engine).
+//! * [`fault`] — [`FaultPolicy`]/[`FaultPlan`]: per-shard fault
+//!   containment. The shard is the legal recovery unit (all cross-item
+//!   state is region-scoped and regions never span shards), so a failed
+//!   shard can be retried on a rebuilt pipeline (bit-identical, by the
+//!   reuse ≡ fresh proof) or quarantined without touching its
+//!   neighbours; a seeded injection harness ([`FaultyFactory`]) makes
+//!   every recovery path deterministically testable.
 //! * [`steal`] — [`StealQueues`]: per-worker shard deques with
 //!   LIFO-local / FIFO-steal claiming ([`ClaimMode`] selects stealing,
-//!   no-steal, or the legacy atomic cursor for benchmarking).
+//!   no-steal, or the legacy atomic cursor for benchmarking); every
+//!   blocking wait carries a watchdog deadline tied to a pool-wide
+//!   [`Pulse`] heartbeat, so stalls fail by name instead of hanging.
 //! * [`pool`] — [`WorkerPool`]: `std::thread::scope`-based pool; one
 //!   scheduler per worker, shards claimed from the deques. In streaming
 //!   mode the calling thread drives ingest while workers execute.
@@ -97,6 +106,7 @@
 //! workers 1–8; `ingest_stream` does the same for the streaming path).
 
 pub mod factory;
+pub mod fault;
 pub mod ingest;
 pub mod merge;
 pub mod plan;
@@ -105,9 +115,10 @@ pub mod runner;
 pub mod steal;
 
 pub use factory::{KernelSpawn, PipelineFactory, ShardOutput, ShardWorker, WorkerKernels};
+pub use fault::{FaultKind, FaultPlan, FaultPolicy, FaultRecord, FaultShot, FaultyFactory};
 pub use ingest::{ContainerPool, IngestPlanner, IngestPolicy, ShardTask};
 pub use merge::{ExecReport, ReportBuilder, StreamMerger, WorkerStats};
 pub use plan::{ShardPlan, ShardPolicy};
-pub use pool::{PoolRun, ShardResult, StreamRun, WorkerPool};
+pub use pool::{PoolRun, ShardResult, StreamRun, WorkerPool, DEFAULT_WATCHDOG};
 pub use runner::{ExecConfig, ShardedRunner, MAX_INGEST_BUFFER};
-pub use steal::{Claim, ClaimMode, CompletionBuffer, StealQueues};
+pub use steal::{Claim, ClaimMode, CompletionBuffer, Pulse, StealQueues};

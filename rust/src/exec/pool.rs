@@ -19,10 +19,21 @@
 //!   in-flight budget, and emitting merged results **in stream order as
 //!   shards complete** (not after a global join).
 //!
-//! Error semantics (both modes): the first failure flips a stop flag so
-//! idle workers quit claiming, and the error (annotated with worker and
-//! shard) reaches the caller after all threads join. Already-completed
-//! shards are discarded — a sharded run is all-or-nothing.
+//! Error semantics (both modes) are governed by the pool's
+//! [`FaultPolicy`] (default [`FaultPolicy::FailFast`], the historical
+//! all-or-nothing behaviour): under fail-fast the first failure flips a
+//! stop flag so idle workers quit claiming, and the error (annotated
+//! with worker and shard) reaches the caller after all threads join —
+//! already-completed shards are discarded. `Retry` discards the failing
+//! worker's pipeline, rebuilds it fresh through the factory, and re-runs
+//! the shard (output stays bit-identical, by the reuse ≡ fresh proof);
+//! `Quarantine` records the failure and emits an empty slot in stream
+//! order so the run proceeds. Every `run_shard` call sits behind
+//! `catch_unwind`, so a panicking kernel is handled exactly like an
+//! `Err` — never a poisoned pool. And no blocking wait is unbounded:
+//! claims and completion drains carry a watchdog deadline (see
+//! [`super::steal`]), so a stuck shard or lost wake-up becomes a named
+//! error instead of a hang.
 //!
 //! ## Prewarm
 //!
@@ -39,11 +50,12 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Barrier, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Result};
 
-use super::factory::{PipelineFactory, ShardWorker};
+use super::factory::{PipelineFactory, ShardOutput, ShardWorker};
+use super::fault::FaultPolicy;
 use super::ingest::{ContainerPool, IngestPlanner, IngestPolicy, ShardTask};
 use super::merge::StreamMerger;
 use super::plan::ShardPlan;
@@ -72,9 +84,17 @@ pub struct ShardResult<T> {
     /// Wall-clock seconds this shard took on its worker.
     pub elapsed: f64,
     /// The executing worker's cumulative pipeline-build count when this
-    /// shard finished ([`ShardWorker::pipelines_built`]) — 1 for every
-    /// shard of a persistent (reset-not-rebuild) worker.
+    /// shard finished ([`ShardWorker::pipelines_built`] plus any
+    /// fault-recovery rebuilds) — 1 for every shard of a persistent
+    /// (reset-not-rebuild) worker on the fault-free path.
     pub pipelines_built: u64,
+    /// Extra attempts this shard needed (0 on the fault-free path; a
+    /// `Retry` recovery counts one per rebuild-and-rerun cycle).
+    pub retries: u32,
+    /// `Some(error)` if the shard was quarantined under
+    /// [`FaultPolicy::Quarantine`]: its outputs are empty and the
+    /// failure lands in the run's fault table.
+    pub fault: Option<String>,
 }
 
 /// Best-effort text of a thread panic payload (panics carry `&str` or
@@ -102,17 +122,136 @@ impl Drop for StopOnPanic<'_> {
 /// Streaming variant of [`StopOnPanic`]: also records a failure in the
 /// completion buffer so the (possibly sleeping) ingest driver wakes and
 /// aborts instead of waiting forever for a shard that will never finish.
+/// Names the worker and the shard in flight (`usize::MAX` = between
+/// shards), so an escaped panic — one from outside the `catch_unwind`
+/// around `run_shard`, e.g. in region recycling — is still attributable.
 struct PanicSignal<'a, R> {
     stop: &'a AtomicBool,
     completion: &'a CompletionBuffer<R>,
+    worker: usize,
+    shard: &'a AtomicUsize,
 }
 
 impl<R> Drop for PanicSignal<'_, R> {
     fn drop(&mut self) {
         if std::thread::panicking() {
             self.stop.store(true, Ordering::Relaxed);
-            self.completion
-                .fail(anyhow!("worker thread panicked while running a shard"));
+            let worker = self.worker;
+            self.completion.fail(match self.shard.load(Ordering::Relaxed) {
+                usize::MAX => anyhow!("worker {worker} panicked between streaming shards"),
+                shard => {
+                    anyhow!("worker {worker} panicked while running streaming shard {shard}")
+                }
+            });
+        }
+    }
+}
+
+/// Outcome of [`run_shard_guarded`]: the shard's output (possibly after
+/// retries), or its quarantine record.
+enum Guarded<T> {
+    /// The shard completed; `retries` rebuild-and-rerun cycles preceded.
+    Done { out: ShardOutput<T>, retries: u32 },
+    /// [`FaultPolicy::Quarantine`] gave up on the shard.
+    Quarantined { error: String, attempts: u32 },
+}
+
+/// Run one shard under the pool's fault policy. Every attempt goes
+/// through `catch_unwind`, so a panicking kernel is handled exactly like
+/// an `Err`. Before a `Retry` re-run the worker's persistent pipeline is
+/// discarded — a panic may have unwound it mid-reset — and rebuilt fresh
+/// through the factory (counted in `rebuilds`, traced as a `Retry`
+/// span), which is what makes the recovered output bit-identical to a
+/// fault-free run. The fault-free path pays one `catch_unwind` frame and
+/// allocates nothing.
+#[allow(clippy::too_many_arguments)]
+fn run_shard_guarded<F: PipelineFactory>(
+    factory: &F,
+    worker_id: usize,
+    pipeline: &mut F::Worker,
+    rebuilds: &mut u64,
+    shard: usize,
+    regions: &[F::In],
+    policy: FaultPolicy,
+    sink: &TraceSink,
+) -> Result<Guarded<F::Out>> {
+    let max_attempts = policy.max_attempts();
+    let mut attempt = 1u32;
+    loop {
+        pipeline.begin_shard(shard);
+        let f0 = sink.now_ns();
+        let err = match catch_unwind(AssertUnwindSafe(|| pipeline.run_shard(regions))) {
+            Ok(Ok(out)) => {
+                return Ok(Guarded::Done {
+                    out,
+                    retries: attempt - 1,
+                });
+            }
+            Ok(Err(e)) => e,
+            Err(payload) => anyhow!(
+                "shard {shard} panicked on worker {worker_id} (attempt {attempt}): {}",
+                panic_msg(&payload)
+            ),
+        };
+        sink.record(
+            f0,
+            sink.now_ns(),
+            TraceEvent::Fault {
+                shard: shard as u32,
+                attempt,
+            },
+        );
+        match policy {
+            FaultPolicy::FailFast => return Err(err),
+            FaultPolicy::Quarantine => {
+                return Ok(Guarded::Quarantined {
+                    error: format!("{err:#}"),
+                    attempts: attempt,
+                });
+            }
+            FaultPolicy::Retry { backoff, .. } => {
+                if attempt >= max_attempts {
+                    return Err(err.context(format!(
+                        "shard {shard} still failing after {max_attempts} attempt(s)"
+                    )));
+                }
+                if !backoff.is_zero() {
+                    std::thread::sleep(backoff);
+                }
+                // The failing pipeline may be corrupt mid-reset:
+                // replace it wholesale before the re-run.
+                let r0 = sink.now_ns();
+                let rebuilt =
+                    match catch_unwind(AssertUnwindSafe(|| factory.make_worker(worker_id))) {
+                        Ok(Ok(p)) => p,
+                        Ok(Err(e)) => {
+                            return Err(e.context(format!(
+                                "rebuilding worker {worker_id}'s pipeline to retry shard {shard}"
+                            )));
+                        }
+                        Err(payload) => {
+                            return Err(anyhow!(
+                                "worker {worker_id} panicked rebuilding its pipeline to \
+                                 retry shard {shard}: {}",
+                                panic_msg(&payload)
+                            ));
+                        }
+                    };
+                *pipeline = rebuilt;
+                *rebuilds += 1;
+                if sink.enabled() {
+                    pipeline.set_trace(sink.clone());
+                }
+                sink.record(
+                    r0,
+                    sink.now_ns(),
+                    TraceEvent::Retry {
+                        shard: shard as u32,
+                        attempt,
+                    },
+                );
+                attempt += 1;
+            }
         }
     }
 }
@@ -145,16 +284,18 @@ impl ShardClaimer {
     }
 
     /// `(shard index, stolen)`, or `None` when the plan is exhausted.
-    fn next(&self, worker: usize) -> Option<(usize, bool)> {
+    /// Materialized queues are loaded and closed before workers start,
+    /// so claims never block and the watchdog `deadline` is a formality.
+    fn next(&self, worker: usize, deadline: Duration) -> Result<Option<(usize, bool)>> {
         match self {
             ShardClaimer::Cursor { next, len } => {
                 let shard = next.fetch_add(1, Ordering::Relaxed);
-                (shard < *len).then_some((shard, false))
+                Ok((shard < *len).then_some((shard, false)))
             }
-            ShardClaimer::Deques(queues) => match queues.claim(worker) {
+            ShardClaimer::Deques(queues) => Ok(match queues.claim(worker, deadline)? {
                 Claim::Task { work, stolen } => Some((work, stolen)),
                 Claim::Done => None,
-            },
+            }),
         }
     }
 }
@@ -183,6 +324,11 @@ pub struct StreamRun {
     pub elapsed: f64,
 }
 
+/// Default watchdog deadline for the pool's blocking waits: long enough
+/// that only a genuinely stuck pool — a never-completing shard, a lost
+/// wake-up — trips it, never a slow-but-healthy run.
+pub const DEFAULT_WATCHDOG: Duration = Duration::from_secs(60);
+
 /// Fixed-size pool of pipeline workers over a shard plan or region
 /// stream.
 #[derive(Debug, Clone, Copy)]
@@ -190,6 +336,8 @@ pub struct WorkerPool {
     workers: usize,
     claim: ClaimMode,
     trace: Option<TraceSpec>,
+    fault: FaultPolicy,
+    watchdog: Duration,
 }
 
 impl WorkerPool {
@@ -198,6 +346,8 @@ impl WorkerPool {
             workers,
             claim: ClaimMode::default(),
             trace: None,
+            fault: FaultPolicy::default(),
+            watchdog: DEFAULT_WATCHDOG,
         }
     }
 
@@ -214,6 +364,24 @@ impl WorkerPool {
     /// per event site and nothing else.
     pub fn with_trace(mut self, spec: Option<TraceSpec>) -> WorkerPool {
         self.trace = spec;
+        self
+    }
+
+    /// What happens when a shard panics or errors (default:
+    /// [`FaultPolicy::FailFast`]). See [`super::fault`] for the policy
+    /// semantics and the determinism argument for `Retry`.
+    pub fn with_fault(mut self, fault: FaultPolicy) -> WorkerPool {
+        self.fault = fault;
+        self
+    }
+
+    /// Watchdog deadline for every blocking wait in the pool (default
+    /// [`DEFAULT_WATCHDOG`]). Pick it longer than the longest legitimate
+    /// shard (and, for streaming, the longest gap between source
+    /// regions): the deadline only trips after that long with **no**
+    /// progress anywhere in the pool.
+    pub fn with_watchdog(mut self, deadline: Duration) -> WorkerPool {
+        self.watchdog = deadline;
         self
     }
 
@@ -264,6 +432,7 @@ impl WorkerPool {
         let stop = AtomicBool::new(false);
         let traces: Mutex<Vec<WorkerTrace>> = Mutex::new(Vec::new());
         let spec = self.trace;
+        let (fault, watchdog) = (self.fault, self.watchdog);
         // prewarm rendezvous: absent on the inline path, where the
         // caller IS the worker and a barrier would deadlock
         let barrier = (threads > 1).then(|| Barrier::new(threads + 1));
@@ -304,15 +473,33 @@ impl WorkerPool {
             }
             let claim_t0 = Instant::now();
             let mut done = Vec::new();
+            let mut rebuilds = 0u64;
             while !stop.load(Ordering::Relaxed) {
-                let Some((shard, stolen)) = claimer.next(worker_id) else {
+                let next = match claimer.next(worker_id, watchdog) {
+                    Ok(n) => n,
+                    Err(e) => {
+                        stop.store(true, Ordering::Relaxed);
+                        return Err(e);
+                    }
+                };
+                let Some((shard, stolen)) = next else {
                     break;
                 };
                 let range = plan.range(shard);
                 let s0 = sink.now_ns();
                 let t0 = Instant::now();
-                match pipeline.run_shard(&stream[range.clone()]) {
-                    Ok(out) => {
+                let guarded = run_shard_guarded(
+                    factory,
+                    worker_id,
+                    &mut pipeline,
+                    &mut rebuilds,
+                    shard,
+                    &stream[range.clone()],
+                    fault,
+                    &sink,
+                );
+                match guarded {
+                    Ok(Guarded::Done { out, retries }) => {
                         sink.record(
                             s0,
                             sink.now_ns(),
@@ -331,7 +518,24 @@ impl WorkerPool {
                             metrics: out.metrics,
                             invocations: out.invocations,
                             elapsed: t0.elapsed().as_secs_f64(),
-                            pipelines_built: pipeline.pipelines_built(),
+                            pipelines_built: pipeline.pipelines_built() + rebuilds,
+                            retries,
+                            fault: None,
+                        });
+                    }
+                    Ok(Guarded::Quarantined { error, attempts }) => {
+                        done.push(ShardResult {
+                            shard,
+                            worker: worker_id,
+                            regions: range.len(),
+                            stolen,
+                            outputs: Vec::new(),
+                            metrics: PipelineMetrics::default(),
+                            invocations: 0,
+                            elapsed: t0.elapsed().as_secs_f64(),
+                            pipelines_built: pipeline.pipelines_built() + rebuilds,
+                            retries: attempts - 1,
+                            fault: Some(error),
                         });
                     }
                     Err(e) => {
@@ -480,7 +684,10 @@ impl WorkerPool {
         let granule = ingest.effective_shard_regions(threads);
         let queues: StealQueues<ShardTask<F::In>> =
             StealQueues::new(threads, self.claim != ClaimMode::NoSteal);
-        let completion: CompletionBuffer<ShardResult<F::Out>> = CompletionBuffer::new();
+        // completions share the queues' pulse, so a completing shard
+        // defers an idle sibling's claim watchdog (and vice versa)
+        let completion: CompletionBuffer<ShardResult<F::Out>> =
+            CompletionBuffer::new().with_pulse(queues.pulse());
         let containers: ContainerPool<F::In> = ContainerPool::new();
         let stop = AtomicBool::new(false);
         let traces: Mutex<Vec<WorkerTrace>> = Mutex::new(Vec::new());
@@ -495,6 +702,7 @@ impl WorkerPool {
             None => TraceSink::default(),
         };
 
+        let pool = *self;
         let elapsed = std::thread::scope(|scope| -> Result<f64> {
             let handles: Vec<_> = (0..threads)
                 .map(|wid| {
@@ -503,7 +711,7 @@ impl WorkerPool {
                     let (barrier, traces) = (&barrier, &traces);
                     scope.spawn(move || {
                         stream_worker(
-                            wid, factory, queues, completion, containers, stop, barrier, spec,
+                            wid, factory, pool, queues, completion, containers, stop, barrier,
                             traces,
                         )
                     })
@@ -522,6 +730,7 @@ impl WorkerPool {
                 emitted_regions: 0,
                 emitted_shards: 0,
                 sink: driver_sink.clone(),
+                watchdog: self.watchdog,
             };
             let mut planner: IngestPlanner<F::In> = IngestPlanner::new(granule);
             // all pipelines are built once this returns; the measured
@@ -596,6 +805,9 @@ where
         let Some(region) = source.next_region() else {
             break;
         };
+        // the driver is alive and pulling: beat the pulse so worker
+        // claim watchdogs don't fire across a slow source gap
+        driver.queues.beat();
         let weight = factory.weight(&region);
         if let Some(task) = planner.push_region(region, weight) {
             driver.submit(task)?;
@@ -627,6 +839,7 @@ struct StreamDriver<'s, I, O, K> {
     emitted_regions: usize,
     emitted_shards: usize,
     sink: TraceSink,
+    watchdog: Duration,
 }
 
 impl<I, O, K> StreamDriver<'_, I, O, K>
@@ -643,10 +856,22 @@ where
     }
 
     /// Blocking: sleep until at least one completion (or a failure)
-    /// arrives, then absorb.
+    /// arrives, then absorb. Bounded by the watchdog; on expiry the
+    /// driver annotates the stall with what it alone knows — how many
+    /// shards are in flight and which stream slot the merge is stuck on.
     fn pump_wait(&mut self) -> Result<()> {
-        if let Some(err) = self.completion.wait_drain_into(&mut self.inbox) {
-            return Err(err);
+        match self.completion.wait_drain_into(&mut self.inbox, self.watchdog) {
+            Ok(Some(err)) => return Err(err),
+            Ok(None) => {}
+            Err(stall) => {
+                return Err(stall.context(format!(
+                    "ingest driver gave up: {} shard(s) ({} region(s)) in flight, \
+                     merge waiting on stream slot {}",
+                    self.submitted_shards - self.emitted_shards,
+                    self.submitted_regions - self.emitted_regions,
+                    self.merger.next_expected(),
+                )));
+            }
         }
         self.absorb()
     }
@@ -732,21 +957,28 @@ where
 }
 
 /// One streaming worker thread: prewarm (build pipeline, rendezvous on
-/// the barrier) → claim → run → recycle container → report completion.
+/// the barrier) → claim → run under the fault policy → recycle container
+/// → report completion.
 #[allow(clippy::too_many_arguments)]
 fn stream_worker<F: PipelineFactory>(
     worker_id: usize,
     factory: &F,
+    pool: WorkerPool,
     queues: &StealQueues<ShardTask<F::In>>,
     completion: &CompletionBuffer<ShardResult<F::Out>>,
     containers: &ContainerPool<F::In>,
     stop: &AtomicBool,
     barrier: &Barrier,
-    trace: Option<TraceSpec>,
     traces: &Mutex<Vec<WorkerTrace>>,
 ) {
-    let _guard = PanicSignal { stop, completion };
-    let sink = match &trace {
+    let current_shard = AtomicUsize::new(usize::MAX);
+    let _guard = PanicSignal {
+        stop,
+        completion,
+        worker: worker_id,
+        shard: &current_shard,
+    };
+    let sink = match &pool.trace {
         Some(s) => s.sink(),
         None => TraceSink::default(),
     };
@@ -776,16 +1008,32 @@ fn stream_worker<F: PipelineFactory>(
         sink.record(p0, p1, TraceEvent::Prewarm);
         pipeline.set_trace(sink.clone());
     }
+    let mut rebuilds = 0u64;
     while !stop.load(Ordering::Relaxed) {
-        let (task, stolen) = match queues.claim(worker_id) {
-            Claim::Task { work, stolen } => (work, stolen),
-            Claim::Done => break,
+        let (task, stolen) = match queues.claim(worker_id, pool.watchdog) {
+            Ok(Claim::Task { work, stolen }) => (work, stolen),
+            Ok(Claim::Done) => break,
+            Err(e) => {
+                stop.store(true, Ordering::Relaxed);
+                completion.fail(e.context(format!("worker {worker_id} starved waiting for work")));
+                return;
+            }
         };
-        let p = &mut pipeline;
+        current_shard.store(task.index, Ordering::Relaxed);
         let s0 = sink.now_ns();
         let t0 = Instant::now();
-        match p.run_shard(&task.regions) {
-            Ok(out) => {
+        let guarded = run_shard_guarded(
+            factory,
+            worker_id,
+            &mut pipeline,
+            &mut rebuilds,
+            task.index,
+            &task.regions,
+            pool.fault,
+            &sink,
+        );
+        let (outputs, metrics, invocations, retries, fault) = match guarded {
+            Ok(Guarded::Done { out, retries }) => {
                 sink.record(
                     s0,
                     sink.now_ns(),
@@ -795,28 +1043,15 @@ fn stream_worker<F: PipelineFactory>(
                         stolen,
                     },
                 );
-                let result = ShardResult {
-                    shard: task.index,
-                    worker: worker_id,
-                    regions: task.regions.len(),
-                    stolen,
-                    outputs: out.outputs,
-                    metrics: out.metrics,
-                    invocations: out.invocations,
-                    elapsed: t0.elapsed().as_secs_f64(),
-                    pipelines_built: p.pipelines_built(),
-                };
-                // Hand each region back through the factory (a pooled
-                // factory reclaims its element buffers for the ingest
-                // driver; the default just drops), then recycle the
-                // emptied shard container.
-                let mut regions = task.regions;
-                for region in regions.drain(..) {
-                    factory.recycle_region(region);
-                }
-                containers.put(regions);
-                completion.push(result);
+                (out.outputs, out.metrics, out.invocations, retries, None)
             }
+            Ok(Guarded::Quarantined { error, attempts }) => (
+                Vec::new(),
+                PipelineMetrics::default(),
+                0,
+                attempts - 1,
+                Some(error),
+            ),
             Err(e) => {
                 stop.store(true, Ordering::Relaxed);
                 completion.fail(e.context(format!(
@@ -825,7 +1060,32 @@ fn stream_worker<F: PipelineFactory>(
                 )));
                 return;
             }
+        };
+        let result = ShardResult {
+            shard: task.index,
+            worker: worker_id,
+            regions: task.regions.len(),
+            stolen,
+            outputs,
+            metrics,
+            invocations,
+            elapsed: t0.elapsed().as_secs_f64(),
+            pipelines_built: pipeline.pipelines_built() + rebuilds,
+            retries,
+            fault,
+        };
+        // Hand each region back through the factory (a pooled factory
+        // reclaims its element buffers for the ingest driver; the
+        // default just drops), then recycle the emptied shard container
+        // — quarantined shards included, so a placeholder result still
+        // releases its budget and keeps the recycling loop closed.
+        let mut regions = task.regions;
+        for region in regions.drain(..) {
+            factory.recycle_region(region);
         }
+        containers.put(regions);
+        completion.push(result);
+        current_shard.store(usize::MAX, Ordering::Relaxed);
     }
     if sink.enabled() {
         let (records, dropped) = sink.take();
@@ -840,7 +1100,7 @@ fn stream_worker<F: PipelineFactory>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::exec::factory::ShardOutput;
+    use crate::exec::fault::{FaultPlan, FaultyFactory};
     use crate::exec::plan::ShardPolicy;
     use crate::workload::source::IterSource;
 
@@ -1169,6 +1429,210 @@ mod tests {
             .run_collect(&ToyFactory::plain(), &stream, &plan)
             .unwrap();
         assert!(run.traces.is_empty());
+    }
+
+    #[test]
+    fn retry_recovers_injected_faults_bit_identically() {
+        let stream = items(300);
+        let weights = vec![1usize; 300];
+        let plan = ShardPlan::build(
+            &weights,
+            3,
+            &ShardPolicy {
+                shards_per_worker: 4,
+                ..ShardPolicy::default()
+            },
+        );
+        let clean = WorkerPool::new(3).run(&ToyFactory::plain(), &stream, &plan).unwrap();
+        let faults = FaultPlan::new().panic_at(0).error_at(3).panic_at(plan.len() - 1);
+        let factory = FaultyFactory::new(ToyFactory::plain(), &faults);
+        let results = WorkerPool::new(3)
+            .with_fault(FaultPolicy::retry(3))
+            .run(&factory, &stream, &plan)
+            .unwrap();
+        assert_eq!(factory.remaining(), 0, "every planned shot fired");
+        let flat = |rs: &[ShardResult<u32>]| -> Vec<u32> {
+            rs.iter().flat_map(|r| r.outputs.clone()).collect()
+        };
+        assert_eq!(flat(&results), flat(&clean), "recovered output is identical");
+        let retries: u32 = results.iter().map(|r| r.retries).sum();
+        assert_eq!(retries as usize, faults.injected(), "one retry per injected fault");
+        for r in &results {
+            assert!(r.fault.is_none());
+            let faulted = faults.shards().contains(&r.shard);
+            assert_eq!(r.retries > 0, faulted, "shard {}", r.shard);
+        }
+    }
+
+    #[test]
+    fn quarantine_skips_the_poisoned_shard_and_reports_it() {
+        let stream = items(200);
+        let weights = vec![1usize; 200];
+        let plan = ShardPlan::build(
+            &weights,
+            2,
+            &ShardPolicy {
+                shards_per_worker: 3,
+                ..ShardPolicy::default()
+            },
+        );
+        let faults = FaultPlan::new().panic_at(2);
+        let factory = FaultyFactory::new(ToyFactory::plain(), &faults);
+        let results = WorkerPool::new(2)
+            .with_fault(FaultPolicy::Quarantine)
+            .run(&factory, &stream, &plan)
+            .unwrap();
+        assert_eq!(results.len(), plan.len(), "quarantine still fills every slot");
+        for r in &results {
+            if r.shard == 2 {
+                assert!(r.outputs.is_empty());
+                let msg = r.fault.as_deref().expect("shard 2 is quarantined");
+                assert!(msg.contains("injected fault"), "{msg}");
+            } else {
+                assert_eq!(r.outputs, stream[plan.range(r.shard)].to_vec());
+                assert!(r.fault.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn fail_fast_panic_names_worker_and_shard() {
+        let stream = items(100);
+        let weights = vec![1usize; 100];
+        let plan = ShardPlan::build(&weights, 2, &ShardPolicy::default());
+        let faults = FaultPlan::new().panic_at(1);
+        let factory = FaultyFactory::new(ToyFactory::plain(), &faults);
+        let err = WorkerPool::new(2).run(&factory, &stream, &plan).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("shard 1"), "{msg}");
+        assert!(msg.contains("worker"), "{msg}");
+        assert!(msg.contains("injected fault"), "{msg}");
+    }
+
+    #[test]
+    fn retry_exhaustion_fails_the_run() {
+        let stream = items(60);
+        let weights = vec![1usize; 60];
+        let plan = ShardPlan::build(&weights, 2, &ShardPolicy::default());
+        let faults = FaultPlan::new().panic_at_times(0, 8);
+        let factory = FaultyFactory::new(ToyFactory::plain(), &faults);
+        let err = WorkerPool::new(2)
+            .with_fault(FaultPolicy::retry(2))
+            .run(&factory, &stream, &plan)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("still failing after 2 attempt(s)"), "{msg}");
+    }
+
+    #[test]
+    fn streaming_retry_recovers_and_emits_in_order() {
+        let faults = FaultPlan::new().panic_at(0).error_at(5).panic_at(11);
+        let factory = FaultyFactory::new(ToyFactory::plain(), &faults);
+        let mut got = Vec::new();
+        let mut retries = 0u32;
+        WorkerPool::new(3)
+            .with_fault(FaultPolicy::retry(3))
+            .run_stream(
+                &factory,
+                IterSource::new(0..400u32),
+                &IngestPolicy {
+                    buffer_regions: 16,
+                    shard_regions: 3,
+                },
+                |r| {
+                    retries += r.retries;
+                    got.extend(r.outputs);
+                    Ok(())
+                },
+            )
+            .unwrap();
+        assert_eq!(got, items(400), "recovered stream is identical and in order");
+        assert_eq!(retries as usize, faults.injected());
+        assert_eq!(factory.remaining(), 0);
+    }
+
+    #[test]
+    fn streaming_quarantine_emits_an_empty_slot_in_order() {
+        let faults = FaultPlan::new().panic_at(4);
+        let factory = FaultyFactory::new(ToyFactory::plain(), &faults);
+        let mut slots = Vec::new();
+        let mut got = Vec::new();
+        WorkerPool::new(2)
+            .with_fault(FaultPolicy::Quarantine)
+            .run_stream(
+                &factory,
+                IterSource::new(0..100u32),
+                &IngestPolicy {
+                    buffer_regions: 8,
+                    shard_regions: 2,
+                },
+                |r| {
+                    slots.push((r.shard, r.fault.is_some()));
+                    got.extend(r.outputs);
+                    Ok(())
+                },
+            )
+            .unwrap();
+        for (i, &(shard, _)) in slots.iter().enumerate() {
+            assert_eq!(shard, i, "emission stays in stream order");
+        }
+        let quarantined: Vec<usize> =
+            slots.iter().filter(|s| s.1).map(|s| s.0).collect();
+        assert_eq!(quarantined, vec![4], "exactly the injected shard is quarantined");
+        // shard 4 spans regions 8..10, the only items missing
+        let expect: Vec<u32> = (0..100u32).filter(|&v| !(8..10).contains(&v)).collect();
+        assert_eq!(got, expect);
+    }
+
+    /// Worker whose shards outlast the test watchdog by far.
+    struct StuckFactory;
+
+    struct StuckWorker;
+
+    impl ShardWorker for StuckWorker {
+        type In = u32;
+        type Out = u32;
+
+        fn run_shard(&mut self, shard: &[u32]) -> Result<ShardOutput<u32>> {
+            std::thread::sleep(Duration::from_millis(400));
+            Ok(ShardOutput {
+                outputs: shard.to_vec(),
+                metrics: PipelineMetrics::default(),
+                invocations: 0,
+            })
+        }
+    }
+
+    impl PipelineFactory for StuckFactory {
+        type In = u32;
+        type Out = u32;
+        type Worker = StuckWorker;
+
+        fn make_worker(&self, _worker_id: usize) -> Result<StuckWorker> {
+            Ok(StuckWorker)
+        }
+    }
+
+    #[test]
+    fn streaming_watchdog_names_the_stall_instead_of_hanging() {
+        // one worker stuck inside a 400ms shard, watchdog at 50ms: the
+        // backpressured driver must fail with the stall diagnostics
+        // instead of sleeping forever on the completion condvar
+        let err = WorkerPool::new(1)
+            .with_watchdog(Duration::from_millis(50))
+            .run_stream(
+                &StuckFactory,
+                IterSource::new(0..64u32),
+                &IngestPolicy {
+                    buffer_regions: 4,
+                    shard_regions: 2,
+                },
+                |_| Ok(()),
+            )
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("watchdog"), "{msg}");
+        assert!(msg.contains("in flight"), "{msg}");
     }
 
     #[test]

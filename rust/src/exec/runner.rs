@@ -2,15 +2,16 @@
 //! shard, how to ingest) and [`ShardedRunner`] (materialized: plan →
 //! pool → merge; streaming: ingest → steal → ordered emit).
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
 
 use super::factory::PipelineFactory;
+use super::fault::FaultPolicy;
 use super::ingest::IngestPolicy;
 use super::merge::{merge_results, ExecReport, ReportBuilder};
 use super::plan::{ShardPlan, ShardPolicy};
-use super::pool::{ShardResult, WorkerPool};
+use super::pool::{ShardResult, WorkerPool, DEFAULT_WATCHDOG};
 use super::steal::ClaimMode;
 use crate::trace::{Trace, TraceOptions, TraceSpec, WorkerTrace};
 use crate::workload::source::RegionSource;
@@ -32,6 +33,15 @@ pub struct ExecConfig {
     /// firing/shard/ingest/merge events into per-worker ring buffers and
     /// attaches the folded [`Trace`] to the report.
     pub trace: Option<TraceOptions>,
+    /// What happens when a shard panics or errors (default:
+    /// [`FaultPolicy::FailFast`] — the whole run aborts). See
+    /// [`super::fault`] for `Retry` / `Quarantine` semantics.
+    pub fault: FaultPolicy,
+    /// Watchdog deadline for the pool's blocking waits: a run that makes
+    /// no progress anywhere for this long fails with a named stall
+    /// diagnostic instead of hanging. Must exceed the longest legitimate
+    /// shard (and source gap); must be nonzero.
+    pub watchdog: Duration,
 }
 
 impl ExecConfig {
@@ -44,6 +54,8 @@ impl ExecConfig {
             ingest: IngestPolicy::default(),
             claim: ClaimMode::default(),
             trace: None,
+            fault: FaultPolicy::default(),
+            watchdog: DEFAULT_WATCHDOG,
         }
     }
 
@@ -83,6 +95,19 @@ impl ExecConfig {
         self
     }
 
+    /// Builder-style fault-policy override.
+    pub fn with_fault(mut self, fault: FaultPolicy) -> ExecConfig {
+        self.fault = fault;
+        self
+    }
+
+    /// Builder-style watchdog-deadline override. Zero is **not** clamped
+    /// here — [`ExecConfig::validate`] rejects it by name.
+    pub fn with_watchdog(mut self, deadline: Duration) -> ExecConfig {
+        self.watchdog = deadline;
+        self
+    }
+
     /// Check the configuration, naming the offending field. The runner
     /// (and the apps' `run_sharded*`/`run_streaming*` fronts) call this
     /// up front so a zero-worker or zero-budget config fails loudly
@@ -103,6 +128,18 @@ impl ExecConfig {
             "invalid exec config: ingest buffer_regions = {} exceeds the sanity \
              cap {MAX_INGEST_BUFFER} (the budget is counted in regions, not bytes)",
             self.ingest.buffer_regions
+        );
+        if let FaultPolicy::Retry { max_attempts, .. } = self.fault {
+            ensure!(
+                max_attempts >= 1,
+                "invalid exec config: fault policy retry max_attempts = 0 (a shard \
+                 needs at least one attempt; pass --fault-retries >= 1)"
+            );
+        }
+        ensure!(
+            !self.watchdog.is_zero(),
+            "invalid exec config: watchdog deadline = 0 (every blocking wait would \
+             fail immediately; pass --watchdog-secs >= 1)"
         );
         Ok(())
     }
@@ -152,6 +189,8 @@ impl ShardedRunner {
         WorkerPool::new(self.cfg.workers)
             .with_claim(self.cfg.claim)
             .with_trace(self.cfg.trace.map(TraceSpec::from_options))
+            .with_fault(self.cfg.fault)
+            .with_watchdog(self.cfg.watchdog)
     }
 
     /// Attach the folded trace lanes to a finished report, pairing them
@@ -401,9 +440,30 @@ mod tests {
         assert_eq!(c.ingest.buffer_regions, 64);
         let c = ExecConfig::new(2).with_claim(ClaimMode::Cursor);
         assert_eq!(c.claim, ClaimMode::Cursor);
+        let c = ExecConfig::new(2).with_fault(FaultPolicy::retry(3));
+        assert_eq!(c.fault.max_attempts(), 3);
+        let c = ExecConfig::new(2).with_watchdog(Duration::from_secs(5));
+        assert_eq!(c.watchdog, Duration::from_secs(5));
+        assert_eq!(ExecConfig::new(1).fault, FaultPolicy::FailFast, "fail-fast by default");
+        assert_eq!(ExecConfig::new(1).watchdog, DEFAULT_WATCHDOG);
         assert!(ExecConfig::auto().workers >= 1);
         assert!(ExecConfig::auto().validate().is_ok());
         assert!(ExecConfig::new(0).validate().is_err());
+    }
+
+    #[test]
+    fn zero_retry_attempts_and_zero_watchdog_are_named_errors() {
+        let err = ExecConfig::new(1)
+            .with_fault(FaultPolicy::Retry {
+                max_attempts: 0,
+                backoff: Duration::ZERO,
+            })
+            .validate()
+            .unwrap_err();
+        assert!(err.to_string().contains("max_attempts = 0"), "{err}");
+        let err = ExecConfig::new(1).with_watchdog(Duration::ZERO).validate().unwrap_err();
+        assert!(err.to_string().contains("watchdog deadline = 0"), "{err}");
+        assert!(ExecConfig::new(1).with_fault(FaultPolicy::retry(1)).validate().is_ok());
     }
 
     #[test]

@@ -19,11 +19,45 @@
 //! refill as ingest proceeds; for materialized plans every deque is
 //! loaded before the pool starts and `close` is called up front, so a
 //! worker never waits.
+//!
+//! **No wait in this module is unbounded.** Every blocking claim or
+//! drain takes a watchdog deadline and shares a [`Pulse`] — a global
+//! progress heartbeat beaten by pushes, successful claims, completions
+//! and failures. A wait only fails once a full deadline passes with no
+//! beat anywhere in the pool, so a worker idling while a sibling churns
+//! through a heavy shard is not a stall; a lost wake-up or a
+//! never-completing shard turns into a named error instead of a hang.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
 
 use super::ingest::lock_ignore_poison;
+
+/// Global progress heartbeat for the pool's watchdog. Shared (one per
+/// run) between [`StealQueues`] and [`CompletionBuffer`]: any push,
+/// successful claim, completion or failure beats it, and watchdog waits
+/// reset their deadline whenever the count advances — so the watchdog
+/// measures *pool-wide* inactivity, not one worker's idleness.
+#[derive(Debug, Default)]
+pub struct Pulse {
+    beats: AtomicU64,
+}
+
+impl Pulse {
+    /// Record one unit of pool progress.
+    pub fn beat(&self) {
+        self.beats.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Beats so far (watchdog waits compare snapshots of this).
+    pub fn count(&self) -> u64 {
+        self.beats.load(Ordering::Relaxed)
+    }
+}
 
 /// How workers claim shards from the pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -71,6 +105,7 @@ pub struct StealQueues<W> {
     inner: Mutex<QueuesInner<W>>,
     work_cv: Condvar,
     steal: bool,
+    pulse: Arc<Pulse>,
 }
 
 impl<W> StealQueues<W> {
@@ -85,7 +120,23 @@ impl<W> StealQueues<W> {
             }),
             work_cv: Condvar::new(),
             steal,
+            pulse: Arc::new(Pulse::default()),
         }
+    }
+
+    /// The queues' progress heartbeat — hand a clone to the
+    /// [`CompletionBuffer`] (via
+    /// [`CompletionBuffer::with_pulse`]) so completions defer the claim
+    /// watchdog too.
+    pub fn pulse(&self) -> Arc<Pulse> {
+        self.pulse.clone()
+    }
+
+    /// Beat the queues' pulse without touching the deques — the ingest
+    /// driver calls this per region pulled, so a slow (but live) source
+    /// doesn't starve worker claim watchdogs into firing.
+    pub fn beat(&self) {
+        self.pulse.beat();
     }
 
     /// Deal one unit of work to the next deque round-robin and wake the
@@ -99,46 +150,71 @@ impl<W> StealQueues<W> {
         q.next_push = (q.next_push + 1) % q.deques.len();
         q.deques[target].push_back(work);
         drop(q);
+        self.pulse.beat();
         self.work_cv.notify_all();
     }
 
     /// No more work will arrive; wake everyone so idle workers can exit.
     pub fn close(&self) {
         lock_ignore_poison(&self.inner).closed = true;
+        self.pulse.beat();
         self.work_cv.notify_all();
     }
 
     /// Claim work for `worker`: own deque LIFO, then (if enabled) steal
     /// FIFO from the others, scanning round-robin from the next worker.
-    /// Blocks while all deques are empty and the queues are still open.
-    pub fn claim(&self, worker: usize) -> Claim<W> {
+    /// Blocks while all deques are empty and the queues are still open —
+    /// but never unboundedly: once `deadline` passes with no pool
+    /// progress (no [`Pulse`] beat from any push, claim or completion),
+    /// the wait fails with a named watchdog error instead of hanging.
+    pub fn claim(&self, worker: usize, deadline: Duration) -> Result<Claim<W>> {
         let mut q = lock_ignore_poison(&self.inner);
+        let mut seen = self.pulse.count();
+        let mut last_progress = Instant::now();
         loop {
             if let Some(work) = q.deques[worker].pop_back() {
-                return Claim::Task {
+                self.pulse.beat();
+                return Ok(Claim::Task {
                     work,
                     stolen: false,
-                };
+                });
             }
             if self.steal {
                 let n = q.deques.len();
                 for off in 1..n {
                     let victim = (worker + off) % n;
                     if let Some(work) = q.deques[victim].pop_front() {
-                        return Claim::Task {
+                        self.pulse.beat();
+                        return Ok(Claim::Task {
                             work,
                             stolen: true,
-                        };
+                        });
                     }
                 }
             }
             if q.closed {
-                return Claim::Done;
+                return Ok(Claim::Done);
+            }
+            let beats = self.pulse.count();
+            if beats != seen {
+                seen = beats;
+                last_progress = Instant::now();
+            }
+            let remaining = deadline.saturating_sub(last_progress.elapsed());
+            if remaining.is_zero() {
+                let queued: usize = q.deques.iter().map(VecDeque::len).sum();
+                bail!(
+                    "stall watchdog: worker {worker} found no work and saw no pool \
+                     progress for {deadline:?} ({queued} task(s) queued, queues still \
+                     open) — a stuck shard or lost wake-up is holding the pool; raise \
+                     the watchdog deadline if shards legitimately run longer"
+                );
             }
             q = self
                 .work_cv
-                .wait(q)
-                .unwrap_or_else(std::sync::PoisonError::into_inner);
+                .wait_timeout(q, remaining)
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .0;
         }
     }
 
@@ -153,6 +229,7 @@ impl<W> StealQueues<W> {
 pub struct CompletionBuffer<R> {
     inner: Mutex<CompletionInner<R>>,
     done_cv: Condvar,
+    pulse: Arc<Pulse>,
 }
 
 struct CompletionInner<R> {
@@ -174,12 +251,21 @@ impl<R> CompletionBuffer<R> {
                 failure: None,
             }),
             done_cv: Condvar::new(),
+            pulse: Arc::new(Pulse::default()),
         }
+    }
+
+    /// Share a [`Pulse`] with the run's [`StealQueues`], so completions
+    /// and queue activity defer each other's watchdogs.
+    pub fn with_pulse(mut self, pulse: Arc<Pulse>) -> CompletionBuffer<R> {
+        self.pulse = pulse;
+        self
     }
 
     /// Report one finished shard (worker side).
     pub fn push(&self, result: R) {
         lock_ignore_poison(&self.inner).ready.push(result);
+        self.pulse.beat();
         self.done_cv.notify_all();
     }
 
@@ -189,6 +275,7 @@ impl<R> CompletionBuffer<R> {
         let mut c = lock_ignore_poison(&self.inner);
         c.failure.get_or_insert(err);
         drop(c);
+        self.pulse.beat();
         self.done_cv.notify_all();
     }
 
@@ -206,17 +293,41 @@ impl<R> CompletionBuffer<R> {
     }
 
     /// Like [`CompletionBuffer::drain_into`], but blocks until at least
-    /// one result (or a failure) is available.
-    pub fn wait_drain_into(&self, out: &mut Vec<R>) -> Option<anyhow::Error> {
+    /// one result (or a failure) is available — bounded by the watchdog:
+    /// once `deadline` passes with no pool progress (no [`Pulse`] beat),
+    /// returns a named error instead of hanging. The caller (the ingest
+    /// driver) adds the in-flight shard diagnostics it alone knows.
+    pub fn wait_drain_into(
+        &self,
+        out: &mut Vec<R>,
+        deadline: Duration,
+    ) -> Result<Option<anyhow::Error>> {
         let mut c = lock_ignore_poison(&self.inner);
-        while c.ready.is_empty() && c.failure.is_none() {
+        let mut seen = self.pulse.count();
+        let mut last_progress = Instant::now();
+        loop {
+            if !c.ready.is_empty() || c.failure.is_some() {
+                out.append(&mut c.ready);
+                return Ok(c.failure.take());
+            }
+            let beats = self.pulse.count();
+            if beats != seen {
+                seen = beats;
+                last_progress = Instant::now();
+            }
+            let remaining = deadline.saturating_sub(last_progress.elapsed());
+            if remaining.is_zero() {
+                bail!(
+                    "stall watchdog: no shard completed and no worker made progress \
+                     for {deadline:?}"
+                );
+            }
             c = self
                 .done_cv
-                .wait(c)
-                .unwrap_or_else(std::sync::PoisonError::into_inner);
+                .wait_timeout(c, remaining)
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .0;
         }
-        out.append(&mut c.ready);
-        c.failure.take()
     }
 }
 
@@ -224,10 +335,13 @@ impl<R> CompletionBuffer<R> {
 mod tests {
     use super::*;
 
+    /// Generous deadline for tests that must never fire the watchdog.
+    const CALM: Duration = Duration::from_secs(10);
+
     fn drain_claims(q: &StealQueues<u32>, worker: usize) -> Vec<(u32, bool)> {
         let mut got = Vec::new();
         loop {
-            match q.claim(worker) {
+            match q.claim(worker, CALM).expect("watchdog must not fire") {
                 Claim::Task { work, stolen } => got.push((work, stolen)),
                 Claim::Done => return got,
             }
@@ -303,7 +417,7 @@ mod tests {
         assert!(c.drain_into(&mut out).is_none());
         c.push(1);
         c.push(2);
-        assert!(c.wait_drain_into(&mut out).is_none());
+        assert!(c.wait_drain_into(&mut out, CALM).unwrap().is_none());
         assert_eq!(out, vec![1, 2]);
         c.fail(anyhow::anyhow!("boom"));
         c.fail(anyhow::anyhow!("second, ignored"));
@@ -311,5 +425,53 @@ mod tests {
         let err = c.drain_into(&mut out).expect("failure surfaces");
         assert_eq!(err.to_string(), "boom");
         assert!(c.drain_into(&mut out).is_none(), "failure is taken once");
+    }
+
+    #[test]
+    fn starved_claim_fails_with_a_named_watchdog_error() {
+        // open queues, no work, nothing beating the pulse: the claim
+        // must fail after the deadline instead of hanging forever
+        let q: StealQueues<u32> = StealQueues::new(1, true);
+        let err = match q.claim(0, Duration::from_millis(30)) {
+            Err(e) => e,
+            Ok(_) => panic!("there is no work to claim"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("watchdog"), "{msg}");
+        assert!(msg.contains("worker 0"), "{msg}");
+    }
+
+    #[test]
+    fn pool_progress_defers_the_claim_watchdog() {
+        // a sibling beating the shared pulse (as completions do) keeps
+        // resetting the claim deadline: the starved worker outlasts
+        // several deadline windows and still gets the late task
+        let q: StealQueues<u32> = StealQueues::new(1, true);
+        let pulse = q.pulse();
+        std::thread::scope(|s| {
+            let h = s.spawn(|| q.claim(0, Duration::from_millis(60)));
+            for _ in 0..10 {
+                std::thread::sleep(Duration::from_millis(20));
+                pulse.beat();
+            }
+            q.push(7);
+            match h.join().unwrap().expect("progress defers the watchdog") {
+                Claim::Task { work, stolen } => {
+                    assert_eq!((work, stolen), (7, false));
+                }
+                Claim::Done => panic!("queues were never closed"),
+            }
+        });
+    }
+
+    #[test]
+    fn completion_wait_times_out_with_a_named_watchdog_error() {
+        let c: CompletionBuffer<u32> = CompletionBuffer::new();
+        let mut out = Vec::new();
+        let err = c
+            .wait_drain_into(&mut out, Duration::from_millis(30))
+            .expect_err("no completion will ever arrive");
+        assert!(format!("{err:#}").contains("watchdog"), "{err:#}");
+        assert!(out.is_empty());
     }
 }

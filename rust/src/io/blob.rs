@@ -21,6 +21,21 @@
 //! named with file, frame index and cause — propagates out of
 //! `run_stream*`. Direct users can call [`BlobFileSource::try_next`]
 //! instead and see errors immediately.
+//!
+//! ## Salvage
+//!
+//! Under [`CorruptFramePolicy::Skip`] a checksum or element-count
+//! mismatch no longer kills the stream: the frame is dropped and
+//! counted ([`BlobFileSource::skipped`]) and reading resumes at the next
+//! length prefix. Resync is bounded by the length-prefix chain — each
+//! intact prefix says exactly where the next frame starts, so one
+//! flipped payload byte costs exactly one region. A corrupted *prefix*
+//! cannot be resynced from (the chain itself is broken): absurd lengths,
+//! truncation, a bad header and a lying footer stay hard errors under
+//! either policy. The footer cross-check is relaxed to
+//! `footer.regions == read + skipped` so a salvaged file still
+//! reconciles end to end. `regatta rgn verify` drives the same walk via
+//! [`verify_rgn_file`].
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, ErrorKind, Read, Write};
@@ -135,19 +150,56 @@ impl<W: Write> BlobWriter<W> {
 
 /// Materialize `source` into a `.rgn` file at `path` (the `regatta gen`
 /// entry point).
+///
+/// The write is atomic with respect to the final name: bytes land in
+/// `<path>.tmp` and are renamed over `path` only after the footer is
+/// flushed, so a crash or error mid-write can never leave a truncated
+/// container at the published path (the stale `.tmp` is removed on a
+/// best-effort basis).
 pub fn write_rgn_file<S>(path: impl AsRef<Path>, source: S) -> Result<BlobStats>
 where
     S: RegionSource<Region = Blob>,
 {
     let path = path.as_ref();
-    let file = File::create(path)
-        .with_context(|| format!("creating .rgn file {}", path.display()))?;
-    let mut writer = BlobWriter::new(BufWriter::new(file))?;
-    writer
-        .write_source(source)
-        .with_context(|| format!("writing {}", path.display()))?;
-    writer.finish()
+    let tmp = super::tmp_path(path);
+    let result = (|| {
+        let file = File::create(&tmp)
+            .with_context(|| format!("creating .rgn file {}", tmp.display()))?;
+        let mut writer = BlobWriter::new(BufWriter::new(file))?;
+        writer
+            .write_source(source)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        let stats = writer.finish()?;
+        std::fs::rename(&tmp, path).with_context(|| {
+            format!("publishing {} as {}", tmp.display(), path.display())
+        })?;
+        Ok(stats)
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
 }
+
+/// What a reader does with a frame whose checksum (or element count)
+/// does not match its payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CorruptFramePolicy {
+    /// Fail the stream on the first corrupt frame (the default): a named
+    /// error carrying file, frame index and cause.
+    #[default]
+    Fail,
+    /// Skip corrupt frames: drop the frame, count it
+    /// ([`BlobFileSource::skipped`]), resync at the next length prefix
+    /// and keep reading. Structural damage — absurd lengths, truncation,
+    /// a bad header or footer — still fails hard; only payload-level
+    /// corruption inside an intact frame chain is salvageable.
+    Skip,
+}
+
+/// At most this many per-frame skip diagnostics are kept
+/// ([`BlobFileSource::skip_log`]); the count is always exact.
+const SKIP_LOG_CAP: usize = 8;
 
 /// Reader progress.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -179,8 +231,13 @@ pub struct BlobFileSource<R: Read> {
     frame: Vec<u8>,
     /// Recycled element containers (worker-refilled when wired).
     pool: Option<Arc<ContainerPool<f32>>>,
+    policy: CorruptFramePolicy,
     regions: u64,
     items: u64,
+    /// Corrupt frames dropped under [`CorruptFramePolicy::Skip`].
+    skipped: u64,
+    /// First few skip diagnostics (capped at [`SKIP_LOG_CAP`]).
+    skip_log: Vec<String>,
     state: ReadState,
     error: Option<anyhow::Error>,
 }
@@ -231,11 +288,21 @@ impl<R: Read> BlobFileSource<R> {
             label,
             frame: Vec::new(),
             pool: None,
+            policy: CorruptFramePolicy::Fail,
             regions: 0,
             items: 0,
+            skipped: 0,
+            skip_log: Vec::new(),
             state: ReadState::Active,
             error: None,
         })
+    }
+
+    /// Choose what to do with corrupt frames (default:
+    /// [`CorruptFramePolicy::Fail`]).
+    pub fn with_corrupt_policy(mut self, policy: CorruptFramePolicy) -> BlobFileSource<R> {
+        self.policy = policy;
+        self
     }
 
     /// Share an element-container pool: freshly read regions take their
@@ -257,6 +324,18 @@ impl<R: Read> BlobFileSource<R> {
         self.items
     }
 
+    /// Corrupt frames dropped so far (always 0 under
+    /// [`CorruptFramePolicy::Fail`]).
+    pub fn skipped(&self) -> u64 {
+        self.skipped
+    }
+
+    /// Diagnostics for the first [`SKIP_LOG_CAP`] skipped frames;
+    /// [`skipped`](BlobFileSource::skipped) stays exact past the cap.
+    pub fn skip_log(&self) -> &[String] {
+        &self.skip_log
+    }
+
     /// Fallible pull: the next region, `Ok(None)` after a validated
     /// footer, or a named error on truncation/corruption. Unlike
     /// [`RegionSource::next_region`] the failure is returned here
@@ -275,75 +354,111 @@ impl<R: Read> BlobFileSource<R> {
         }
     }
 
+    /// Record a corrupt frame under [`CorruptFramePolicy::Skip`]: count
+    /// it, keep the first few diagnostics, and let the caller resync at
+    /// the next length prefix.
+    fn skip_frame(&mut self, detail: String) {
+        if self.skip_log.len() < SKIP_LOG_CAP {
+            self.skip_log.push(detail);
+        }
+        self.skipped += 1;
+    }
+
     fn read_frame(&mut self) -> Result<Option<Blob>> {
-        let mut len4 = [0u8; 4];
-        if let Err(e) = self.input.read_exact(&mut len4) {
-            if e.kind() == ErrorKind::UnexpectedEof {
-                bail!(
-                    "{}: truncated .rgn container: end of file after {} region(s) \
-                     with no footer (incomplete write?)",
-                    self.label,
-                    self.regions
-                );
+        loop {
+            // frame index for messages: every frame consumed so far,
+            // readable or skipped
+            let index = self.regions + self.skipped;
+            let mut len4 = [0u8; 4];
+            if let Err(e) = self.input.read_exact(&mut len4) {
+                if e.kind() == ErrorKind::UnexpectedEof {
+                    bail!(
+                        "{}: truncated .rgn container: end of file after {} region(s) \
+                         with no footer (incomplete write?)",
+                        self.label,
+                        index
+                    );
+                }
+                return Err(e).with_context(|| format!("{}: reading frame length", self.label));
             }
-            return Err(e).with_context(|| format!("{}: reading frame length", self.label));
+            let len = u32::from_le_bytes(len4);
+            if len == FOOTER_SENTINEL {
+                return self.read_footer().map(|()| None);
+            }
+            // A broken length prefix breaks the resync chain itself, so
+            // this stays a hard error under either corrupt-frame policy.
+            ensure!(
+                (FRAME_HEAD_BYTES as u32..=MAX_FRAME_BYTES).contains(&len),
+                "{}: corrupted frame {}: absurd payload length {len} bytes \
+                 (valid: {FRAME_HEAD_BYTES}..={MAX_FRAME_BYTES})",
+                self.label,
+                index
+            );
+            let mut sum8 = [0u8; 8];
+            self.read_body(&mut sum8, "frame checksum")?;
+            let stored = u64::from_le_bytes(sum8);
+            self.frame.resize(len as usize, 0);
+            let mut frame = std::mem::take(&mut self.frame);
+            let body = self.read_body(&mut frame, "frame payload");
+            self.frame = frame;
+            body?;
+            // From here the full frame body has been consumed, so the
+            // reader sits exactly at the next length prefix: Skip can
+            // drop the frame and continue without losing alignment.
+            let actual = fnv1a64(&self.frame);
+            if actual != stored {
+                let detail = format!(
+                    "{}: corrupted frame {index}: checksum mismatch \
+                     (stored {stored:#018x}, computed {actual:#018x})",
+                    self.label
+                );
+                match self.policy {
+                    CorruptFramePolicy::Fail => bail!(detail),
+                    CorruptFramePolicy::Skip => {
+                        self.skip_frame(detail);
+                        continue;
+                    }
+                }
+            }
+            let id = u64::from_le_bytes(self.frame[..8].try_into().expect("8 bytes"));
+            let count =
+                u32::from_le_bytes(self.frame[8..12].try_into().expect("4 bytes")) as usize;
+            if len as usize != FRAME_HEAD_BYTES + 4 * count {
+                let detail = format!(
+                    "{}: corrupted frame {index}: element count {count} disagrees with \
+                     payload length {len}",
+                    self.label
+                );
+                match self.policy {
+                    CorruptFramePolicy::Fail => bail!(detail),
+                    CorruptFramePolicy::Skip => {
+                        self.skip_frame(detail);
+                        continue;
+                    }
+                }
+            }
+            let mut elems = self
+                .pool
+                .as_ref()
+                .and_then(|p| p.take())
+                .unwrap_or_default();
+            elems.extend(
+                self.frame[FRAME_HEAD_BYTES..]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes"))),
+            );
+            self.regions += 1;
+            self.items += count as u64;
+            return Ok(Some(Blob { id, elems }));
         }
-        let len = u32::from_le_bytes(len4);
-        if len == FOOTER_SENTINEL {
-            return self.read_footer().map(|()| None);
-        }
-        ensure!(
-            (FRAME_HEAD_BYTES as u32..=MAX_FRAME_BYTES).contains(&len),
-            "{}: corrupted frame {}: absurd payload length {len} bytes \
-             (valid: {FRAME_HEAD_BYTES}..={MAX_FRAME_BYTES})",
-            self.label,
-            self.regions
-        );
-        let mut sum8 = [0u8; 8];
-        self.read_body(&mut sum8, "frame checksum")?;
-        let stored = u64::from_le_bytes(sum8);
-        self.frame.resize(len as usize, 0);
-        let mut frame = std::mem::take(&mut self.frame);
-        let body = self.read_body(&mut frame, "frame payload");
-        self.frame = frame;
-        body?;
-        let actual = fnv1a64(&self.frame);
-        ensure!(
-            actual == stored,
-            "{}: corrupted frame {}: checksum mismatch \
-             (stored {stored:#018x}, computed {actual:#018x})",
-            self.label,
-            self.regions
-        );
-        let id = u64::from_le_bytes(self.frame[..8].try_into().expect("8 bytes"));
-        let count = u32::from_le_bytes(self.frame[8..12].try_into().expect("4 bytes")) as usize;
-        ensure!(
-            len as usize == FRAME_HEAD_BYTES + 4 * count,
-            "{}: corrupted frame {}: element count {count} disagrees with \
-             payload length {len}",
-            self.label,
-            self.regions
-        );
-        let mut elems = self
-            .pool
-            .as_ref()
-            .and_then(|p| p.take())
-            .unwrap_or_default();
-        elems.extend(
-            self.frame[FRAME_HEAD_BYTES..]
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes"))),
-        );
-        self.regions += 1;
-        self.items += count as u64;
-        Ok(Some(Blob { id, elems }))
     }
 
     fn read_body(&mut self, buf: &mut [u8], what: &str) -> Result<()> {
         self.input.read_exact(buf).with_context(|| {
             format!(
                 "{}: truncated .rgn container: end of file inside {what} of frame {}",
-                self.label, self.regions
+                self.label,
+                self.regions + self.skipped
             )
         })
     }
@@ -354,16 +469,30 @@ impl<R: Read> BlobFileSource<R> {
         let footer = Footer::decode(&body).with_context(|| {
             format!("{}: corrupted .rgn footer (bad magic or checksum)", self.label)
         })?;
-        ensure!(
-            footer.regions == self.regions && footer.items == self.items,
-            "{}: .rgn footer disagrees with the stream: footer says \
-             {} region(s) / {} item(s), file held {} / {}",
-            self.label,
-            footer.regions,
-            footer.items,
-            self.regions,
-            self.items
-        );
+        if self.skipped == 0 {
+            ensure!(
+                footer.regions == self.regions && footer.items == self.items,
+                "{}: .rgn footer disagrees with the stream: footer says \
+                 {} region(s) / {} item(s), file held {} / {}",
+                self.label,
+                footer.regions,
+                footer.items,
+                self.regions,
+                self.items
+            );
+        } else {
+            // Skipped frames are unreadable, so their item counts are
+            // unknowable — reconcile region counts only.
+            ensure!(
+                footer.regions == self.regions + self.skipped,
+                "{}: .rgn footer disagrees with the stream even counting skipped \
+                 frames: footer says {} region(s), file held {} readable + {} corrupt",
+                self.label,
+                footer.regions,
+                self.regions,
+                self.skipped
+            );
+        }
         // trailing garbage after the footer is also a malformed container
         let mut one = [0u8; 1];
         match self.input.read(&mut one) {
@@ -451,6 +580,88 @@ pub fn read_rgn_file(path: impl AsRef<Path>) -> Result<Vec<Blob>> {
         blobs.push(blob);
     }
     Ok(blobs)
+}
+
+/// What [`verify_rgn_file`] found: readable totals, corrupt-frame count
+/// and the diagnostics behind them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VerifyReport {
+    /// Frames that decoded and checksummed clean.
+    pub regions: u64,
+    /// Elements across the clean frames.
+    pub items: u64,
+    /// Frames whose checksum or element count was wrong.
+    pub corrupt_frames: u64,
+    /// Per-frame diagnostics (first few corrupt frames) plus any
+    /// structural error (truncation, bad footer) that ended the walk.
+    pub errors: Vec<String>,
+}
+
+impl VerifyReport {
+    /// Did the container verify clean end to end?
+    pub fn ok(&self) -> bool {
+        self.corrupt_frames == 0 && self.errors.is_empty()
+    }
+}
+
+/// Walk every frame of a `.rgn` file — checksum each one, then
+/// reconcile the footer against what was actually read — without
+/// materializing the regions. Structural damage (truncation, a lying
+/// footer) is reported in [`VerifyReport::errors`] rather than as an
+/// `Err`, so callers get one unified report; only failure to open or
+/// recognize the container at all returns `Err`. Backs
+/// `regatta rgn verify`.
+pub fn verify_rgn_file(path: impl AsRef<Path>) -> Result<VerifyReport> {
+    let mut source =
+        BlobFileSource::open(path)?.with_corrupt_policy(CorruptFramePolicy::Skip);
+    let mut errors = Vec::new();
+    loop {
+        match source.try_next() {
+            Ok(Some(_)) => {}
+            Ok(None) => break,
+            Err(e) => {
+                errors.push(format!("{e:#}"));
+                break;
+            }
+        }
+    }
+    let mut report = VerifyReport {
+        regions: source.regions_read(),
+        items: source.items_read(),
+        corrupt_frames: source.skipped(),
+        errors: source.skip_log().to_vec(),
+    };
+    report.errors.extend(errors);
+    Ok(report)
+}
+
+/// Flip one payload byte of frame `frame` in an in-memory `.rgn`
+/// container, walking the length-prefix chain to find it — the
+/// fault-injection half of the salvage tests and `bench faults`. The
+/// damage is confined to that frame's payload (its length prefix stays
+/// intact), so a [`CorruptFramePolicy::Skip`] reader loses exactly this
+/// one region.
+pub fn corrupt_frame(bytes: &mut [u8], frame: usize) -> Result<()> {
+    let mut off = HEADER_BYTES;
+    for crossed in 0..=frame {
+        ensure!(
+            off + 4 <= bytes.len(),
+            "container ends before frame {frame} ({crossed} frame(s) present)"
+        );
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().expect("4 bytes"));
+        ensure!(
+            len != FOOTER_SENTINEL,
+            "container holds only {crossed} frame(s); cannot corrupt frame {frame}"
+        );
+        if crossed == frame {
+            let target = off + 4 + 8; // first payload byte (the region id)
+            ensure!(target < bytes.len(), "frame {frame} has no payload byte to flip");
+            bytes[target] ^= 0x01;
+            return Ok(());
+        }
+        off += 4 + 8 + len as usize;
+    }
+    unreachable!("loop returns or errors before falling through");
 }
 
 #[cfg(test)]
@@ -594,6 +805,132 @@ mod tests {
         let err = src.close().unwrap_err();
         assert!(err.to_string().contains("corrupted frame 0"), "{err}");
         assert!(src.close().is_ok(), "error is reported once");
+    }
+
+    #[test]
+    fn skip_policy_salvages_around_a_corrupt_frame() {
+        let blobs = sample_blobs();
+        let mut bytes = encode(&blobs);
+        corrupt_frame(&mut bytes, 1).unwrap();
+        let mut src = BlobFileSource::from_reader(Cursor::new(bytes), "<mem>")
+            .unwrap()
+            .with_corrupt_policy(CorruptFramePolicy::Skip);
+        let mut got = Vec::new();
+        while let Some(b) = src.try_next().unwrap() {
+            got.push(b);
+        }
+        assert_eq!(got, vec![blobs[0].clone(), blobs[2].clone()]);
+        assert_eq!(src.skipped(), 1);
+        assert_eq!(src.skip_log().len(), 1);
+        assert!(src.skip_log()[0].contains("corrupted frame 1"), "{:?}", src.skip_log());
+        assert!(src.skip_log()[0].contains("checksum mismatch"), "{:?}", src.skip_log());
+    }
+
+    #[test]
+    fn skip_policy_survives_every_frame_corrupt() {
+        let blobs = sample_blobs();
+        let mut bytes = encode(&blobs);
+        for f in 0..blobs.len() {
+            corrupt_frame(&mut bytes, f).unwrap();
+        }
+        let mut src = BlobFileSource::from_reader(Cursor::new(bytes), "<mem>")
+            .unwrap()
+            .with_corrupt_policy(CorruptFramePolicy::Skip);
+        assert!(src.try_next().unwrap().is_none(), "nothing salvageable");
+        assert_eq!(src.skipped(), 3);
+        assert_eq!(src.regions_read(), 0);
+    }
+
+    #[test]
+    fn skip_policy_still_fails_on_structural_damage() {
+        // truncation is not salvageable
+        let full = encode(&sample_blobs());
+        let cut = full.len() - (4 + FOOTER_BODY_BYTES) - 10;
+        let mut src = BlobFileSource::from_reader(Cursor::new(full[..cut].to_vec()), "<mem>")
+            .unwrap()
+            .with_corrupt_policy(CorruptFramePolicy::Skip);
+        let err = loop {
+            match src.try_next() {
+                Ok(Some(_)) => {}
+                Ok(None) => panic!("truncated stream must not validate"),
+                Err(e) => break e,
+            }
+        };
+        assert!(err.to_string().contains("truncated"), "hard error: {err}");
+        // a lying footer is caught even with skips in the ledger
+        let full = encode(&sample_blobs());
+        let mut bytes = full[..full.len() - (4 + FOOTER_BODY_BYTES)].to_vec();
+        corrupt_frame(&mut bytes, 0).unwrap();
+        bytes.extend_from_slice(
+            &Footer {
+                regions: 9,
+                items: 103,
+            }
+            .encode(),
+        );
+        let mut src = BlobFileSource::from_reader(Cursor::new(bytes), "<mem>")
+            .unwrap()
+            .with_corrupt_policy(CorruptFramePolicy::Skip);
+        let err = loop {
+            match src.try_next() {
+                Ok(Some(_)) => {}
+                Ok(None) => panic!("lying footer must not validate"),
+                Err(e) => break e,
+            }
+        };
+        assert!(
+            err.to_string().contains("even counting skipped"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn salvaged_footer_reconciles_on_region_count() {
+        // one corrupt frame, honest footer: Skip must finish clean
+        let mut bytes = encode(&sample_blobs());
+        corrupt_frame(&mut bytes, 2).unwrap();
+        let mut src = BlobFileSource::from_reader(Cursor::new(bytes), "<mem>")
+            .unwrap()
+            .with_corrupt_policy(CorruptFramePolicy::Skip);
+        while src.try_next().unwrap().is_some() {}
+        assert_eq!(src.regions_read(), 2);
+        assert_eq!(src.skipped(), 1);
+    }
+
+    #[test]
+    fn corrupt_frame_helper_is_bounded() {
+        let mut bytes = encode(&sample_blobs());
+        assert!(corrupt_frame(&mut bytes, 3).is_err(), "only 3 frames exist");
+        let err = corrupt_frame(&mut bytes, 9).unwrap_err();
+        assert!(err.to_string().contains("cannot corrupt frame 9"), "{err}");
+    }
+
+    #[test]
+    fn write_rgn_file_is_atomic_and_verify_reconciles() {
+        use crate::workload::source::SliceSource;
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("regatta_blob_atomic_{}.rgn", std::process::id()));
+        let tmp = crate::io::tmp_path(&path);
+        let blobs = sample_blobs();
+        let stats = write_rgn_file(&path, SliceSource::new(&blobs)).unwrap();
+        assert_eq!(stats.regions, 3);
+        assert!(path.exists(), "published at the final name");
+        assert!(!tmp.exists(), "no stale .tmp after success");
+        // clean file verifies clean
+        let report = verify_rgn_file(&path).unwrap();
+        assert!(report.ok(), "{report:?}");
+        assert_eq!(report.regions, 3);
+        assert_eq!(report.items, 103);
+        // corrupt one frame on disk: verify names it and counts it
+        let mut bytes = std::fs::read(&path).unwrap();
+        corrupt_frame(&mut bytes, 1).unwrap();
+        std::fs::write(&path, &bytes).unwrap();
+        let report = verify_rgn_file(&path).unwrap();
+        assert!(!report.ok());
+        assert_eq!(report.corrupt_frames, 1);
+        assert_eq!(report.regions, 2);
+        assert!(report.errors[0].contains("corrupted frame 1"), "{report:?}");
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

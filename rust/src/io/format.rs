@@ -26,6 +26,13 @@
 //!   whole stream: hitting EOF before the footer is a *truncation* error,
 //!   and totals that disagree with the frames actually read are a
 //!   *mismatch* error.
+//! * The length-prefix chain doubles as a **salvage skeleton**: because
+//!   each intact `len` says exactly where the next frame begins, a reader
+//!   that finds a bad payload checksum is still positioned correctly to
+//!   continue — [`CorruptFramePolicy::Skip`](super::CorruptFramePolicy)
+//!   drops exactly the damaged frame(s) and reconciles the footer on
+//!   region count. Only damage to the skeleton itself (a corrupted
+//!   length, a missing footer) is unsalvageable by design.
 //!
 //! This module holds the constants and the checksum; the writer/reader
 //! live in [`super::blob`].

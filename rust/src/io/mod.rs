@@ -29,6 +29,14 @@
 //!   fed in stream order by
 //!   [`ShardedRunner::run_stream_into`](crate::exec::ShardedRunner::run_stream_into).
 //!
+//! Every file-producing path here is **atomic at the final name**: bytes
+//! land in a `<path>.tmp` sibling ([`tmp_path`]) and are renamed into
+//! place only after the footer is flushed, so readers never observe a
+//! half-written container. Corruption that slips past that (bit rot, a
+//! foreign writer) is caught per frame by checksum; `regatta rgn verify`
+//! ([`verify_rgn_file`]) audits a container end to end, and readers can
+//! opt into salvage with [`CorruptFramePolicy::Skip`].
+//!
 //! The memory invariant (proved in `rust/tests/io_memory.rs` with the
 //! counting allocator): driver-side allocations while streaming a `.rgn`
 //! file are governed by the ingest budget, not file size — a 100× larger
@@ -45,8 +53,18 @@ pub mod sink;
 pub mod text;
 
 pub use blob::{
-    peek_rgn_footer, read_rgn_file, write_rgn_file, BlobFileSource, BlobStats, BlobWriter,
+    corrupt_frame, peek_rgn_footer, read_rgn_file, verify_rgn_file, write_rgn_file,
+    BlobFileSource, BlobStats, BlobWriter, CorruptFramePolicy, VerifyReport,
 };
 pub use format::Footer;
 pub use sink::{BinRecord, BinarySink, JsonRecord, JsonlSink, ResultSink, SinkStats};
 pub use text::{write_taxi_file, TextSource};
+
+/// The temporary sibling a file-producing path writes before renaming
+/// into place: `<path>.tmp` (extension appended, not replaced, so
+/// `out.rgn` publishes from `out.rgn.tmp`).
+pub fn tmp_path(path: &std::path::Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    std::path::PathBuf::from(os)
+}

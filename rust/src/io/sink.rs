@@ -24,12 +24,18 @@
 //! allocation) and count records/bytes for the [`SinkStats`] returned by
 //! [`ResultSink::finish`].
 //!
+//! File-backed sinks ([`JsonlSink::create`] / [`BinarySink::create`])
+//! publish atomically: records stream into `<path>.tmp`
+//! ([`super::tmp_path`]) and `finish` renames the flushed file into
+//! place — an aborted or faulted run leaves the previous artifact at
+//! `path` untouched instead of a half-written replacement.
+//!
 //! [`ShardedRunner::run_stream_into`]: crate::exec::ShardedRunner::run_stream_into
 //! [`ShardedRunner::run_stream_with`]: crate::exec::ShardedRunner::run_stream_with
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
@@ -134,22 +140,39 @@ impl BinRecord for TaxiPair {
     }
 }
 
+/// Rename a finished `.tmp` sink file over its final name.
+fn publish_sink(publish: &mut Option<(PathBuf, PathBuf)>) -> Result<()> {
+    if let Some((tmp, path)) = publish.take() {
+        std::fs::rename(&tmp, &path).with_context(|| {
+            format!("publishing {} as {}", tmp.display(), path.display())
+        })?;
+    }
+    Ok(())
+}
+
 /// Newline-delimited JSON over any writer.
 pub struct JsonlSink<W: Write> {
     out: W,
     /// Reusable line buffer.
     line: String,
+    /// `(tmp, final)` for file sinks: rename on `finish`.
+    publish: Option<(PathBuf, PathBuf)>,
     records: u64,
     bytes: u64,
 }
 
 impl JsonlSink<BufWriter<File>> {
-    /// Create (truncate) a `.jsonl` file sink.
+    /// Create a `.jsonl` file sink. Records stream into `<path>.tmp`;
+    /// `finish` renames it to `path`, so the final name only ever holds
+    /// a complete, flushed file.
     pub fn create(path: impl AsRef<Path>) -> Result<JsonlSink<BufWriter<File>>> {
         let path = path.as_ref();
-        let file = File::create(path)
-            .with_context(|| format!("creating result file {}", path.display()))?;
-        Ok(JsonlSink::new(BufWriter::new(file)))
+        let tmp = super::tmp_path(path);
+        let file = File::create(&tmp)
+            .with_context(|| format!("creating result file {}", tmp.display()))?;
+        let mut sink = JsonlSink::new(BufWriter::new(file));
+        sink.publish = Some((tmp, path.to_path_buf()));
+        Ok(sink)
     }
 }
 
@@ -158,6 +181,7 @@ impl<W: Write> JsonlSink<W> {
         JsonlSink {
             out,
             line: String::new(),
+            publish: None,
             records: 0,
             bytes: 0,
         }
@@ -186,6 +210,7 @@ impl<W: Write, T: JsonRecord> ResultSink<T> for JsonlSink<W> {
 
     fn finish(&mut self) -> Result<SinkStats> {
         self.out.flush().context("flushing JSONL sink")?;
+        publish_sink(&mut self.publish)?;
         Ok(SinkStats {
             records: self.records,
             bytes: self.bytes,
@@ -207,17 +232,24 @@ pub struct BinarySink<W: Write> {
     out: W,
     buf: Vec<u8>,
     header_written: bool,
+    /// `(tmp, final)` for file sinks: rename on `finish`.
+    publish: Option<(PathBuf, PathBuf)>,
     records: u64,
     bytes: u64,
 }
 
 impl BinarySink<BufWriter<File>> {
-    /// Create (truncate) a binary result file sink.
+    /// Create a binary result file sink. Records stream into
+    /// `<path>.tmp`; `finish` renames it to `path`, so the final name
+    /// only ever holds a complete, flushed file.
     pub fn create(path: impl AsRef<Path>) -> Result<BinarySink<BufWriter<File>>> {
         let path = path.as_ref();
-        let file = File::create(path)
-            .with_context(|| format!("creating result file {}", path.display()))?;
-        Ok(BinarySink::new(BufWriter::new(file)))
+        let tmp = super::tmp_path(path);
+        let file = File::create(&tmp)
+            .with_context(|| format!("creating result file {}", tmp.display()))?;
+        let mut sink = BinarySink::new(BufWriter::new(file));
+        sink.publish = Some((tmp, path.to_path_buf()));
+        Ok(sink)
     }
 }
 
@@ -227,6 +259,7 @@ impl<W: Write> BinarySink<W> {
             out,
             buf: Vec::new(),
             header_written: false,
+            publish: None,
             records: 0,
             bytes: 0,
         }
@@ -271,6 +304,7 @@ impl<W: Write, T: BinRecord> ResultSink<T> for BinarySink<W> {
         // an empty run still gets a well-formed header
         self.write_header(T::RECORD_BYTES)?;
         self.out.flush().context("flushing binary sink")?;
+        publish_sink(&mut self.publish)?;
         Ok(SinkStats {
             records: self.records,
             bytes: self.bytes,
@@ -366,5 +400,24 @@ mod tests {
         let stats = ResultSink::<(u64, f64)>::finish(&mut sink).unwrap();
         assert_eq!(stats.records, 0);
         assert_eq!(sink.out.len(), 16);
+    }
+
+    #[test]
+    fn file_sinks_publish_only_on_finish() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("regatta_sink_atomic_{}.jsonl", std::process::id()));
+        let tmp = crate::io::tmp_path(&path);
+        let _ = std::fs::remove_file(&path);
+        let mut sink = JsonlSink::create(&path).unwrap();
+        sink.write_batch(&[(0u64, 1.5f64)]).unwrap();
+        assert!(tmp.exists(), "records stream into the .tmp sibling");
+        assert!(!path.exists(), "final name untouched before finish");
+        let stats = ResultSink::<(u64, f64)>::finish(&mut sink).unwrap();
+        assert_eq!(stats.records, 1);
+        assert!(path.exists(), "finish renames into place");
+        assert!(!tmp.exists(), "no stale .tmp after publish");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "{\"region\":0,\"sum\":1.5}\n");
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -12,13 +12,15 @@
 //!                   [--input trips.txt] [--output pairs.jsonl|.bin]
 //! regatta gen sum   --out data.rgn  [--items N] [--region-*] [--seed S]
 //! regatta gen taxi  --out trips.txt [--lines N] [--replicate K] [--seed S]
-//! regatta bench <fig6|fig7|fig8|scale|hotpath|ingest|io|penalty|width|lanectx>
+//! regatta rgn verify <data.rgn>     # per-frame checksum + footer audit
+//! regatta bench <fig6|fig7|fig8|scale|hotpath|ingest|io|faults|penalty|width|lanectx>
 //! regatta trace summarize --input out.trace.json [--buckets N]
 //! regatta info      # artifact manifest + platform
 //! regatta --config <file.toml>   # load a [run] config (see configs/)
 //! ```
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -26,10 +28,10 @@ use regatta::apps::sum::{reference_sums, SumApp, SumConfig, SumFactory, SumMode,
 use regatta::apps::taxi::{TaxiApp, TaxiConfig, TaxiFactory, TaxiPair, TaxiVariant};
 use regatta::bench::figures::{self, BackendSel, SweepConfig};
 use regatta::coordinator::enumerate::Blob;
-use regatta::exec::{ContainerPool, ExecConfig, KernelSpawn, ShardedRunner};
+use regatta::exec::{ContainerPool, ExecConfig, FaultPolicy, KernelSpawn, ShardedRunner};
 use regatta::io::{
-    peek_rgn_footer, read_rgn_file, write_rgn_file, write_taxi_file, BinRecord, BinarySink,
-    BlobFileSource, JsonRecord, JsonlSink, ResultSink, TextSource,
+    peek_rgn_footer, read_rgn_file, verify_rgn_file, write_rgn_file, write_taxi_file, BinRecord,
+    BinarySink, BlobFileSource, JsonRecord, JsonlSink, ResultSink, TextSource,
 };
 use regatta::runtime::{ArtifactStore, Engine};
 use regatta::util::cli::Args;
@@ -49,6 +51,8 @@ USAGE:
                     [--policy greedy|deepest|rr]
                     [--workers K] [--shards-per-worker S]
                     [--stream] [--ingest-buffer R] [--stats] [--verify]
+                    [--fault-policy fail-fast|retry|quarantine] [--fault-retries N]
+                    [--watchdog-secs S]
                     [--input data.rgn] [--output results.jsonl|.bin]
                     [--trace out.trace.json]
   regatta run taxi  [--lines N] [--replicate K] [--variant enum|hybrid|tagged]
@@ -56,11 +60,14 @@ USAGE:
                     [--policy greedy|deepest|rr]
                     [--workers K] [--shards-per-worker S]
                     [--stream] [--ingest-buffer R] [--stats]
+                    [--fault-policy fail-fast|retry|quarantine] [--fault-retries N]
+                    [--watchdog-secs S]
                     [--input trips.txt] [--output pairs.jsonl|.bin]
                     [--trace out.trace.json]
   regatta gen sum   --out data.rgn  [--items N] [--region-size N | --region-max N |
                     --region-skew N] [--seed S]
   regatta gen taxi  --out trips.txt [--lines N] [--replicate K] [--seed S]
+  regatta rgn verify <data.rgn>
   regatta bench <fig6|fig7|fig8|scale|penalty|width|lanectx>
                     [--items N] [--width W] [--backend xla|native]
                     [--workers K1,K2,...] [--json FILE]
@@ -71,6 +78,8 @@ USAGE:
                     [--ingest-buffer R] [--json FILE]
   regatta bench io      [--smoke] [--items N] [--width W] [--workers K]
                     [--buffers R1,R2,...] [--json FILE]
+  regatta bench faults  [--smoke] [--items N] [--width W] [--workers K]
+                    [--fault-rate P] [--json FILE]
   regatta trace summarize --input out.trace.json [--buckets N]
   regatta info
   regatta --config <file.toml>
@@ -92,7 +101,16 @@ USAGE:
   else JSONL); either flag implies --stream. For sum, input + output
   memory is bounded by --ingest-buffer, not by file size; for taxi the
   raw text stays resident (it models the shared device buffer) but the
-  line index and results are budget-bound.
+  line index and results are budget-bound. Output files are written to
+  <path>.tmp and renamed into place only when complete.
+
+  --fault-policy picks what a worker does when a shard panics or errors:
+  fail-fast (default) aborts the run naming worker and shard; retry
+  rebuilds the worker's pipeline and re-runs the shard up to
+  --fault-retries times (outputs stay bit-identical to a fault-free
+  run); quarantine records the shard in the report and keeps going.
+  --watchdog-secs bounds how long the pool waits without any progress
+  before failing with a stall diagnosis instead of hanging.
 ";
 
 fn main() {
@@ -115,6 +133,7 @@ fn real_main() -> Result<()> {
             other => bail!("unknown app {other:?} (use sum|taxi)"),
         },
         Some("gen") => run_gen(&args),
+        Some("rgn") => run_rgn(&args),
         Some("bench") => run_bench(&args),
         Some("trace") => run_trace(&args),
         Some("info") => info(),
@@ -138,7 +157,8 @@ fn config_to_args(path: &str) -> Result<Args> {
     for key in [
         "items", "region-size", "region-max", "region-skew", "mode", "shape", "width",
         "backend", "threshold", "workers", "shards-per-worker", "ingest-buffer", "lines",
-        "replicate", "variant", "policy", "input", "output", "trace",
+        "replicate", "variant", "policy", "input", "output", "trace", "fault-policy",
+        "fault-retries", "watchdog-secs",
     ] {
         if let Some(v) = cfg.get("run", &key.replace('-', "_")) {
             let vs = match v {
@@ -168,10 +188,22 @@ fn policy(args: &Args) -> Result<regatta::prelude::Policy> {
     args.str_or("policy", "greedy").parse()
 }
 
+/// `--fault-policy` / `--fault-retries` into a [`FaultPolicy`].
+fn fault_policy(args: &Args) -> Result<FaultPolicy> {
+    Ok(match args.str_or("fault-policy", "fail-fast").as_str() {
+        "fail-fast" => FaultPolicy::FailFast,
+        "retry" => FaultPolicy::retry(args.get_or("fault-retries", 3)?),
+        "quarantine" => FaultPolicy::Quarantine,
+        other => bail!("unknown fault policy {other:?} (use fail-fast|retry|quarantine)"),
+    })
+}
+
 fn exec_config(args: &Args, workers: usize) -> Result<ExecConfig> {
     let cfg = ExecConfig::new(workers)
         .with_shards_per_worker(args.get_or("shards-per-worker", 1)?)
         .streaming(args.get_or("ingest-buffer", 1024)?)
+        .with_fault(fault_policy(args)?)
+        .with_watchdog(Duration::from_secs(args.get_or("watchdog-secs", 60)?))
         .with_trace(
             args.opt("trace")
                 .map(|_| regatta::trace::TraceOptions::default()),
@@ -244,16 +276,27 @@ where
     })
 }
 
-/// Refuse `--output` aliasing `--input`: creating the sink truncates the
-/// output file, which would destroy the input mid-read.
+/// Refuse `--output` aliasing `--input`: the sink streams into the
+/// output's `.tmp` sibling and renames over the output on finish, so
+/// both the final path and its `.tmp` staging path must stay clear of
+/// the input.
 fn ensure_distinct_io(input: &str, output: &str) -> Result<()> {
-    let resolve = |p: &str| {
-        std::fs::canonicalize(p).unwrap_or_else(|_| std::path::PathBuf::from(p))
+    let resolve = |p: &std::path::Path| {
+        std::fs::canonicalize(p).unwrap_or_else(|_| p.to_path_buf())
     };
+    let input_path = resolve(std::path::Path::new(input));
+    let output_path = std::path::Path::new(output);
     anyhow::ensure!(
-        resolve(input) != resolve(output),
+        input_path != resolve(output_path),
         "--output {output} is the same file as --input {input}: refusing to \
-         truncate the input while reading it"
+         overwrite the input while reading it"
+    );
+    let tmp = regatta::io::tmp_path(output_path);
+    anyhow::ensure!(
+        input_path != resolve(&tmp),
+        "--output {output} stages through {}, which is the same file as \
+         --input {input}: refusing to truncate the input while reading it",
+        tmp.display()
     );
     Ok(())
 }
@@ -265,6 +308,10 @@ fn print_exec_stats<T>(report: &regatta::exec::ExecReport<T>) {
         100.0 * report.utilization()
     );
     print!("{}", report.worker_table());
+    let faults = report.fault_table();
+    if !faults.is_empty() {
+        print!("quarantined shards:\n{faults}");
+    }
 }
 
 fn run_sum(args: &Args) -> Result<()> {
@@ -380,7 +427,10 @@ fn run_sum(args: &Args) -> Result<()> {
         }
         let outputs = regatta::apps::sum::finish_sharded_outputs(mode, report.outputs);
         (outputs, report.metrics, report.elapsed)
-    } else if workers <= 1 && trace_path.is_none() {
+    } else if workers <= 1
+        && trace_path.is_none()
+        && matches!(fault_policy(args)?, FaultPolicy::FailFast)
+    {
         let p = figures::provider(sel, width)?;
         let app = SumApp::new(cfg, p.kernels);
         let report = app.run(&blobs)?;
@@ -513,7 +563,10 @@ fn run_taxi(args: &Args) -> Result<()> {
             print_exec_stats(&report);
         }
         (report.outputs, report.metrics, report.elapsed)
-    } else if workers <= 1 && trace_path.is_none() {
+    } else if workers <= 1
+        && trace_path.is_none()
+        && matches!(fault_policy(args)?, FaultPolicy::FailFast)
+    {
         let p = figures::provider(sel, width)?;
         let report = TaxiApp::new(cfg, p.kernels).run(&w)?;
         (report.pairs, report.metrics, report.elapsed)
@@ -653,9 +706,49 @@ fn run_gen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `regatta rgn verify <file>`: audit a `.rgn` container — per-frame
+/// checksums plus footer reconciliation — and exit nonzero if anything
+/// is corrupt.
+fn run_rgn(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("verify") => {
+            let path = args
+                .positional
+                .get(2)
+                .map(String::as_str)
+                .or_else(|| args.opt("input"))
+                .context("rgn verify needs a file: `regatta rgn verify data.rgn`")?;
+            let report = verify_rgn_file(path)?;
+            println!(
+                "{path}: {} readable region(s), {} item(s), {} corrupt frame(s)",
+                report.regions, report.items, report.corrupt_frames
+            );
+            for e in &report.errors {
+                println!("  {e}");
+            }
+            if report.corrupt_frames > report.errors.len() as u64 {
+                println!(
+                    "  ... diagnostics capped; {} corrupt frame(s) total",
+                    report.corrupt_frames
+                );
+            }
+            anyhow::ensure!(
+                report.ok(),
+                "{path} failed verification: {} corrupt frame(s), {} error(s)",
+                report.corrupt_frames,
+                report.errors.len()
+            );
+            println!("verify: OK");
+            Ok(())
+        }
+        other => bail!("unknown rgn action {other:?} (use verify)"),
+    }
+}
+
 fn run_bench(args: &Args) -> Result<()> {
     let which = args.positional.get(1).context(
-        "bench target required: fig6|fig7|fig8|scale|hotpath|ingest|io|penalty|width|lanectx",
+        "bench target required: \
+         fig6|fig7|fig8|scale|hotpath|ingest|io|faults|penalty|width|lanectx",
     )?;
     if which == "hotpath" {
         return run_bench_hotpath(args);
@@ -665,6 +758,9 @@ fn run_bench(args: &Args) -> Result<()> {
     }
     if which == "io" {
         return run_bench_io(args);
+    }
+    if which == "faults" {
+        return run_bench_faults(args);
     }
     let mut cfg = SweepConfig {
         backend: backend(args)?,
@@ -788,6 +884,31 @@ fn run_bench_io(args: &Args) -> Result<()> {
     println!("wrote {path}");
     if let Some(r) = io_bench::file_vs_mem_ratio(&report) {
         println!("file-backed vs lazy-generator ingest throughput at max budget: {r:.2}x");
+    }
+    Ok(())
+}
+
+/// `bench faults`: seeded fault-injection harness — retry determinism,
+/// quarantine accounting, corrupt-frame salvage and watchdog overhead,
+/// with a JSON artifact (see `rust/src/bench/faults.rs`).
+fn run_bench_faults(args: &Args) -> Result<()> {
+    use regatta::bench::faults;
+    let mut cfg = if args.flag("smoke") {
+        faults::FaultsConfig::smoke()
+    } else {
+        faults::FaultsConfig::default()
+    };
+    cfg.width = args.get_or("width", cfg.width)?;
+    cfg.items = args.get_or("items", cfg.items)?;
+    cfg.workers = args.get_or("workers", cfg.workers)?;
+    cfg.fault_rate = args.get_or("fault-rate", cfg.fault_rate)?;
+    cfg.seed = args.get_or("seed", cfg.seed)?;
+    let report = faults::run(&cfg)?;
+    let path = args.str_or("json", "BENCH_faults.json");
+    std::fs::write(&path, faults::to_json(&report)).with_context(|| format!("writing {path}"))?;
+    println!("wrote {path}");
+    if let Some(overhead) = faults::retry_overhead(&report) {
+        println!("retry-policy run vs fault-free baseline: {overhead:.2}x elapsed");
     }
     Ok(())
 }

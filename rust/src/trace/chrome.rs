@@ -155,6 +155,20 @@ pub fn to_chrome_json(trace: &Trace) -> String {
                          \"tid\":{tid},\"ts\":{ts:.3},\"args\":{{\"regions\":{in_flight}}}}}"
                     ));
                 }
+                TraceEvent::Fault { shard, attempt } => {
+                    ev.push(format!(
+                        "{{\"name\":\"fault {shard}\",\"cat\":\"fault\",\"ph\":\"X\",\
+                         \"pid\":1,\"tid\":{tid},\"ts\":{ts:.3},\"dur\":{dur:.3},\
+                         \"args\":{{\"shard\":{shard},\"attempt\":{attempt}}}}}"
+                    ));
+                }
+                TraceEvent::Retry { shard, attempt } => {
+                    ev.push(format!(
+                        "{{\"name\":\"retry {shard}\",\"cat\":\"fault\",\"ph\":\"X\",\
+                         \"pid\":1,\"tid\":{tid},\"ts\":{ts:.3},\"dur\":{dur:.3},\
+                         \"args\":{{\"shard\":{shard},\"attempt\":{attempt}}}}}"
+                    ));
+                }
             }
         }
     }
@@ -172,6 +186,7 @@ pub fn to_chrome_json(trace: &Trace) -> String {
     out.push_str(&format!(
         "\"firings\":{},\"ensembles\":{},\"items\":{},\"shards\":{},\
          \"stolen\":{},\"submits\":{},\"emits\":{},\"stalls\":{},\
+         \"faults\":{},\"retries\":{},\
          \"events\":{},\"dropped\":{},\"lanes\":{},\"nodes\":[{}]",
         trace.firings(),
         trace.ensembles(),
@@ -181,6 +196,8 @@ pub fn to_chrome_json(trace: &Trace) -> String {
         trace.submits(),
         trace.emits(),
         trace.stalls(),
+        trace.faults(),
+        trace.retries(),
         trace.events(),
         trace.dropped(),
         trace.workers.len(),
@@ -226,6 +243,8 @@ mod tests {
                                 stolen: true,
                             },
                         ),
+                        rec(3_100, 3_200, TraceEvent::Fault { shard: 1, attempt: 1 }),
+                        rec(3_200, 3_300, TraceEvent::Retry { shard: 1, attempt: 2 }),
                     ],
                     dropped: 0,
                 },
@@ -274,6 +293,8 @@ mod tests {
         assert_eq!(meta.get("items").unwrap().as_usize(), Some(12));
         assert_eq!(meta.get("shards").unwrap().as_usize(), Some(1));
         assert_eq!(meta.get("stolen").unwrap().as_usize(), Some(1));
+        assert_eq!(meta.get("faults").unwrap().as_usize(), Some(1));
+        assert_eq!(meta.get("retries").unwrap().as_usize(), Some(1));
         assert_eq!(meta.get("dropped").unwrap().as_usize(), Some(2));
         let nodes = meta.get("nodes").unwrap().as_arr().unwrap();
         assert_eq!(nodes.len(), 2);
@@ -296,6 +317,14 @@ mod tests {
         assert_eq!(named("occupancy w0"), 1);
         assert_eq!(named("in-flight regions"), 2, "one per submit/emit");
         assert_eq!(named("fire sum"), 1);
+        assert_eq!(named("fault 1"), 1);
+        assert_eq!(named("retry 1"), 1);
+        // fault spans land on the failing worker's own track
+        let fault = events
+            .iter()
+            .find(|e| e.get("cat").and_then(Json::as_str) == Some("fault"))
+            .unwrap();
+        assert_eq!(fault.get("tid").unwrap().as_usize(), Some(1));
         // the shard span is on worker 0's track (tid 1), stolen tagged
         let shard = events
             .iter()

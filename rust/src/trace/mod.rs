@@ -129,6 +129,13 @@ pub enum TraceEvent {
     Stall { in_flight: u32 },
     /// Driver: shard released in stream order by the merge ring.
     Emit { shard: u32, regions: u32 },
+    /// A shard attempt failed (panic or error) on this lane's worker.
+    /// `attempt` is 1-based; the span covers the failed execution.
+    Fault { shard: u32, attempt: u32 },
+    /// Recovery span: the worker rebuilt its pipeline and is about to
+    /// re-run the shard as attempt `attempt` (2-based: the first retry
+    /// is attempt 2).
+    Retry { shard: u32, attempt: u32 },
 }
 
 /// A stamped event: `[t0_ns, t1_ns]` nanoseconds since the shared
@@ -337,6 +344,19 @@ impl Trace {
     pub fn stalls(&self) -> u64 {
         self.fold(|e| matches!(e, TraceEvent::Stall { .. }) as u64)
     }
+
+    /// Failed shard attempts (panics or errors caught by the pool).
+    pub fn faults(&self) -> u64 {
+        self.fold(|e| matches!(e, TraceEvent::Fault { .. }) as u64)
+    }
+
+    /// Recovery spans: pipeline rebuilds that preceded a re-run. With
+    /// zero drops this equals the report's `retries` total
+    /// ([`ExecReport`](crate::exec::ExecReport)) on a run that
+    /// recovered every fault.
+    pub fn retries(&self) -> u64 {
+        self.fold(|e| matches!(e, TraceEvent::Retry { .. }) as u64)
+    }
 }
 
 #[cfg(test)]
@@ -458,6 +478,19 @@ mod tests {
                     dropped: 1,
                 },
                 WorkerTrace {
+                    worker: 1,
+                    records: vec![
+                        rec(TraceEvent::Fault { shard: 2, attempt: 1 }),
+                        rec(TraceEvent::Retry { shard: 2, attempt: 2 }),
+                        rec(TraceEvent::Shard {
+                            shard: 2,
+                            regions: 3,
+                            stolen: true,
+                        }),
+                    ],
+                    dropped: 0,
+                },
+                WorkerTrace {
                     worker: DRIVER_LANE,
                     records: vec![
                         rec(TraceEvent::Submit {
@@ -475,15 +508,17 @@ mod tests {
             ],
             nodes: vec![("enum".into(), 8), ("sum".into(), 8)],
         };
-        assert_eq!(trace.events(), 6);
+        assert_eq!(trace.events(), 9);
         assert_eq!(trace.dropped(), 1);
         assert_eq!(trace.firings(), 2);
         assert_eq!(trace.ensembles(), 2);
         assert_eq!(trace.items(), 13);
-        assert_eq!(trace.shards(), 1);
-        assert_eq!(trace.stolen_shards(), 0);
+        assert_eq!(trace.shards(), 2);
+        assert_eq!(trace.stolen_shards(), 1);
         assert_eq!(trace.submits(), 1);
         assert_eq!(trace.emits(), 1);
         assert_eq!(trace.stalls(), 1);
+        assert_eq!(trace.faults(), 1);
+        assert_eq!(trace.retries(), 1);
     }
 }

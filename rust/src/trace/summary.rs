@@ -80,6 +80,9 @@ pub fn summarize(text: &str, buckets: usize) -> Result<String> {
     let mut prewarm_us = 0.0f64;
     let mut submits = 0usize;
     let mut emits = 0usize;
+    let mut fault_count = 0usize;
+    let mut retry_count = 0usize;
+    let mut retry_us = 0.0f64;
     let mut span_lo = f64::INFINITY;
     let mut span_hi = f64::NEG_INFINITY;
     for e in events {
@@ -117,6 +120,17 @@ pub fn summarize(text: &str, buckets: usize) -> Result<String> {
                 }
             }
             "merge" => emits += 1,
+            "fault" => {
+                if e.get("name")
+                    .and_then(Json::as_str)
+                    .is_some_and(|n| n.starts_with("retry"))
+                {
+                    retry_count += 1;
+                    retry_us += dur;
+                } else {
+                    fault_count += 1;
+                }
+            }
             "prewarm" => {
                 prewarm_count += 1;
                 prewarm_us += dur;
@@ -230,6 +244,13 @@ pub fn summarize(text: &str, buckets: usize) -> Result<String> {
         stall_us / 1000.0
     ));
     out.push_str(&format!("ingest submits {submits}, merge emits {emits}\n"));
+    if fault_count > 0 || retry_count > 0 {
+        out.push_str(&format!(
+            "faults: {fault_count} shard attempt(s) failed, {retry_count} retried \
+             ({:.3} ms rebuilding)\n",
+            retry_us / 1000.0
+        ));
+    }
     out.push_str(&format!("dropped events: {dropped}\n"));
     Ok(out)
 }
@@ -345,6 +366,31 @@ mod tests {
         let shard1_at = report[straggler_at..].find("\n1 ").map(|i| i + straggler_at);
         let (s0, s1) = (shard0_at.unwrap(), shard1_at.unwrap());
         assert!(s0 < s1, "longest shard (0, 9ms) must rank above shard 1 (2ms)");
+    }
+
+    #[test]
+    fn fault_line_appears_only_when_faults_happened() {
+        // fault-free: no recovery line
+        let clean = summarize(&to_chrome_json(&sample_trace()), 2).unwrap();
+        assert!(!clean.contains("faults:"), "{clean}");
+
+        let mut trace = sample_trace();
+        trace.workers[1].records.push(TraceRecord {
+            t0_ns: 6_000,
+            t1_ns: 6_100,
+            event: TraceEvent::Fault { shard: 1, attempt: 1 },
+        });
+        trace.workers[1].records.push(TraceRecord {
+            t0_ns: 6_100,
+            t1_ns: 7_100,
+            event: TraceEvent::Retry { shard: 1, attempt: 2 },
+        });
+        let report = summarize(&to_chrome_json(&trace), 2).unwrap();
+        assert!(
+            report.contains("faults: 1 shard attempt(s) failed, 1 retried"),
+            "{report}"
+        );
+        assert!(report.contains("(0.001 ms rebuilding)"), "{report}");
     }
 
     #[test]

@@ -1,0 +1,430 @@
+//! Fault-injection matrix: every recovery path of the sharded executor,
+//! exercised deterministically (see `regatta::exec::fault`).
+//!
+//! The claims under test, from the fault-tolerance contract:
+//!
+//! 1. **Retry determinism** — with [`FaultPolicy::Retry`], a run whose
+//!    shards are injected with panics/errors (a panic at *every* shard
+//!    index, alternating panic/error) produces output **bit-identical**
+//!    to the fault-free run, for workers 1–8, materialized and streamed,
+//!    sum and taxi — and the report's retry/rebuild counts reconcile
+//!    with the injected plan exactly.
+//! 2. **Quarantine containment** — a poisoned shard is dropped, named in
+//!    [`ExecReport::faults`], and costs exactly its own output slot: the
+//!    surviving output is the fault-free output with one contiguous
+//!    block removed, still in stream order.
+//! 3. **Fail-fast attribution** — the default policy aborts with an
+//!    error naming the worker and the shard in flight.
+//! 4. **Watchdog** — a never-completing shard turns into a named stall
+//!    diagnostic (which shards are in flight) instead of a hang.
+//! 5. **Salvage** — a byte-flipped `.rgn` container read under
+//!    [`CorruptFramePolicy::Skip`] yields every uncorrupted frame
+//!    bit-identically, through the executor end to end, and
+//!    [`verify_rgn_file`] reports exactly the corrupted frames.
+//!
+//! [`FaultPolicy::Retry`]: regatta::exec::FaultPolicy
+//! [`ExecReport::faults`]: regatta::exec::ExecReport
+//! [`CorruptFramePolicy::Skip`]: regatta::io::CorruptFramePolicy
+//! [`verify_rgn_file`]: regatta::io::verify_rgn_file
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use regatta::apps::sum::{finish_sharded_outputs, SumConfig, SumFactory, SumMode, SumShape};
+use regatta::apps::taxi::{TaxiConfig, TaxiFactory, TaxiPair, TaxiVariant};
+use regatta::coordinator::metrics::PipelineMetrics;
+use regatta::exec::{
+    ExecConfig, ExecReport, FaultKind, FaultPlan, FaultPolicy, FaultShot, FaultyFactory,
+    KernelSpawn, PipelineFactory, ShardOutput, ShardWorker, ShardedRunner,
+};
+use regatta::io::{corrupt_frame, verify_rgn_file, write_rgn_file, BlobFileSource,
+    CorruptFramePolicy};
+use regatta::prelude::Policy;
+use regatta::trace::TraceOptions;
+use regatta::workload::regions::{gen_blobs, RegionSpec};
+use regatta::workload::source::SliceSource;
+use regatta::workload::taxi::{generate, TaxiGenConfig, TaxiWorkload};
+
+const WIDTH: usize = 8;
+
+fn sum_factory() -> SumFactory {
+    SumFactory::new(
+        SumConfig {
+            width: WIDTH,
+            mode: SumMode::Enumerated,
+            shape: SumShape::Fused,
+            data_cap: 256,
+            signal_cap: 64,
+            ..Default::default()
+        },
+        KernelSpawn::Native,
+    )
+}
+
+fn taxi_workload() -> TaxiWorkload {
+    generate(
+        48,
+        TaxiGenConfig {
+            avg_pairs: 5,
+            avg_line_len: 120,
+        },
+        29,
+    )
+}
+
+fn taxi_factory(w: &TaxiWorkload) -> TaxiFactory {
+    TaxiFactory::new(
+        TaxiConfig {
+            width: WIDTH,
+            variant: TaxiVariant::Enumerated,
+            data_cap: 512,
+            signal_cap: 128,
+            policy: Policy::GreedyOccupancy,
+        },
+        KernelSpawn::Native,
+        w.text.clone(),
+    )
+}
+
+fn exec(workers: usize) -> ExecConfig {
+    ExecConfig::new(workers).with_shards_per_worker(2).streaming(24)
+}
+
+/// A plan that poisons every shard index once, alternating panic/error
+/// so both failure manifestations cross the `catch_unwind` guard.
+fn poison_every_shard(shards: usize) -> FaultPlan {
+    let mut plan = FaultPlan::new();
+    for shard in 0..shards {
+        plan = plan.with_shot(FaultShot {
+            shard,
+            worker: None,
+            kind: if shard % 2 == 0 {
+                FaultKind::Panic
+            } else {
+                FaultKind::Error
+            },
+            times: 1,
+        });
+    }
+    plan
+}
+
+fn assert_sums_bitwise(got: &[(u64, f64)], want: &[(u64, f64)], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: output count");
+    for (i, ((gi, gv), (wi, wv))) in got.iter().zip(want).enumerate() {
+        assert_eq!(gi, wi, "{ctx}: region id at {i}");
+        assert_eq!(gv.to_bits(), wv.to_bits(), "{ctx}: region {gi}: {gv} vs {wv}");
+    }
+}
+
+fn assert_pairs_bitwise(got: &[TaxiPair], want: &[TaxiPair], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: output count");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.tag, w.tag, "{ctx}: pair {i}");
+        assert_eq!(g.x.to_bits(), w.x.to_bits(), "{ctx}: pair {i} x");
+        assert_eq!(g.y.to_bits(), w.y.to_bits(), "{ctx}: pair {i} y");
+    }
+}
+
+/// Retry/rebuild accounting must reconcile with the plan exactly: one
+/// retry per injected shot, one rebuild per retry (so the build count is
+/// the claiming workers plus the rebuilds), nothing quarantined.
+fn assert_recovery_accounting<T>(report: &ExecReport<T>, injected: usize, ctx: &str) {
+    assert_eq!(report.retries, injected as u64, "{ctx}: retries == injected shots");
+    assert!(report.faults.is_empty(), "{ctx}: a recovered run quarantines nothing");
+    assert_eq!(
+        report.pipelines_built,
+        report.per_worker.len() as u64 + report.retries,
+        "{ctx}: one build per claiming worker plus one per rebuild-and-rerun"
+    );
+    let per_worker: u64 = report.per_worker.iter().map(|w| w.retries).sum();
+    assert_eq!(per_worker, report.retries, "{ctx}: per-worker retries sum to the total");
+}
+
+#[test]
+fn sum_retry_is_bit_identical_with_every_shard_poisoned() {
+    let blobs = gen_blobs(600, RegionSpec::Uniform { max: 16 }, 11);
+    let factory = sum_factory();
+    for workers in 1..=8 {
+        for streamed in [false, true] {
+            let ctx = format!(
+                "sum workers {workers} {}",
+                if streamed { "streamed" } else { "materialized" }
+            );
+            let runner = ShardedRunner::new(exec(workers));
+            let clean = if streamed {
+                runner.run_stream(&factory, SliceSource::new(&blobs)).unwrap()
+            } else {
+                runner.run(&factory, &blobs).unwrap()
+            };
+            assert_eq!(clean.retries, 0, "{ctx}: fault-free baseline");
+            let plan = poison_every_shard(clean.shards);
+            let faulty = FaultyFactory::new(sum_factory(), &plan);
+            let retry_runner = ShardedRunner::new(exec(workers).with_fault(FaultPolicy::retry(3)));
+            let report = if streamed {
+                retry_runner.run_stream(&faulty, SliceSource::new(&blobs)).unwrap()
+            } else {
+                retry_runner.run(&faulty, &blobs).unwrap()
+            };
+            assert_eq!(faulty.remaining(), 0, "{ctx}: every planned shot fired");
+            assert_eq!(report.shards, clean.shards, "{ctx}: same shard cuts");
+            assert_recovery_accounting(&report, plan.injected(), &ctx);
+            let got = finish_sharded_outputs(SumMode::Enumerated, report.outputs);
+            let want = finish_sharded_outputs(SumMode::Enumerated, clean.outputs);
+            assert_sums_bitwise(&got, &want, &ctx);
+        }
+    }
+}
+
+#[test]
+fn taxi_retry_is_bit_identical_with_every_shard_poisoned() {
+    let w = taxi_workload();
+    let factory = taxi_factory(&w);
+    for workers in 1..=8 {
+        for streamed in [false, true] {
+            let ctx = format!(
+                "taxi workers {workers} {}",
+                if streamed { "streamed" } else { "materialized" }
+            );
+            let runner = ShardedRunner::new(exec(workers));
+            let clean = if streamed {
+                runner.run_stream(&factory, SliceSource::new(&w.lines)).unwrap()
+            } else {
+                runner.run(&factory, &w.lines).unwrap()
+            };
+            let plan = poison_every_shard(clean.shards);
+            let faulty = FaultyFactory::new(taxi_factory(&w), &plan);
+            let retry_runner = ShardedRunner::new(exec(workers).with_fault(FaultPolicy::retry(3)));
+            let report = if streamed {
+                retry_runner.run_stream(&faulty, SliceSource::new(&w.lines)).unwrap()
+            } else {
+                retry_runner.run(&faulty, &w.lines).unwrap()
+            };
+            assert_eq!(faulty.remaining(), 0, "{ctx}: every planned shot fired");
+            assert_recovery_accounting(&report, plan.injected(), &ctx);
+            assert_pairs_bitwise(&report.outputs, &clean.outputs, &ctx);
+        }
+    }
+}
+
+#[test]
+fn single_shard_injection_sweep_recovers_each_index_in_isolation() {
+    // one shot at a time: shard k alone fails (panic or error by
+    // parity), recovery touches nothing else, and the report counts
+    // exactly that one retry
+    let blobs = gen_blobs(400, RegionSpec::Uniform { max: 20 }, 17);
+    let factory = sum_factory();
+    let runner = ShardedRunner::new(exec(3));
+    let clean = runner.run(&factory, &blobs).unwrap();
+    let want = finish_sharded_outputs(SumMode::Enumerated, clean.outputs);
+    for shard in 0..clean.shards {
+        let plan = if shard % 2 == 0 {
+            FaultPlan::new().panic_at(shard)
+        } else {
+            FaultPlan::new().error_at(shard)
+        };
+        let faulty = FaultyFactory::new(sum_factory(), &plan);
+        let retry_runner = ShardedRunner::new(exec(3).with_fault(FaultPolicy::retry(2)));
+        let report = retry_runner.run(&faulty, &blobs).unwrap();
+        let ctx = format!("shard {shard} poisoned");
+        assert_eq!(report.retries, 1, "{ctx}: exactly one retry");
+        assert_eq!(faulty.remaining(), 0, "{ctx}");
+        let got = finish_sharded_outputs(SumMode::Enumerated, report.outputs);
+        assert_sums_bitwise(&got, &want, &ctx);
+    }
+}
+
+#[test]
+fn traced_retry_run_reconciles_trace_with_report() {
+    let blobs = gen_blobs(500, RegionSpec::Uniform { max: 12 }, 23);
+    let clean = ShardedRunner::new(exec(3)).run(&sum_factory(), &blobs).unwrap();
+    let plan = poison_every_shard(clean.shards);
+    let faulty = FaultyFactory::new(sum_factory(), &plan);
+    let runner = ShardedRunner::new(
+        exec(3)
+            .with_fault(FaultPolicy::retry(3))
+            .with_trace(Some(TraceOptions::default())),
+    );
+    let report = runner.run(&faulty, &blobs).unwrap();
+    let trace = report.trace.as_ref().expect("trace attached when configured");
+    assert_eq!(trace.faults(), plan.injected() as u64, "one Fault span per shot");
+    assert_eq!(trace.retries(), report.retries, "one Retry span per rebuild");
+    assert_eq!(trace.shards(), report.shards as u64, "every shard still completes");
+    let got = finish_sharded_outputs(SumMode::Enumerated, report.outputs);
+    let want = finish_sharded_outputs(SumMode::Enumerated, clean.outputs);
+    assert_sums_bitwise(&got, &want, "traced retry");
+}
+
+/// `got` must be `want` with exactly one contiguous block removed —
+/// the quarantined shard's slot, and nothing else.
+fn assert_one_block_removed(got: &[(u64, f64)], want: &[(u64, f64)], ctx: &str) {
+    assert!(got.len() < want.len(), "{ctx}: quarantine must cost output");
+    let missing = want.len() - got.len();
+    let mut prefix = 0;
+    while prefix < got.len() && got[prefix] == want[prefix] {
+        prefix += 1;
+    }
+    let (g_tail, w_tail) = (&got[prefix..], &want[prefix + missing..]);
+    assert_eq!(g_tail.len(), w_tail.len(), "{ctx}");
+    for (i, (g, w)) in g_tail.iter().zip(w_tail).enumerate() {
+        assert_eq!(
+            (g.0, g.1.to_bits()),
+            (w.0, w.1.to_bits()),
+            "{ctx}: tail diverges at {i} — the gap is not one contiguous block"
+        );
+    }
+}
+
+#[test]
+fn quarantine_drops_exactly_the_poisoned_shard() {
+    let blobs = gen_blobs(500, RegionSpec::Uniform { max: 16 }, 31);
+    let factory = sum_factory();
+    for streamed in [false, true] {
+        let ctx = format!(
+            "quarantine {}",
+            if streamed { "streamed" } else { "materialized" }
+        );
+        let runner = ShardedRunner::new(exec(3));
+        let clean = if streamed {
+            runner.run_stream(&factory, SliceSource::new(&blobs)).unwrap()
+        } else {
+            runner.run(&factory, &blobs).unwrap()
+        };
+        let target = clean.shards / 2;
+        let faulty = FaultyFactory::new(sum_factory(), &FaultPlan::new().panic_at(target));
+        let q_runner = ShardedRunner::new(exec(3).with_fault(FaultPolicy::Quarantine));
+        let report = if streamed {
+            q_runner.run_stream(&faulty, SliceSource::new(&blobs)).unwrap()
+        } else {
+            q_runner.run(&faulty, &blobs).unwrap()
+        };
+        assert_eq!(report.faults.len(), 1, "{ctx}: one entry in the ledger");
+        let f = &report.faults[0];
+        assert_eq!(f.shard, target, "{ctx}: the ledger names the injected shard");
+        assert_eq!(f.attempts, 1, "{ctx}: quarantine gives one attempt");
+        assert!(f.error.contains("injected fault"), "{ctx}: {}", f.error);
+        assert_eq!(report.shards, clean.shards, "{ctx}: the slot is filled, not stalled");
+        let got = finish_sharded_outputs(SumMode::Enumerated, report.outputs);
+        let want = finish_sharded_outputs(SumMode::Enumerated, clean.outputs);
+        assert_one_block_removed(&got, &want, &ctx);
+        let table = report.fault_table();
+        assert!(table.contains("injected fault"), "{ctx}: {table}");
+    }
+}
+
+#[test]
+fn fail_fast_names_the_worker_and_the_shard() {
+    let blobs = gen_blobs(300, RegionSpec::Uniform { max: 16 }, 37);
+    for streamed in [false, true] {
+        let faulty = FaultyFactory::new(sum_factory(), &FaultPlan::new().panic_at(1));
+        let runner = ShardedRunner::new(exec(2));
+        let err = if streamed {
+            runner
+                .run_stream(&faulty, SliceSource::new(&blobs))
+                .expect_err("fail-fast must abort")
+        } else {
+            runner.run(&faulty, &blobs).expect_err("fail-fast must abort")
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("shard 1"), "names the shard: {msg}");
+        assert!(msg.contains("worker"), "names the worker: {msg}");
+        assert!(msg.contains("injected fault"), "carries the payload: {msg}");
+    }
+}
+
+/// A worker whose every shard outlasts the test watchdog: `run_shard`
+/// sleeps far longer than the configured deadline, so the driver's
+/// completion wait must trip and diagnose instead of hanging.
+struct NeverFinishes;
+
+impl ShardWorker for NeverFinishes {
+    type In = u32;
+    type Out = u32;
+
+    fn run_shard(&mut self, shard: &[u32]) -> Result<ShardOutput<u32>> {
+        std::thread::sleep(Duration::from_millis(500));
+        Ok(ShardOutput {
+            outputs: shard.to_vec(),
+            metrics: PipelineMetrics::default(),
+            invocations: 0,
+        })
+    }
+}
+
+impl PipelineFactory for NeverFinishes {
+    type In = u32;
+    type Out = u32;
+    type Worker = NeverFinishes;
+
+    fn make_worker(&self, _worker_id: usize) -> Result<NeverFinishes> {
+        Ok(NeverFinishes)
+    }
+}
+
+#[test]
+fn watchdog_turns_a_stuck_shard_into_a_named_diagnostic() {
+    use regatta::workload::source::IterSource;
+    let runner = ShardedRunner::new(
+        ExecConfig::new(2)
+            .streaming(4)
+            .with_watchdog(Duration::from_millis(50)),
+    );
+    let err = runner
+        .run_stream(&NeverFinishes, IterSource::new(0..64u32))
+        .expect_err("a stuck pool must fail, not hang");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("watchdog"), "{msg}");
+    assert!(msg.contains("in flight"), "lists the in-flight shards: {msg}");
+    assert!(msg.contains("stream slot"), "names the stalled merge slot: {msg}");
+}
+
+#[test]
+fn skip_corrupt_reads_every_uncorrupted_frame_through_the_executor() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("regatta_fault_salvage_{}.rgn", std::process::id()));
+    let blobs = gen_blobs(300, RegionSpec::Uniform { max: 16 }, 41);
+    write_rgn_file(&path, SliceSource::new(&blobs)).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    let corrupted = [0usize, 7, 20];
+    for &f in &corrupted {
+        corrupt_frame(&mut bytes, f).unwrap();
+    }
+    std::fs::write(&path, &bytes).unwrap();
+
+    // `rgn verify` sees exactly the three corrupt frames
+    let audit = verify_rgn_file(&path).unwrap();
+    assert!(!audit.ok());
+    assert_eq!(audit.corrupt_frames, corrupted.len() as u64);
+    assert_eq!(audit.regions as usize, blobs.len() - corrupted.len());
+
+    // the default policy still refuses the file, through the executor
+    let strict = BlobFileSource::open(&path).unwrap();
+    let err = ShardedRunner::new(exec(2))
+        .run_stream(&sum_factory(), strict)
+        .expect_err("corrupt frames fail hard by default");
+    assert!(format!("{err:#}").contains("checksum mismatch"), "{err:#}");
+
+    // salvage mode: every uncorrupted frame, bit-identical, in order
+    let intact: Vec<_> = blobs
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !corrupted.contains(i))
+        .map(|(_, b)| b.clone())
+        .collect();
+    let want = ShardedRunner::new(exec(2))
+        .run(&sum_factory(), &intact)
+        .unwrap();
+    let salvaging = BlobFileSource::open(&path)
+        .unwrap()
+        .with_corrupt_policy(CorruptFramePolicy::Skip);
+    let got = ShardedRunner::new(exec(2))
+        .run_stream(&sum_factory(), salvaging)
+        .unwrap();
+    assert_sums_bitwise(
+        &finish_sharded_outputs(SumMode::Enumerated, got.outputs),
+        &finish_sharded_outputs(SumMode::Enumerated, want.outputs),
+        "salvaged stream",
+    );
+    std::fs::remove_file(&path).unwrap();
+}

@@ -13,6 +13,11 @@
 //! * pipeline-level — a full enumerated sum run's allocation count must
 //!   not scale with the number of ensembles (same region count, 50x the
 //!   elements → same allocations).
+//!
+//! Plus the fault-tolerance rider: the pool now runs every shard behind
+//! `catch_unwind`, and that guard must be free on the fault-free path —
+//! wrapping a warmed shard window in `catch_unwind` costs exactly the
+//! same allocations as calling it bare.
 
 use std::rc::Rc;
 
@@ -407,5 +412,51 @@ fn pipeline_allocations_do_not_scale_with_ensemble_count() {
         allocs_large <= allocs_small + 16,
         "allocations scale with ensembles: {allocs_small} (x{ens_small} ensembles) vs \
          {allocs_large} (x{ens_large} ensembles)"
+    );
+}
+
+#[test]
+fn catch_unwind_guard_adds_no_steady_state_allocations() {
+    // The fault-tolerance layer wraps every shard execution in
+    // `catch_unwind` (see `regatta::exec::fault`). On the fault-free
+    // path that guard must be pure control flow: running the same warmed
+    // 50-shard window bare and wrapped must cost identical allocations
+    // (a successful catch_unwind never touches the heap — only a caught
+    // panic payload would).
+    use regatta::apps::sum::SumPipeline;
+    let cfg = SumConfig {
+        width: W,
+        mode: SumMode::Enumerated,
+        shape: SumShape::Fused,
+        data_cap: 256,
+        signal_cap: 64,
+        ..Default::default()
+    };
+    let blobs = gen_blobs(140 * W, RegionSpec::Fixed { size: W }, 9); // 140 regions
+    let shards: Vec<&[regatta::prelude::Blob]> = blobs.chunks(2).collect();
+    let mut pipeline = SumPipeline::build(cfg, Rc::new(KernelSet::native(W)));
+    for shard in shards.iter().take(20) {
+        pipeline.run_shard(shard).unwrap(); // warmup: grow every buffer
+    }
+
+    let before = alloc_count::thread_allocations();
+    for shard in &shards[20..70] {
+        pipeline.run_shard(shard).unwrap();
+    }
+    let bare = alloc_count::thread_allocations() - before;
+
+    let before = alloc_count::thread_allocations();
+    for shard in &shards[20..70] {
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pipeline.run_shard(shard)
+        }));
+        out.expect("no panic injected").unwrap();
+    }
+    let guarded = alloc_count::thread_allocations() - before;
+
+    assert!(
+        guarded <= bare + 8,
+        "catch_unwind must be allocation-free on the fault-free path: \
+         {bare} bare vs {guarded} guarded over the same 50-shard window"
     );
 }
