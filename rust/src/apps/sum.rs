@@ -33,7 +33,7 @@ use crate::coordinator::enumerate::Blob;
 use crate::coordinator::metrics::PipelineMetrics;
 use crate::exec::{
     ContainerPool, ExecConfig, KernelSpawn, PipelineFactory, ShardOutput, ShardWorker,
-    ShardedRunner, WorkerKernels,
+    ShardedRunner, Splittability, WorkerKernels,
 };
 use crate::coordinator::channel::Channel;
 use crate::coordinator::node::{Emitter, NodeLogic};
@@ -49,26 +49,37 @@ use super::prefix_mask;
 /// Region-context representation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SumMode {
+    /// Per-region enumeration with precise `RegionBegin`/`RegionEnd` signals.
     Enumerated,
+    /// Dense tagged baseline: items carry region tags, no boundary signals.
     Tagged,
 }
 
 /// Pipeline shape for the enumerated mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SumShape {
+    /// Single kernel fusing filter, scale, and sum per ensemble.
     Fused,
+    /// Separate filter/compact and sum stages with an intermediate channel.
     TwoStage,
 }
 
 /// App configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct SumConfig {
+    /// SIMD ensemble width (lanes per firing).
     pub width: usize,
+    /// Filter cutoff handed to the filter/scale kernel.
     pub threshold: f32,
+    /// Region-context representation to run with.
     pub mode: SumMode,
+    /// Pipeline shape (enumerated mode only).
     pub shape: SumShape,
+    /// Data-queue capacity for every channel.
     pub data_cap: usize,
+    /// Signal-queue capacity for every channel.
     pub signal_cap: usize,
+    /// Node-selection policy for the scheduler.
     pub policy: Policy,
 }
 
@@ -91,6 +102,7 @@ impl Default for SumConfig {
 pub struct SumReport {
     /// `(region id, sum)` in stream order (tagged mode: tag order).
     pub outputs: Vec<(u64, f64)>,
+    /// Merged pipeline metrics for the run.
     pub metrics: PipelineMetrics,
     /// Wall-clock seconds of the pipeline run(s).
     pub elapsed: f64,
@@ -108,11 +120,13 @@ pub struct SumApp {
 const FLUSH: u64 = u64::MAX;
 
 impl SumApp {
+    /// Create the app from a config and a shared kernel set.
     pub fn new(cfg: SumConfig, kernels: Rc<KernelSet>) -> SumApp {
         assert_eq!(cfg.width, kernels.width(), "config/kernel width mismatch");
         SumApp { cfg, kernels }
     }
 
+    /// The configuration this app runs with.
     pub fn config(&self) -> &SumConfig {
         &self.cfg
     }
@@ -155,9 +169,10 @@ impl SumApp {
         if exec.workers <= 1
             && exec.shard.shards_per_worker <= 1
             && exec.trace.is_none()
+            && exec.max_region_items == 0
             && matches!(exec.fault, crate::exec::FaultPolicy::FailFast)
         {
-            // One worker, one shard, untraced, fail-fast, run inline:
+            // One worker, one shard, untraced, unsplit, fail-fast, inline:
             // identical to a plain run, so reuse this app's kernel set
             // instead of spawning a fresh engine (on the XLA backend
             // that is a full PJRT spin-up). Traced runs and non-default
@@ -597,6 +612,7 @@ pub struct SumFactory {
 }
 
 impl SumFactory {
+    /// Create a factory that builds per-worker sum pipelines on `spawn` kernels.
     pub fn new(cfg: SumConfig, spawn: KernelSpawn) -> SumFactory {
         SumFactory {
             cfg,
@@ -654,6 +670,76 @@ impl PipelineFactory for SumFactory {
         if let Some(pool) = &self.elem_pool {
             pool.put(blob.elems);
         }
+    }
+
+    /// Which sum variants may legally split a region:
+    ///
+    /// * fused enumerated — **RegionFold**: the aggregator folds one f32
+    ///   partial per ensemble into an f64 accumulator, strictly in
+    ///   ensemble order, and [`SumFactory::split_region`] cuts at
+    ///   ensemble boundaries — so re-folding part rows left-to-right
+    ///   replays the identical f64 addition sequence (bit-identity, not
+    ///   approximation).
+    /// * two-stage enumerated — **refuses**: the filter node compacts
+    ///   survivors across ensemble boundaries *within* a region before
+    ///   the accumulator sees them, so any cut changes how lanes group
+    ///   into `masked_sum` invocations (float rounding).
+    /// * tagged — **GlobalFold**: per-shard `(tag, partial)` rows are
+    ///   globally re-sorted and folded after every sharded run anyway
+    ///   ([`finish_sharded_outputs`]), and the tagged baseline already
+    ///   trades bit-identity for lane packing — split partials ride the
+    ///   same contract.
+    fn splittability(&self) -> Splittability {
+        match (self.cfg.mode, self.cfg.shape) {
+            (SumMode::Enumerated, SumShape::Fused) => Splittability::RegionFold,
+            (SumMode::Enumerated, SumShape::TwoStage) => Splittability::Opaque {
+                reason: "the two-stage enumerated sum compacts filter survivors across \
+                         ensemble boundaries within a region, so cutting the region \
+                         changes float grouping",
+            },
+            (SumMode::Tagged, _) => Splittability::GlobalFold,
+        }
+    }
+
+    /// Cut at **ensemble boundaries**: each part is exactly one ensemble
+    /// (`width` elements, the last one shorter), keeping the same `id`.
+    /// A part's own pipeline run computes `0.0 + partial` — exactly the
+    /// f64 addition the unsplit run performs for that ensemble — so the
+    /// left-linear [`SumFactory::combine`] chain is bit-identical.
+    /// Multi-ensemble parts would *not* be (their pre-summed partials
+    /// reassociate the addition chain), which is why the cut ignores any
+    /// slack `max_items` leaves above `width`.
+    fn split_region(&self, blob: &Blob, max_items: usize) -> Result<Vec<Blob>> {
+        if blob.elems.len().max(1) <= max_items {
+            return Ok(vec![blob.clone()]);
+        }
+        ensure!(
+            max_items >= self.cfg.width,
+            "max_region_items = {max_items} is below the SIMD width {} — parts must \
+             stay ensemble-aligned to preserve bit-identity, so the threshold cannot \
+             cut inside one ensemble",
+            self.cfg.width
+        );
+        Ok(blob
+            .elems
+            .chunks(self.cfg.width)
+            .map(|c| Blob::from_vec(blob.id, c.to_vec()))
+            .collect())
+    }
+
+    /// Left-linear partial fold: part 0's row seeds the accumulator and
+    /// each later part adds its (single-ensemble) partial — the same
+    /// `acc += partial as f64` the fused aggregator runs unsplit.
+    fn combine(&self, acc: &mut (u64, f64), part: (u64, f64)) -> Result<()> {
+        ensure!(
+            acc.0 == part.0,
+            "combine folded rows of different regions ({} vs {}) — split ledger \
+             misaligned (executor bug)",
+            acc.0,
+            part.0
+        );
+        acc.1 += part.1;
+        Ok(())
     }
 }
 

@@ -44,12 +44,16 @@ use super::prefix_mask;
 /// Implementation strategy (the three series of Fig. 8).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TaxiVariant {
+    /// Pure enumeration: per-line regions with precise boundary signals.
     Enumerated,
+    /// Enumerated first stage feeding a tagged second stage.
     Hybrid,
+    /// Pure tagging: items carry line tags, no boundary signals.
     Tagged,
 }
 
 impl TaxiVariant {
+    /// Every variant, in presentation order.
     pub fn all() -> [TaxiVariant; 3] {
         [
             TaxiVariant::Enumerated,
@@ -58,6 +62,7 @@ impl TaxiVariant {
         ]
     }
 
+    /// Short name used in tables and JSON output.
     pub fn label(&self) -> &'static str {
         match self {
             TaxiVariant::Enumerated => "pure-enumeration",
@@ -70,8 +75,11 @@ impl TaxiVariant {
 /// One parsed, swapped coordinate pair, marked with its line's tag.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TaxiPair {
+    /// Tag of the line the pair was parsed from.
     pub tag: u32,
+    /// Parsed x coordinate.
     pub x: f32,
+    /// Parsed y coordinate.
     pub y: f32,
 }
 
@@ -79,18 +87,26 @@ pub struct TaxiPair {
 /// (for the tagged representations) the line tag and line end.
 #[derive(Debug, Clone, Copy)]
 pub struct Candidate {
+    /// Absolute text offset of the candidate.
     pub abs: u32,
+    /// Absolute text offset of the owning line's end.
     pub line_end: u32,
+    /// Tag of the owning line.
     pub tag: u32,
 }
 
 /// App configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct TaxiConfig {
+    /// SIMD ensemble width (lanes per firing).
     pub width: usize,
+    /// Pipeline variant to build.
     pub variant: TaxiVariant,
+    /// Data-queue capacity for every channel.
     pub data_cap: usize,
+    /// Signal-queue capacity for every channel.
     pub signal_cap: usize,
+    /// Node-selection policy for the scheduler.
     pub policy: Policy,
 }
 
@@ -109,9 +125,13 @@ impl Default for TaxiConfig {
 /// Run report.
 #[derive(Debug, Clone)]
 pub struct TaxiReport {
+    /// Parsed coordinate pairs, in stream order.
     pub pairs: Vec<TaxiPair>,
+    /// Merged pipeline metrics for the run.
     pub metrics: PipelineMetrics,
+    /// Wall-clock seconds of the run.
     pub elapsed: f64,
+    /// Kernel invocations spent (the SIMD cost unit).
     pub invocations: u64,
 }
 
@@ -137,11 +157,13 @@ pub struct TaxiApp {
 }
 
 impl TaxiApp {
+    /// Create the app from a config and a shared kernel set.
     pub fn new(cfg: TaxiConfig, kernels: Rc<KernelSet>) -> TaxiApp {
         assert_eq!(cfg.width, kernels.width(), "config/kernel width mismatch");
         TaxiApp { cfg, kernels }
     }
 
+    /// The configuration this app runs with.
     pub fn config(&self) -> &TaxiConfig {
         &self.cfg
     }
@@ -183,9 +205,10 @@ impl TaxiApp {
         if exec.workers <= 1
             && exec.shard.shards_per_worker <= 1
             && exec.trace.is_none()
+            && exec.max_region_items == 0
             && matches!(exec.fault, crate::exec::FaultPolicy::FailFast)
         {
-            // One worker, one shard, untraced, fail-fast, run inline:
+            // One worker, one shard, untraced, unsplit, fail-fast, inline:
             // identical to a plain run, so reuse this app's kernel set
             // instead of spawning a fresh engine (on the XLA backend
             // that is a full PJRT spin-up). Traced runs and non-default
@@ -445,6 +468,7 @@ pub struct TaxiFactory {
 }
 
 impl TaxiFactory {
+    /// Create a factory that builds per-worker taxi pipelines over the shared text.
     pub fn new(cfg: TaxiConfig, spawn: KernelSpawn, text: Arc<Vec<u8>>) -> TaxiFactory {
         TaxiFactory { cfg, spawn, text }
     }
@@ -479,6 +503,22 @@ impl PipelineFactory for TaxiFactory {
 
     fn weight(&self, line: &TaxiLine) -> usize {
         line.len.max(1)
+    }
+
+    /// Taxi refuses intra-region splitting by name: a line's candidate
+    /// windows parse against the **line context** captured at
+    /// `RegionBegin` (offset, length, the shared text view), and every
+    /// window's validity depends on its position within that whole line
+    /// — order-dependent context state, not an associative accumulator.
+    /// Cutting a line would parse windows against the wrong context.
+    /// (A reorder-tolerant context variant is the named follow-on in the
+    /// ROADMAP.)
+    fn splittability(&self) -> crate::exec::Splittability {
+        crate::exec::Splittability::Opaque {
+            reason: "taxi's per-line parse context is order-dependent (candidate \
+                     windows are validated against the whole line captured at \
+                     RegionBegin), so a line cannot be cut into sub-shards",
+        }
     }
 }
 
@@ -547,7 +587,9 @@ impl ClassifyLogic {
 /// tagged absolute candidate (hybrid). One type keeps the channel simple.
 #[derive(Debug, Clone, Copy)]
 pub enum Stage1Item {
+    /// Line-relative element offset (enumerated stage 1).
     Offset(u32),
+    /// Tagged absolute candidate (hybrid stage 1).
     Cand(Candidate),
 }
 

@@ -46,13 +46,17 @@ use super::{time_fn, BenchConfig, Table};
 /// Sweep configuration.
 #[derive(Debug, Clone)]
 pub struct FaultsConfig {
+    /// SIMD ensemble width.
     pub width: usize,
     /// Total stream items.
     pub items: usize,
+    /// Worker threads.
     pub workers: usize,
     /// Per-shard (and per-frame) fault probability for the seeded plan.
     pub fault_rate: f64,
+    /// Workload PRNG seed.
     pub seed: u64,
+    /// Iteration counts for timing.
     pub bench: BenchConfig,
 }
 
@@ -89,7 +93,9 @@ impl Default for FaultsConfig {
 /// One measured leg.
 #[derive(Debug, Clone)]
 pub struct FaultsRow {
+    /// Fault-handling leg this row measures.
     pub leg: &'static str,
+    /// Median seconds per run.
     pub seconds: f64,
     /// Extra shard attempts the run made (retry legs).
     pub retries: u64,
@@ -102,15 +108,21 @@ pub struct FaultsRow {
 /// Full report (also the JSON payload).
 #[derive(Debug, Clone)]
 pub struct FaultsReport {
+    /// Total stream items.
     pub items: usize,
+    /// Worker threads.
     pub workers: usize,
+    /// Shards the stream was cut into.
     pub shards: usize,
     /// Faults the seeded plan injected into the retry legs.
     pub injected: usize,
+    /// Measured legs.
     pub rows: Vec<FaultsRow>,
     /// Salvage leg: frames written / corrupted / read back intact.
     pub frames: usize,
+    /// Frames corrupted in place before readback.
     pub corrupted: usize,
+    /// Frames read back intact after salvage.
     pub recovered: usize,
 }
 

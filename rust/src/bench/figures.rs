@@ -54,6 +54,7 @@ impl From<BackendSel> for KernelSpawn {
 /// Keeps the PJRT engine alive alongside the kernels compiled from it.
 pub struct KernelProvider {
     _engine: Option<Engine>,
+    /// Kernels every benchmark in the sweep shares.
     pub kernels: Rc<KernelSet>,
 }
 
@@ -78,10 +79,15 @@ pub fn provider(backend: BackendSel, width: usize) -> Result<KernelProvider> {
 /// Sweep parameters common to the figure benches.
 #[derive(Debug, Clone, Copy)]
 pub struct SweepConfig {
+    /// SIMD ensemble width.
     pub width: usize,
+    /// Total stream items.
     pub items: usize,
+    /// Kernel backend to spawn.
     pub backend: BackendSel,
+    /// Workload PRNG seed.
     pub seed: u64,
+    /// Iteration counts for timing.
     pub bench: BenchConfig,
 }
 
@@ -127,10 +133,15 @@ pub fn region_size_axis(width: usize) -> Vec<usize> {
 /// One measured row of a sum-app sweep.
 #[derive(Debug, Clone)]
 pub struct SumRow {
+    /// Region size (items).
     pub region: usize,
+    /// Median seconds per run.
     pub seconds: f64,
+    /// Items per second.
     pub throughput: f64, // items/sec
+    /// Mean ensemble occupancy.
     pub occupancy: f64,
+    /// Kernel invocations spent.
     pub invocations: u64,
 }
 
@@ -221,12 +232,19 @@ pub fn fig7(cfg: &SweepConfig) -> Result<Vec<SumRow>> {
 /// One measured row of the taxi sweep.
 #[derive(Debug, Clone)]
 pub struct TaxiRow {
+    /// Pipeline variant measured.
     pub variant: TaxiVariant,
+    /// Workload scale factor (number of lines).
     pub scale: usize,
+    /// Total text bytes processed.
     pub chars: usize,
+    /// Median seconds per run.
     pub seconds: f64,
+    /// Stage-1 full-ensemble firing fraction.
     pub stage1_full: f64,
+    /// Stage-2 full-ensemble firing fraction.
     pub stage2_full: f64,
+    /// Coordinate pairs parsed.
     pub pairs: usize,
 }
 
@@ -304,10 +322,15 @@ pub fn fig8(cfg: &SweepConfig, base_lines: usize, scales: &[usize]) -> Result<Ve
 /// One measured row of the shard-scaling sweep.
 #[derive(Debug, Clone)]
 pub struct ScaleRow {
+    /// Region size (items).
     pub region: usize,
+    /// Worker threads.
     pub workers: usize,
+    /// Shards the stream was cut into.
     pub shards: usize,
+    /// Median seconds per run.
     pub seconds: f64,
+    /// Items per second.
     pub throughput: f64, // items/sec
     /// Speedup over the 1-worker row at the same region size.
     pub speedup: f64,

@@ -62,14 +62,18 @@ use super::{time_fn, BenchConfig, Table};
 /// Sweep configuration.
 #[derive(Debug, Clone)]
 pub struct HotpathConfig {
+    /// Ensemble widths to sweep.
     pub widths: Vec<usize>,
     /// Total stream items per point.
     pub items: usize,
+    /// Scheduling policies to cross with the widths.
     pub policies: Vec<Policy>,
     /// Shard granularities (regions per shard) for the rebuild-vs-reuse
     /// sweep — smallest first = the many-small-shards headline point.
     pub reuse_granules: Vec<usize>,
+    /// Iteration counts for timing.
     pub bench: BenchConfig,
+    /// Workload PRNG seed.
     pub seed: u64,
 }
 
@@ -112,23 +116,36 @@ impl Default for HotpathConfig {
 /// One firing-path comparison point.
 #[derive(Debug, Clone)]
 pub struct FiringRow {
+    /// SIMD ensemble width.
     pub width: usize,
+    /// Region size (items).
     pub region: usize,
+    /// Throughput of the legacy rebuild-per-shard firing path.
     pub legacy_items_per_sec: f64,
+    /// Throughput of the allocation-free hot firing path.
     pub hot_items_per_sec: f64,
+    /// Hot over legacy throughput.
     pub speedup: f64,
+    /// Heap allocations per firing on the legacy path.
     pub legacy_allocs_per_firing: f64,
+    /// Heap allocations per firing on the hot path.
     pub hot_allocs_per_firing: f64,
 }
 
 /// One full-app sweep point.
 #[derive(Debug, Clone)]
 pub struct AppRow {
+    /// SIMD ensemble width.
     pub width: usize,
+    /// Region size (items).
     pub region: usize,
+    /// Scheduling policy label.
     pub policy: &'static str,
+    /// Items per second.
     pub items_per_sec: f64,
+    /// Mean ensemble occupancy.
     pub occupancy: f64,
+    /// Heap allocations per firing at steady state.
     pub allocs_per_firing: f64,
 }
 
@@ -139,7 +156,9 @@ pub struct ReuseRow {
     pub regions_per_shard: usize,
     /// Shards the stream was cut into.
     pub shards: usize,
+    /// Throughput when rebuilding the pipeline for every shard.
     pub rebuild_items_per_sec: f64,
+    /// Throughput when resetting the persistent pipeline instead.
     pub reuse_items_per_sec: f64,
     /// rebuild time / reuse time (> 1 = reuse wins).
     pub speedup: f64,
@@ -149,8 +168,11 @@ pub struct ReuseRow {
 /// opt-in and off by default, so this row is reported, never gated.
 #[derive(Debug, Clone)]
 pub struct TraceRow {
+    /// Worker threads.
     pub workers: usize,
+    /// Throughput with tracing disabled.
     pub untraced_items_per_sec: f64,
+    /// Throughput with tracing enabled.
     pub traced_items_per_sec: f64,
     /// `traced time / untraced time - 1`, as a percentage (> 0 = the
     /// traced run was slower).
@@ -160,10 +182,15 @@ pub struct TraceRow {
 /// Full report (also the JSON payload).
 #[derive(Debug, Clone)]
 pub struct HotpathReport {
+    /// Total stream items per point.
     pub items: usize,
+    /// Firing-path comparison rows.
     pub firing: Vec<FiringRow>,
+    /// App-level policy rows.
     pub apps: Vec<AppRow>,
+    /// Pipeline rebuild-vs-reuse rows.
     pub reuse: Vec<ReuseRow>,
+    /// Trace-overhead rows.
     pub trace: Vec<TraceRow>,
 }
 

@@ -18,6 +18,15 @@
 //! asserted **bit-identical** to the cursor baseline before its time is
 //! recorded, so the sweep doubles as an equivalence check.
 //!
+//! A third distribution, `giant`, is the planner's absolute worst case:
+//! **one region spans the whole stream**, so without intra-region
+//! splitting every worker but one idles (stealing can't help — there is
+//! nothing to steal). Its two modes compare `stream-nosplit` (the 1×
+//! straggler baseline) against `stream-split`
+//! ([`ExecConfig::max_region_items`] = width, the finest ensemble-aligned
+//! cut), asserting the split outputs bit-identical to the unsplit run;
+//! [`giant_region_speedup`] is the headline.
+//!
 //! Results are emitted as `BENCH_ingest.json` and uploaded as a CI
 //! artifact (`--smoke` runs a small shape in the pipeline).
 
@@ -34,13 +43,17 @@ use super::{time_fn, BenchConfig, Table};
 /// Sweep configuration.
 #[derive(Debug, Clone)]
 pub struct IngestConfig {
+    /// SIMD ensemble width.
     pub width: usize,
     /// Total stream items per point.
     pub items: usize,
+    /// Worker counts to sweep.
     pub workers: Vec<usize>,
     /// Streaming in-flight budget (regions).
     pub buffer_regions: usize,
+    /// Iteration counts for timing.
     pub bench: BenchConfig,
+    /// Workload PRNG seed.
     pub seed: u64,
 }
 
@@ -77,21 +90,32 @@ impl Default for IngestConfig {
 /// One measured point.
 #[derive(Debug, Clone)]
 pub struct IngestRow {
+    /// Region-size distribution label.
     pub dist: &'static str,
+    /// Worker threads.
     pub workers: usize,
+    /// Executor mode label.
     pub mode: &'static str,
+    /// Median seconds per run.
     pub seconds: f64,
+    /// Items per second.
     pub items_per_sec: f64,
+    /// Shards the stream was cut into.
     pub shards: usize,
+    /// Successful steals observed.
     pub steals: usize,
+    /// Mean worker busy fraction.
     pub utilization: f64,
 }
 
 /// Full report (also the JSON payload).
 #[derive(Debug, Clone)]
 pub struct IngestReport {
+    /// Total stream items per point.
     pub items: usize,
+    /// Streaming in-flight budget (regions).
     pub buffer_regions: usize,
+    /// Measured points.
     pub rows: Vec<IngestRow>,
 }
 
@@ -180,6 +204,79 @@ pub fn run(cfg: &IngestConfig) -> Result<IngestReport> {
         }
     }
 
+    // The giant leg: one region spans the whole stream. Stealing is
+    // powerless here (there is exactly one unit of work), so the modes
+    // compare the unsplit straggler baseline against intra-region
+    // splitting at the finest ensemble-aligned threshold (= width).
+    {
+        let dist = "giant";
+        let blobs = gen_blobs(cfg.items, RegionSpec::Fixed { size: cfg.items }, cfg.seed);
+        ensure!(
+            blobs.len() == 1,
+            "giant leg expects one region spanning the stream, got {}",
+            blobs.len()
+        );
+        let factory = SumFactory::new(
+            SumConfig {
+                width: cfg.width,
+                ..Default::default()
+            },
+            KernelSpawn::Native,
+        );
+        for &workers in &cfg.workers {
+            let mut baseline: Option<Vec<(u64, f64)>> = None;
+            for (mode, max_region_items) in
+                [("stream-nosplit", 0usize), ("stream-split", cfg.width)]
+            {
+                let exec = ExecConfig::new(workers)
+                    .with_shards_per_worker(4)
+                    .streaming(cfg.buffer_regions)
+                    .with_max_region_items(max_region_items);
+                let runner = ShardedRunner::new(exec);
+                let mut last = None;
+                let m = time_fn(cfg.bench, || {
+                    let report = runner
+                        .run_stream(&factory, SliceSource::new(&blobs))
+                        .expect("giant-region run");
+                    last = Some(report);
+                });
+                let report = last.expect("at least one iteration");
+                ensure!(
+                    report.outputs.len() == 1,
+                    "giant/{mode}/{workers}w: expected one folded region sum, got {}",
+                    report.outputs.len()
+                );
+                if max_region_items > 0 {
+                    ensure!(
+                        report.split_regions == 1,
+                        "giant/{mode}/{workers}w: the giant region was not split"
+                    );
+                }
+                // the split run must be bit-identical to the unsplit one
+                match &baseline {
+                    None => baseline = Some(report.outputs.clone()),
+                    Some(base) => {
+                        let ((gi, gv), (bi, bv)) = (&report.outputs[0], &base[0]);
+                        ensure!(
+                            gi == bi && gv.to_bits() == bv.to_bits(),
+                            "giant/{mode}/{workers}w: split sum diverged from unsplit"
+                        );
+                    }
+                }
+                rows.push(IngestRow {
+                    dist,
+                    workers,
+                    mode,
+                    seconds: m.median(),
+                    items_per_sec: cfg.items as f64 / m.median(),
+                    shards: report.shards,
+                    steals: report.steals,
+                    utilization: report.utilization(),
+                });
+            }
+        }
+    }
+
     let mut t = Table::new(&[
         "dist", "workers", "mode", "time_s", "items/s", "shards", "steals", "util%",
     ]);
@@ -220,6 +317,26 @@ pub fn skew_speedup(report: &IngestReport) -> Option<f64> {
     Some(pick("cursor")? / pick("stream-steal")?)
 }
 
+/// Headline metric: on the one-giant-region stream, speedup of
+/// intra-region splitting over the unsplit straggler baseline at the
+/// largest measured worker count (`None` if either point is missing).
+pub fn giant_region_speedup(report: &IngestReport) -> Option<f64> {
+    let max_workers = report
+        .rows
+        .iter()
+        .filter(|r| r.dist == "giant")
+        .map(|r| r.workers)
+        .max()?;
+    let pick = |mode: &str| {
+        report
+            .rows
+            .iter()
+            .find(|r| r.dist == "giant" && r.workers == max_workers && r.mode == mode)
+            .map(|r| r.seconds)
+    };
+    Some(pick("stream-nosplit")? / pick("stream-split")?)
+}
+
 /// Render the report as the `BENCH_ingest.json` artifact.
 pub fn to_json(report: &IngestReport) -> String {
     let mut s = String::new();
@@ -249,8 +366,12 @@ pub fn to_json(report: &IngestReport) -> String {
     }
     s.push_str("  ],\n");
     s.push_str(&format!(
-        "  \"skew_steal_vs_cursor_speedup\": {:.4}\n",
+        "  \"skew_steal_vs_cursor_speedup\": {:.4},\n",
         skew_speedup(report).unwrap_or(0.0)
+    ));
+    s.push_str(&format!(
+        "  \"giant_region_speedup\": {:.4}\n",
+        giant_region_speedup(report).unwrap_or(0.0)
     ));
     s.push_str("}\n");
     s
@@ -278,7 +399,8 @@ mod tests {
     #[test]
     fn sweep_produces_rows_and_json() {
         let report = run(&tiny_cfg()).unwrap();
-        assert_eq!(report.rows.len(), 2 * 2 * 4, "dists x workers x modes");
+        // dists x workers x modes, plus the giant leg's workers x 2 modes
+        assert_eq!(report.rows.len(), 2 * 2 * 4 + 2 * 2);
         for r in &report.rows {
             assert!(r.items_per_sec > 0.0, "{}/{}", r.dist, r.mode);
             assert!(r.shards > 0);
@@ -287,6 +409,24 @@ mod tests {
         let parsed = Json::parse(&js).expect("emitted JSON parses");
         assert!(parsed.get("rows").is_some());
         assert!(parsed.get("skew_steal_vs_cursor_speedup").is_some());
+        assert!(parsed.get("giant_region_speedup").is_some());
         assert!(skew_speedup(&report).is_some());
+        assert!(giant_region_speedup(&report).is_some());
+    }
+
+    #[test]
+    fn giant_leg_splits_and_reports_both_modes() {
+        let report = run(&tiny_cfg()).unwrap();
+        let giant: Vec<_> = report.rows.iter().filter(|r| r.dist == "giant").collect();
+        assert_eq!(giant.len(), 2 * 2, "workers x {{nosplit, split}}");
+        for r in &giant {
+            match r.mode {
+                // one region, one shard: the straggler baseline
+                "stream-nosplit" => assert_eq!(r.shards, 1, "{}w", r.workers),
+                // split at width => many parts => more than one shard
+                "stream-split" => assert!(r.shards > 1, "{}w: {} shards", r.workers, r.shards),
+                other => panic!("unexpected giant mode {other}"),
+            }
+        }
     }
 }

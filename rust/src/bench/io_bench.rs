@@ -39,6 +39,7 @@ use super::{time_fn, BenchConfig, Table};
 /// Sweep configuration.
 #[derive(Debug, Clone)]
 pub struct IoConfig {
+    /// SIMD ensemble width.
     pub width: usize,
     /// Total stream items.
     pub items: usize,
@@ -46,7 +47,9 @@ pub struct IoConfig {
     pub workers: usize,
     /// Ingest buffer budgets (regions) to cross with each source.
     pub budgets: Vec<usize>,
+    /// Iteration counts for timing.
     pub bench: BenchConfig,
+    /// Workload PRNG seed.
     pub seed: u64,
 }
 
@@ -83,22 +86,30 @@ impl Default for IoConfig {
 /// One measured point.
 #[derive(Debug, Clone)]
 pub struct IoRow {
+    /// Input source label.
     pub source: &'static str,
+    /// Ingest buffer budget (regions).
     pub budget: usize,
+    /// Median seconds per run.
     pub seconds: f64,
+    /// Items per second.
     pub items_per_sec: f64,
+    /// Shards the stream was cut into.
     pub shards: usize,
 }
 
 /// Full report (also the JSON payload).
 #[derive(Debug, Clone)]
 pub struct IoReport {
+    /// Total stream items.
     pub items: usize,
+    /// Worker threads.
     pub workers: usize,
     /// Stats of the materialized `.rgn` container.
     pub file: BlobStats,
     /// Seconds to write the container (one pass).
     pub write_seconds: f64,
+    /// Measured points.
     pub rows: Vec<IoRow>,
 }
 

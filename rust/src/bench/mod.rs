@@ -17,7 +17,9 @@ use crate::util::stats::{fmt_duration, median, Summary};
 /// Timing configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct BenchConfig {
+    /// Untimed warmup iterations before measurement.
     pub warmup_iters: usize,
+    /// Timed iterations (the median is reported).
     pub iters: usize,
 }
 
@@ -48,14 +50,17 @@ impl BenchConfig {
 /// One measurement: median/mean/min over the timed iterations.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Seconds per timed iteration.
     pub samples: Vec<f64>,
 }
 
 impl Measurement {
+    /// Median of the samples.
     pub fn median(&self) -> f64 {
         median(&self.samples)
     }
 
+    /// Mean of the samples.
     pub fn mean(&self) -> f64 {
         let mut s = Summary::new();
         for &x in &self.samples {
@@ -64,6 +69,7 @@ impl Measurement {
         s.mean()
     }
 
+    /// Fastest sample.
     pub fn min(&self) -> f64 {
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
@@ -90,6 +96,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Create a table with the given column headers.
     pub fn new(headers: &[&str]) -> Table {
         Table {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -97,6 +104,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header count).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());
@@ -131,6 +139,7 @@ impl Table {
         out
     }
 
+    /// Print the table with aligned columns.
     pub fn print(&self) {
         print!("{}", self.render());
     }

@@ -40,6 +40,7 @@ where
     Step: FnMut(&mut A, &[I], Option<&ParentRef>) -> Result<()>,
     Finish: FnMut(&mut A, &ParentRef) -> Result<Option<O>>,
 {
+    /// Create the logic from an initial state and step/finish closures.
     pub fn new(init: A, step: Step, finish: Finish) -> Self {
         Aggregator {
             acc: init.clone(),
@@ -170,6 +171,7 @@ impl<I, O, F> MapLogic<I, O, F>
 where
     F: FnMut(&I) -> O,
 {
+    /// Wrap a per-item closure as node logic.
     pub fn new(f: F) -> Self {
         MapLogic {
             f,

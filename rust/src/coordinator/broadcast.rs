@@ -30,6 +30,7 @@ pub struct Broadcast<T: Clone + 'static> {
 }
 
 impl<T: Clone + 'static> Broadcast<T> {
+    /// Create a broadcast from one input to `outputs` cloned children.
     pub fn new(
         name: impl Into<String>,
         width: usize,

@@ -49,6 +49,7 @@ impl<T> Channel<T> {
         })
     }
 
+    /// Channel name (used in diagnostics).
     pub fn name(&self) -> &str {
         &self.name
     }
@@ -137,24 +138,29 @@ impl<T> Channel<T> {
 
     // ---- capacity (for the fireable test) ----------------------------
 
+    /// Free data-queue slots.
     pub fn data_space(&self) -> usize {
         self.data.borrow().space()
     }
 
+    /// Free signal-queue slots.
     pub fn signal_space(&self) -> usize {
         self.signals.borrow().space()
     }
 
     // ---- receiver side (used by the owning node) ----------------------
 
+    /// Queued data items.
     pub fn data_len(&self) -> usize {
         self.data.borrow().len()
     }
 
+    /// Queued signals.
     pub fn signal_len(&self) -> usize {
         self.signals.borrow().len()
     }
 
+    /// Any queued data or signals?
     pub fn has_pending(&self) -> bool {
         self.data_len() > 0 || self.signal_len() > 0
     }

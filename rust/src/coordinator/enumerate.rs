@@ -36,11 +36,14 @@ pub trait Composite: 'static {
 /// The paper's running example composite (Figs 3–5): a bag of numbers.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Blob {
+    /// Region identifier, unique within a stream.
     pub id: u64,
+    /// Elements of the region.
     pub elems: Vec<f32>,
 }
 
 impl Blob {
+    /// Create a blob from an id and its elements.
     pub fn from_vec(id: u64, elems: Vec<f32>) -> Blob {
         Blob { id, elems }
     }
@@ -75,6 +78,7 @@ pub struct Enumerator<P: Composite> {
 }
 
 impl<P: Composite> Enumerator<P> {
+    /// Create an enumerator between the given channels.
     pub fn new(
         name: impl Into<String>,
         width: usize,

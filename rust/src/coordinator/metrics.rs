@@ -20,12 +20,14 @@ pub struct NodeMetrics {
     pub items: u64,
     /// Signals consumed / emitted downstream.
     pub signals_consumed: u64,
+    /// Signals emitted downstream.
     pub signals_emitted: u64,
     /// Histogram of ensemble sizes: `hist[k]` = ensembles with k lanes.
     pub ensemble_hist: Vec<u64>,
 }
 
 impl NodeMetrics {
+    /// Create zeroed metrics for a node of the given width.
     pub fn new(width: usize) -> NodeMetrics {
         NodeMetrics {
             width,

@@ -28,7 +28,9 @@ use super::signal::{ParentRef, Signal, SignalKind};
 /// User-provided node behaviour (the paper's `run()`/`begin()`/`end()`
 /// stubs, Fig. 5).
 pub trait NodeLogic {
+    /// Input item type.
     type In: 'static;
+    /// Output item type.
     type Out: 'static;
 
     /// Process one ensemble. `items` has between 1 and `width` entries and
@@ -89,7 +91,9 @@ pub trait NodeLogic {
 /// Where a node's outputs go: a downstream channel, or a terminal sink
 /// buffer (the paper's sink node, with unbounded output space).
 pub enum Output<T> {
+    /// Send into a downstream channel.
     Chan(Rc<Channel<T>>),
+    /// Collect into a driver-owned sink buffer.
     Sink(Rc<RefCell<Vec<T>>>),
 }
 
@@ -159,6 +163,7 @@ fn flush_stage<T>(stage: &mut Vec<T>, output: &Output<T>) -> Result<()> {
 
 /// Object-safe node interface driven by the scheduler.
 pub trait NodeOps {
+    /// Node name (for diagnostics and traces).
     fn name(&self) -> &str;
     /// Any queued data or signals?
     fn has_pending(&self) -> bool;
@@ -174,6 +179,7 @@ pub trait NodeOps {
     /// without releasing any buffer capacity. Sink buffers are owned by
     /// the driver, which collects-and-clears them per shard.
     fn reset(&mut self);
+    /// Metrics accumulated since the last reset.
     fn metrics(&self) -> &NodeMetrics;
     /// Size of the data ensemble a firing would process right now
     /// (0 if only signal work is possible). The occupancy-greedy
@@ -209,6 +215,7 @@ pub struct Node<L: NodeLogic> {
 }
 
 impl<L: NodeLogic> Node<L> {
+    /// Create a node wiring `logic` between `input` and `output`.
     pub fn new(
         name: impl Into<String>,
         width: usize,

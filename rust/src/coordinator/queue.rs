@@ -24,6 +24,7 @@ pub struct DataQueue<T> {
 }
 
 impl<T> DataQueue<T> {
+    /// Create a data queue with the given capacity.
     pub fn new(capacity: usize) -> DataQueue<T> {
         DataQueue {
             buf: VecDeque::with_capacity(capacity.min(PRE_RESERVE_CAP)),
@@ -31,14 +32,17 @@ impl<T> DataQueue<T> {
         }
     }
 
+    /// Queued items.
     pub fn len(&self) -> usize {
         self.buf.len()
     }
 
+    /// Whether the queue is empty.
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
 
+    /// Maximum items the queue holds.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
@@ -144,6 +148,7 @@ pub struct SignalQueue {
 }
 
 impl SignalQueue {
+    /// Create a signal queue with the given capacity.
     pub fn new(capacity: usize) -> SignalQueue {
         SignalQueue {
             buf: VecDeque::with_capacity(capacity.min(PRE_RESERVE_CAP)),
@@ -151,18 +156,22 @@ impl SignalQueue {
         }
     }
 
+    /// Queued signals.
     pub fn len(&self) -> usize {
         self.buf.len()
     }
 
+    /// Whether the queue is empty.
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
 
+    /// Maximum signals the queue holds.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
+    /// Free slots remaining.
     pub fn space(&self) -> usize {
         self.capacity - self.buf.len()
     }

@@ -108,6 +108,7 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// Create a scheduler with the given policy.
     pub fn new(policy: Policy) -> Scheduler {
         Scheduler {
             policy,

@@ -15,10 +15,12 @@
 pub struct Tagged<T> {
     /// Global region identifier.
     pub tag: u64,
+    /// The wrapped item.
     pub item: T,
 }
 
 impl<T> Tagged<T> {
+    /// Create a tagged item.
     pub fn new(tag: u64, item: T) -> Tagged<T> {
         Tagged { tag, item }
     }

@@ -93,6 +93,7 @@ impl PipelineBuilder {
         self
     }
 
+    /// Ensemble width the pipeline was built with.
     pub fn width(&self) -> usize {
         self.width
     }

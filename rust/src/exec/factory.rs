@@ -114,6 +114,77 @@ pub trait PipelineFactory: Sync {
     fn recycle_region(&self, region: Self::In) {
         drop(region);
     }
+
+    /// Whether this factory's regions may be cut into sub-shards for
+    /// intra-region parallelism (default: no — region state is assumed
+    /// order-dependent until a factory proves otherwise). See
+    /// [`Splittability`] and [`crate::exec::split`].
+    fn splittability(&self) -> Splittability {
+        Splittability::Opaque {
+            reason: "region state is assumed order-dependent unless the factory opts in",
+        }
+    }
+
+    /// Cut one region into **owned** parts of at most `max_items` weight
+    /// each, preserving item order (part 0 holds the region's first
+    /// items). A region at or under the threshold comes back as a single
+    /// owned part (typically a clone), so the runner never needs a
+    /// `Clone` bound of its own. Must return at least one part. The
+    /// default refuses: a factory that advertises a splittable
+    /// [`Splittability`] must override it.
+    fn split_region(&self, region: &Self::In, max_items: usize) -> Result<Vec<Self::In>> {
+        let _ = (region, max_items);
+        anyhow::bail!("split_region not implemented for this factory")
+    }
+
+    /// Fold one part's output row into the accumulated row for its
+    /// region, in ascending part order (left-linear). Required by
+    /// [`Splittability::RegionFold`]; the fold must replay the exact
+    /// reduction the unsplit pipeline performs so the combined result is
+    /// bit-identical. The default refuses.
+    fn combine(&self, acc: &mut Self::Out, part: Self::Out) -> Result<()> {
+        let _ = (acc, part);
+        anyhow::bail!("combine not implemented for this factory")
+    }
+}
+
+/// Whether (and how) a factory's regions may be cut into sub-shards for
+/// intra-region parallelism (see [`crate::exec::split`]).
+///
+/// A region is the unit of cross-item state, so splitting one is only
+/// legal when the stage's state is an **associative accumulator** that
+/// can be folded from per-part partials in a fixed order. Factories
+/// advertise which contract they satisfy; the runner refuses to split
+/// anything `Opaque`, naming the reason, rather than silently producing
+/// reordered results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Splittability {
+    /// The stage carries order-dependent (or otherwise non-associative)
+    /// region state; splitting would change results. `reason` names the
+    /// specific dependency so the refusal error is actionable.
+    Opaque {
+        /// Why this stage cannot split (surfaced verbatim in the error).
+        reason: &'static str,
+    },
+    /// Each region produces exactly **one** output row, and a split
+    /// region's rows are re-folded left-to-right in part order by
+    /// [`PipelineFactory::combine`] before stream-order emission. The
+    /// combine must replay the same reduction the unsplit pipeline
+    /// performs, so the folded result is bit-identical.
+    RegionFold,
+    /// Outputs are already globally folded downstream of the executor
+    /// (e.g. tagged sums coalesced after the run), so part rows can pass
+    /// straight through the merge — no per-region fold needed. The
+    /// stage's accuracy contract must already tolerate shard-boundary
+    /// regrouping.
+    GlobalFold,
+}
+
+impl Splittability {
+    /// True when the runner may cut this factory's regions.
+    pub fn allows_split(&self) -> bool {
+        !matches!(self, Splittability::Opaque { .. })
+    }
 }
 
 /// Per-thread kernel-set recipe: which backend every worker should build
@@ -129,6 +200,7 @@ pub enum KernelSpawn {
 
 /// A worker's kernel set, keeping its PJRT engine (if any) alive.
 pub struct WorkerKernels {
+    /// Kernel set shared by the worker's pipeline nodes.
     pub kernels: Rc<KernelSet>,
     _engine: Option<Engine>,
 }

@@ -143,6 +143,7 @@ pub struct FaultPlan {
 }
 
 impl FaultPlan {
+    /// Create an empty plan.
     pub fn new() -> FaultPlan {
         FaultPlan::default()
     }
@@ -221,6 +222,7 @@ impl FaultPlan {
         ids
     }
 
+    /// Whether the plan has no remaining shots.
     pub fn is_empty(&self) -> bool {
         self.shots.iter().all(|s| s.times == 0)
     }
@@ -253,6 +255,7 @@ pub struct FaultyFactory<F> {
 }
 
 impl<F: PipelineFactory> FaultyFactory<F> {
+    /// Wrap `inner` so the plan's shots fire during shard execution.
     pub fn new(inner: F, plan: &FaultPlan) -> FaultyFactory<F> {
         FaultyFactory {
             inner,
@@ -295,6 +298,21 @@ impl<F: PipelineFactory> PipelineFactory for FaultyFactory<F> {
 
     fn recycle_region(&self, region: F::In) {
         self.inner.recycle_region(region)
+    }
+
+    // splitting delegates wholesale, so fault injection composes with
+    // intra-region parallelism: a split run under a FaultPlan cuts,
+    // retries and folds exactly like the unwrapped factory would
+    fn splittability(&self) -> crate::exec::factory::Splittability {
+        self.inner.splittability()
+    }
+
+    fn split_region(&self, region: &F::In, max_items: usize) -> Result<Vec<F::In>> {
+        self.inner.split_region(region, max_items)
+    }
+
+    fn combine(&self, acc: &mut F::Out, part: F::Out) -> Result<()> {
+        self.inner.combine(acc, part)
     }
 }
 

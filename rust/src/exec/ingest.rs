@@ -188,6 +188,7 @@ impl<T> Default for ContainerPool<T> {
 }
 
 impl<T> ContainerPool<T> {
+    /// Create an empty pool.
     pub fn new() -> ContainerPool<T> {
         ContainerPool {
             spare: Mutex::new(VecDeque::new()),

@@ -17,6 +17,13 @@
 //!   prefix is complete, over a fixed pre-allocated ring sized by the
 //!   ingest budget (no per-shard allocation). [`ReportBuilder`] folds the
 //!   released results into the same [`ExecReport`] incrementally.
+//!
+//! When a run splits regions (see [`crate::exec::split`]), the
+//! [`RegionFolder`] sits upstream of both shapes: it re-folds a split
+//! region's consecutive part rows into one row — left-linear, in part
+//! order, via the factory's `combine` — before outputs are concatenated
+//! or streamed, so the emitted stream is indistinguishable from an
+//! unsplit run's.
 
 use std::collections::BTreeMap;
 
@@ -25,8 +32,10 @@ use anyhow::{ensure, Result};
 use crate::coordinator::metrics::PipelineMetrics;
 use crate::trace::Trace;
 
+use super::factory::PipelineFactory;
 use super::fault::FaultRecord;
 use super::pool::ShardResult;
+use super::split::SharedSplitQueue;
 
 /// Aggregated execution stats for one worker of a sharded run.
 #[derive(Debug, Clone)]
@@ -87,6 +96,11 @@ pub struct ExecReport<T> {
     /// contributed an empty output slot. Empty on fault-free, fail-fast
     /// and fully-recovered retry runs.
     pub faults: Vec<FaultRecord>,
+    /// Regions the planner cut into sub-shards for intra-region
+    /// parallelism (0 when splitting is off — the default — or when no
+    /// region exceeded
+    /// [`ExecConfig::max_region_items`](super::runner::ExecConfig)).
+    pub split_regions: usize,
     /// Wall-clock seconds of the whole sharded run (plan + pool + merge).
     pub elapsed: f64,
     /// Per-worker breakdown, sorted by worker id (workers that never
@@ -185,6 +199,7 @@ impl<T> Default for ReportBuilder<T> {
 }
 
 impl<T> ReportBuilder<T> {
+    /// Create an empty builder.
     pub fn new() -> ReportBuilder<T> {
         ReportBuilder {
             outputs: Vec::new(),
@@ -263,6 +278,9 @@ impl<T> ReportBuilder<T> {
             pipelines_built,
             retries: self.retries,
             faults,
+            // overwritten by the runner on split runs; plain runs never
+            // cut a region
+            split_regions: 0,
             elapsed,
             per_worker,
             trace: None,
@@ -277,6 +295,122 @@ pub fn merge_results<T>(results: Vec<ShardResult<T>>, elapsed: f64) -> ExecRepor
         b.add(r);
     }
     b.finish(elapsed)
+}
+
+/// Re-folds a split region's part rows into one row before stream-order
+/// emission — the merge half of intra-region parallelism
+/// ([`crate::exec::split`]).
+///
+/// Fed shard results **in stream order** (the materialized join's
+/// sorted results, or the ordered stream the [`StreamMerger`] emits),
+/// it drains one [`SubShard`](super::split::SubShard) identity per
+/// output row from the shared [`SplitQueue`](super::split::SplitQueue)
+/// and folds left-linear in part order: part 0 seeds the accumulator,
+/// each later part folds via the factory's
+/// [`combine`](super::factory::PipelineFactory::combine), the last part
+/// emits. The fold shape is a pure function of part identity — which
+/// worker ran which part, and in what completion order, cannot affect
+/// the result.
+///
+/// Quarantined shards poison every region they cover a part of: a
+/// region with **any** lost part emits nothing (the unsplit run's
+/// empty-slot semantics, at whole-region granularity), rather than a
+/// partial aggregate masquerading as a total.
+pub struct RegionFolder<T> {
+    queue: SharedSplitQueue,
+    acc: Option<T>,
+    poisoned: bool,
+}
+
+impl<T> RegionFolder<T> {
+    /// A folder draining part identities from `queue`.
+    pub fn new(queue: SharedSplitQueue) -> RegionFolder<T> {
+        RegionFolder {
+            queue,
+            acc: None,
+            poisoned: false,
+        }
+    }
+
+    /// Fold one shard's rows in place: `r.outputs` is rewritten to hold
+    /// only the rows of regions this shard **completes** (a region's
+    /// trailing parts may live in a later shard, whose fold will emit
+    /// it). Healthy shards must produce exactly one row per part —
+    /// that's what `Splittability::RegionFold` promises — and violations
+    /// are named errors, not silent misalignment.
+    pub fn fold_shard<F>(&mut self, factory: &F, r: &mut ShardResult<T>) -> Result<()>
+    where
+        F: PipelineFactory<Out = T>,
+    {
+        let mut queue = self.queue.borrow_mut();
+        if r.fault.is_some() {
+            // quarantined: every part this shard covered is lost, so
+            // poison their regions through to each region's last part
+            for _ in 0..r.regions {
+                let sub = queue.pop().ok_or_else(|| {
+                    anyhow::anyhow!("region fold: split queue ran dry on a quarantined shard")
+                })?;
+                self.acc = None;
+                self.poisoned = !sub.is_last();
+            }
+            r.outputs.clear();
+            return Ok(());
+        }
+        ensure!(
+            r.outputs.len() == r.regions,
+            "region fold requires exactly one output row per part, but shard {} \
+             produced {} rows over {} parts — only one-row-per-region stages may \
+             advertise Splittability::RegionFold",
+            r.shard,
+            r.outputs.len(),
+            r.regions
+        );
+        let rows = std::mem::take(&mut r.outputs);
+        let mut folded = Vec::with_capacity(rows.len());
+        for row in rows {
+            let sub = queue.pop().ok_or_else(|| {
+                anyhow::anyhow!("region fold: split queue ran dry mid-stream (executor bug)")
+            })?;
+            if sub.part == 0 {
+                self.poisoned = false;
+                self.acc = Some(row);
+            } else if !self.poisoned {
+                let acc = self.acc.as_mut().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "region fold: part {} of region {} arrived with no accumulator \
+                         (executor bug)",
+                        sub.part,
+                        sub.region
+                    )
+                })?;
+                factory.combine(acc, row)?;
+            }
+            if sub.is_last() {
+                if let Some(done) = self.acc.take() {
+                    folded.push(done);
+                }
+                self.poisoned = false;
+            }
+        }
+        r.outputs = folded;
+        Ok(())
+    }
+
+    /// Assert every part identity was consumed and no region is left
+    /// half-folded — called once after the last shard.
+    pub fn finish(&self) -> Result<()> {
+        ensure!(
+            self.queue.borrow().pending() == 0,
+            "region fold: {} part identities were never matched to output rows \
+             (executor bug)",
+            self.queue.borrow().pending()
+        );
+        ensure!(
+            self.acc.is_none() && !self.poisoned,
+            "region fold: the stream ended mid-region (executor bug)"
+        );
+        Ok(())
+    }
 }
 
 /// Order-restoring window for streaming runs: shard results arrive in
@@ -295,6 +429,7 @@ pub struct StreamMerger<T> {
 }
 
 impl<T> StreamMerger<T> {
+    /// Create a merger with `capacity` in-flight slots.
     pub fn with_capacity(capacity: usize) -> StreamMerger<T> {
         StreamMerger {
             slots: (0..capacity.max(1)).map(|_| None).collect(),
@@ -503,6 +638,108 @@ mod tests {
         m.accept(shard(0, 0, vec![1], 1)).unwrap();
         let err = m.accept(shard(0, 0, vec![1], 1)).unwrap_err();
         assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    mod region_fold {
+        use super::super::*;
+        use super::shard;
+        use crate::exec::factory::{ShardOutput, ShardWorker, Splittability};
+        use crate::exec::split::SplitQueue;
+        use std::cell::RefCell;
+        use std::rc::Rc;
+
+        /// Fold-only toy: combine sums rows; the worker is never run.
+        struct FoldFactory;
+        struct NopWorker;
+        impl ShardWorker for NopWorker {
+            type In = ();
+            type Out = i32;
+            fn run_shard(&mut self, _shard: &[()]) -> Result<ShardOutput<i32>> {
+                unreachable!("folder tests never execute shards")
+            }
+        }
+        impl PipelineFactory for FoldFactory {
+            type In = ();
+            type Out = i32;
+            type Worker = NopWorker;
+            fn make_worker(&self, _worker_id: usize) -> Result<NopWorker> {
+                Ok(NopWorker)
+            }
+            fn splittability(&self) -> Splittability {
+                Splittability::RegionFold
+            }
+            fn combine(&self, acc: &mut i32, part: i32) -> Result<()> {
+                *acc += part;
+                Ok(())
+            }
+        }
+
+        fn queue_of(regions: &[u32]) -> SharedSplitQueue {
+            let mut q = SplitQueue::new(true);
+            for &of in regions {
+                q.push_region(of);
+            }
+            Rc::new(RefCell::new(q))
+        }
+
+        #[test]
+        fn folds_parts_left_linear_across_shard_boundaries() {
+            // region 0 unsplit, region 1 in 3 parts straddling two
+            // shards, region 2 unsplit
+            let queue = queue_of(&[1, 3, 1]);
+            let mut folder = RegionFolder::new(queue);
+            let mut a = shard(0, 0, vec![10, 1, 2], 3); // r0 | r1 parts 0,1
+            let mut b = shard(1, 1, vec![4, 20], 2); // r1 part 2 | r2
+            folder.fold_shard(&FoldFactory, &mut a).unwrap();
+            folder.fold_shard(&FoldFactory, &mut b).unwrap();
+            assert_eq!(a.outputs, vec![10], "region 1 incomplete in shard 0");
+            assert_eq!(b.outputs, vec![1 + 2 + 4, 20], "completed at part 2");
+            folder.finish().unwrap();
+        }
+
+        #[test]
+        fn quarantined_shard_poisons_its_whole_regions() {
+            // region 0: 2 parts, part 0 healthy, part 1 quarantined —
+            // the region must vanish, not emit a half sum
+            let queue = queue_of(&[2, 1]);
+            let mut folder = RegionFolder::new(queue);
+            let mut a = shard(0, 0, vec![5], 1);
+            let mut b = shard(1, 1, vec![], 1);
+            b.regions = 1; // the helper derives regions from outputs
+            b.fault = Some("injected".to_string());
+            let mut c = shard(2, 0, vec![7], 1);
+            folder.fold_shard(&FoldFactory, &mut a).unwrap();
+            folder.fold_shard(&FoldFactory, &mut b).unwrap();
+            folder.fold_shard(&FoldFactory, &mut c).unwrap();
+            assert_eq!(a.outputs, Vec::<i32>::new());
+            assert_eq!(b.outputs, Vec::<i32>::new());
+            assert_eq!(c.outputs, vec![7], "later regions are untouched");
+            folder.finish().unwrap();
+        }
+
+        #[test]
+        fn row_count_mismatch_is_a_named_error() {
+            let queue = queue_of(&[2]);
+            let mut folder = RegionFolder::new(queue);
+            let mut bad = shard(0, 0, vec![1, 2, 3], 2);
+            bad.regions = 2;
+            let err = folder.fold_shard(&FoldFactory, &mut bad).unwrap_err();
+            assert!(
+                err.to_string().contains("exactly one output row per part"),
+                "{err}"
+            );
+        }
+
+        #[test]
+        fn finish_rejects_a_half_folded_region() {
+            let queue = queue_of(&[2]);
+            let mut folder = RegionFolder::new(queue);
+            let mut a = shard(0, 0, vec![1], 1);
+            folder.fold_shard(&FoldFactory, &mut a).unwrap();
+            assert_eq!(a.outputs, Vec::<i32>::new(), "region still open");
+            let err = folder.finish().unwrap_err();
+            assert!(err.to_string().contains("never matched"), "{err}");
+        }
     }
 
     #[test]

@@ -14,7 +14,12 @@
 //! A shard boundary may only fall **between** regions, never inside one: a
 //! [`Blob`](crate::coordinator::enumerate::Blob) (or any
 //! [`Composite`](crate::coordinator::enumerate::Composite)) is enumerated
-//! by exactly one worker, start to finish. Combined with two properties of
+//! by exactly one worker, start to finish. (One sanctioned exception
+//! exists: when [`ExecConfig::max_region_items`] is set and the factory
+//! proves its region state is an associative accumulator, the [`split`]
+//! layer cuts an oversized region into parts *before* planning — each
+//! part then **is** a region to everything below, and the invariant
+//! holds unchanged over parts.) Combined with two properties of
 //! the coordinator this makes sharded execution *deterministic and
 //! bit-identical* to the single-threaded run for region-local pipelines:
 //!
@@ -66,6 +71,14 @@
 //! * [`pool`] — [`WorkerPool`]: `std::thread::scope`-based pool; one
 //!   scheduler per worker, shards claimed from the deques. In streaming
 //!   mode the calling thread drives ingest while workers execute.
+//! * [`split`] — [`SubShard`]/[`SplitSource`]: intra-region sub-shard
+//!   parallelism for associative aggregations. Regions heavier than
+//!   [`ExecConfig::max_region_items`] are cut into parts that run as
+//!   first-class regions (so stealing, retry and tracing compose
+//!   unchanged), and a fixed-shape left-linear fold in part order
+//!   ([`merge::RegionFolder`]) recombines partials **bit-identically**
+//!   to the unsplit run. Factories opt in via
+//!   [`Splittability`]; order-dependent stages refuse by name.
 //! * [`merge`] — [`ExecReport`]: deterministic reassembly of per-shard
 //!   outputs in original stream order plus a global
 //!   [`PipelineMetrics`](crate::coordinator::metrics::PipelineMetrics)
@@ -112,13 +125,17 @@ pub mod merge;
 pub mod plan;
 pub mod pool;
 pub mod runner;
+pub mod split;
 pub mod steal;
 
-pub use factory::{KernelSpawn, PipelineFactory, ShardOutput, ShardWorker, WorkerKernels};
+pub use factory::{
+    KernelSpawn, PipelineFactory, ShardOutput, ShardWorker, Splittability, WorkerKernels,
+};
 pub use fault::{FaultKind, FaultPlan, FaultPolicy, FaultRecord, FaultShot, FaultyFactory};
 pub use ingest::{ContainerPool, IngestPlanner, IngestPolicy, ShardTask};
-pub use merge::{ExecReport, ReportBuilder, StreamMerger, WorkerStats};
+pub use merge::{ExecReport, RegionFolder, ReportBuilder, StreamMerger, WorkerStats};
 pub use plan::{ShardPlan, ShardPolicy};
 pub use pool::{PoolRun, ShardResult, StreamRun, WorkerPool, DEFAULT_WATCHDOG};
 pub use runner::{ExecConfig, ShardedRunner, MAX_INGEST_BUFFER};
+pub use split::{SplitQueue, SplitSource, SubShard};
 pub use steal::{Claim, ClaimMode, CompletionBuffer, Pulse, StealQueues};

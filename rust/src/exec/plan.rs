@@ -116,6 +116,7 @@ impl ShardPlan {
         self.ranges.len()
     }
 
+    /// Whether the plan has no shards.
     pub fn is_empty(&self) -> bool {
         self.ranges.is_empty()
     }

@@ -306,6 +306,7 @@ impl ShardClaimer {
 /// post-prewarm barrier, so pipeline construction is excluded.
 #[derive(Debug)]
 pub struct PoolRun<T> {
+    /// Per-shard results, in shard order.
     pub results: Vec<ShardResult<T>>,
     /// Per-worker drained trace lanes, sorted by worker id.
     pub traces: Vec<WorkerTrace>,
@@ -341,6 +342,7 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
+    /// Create a pool with `workers` threads and default settings.
     pub fn new(workers: usize) -> WorkerPool {
         WorkerPool {
             workers,
@@ -385,6 +387,7 @@ impl WorkerPool {
         self
     }
 
+    /// Worker thread count.
     pub fn workers(&self) -> usize {
         self.workers
     }

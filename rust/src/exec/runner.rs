@@ -2,16 +2,19 @@
 //! shard, how to ingest) and [`ShardedRunner`] (materialized: plan →
 //! pool → merge; streaming: ingest → steal → ordered emit).
 
+use std::cell::RefCell;
+use std::rc::Rc;
 use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
-use super::factory::PipelineFactory;
+use super::factory::{PipelineFactory, Splittability};
 use super::fault::FaultPolicy;
 use super::ingest::IngestPolicy;
-use super::merge::{merge_results, ExecReport, ReportBuilder};
+use super::merge::{merge_results, ExecReport, RegionFolder, ReportBuilder};
 use super::plan::{ShardPlan, ShardPolicy};
 use super::pool::{ShardResult, WorkerPool, DEFAULT_WATCHDOG};
+use super::split::{SharedSplitQueue, SplitQueue, SplitSource};
 use super::steal::ClaimMode;
 use crate::trace::{Trace, TraceOptions, TraceSpec, WorkerTrace};
 use crate::workload::source::RegionSource;
@@ -42,6 +45,16 @@ pub struct ExecConfig {
     /// diagnostic instead of hanging. Must exceed the longest legitimate
     /// shard (and source gap); must be nonzero.
     pub watchdog: Duration,
+    /// Intra-region split threshold: regions heavier than this many
+    /// items are cut into sub-shards that different workers execute
+    /// concurrently, with partials re-folded deterministically so the
+    /// output stays bit-identical (see [`super::split`]). `0` (the
+    /// default) disables splitting — the planner never cuts a region.
+    /// Nonzero with a factory whose
+    /// [`Splittability`](super::factory::Splittability) is `Opaque`
+    /// makes every run refuse with a named error, even when no region
+    /// exceeds the threshold.
+    pub max_region_items: usize,
 }
 
 impl ExecConfig {
@@ -56,6 +69,7 @@ impl ExecConfig {
             trace: None,
             fault: FaultPolicy::default(),
             watchdog: DEFAULT_WATCHDOG,
+            max_region_items: 0,
         }
     }
 
@@ -105,6 +119,16 @@ impl ExecConfig {
     /// here — [`ExecConfig::validate`] rejects it by name.
     pub fn with_watchdog(mut self, deadline: Duration) -> ExecConfig {
         self.watchdog = deadline;
+        self
+    }
+
+    /// Builder-style intra-region split threshold: regions heavier than
+    /// `max_items` are cut into sub-shards (`0` = never split, the
+    /// default). Requires a factory that advertises a splittable
+    /// [`Splittability`](super::factory::Splittability) — opaque stages
+    /// refuse by name rather than reorder silently.
+    pub fn with_max_region_items(mut self, max_items: usize) -> ExecConfig {
+        self.max_region_items = max_items;
         self
     }
 
@@ -170,6 +194,7 @@ pub struct ShardedRunner {
 }
 
 impl ShardedRunner {
+    /// Create a runner over the given config.
     pub fn new(cfg: ExecConfig) -> ShardedRunner {
         ShardedRunner { cfg }
     }
@@ -179,6 +204,7 @@ impl ShardedRunner {
         ShardedRunner::new(ExecConfig::new(workers))
     }
 
+    /// The config this runner executes with.
     pub fn config(&self) -> &ExecConfig {
         &self.cfg
     }
@@ -222,12 +248,79 @@ impl ShardedRunner {
         stream: &[F::In],
     ) -> Result<ExecReport<F::Out>> {
         self.cfg.validate()?;
+        if self.cfg.max_region_items > 0 {
+            return self.run_split(factory, stream);
+        }
         let t0 = Instant::now();
         let weights: Vec<usize> = stream.iter().map(|r| factory.weight(r)).collect();
         let plan = ShardPlan::build(&weights, self.cfg.workers, &self.cfg.shard);
         let planning = t0.elapsed().as_secs_f64();
         let run = self.pool().run_collect(factory, stream, &plan)?;
         let mut report = merge_results(run.results, planning + run.elapsed);
+        if self.cfg.trace.is_some() {
+            Self::attach_trace(&mut report, run.traces);
+        }
+        Ok(report)
+    }
+
+    /// Refuse splitting up front (eagerly, even if no region would
+    /// actually be cut) when the factory's state is not legally
+    /// splittable — the refusal names the stage's reason.
+    fn require_splittable<F: PipelineFactory>(factory: &F) -> Result<Splittability> {
+        let split = factory.splittability();
+        if let Splittability::Opaque { reason } = split {
+            bail!(
+                "region splitting refused: {reason} (this stage's region state is \
+                 not an associative accumulator — run without --max-region-items, \
+                 or pick a splittable mode)"
+            );
+        }
+        Ok(split)
+    }
+
+    /// [`ShardedRunner::run`] with intra-region splitting: every region
+    /// is cut into owned parts (oversized regions into several, the
+    /// rest into a single clone), parts are planned and executed as
+    /// first-class regions, and a [`RegionFolder`] re-folds each split
+    /// region's rows in part order before the stream-order merge — so
+    /// the report's outputs are bit-identical to the unsplit run's for
+    /// [`Splittability::RegionFold`] factories.
+    fn run_split<F: PipelineFactory>(
+        &self,
+        factory: &F,
+        stream: &[F::In],
+    ) -> Result<ExecReport<F::Out>> {
+        let split = Self::require_splittable(factory)?;
+        let record = split == Splittability::RegionFold;
+        let max = self.cfg.max_region_items;
+        let t0 = Instant::now();
+        let mut queue = SplitQueue::new(record);
+        let mut parts: Vec<F::In> = Vec::with_capacity(stream.len());
+        for region in stream {
+            let cut = factory.split_region(region, max)?;
+            ensure!(
+                !cut.is_empty(),
+                "split_region returned no parts for region {}",
+                queue.regions_seen()
+            );
+            queue.push_region(cut.len() as u32);
+            parts.extend(cut);
+        }
+        let weights: Vec<usize> = parts.iter().map(|r| factory.weight(r)).collect();
+        let plan = ShardPlan::build(&weights, self.cfg.workers, &self.cfg.shard);
+        let planning = t0.elapsed().as_secs_f64();
+        let run = self.pool().run_collect(factory, &parts, &plan)?;
+        let split_regions = queue.regions_split();
+        let mut results = run.results;
+        if record {
+            let mut folder = RegionFolder::new(Rc::new(RefCell::new(queue)));
+            for r in &mut results {
+                folder.fold_shard(factory, r)?;
+            }
+            folder.finish()?;
+        }
+        let mut report = merge_results(results, planning + run.elapsed);
+        report.split_regions = split_regions;
         if self.cfg.trace.is_some() {
             Self::attach_trace(&mut report, run.traces);
         }
@@ -275,6 +368,9 @@ impl ShardedRunner {
         K: FnMut(ShardResult<F::Out>) -> Result<()>,
     {
         self.cfg.validate()?;
+        if self.cfg.max_region_items > 0 {
+            return self.run_stream_split(factory, source, sink);
+        }
         let mut builder = ReportBuilder::new();
         let run = self
             .pool()
@@ -283,6 +379,51 @@ impl ShardedRunner {
                 sink(r)
             })?;
         let mut report = builder.finish(run.elapsed);
+        if self.cfg.trace.is_some() {
+            Self::attach_trace(&mut report, run.traces);
+        }
+        Ok(report)
+    }
+
+    /// [`ShardedRunner::run_stream_with`] with intra-region splitting:
+    /// a [`SplitSource`] cuts oversized regions on the fly (everything
+    /// else passes through untouched), parts run as first-class regions
+    /// under the same bounded in-flight budget, and a [`RegionFolder`]
+    /// re-folds each split region's rows before the sink sees them.
+    /// Source, folder and sink all run on the driver thread, so the
+    /// split ledger needs no locking.
+    fn run_stream_split<F, S, K>(
+        &self,
+        factory: &F,
+        source: S,
+        mut sink: K,
+    ) -> Result<ExecReport<F::Out>>
+    where
+        F: PipelineFactory,
+        F::In: Send,
+        S: RegionSource<Region = F::In>,
+        K: FnMut(ShardResult<F::Out>) -> Result<()>,
+    {
+        let split = Self::require_splittable(factory)?;
+        let record = split == Splittability::RegionFold;
+        let queue: SharedSplitQueue = Rc::new(RefCell::new(SplitQueue::new(record)));
+        let source = SplitSource::new(factory, source, self.cfg.max_region_items, queue.clone());
+        let mut folder = record.then(|| RegionFolder::new(queue.clone()));
+        let mut builder = ReportBuilder::new();
+        let run = self
+            .pool()
+            .run_stream_collect(factory, source, &self.cfg.ingest, |mut r| {
+                if let Some(folder) = folder.as_mut() {
+                    folder.fold_shard(factory, &mut r)?;
+                }
+                builder.add_stats(&r);
+                sink(r)
+            })?;
+        if let Some(folder) = &folder {
+            folder.finish()?;
+        }
+        let mut report = builder.finish(run.elapsed);
+        report.split_regions = queue.borrow().regions_split();
         if self.cfg.trace.is_some() {
             Self::attach_trace(&mut report, run.traces);
         }
@@ -444,6 +585,9 @@ mod tests {
         assert_eq!(c.fault.max_attempts(), 3);
         let c = ExecConfig::new(2).with_watchdog(Duration::from_secs(5));
         assert_eq!(c.watchdog, Duration::from_secs(5));
+        let c = ExecConfig::new(2).with_max_region_items(512);
+        assert_eq!(c.max_region_items, 512);
+        assert_eq!(ExecConfig::new(1).max_region_items, 0, "splitting off by default");
         assert_eq!(ExecConfig::new(1).fault, FaultPolicy::FailFast, "fail-fast by default");
         assert_eq!(ExecConfig::new(1).watchdog, DEFAULT_WATCHDOG);
         assert!(ExecConfig::auto().workers >= 1);
@@ -488,6 +632,24 @@ mod tests {
         let untraced = ShardedRunner::with_workers(3).run(&WeightedFactory, &stream).unwrap();
         assert!(untraced.trace.is_none());
         assert_eq!(untraced.outputs, traced.outputs);
+    }
+
+    #[test]
+    fn opaque_factory_refuses_splitting_by_name_even_below_threshold() {
+        // WeightedFactory keeps the default Opaque splittability; a split
+        // threshold must refuse eagerly on both paths — even at a
+        // threshold no region reaches, so a config that *would* reorder
+        // on bigger inputs never half-works
+        let cfg = ExecConfig::new(2).with_max_region_items(10_000);
+        let err = ShardedRunner::new(cfg.clone())
+            .run(&WeightedFactory, &stream_of(10))
+            .unwrap_err();
+        assert!(err.to_string().contains("region splitting refused"), "{err}");
+        assert!(err.to_string().contains("order-dependent"), "{err}");
+        let err = ShardedRunner::new(cfg)
+            .run_stream(&WeightedFactory, SliceSource::new(&stream_of(10)))
+            .unwrap_err();
+        assert!(err.to_string().contains("region splitting refused"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,390 @@
+//! Intra-region sub-shard parallelism: cutting oversized regions into
+//! parts that different workers execute concurrently.
+//!
+//! The executor's planner never splits a region (the region-boundary
+//! invariant in [`crate::exec`]), so one heavy-tailed region pins its
+//! whole shard to a single worker no matter the pool size — the
+//! giant-region straggler. For stages whose region state is an
+//! **associative accumulator** (the enumerated sum's running total, not
+//! taxi's order-dependent line context), that limit is artificial: the
+//! region can be cut into parts, each part reduced independently, and
+//! the partials re-folded in part order.
+//!
+//! The contract that keeps results bit-identical:
+//!
+//! * The factory advertises a [`Splittability`] and implements
+//!   [`PipelineFactory::split_region`] (owned parts, item order
+//!   preserved) and, for [`Splittability::RegionFold`],
+//!   [`PipelineFactory::combine`].
+//! * Parts flow through planning, stealing, retry and tracing as
+//!   **first-class regions** — nothing downstream of the cut is
+//!   special-cased, so everything already built composes (a part is
+//!   retried alone; a part's execution appears as an ordinary shard
+//!   span in the trace).
+//! * The re-fold is a **fixed-shape left-linear chain in part order**:
+//!   part 0's row seeds the accumulator and parts 1..n fold in
+//!   ascending index — a pure function of sub-shard identity, never of
+//!   completion order. For the fused sum this replays the exact f64
+//!   addition sequence of the unsplit pipeline, so the folded result is
+//!   bit-identical, not merely approximately equal.
+//!
+//! [`SubShard`] is the identity (`region`, `part`, `of`) threaded from
+//! the cut to the fold; [`SplitQueue`] carries those identities in
+//! stream order from the splitter to the
+//! [`RegionFolder`](super::merge::RegionFolder); [`SplitSource`] adapts
+//! any [`RegionSource`] so streaming runs cut on the fly under the same
+//! bounded in-flight budget.
+//!
+//! [`Splittability`]: super::factory::Splittability
+//! [`PipelineFactory::split_region`]: super::factory::PipelineFactory::split_region
+//! [`PipelineFactory::combine`]: super::factory::PipelineFactory::combine
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use anyhow::{Error, Result};
+
+use super::factory::PipelineFactory;
+use crate::workload::source::RegionSource;
+
+/// Identity of one part of a (possibly split) region: which region of
+/// the stream it belongs to, its position among the region's parts, and
+/// how many parts the region was cut into. The reduction shape is a
+/// pure function of this identity — `part == 0` seeds the accumulator,
+/// `part + 1 == of` completes the region — so the fold is independent
+/// of completion order by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubShard {
+    /// Stream ordinal of the original region (0-based).
+    pub region: u64,
+    /// Part index within the region (0-based, item order).
+    pub part: u32,
+    /// Total parts the region was cut into (`>= 1`; 1 = unsplit).
+    pub of: u32,
+}
+
+impl SubShard {
+    /// True when this part completes its region.
+    pub fn is_last(&self) -> bool {
+        self.part + 1 == self.of
+    }
+}
+
+/// Stream-order ledger of [`SubShard`] identities, filled by the
+/// splitter (materialized pre-pass or [`SplitSource`]) and drained by
+/// the [`RegionFolder`](super::merge::RegionFolder) as shard results
+/// emit. With `record = false` only the counters are kept (the
+/// [`GlobalFold`](super::factory::Splittability::GlobalFold) path needs
+/// no per-part identities), so an unbounded stream never grows the
+/// queue.
+#[derive(Debug)]
+pub struct SplitQueue {
+    parts: VecDeque<SubShard>,
+    record: bool,
+    regions_seen: u64,
+    regions_split: usize,
+    parts_made: usize,
+}
+
+impl SplitQueue {
+    /// An empty queue. `record = true` stores per-part identities for
+    /// the region fold; `false` keeps counters only.
+    pub fn new(record: bool) -> SplitQueue {
+        SplitQueue {
+            parts: VecDeque::new(),
+            record,
+            regions_seen: 0,
+            regions_split: 0,
+            parts_made: 0,
+        }
+    }
+
+    /// Register the next stream region as cut into `of` parts
+    /// (`of == 1` = passed through unsplit). Must be called in stream
+    /// order — the queue's ordinals are assigned by arrival.
+    pub fn push_region(&mut self, of: u32) {
+        debug_assert!(of >= 1, "a region always has at least one part");
+        let region = self.regions_seen;
+        self.regions_seen += 1;
+        self.parts_made += of as usize;
+        if of > 1 {
+            self.regions_split += 1;
+        }
+        if self.record {
+            for part in 0..of {
+                self.parts.push_back(SubShard { region, part, of });
+            }
+        }
+    }
+
+    /// Drain the next part identity in stream order.
+    pub fn pop(&mut self) -> Option<SubShard> {
+        self.parts.pop_front()
+    }
+
+    /// Recorded part identities not yet drained.
+    pub fn pending(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Regions that were actually cut (`of > 1`).
+    pub fn regions_split(&self) -> usize {
+        self.regions_split
+    }
+
+    /// Total parts produced (split + passthrough).
+    pub fn parts_made(&self) -> usize {
+        self.parts_made
+    }
+
+    /// Regions registered so far.
+    pub fn regions_seen(&self) -> u64 {
+        self.regions_seen
+    }
+}
+
+/// Shared handle to a [`SplitQueue`]: the splitter pushes and the
+/// folder pops on the same (driver) thread, so a plain `Rc<RefCell<_>>`
+/// suffices — no locking on the streaming hot path.
+pub type SharedSplitQueue = Rc<RefCell<SplitQueue>>;
+
+/// A [`RegionSource`] adapter that cuts oversized regions on the fly:
+/// regions whose [`PipelineFactory::weight`] exceeds `max_items` are
+/// replaced by their [`PipelineFactory::split_region`] parts (the
+/// original is recycled through the factory); everything else passes
+/// through untouched. Part identities land in the shared
+/// [`SplitQueue`] in stream order. Split failures are stashed and
+/// surfaced by [`RegionSource::close`], the executor's deferred-error
+/// convention for fallible sources.
+pub struct SplitSource<'f, F: PipelineFactory, S> {
+    factory: &'f F,
+    inner: S,
+    max_items: usize,
+    queue: SharedSplitQueue,
+    pending: VecDeque<F::In>,
+    error: Option<Error>,
+}
+
+impl<'f, F: PipelineFactory, S: RegionSource<Region = F::In>> SplitSource<'f, F, S> {
+    /// Wrap `inner`, cutting regions heavier than `max_items` (which
+    /// must be nonzero — splitting off entirely means not constructing
+    /// a `SplitSource` at all).
+    pub fn new(
+        factory: &'f F,
+        inner: S,
+        max_items: usize,
+        queue: SharedSplitQueue,
+    ) -> SplitSource<'f, F, S> {
+        debug_assert!(max_items > 0, "SplitSource with splitting disabled");
+        SplitSource {
+            factory,
+            inner,
+            max_items,
+            queue,
+            pending: VecDeque::new(),
+            error: None,
+        }
+    }
+}
+
+impl<F: PipelineFactory, S: RegionSource<Region = F::In>> RegionSource for SplitSource<'_, F, S> {
+    type Region = F::In;
+
+    fn next_region(&mut self) -> Option<F::In> {
+        if let Some(part) = self.pending.pop_front() {
+            return Some(part);
+        }
+        if self.error.is_some() {
+            return None;
+        }
+        let region = self.inner.next_region()?;
+        if self.factory.weight(&region) <= self.max_items {
+            self.queue.borrow_mut().push_region(1);
+            return Some(region);
+        }
+        match self.factory.split_region(&region, self.max_items) {
+            Ok(parts) if parts.is_empty() => {
+                self.error = Some(anyhow::anyhow!(
+                    "split_region returned no parts for an oversized region"
+                ));
+                None
+            }
+            Ok(parts) => {
+                self.queue.borrow_mut().push_region(parts.len() as u32);
+                self.pending.extend(parts);
+                // the original was cloned into parts; send it back the
+                // same way an executed region would go
+                self.factory.recycle_region(region);
+                self.pending.pop_front()
+            }
+            Err(e) => {
+                self.error = Some(e.context("splitting an oversized region"));
+                None
+            }
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        // splitting only ever increases the count, so the inner lower
+        // bound (plus buffered parts) stays a valid lower bound; the
+        // upper bound is unknowable without weighing unseen regions
+        let (lower, _) = self.inner.size_hint();
+        (lower + self.pending.len(), None)
+    }
+
+    fn close(&mut self) -> Result<()> {
+        if let Some(e) = self.error.take() {
+            return Err(e);
+        }
+        self.inner.close()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::factory::{ShardOutput, ShardWorker, Splittability};
+    use crate::workload::source::SliceSource;
+
+    /// Toy splittable factory: a region is `Vec<u32>`, weight = len,
+    /// output = one `(first_item, len)` row per region.
+    struct ChunkFactory;
+
+    struct ChunkWorker;
+
+    impl ShardWorker for ChunkWorker {
+        type In = Vec<u32>;
+        type Out = (u32, usize);
+
+        fn run_shard(&mut self, shard: &[Vec<u32>]) -> Result<ShardOutput<(u32, usize)>> {
+            Ok(ShardOutput {
+                outputs: shard.iter().map(|r| (r[0], r.len())).collect(),
+                metrics: Default::default(),
+                invocations: 0,
+            })
+        }
+    }
+
+    impl PipelineFactory for ChunkFactory {
+        type In = Vec<u32>;
+        type Out = (u32, usize);
+        type Worker = ChunkWorker;
+
+        fn make_worker(&self, _worker_id: usize) -> Result<ChunkWorker> {
+            Ok(ChunkWorker)
+        }
+
+        fn weight(&self, region: &Vec<u32>) -> usize {
+            region.len()
+        }
+
+        fn splittability(&self) -> Splittability {
+            Splittability::RegionFold
+        }
+
+        fn split_region(&self, region: &Vec<u32>, max_items: usize) -> Result<Vec<Vec<u32>>> {
+            Ok(region.chunks(max_items.max(1)).map(|c| c.to_vec()).collect())
+        }
+
+        fn combine(&self, acc: &mut (u32, usize), part: (u32, usize)) -> Result<()> {
+            acc.1 += part.1;
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn queue_assigns_identities_in_stream_order() {
+        let mut q = SplitQueue::new(true);
+        q.push_region(1);
+        q.push_region(3);
+        q.push_region(1);
+        assert_eq!(q.regions_seen(), 3);
+        assert_eq!(q.regions_split(), 1);
+        assert_eq!(q.parts_made(), 5);
+        assert_eq!(q.pending(), 5);
+        let expect = [
+            SubShard { region: 0, part: 0, of: 1 },
+            SubShard { region: 1, part: 0, of: 3 },
+            SubShard { region: 1, part: 1, of: 3 },
+            SubShard { region: 1, part: 2, of: 3 },
+            SubShard { region: 2, part: 0, of: 1 },
+        ];
+        for want in expect {
+            let got = q.pop().unwrap();
+            assert_eq!(got, want);
+            assert_eq!(got.is_last(), got.part + 1 == got.of);
+        }
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn unrecorded_queue_counts_without_storing() {
+        let mut q = SplitQueue::new(false);
+        for _ in 0..10_000 {
+            q.push_region(4);
+        }
+        assert_eq!(q.pending(), 0, "GlobalFold never buffers identities");
+        assert_eq!(q.regions_split(), 10_000);
+        assert_eq!(q.parts_made(), 40_000);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn split_source_cuts_only_oversized_regions() {
+        let regions: Vec<Vec<u32>> = vec![
+            vec![1, 2],          // under threshold: passes through
+            (10..17).collect(),  // 7 items: 3 parts of <= 3
+            vec![99, 98, 97],    // exactly at threshold: passes through
+        ];
+        let queue: SharedSplitQueue = Rc::new(RefCell::new(SplitQueue::new(true)));
+        let mut src = SplitSource::new(&ChunkFactory, SliceSource::new(&regions), 3, queue.clone());
+        let mut got = Vec::new();
+        while let Some(r) = src.next_region() {
+            assert!(r.len() <= 3, "no part exceeds the threshold: {r:?}");
+            got.push(r);
+        }
+        src.close().unwrap();
+        let flat: Vec<u32> = got.iter().flatten().copied().collect();
+        let want: Vec<u32> = regions.iter().flatten().copied().collect();
+        assert_eq!(flat, want, "item order is preserved across the cut");
+        assert_eq!(got.len(), 5);
+        let q = queue.borrow();
+        assert_eq!(q.regions_split(), 1);
+        assert_eq!(q.parts_made(), 5);
+        assert_eq!(q.pending(), 5, "identities wait for the folder");
+    }
+
+    #[test]
+    fn split_source_defers_split_errors_to_close() {
+        struct Refusing;
+        struct NoWorker;
+        impl ShardWorker for NoWorker {
+            type In = Vec<u32>;
+            type Out = ();
+            fn run_shard(&mut self, _shard: &[Vec<u32>]) -> Result<ShardOutput<()>> {
+                unreachable!()
+            }
+        }
+        impl PipelineFactory for Refusing {
+            type In = Vec<u32>;
+            type Out = ();
+            type Worker = NoWorker;
+            fn make_worker(&self, _worker_id: usize) -> Result<NoWorker> {
+                Ok(NoWorker)
+            }
+            fn weight(&self, region: &Vec<u32>) -> usize {
+                region.len()
+            }
+            // splittability stays the default Opaque and split_region
+            // the default bail — the source must surface that, not hide
+            // a silently truncated stream
+        }
+        let regions = vec![vec![0u32; 8]];
+        let queue: SharedSplitQueue = Rc::new(RefCell::new(SplitQueue::new(true)));
+        let mut src = SplitSource::new(&Refusing, SliceSource::new(&regions), 2, queue);
+        assert!(src.next_region().is_none(), "error stashes, stream ends");
+        let err = src.close().unwrap_err();
+        assert!(err.to_string().contains("oversized region"), "{err:#}");
+    }
+}

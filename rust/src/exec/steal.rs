@@ -74,6 +74,7 @@ pub enum ClaimMode {
 }
 
 impl ClaimMode {
+    /// Short name used in tables and JSON output.
     pub fn label(&self) -> &'static str {
         match self {
             ClaimMode::Steal => "steal",
@@ -244,6 +245,7 @@ impl<R> Default for CompletionBuffer<R> {
 }
 
 impl<R> CompletionBuffer<R> {
+    /// Create an empty buffer.
     pub fn new() -> CompletionBuffer<R> {
         CompletionBuffer {
             inner: Mutex::new(CompletionInner {

@@ -64,6 +64,7 @@ pub struct SinkStats {
 
 /// A record that can render itself as one JSONL line (sans newline).
 pub trait JsonRecord {
+    /// Append this record's JSON rendering to `line`.
     fn push_json(&self, line: &mut String);
 }
 
@@ -72,6 +73,7 @@ pub trait BinRecord {
     /// Encoded size in bytes (every record identical).
     const RECORD_BYTES: u32;
 
+    /// Append this record's encoding to `out`.
     fn encode(&self, out: &mut Vec<u8>);
 }
 
@@ -177,6 +179,7 @@ impl JsonlSink<BufWriter<File>> {
 }
 
 impl<W: Write> JsonlSink<W> {
+    /// Create a sink writing JSONL to `out`.
     pub fn new(out: W) -> JsonlSink<W> {
         JsonlSink {
             out,
@@ -254,6 +257,7 @@ impl BinarySink<BufWriter<File>> {
 }
 
 impl<W: Write> BinarySink<W> {
+    /// Create a sink writing the binary format to `out`.
     pub fn new(out: W) -> BinarySink<W> {
         BinarySink {
             out,

@@ -57,6 +57,8 @@
 //! every figure of the paper's evaluation plus the `scaling_shards`
 //! worker-scaling curve.
 
+#![warn(missing_docs)]
+
 pub mod apps;
 pub mod bench;
 pub mod coordinator;

@@ -52,7 +52,7 @@ USAGE:
                     [--workers K] [--shards-per-worker S]
                     [--stream] [--ingest-buffer R] [--stats] [--verify]
                     [--fault-policy fail-fast|retry|quarantine] [--fault-retries N]
-                    [--watchdog-secs S]
+                    [--watchdog-secs S] [--max-region-items N]
                     [--input data.rgn] [--output results.jsonl|.bin]
                     [--trace out.trace.json]
   regatta run taxi  [--lines N] [--replicate K] [--variant enum|hybrid|tagged]
@@ -61,7 +61,7 @@ USAGE:
                     [--workers K] [--shards-per-worker S]
                     [--stream] [--ingest-buffer R] [--stats]
                     [--fault-policy fail-fast|retry|quarantine] [--fault-retries N]
-                    [--watchdog-secs S]
+                    [--watchdog-secs S] [--max-region-items N]
                     [--input trips.txt] [--output pairs.jsonl|.bin]
                     [--trace out.trace.json]
   regatta gen sum   --out data.rgn  [--items N] [--region-size N | --region-max N |
@@ -111,6 +111,13 @@ USAGE:
   run); quarantine records the shard in the report and keeps going.
   --watchdog-secs bounds how long the pool waits without any progress
   before failing with a stall diagnosis instead of hanging.
+
+  --max-region-items N splits regions heavier than N items into
+  sub-shards that different workers run concurrently, re-folding the
+  partial aggregates deterministically — output stays bit-identical for
+  the fused enumerated sum; stages with order-dependent region state
+  (taxi, two-stage sum) refuse with a named error. 0 (default) never
+  splits.
 ";
 
 fn main() {
@@ -158,7 +165,7 @@ fn config_to_args(path: &str) -> Result<Args> {
         "items", "region-size", "region-max", "region-skew", "mode", "shape", "width",
         "backend", "threshold", "workers", "shards-per-worker", "ingest-buffer", "lines",
         "replicate", "variant", "policy", "input", "output", "trace", "fault-policy",
-        "fault-retries", "watchdog-secs",
+        "fault-retries", "watchdog-secs", "max-region-items",
     ] {
         if let Some(v) = cfg.get("run", &key.replace('-', "_")) {
             let vs = match v {
@@ -204,6 +211,7 @@ fn exec_config(args: &Args, workers: usize) -> Result<ExecConfig> {
         .streaming(args.get_or("ingest-buffer", 1024)?)
         .with_fault(fault_policy(args)?)
         .with_watchdog(Duration::from_secs(args.get_or("watchdog-secs", 60)?))
+        .with_max_region_items(args.get_or("max-region-items", 0)?)
         .with_trace(
             args.opt("trace")
                 .map(|_| regatta::trace::TraceOptions::default()),
@@ -307,6 +315,12 @@ fn print_exec_stats<T>(report: &regatta::exec::ExecReport<T>) {
         report.shards,
         100.0 * report.utilization()
     );
+    if report.split_regions > 0 {
+        println!(
+            "{} region(s) split into sub-shards (--max-region-items)",
+            report.split_regions
+        );
+    }
     print!("{}", report.worker_table());
     let faults = report.fault_table();
     if !faults.is_empty() {
@@ -429,6 +443,7 @@ fn run_sum(args: &Args) -> Result<()> {
         (outputs, report.metrics, report.elapsed)
     } else if workers <= 1
         && trace_path.is_none()
+        && args.get_or("max-region-items", 0)? == 0usize
         && matches!(fault_policy(args)?, FaultPolicy::FailFast)
     {
         let p = figures::provider(sel, width)?;
@@ -565,6 +580,7 @@ fn run_taxi(args: &Args) -> Result<()> {
         (report.outputs, report.metrics, report.elapsed)
     } else if workers <= 1
         && trace_path.is_none()
+        && args.get_or("max-region-items", 0)? == 0usize
         && matches!(fault_policy(args)?, FaultPolicy::FailFast)
     {
         let p = figures::provider(sel, width)?;
@@ -855,6 +871,9 @@ fn run_bench_ingest(args: &Args) -> Result<()> {
     println!("wrote {path}");
     if let Some(speedup) = ingest::skew_speedup(&report) {
         println!("skewed stream, stealing vs cursor at max workers: {speedup:.2}x");
+    }
+    if let Some(speedup) = ingest::giant_region_speedup(&report) {
+        println!("one giant region, split vs unsplit at max workers: {speedup:.2}x");
     }
     Ok(())
 }

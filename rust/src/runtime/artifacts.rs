@@ -93,10 +93,12 @@ impl ArtifactStore {
         }
     }
 
+    /// The parsed manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Directory the artifacts live in.
     pub fn dir(&self) -> &Path {
         &self.dir
     }

@@ -95,6 +95,7 @@ impl KernelSet {
         })
     }
 
+    /// Which backend this set runs on.
     pub fn backend(&self) -> Backend {
         match self.imp {
             SetImpl::Native => Backend::Native,

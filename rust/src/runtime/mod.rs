@@ -30,13 +30,21 @@ pub use artifacts::{ArtifactStore, Manifest};
 /// Names of the AOT-compiled L2 entry points.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum KernelName {
+    /// Fused filter/scale stage kernel.
     FilterScale,
+    /// Masked lane-sum kernel.
     MaskedSum,
+    /// Whole-region sum kernel.
     SumRegion,
+    /// Segmented (per-region) sum kernel.
     SegmentedSum,
+    /// Tagged per-region sum kernel.
     TaggedSumRegion,
+    /// Taxi character-classification kernel.
     CharClassify,
+    /// Taxi coordinate-parse kernel.
     CoordParse,
+    /// Fused tagged character-stage kernel.
     TaggedCharStage,
 }
 
@@ -72,7 +80,9 @@ impl KernelName {
 
 /// A compiled executable for one (kernel, width).
 pub struct LoadedKernel {
+    /// Kernel name.
     pub name: KernelName,
+    /// Ensemble width it was compiled for.
     pub width: usize,
     exe: xla::PjRtLoadedExecutable,
     /// Cumulative number of invocations (the SIMD cost unit).
@@ -121,10 +131,12 @@ impl Engine {
         Engine::new(ArtifactStore::open(dir)?)
     }
 
+    /// The artifact store backing this engine.
     pub fn store(&self) -> &ArtifactStore {
         &self.store
     }
 
+    /// PJRT platform name (e.g. `"cpu"`).
     pub fn platform_name(&self) -> String {
         self.client.platform_name()
     }

@@ -45,6 +45,7 @@ pub struct ChunkSource<C> {
 }
 
 impl<C> ChunkSource<C> {
+    /// Create a shared source over the given chunks.
     pub fn new(chunks: Vec<C>) -> Arc<ChunkSource<C>> {
         Arc::new(ChunkSource {
             chunks,
@@ -58,10 +59,12 @@ impl<C> ChunkSource<C> {
         self.chunks.get(i)
     }
 
+    /// Total chunks.
     pub fn len(&self) -> usize {
         self.chunks.len()
     }
 
+    /// Whether there are no chunks.
     pub fn is_empty(&self) -> bool {
         self.chunks.is_empty()
     }
@@ -70,10 +73,12 @@ impl<C> ChunkSource<C> {
 /// The machine: runs one pipeline instance per worker over a chunked
 /// input stream.
 pub struct SimdMachine {
+    /// Machine configuration.
     pub cfg: SimdConfig,
 }
 
 impl SimdMachine {
+    /// Create a machine with the given config.
     pub fn new(cfg: SimdConfig) -> SimdMachine {
         SimdMachine { cfg }
     }

@@ -142,8 +142,11 @@ pub enum TraceEvent {
 /// epoch. Instantaneous events carry `t0_ns == t1_ns`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TraceRecord {
+    /// Span start, nanoseconds since the shared epoch.
     pub t0_ns: u64,
+    /// Span end, nanoseconds since the shared epoch.
     pub t1_ns: u64,
+    /// What happened.
     pub event: TraceEvent,
 }
 
@@ -178,10 +181,12 @@ impl TraceBuffer {
         }
     }
 
+    /// Recorded events.
     pub fn len(&self) -> usize {
         self.records.len()
     }
 
+    /// Whether nothing was recorded.
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }
@@ -191,6 +196,7 @@ impl TraceBuffer {
         self.dropped
     }
 
+    /// The recorded events, in push order.
     pub fn records(&self) -> &[TraceRecord] {
         &self.records
     }

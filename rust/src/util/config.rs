@@ -24,10 +24,15 @@ use anyhow::{anyhow, bail, Context, Result};
 /// A configuration value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A string value.
     Str(String),
+    /// An integer value.
     Int(i64),
+    /// A float value.
     Float(f64),
+    /// A boolean value.
     Bool(bool),
+    /// A list of values.
     List(Vec<Value>),
 }
 
@@ -151,6 +156,7 @@ impl Config {
         }
     }
 
+    /// String at `[section] key`, or `default` if absent.
     pub fn str_or(&self, section: &str, key: &str, default: &str) -> Result<String> {
         Ok(self
             .want(section, key, |v| match v {
@@ -160,6 +166,7 @@ impl Config {
             .unwrap_or_else(|| default.to_string()))
     }
 
+    /// Integer at `[section] key`, or `default` if absent.
     pub fn int_or(&self, section: &str, key: &str, default: i64) -> Result<i64> {
         Ok(self
             .want(section, key, |v| match v {
@@ -169,11 +176,13 @@ impl Config {
             .unwrap_or(default))
     }
 
+    /// Non-negative integer at `[section] key`, or `default` if absent.
     pub fn usize_or(&self, section: &str, key: &str, default: usize) -> Result<usize> {
         let v = self.int_or(section, key, default as i64)?;
         usize::try_from(v).with_context(|| format!("[{section}] {key} must be non-negative"))
     }
 
+    /// Float (or integer) at `[section] key`, or `default` if absent.
     pub fn float_or(&self, section: &str, key: &str, default: f64) -> Result<f64> {
         Ok(self
             .want(section, key, |v| match v {
@@ -184,6 +193,7 @@ impl Config {
             .unwrap_or(default))
     }
 
+    /// Boolean at `[section] key`, or `default` if absent.
     pub fn bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool> {
         Ok(self
             .want(section, key, |v| match v {
@@ -193,6 +203,7 @@ impl Config {
             .unwrap_or(default))
     }
 
+    /// Integer list at `[section] key`, or `default` if absent.
     pub fn int_list_or(&self, section: &str, key: &str, default: &[i64]) -> Result<Vec<i64>> {
         Ok(self
             .want(section, key, |v| match v {

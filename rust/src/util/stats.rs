@@ -11,6 +11,7 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Create an empty summary.
     pub fn new() -> Self {
         Summary {
             min: f64::INFINITY,
@@ -19,6 +20,7 @@ impl Summary {
         }
     }
 
+    /// Fold one sample in.
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         let delta = x - self.mean;
@@ -28,14 +30,17 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Samples folded in.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Mean of the samples.
     pub fn mean(&self) -> f64 {
         self.mean
     }
 
+    /// Variance of the folded samples.
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -44,10 +49,12 @@ impl Summary {
         }
     }
 
+    /// Standard deviation of the folded samples.
     pub fn stddev(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest sample.
     pub fn min(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -56,6 +63,7 @@ impl Summary {
         }
     }
 
+    /// Largest sample.
     pub fn max(&self) -> f64 {
         if self.n == 0 {
             0.0

@@ -78,6 +78,7 @@ pub struct GenBlobSource {
 }
 
 impl GenBlobSource {
+    /// Create a generator source producing `total_items` items under `spec`.
     pub fn new(total_items: usize, spec: RegionSpec, seed: u64) -> GenBlobSource {
         GenBlobSource {
             rng: Prng::new(seed),

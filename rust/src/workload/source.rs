@@ -83,6 +83,7 @@ pub struct SliceSource<'a, T: Clone> {
 }
 
 impl<'a, T: Clone> SliceSource<'a, T> {
+    /// Create a source over the slice.
     pub fn new(items: &'a [T]) -> SliceSource<'a, T> {
         SliceSource { items, next: 0 }
     }
@@ -109,6 +110,7 @@ pub struct IterSource<I> {
 }
 
 impl<I: Iterator> IterSource<I> {
+    /// Create a source over the iterator.
     pub fn new(iter: I) -> IterSource<I> {
         IterSource { iter }
     }

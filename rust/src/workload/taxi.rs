@@ -34,7 +34,9 @@ pub struct TaxiLine {
     /// Shared raw text (the "GPU memory" buffer; `Arc`: all worker
     /// processors view the same device memory).
     pub text: Arc<Vec<u8>>,
+    /// Byte offset of the line start in `text`.
     pub start: usize,
+    /// Line length in bytes.
     pub len: usize,
     /// Numeric tag parsed from the line head (parsed once per line).
     pub tag: u32,
@@ -61,7 +63,9 @@ impl Composite for TaxiLine {
 /// A generated workload: the raw text plus its line index.
 #[derive(Debug, Clone)]
 pub struct TaxiWorkload {
+    /// The raw text buffer, shared by every line.
     pub text: Arc<Vec<u8>>,
+    /// Line index into `text`, in stream order.
     pub lines: Vec<TaxiLine>,
     /// Ground truth: total well-formed coordinate pairs in the text.
     pub total_pairs: usize,
@@ -70,7 +74,9 @@ pub struct TaxiWorkload {
 /// Tunable generator parameters (defaults = the paper's statistics).
 #[derive(Debug, Clone, Copy)]
 pub struct TaxiGenConfig {
+    /// Mean coordinate pairs per line.
     pub avg_pairs: usize,
+    /// Mean characters per line.
     pub avg_line_len: usize,
 }
 

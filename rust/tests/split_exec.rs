@@ -1,0 +1,608 @@
+//! Intra-region sub-shard parallelism ≡ the unsplit run (see
+//! `regatta::exec::split`).
+//!
+//! The splitting contract under test:
+//!
+//! 1. **Bit-identity** — with [`ExecConfig::max_region_items`] set, the
+//!    fused enumerated sum's outputs are bit-for-bit identical to the
+//!    unsplit single-threaded run, for workers 1–8, materialized and
+//!    streamed, across thresholds and region mixes (parts are cut at
+//!    ensemble boundaries and re-folded left-linear in part order, so
+//!    the f64 addition sequence is replayed exactly).
+//! 2. **Threshold edges** — a region exactly at the threshold is not
+//!    split; 1-item regions pass through any threshold (even below the
+//!    SIMD width); an all-giant stream splits every region; threshold 0
+//!    is the old planner, bit for bit.
+//! 3. **Order independence** — the reduction shape is a pure function of
+//!    part index, never completion order: an adversarial factory whose
+//!    first parts finish *last* (under stealing, workers 1–4) still
+//!    folds with an order-sensitive combine to the workers-1 result.
+//! 4. **Named refusal** — order-dependent stages (taxi's line parse, the
+//!    two-stage sum) refuse `--max-region-items` eagerly and by name,
+//!    on both the materialized and streaming paths, and the apps'
+//!    single-worker inline fast path does not bypass the refusal.
+//! 5. **Fault composition** — retry on a split run is still
+//!    bit-identical; quarantine on a split run drops *whole* regions
+//!    (never a partial fold), leaving every survivor bit-identical.
+//!
+//! [`ExecConfig::max_region_items`]: regatta::exec::ExecConfig
+
+use std::rc::Rc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use regatta::apps::sum::{
+    finish_sharded_outputs, SumApp, SumConfig, SumFactory, SumMode, SumShape,
+};
+use regatta::apps::taxi::{TaxiApp, TaxiConfig, TaxiFactory, TaxiVariant};
+use regatta::exec::{
+    ClaimMode, ExecConfig, FaultPlan, FaultPolicy, FaultyFactory, KernelSpawn, PipelineFactory,
+    ShardOutput, ShardWorker, ShardedRunner, Splittability,
+};
+use regatta::prelude::Policy;
+use regatta::runtime::kernels::KernelSet;
+use regatta::workload::regions::{gen_blobs, RegionSpec};
+use regatta::workload::source::SliceSource;
+use regatta::workload::taxi::{generate, TaxiGenConfig, TaxiWorkload};
+
+const WIDTH: usize = 8;
+
+fn sum_factory(mode: SumMode, shape: SumShape) -> SumFactory {
+    SumFactory::new(
+        SumConfig {
+            width: WIDTH,
+            mode,
+            shape,
+            data_cap: 256,
+            signal_cap: 64,
+            ..Default::default()
+        },
+        KernelSpawn::Native,
+    )
+}
+
+fn sum_app(mode: SumMode, shape: SumShape) -> SumApp {
+    SumApp::new(
+        SumConfig {
+            width: WIDTH,
+            mode,
+            shape,
+            data_cap: 256,
+            signal_cap: 64,
+            ..Default::default()
+        },
+        Rc::new(KernelSet::native(WIDTH)),
+    )
+}
+
+/// Region mixes that exercise the splitter: giant regions, a mix of
+/// giant and tiny, threshold-straddling sizes, and skew.
+fn region_mixes() -> Vec<(u64, RegionSpec)> {
+    vec![
+        (1, RegionSpec::Fixed { size: 40 * WIDTH }),
+        (2, RegionSpec::Fixed { size: 3 * WIDTH + 1 }),
+        (3, RegionSpec::Uniform { max: 12 * WIDTH }),
+        (4, RegionSpec::Skewed { max: 64 * WIDTH }),
+    ]
+}
+
+fn assert_sums_bitwise(got: &[(u64, f64)], want: &[(u64, f64)], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: output count");
+    for (i, ((gi, gv), (wi, wv))) in got.iter().zip(want).enumerate() {
+        assert_eq!(gi, wi, "{ctx}: region id at {i}");
+        assert_eq!(
+            gv.to_bits(),
+            wv.to_bits(),
+            "{ctx}: region {gi} sum {gv} vs {wv}"
+        );
+    }
+}
+
+fn split_exec(workers: usize, max_items: usize) -> ExecConfig {
+    ExecConfig::new(workers)
+        .with_shards_per_worker(2)
+        .streaming(64)
+        .with_max_region_items(max_items)
+}
+
+// ---- bit-identity ---------------------------------------------------
+
+#[test]
+fn split_fused_sum_is_bitwise_identical_materialized_and_streamed() {
+    let app = sum_app(SumMode::Enumerated, SumShape::Fused);
+    let factory = sum_factory(SumMode::Enumerated, SumShape::Fused);
+    for (seed, spec) in region_mixes() {
+        let blobs = gen_blobs(4000, spec, seed);
+        let single = app.run(&blobs).unwrap();
+        for workers in [1usize, 2, 4, 8] {
+            for max_items in [WIDTH, 5 * WIDTH] {
+                let runner = ShardedRunner::new(split_exec(workers, max_items));
+                for streamed in [false, true] {
+                    let ctx = format!(
+                        "{spec:?} seed {seed} workers {workers} max {max_items} {}",
+                        if streamed { "streamed" } else { "materialized" }
+                    );
+                    let report = if streamed {
+                        runner.run_stream(&factory, SliceSource::new(&blobs)).unwrap()
+                    } else {
+                        runner.run(&factory, &blobs).unwrap()
+                    };
+                    assert_sums_bitwise(&report.outputs, &single.outputs, &ctx);
+                    let oversized = blobs
+                        .iter()
+                        .filter(|b| b.elems.len().max(1) > max_items)
+                        .count();
+                    assert_eq!(report.split_regions, oversized, "{ctx}: split count");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn app_level_split_runs_match_the_plain_run() {
+    // the same contract through the app front door (SumApp applies its
+    // post-merge finish on top of the executor)
+    let app = sum_app(SumMode::Enumerated, SumShape::Fused);
+    let blobs = gen_blobs(3000, RegionSpec::Skewed { max: 48 * WIDTH }, 9);
+    let single = app.run(&blobs).unwrap();
+    for workers in [1usize, 3, 8] {
+        let exec = split_exec(workers, 2 * WIDTH);
+        let sharded = app.run_sharded_with(&blobs, &exec).unwrap();
+        assert_sums_bitwise(
+            &sharded.outputs,
+            &single.outputs,
+            &format!("sharded workers {workers}"),
+        );
+        let streamed = app.run_streaming(SliceSource::new(&blobs), &exec).unwrap();
+        assert_sums_bitwise(
+            &streamed.outputs,
+            &single.outputs,
+            &format!("streamed workers {workers}"),
+        );
+    }
+}
+
+// ---- threshold edges ------------------------------------------------
+
+#[test]
+fn threshold_exactly_at_region_size_does_not_split() {
+    let factory = sum_factory(SumMode::Enumerated, SumShape::Fused);
+    let size = 3 * WIDTH;
+    let blobs = gen_blobs(1200, RegionSpec::Fixed { size }, 41);
+    let single = ShardedRunner::new(ExecConfig::new(1)).run(&factory, &blobs).unwrap();
+    for streamed in [false, true] {
+        // at the threshold: untouched
+        let runner = ShardedRunner::new(split_exec(4, size));
+        let at = if streamed {
+            runner.run_stream(&factory, SliceSource::new(&blobs)).unwrap()
+        } else {
+            runner.run(&factory, &blobs).unwrap()
+        };
+        assert_eq!(at.split_regions, 0, "streamed {streamed}: at-threshold regions stay whole");
+        assert_sums_bitwise(&at.outputs, &single.outputs, "at threshold");
+        // one item under: every region is cut
+        let runner = ShardedRunner::new(split_exec(4, size - 1));
+        let under = if streamed {
+            runner.run_stream(&factory, SliceSource::new(&blobs)).unwrap()
+        } else {
+            runner.run(&factory, &blobs).unwrap()
+        };
+        assert_eq!(
+            under.split_regions,
+            blobs.len(),
+            "streamed {streamed}: one item under the threshold cuts every region"
+        );
+        assert_sums_bitwise(&under.outputs, &single.outputs, "under threshold");
+    }
+}
+
+#[test]
+fn one_item_regions_pass_through_any_threshold() {
+    // a 1-item region can never be cut, so even a threshold below the
+    // SIMD width is legal for it (the ensemble-alignment rule only
+    // applies to regions that actually split)
+    let factory = sum_factory(SumMode::Enumerated, SumShape::Fused);
+    let blobs = gen_blobs(64, RegionSpec::Fixed { size: 1 }, 43);
+    let single = ShardedRunner::new(ExecConfig::new(1)).run(&factory, &blobs).unwrap();
+    for streamed in [false, true] {
+        let runner = ShardedRunner::new(split_exec(3, 1));
+        let report = if streamed {
+            runner.run_stream(&factory, SliceSource::new(&blobs)).unwrap()
+        } else {
+            runner.run(&factory, &blobs).unwrap()
+        };
+        assert_eq!(report.split_regions, 0, "streamed {streamed}");
+        assert_sums_bitwise(&report.outputs, &single.outputs, "one-item regions");
+    }
+}
+
+#[test]
+fn all_giant_stream_splits_every_region_and_stays_bitwise() {
+    let factory = sum_factory(SumMode::Enumerated, SumShape::Fused);
+    let blobs = gen_blobs(6 * 16 * WIDTH, RegionSpec::Fixed { size: 16 * WIDTH }, 47);
+    assert_eq!(blobs.len(), 6, "sanity: six giant regions");
+    let single = ShardedRunner::new(ExecConfig::new(1)).run(&factory, &blobs).unwrap();
+    for workers in [2usize, 4] {
+        for streamed in [false, true] {
+            let runner = ShardedRunner::new(split_exec(workers, WIDTH));
+            let report = if streamed {
+                runner.run_stream(&factory, SliceSource::new(&blobs)).unwrap()
+            } else {
+                runner.run(&factory, &blobs).unwrap()
+            };
+            let ctx = format!("workers {workers} streamed {streamed}");
+            assert_eq!(report.split_regions, blobs.len(), "{ctx}: every region cut");
+            assert!(report.shards > 1, "{ctx}: parts spread across shards");
+            assert_sums_bitwise(&report.outputs, &single.outputs, &ctx);
+        }
+    }
+}
+
+#[test]
+fn threshold_zero_is_the_unsplit_planner_bit_for_bit() {
+    let factory = sum_factory(SumMode::Enumerated, SumShape::Fused);
+    let blobs = gen_blobs(2000, RegionSpec::Uniform { max: 10 * WIDTH }, 53);
+    let plain = ShardedRunner::new(ExecConfig::new(4).with_shards_per_worker(2))
+        .run(&factory, &blobs)
+        .unwrap();
+    let zeroed = ShardedRunner::new(
+        ExecConfig::new(4).with_shards_per_worker(2).with_max_region_items(0),
+    )
+    .run(&factory, &blobs)
+    .unwrap();
+    assert_eq!(zeroed.split_regions, 0);
+    assert_eq!(zeroed.shards, plain.shards, "same shard cuts");
+    assert_sums_bitwise(&zeroed.outputs, &plain.outputs, "threshold 0");
+}
+
+#[test]
+fn split_tagged_sum_keeps_order_and_tolerance() {
+    // GlobalFold: the tagged baseline's rows pass through the merge and
+    // are coalesced globally after the run, so splitting keeps the same
+    // (weaker) guarantee sharding already has: exact tag order, values
+    // within float-reassociation tolerance.
+    let app = sum_app(SumMode::Tagged, SumShape::Fused);
+    let factory = sum_factory(SumMode::Tagged, SumShape::Fused);
+    let blobs = gen_blobs(1800, RegionSpec::Fixed { size: 6 * WIDTH }, 59);
+    let single = app.run(&blobs).unwrap();
+    for streamed in [false, true] {
+        let runner = ShardedRunner::new(split_exec(4, WIDTH));
+        let report = if streamed {
+            runner.run_stream(&factory, SliceSource::new(&blobs)).unwrap()
+        } else {
+            runner.run(&factory, &blobs).unwrap()
+        };
+        assert_eq!(report.split_regions, blobs.len(), "every region cut");
+        let got = finish_sharded_outputs(SumMode::Tagged, report.outputs);
+        assert_eq!(got.len(), single.outputs.len(), "streamed {streamed}");
+        for ((gi, gv), (wi, wv)) in got.iter().zip(&single.outputs) {
+            assert_eq!(gi, wi, "streamed {streamed}: tag order");
+            assert!(
+                (gv - wv).abs() <= 1e-3 * (1.0 + wv.abs()),
+                "streamed {streamed}: tag {gi}: {gv} vs {wv}"
+            );
+        }
+    }
+}
+
+// ---- completion-order independence ----------------------------------
+
+/// Adversarial splittable toy: regions of `u32`s whose first part is the
+/// *slowest* (a sentinel first value makes its shard sleep), so later
+/// parts complete first under stealing. The per-part output folds values
+/// with an order-sensitive hash, and `combine` chains part hashes with
+/// another order-sensitive fold — any completion-order leakage into the
+/// reduction produces a different number, not a subtle float wobble.
+struct HashFactory;
+
+#[derive(Clone)]
+struct HashRegion {
+    id: u64,
+    vals: Vec<u32>,
+}
+
+const SLOW: u32 = 0xDEAD;
+
+struct HashWorker;
+
+impl ShardWorker for HashWorker {
+    type In = HashRegion;
+    type Out = (u64, u64);
+
+    fn run_shard(&mut self, shard: &[HashRegion]) -> Result<ShardOutput<(u64, u64)>> {
+        let mut outputs = Vec::with_capacity(shard.len());
+        for r in shard {
+            if r.vals.first() == Some(&SLOW) {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            let mut h = 0u64;
+            for &v in &r.vals {
+                h = h.wrapping_mul(31).wrapping_add(v as u64);
+            }
+            outputs.push((r.id, h));
+        }
+        Ok(ShardOutput {
+            outputs,
+            metrics: Default::default(),
+            invocations: shard.len() as u64,
+        })
+    }
+}
+
+impl PipelineFactory for HashFactory {
+    type In = HashRegion;
+    type Out = (u64, u64);
+    type Worker = HashWorker;
+
+    fn make_worker(&self, _worker_id: usize) -> Result<HashWorker> {
+        Ok(HashWorker)
+    }
+
+    fn weight(&self, r: &HashRegion) -> usize {
+        r.vals.len().max(1)
+    }
+
+    fn splittability(&self) -> Splittability {
+        Splittability::RegionFold
+    }
+
+    fn split_region(&self, r: &HashRegion, max_items: usize) -> Result<Vec<HashRegion>> {
+        if r.vals.len().max(1) <= max_items {
+            return Ok(vec![r.clone()]);
+        }
+        Ok(r.vals
+            .chunks(max_items)
+            .map(|c| HashRegion {
+                id: r.id,
+                vals: c.to_vec(),
+            })
+            .collect())
+    }
+
+    fn combine(&self, acc: &mut (u64, u64), part: (u64, u64)) -> Result<()> {
+        anyhow::ensure!(acc.0 == part.0, "fold crossed regions");
+        acc.1 = acc.1.wrapping_mul(1_000_003).wrapping_add(part.1);
+        Ok(())
+    }
+}
+
+#[test]
+fn reduction_shape_is_independent_of_completion_order() {
+    // first part of every region sleeps; everything else is instant
+    let regions: Vec<HashRegion> = (0..12)
+        .map(|id| {
+            let mut vals = vec![SLOW];
+            vals.extend((0..47u32).map(|i| i * 7 + id as u32));
+            HashRegion { id, vals }
+        })
+        .collect();
+    let factory = HashFactory;
+    let canonical = ShardedRunner::new(split_exec(1, 8))
+        .run(&factory, &regions)
+        .unwrap();
+    assert_eq!(canonical.split_regions, regions.len());
+    for round in 0..3 {
+        for workers in [2usize, 4] {
+            for streamed in [false, true] {
+                let runner =
+                    ShardedRunner::new(split_exec(workers, 8).with_claim(ClaimMode::Steal));
+                let report = if streamed {
+                    runner.run_stream(&factory, SliceSource::new(&regions)).unwrap()
+                } else {
+                    runner.run(&factory, &regions).unwrap()
+                };
+                assert_eq!(
+                    report.outputs, canonical.outputs,
+                    "round {round} workers {workers} streamed {streamed}: \
+                     the fold followed completion order, not part order"
+                );
+            }
+        }
+    }
+}
+
+// ---- named refusal --------------------------------------------------
+
+fn taxi_workload() -> TaxiWorkload {
+    generate(
+        16,
+        TaxiGenConfig {
+            avg_pairs: 4,
+            avg_line_len: 120,
+        },
+        71,
+    )
+}
+
+fn taxi_factory(w: &TaxiWorkload) -> TaxiFactory {
+    TaxiFactory::new(
+        TaxiConfig {
+            width: WIDTH,
+            variant: TaxiVariant::Enumerated,
+            data_cap: 512,
+            signal_cap: 128,
+            policy: Policy::GreedyOccupancy,
+        },
+        KernelSpawn::Native,
+        w.text.clone(),
+    )
+}
+
+fn assert_refusal(err: anyhow::Error, needle: &str, ctx: &str) {
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("region splitting refused"),
+        "{ctx}: not a refusal: {msg}"
+    );
+    assert!(msg.contains(needle), "{ctx}: reason missing {needle:?}: {msg}");
+}
+
+#[test]
+fn taxi_refuses_splitting_by_name_even_below_threshold() {
+    // eager refusal: no line is anywhere near the threshold, the config
+    // alone is the error (silent ignoring would mask typos)
+    let w = taxi_workload();
+    let factory = taxi_factory(&w);
+    let runner = ShardedRunner::new(split_exec(2, 1 << 20));
+    let err = runner.run(&factory, &w.lines).unwrap_err();
+    assert_refusal(err, "order-dependent", "taxi materialized");
+    let err = runner
+        .run_stream(&factory, SliceSource::new(&w.lines))
+        .unwrap_err();
+    assert_refusal(err, "order-dependent", "taxi streamed");
+}
+
+#[test]
+fn two_stage_sum_refuses_splitting_by_name() {
+    let factory = sum_factory(SumMode::Enumerated, SumShape::TwoStage);
+    let blobs = gen_blobs(500, RegionSpec::Fixed { size: 20 * WIDTH }, 73);
+    let runner = ShardedRunner::new(split_exec(2, WIDTH));
+    let err = runner.run(&factory, &blobs).unwrap_err();
+    assert_refusal(err, "two-stage", "two-stage materialized");
+    let err = runner
+        .run_stream(&factory, SliceSource::new(&blobs))
+        .unwrap_err();
+    assert_refusal(err, "two-stage", "two-stage streamed");
+}
+
+#[test]
+fn single_worker_inline_fast_path_does_not_bypass_the_refusal() {
+    // workers = 1 with default everything short-circuits to a plain run —
+    // but asking for splitting must still reach the executor's refusal,
+    // not silently run unsplit
+    let w = taxi_workload();
+    let app = TaxiApp::new(
+        TaxiConfig {
+            width: WIDTH,
+            variant: TaxiVariant::Enumerated,
+            data_cap: 512,
+            signal_cap: 128,
+            policy: Policy::GreedyOccupancy,
+        },
+        Rc::new(KernelSet::native(WIDTH)),
+    );
+    let exec = ExecConfig::new(1).with_max_region_items(1 << 20);
+    let err = app.run_sharded_with(&w, &exec).unwrap_err();
+    assert_refusal(err, "order-dependent", "taxi inline");
+}
+
+#[test]
+fn threshold_below_the_simd_width_refuses_by_name() {
+    // a threshold that would cut inside one ensemble breaks the exact
+    // f64-addition-sequence replay, so the factory refuses it whenever a
+    // region would actually split
+    let factory = sum_factory(SumMode::Enumerated, SumShape::Fused);
+    let blobs = gen_blobs(400, RegionSpec::Fixed { size: 5 * WIDTH }, 79);
+    let runner = ShardedRunner::new(split_exec(2, WIDTH / 2));
+    for streamed in [false, true] {
+        let err = if streamed {
+            runner
+                .run_stream(&factory, SliceSource::new(&blobs))
+                .unwrap_err()
+        } else {
+            runner.run(&factory, &blobs).unwrap_err()
+        };
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("ensemble-aligned"),
+            "streamed {streamed}: {msg}"
+        );
+    }
+}
+
+// ---- fault composition ----------------------------------------------
+
+#[test]
+fn retry_on_a_split_run_is_still_bitwise_identical() {
+    let factory = sum_factory(SumMode::Enumerated, SumShape::Fused);
+    let blobs = gen_blobs(2000, RegionSpec::Skewed { max: 40 * WIDTH }, 83);
+    let single = ShardedRunner::new(ExecConfig::new(1)).run(&factory, &blobs).unwrap();
+    for streamed in [false, true] {
+        let ctx = format!("streamed {streamed}");
+        let clean_runner = ShardedRunner::new(split_exec(4, 2 * WIDTH));
+        let clean = if streamed {
+            clean_runner
+                .run_stream(&factory, SliceSource::new(&blobs))
+                .unwrap()
+        } else {
+            clean_runner.run(&factory, &blobs).unwrap()
+        };
+        assert_sums_bitwise(&clean.outputs, &single.outputs, &ctx);
+        // poison every shard once: retries rebuild and rerun, the fold
+        // still sees exactly one row per part
+        let mut plan = FaultPlan::new();
+        for shard in 0..clean.shards {
+            plan = if shard % 2 == 0 {
+                plan.panic_at(shard)
+            } else {
+                plan.error_at(shard)
+            };
+        }
+        let faulty = FaultyFactory::new(sum_factory(SumMode::Enumerated, SumShape::Fused), &plan);
+        let runner =
+            ShardedRunner::new(split_exec(4, 2 * WIDTH).with_fault(FaultPolicy::retry(3)));
+        let report = if streamed {
+            runner.run_stream(&faulty, SliceSource::new(&blobs)).unwrap()
+        } else {
+            runner.run(&faulty, &blobs).unwrap()
+        };
+        assert_eq!(faulty.remaining(), 0, "{ctx}: every planned shot fired");
+        assert_eq!(report.retries, clean.shards as u64, "{ctx}: one retry per shot");
+        assert_sums_bitwise(&report.outputs, &single.outputs, &ctx);
+    }
+}
+
+#[test]
+fn quarantine_on_a_split_run_drops_whole_regions_only() {
+    // giant regions cut into many parts across several shards: losing a
+    // shard must cost every region it covers *entirely* — a surviving id
+    // folded from a subset of its parts would carry a partial (wrong)
+    // value, which bitwise comparison against the clean run would catch
+    let factory = sum_factory(SumMode::Enumerated, SumShape::Fused);
+    let blobs = gen_blobs(8 * 16 * WIDTH, RegionSpec::Fixed { size: 16 * WIDTH }, 89);
+    let single = ShardedRunner::new(ExecConfig::new(1)).run(&factory, &blobs).unwrap();
+    for streamed in [false, true] {
+        let ctx = format!("streamed {streamed}");
+        let clean_runner = ShardedRunner::new(split_exec(3, WIDTH));
+        let clean = if streamed {
+            clean_runner
+                .run_stream(&factory, SliceSource::new(&blobs))
+                .unwrap()
+        } else {
+            clean_runner.run(&factory, &blobs).unwrap()
+        };
+        let target = clean.shards / 2;
+        let faulty = FaultyFactory::new(
+            sum_factory(SumMode::Enumerated, SumShape::Fused),
+            &FaultPlan::new().panic_at(target),
+        );
+        let runner = ShardedRunner::new(split_exec(3, WIDTH).with_fault(FaultPolicy::Quarantine));
+        let report = if streamed {
+            runner.run_stream(&faulty, SliceSource::new(&blobs)).unwrap()
+        } else {
+            runner.run(&faulty, &blobs).unwrap()
+        };
+        assert_eq!(report.faults.len(), 1, "{ctx}: one ledger entry");
+        assert_eq!(report.faults[0].shard, target, "{ctx}: names the shard");
+        assert!(
+            report.outputs.len() < single.outputs.len(),
+            "{ctx}: quarantine must cost at least one region"
+        );
+        // every surviving region is bit-identical to the clean run — no
+        // id appears with a partial fold, and stream order holds
+        let mut want = single.outputs.iter();
+        for (i, (gi, gv)) in report.outputs.iter().enumerate() {
+            let (_, wv) = want
+                .by_ref()
+                .find(|(wi, _)| wi == gi)
+                .unwrap_or_else(|| panic!("{ctx}: output {i} id {gi} unknown or out of order"));
+            assert_eq!(
+                gv.to_bits(),
+                wv.to_bits(),
+                "{ctx}: region {gi} survived with a partial fold"
+            );
+        }
+    }
+}
