@@ -25,6 +25,75 @@ pub fn prefix_mask(mask: &mut Vec<i32>, take: usize, width: usize) {
     }
 }
 
+/// Consecutive sub-half-peak shards a source ring must see before its
+/// transient peak allocation is released (see [`SourceShrink`]).
+pub const SHRINK_WINDOW: usize = 32;
+
+/// Source-capacity shrink heuristic for persistent per-worker pipelines.
+///
+/// A persistent pipeline re-targets its source channel's *logical*
+/// capacity to each shard's length ([`Channel::set_data_capacity`]), but
+/// the ring *allocation* only ever grows — one transient giant shard
+/// (e.g. an oversized region admitted alone under the streaming budget)
+/// leaves every later shard paying its high-water memory. This policy
+/// watches the shard-size sequence and, after [`SHRINK_WINDOW`]
+/// consecutive shards at most half the observed peak, asks the owner to
+/// [`Channel::shrink_data_to`] twice the recent maximum (headroom for
+/// jitter) and re-arms against that new, lower peak.
+///
+/// Purely observational: it reads shard lengths and returns a target —
+/// it never touches scheduling, and since backpressure depends only on
+/// the logical capacity, applying a shrink keeps outputs bit-identical
+/// (`apps::sum` pins this down in `reuse_stays_bit_identical_across_a_shrink`).
+///
+/// [`Channel::set_data_capacity`]: crate::coordinator::channel::Channel::set_data_capacity
+/// [`Channel::shrink_data_to`]: crate::coordinator::channel::Channel::shrink_data_to
+#[derive(Debug, Clone, Default)]
+pub struct SourceShrink {
+    peak: usize,
+    window_max: usize,
+    below: usize,
+    shrinks: u64,
+}
+
+impl SourceShrink {
+    /// A fresh policy with no history.
+    pub fn new() -> SourceShrink {
+        SourceShrink::default()
+    }
+
+    /// Observe one shard of `shard_regions` regions. Returns
+    /// `Some(target)` — physical slots to shrink the source ring to —
+    /// once [`SHRINK_WINDOW`] consecutive shards stayed at or below half
+    /// the running peak; `None` otherwise.
+    pub fn observe(&mut self, shard_regions: usize) -> Option<usize> {
+        if self.peak > 0 && shard_regions <= self.peak / 2 {
+            self.below += 1;
+            self.window_max = self.window_max.max(shard_regions);
+            if self.below >= SHRINK_WINDOW {
+                // Twice the recent maximum: headroom so normal jitter
+                // doesn't force an immediate regrow, floor of one slot.
+                let target = (self.window_max * 2).max(1);
+                self.peak = self.window_max;
+                self.window_max = 0;
+                self.below = 0;
+                self.shrinks += 1;
+                return Some(target);
+            }
+        } else {
+            self.peak = self.peak.max(shard_regions);
+            self.below = 0;
+            self.window_max = 0;
+        }
+        None
+    }
+
+    /// Shrinks recommended so far.
+    pub fn shrinks(&self) -> u64 {
+        self.shrinks
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -38,5 +107,53 @@ mod tests {
         assert_eq!(m, vec![0, 0, 0, 0]);
         prefix_mask(&mut m, 4, 4);
         assert_eq!(m, vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn source_shrink_fires_after_a_sustained_drop() {
+        let mut p = SourceShrink::new();
+        assert_eq!(p.observe(1000), None, "first shard sets the peak");
+        // a long run of small shards: fires exactly at the window edge
+        for i in 0..SHRINK_WINDOW - 1 {
+            assert_eq!(p.observe(10), None, "shard {i} below the window");
+        }
+        assert_eq!(p.observe(12), Some(24), "2x the recent max, at the window");
+        assert_eq!(p.shrinks(), 1);
+        // re-armed against the new peak (12): small shards count afresh
+        for _ in 0..SHRINK_WINDOW - 1 {
+            assert_eq!(p.observe(3), None);
+        }
+        assert_eq!(p.observe(3), Some(6), "second shrink against the lower peak");
+    }
+
+    #[test]
+    fn source_shrink_resets_on_a_big_shard() {
+        let mut p = SourceShrink::new();
+        p.observe(1000);
+        for _ in 0..SHRINK_WINDOW - 1 {
+            assert_eq!(p.observe(10), None);
+        }
+        // one near-peak shard breaks the streak: no shrink, streak restarts
+        assert_eq!(p.observe(900), None);
+        for _ in 0..SHRINK_WINDOW - 1 {
+            assert_eq!(p.observe(10), None);
+        }
+        assert_eq!(p.observe(10), Some(20), "full window needed again");
+    }
+
+    #[test]
+    fn source_shrink_never_fires_on_steady_streams() {
+        let mut p = SourceShrink::new();
+        for _ in 0..10 * SHRINK_WINDOW {
+            assert_eq!(p.observe(64), None, "uniform shards never shrink");
+        }
+        assert_eq!(p.shrinks(), 0);
+        // half-the-peak boundary is inclusive: 32 counts against peak 64
+        let mut p = SourceShrink::new();
+        p.observe(64);
+        for _ in 0..SHRINK_WINDOW - 1 {
+            assert_eq!(p.observe(32), None);
+        }
+        assert_eq!(p.observe(32), Some(64));
     }
 }

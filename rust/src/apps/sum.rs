@@ -44,7 +44,7 @@ use crate::coordinator::topology::{Pipeline, PipelineBuilder};
 use crate::runtime::kernels::KernelSet;
 use crate::runtime::native::SCALE;
 
-use super::prefix_mask;
+use super::{prefix_mask, SourceShrink};
 
 /// Region-context representation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -169,15 +169,18 @@ impl SumApp {
         if exec.workers <= 1
             && exec.shard.shards_per_worker <= 1
             && exec.trace.is_none()
+            && !exec.metrics
+            && exec.progress.is_none()
             && exec.max_region_items == 0
             && matches!(exec.fault, crate::exec::FaultPolicy::FailFast)
         {
-            // One worker, one shard, untraced, unsplit, fail-fast, inline:
-            // identical to a plain run, so reuse this app's kernel set
-            // instead of spawning a fresh engine (on the XLA backend
-            // that is a full PJRT spin-up). Traced runs and non-default
-            // fault policies always go through the executor, which owns
-            // the trace lanes and the recovery machinery.
+            // One worker, one shard, untraced, unmetered, unsplit,
+            // fail-fast, inline: identical to a plain run, so reuse this
+            // app's kernel set instead of spawning a fresh engine (on the
+            // XLA backend that is a full PJRT spin-up). Traced or metered
+            // runs and non-default fault policies always go through the
+            // executor, which owns the trace lanes, the metrics hubs and
+            // the recovery machinery.
             return self.run(blobs);
         }
         let factory = SumFactory::new(self.cfg, KernelSpawn::from_backend(self.kernels.backend()));
@@ -267,6 +270,9 @@ impl SumApp {
 /// many-small-shard streams (EXPERIMENTS.md §Reuse).
 pub struct SumPipeline {
     kind: SumPipelineKind,
+    /// Source-ring shrink policy: releases the transient high-water
+    /// allocation a giant shard leaves behind (see [`SourceShrink`]).
+    shrink: SourceShrink,
 }
 
 enum SumPipelineKind {
@@ -295,7 +301,10 @@ impl SumPipeline {
             },
             SumMode::Tagged => SumPipeline::build_tagged(cfg, kernels),
         };
-        SumPipeline { kind }
+        SumPipeline {
+            kind,
+            shrink: SourceShrink::new(),
+        }
     }
 
     /// Run one shard to quiescence on the persistent graph. Counters are
@@ -318,6 +327,15 @@ impl SumPipeline {
                     src.push(blob.clone());
                 }
                 pipe.run()?;
+                // Off the firing path, after the shard drained: release
+                // the ring's physical allocation once shard sizes have
+                // durably dropped below a transient peak. Backpressure
+                // depends only on the *logical* capacity set above, so
+                // this cannot perturb scheduling or outputs
+                // (`reuse_stays_bit_identical_across_a_shrink`).
+                if let Some(target) = self.shrink.observe(blobs.len()) {
+                    src.shrink_data_to(target);
+                }
                 Ok((take_outputs(sums), pipe.metrics()))
             }
             SumPipelineKind::Tagged { pipe, src, sums } => {
@@ -337,6 +355,22 @@ impl SumPipeline {
                 pipe.run()?;
                 Ok((take_outputs(sums), pipe.metrics()))
             }
+        }
+    }
+
+    /// Source-ring shrinks applied over this pipeline's lifetime
+    /// (see [`SourceShrink`]).
+    pub fn shrinks(&self) -> u64 {
+        self.shrink.shrinks()
+    }
+
+    /// Physical slots currently allocated in the source ring — the
+    /// quantity the shrink policy manages (tests assert it is released
+    /// after a transient peak).
+    pub fn source_allocated(&self) -> usize {
+        match &self.kind {
+            SumPipelineKind::Enumerated { src, .. } => src.data_allocated(),
+            SumPipelineKind::Tagged { src, .. } => src.data_allocated(),
         }
     }
 
@@ -958,6 +992,41 @@ mod tests {
             assert_eq!(g.firings, w.firings);
             assert_eq!(g.ensemble_hist, w.ensemble_hist);
         }
+    }
+
+    #[test]
+    fn reuse_stays_bit_identical_across_a_shrink() {
+        use crate::apps::SHRINK_WINDOW;
+        let app = native_app(SumMode::Enumerated, SumShape::Fused, 8);
+        let mut pipeline = SumPipeline::build(*app.config(), Rc::new(KernelSet::native(8)));
+        // one transient giant shard leaves a high-water ring allocation
+        let giant = gen_blobs(4096, RegionSpec::Fixed { size: 4 }, 11);
+        let fresh = app.run(&giant).unwrap();
+        let (outputs, _) = pipeline.run_shard(&giant).unwrap();
+        assert_eq!(outputs.len(), fresh.outputs.len());
+        let peak = pipeline.source_allocated();
+        assert!(peak >= 4096, "giant shard grew the ring to {peak}");
+        // a long tail of small shards: the shrink policy fires, the ring
+        // is released, and every shard still matches a fresh build bit
+        // for bit — the policy only touches physical allocation, never
+        // the logical capacity backpressure sees
+        let small = gen_blobs(8 * (SHRINK_WINDOW + 8), RegionSpec::Uniform { max: 20 }, 12);
+        for shard in small.chunks(8) {
+            let fresh = app.run(shard).unwrap();
+            let (outputs, metrics) = pipeline.run_shard(shard).unwrap();
+            assert_eq!(outputs.len(), fresh.outputs.len());
+            for ((gi, gv), (wi, wv)) in outputs.iter().zip(&fresh.outputs) {
+                assert_eq!(gi, wi);
+                assert_eq!(gv.to_bits(), wv.to_bits());
+            }
+            assert_eq!(
+                metrics.node("sum").unwrap().ensemble_hist,
+                fresh.metrics.node("sum").unwrap().ensemble_hist
+            );
+        }
+        assert!(pipeline.shrinks() >= 1, "sustained small shards trigger a shrink");
+        let now = pipeline.source_allocated();
+        assert!(now < peak, "ring released: {now} slots vs peak {peak}");
     }
 
     #[test]

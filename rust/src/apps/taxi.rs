@@ -39,7 +39,7 @@ use crate::coordinator::topology::{Pipeline, PipelineBuilder};
 use crate::runtime::kernels::KernelSet;
 use crate::workload::taxi::{TaxiLine, TaxiWorkload};
 
-use super::prefix_mask;
+use super::{prefix_mask, SourceShrink};
 
 /// Implementation strategy (the three series of Fig. 8).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -205,15 +205,18 @@ impl TaxiApp {
         if exec.workers <= 1
             && exec.shard.shards_per_worker <= 1
             && exec.trace.is_none()
+            && !exec.metrics
+            && exec.progress.is_none()
             && exec.max_region_items == 0
             && matches!(exec.fault, crate::exec::FaultPolicy::FailFast)
         {
-            // One worker, one shard, untraced, unsplit, fail-fast, inline:
-            // identical to a plain run, so reuse this app's kernel set
-            // instead of spawning a fresh engine (on the XLA backend
-            // that is a full PJRT spin-up). Traced runs and non-default
-            // fault policies always go through the executor, which owns
-            // the trace lanes and the recovery machinery.
+            // One worker, one shard, untraced, unmetered, unsplit,
+            // fail-fast, inline: identical to a plain run, so reuse this
+            // app's kernel set instead of spawning a fresh engine (on the
+            // XLA backend that is a full PJRT spin-up). Traced or metered
+            // runs and non-default fault policies always go through the
+            // executor, which owns the trace lanes, the metrics hubs and
+            // the recovery machinery.
             return self.run(w);
         }
         let factory = TaxiFactory::new(
@@ -305,6 +308,9 @@ impl TaxiApp {
 /// bit-identical to a fresh build's.
 pub struct TaxiPipeline {
     kind: TaxiPipelineKind,
+    /// Source-ring shrink policy: releases the transient high-water
+    /// allocation a giant shard leaves behind (see [`SourceShrink`]).
+    shrink: SourceShrink,
 }
 
 enum TaxiPipelineKind {
@@ -333,7 +339,10 @@ impl TaxiPipeline {
             }
             TaxiVariant::Tagged => TaxiPipeline::build_tagged(cfg, kernels, text),
         };
-        TaxiPipeline { kind }
+        TaxiPipeline {
+            kind,
+            shrink: SourceShrink::new(),
+        }
     }
 
     /// Run one shard of lines to quiescence on the persistent graph.
@@ -354,6 +363,12 @@ impl TaxiPipeline {
                     src.push(line.clone());
                 }
                 pipe.run()?;
+                // release a transient peak allocation once shard sizes
+                // durably drop (physical only — logical capacity, and so
+                // scheduling, is untouched; see SumPipeline::run_shard)
+                if let Some(target) = self.shrink.observe(lines.len()) {
+                    src.shrink_data_to(target);
+                }
                 Ok((super::sum::take_outputs(sink), pipe.metrics()))
             }
             TaxiPipelineKind::Tagged { pipe, src, sink } => {

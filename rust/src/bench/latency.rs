@@ -1,0 +1,298 @@
+//! `bench latency` — end-to-end region latency under streaming load.
+//!
+//! Throughput benches (`bench hotpath`, `bench ingest`) answer "how fast
+//! does the whole stream finish"; this sweep answers the streaming
+//! question the paper's §4 dataflow raises: **how long does one region
+//! wait** between ingest submit and its in-order merge emit, and how is
+//! that tail shaped by worker count and the in-flight budget? Each leg
+//! runs the streamed sum app with live metrics
+//! ([`ExecConfig::with_metrics`](crate::exec::ExecConfig::with_metrics))
+//! and reports the per-region e2e p50/p99/max alongside queue-wait and
+//! service quantiles from the same [`MetricsReport`].
+//!
+//! Two claims are asserted, not eyeballed, on every leg:
+//!
+//! * outputs are bit-identical to the unmetered run (metering never
+//!   perturbs scheduling);
+//! * the report reconciles — every submitted region was emitted and the
+//!   e2e histogram saw exactly one sample per region.
+//!
+//! The headline numbers are **informational** — latency on shared CI
+//! boxes is too noisy to ratchet, so CI uploads `BENCH_latency.json` as
+//! an artifact for trend inspection instead of gating on it.
+
+use anyhow::{ensure, Result};
+
+use crate::apps::sum::{SumConfig, SumFactory};
+use crate::exec::{ExecConfig, KernelSpawn, ShardedRunner};
+use crate::metrics::MetricsReport;
+use crate::workload::regions::{GenBlobSource, RegionSpec};
+
+use super::{BenchConfig, Table};
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct LatencyConfig {
+    /// SIMD ensemble width.
+    pub width: usize,
+    /// Total stream items.
+    pub items: usize,
+    /// Worker counts to sweep (one leg each).
+    pub workers: Vec<usize>,
+    /// Streaming in-flight region budget.
+    pub budget: usize,
+    /// Workload PRNG seed.
+    pub seed: u64,
+    /// Iteration counts for timing (the last iteration's report is kept).
+    pub bench: BenchConfig,
+}
+
+impl LatencyConfig {
+    /// CI smoke shape: small stream, two worker counts.
+    pub fn smoke() -> LatencyConfig {
+        LatencyConfig {
+            width: 32,
+            items: 1 << 14,
+            workers: vec![1, 4],
+            budget: 256,
+            seed: 0x1A7E,
+            bench: BenchConfig {
+                warmup_iters: 1,
+                iters: 2,
+            },
+        }
+    }
+}
+
+impl Default for LatencyConfig {
+    fn default() -> Self {
+        LatencyConfig {
+            width: 128,
+            items: 1 << 17,
+            workers: vec![1, 2, 4, 8],
+            budget: 1024,
+            seed: 0x1A7E,
+            bench: BenchConfig::from_env(),
+        }
+    }
+}
+
+/// One measured leg: a worker count with its latency quantiles (ms).
+#[derive(Debug, Clone)]
+pub struct LatencyRow {
+    /// Worker threads in this leg.
+    pub workers: usize,
+    /// Wall-clock seconds of the metered run.
+    pub seconds: f64,
+    /// Regions emitted per second.
+    pub rate: f64,
+    /// End-to-end per-region latency quantiles, milliseconds.
+    pub e2e_p50_ms: f64,
+    /// End-to-end p99, milliseconds.
+    pub e2e_p99_ms: f64,
+    /// End-to-end maximum, milliseconds.
+    pub e2e_max_ms: f64,
+    /// Shard queue-wait p99, milliseconds.
+    pub queue_p99_ms: f64,
+    /// Shard service-time p99, milliseconds.
+    pub service_p99_ms: f64,
+}
+
+/// Full report (also the `BENCH_latency.json` payload).
+#[derive(Debug, Clone)]
+pub struct LatencyReport {
+    /// Total stream items.
+    pub items: usize,
+    /// Regions in the stream.
+    pub regions: usize,
+    /// Streaming in-flight budget.
+    pub budget: usize,
+    /// Measured legs, one per worker count.
+    pub rows: Vec<LatencyRow>,
+}
+
+fn ms(ns: u64) -> f64 {
+    ns as f64 / 1e6
+}
+
+fn factory(cfg: &LatencyConfig) -> SumFactory {
+    SumFactory::new(
+        SumConfig {
+            width: cfg.width,
+            ..Default::default()
+        },
+        KernelSpawn::Native,
+    )
+}
+
+fn source(cfg: &LatencyConfig) -> GenBlobSource {
+    GenBlobSource::new(cfg.items, RegionSpec::Uniform { max: 2 * cfg.width }, cfg.seed)
+}
+
+/// Run the sweep and print the table.
+pub fn run(cfg: &LatencyConfig) -> Result<LatencyReport> {
+    ensure!(!cfg.workers.is_empty(), "bench latency: empty worker sweep");
+    let mut rows = Vec::new();
+    let mut regions = 0usize;
+    for &workers in &cfg.workers {
+        let exec = ExecConfig::new(workers).streaming(cfg.budget);
+        // the unmetered oracle: metering must not change a single bit
+        let plain = ShardedRunner::new(exec.clone()).run_stream(&factory(cfg), source(cfg))?;
+
+        let metered_runner = ShardedRunner::new(exec.with_metrics(true));
+        let mut last = None;
+        for _ in 0..cfg.bench.warmup_iters + cfg.bench.iters.max(1) {
+            last = Some(metered_runner.run_stream(&factory(cfg), source(cfg))?);
+        }
+        let report = last.expect("at least one iteration");
+        ensure!(
+            report.outputs.len() == plain.outputs.len(),
+            "latency[{workers}w]: {} outputs vs unmetered {}",
+            report.outputs.len(),
+            plain.outputs.len()
+        );
+        for (i, ((gi, gv), (wi, wv))) in report.outputs.iter().zip(&plain.outputs).enumerate() {
+            ensure!(
+                gi == wi && gv.to_bits() == wv.to_bits(),
+                "latency[{workers}w]: output {i} diverged from the unmetered run"
+            );
+        }
+        let m: &MetricsReport = report
+            .metrics_report
+            .as_ref()
+            .expect("metered run attaches a MetricsReport");
+        let t = &m.totals;
+        ensure!(
+            t.submitted_regions == t.emitted_regions,
+            "latency[{workers}w]: {} submitted vs {} emitted",
+            t.submitted_regions,
+            t.emitted_regions
+        );
+        ensure!(
+            t.e2e.count == t.emitted_regions,
+            "latency[{workers}w]: e2e saw {} samples for {} regions",
+            t.e2e.count,
+            t.emitted_regions
+        );
+        regions = t.emitted_regions as usize;
+        rows.push(LatencyRow {
+            workers,
+            seconds: report.elapsed,
+            rate: m.emit_rate(),
+            e2e_p50_ms: ms(t.e2e.quantile_ns(0.5)),
+            e2e_p99_ms: ms(t.e2e.quantile_ns(0.99)),
+            e2e_max_ms: ms(t.e2e.max_ns),
+            queue_p99_ms: ms(t.queue_wait.quantile_ns(0.99)),
+            service_p99_ms: ms(t.service.quantile_ns(0.99)),
+        });
+    }
+
+    let mut t = Table::new(&[
+        "workers",
+        "time_s",
+        "regions/s",
+        "e2e_p50_ms",
+        "e2e_p99_ms",
+        "e2e_max_ms",
+        "queue_p99_ms",
+        "service_p99_ms",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.workers.to_string(),
+            format!("{:.4}", r.seconds),
+            format!("{:.0}", r.rate),
+            format!("{:.3}", r.e2e_p50_ms),
+            format!("{:.3}", r.e2e_p99_ms),
+            format!("{:.3}", r.e2e_max_ms),
+            format!("{:.3}", r.queue_p99_ms),
+            format!("{:.3}", r.service_p99_ms),
+        ]);
+    }
+    println!("== Latency: submit -> in-order emit, per region (informational) ==");
+    t.print();
+
+    Ok(LatencyReport {
+        items: cfg.items,
+        regions,
+        budget: cfg.budget,
+        rows,
+    })
+}
+
+/// Render the report as the `BENCH_latency.json` artifact.
+pub fn to_json(report: &LatencyReport) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"latency\",\n");
+    s.push_str("  \"informational\": true,\n");
+    s.push_str(&format!("  \"items\": {},\n", report.items));
+    s.push_str(&format!("  \"regions\": {},\n", report.regions));
+    s.push_str(&format!("  \"budget\": {},\n", report.budget));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in report.rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workers\": {}, \"seconds\": {:.6}, \"rate\": {:.1}, \
+             \"e2e_p50_ms\": {:.4}, \"e2e_p99_ms\": {:.4}, \"e2e_max_ms\": {:.4}, \
+             \"queue_p99_ms\": {:.4}, \"service_p99_ms\": {:.4}}}{}\n",
+            r.workers,
+            r.seconds,
+            r.rate,
+            r.e2e_p50_ms,
+            r.e2e_p99_ms,
+            r.e2e_max_ms,
+            r.queue_p99_ms,
+            r.service_p99_ms,
+            if i + 1 < report.rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n");
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn sweep_measures_and_emits_json() {
+        let cfg = LatencyConfig {
+            width: 8,
+            items: 1 << 10,
+            workers: vec![1, 2],
+            budget: 64,
+            seed: 3,
+            bench: BenchConfig {
+                warmup_iters: 0,
+                iters: 1,
+            },
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.rows.len(), 2);
+        assert!(report.regions > 0);
+        for r in &report.rows {
+            assert!(r.e2e_max_ms >= r.e2e_p99_ms);
+            assert!(r.e2e_p99_ms >= r.e2e_p50_ms);
+            assert!(r.rate > 0.0);
+        }
+        let js = to_json(&report);
+        let parsed = Json::parse(&js).expect("emitted JSON parses");
+        assert_eq!(
+            parsed.get("rows").and_then(Json::as_arr).map(Vec::len),
+            Some(2)
+        );
+        assert_eq!(parsed.get("informational"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn empty_worker_sweep_is_a_named_error() {
+        let cfg = LatencyConfig {
+            workers: vec![],
+            ..LatencyConfig::smoke()
+        };
+        let err = run(&cfg).unwrap_err();
+        assert!(err.to_string().contains("empty worker sweep"), "{err}");
+    }
+}

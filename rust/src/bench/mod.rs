@@ -9,6 +9,7 @@ pub mod figures;
 pub mod hotpath;
 pub mod ingest;
 pub mod io_bench;
+pub mod latency;
 
 use std::time::Instant;
 

@@ -136,6 +136,23 @@ impl<T> Channel<T> {
         self.data.borrow_mut().set_capacity(cap);
     }
 
+    /// Physical slots the data ring currently holds — what a shrink
+    /// policy compares against recent shard sizes.
+    pub fn data_allocated(&self) -> usize {
+        self.data.borrow().allocated()
+    }
+
+    /// Release data-ring memory down to `cap` physical slots (clamped to
+    /// the logical capacity and live items — see
+    /// [`DataQueue::shrink_to`]). Off the firing path: per-app shrink
+    /// policies call this between shards when a transient giant shard
+    /// has left the source ring far above steady state. Scheduling
+    /// depends only on the *logical* capacity, so shrinking never
+    /// changes outputs.
+    pub fn shrink_data_to(&self, cap: usize) {
+        self.data.borrow_mut().shrink_to(cap);
+    }
+
     // ---- capacity (for the fireable test) ----------------------------
 
     /// Free data-queue slots.
@@ -346,6 +363,19 @@ mod tests {
         ch.set_data_capacity(2);
         ch.push(4);
         assert_eq!(ch.data_space(), 1);
+    }
+
+    #[test]
+    fn shrink_data_to_releases_a_transient_peak() {
+        let ch: Rc<Channel<u32>> = Channel::new(4, 4);
+        ch.set_data_capacity(4096);
+        assert!(ch.data_allocated() >= 4096);
+        ch.reset();
+        ch.set_data_capacity(4);
+        ch.shrink_data_to(8);
+        assert!(ch.data_allocated() < 4096);
+        ch.push_slice(&[1, 2, 3, 4]).unwrap();
+        assert_eq!(ch.data_space(), 0);
     }
 
     #[test]

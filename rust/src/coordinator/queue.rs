@@ -120,7 +120,8 @@ impl<T> DataQueue<T> {
     }
 
     /// Re-target the logical capacity (per-shard source sizing for
-    /// persistent pipelines). The ring's allocation never shrinks; it
+    /// persistent pipelines). The ring's allocation never shrinks here
+    /// (see [`DataQueue::shrink_to`] for the explicit release path); it
     /// grows only when `cap` exceeds every previously requested capacity
     /// — the capacity-regrowth path, amortized to zero across shards.
     pub fn set_capacity(&mut self, cap: usize) {
@@ -133,6 +134,28 @@ impl<T> DataQueue<T> {
         let target = cap.min(PRE_RESERVE_CAP);
         if self.buf.capacity() < target {
             self.buf.reserve(target - self.buf.len());
+        }
+    }
+
+    /// Physical slots the ring currently holds (≥ the logical capacity
+    /// after a [`DataQueue::set_capacity`] shrink) — what a shrink
+    /// policy inspects to decide whether the allocation is worth
+    /// releasing.
+    pub fn allocated(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Release ring memory down to `max(cap, len, capacity)` physical
+    /// slots — the explicit counterpart to [`DataQueue::set_capacity`]'s
+    /// keep-the-allocation default. Called off the firing path (between
+    /// shards) by source-capacity shrink policies when a transient giant
+    /// shard has left a ring far larger than the steady state needs;
+    /// never below the logical capacity, so the next shard of typical
+    /// size still runs allocation-free.
+    pub fn shrink_to(&mut self, cap: usize) {
+        let floor = cap.max(self.capacity).min(PRE_RESERVE_CAP);
+        if self.buf.capacity() > floor {
+            self.buf.shrink_to(floor);
         }
     }
 }
@@ -309,6 +332,43 @@ mod tests {
         assert_eq!(q.capacity(), 1);
         q.push(7);
         assert_eq!(q.space(), 0);
+    }
+
+    #[test]
+    fn shrink_to_releases_memory_but_never_below_the_logical_bound() {
+        let mut q: DataQueue<u32> = DataQueue::new(4);
+        // a giant transient shard inflates the ring
+        q.set_capacity(4096);
+        assert!(q.allocated() >= 4096);
+        // back to steady state: logical bound drops, allocation lingers
+        q.set_capacity(4);
+        assert!(q.allocated() >= 4096, "set_capacity never shrinks");
+        q.shrink_to(8);
+        assert!(q.allocated() < 4096, "shrink_to releases the excess");
+        assert!(q.allocated() >= 8);
+        // still fully usable at the logical bound
+        q.push_slice(&[1, 2, 3, 4]);
+        assert_eq!(q.space(), 0);
+        // shrinking below the logical capacity is clamped to it
+        let mut out = Vec::new();
+        q.pop_into(4, &mut out);
+        q.shrink_to(0);
+        assert!(q.allocated() >= q.capacity());
+        q.push_slice(&[9, 8, 7, 6]);
+        assert_eq!(q.len(), 4);
+    }
+
+    #[test]
+    fn shrink_to_keeps_queued_items() {
+        let mut q: DataQueue<u32> = DataQueue::new(3);
+        q.set_capacity(1024);
+        q.set_capacity(3);
+        q.push_slice(&[1, 2, 3]);
+        q.shrink_to(0);
+        assert!(q.allocated() >= 3, "live items bound the shrink");
+        let mut out = Vec::new();
+        q.pop_into(3, &mut out);
+        assert_eq!(out, vec![1, 2, 3]);
     }
 
     #[test]

@@ -78,6 +78,12 @@ pub struct ShardTask<T> {
     pub regions: Vec<T>,
     /// Total item weight (the planner's balancing unit).
     pub weight: usize,
+    /// Submit stamp, nanoseconds since the run's shared epoch, written by
+    /// the ingest driver just before the task enters the deques (0 when
+    /// metrics are off — the planner itself never reads a clock). Flows
+    /// through to the merge so per-region end-to-end latency can be
+    /// measured at in-order emit.
+    pub submit_ns: u64,
 }
 
 /// Online shard builder. Single-threaded (driven by the ingest thread);
@@ -165,6 +171,7 @@ impl<T> IngestPlanner<T> {
             index: self.next_index,
             regions,
             weight: self.open_weight,
+            submit_ns: 0,
         };
         self.next_index += 1;
         self.open_weight = 0;

@@ -30,6 +30,7 @@ use std::collections::BTreeMap;
 use anyhow::{ensure, Result};
 
 use crate::coordinator::metrics::PipelineMetrics;
+use crate::metrics::{MetricsHub, MetricsReport};
 use crate::trace::Trace;
 
 use super::factory::PipelineFactory;
@@ -113,6 +114,14 @@ pub struct ExecReport<T> {
     ///
     /// [`ExecConfig::with_trace`]: super::runner::ExecConfig::with_trace
     pub trace: Option<Trace>,
+    /// Folded live telemetry (every lane's counters and latency
+    /// histograms, exact-merged); `Some` only when the run was launched
+    /// with metrics enabled ([`ExecConfig::with_metrics`]). Its shard,
+    /// region, steal, retry and fault totals reconcile number for number
+    /// with the fields above (`tests/metrics_observe.rs` pins this).
+    ///
+    /// [`ExecConfig::with_metrics`]: super::runner::ExecConfig::with_metrics
+    pub metrics_report: Option<MetricsReport>,
 }
 
 impl<T> ExecReport<T> {
@@ -284,6 +293,7 @@ impl<T> ReportBuilder<T> {
             elapsed,
             per_worker,
             trace: None,
+            metrics_report: None,
         }
     }
 }
@@ -426,6 +436,7 @@ impl<T> RegionFolder<T> {
 pub struct StreamMerger<T> {
     slots: Vec<Option<ShardResult<T>>>,
     next: usize,
+    hub: MetricsHub,
 }
 
 impl<T> StreamMerger<T> {
@@ -434,7 +445,18 @@ impl<T> StreamMerger<T> {
         StreamMerger {
             slots: (0..capacity.max(1)).map(|_| None).collect(),
             next: 0,
+            hub: MetricsHub::disabled(),
         }
+    }
+
+    /// Attach the driver's metrics lane: each in-order release then
+    /// stamps its emit time and records one end-to-end latency sample
+    /// per region of the released shard (emit − submit, both against the
+    /// run's shared epoch). A disabled hub (the default) costs one
+    /// branch per release and reads no clock.
+    pub fn with_hub(mut self, hub: MetricsHub) -> StreamMerger<T> {
+        self.hub = hub;
+        self
     }
 
     /// Accept one completed shard result (any completion order).
@@ -453,11 +475,17 @@ impl<T> StreamMerger<T> {
         Ok(())
     }
 
-    /// Release the next in-order result, if it has arrived.
+    /// Release the next in-order result, if it has arrived. With a
+    /// metrics hub attached, the release is the stream slot's emit
+    /// stamp: end-to-end latency is recorded here, once per region.
     pub fn pop_ready(&mut self) -> Option<ShardResult<T>> {
         let cap = self.slots.len();
         let r = self.slots[self.next % cap].take()?;
         self.next += 1;
+        if self.hub.enabled() {
+            let e2e = self.hub.now_ns().saturating_sub(r.submit_ns);
+            self.hub.record_emit(r.regions as u64, e2e);
+        }
         Some(r)
     }
 
@@ -494,6 +522,7 @@ mod tests {
             pipelines_built: 1,
             retries: 0,
             fault: None,
+            submit_ns: 0,
         }
     }
 
@@ -630,6 +659,20 @@ mod tests {
         m.accept(shard(5, 0, vec![50], 1)).unwrap();
         let err = m.accept(shard(7, 0, vec![70], 1)).unwrap_err();
         assert!(err.to_string().contains("window"), "{err}");
+    }
+
+    #[test]
+    fn stream_merger_stamps_emit_latency_per_region() {
+        let hub = crate::metrics::MetricsSpec::new().hub();
+        let mut m: StreamMerger<i32> = StreamMerger::with_capacity(2).with_hub(hub.clone());
+        let mut r = shard(0, 0, vec![1, 2], 2);
+        r.submit_ns = hub.now_ns();
+        m.accept(r).unwrap();
+        assert!(m.pop_ready().is_some());
+        let lane = hub.take();
+        assert_eq!(lane.emitted_shards, 1);
+        assert_eq!(lane.emitted_regions, 2);
+        assert_eq!(lane.e2e.count, 2, "one end-to-end sample per region");
     }
 
     #[test]

@@ -89,6 +89,12 @@
 //!   for incremental sources, `run_stream_into` to land outputs in a
 //!   [`ResultSink`](crate::io::ResultSink) — pair with the out-of-core
 //!   readers in [`crate::io`] for the end-to-end constant-memory path).
+//!   With [`ExecConfig::metrics`] the pool is metered through
+//!   [`crate::metrics`] — per-worker latency histograms and flow
+//!   counters, exact-folded into a
+//!   [`MetricsReport`](crate::metrics::MetricsReport) on the report, and
+//!   [`ExecConfig::progress`] adds a streaming progress heartbeat —
+//!   without perturbing scheduling (metered runs stay bit-identical).
 //!
 //! ## Quick start
 //!

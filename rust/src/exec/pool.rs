@@ -56,11 +56,12 @@ use anyhow::{anyhow, ensure, Result};
 
 use super::factory::{PipelineFactory, ShardOutput, ShardWorker};
 use super::fault::FaultPolicy;
-use super::ingest::{ContainerPool, IngestPlanner, IngestPolicy, ShardTask};
+use super::ingest::{lock_ignore_poison, ContainerPool, IngestPlanner, IngestPolicy, ShardTask};
 use super::merge::StreamMerger;
 use super::plan::ShardPlan;
 use super::steal::{Claim, ClaimMode, CompletionBuffer, StealQueues};
 use crate::coordinator::metrics::PipelineMetrics;
+use crate::metrics::{Heartbeat, LaneMetrics, MetricsHub, MetricsSpec, ProgressSnapshot};
 use crate::trace::{TraceEvent, TraceSink, TraceSpec, WorkerTrace, DRIVER_LANE};
 use crate::workload::source::RegionSource;
 
@@ -95,6 +96,12 @@ pub struct ShardResult<T> {
     /// [`FaultPolicy::Quarantine`]: its outputs are empty and the
     /// failure lands in the run's fault table.
     pub fault: Option<String>,
+    /// When this shard was submitted by the streaming ingest driver
+    /// (nanoseconds since the run's shared epoch), carried through from
+    /// [`ShardTask::submit_ns`] so the stream merger can stamp emit time
+    /// and derive per-region end-to-end latency. 0 on materialized runs
+    /// and whenever metrics are off.
+    pub submit_ns: u64,
 }
 
 /// Best-effort text of a thread panic payload (panics carry `&str` or
@@ -283,17 +290,22 @@ impl ShardClaimer {
         }
     }
 
-    /// `(shard index, stolen)`, or `None` when the plan is exhausted.
-    /// Materialized queues are loaded and closed before workers start,
-    /// so claims never block and the watchdog `deadline` is a formality.
-    fn next(&self, worker: usize, deadline: Duration) -> Result<Option<(usize, bool)>> {
+    /// `(shard index, stolen, claim wait)`, or `None` when the plan is
+    /// exhausted. Materialized queues are loaded and closed before
+    /// workers start, so claims never block, the wait is zero, and the
+    /// watchdog `deadline` is a formality.
+    fn next(&self, worker: usize, deadline: Duration) -> Result<Option<(usize, bool, Duration)>> {
         match self {
             ShardClaimer::Cursor { next, len } => {
                 let shard = next.fetch_add(1, Ordering::Relaxed);
-                Ok((shard < *len).then_some((shard, false)))
+                Ok((shard < *len).then_some((shard, false, Duration::ZERO)))
             }
             ShardClaimer::Deques(queues) => Ok(match queues.claim(worker, deadline)? {
-                Claim::Task { work, stolen } => Some((work, stolen)),
+                Claim::Task {
+                    work,
+                    stolen,
+                    waited,
+                } => Some((work, stolen, waited)),
                 Claim::Done => None,
             }),
         }
@@ -312,6 +324,11 @@ pub struct PoolRun<T> {
     pub traces: Vec<WorkerTrace>,
     /// Seconds spent claiming and executing shards (prewarm excluded).
     pub elapsed: f64,
+    /// Every worker's metrics lane, exact-folded; `Some` only when the
+    /// pool was metered ([`WorkerPool::with_metrics`]). Materialized
+    /// runs have no submit/emit stamps, so the end-to-end histogram and
+    /// flow counters stay zero here.
+    pub metrics: Option<LaneMetrics>,
 }
 
 /// A streaming run's yield: results went to the caller's `emit` sink,
@@ -323,6 +340,10 @@ pub struct StreamRun {
     pub traces: Vec<WorkerTrace>,
     /// Seconds from the post-prewarm barrier to the last worker join.
     pub elapsed: f64,
+    /// Every lane's metrics (workers + the ingest driver's
+    /// submit/stall/emit lane), exact-folded; `Some` only when the pool
+    /// was metered ([`WorkerPool::with_metrics`]).
+    pub metrics: Option<LaneMetrics>,
 }
 
 /// Default watchdog deadline for the pool's blocking waits: long enough
@@ -337,6 +358,8 @@ pub struct WorkerPool {
     workers: usize,
     claim: ClaimMode,
     trace: Option<TraceSpec>,
+    metrics: Option<MetricsSpec>,
+    progress: Option<Duration>,
     fault: FaultPolicy,
     watchdog: Duration,
 }
@@ -348,6 +371,8 @@ impl WorkerPool {
             workers,
             claim: ClaimMode::default(),
             trace: None,
+            metrics: None,
+            progress: None,
             fault: FaultPolicy::default(),
             watchdog: DEFAULT_WATCHDOG,
         }
@@ -366,6 +391,30 @@ impl WorkerPool {
     /// per event site and nothing else.
     pub fn with_trace(mut self, spec: Option<TraceSpec>) -> WorkerPool {
         self.trace = spec;
+        self
+    }
+
+    /// Meter this pool's runs: every worker (and the streaming driver)
+    /// builds a [`MetricsHub`] from `spec`, and the exact-folded
+    /// [`LaneMetrics`] come back in
+    /// [`PoolRun::metrics`]/[`StreamRun::metrics`]. Recording never
+    /// influences scheduling — metered runs are bit-identical to
+    /// unmetered ones. `None` (default) disables metrics; every record
+    /// site then costs one branch and reads no clock. When the run is
+    /// also traced, hand both specs the same epoch so stamps line up.
+    pub fn with_metrics(mut self, spec: Option<MetricsSpec>) -> WorkerPool {
+        self.metrics = spec;
+        self
+    }
+
+    /// Print a machine-parseable progress heartbeat line every `every`
+    /// during streaming runs, rendered by the ingest driver from the
+    /// same loop that beats the watchdog [`Pulse`](super::steal::Pulse)
+    /// — no extra thread. Requires metrics ([`WorkerPool::with_metrics`])
+    /// for the so-far quantiles; without them the heartbeat stays
+    /// silent. Materialized runs have no driver loop and never tick.
+    pub fn with_progress(mut self, every: Option<Duration>) -> WorkerPool {
+        self.progress = every;
         self
     }
 
@@ -428,13 +477,16 @@ impl WorkerPool {
                 results: Vec::new(),
                 traces: Vec::new(),
                 elapsed: 0.0,
+                metrics: self.metrics.map(|_| LaneMetrics::default()),
             });
         }
         let threads = self.workers.min(plan.len());
         let claimer = ShardClaimer::for_plan(self.claim, threads, plan.len());
         let stop = AtomicBool::new(false);
         let traces: Mutex<Vec<WorkerTrace>> = Mutex::new(Vec::new());
+        let lanes: Mutex<LaneMetrics> = Mutex::new(LaneMetrics::default());
         let spec = self.trace;
+        let mspec = self.metrics;
         let (fault, watchdog) = (self.fault, self.watchdog);
         // prewarm rendezvous: absent on the inline path, where the
         // caller IS the worker and a barrier would deadlock
@@ -447,6 +499,10 @@ impl WorkerPool {
             let sink = match &spec {
                 Some(s) => s.sink(),
                 None => TraceSink::default(),
+            };
+            let hub = match &mspec {
+                Some(s) => s.hub(),
+                None => MetricsHub::disabled(),
             };
             // eager build; an error or panic must still reach the
             // barrier, or the coordinating thread would wait forever
@@ -485,9 +541,12 @@ impl WorkerPool {
                         return Err(e);
                     }
                 };
-                let Some((shard, stolen)) = next else {
+                let Some((shard, stolen, waited)) = next else {
                     break;
                 };
+                if hub.enabled() && !waited.is_zero() {
+                    hub.record_idle(waited.as_nanos() as u64);
+                }
                 let range = plan.range(shard);
                 let s0 = sink.now_ns();
                 let t0 = Instant::now();
@@ -501,6 +560,7 @@ impl WorkerPool {
                     fault,
                     &sink,
                 );
+                let took = t0.elapsed();
                 match guarded {
                     Ok(Guarded::Done { out, retries }) => {
                         sink.record(
@@ -512,6 +572,11 @@ impl WorkerPool {
                                 stolen,
                             },
                         );
+                        if hub.enabled() {
+                            // materialized shards never queue: wait is 0
+                            hub.record_shard(range.len() as u64, stolen, 0, took.as_nanos() as u64);
+                            hub.record_faults(u64::from(retries), u64::from(retries));
+                        }
                         done.push(ShardResult {
                             shard,
                             worker: worker_id,
@@ -520,13 +585,18 @@ impl WorkerPool {
                             outputs: out.outputs,
                             metrics: out.metrics,
                             invocations: out.invocations,
-                            elapsed: t0.elapsed().as_secs_f64(),
+                            elapsed: took.as_secs_f64(),
                             pipelines_built: pipeline.pipelines_built() + rebuilds,
                             retries,
                             fault: None,
+                            submit_ns: 0,
                         });
                     }
                     Ok(Guarded::Quarantined { error, attempts }) => {
+                        if hub.enabled() {
+                            hub.record_shard(range.len() as u64, stolen, 0, took.as_nanos() as u64);
+                            hub.record_faults(u64::from(attempts), u64::from(attempts - 1));
+                        }
                         done.push(ShardResult {
                             shard,
                             worker: worker_id,
@@ -535,10 +605,11 @@ impl WorkerPool {
                             outputs: Vec::new(),
                             metrics: PipelineMetrics::default(),
                             invocations: 0,
-                            elapsed: t0.elapsed().as_secs_f64(),
+                            elapsed: took.as_secs_f64(),
                             pipelines_built: pipeline.pipelines_built() + rebuilds,
                             retries: attempts - 1,
                             fault: Some(error),
+                            submit_ns: 0,
                         });
                     }
                     Err(e) => {
@@ -556,6 +627,9 @@ impl WorkerPool {
                     records,
                     dropped,
                 });
+            }
+            if hub.enabled() {
+                lock_ignore_poison(&lanes).merge(&hub.take());
             }
             Ok((done, claim_t0.elapsed().as_secs_f64()))
         };
@@ -601,12 +675,15 @@ impl WorkerPool {
             all.len(),
             plan.len()
         );
-        let mut lanes = traces.into_inner().unwrap_or_else(|e| e.into_inner());
-        lanes.sort_by_key(|t| t.worker);
+        let mut trace_lanes = traces.into_inner().unwrap_or_else(|e| e.into_inner());
+        trace_lanes.sort_by_key(|t| t.worker);
+        let metrics =
+            mspec.map(|_| lanes.into_inner().unwrap_or_else(|e| e.into_inner()));
         Ok(PoolRun {
             results: all,
-            traces: lanes,
+            traces: trace_lanes,
             elapsed,
+            metrics,
         })
     }
 
@@ -704,6 +781,14 @@ impl WorkerPool {
             Some(s) => s.sink(),
             None => TraceSink::default(),
         };
+        // The driver's metrics lane (Rc-based like the sink: it never
+        // leaves this thread). The stream merger shares it so in-order
+        // releases stamp emit time; workers get their own hubs.
+        let driver_hub = match &self.metrics {
+            Some(s) => s.hub(),
+            None => MetricsHub::disabled(),
+        };
+        let lanes: Mutex<LaneMetrics> = Mutex::new(LaneMetrics::default());
 
         let pool = *self;
         let elapsed = std::thread::scope(|scope| -> Result<f64> {
@@ -712,10 +797,11 @@ impl WorkerPool {
                     let (queues, completion) = (&queues, &completion);
                     let (containers, stop) = (&containers, &stop);
                     let (barrier, traces) = (&barrier, &traces);
+                    let lanes = &lanes;
                     scope.spawn(move || {
                         stream_worker(
                             wid, factory, pool, queues, completion, containers, stop, barrier,
-                            traces,
+                            traces, lanes,
                         )
                     })
                 })
@@ -724,7 +810,7 @@ impl WorkerPool {
             let mut driver = StreamDriver {
                 queues: &queues,
                 completion: &completion,
-                merger: StreamMerger::with_capacity(budget + 1),
+                merger: StreamMerger::with_capacity(budget + 1).with_hub(driver_hub.clone()),
                 emit,
                 inbox: Vec::new(),
                 budget,
@@ -733,6 +819,10 @@ impl WorkerPool {
                 emitted_regions: 0,
                 emitted_shards: 0,
                 sink: driver_sink.clone(),
+                hub: driver_hub.clone(),
+                heartbeat: pool.progress.filter(|_| driver_hub.enabled()).map(Heartbeat::new),
+                hb_stolen: 0,
+                hb_faults: 0,
                 watchdog: self.watchdog,
             };
             let mut planner: IngestPlanner<F::In> = IngestPlanner::new(granule);
@@ -765,19 +855,29 @@ impl WorkerPool {
             }
         })?;
 
-        let mut lanes = traces.into_inner().unwrap_or_else(|e| e.into_inner());
+        let mut trace_lanes = traces.into_inner().unwrap_or_else(|e| e.into_inner());
         if driver_sink.enabled() {
             let (records, dropped) = driver_sink.take();
-            lanes.push(WorkerTrace {
+            trace_lanes.push(WorkerTrace {
                 worker: DRIVER_LANE,
                 records,
                 dropped,
             });
         }
-        lanes.sort_by_key(|t| t.worker);
+        trace_lanes.sort_by_key(|t| t.worker);
+        // Fold the driver lane (submit/emit/e2e/stall accounting) into the
+        // worker lanes; merge order is irrelevant because the fold is
+        // commutative.
+        if driver_hub.enabled() {
+            lock_ignore_poison(&lanes).merge(&driver_hub.take());
+        }
+        let metrics = self
+            .metrics
+            .map(|_| lanes.into_inner().unwrap_or_else(|e| e.into_inner()));
         Ok(StreamRun {
-            traces: lanes,
+            traces: trace_lanes,
             elapsed,
+            metrics,
         })
     }
 }
@@ -842,6 +942,16 @@ struct StreamDriver<'s, I, O, K> {
     emitted_regions: usize,
     emitted_shards: usize,
     sink: TraceSink,
+    // Driver-side metrics lane: submit stamps, backpressure stalls,
+    // in-flight peaks; the merger shares the same hub for emit latency.
+    hub: MetricsHub,
+    // Progress heartbeat, present only when metrics are live; ticks from
+    // the driver's own pump/absorb loop — no extra thread.
+    heartbeat: Option<Heartbeat>,
+    // Steal/fault tallies observed on completed shards, kept here (not in
+    // the hub) so heartbeat lines don't double-count the worker lanes.
+    hb_stolen: u64,
+    hb_faults: u64,
     watchdog: Duration,
 }
 
@@ -886,6 +996,8 @@ where
         while let Some(r) = self.merger.pop_ready() {
             self.emitted_regions += r.regions;
             self.emitted_shards += 1;
+            self.hb_stolen += u64::from(r.stolen);
+            self.hb_faults += u64::from(r.retries) + u64::from(r.fault.is_some());
             if self.sink.enabled() {
                 let t = self.sink.now_ns();
                 self.sink.record(
@@ -899,6 +1011,7 @@ where
             }
             (self.emit)(r)?;
         }
+        self.tick_heartbeat(false);
         Ok(())
     }
 
@@ -906,31 +1019,40 @@ where
     /// budget (backpressure). An oversized shard (more regions than the
     /// whole budget) is admitted alone, once everything before it has
     /// drained.
-    fn submit(&mut self, task: ShardTask<I>) -> Result<()> {
+    fn submit(&mut self, mut task: ShardTask<I>) -> Result<()> {
         let regions = task.regions.len();
         let mut stalled = false;
         let mut stall_t0 = 0u64;
+        let mut stall_m0 = 0u64;
         loop {
             self.pump()?;
             let in_flight = self.submitted_regions - self.emitted_regions;
             if in_flight == 0 || in_flight + regions <= self.budget {
                 break;
             }
-            if !stalled && self.sink.enabled() {
+            if !stalled {
                 stalled = true;
-                stall_t0 = self.sink.now_ns();
+                if self.sink.enabled() {
+                    stall_t0 = self.sink.now_ns();
+                }
+                stall_m0 = self.hub.now_ns();
             }
             self.pump_wait()?;
         }
         if stalled {
-            let in_flight = self.submitted_regions - self.emitted_regions;
-            self.sink.record(
-                stall_t0,
-                self.sink.now_ns(),
-                TraceEvent::Stall {
-                    in_flight: in_flight as u32,
-                },
-            );
+            if self.sink.enabled() {
+                let in_flight = self.submitted_regions - self.emitted_regions;
+                self.sink.record(
+                    stall_t0,
+                    self.sink.now_ns(),
+                    TraceEvent::Stall {
+                        in_flight: in_flight as u32,
+                    },
+                );
+            }
+            if self.hub.enabled() {
+                self.hub.record_stall(self.hub.now_ns().saturating_sub(stall_m0));
+            }
         }
         self.submitted_regions += regions;
         self.submitted_shards += 1;
@@ -945,6 +1067,15 @@ where
                 },
             );
         }
+        if self.hub.enabled() {
+            // Stamp against the shared epoch *after* backpressure clears:
+            // end-to-end latency measures queue + service + reassembly,
+            // not time spent parked at the admission gate.
+            task.submit_ns = self.hub.now_ns();
+            self.hub.record_submit(regions as u64);
+            self.hub
+                .note_in_flight((self.submitted_regions - self.emitted_regions) as u64);
+        }
         self.queues.push(task);
         Ok(())
     }
@@ -955,7 +1086,40 @@ where
         while self.emitted_shards < self.submitted_shards {
             self.pump_wait()?;
         }
+        // Forced final tick: a progress-enabled run always prints at
+        // least one line, and the last line always reads `done=true`.
+        self.tick_heartbeat(true);
         Ok(())
+    }
+
+    /// Emit one progress line if the heartbeat interval has elapsed (or
+    /// unconditionally when `done`). Runs on the driver's own loop — one
+    /// `println!` per tick, so each line lands atomically even while the
+    /// run is racing toward its final tables.
+    fn tick_heartbeat(&mut self, done: bool) {
+        let Some(hb) = self.heartbeat.as_mut() else {
+            return;
+        };
+        let now = self.hub.now_ns();
+        if !done && !hb.due(now) {
+            return;
+        }
+        let (p50_ns, p99_ns) = self
+            .hub
+            .peek(|m| (m.e2e.quantile_ns(0.5), m.e2e.quantile_ns(0.99)))
+            .unwrap_or((0, 0));
+        let snap = ProgressSnapshot {
+            elapsed_secs: now as f64 / 1e9,
+            submitted_regions: self.submitted_regions as u64,
+            emitted_regions: self.emitted_regions as u64,
+            in_flight_regions: (self.submitted_regions - self.emitted_regions) as u64,
+            p50_ns,
+            p99_ns,
+            stolen: self.hb_stolen,
+            faults: self.hb_faults,
+            done,
+        };
+        println!("{}", Heartbeat::render(&snap));
     }
 }
 
@@ -973,6 +1137,7 @@ fn stream_worker<F: PipelineFactory>(
     stop: &AtomicBool,
     barrier: &Barrier,
     traces: &Mutex<Vec<WorkerTrace>>,
+    lanes: &Mutex<LaneMetrics>,
 ) {
     let current_shard = AtomicUsize::new(usize::MAX);
     let _guard = PanicSignal {
@@ -984,6 +1149,10 @@ fn stream_worker<F: PipelineFactory>(
     let sink = match &pool.trace {
         Some(s) => s.sink(),
         None => TraceSink::default(),
+    };
+    let hub = match &pool.metrics {
+        Some(s) => s.hub(),
+        None => MetricsHub::disabled(),
     };
     // eager build; errors and panics must still reach the barrier, or
     // the driver (and the other workers) would wait forever
@@ -1014,7 +1183,16 @@ fn stream_worker<F: PipelineFactory>(
     let mut rebuilds = 0u64;
     while !stop.load(Ordering::Relaxed) {
         let (task, stolen) = match queues.claim(worker_id, pool.watchdog) {
-            Ok(Claim::Task { work, stolen }) => (work, stolen),
+            Ok(Claim::Task {
+                work,
+                stolen,
+                waited,
+            }) => {
+                if hub.enabled() && !waited.is_zero() {
+                    hub.record_idle(waited.as_nanos() as u64);
+                }
+                (work, stolen)
+            }
             Ok(Claim::Done) => break,
             Err(e) => {
                 stop.store(true, Ordering::Relaxed);
@@ -1023,6 +1201,10 @@ fn stream_worker<F: PipelineFactory>(
             }
         };
         current_shard.store(task.index, Ordering::Relaxed);
+        // Queue wait = claim stamp − submit stamp, both against the shared
+        // epoch (the submit side stamped `task.submit_ns` after clearing
+        // backpressure, so this isolates time spent parked in the deques).
+        let queue_wait = hub.now_ns().saturating_sub(task.submit_ns);
         let s0 = sink.now_ns();
         let t0 = Instant::now();
         let guarded = run_shard_guarded(
@@ -1064,6 +1246,16 @@ fn stream_worker<F: PipelineFactory>(
                 return;
             }
         };
+        let took = t0.elapsed();
+        if hub.enabled() {
+            hub.record_shard(task.regions.len() as u64, stolen, queue_wait, took.as_nanos() as u64);
+            // `retries` already folds the quarantine convention (attempts
+            // − 1), so faults = retries + 1 when a fault record survives.
+            hub.record_faults(
+                u64::from(retries) + u64::from(fault.is_some()),
+                u64::from(retries),
+            );
+        }
         let result = ShardResult {
             shard: task.index,
             worker: worker_id,
@@ -1072,10 +1264,11 @@ fn stream_worker<F: PipelineFactory>(
             outputs,
             metrics,
             invocations,
-            elapsed: t0.elapsed().as_secs_f64(),
+            elapsed: took.as_secs_f64(),
             pipelines_built: pipeline.pipelines_built() + rebuilds,
             retries,
             fault,
+            submit_ns: task.submit_ns,
         };
         // Hand each region back through the factory (a pooled factory
         // reclaims its element buffers for the ingest driver; the
@@ -1097,6 +1290,9 @@ fn stream_worker<F: PipelineFactory>(
             records,
             dropped,
         });
+    }
+    if hub.enabled() {
+        lock_ignore_poison(lanes).merge(&hub.take());
     }
 }
 
@@ -1585,6 +1781,76 @@ mod tests {
         // shard 4 spans regions 8..10, the only items missing
         let expect: Vec<u32> = (0..100u32).filter(|&v| !(8..10).contains(&v)).collect();
         assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn metrics_lanes_fold_and_reconcile_with_results() {
+        let stream = items(200);
+        let weights = vec![1usize; 200];
+        let plan = ShardPlan::build(
+            &weights,
+            3,
+            &ShardPolicy {
+                shards_per_worker: 4,
+                ..ShardPolicy::default()
+            },
+        );
+        let run = WorkerPool::new(3)
+            .with_metrics(Some(MetricsSpec::new()))
+            .run_collect(&ToyFactory::plain(), &stream, &plan)
+            .unwrap();
+        let m = run.metrics.expect("metered run yields folded lanes");
+        assert_eq!(m.shards, plan.len() as u64, "one record per shard");
+        assert_eq!(m.regions, 200, "every region counted exactly once");
+        assert_eq!(m.service.count, plan.len() as u64);
+        assert_eq!(m.queue_wait.count, plan.len() as u64);
+        assert_eq!(m.queue_wait.sum_ns, 0, "materialized shards never queue");
+        assert_eq!(m.e2e.count, 0, "no submit stamps on materialized runs");
+        assert_eq!(m.faults, 0);
+        assert_eq!(m.retries, 0);
+        assert_eq!(
+            m.stolen,
+            run.results.iter().filter(|r| r.stolen).count() as u64,
+            "steal tally reconciles with per-shard flags"
+        );
+        assert!(m.busy_ns >= m.service.max_ns, "busy time folds every shard");
+
+        // the same pool without metering reports nothing
+        let bare = WorkerPool::new(3)
+            .run_collect(&ToyFactory::plain(), &stream, &plan)
+            .unwrap();
+        assert!(bare.metrics.is_none());
+    }
+
+    #[test]
+    fn streaming_metrics_record_e2e_and_flow() {
+        let run = WorkerPool::new(2)
+            .with_metrics(Some(MetricsSpec::new()))
+            .run_stream_collect(
+                &ToyFactory::plain(),
+                IterSource::new(0..200u32),
+                &IngestPolicy {
+                    buffer_regions: 16,
+                    shard_regions: 4,
+                },
+                |_| Ok(()),
+            )
+            .unwrap();
+        let m = run.metrics.expect("metered streaming run yields lanes");
+        assert_eq!(m.submitted_regions, 200);
+        assert_eq!(m.emitted_regions, 200, "flow balances at end of stream");
+        assert_eq!(m.regions, 200, "worker lanes saw every region");
+        assert_eq!(m.submitted_shards, m.emitted_shards);
+        assert_eq!(m.shards, m.submitted_shards, "workers ran every shard");
+        assert_eq!(m.e2e.count, 200, "one e2e sample per region");
+        assert_eq!(m.queue_wait.count, m.shards);
+        assert_eq!(m.service.count, m.shards);
+        assert!(m.e2e.max_ns > 0, "submit→emit spans real time");
+        assert!(
+            (1..=16).contains(&m.peak_in_flight),
+            "peak in-flight respects the budget: {}",
+            m.peak_in_flight
+        );
     }
 
     /// Worker whose shards outlast the test watchdog by far.

@@ -16,6 +16,7 @@ use super::plan::{ShardPlan, ShardPolicy};
 use super::pool::{ShardResult, WorkerPool, DEFAULT_WATCHDOG};
 use super::split::{SharedSplitQueue, SplitQueue, SplitSource};
 use super::steal::ClaimMode;
+use crate::metrics::{LaneMetrics, MetricsReport, MetricsSpec};
 use crate::trace::{Trace, TraceOptions, TraceSpec, WorkerTrace};
 use crate::workload::source::RegionSource;
 
@@ -36,6 +37,20 @@ pub struct ExecConfig {
     /// firing/shard/ingest/merge events into per-worker ring buffers and
     /// attaches the folded [`Trace`] to the report.
     pub trace: Option<TraceOptions>,
+    /// Live telemetry: `false` (the default) disables it completely —
+    /// every record site is one branch with no clock read. `true` meters
+    /// the run (per-worker [`LaneMetrics`](crate::metrics::LaneMetrics)
+    /// hubs, exact-folded) and attaches a
+    /// [`MetricsReport`](crate::metrics::MetricsReport) to the report.
+    /// Metering never changes scheduling: outputs are bit-identical
+    /// either way.
+    pub metrics: bool,
+    /// Progress heartbeat period for streaming runs: `Some(every)`
+    /// prints one machine-parseable `progress ...` line per interval
+    /// from the ingest driver's own loop (no extra thread). Implies
+    /// metrics (the heartbeat reads the live quantiles). `None` (the
+    /// default) stays silent; materialized runs never tick.
+    pub progress: Option<Duration>,
     /// What happens when a shard panics or errors (default:
     /// [`FaultPolicy::FailFast`] — the whole run aborts). See
     /// [`super::fault`] for `Retry` / `Quarantine` semantics.
@@ -67,6 +82,8 @@ impl ExecConfig {
             ingest: IngestPolicy::default(),
             claim: ClaimMode::default(),
             trace: None,
+            metrics: false,
+            progress: None,
             fault: FaultPolicy::default(),
             watchdog: DEFAULT_WATCHDOG,
             max_region_items: 0,
@@ -106,6 +123,22 @@ impl ExecConfig {
     /// runs launched with this config (see [`crate::trace`]).
     pub fn with_trace(mut self, trace: Option<TraceOptions>) -> ExecConfig {
         self.trace = trace;
+        self
+    }
+
+    /// Builder-style metrics toggle: `true` meters runs launched with
+    /// this config (see [`crate::metrics`]); outputs stay bit-identical.
+    pub fn with_metrics(mut self, metrics: bool) -> ExecConfig {
+        self.metrics = metrics;
+        self
+    }
+
+    /// Builder-style progress-heartbeat override: `Some(every)` prints
+    /// one `progress ...` line per interval during streaming runs (and
+    /// enables metrics, which the heartbeat reads). Zero is **not**
+    /// clamped here — [`ExecConfig::validate`] rejects it by name.
+    pub fn with_progress(mut self, every: Option<Duration>) -> ExecConfig {
+        self.progress = every;
         self
     }
 
@@ -165,6 +198,13 @@ impl ExecConfig {
             "invalid exec config: watchdog deadline = 0 (every blocking wait would \
              fail immediately; pass --watchdog-secs >= 1)"
         );
+        if let Some(every) = self.progress {
+            ensure!(
+                !every.is_zero(),
+                "invalid exec config: progress heartbeat period = 0 (the driver \
+                 would print a line per loop iteration; pass --progress-secs >= 1)"
+            );
+        }
         Ok(())
     }
 }
@@ -210,11 +250,22 @@ impl ShardedRunner {
     }
 
     fn pool(&self) -> WorkerPool {
-        // the trace epoch (and thus t=0 of every event stamp) is the
-        // moment the run is launched
+        // One shared epoch, stamped the moment the run is launched: both
+        // trace events and metric latencies count nanoseconds from it, so
+        // `trace summarize` latencies and the live MetricsReport are
+        // directly comparable. Progress implies metrics (the heartbeat
+        // reads the hub's live quantiles).
+        let epoch = Instant::now();
+        let metered = self.cfg.metrics || self.cfg.progress.is_some();
         WorkerPool::new(self.cfg.workers)
             .with_claim(self.cfg.claim)
-            .with_trace(self.cfg.trace.map(TraceSpec::from_options))
+            .with_trace(self.cfg.trace.map(|opts| {
+                let mut spec = TraceSpec::from_options(opts);
+                spec.epoch = epoch;
+                spec
+            }))
+            .with_metrics(metered.then(|| MetricsSpec::with_epoch(epoch)))
+            .with_progress(self.cfg.progress)
             .with_fault(self.cfg.fault)
             .with_watchdog(self.cfg.watchdog)
     }
@@ -233,6 +284,19 @@ impl ShardedRunner {
             workers: traces,
             nodes,
         });
+    }
+
+    /// Wrap a run's folded metrics lane into a
+    /// [`MetricsReport`](crate::metrics::MetricsReport) on the finished
+    /// report (no-op when the run was unmetered).
+    fn attach_metrics<T>(report: &mut ExecReport<T>, workers: usize, lanes: Option<LaneMetrics>) {
+        if let Some(totals) = lanes {
+            report.metrics_report = Some(MetricsReport {
+                workers,
+                elapsed: report.elapsed,
+                totals,
+            });
+        }
     }
 
     /// Plan shards at region boundaries, fan them out over the worker
@@ -260,6 +324,7 @@ impl ShardedRunner {
         if self.cfg.trace.is_some() {
             Self::attach_trace(&mut report, run.traces);
         }
+        Self::attach_metrics(&mut report, self.cfg.workers, run.metrics);
         Ok(report)
     }
 
@@ -324,6 +389,7 @@ impl ShardedRunner {
         if self.cfg.trace.is_some() {
             Self::attach_trace(&mut report, run.traces);
         }
+        Self::attach_metrics(&mut report, self.cfg.workers, run.metrics);
         Ok(report)
     }
 
@@ -382,6 +448,7 @@ impl ShardedRunner {
         if self.cfg.trace.is_some() {
             Self::attach_trace(&mut report, run.traces);
         }
+        Self::attach_metrics(&mut report, self.cfg.workers, run.metrics);
         Ok(report)
     }
 
@@ -427,6 +494,7 @@ impl ShardedRunner {
         if self.cfg.trace.is_some() {
             Self::attach_trace(&mut report, run.traces);
         }
+        Self::attach_metrics(&mut report, self.cfg.workers, run.metrics);
         Ok(report)
     }
 
@@ -587,6 +655,13 @@ mod tests {
         assert_eq!(c.watchdog, Duration::from_secs(5));
         let c = ExecConfig::new(2).with_max_region_items(512);
         assert_eq!(c.max_region_items, 512);
+        let c = ExecConfig::new(2).with_metrics(true);
+        assert!(c.metrics);
+        let c = ExecConfig::new(2).with_progress(Some(Duration::from_secs(2)));
+        assert_eq!(c.progress, Some(Duration::from_secs(2)));
+        assert!(c.validate().is_ok());
+        assert!(!ExecConfig::new(1).metrics, "metrics off by default");
+        assert!(ExecConfig::new(1).progress.is_none(), "no heartbeat by default");
         assert_eq!(ExecConfig::new(1).max_region_items, 0, "splitting off by default");
         assert_eq!(ExecConfig::new(1).fault, FaultPolicy::FailFast, "fail-fast by default");
         assert_eq!(ExecConfig::new(1).watchdog, DEFAULT_WATCHDOG);
@@ -608,6 +683,37 @@ mod tests {
         let err = ExecConfig::new(1).with_watchdog(Duration::ZERO).validate().unwrap_err();
         assert!(err.to_string().contains("watchdog deadline = 0"), "{err}");
         assert!(ExecConfig::new(1).with_fault(FaultPolicy::retry(1)).validate().is_ok());
+        let err = ExecConfig::new(1)
+            .with_progress(Some(Duration::ZERO))
+            .validate()
+            .unwrap_err();
+        assert!(err.to_string().contains("heartbeat period = 0"), "{err}");
+    }
+
+    #[test]
+    fn metered_runs_attach_a_reconciling_report_and_stay_bit_identical() {
+        let stream = stream_of(300);
+        let plain = ShardedRunner::with_workers(3).run(&WeightedFactory, &stream).unwrap();
+        assert!(plain.metrics_report.is_none(), "unmetered report carries none");
+
+        let cfg = ExecConfig::new(3).with_metrics(true);
+        let metered = ShardedRunner::new(cfg.clone()).run(&WeightedFactory, &stream).unwrap();
+        assert_eq!(metered.outputs, plain.outputs, "metering never changes outputs");
+        let mr = metered.metrics_report.as_ref().expect("metered report attaches");
+        assert_eq!(mr.workers, 3);
+        assert_eq!(mr.totals.shards, metered.shards as u64);
+        assert_eq!(mr.totals.regions, 300);
+        assert_eq!(mr.totals.e2e.count, 0, "no submit stamps when materialized");
+
+        let streamed = ShardedRunner::new(cfg.streaming(32))
+            .run_stream(&WeightedFactory, SliceSource::new(&stream))
+            .unwrap();
+        assert_eq!(streamed.outputs, plain.outputs);
+        let mr = streamed.metrics_report.as_ref().expect("streaming report attaches");
+        assert_eq!(mr.totals.submitted_regions, 300);
+        assert_eq!(mr.totals.emitted_regions, 300);
+        assert_eq!(mr.totals.e2e.count, 300, "one e2e sample per region");
+        assert_eq!(mr.totals.shards, streamed.shards as u64);
     }
 
     #[test]

@@ -88,7 +88,17 @@ impl ClaimMode {
 pub enum Claim<W> {
     /// A unit of work, with `stolen = true` if it came off another
     /// worker's deque.
-    Task { work: W, stolen: bool },
+    Task {
+        /// The claimed unit of work.
+        work: W,
+        /// Did it come off another worker's deque?
+        stolen: bool,
+        /// Time this claim spent blocked waiting for work to appear
+        /// (zero when work was immediately available — the fast path
+        /// reads no clock). Feeds per-worker idle accounting in the
+        /// metrics layer.
+        waited: Duration,
+    },
     /// The queues are closed and drained: no more work will ever come.
     Done,
 }
@@ -172,12 +182,14 @@ impl<W> StealQueues<W> {
         let mut q = lock_ignore_poison(&self.inner);
         let mut seen = self.pulse.count();
         let mut last_progress = Instant::now();
+        let mut waited = Duration::ZERO;
         loop {
             if let Some(work) = q.deques[worker].pop_back() {
                 self.pulse.beat();
                 return Ok(Claim::Task {
                     work,
                     stolen: false,
+                    waited,
                 });
             }
             if self.steal {
@@ -189,6 +201,7 @@ impl<W> StealQueues<W> {
                         return Ok(Claim::Task {
                             work,
                             stolen: true,
+                            waited,
                         });
                     }
                 }
@@ -211,11 +224,13 @@ impl<W> StealQueues<W> {
                      the watchdog deadline if shards legitimately run longer"
                 );
             }
+            let wait_t0 = Instant::now();
             q = self
                 .work_cv
                 .wait_timeout(q, remaining)
                 .unwrap_or_else(std::sync::PoisonError::into_inner)
                 .0;
+            waited += wait_t0.elapsed();
         }
     }
 
@@ -344,7 +359,7 @@ mod tests {
         let mut got = Vec::new();
         loop {
             match q.claim(worker, CALM).expect("watchdog must not fire") {
-                Claim::Task { work, stolen } => got.push((work, stolen)),
+                Claim::Task { work, stolen, .. } => got.push((work, stolen)),
                 Claim::Done => return got,
             }
         }
@@ -413,6 +428,18 @@ mod tests {
     }
 
     #[test]
+    fn immediate_claims_report_zero_wait() {
+        let q: StealQueues<u32> = StealQueues::new(1, true);
+        q.push(1);
+        match q.claim(0, CALM).unwrap() {
+            Claim::Task { waited, .. } => {
+                assert_eq!(waited, Duration::ZERO, "fast path never blocks")
+            }
+            Claim::Done => panic!("work was queued"),
+        }
+    }
+
+    #[test]
     fn completion_buffer_delivers_results_then_failure() {
         let c: CompletionBuffer<u32> = CompletionBuffer::new();
         let mut out = Vec::new();
@@ -458,8 +485,13 @@ mod tests {
             }
             q.push(7);
             match h.join().unwrap().expect("progress defers the watchdog") {
-                Claim::Task { work, stolen } => {
+                Claim::Task {
+                    work,
+                    stolen,
+                    waited,
+                } => {
                     assert_eq!((work, stolen), (7, false));
+                    assert!(waited > Duration::ZERO, "the claim blocked, so it waited");
                 }
                 Claim::Done => panic!("queues were never closed"),
             }

@@ -64,6 +64,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod exec;
 pub mod io;
+pub mod metrics;
 pub mod runtime;
 pub mod simd;
 pub mod trace;
@@ -111,6 +112,9 @@ pub mod prelude {
     };
     pub use crate::io::{
         BinarySink, BlobFileSource, BlobWriter, JsonlSink, ResultSink, TextSource,
+    };
+    pub use crate::metrics::{
+        Heartbeat, LaneMetrics, LatencyHist, MetricsHub, MetricsReport, MetricsSpec,
     };
     pub use crate::runtime::kernels::{Backend, KernelSet};
     pub use crate::runtime::{ArtifactStore, Engine, KernelName};

@@ -13,11 +13,15 @@
 //! regatta gen sum   --out data.rgn  [--items N] [--region-*] [--seed S]
 //! regatta gen taxi  --out trips.txt [--lines N] [--replicate K] [--seed S]
 //! regatta rgn verify <data.rgn>     # per-frame checksum + footer audit
-//! regatta bench <fig6|fig7|fig8|scale|hotpath|ingest|io|faults|penalty|width|lanectx>
+//! regatta bench <fig6|fig7|fig8|scale|hotpath|ingest|io|faults|latency|penalty|width|lanectx>
 //! regatta trace summarize --input out.trace.json [--buckets N]
+//! regatta metrics summarize --input out.metrics.json
 //! regatta info      # artifact manifest + platform
 //! regatta --config <file.toml>   # load a [run] config (see configs/)
 //! ```
+//!
+//! `run` also takes `--metrics out.json [--metrics-format json|prom]`
+//! and `--progress-secs N` for live telemetry (see the USAGE text).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -55,6 +59,8 @@ USAGE:
                     [--watchdog-secs S] [--max-region-items N]
                     [--input data.rgn] [--output results.jsonl|.bin]
                     [--trace out.trace.json]
+                    [--metrics out.json [--metrics-format json|prom]]
+                    [--progress-secs N]
   regatta run taxi  [--lines N] [--replicate K] [--variant enum|hybrid|tagged]
                     [--width W] [--backend xla|native]
                     [--policy greedy|deepest|rr]
@@ -64,6 +70,8 @@ USAGE:
                     [--watchdog-secs S] [--max-region-items N]
                     [--input trips.txt] [--output pairs.jsonl|.bin]
                     [--trace out.trace.json]
+                    [--metrics out.json [--metrics-format json|prom]]
+                    [--progress-secs N]
   regatta gen sum   --out data.rgn  [--items N] [--region-size N | --region-max N |
                     --region-skew N] [--seed S]
   regatta gen taxi  --out trips.txt [--lines N] [--replicate K] [--seed S]
@@ -80,7 +88,10 @@ USAGE:
                     [--buffers R1,R2,...] [--json FILE]
   regatta bench faults  [--smoke] [--items N] [--width W] [--workers K]
                     [--fault-rate P] [--json FILE]
+  regatta bench latency [--smoke] [--items N] [--width W] [--workers K1,K2,...]
+                    [--ingest-buffer R] [--json FILE]
   regatta trace summarize --input out.trace.json [--buckets N]
+  regatta metrics summarize --input out.metrics.json
   regatta info
   regatta --config <file.toml>
 
@@ -118,6 +129,19 @@ USAGE:
   the fused enumerated sum; stages with order-dependent region state
   (taxi, two-stage sum) refuse with a named error. 0 (default) never
   splits.
+
+  --metrics FILE meters the run with per-worker counters and
+  log2-bucketed latency histograms — per-region submit->emit e2e
+  latency, shard queue-wait and service time, steal / fault /
+  backpressure rates — and writes one artifact on completion
+  (--metrics-format json|prom; json round-trips through `regatta
+  metrics summarize`). Metering reads clocks and bumps thread-local
+  counters only, so outputs are bit-identical to an unmetered run.
+  --progress-secs N prints one machine-parseable heartbeat line
+  (`progress t=... regions=emitted/submitted rate=... p50_ms=...`)
+  every N seconds of a streamed run, from the ingest driver's own
+  loop — no extra thread. It implies metering; combine with --metrics
+  to also keep the artifact.
 ";
 
 fn main() {
@@ -143,6 +167,7 @@ fn real_main() -> Result<()> {
         Some("rgn") => run_rgn(&args),
         Some("bench") => run_bench(&args),
         Some("trace") => run_trace(&args),
+        Some("metrics") => run_metrics(&args),
         Some("info") => info(),
         Some(other) => bail!("unknown subcommand {other:?}"),
         None => {
@@ -165,7 +190,8 @@ fn config_to_args(path: &str) -> Result<Args> {
         "items", "region-size", "region-max", "region-skew", "mode", "shape", "width",
         "backend", "threshold", "workers", "shards-per-worker", "ingest-buffer", "lines",
         "replicate", "variant", "policy", "input", "output", "trace", "fault-policy",
-        "fault-retries", "watchdog-secs", "max-region-items",
+        "fault-retries", "watchdog-secs", "max-region-items", "metrics", "metrics-format",
+        "progress-secs",
     ] {
         if let Some(v) = cfg.get("run", &key.replace('-', "_")) {
             let vs = match v {
@@ -215,10 +241,62 @@ fn exec_config(args: &Args, workers: usize) -> Result<ExecConfig> {
         .with_trace(
             args.opt("trace")
                 .map(|_| regatta::trace::TraceOptions::default()),
+        )
+        .with_metrics(args.opt("metrics").is_some())
+        .with_progress(
+            args.get::<u64>("progress-secs")?
+                .map(Duration::from_secs),
         );
-    // names zero and absurd (unit-mistake) budgets, mentioning the flag
+    // names zero and absurd (unit-mistake) budgets and a zero heartbeat
+    // period, mentioning the flag
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// `--metrics FILE [--metrics-format json|prom]`: write the run's
+/// metrics artifact.
+fn write_metrics_artifact<T>(
+    report: &regatta::exec::ExecReport<T>,
+    path: &str,
+    format: &str,
+) -> Result<()> {
+    let m = report.metrics_report.as_ref().context(
+        "run was launched with --metrics but carries no metrics report (internal error)",
+    )?;
+    let body = match format {
+        "json" => m.to_json(),
+        "prom" => m.to_prometheus(),
+        other => bail!("unknown metrics format {other:?} (use json|prom)"),
+    };
+    std::fs::write(path, body).with_context(|| format!("writing {path}"))?;
+    println!(
+        "metrics: {} worker(s), {} region(s), e2e p99 {:.3} ms -> {path}",
+        m.workers,
+        m.totals.regions,
+        m.totals.e2e.quantile_ns(0.99) as f64 / 1e6
+    );
+    if format == "json" {
+        println!("metrics: inspect with `regatta metrics summarize --input {path}`");
+    }
+    Ok(())
+}
+
+/// `regatta metrics summarize`: run/flow/latency tables from a
+/// `--metrics` JSON artifact.
+fn run_metrics(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("summarize") => {
+            let path = args
+                .opt("input")
+                .context("metrics summarize needs --input FILE (a --metrics artifact)")?;
+            let text =
+                std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            let report = regatta::metrics::MetricsReport::from_json(&text)?;
+            print!("{}", report.summary_table());
+            Ok(())
+        }
+        other => bail!("unknown metrics action {other:?} (use summarize)"),
+    }
 }
 
 /// `--trace FILE`: write the run's Chrome-trace artifact.
@@ -350,6 +428,8 @@ fn run_sum(args: &Args) -> Result<()> {
     let input = args.opt("input").map(str::to_string);
     let output = args.opt("output").map(str::to_string);
     let trace_path = args.opt("trace").map(str::to_string);
+    let metrics_path = args.opt("metrics").map(str::to_string);
+    let metrics_format = args.str_or("metrics-format", "json");
     // file I/O always runs through the streaming executor — bounded
     // memory is its point
     let streaming = args.flag("stream") || input.is_some() || output.is_some();
@@ -419,6 +499,9 @@ fn run_sum(args: &Args) -> Result<()> {
             if let Some(tp) = &trace_path {
                 write_trace_artifact(&report, tp)?;
             }
+            if let Some(mp) = &metrics_path {
+                write_metrics_artifact(&report, mp, &metrics_format)?;
+            }
             if args.flag("stats") {
                 print_exec_stats(&report);
                 print!("{}", report.metrics.table());
@@ -436,6 +519,9 @@ fn run_sum(args: &Args) -> Result<()> {
         if let Some(tp) = &trace_path {
             write_trace_artifact(&report, tp)?;
         }
+        if let Some(mp) = &metrics_path {
+            write_metrics_artifact(&report, mp, &metrics_format)?;
+        }
         if args.flag("stats") {
             print_exec_stats(&report);
         }
@@ -443,6 +529,8 @@ fn run_sum(args: &Args) -> Result<()> {
         (outputs, report.metrics, report.elapsed)
     } else if workers <= 1
         && trace_path.is_none()
+        && metrics_path.is_none()
+        && args.get::<u64>("progress-secs")?.is_none()
         && args.get_or("max-region-items", 0)? == 0usize
         && matches!(fault_policy(args)?, FaultPolicy::FailFast)
     {
@@ -460,6 +548,9 @@ fn run_sum(args: &Args) -> Result<()> {
         let report = runner.run(&factory, &blobs)?;
         if let Some(tp) = &trace_path {
             write_trace_artifact(&report, tp)?;
+        }
+        if let Some(mp) = &metrics_path {
+            write_metrics_artifact(&report, mp, &metrics_format)?;
         }
         if args.flag("stats") {
             print_exec_stats(&report);
@@ -516,6 +607,8 @@ fn run_taxi(args: &Args) -> Result<()> {
     anyhow::ensure!(workers >= 1, "--workers must be >= 1 (got {workers})");
     let output = args.opt("output").map(str::to_string);
     let trace_path = args.opt("trace").map(str::to_string);
+    let metrics_path = args.opt("metrics").map(str::to_string);
+    let metrics_format = args.str_or("metrics-format", "json");
     if let Some(path) = args.opt("input").map(str::to_string) {
         return run_taxi_file(args, &path, output.as_deref(), variant, width, pol, workers);
     }
@@ -552,6 +645,9 @@ fn run_taxi(args: &Args) -> Result<()> {
             if let Some(tp) = &trace_path {
                 write_trace_artifact(&report, tp)?;
             }
+            if let Some(mp) = &metrics_path {
+                write_metrics_artifact(&report, mp, &metrics_format)?;
+            }
             if args.flag("stats") {
                 print_exec_stats(&report);
                 print!("{}", report.metrics.table());
@@ -574,12 +670,17 @@ fn run_taxi(args: &Args) -> Result<()> {
         if let Some(tp) = &trace_path {
             write_trace_artifact(&report, tp)?;
         }
+        if let Some(mp) = &metrics_path {
+            write_metrics_artifact(&report, mp, &metrics_format)?;
+        }
         if args.flag("stats") {
             print_exec_stats(&report);
         }
         (report.outputs, report.metrics, report.elapsed)
     } else if workers <= 1
         && trace_path.is_none()
+        && metrics_path.is_none()
+        && args.get::<u64>("progress-secs")?.is_none()
         && args.get_or("max-region-items", 0)? == 0usize
         && matches!(fault_policy(args)?, FaultPolicy::FailFast)
     {
@@ -595,6 +696,9 @@ fn run_taxi(args: &Args) -> Result<()> {
         let report = runner.run(&factory, &w.lines)?;
         if let Some(tp) = &trace_path {
             write_trace_artifact(&report, tp)?;
+        }
+        if let Some(mp) = &metrics_path {
+            write_metrics_artifact(&report, mp, &metrics_format)?;
         }
         if args.flag("stats") {
             print_exec_stats(&report);
@@ -649,6 +753,8 @@ fn run_taxi_file(
     let factory = TaxiFactory::new(cfg, KernelSpawn::from(sel), text.clone());
     let runner = ShardedRunner::new(exec_config(args, workers)?);
     let trace_path = args.opt("trace").map(str::to_string);
+    let metrics_path = args.opt("metrics").map(str::to_string);
+    let metrics_format = args.str_or("metrics-format", "json");
     if let Some(out_path) = output {
         ensure_distinct_io(path, out_path)?;
         let mut sink = file_sink::<TaxiPair>(out_path)?;
@@ -656,6 +762,9 @@ fn run_taxi_file(
         let stats = sink.finish()?;
         if let Some(tp) = &trace_path {
             write_trace_artifact(&report, tp)?;
+        }
+        if let Some(mp) = &metrics_path {
+            write_metrics_artifact(&report, mp, &metrics_format)?;
         }
         if args.flag("stats") {
             print_exec_stats(&report);
@@ -671,6 +780,9 @@ fn run_taxi_file(
         let report = runner.run_stream(&factory, source)?;
         if let Some(tp) = &trace_path {
             write_trace_artifact(&report, tp)?;
+        }
+        if let Some(mp) = &metrics_path {
+            write_metrics_artifact(&report, mp, &metrics_format)?;
         }
         if args.flag("stats") {
             print_exec_stats(&report);
@@ -764,7 +876,7 @@ fn run_rgn(args: &Args) -> Result<()> {
 fn run_bench(args: &Args) -> Result<()> {
     let which = args.positional.get(1).context(
         "bench target required: \
-         fig6|fig7|fig8|scale|hotpath|ingest|io|faults|penalty|width|lanectx",
+         fig6|fig7|fig8|scale|hotpath|ingest|io|faults|latency|penalty|width|lanectx",
     )?;
     if which == "hotpath" {
         return run_bench_hotpath(args);
@@ -777,6 +889,9 @@ fn run_bench(args: &Args) -> Result<()> {
     }
     if which == "faults" {
         return run_bench_faults(args);
+    }
+    if which == "latency" {
+        return run_bench_latency(args);
     }
     let mut cfg = SweepConfig {
         backend: backend(args)?,
@@ -928,6 +1043,35 @@ fn run_bench_faults(args: &Args) -> Result<()> {
     println!("wrote {path}");
     if let Some(overhead) = faults::retry_overhead(&report) {
         println!("retry-policy run vs fault-free baseline: {overhead:.2}x elapsed");
+    }
+    Ok(())
+}
+
+/// `bench latency`: per-region submit→emit latency quantiles under the
+/// streamed executor with live metrics, informational JSON artifact (see
+/// `rust/src/bench/latency.rs`).
+fn run_bench_latency(args: &Args) -> Result<()> {
+    use regatta::bench::latency;
+    let mut cfg = if args.flag("smoke") {
+        latency::LatencyConfig::smoke()
+    } else {
+        latency::LatencyConfig::default()
+    };
+    cfg.width = args.get_or("width", cfg.width)?;
+    cfg.items = args.get_or("items", cfg.items)?;
+    cfg.workers = args.list_or("workers", &cfg.workers)?;
+    cfg.budget = args.get_or("ingest-buffer", cfg.budget)?;
+    anyhow::ensure!(cfg.budget >= 1, "--ingest-buffer must be >= 1");
+    cfg.seed = args.get_or("seed", cfg.seed)?;
+    let report = latency::run(&cfg)?;
+    let path = args.str_or("json", "BENCH_latency.json");
+    std::fs::write(&path, latency::to_json(&report)).with_context(|| format!("writing {path}"))?;
+    println!("wrote {path}");
+    if let Some(r) = report.rows.last() {
+        println!(
+            "at {} worker(s): e2e p50 {:.3} ms, p99 {:.3} ms, max {:.3} ms (informational)",
+            r.workers, r.e2e_p50_ms, r.e2e_p99_ms, r.e2e_max_ms
+        );
     }
     Ok(())
 }

@@ -1,0 +1,1131 @@
+//! Live telemetry: per-worker counters, gauges and log2-bucketed latency
+//! histograms — always-cheap observability for *every* run.
+//!
+//! The trace layer ([`crate::trace`]) records events exhaustively for one
+//! run; this module summarizes continuously. Each worker (and the
+//! streaming driver) owns a thread-confined [`MetricsHub`] — the same
+//! Copy-spec + lane pattern as [`TraceSink`](crate::trace::TraceSink) —
+//! holding fixed-size [`LatencyHist`]s and plain counters in one inline
+//! [`LaneMetrics`] block. Recording is a `RefCell` borrow plus integer
+//! stores: no locks, no clock reads when disabled, and **zero heap
+//! allocations on the record path** (pinned by the counting allocator in
+//! this module's tests and `tests/metrics_observe.rs`).
+//!
+//! ## What is measured
+//!
+//! * **Per-region end-to-end latency** — ingest submit → in-order merge
+//!   emit, stamped against the shared trace epoch
+//!   ([`MetricsSpec::epoch`]). Streaming runs only: materialized runs
+//!   have no submit stamp, so their `e2e` histogram stays empty.
+//! * **Shard queue-wait vs service time** — submit → claim, and the
+//!   `run_shard` span itself.
+//! * **Rates** — steals, backpressure stalls (count + blocked time),
+//!   faults and retries, derived from the exact same quantities the
+//!   [`ExecReport`](crate::exec::ExecReport) folds, so the totals
+//!   reconcile number for number.
+//! * **Live occupancy** — the peak in-flight region count (a max-fold
+//!   gauge) and per-worker busy/idle nanoseconds.
+//!
+//! ## Bucket scheme
+//!
+//! [`LatencyHist`] has 64 preallocated buckets: bucket 0 holds samples
+//! of 0–1 ns, bucket *i* (*i* ≥ 1) holds `[2^i, 2^(i+1))` ns. The merge
+//! is element-wise integer addition plus a max-fold — **exact and
+//! associative**, so folding per-lane histograms in any order yields the
+//! same [`MetricsReport`], and quantiles are bucket-bounded rather than
+//! sampled (a reported p99 names the bucket the true p99 falls in).
+//!
+//! ## Invariants
+//!
+//! * Metrics-on runs are **bit-identical** to metrics-off runs: hubs
+//!   only read clocks and bump counters, never influence scheduling.
+//! * Disabled hubs cost one `Option` branch per site — no clock reads.
+//! * The record path never allocates, with metrics on or off.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Number of log2 buckets in a [`LatencyHist`] — enough for every
+/// nanosecond magnitude a `u64` can hold.
+pub const HIST_BUCKETS: usize = 64;
+
+/// The cross-thread recipe for building per-worker hubs: just the shared
+/// clock epoch. `Copy + Send`, mirroring
+/// [`TraceSpec`](crate::trace::TraceSpec); when a run is both traced and
+/// metered the runner hands both specs the *same* epoch, so trace stamps
+/// and metric latencies are directly comparable.
+#[derive(Debug, Clone, Copy)]
+pub struct MetricsSpec {
+    /// Shared monotonic epoch: every stamp is nanoseconds since this.
+    pub epoch: Instant,
+}
+
+impl MetricsSpec {
+    /// A spec whose epoch is "now".
+    pub fn new() -> MetricsSpec {
+        MetricsSpec {
+            epoch: Instant::now(),
+        }
+    }
+
+    /// A spec stamping against an existing epoch (shared with a
+    /// [`TraceSpec`](crate::trace::TraceSpec) when both are on).
+    pub fn with_epoch(epoch: Instant) -> MetricsSpec {
+        MetricsSpec { epoch }
+    }
+
+    /// Build an enabled hub (one inline lane block) on the calling
+    /// thread.
+    pub fn hub(&self) -> MetricsHub {
+        MetricsHub {
+            inner: Some(Rc::new(HubInner {
+                epoch: self.epoch,
+                state: RefCell::new(LaneMetrics::default()),
+            })),
+        }
+    }
+}
+
+impl Default for MetricsSpec {
+    fn default() -> Self {
+        MetricsSpec::new()
+    }
+}
+
+/// Fixed-size log2-bucketed latency histogram: preallocated, never
+/// grows, merges exactly. Bucket 0 covers 0–1 ns; bucket *i* covers
+/// `[2^i, 2^(i+1))` ns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LatencyHist {
+    /// Per-bucket sample counts.
+    pub buckets: [u64; HIST_BUCKETS],
+    /// Total samples recorded.
+    pub count: u64,
+    /// Exact sum of all recorded nanoseconds.
+    pub sum_ns: u64,
+    /// Largest recorded sample.
+    pub max_ns: u64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist {
+            buckets: [0; HIST_BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            max_ns: 0,
+        }
+    }
+}
+
+impl LatencyHist {
+    /// The bucket index a sample lands in.
+    #[inline]
+    pub fn bucket_index(ns: u64) -> usize {
+        if ns == 0 {
+            0
+        } else {
+            63 - ns.leading_zeros() as usize
+        }
+    }
+
+    /// `(lower, upper)` nanosecond bounds of bucket `i`, inclusive.
+    pub fn bucket_bounds(i: usize) -> (u64, u64) {
+        let lo = if i == 0 { 0 } else { 1u64 << i };
+        let hi = if i >= 63 { u64::MAX } else { (1u64 << (i + 1)) - 1 };
+        (lo, hi)
+    }
+
+    /// Record one sample. Never allocates.
+    #[inline]
+    pub fn record(&mut self, ns: u64) {
+        self.record_n(ns, 1);
+    }
+
+    /// Record `n` samples of the same value (used for per-region
+    /// latencies derived from one shard-level stamp). Never allocates.
+    #[inline]
+    pub fn record_n(&mut self, ns: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.buckets[Self::bucket_index(ns)] += n;
+        self.count += n;
+        self.sum_ns += ns * n;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Exact merge: element-wise addition plus a max-fold. Associative
+    /// and commutative, so lane fold order never changes the result.
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// The `(lower, upper)` bounds of the bucket holding the `q`th
+    /// quantile sample (rank `ceil(q × count)`), or `None` when empty.
+    /// The true quantile provably lies within these bounds — the
+    /// cross-check tests hold trace-derived exact quantiles against them.
+    pub fn quantile_bounds(&self, q: f64) -> Option<(u64, u64)> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(Self::bucket_bounds(i));
+            }
+        }
+        None
+    }
+
+    /// Midpoint of the `q`th quantile's bucket (0 when empty) — the
+    /// headline estimator used by the heartbeat and `bench latency`.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        match self.quantile_bounds(q) {
+            Some((lo, hi)) => lo + (hi - lo) / 2,
+            None => 0,
+        }
+    }
+
+    /// Mean recorded nanoseconds (0 when empty).
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum_ns / self.count
+        }
+    }
+}
+
+/// One lane's complete metric state: three histograms plus counters and
+/// gauges, all inline (`~1.6 KB`, no heap). Worker lanes fill the
+/// shard-side fields, the streaming driver's lane fills the
+/// submit/emit/stall side; unused fields stay zero, and the exact merge
+/// ([`LaneMetrics::merge`]) folds any mix of lanes.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LaneMetrics {
+    /// Per-region end-to-end latency: ingest submit → in-order emit
+    /// (streaming driver lane; empty on materialized runs).
+    pub e2e: LatencyHist,
+    /// Per-shard queue wait: submit → claim (worker lanes, streaming).
+    pub queue_wait: LatencyHist,
+    /// Per-shard service time: the `run_shard` span (worker lanes).
+    pub service: LatencyHist,
+    /// Shards executed.
+    pub shards: u64,
+    /// Regions executed.
+    pub regions: u64,
+    /// Shards claimed from another worker's deque.
+    pub stolen: u64,
+    /// Failed shard attempts (each retry or quarantine attempt).
+    pub faults: u64,
+    /// Rebuild-and-rerun recovery cycles.
+    pub retries: u64,
+    /// Nanoseconds spent executing shards.
+    pub busy_ns: u64,
+    /// Nanoseconds spent blocked waiting for work to claim.
+    pub idle_ns: u64,
+    /// Backpressure stalls (driver lane).
+    pub stalls: u64,
+    /// Nanoseconds the driver spent blocked on backpressure.
+    pub stall_ns: u64,
+    /// Shards submitted by the ingest driver.
+    pub submitted_shards: u64,
+    /// Regions submitted by the ingest driver.
+    pub submitted_regions: u64,
+    /// Shards emitted in stream order.
+    pub emitted_shards: u64,
+    /// Regions emitted in stream order.
+    pub emitted_regions: u64,
+    /// Peak regions in flight (submitted − emitted): a max-fold gauge.
+    pub peak_in_flight: u64,
+}
+
+impl LaneMetrics {
+    /// Exact fold of another lane into this one: counters add,
+    /// histograms merge element-wise, gauges max-fold. Associative, so
+    /// the per-worker fold order never changes the report.
+    pub fn merge(&mut self, other: &LaneMetrics) {
+        self.e2e.merge(&other.e2e);
+        self.queue_wait.merge(&other.queue_wait);
+        self.service.merge(&other.service);
+        self.shards += other.shards;
+        self.regions += other.regions;
+        self.stolen += other.stolen;
+        self.faults += other.faults;
+        self.retries += other.retries;
+        self.busy_ns += other.busy_ns;
+        self.idle_ns += other.idle_ns;
+        self.stalls += other.stalls;
+        self.stall_ns += other.stall_ns;
+        self.submitted_shards += other.submitted_shards;
+        self.submitted_regions += other.submitted_regions;
+        self.emitted_shards += other.emitted_shards;
+        self.emitted_regions += other.emitted_regions;
+        self.peak_in_flight = self.peak_in_flight.max(other.peak_in_flight);
+    }
+}
+
+#[derive(Debug)]
+struct HubInner {
+    epoch: Instant,
+    state: RefCell<LaneMetrics>,
+}
+
+/// The recording handle threaded through pool, driver and merger.
+/// Disabled (the default) it is a `None` and every call is a single
+/// predictable branch with **no clock read**; enabled it stamps against
+/// the shared epoch and mutates the lane's inline [`LaneMetrics`] in
+/// place. `Rc`-based and thread-confined, exactly like
+/// [`TraceSink`](crate::trace::TraceSink).
+#[derive(Debug, Clone, Default)]
+pub struct MetricsHub {
+    inner: Option<Rc<HubInner>>,
+}
+
+impl MetricsHub {
+    /// The disabled hub (same as `Default`).
+    pub fn disabled() -> MetricsHub {
+        MetricsHub { inner: None }
+    }
+
+    /// Is this hub recording?
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Nanoseconds since the shared epoch; 0 when disabled (callers
+    /// gate on [`enabled`](MetricsHub::enabled) before differencing
+    /// stamps).
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        match &self.inner {
+            Some(inner) => inner.epoch.elapsed().as_nanos() as u64,
+            None => 0,
+        }
+    }
+
+    #[inline]
+    fn with<F: FnOnce(&mut LaneMetrics)>(&self, f: F) {
+        if let Some(inner) = &self.inner {
+            f(&mut inner.state.borrow_mut());
+        }
+    }
+
+    /// Read the lane's current state (`None` when disabled) — used by
+    /// the heartbeat for so-far quantiles.
+    pub fn peek<R, F: FnOnce(&LaneMetrics) -> R>(&self, f: F) -> Option<R> {
+        self.inner.as_ref().map(|inner| f(&inner.state.borrow()))
+    }
+
+    /// Worker lane: one shard executed to completion.
+    #[inline]
+    pub fn record_shard(&self, regions: u64, stolen: bool, queue_wait_ns: u64, service_ns: u64) {
+        self.with(|m| {
+            m.shards += 1;
+            m.regions += regions;
+            m.stolen += stolen as u64;
+            m.busy_ns += service_ns;
+            m.queue_wait.record(queue_wait_ns);
+            m.service.record(service_ns);
+        });
+    }
+
+    /// Worker lane: time spent blocked waiting to claim work.
+    #[inline]
+    pub fn record_idle(&self, ns: u64) {
+        self.with(|m| m.idle_ns += ns);
+    }
+
+    /// Worker lane: failed attempts and recovery cycles for one shard.
+    #[inline]
+    pub fn record_faults(&self, faults: u64, retries: u64) {
+        if faults == 0 && retries == 0 {
+            return;
+        }
+        self.with(|m| {
+            m.faults += faults;
+            m.retries += retries;
+        });
+    }
+
+    /// Driver lane: one shard submitted to the deques.
+    #[inline]
+    pub fn record_submit(&self, regions: u64) {
+        self.with(|m| {
+            m.submitted_shards += 1;
+            m.submitted_regions += regions;
+        });
+    }
+
+    /// Driver lane: one backpressure stall of `ns` nanoseconds.
+    #[inline]
+    pub fn record_stall(&self, ns: u64) {
+        self.with(|m| {
+            m.stalls += 1;
+            m.stall_ns += ns;
+        });
+    }
+
+    /// Driver lane: one shard of `regions` regions emitted in stream
+    /// order, each region's end-to-end latency being `e2e_ns`.
+    #[inline]
+    pub fn record_emit(&self, regions: u64, e2e_ns: u64) {
+        self.with(|m| {
+            m.emitted_shards += 1;
+            m.emitted_regions += regions;
+            m.e2e.record_n(e2e_ns, regions);
+        });
+    }
+
+    /// Driver lane: max-fold the live in-flight region gauge.
+    #[inline]
+    pub fn note_in_flight(&self, regions: u64) {
+        self.with(|m| m.peak_in_flight = m.peak_in_flight.max(regions));
+    }
+
+    /// Drain this lane's state, leaving the hub enabled but zeroed.
+    /// Allocation-free: [`LaneMetrics`] is inline.
+    pub fn take(&self) -> LaneMetrics {
+        match &self.inner {
+            Some(inner) => std::mem::take(&mut inner.state.borrow_mut()),
+            None => LaneMetrics::default(),
+        }
+    }
+}
+
+/// The folded post-run telemetry: every lane's [`LaneMetrics`] merged
+/// exactly, plus run shape. Attached to
+/// [`ExecReport`](crate::exec::ExecReport) when metrics are on, exported
+/// as JSON (`--metrics out.json`) or Prometheus text
+/// (`--metrics-format prom`), and re-loadable via
+/// [`MetricsReport::from_json`] for `regatta metrics summarize`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsReport {
+    /// Worker threads the run was configured with.
+    pub workers: usize,
+    /// Wall-clock seconds of the measured phase.
+    pub elapsed: f64,
+    /// All lanes folded (exact merge).
+    pub totals: LaneMetrics,
+}
+
+/// JSON schema tag written by [`MetricsReport::to_json`].
+pub const METRICS_SCHEMA: &str = "regatta-metrics-v1";
+
+fn hist_json(name: &str, h: &LatencyHist, out: &mut String) {
+    out.push_str(&format!(
+        "    \"{name}\": {{\"count\": {}, \"sum_ns\": {}, \"max_ns\": {}, \"buckets\": [",
+        h.count, h.sum_ns, h.max_ns
+    ));
+    for (i, b) in h.buckets.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&b.to_string());
+    }
+    out.push_str("]}");
+}
+
+fn hist_from_json(j: &Json, name: &str) -> Result<LatencyHist> {
+    let h = j.get(name).with_context(|| format!("metrics JSON: missing histogram {name:?}"))?;
+    let int = |key: &str| -> Result<u64> {
+        Ok(h.get(key)
+            .and_then(Json::as_f64)
+            .with_context(|| format!("metrics JSON: histogram {name:?} missing {key:?}"))?
+            as u64)
+    };
+    let raw = h
+        .get("buckets")
+        .and_then(Json::as_arr)
+        .with_context(|| format!("metrics JSON: histogram {name:?} missing buckets"))?;
+    if raw.len() != HIST_BUCKETS {
+        bail!(
+            "metrics JSON: histogram {name:?} has {} buckets, expected {HIST_BUCKETS}",
+            raw.len()
+        );
+    }
+    let mut buckets = [0u64; HIST_BUCKETS];
+    for (slot, v) in buckets.iter_mut().zip(raw.iter()) {
+        *slot = v.as_f64().context("metrics JSON: non-numeric bucket")? as u64;
+    }
+    Ok(LatencyHist {
+        buckets,
+        count: int("count")?,
+        sum_ns: int("sum_ns")?,
+        max_ns: int("max_ns")?,
+    })
+}
+
+/// `(name, value)` pairs of every scalar counter/gauge in a lane, in a
+/// fixed order — shared by the JSON exporter, the parser and the
+/// Prometheus renderer so the three can never drift apart.
+fn counters(t: &LaneMetrics) -> [(&'static str, u64); 14] {
+    [
+        ("shards", t.shards),
+        ("regions", t.regions),
+        ("stolen", t.stolen),
+        ("faults", t.faults),
+        ("retries", t.retries),
+        ("busy_ns", t.busy_ns),
+        ("idle_ns", t.idle_ns),
+        ("stalls", t.stalls),
+        ("stall_ns", t.stall_ns),
+        ("submitted_shards", t.submitted_shards),
+        ("submitted_regions", t.submitted_regions),
+        ("emitted_shards", t.emitted_shards),
+        ("emitted_regions", t.emitted_regions),
+        ("peak_in_flight", t.peak_in_flight),
+    ]
+}
+
+impl MetricsReport {
+    /// In-order emit rate over the measured phase, regions per second.
+    pub fn emit_rate(&self) -> f64 {
+        if self.elapsed > 0.0 {
+            self.totals.emitted_regions as f64 / self.elapsed
+        } else {
+            0.0
+        }
+    }
+
+    /// Render the JSON artifact (`--metrics out.json`). Round-trips
+    /// through [`MetricsReport::from_json`] via [`crate::util::json`].
+    pub fn to_json(&self) -> String {
+        let t = &self.totals;
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema\": \"{METRICS_SCHEMA}\",\n"));
+        out.push_str(&format!("  \"workers\": {},\n", self.workers));
+        out.push_str(&format!("  \"elapsed_secs\": {},\n", self.elapsed));
+        out.push_str("  \"counters\": {");
+        for (i, (name, v)) in counters(t).iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{name}\": {v}"));
+        }
+        out.push_str("},\n");
+        out.push_str("  \"histograms\": {\n");
+        hist_json("e2e_ns", &t.e2e, &mut out);
+        out.push_str(",\n");
+        hist_json("queue_wait_ns", &t.queue_wait, &mut out);
+        out.push_str(",\n");
+        hist_json("service_ns", &t.service, &mut out);
+        out.push_str("\n  }\n}\n");
+        out
+    }
+
+    /// Parse a [`MetricsReport::to_json`] artifact back (the
+    /// `regatta metrics summarize` loader).
+    pub fn from_json(text: &str) -> Result<MetricsReport> {
+        let j = Json::parse(text).context("parsing metrics JSON")?;
+        let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
+        if schema != METRICS_SCHEMA {
+            bail!("metrics JSON: schema {schema:?} is not {METRICS_SCHEMA:?}");
+        }
+        let c = j.get("counters").context("metrics JSON: missing counters")?;
+        let int = |key: &str| -> Result<u64> {
+            Ok(c.get(key)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("metrics JSON: missing counter {key:?}"))?
+                as u64)
+        };
+        let h = j.get("histograms").context("metrics JSON: missing histograms")?;
+        let totals = LaneMetrics {
+            e2e: hist_from_json(h, "e2e_ns")?,
+            queue_wait: hist_from_json(h, "queue_wait_ns")?,
+            service: hist_from_json(h, "service_ns")?,
+            shards: int("shards")?,
+            regions: int("regions")?,
+            stolen: int("stolen")?,
+            faults: int("faults")?,
+            retries: int("retries")?,
+            busy_ns: int("busy_ns")?,
+            idle_ns: int("idle_ns")?,
+            stalls: int("stalls")?,
+            stall_ns: int("stall_ns")?,
+            submitted_shards: int("submitted_shards")?,
+            submitted_regions: int("submitted_regions")?,
+            emitted_shards: int("emitted_shards")?,
+            emitted_regions: int("emitted_regions")?,
+            peak_in_flight: int("peak_in_flight")?,
+        };
+        Ok(MetricsReport {
+            workers: j.get("workers").and_then(Json::as_usize).unwrap_or(0),
+            elapsed: j.get("elapsed_secs").and_then(Json::as_f64).unwrap_or(0.0),
+            totals,
+        })
+    }
+
+    /// Render Prometheus text exposition (`--metrics-format prom`).
+    /// Counters are `regatta_*_total`, durations are converted to
+    /// seconds, histograms use cumulative `le` buckets at the power-of-2
+    /// nanosecond boundaries.
+    pub fn to_prometheus(&self) -> String {
+        let t = &self.totals;
+        let mut out = String::new();
+        let mut counter = |name: &str, help: &str, v: f64| {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
+        };
+        counter("regatta_shards_total", "Shards executed.", t.shards as f64);
+        counter("regatta_regions_total", "Regions executed.", t.regions as f64);
+        counter(
+            "regatta_steals_total",
+            "Shards claimed from another worker's deque.",
+            t.stolen as f64,
+        );
+        counter("regatta_faults_total", "Failed shard attempts.", t.faults as f64);
+        counter("regatta_retries_total", "Shard recovery cycles.", t.retries as f64);
+        counter(
+            "regatta_stalls_total",
+            "Ingest backpressure stalls.",
+            t.stalls as f64,
+        );
+        counter(
+            "regatta_stall_seconds_total",
+            "Seconds the ingest driver spent blocked on backpressure.",
+            t.stall_ns as f64 / 1e9,
+        );
+        counter(
+            "regatta_busy_seconds_total",
+            "Seconds workers spent executing shards.",
+            t.busy_ns as f64 / 1e9,
+        );
+        counter(
+            "regatta_idle_seconds_total",
+            "Seconds workers spent blocked waiting for work.",
+            t.idle_ns as f64 / 1e9,
+        );
+        counter(
+            "regatta_submitted_regions_total",
+            "Regions submitted by the ingest driver.",
+            t.submitted_regions as f64,
+        );
+        counter(
+            "regatta_emitted_regions_total",
+            "Regions emitted in stream order.",
+            t.emitted_regions as f64,
+        );
+        out.push_str(
+            "# HELP regatta_in_flight_regions_peak Peak regions in flight.\n\
+             # TYPE regatta_in_flight_regions_peak gauge\n",
+        );
+        out.push_str(&format!("regatta_in_flight_regions_peak {}\n", t.peak_in_flight));
+        for (name, help, h) in [
+            (
+                "regatta_e2e_latency_seconds",
+                "Per-region end-to-end latency (submit to in-order emit).",
+                &t.e2e,
+            ),
+            (
+                "regatta_queue_wait_seconds",
+                "Per-shard queue wait (submit to claim).",
+                &t.queue_wait,
+            ),
+            (
+                "regatta_service_seconds",
+                "Per-shard service time (the run_shard span).",
+                &t.service,
+            ),
+        ] {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+            let top = h
+                .buckets
+                .iter()
+                .rposition(|&c| c > 0)
+                .map(|i| i + 1)
+                .unwrap_or(0);
+            let mut cum = 0u64;
+            for (i, &c) in h.buckets.iter().take(top).enumerate() {
+                cum += c;
+                let (_, hi) = LatencyHist::bucket_bounds(i);
+                out.push_str(&format!(
+                    "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                    (hi as f64 + 1.0) / 1e9
+                ));
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+            out.push_str(&format!("{name}_sum {}\n", h.sum_ns as f64 / 1e9));
+            out.push_str(&format!("{name}_count {}\n", h.count));
+        }
+        out
+    }
+
+    /// Human-readable summary (the `regatta metrics summarize` body and
+    /// the `--stats` footer).
+    pub fn summary_table(&self) -> String {
+        let t = &self.totals;
+        let ms = |ns: u64| ns as f64 / 1e6;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "run: {} worker(s), {:.3}s, {} shard(s) / {} region(s), {} stolen, \
+             {} fault(s), {} retrie(s)\n",
+            self.workers, self.elapsed, t.shards, t.regions, t.stolen, t.faults, t.retries
+        ));
+        out.push_str(&format!(
+            "flow: {} submitted / {} emitted region(s), peak in-flight {}, \
+             {} stall(s) ({:.3} ms blocked), emit rate {:.1}/s\n",
+            t.submitted_regions,
+            t.emitted_regions,
+            t.peak_in_flight,
+            t.stalls,
+            ms(t.stall_ns),
+            self.emit_rate(),
+        ));
+        out.push_str("latency_ms         count      p50      p99      max     mean\n");
+        for (name, h) in [
+            ("e2e", &t.e2e),
+            ("queue_wait", &t.queue_wait),
+            ("service", &t.service),
+        ] {
+            out.push_str(&format!(
+                "{:<16} {:>9}  {:>7.3}  {:>7.3}  {:>7.3}  {:>7.3}\n",
+                name,
+                h.count,
+                ms(h.quantile_ns(0.50)),
+                ms(h.quantile_ns(0.99)),
+                ms(h.max_ns),
+                ms(h.mean_ns()),
+            ));
+        }
+        out
+    }
+}
+
+/// Progress-heartbeat tick state: decides *when* a line is due against
+/// the shared epoch clock, with no thread of its own — the streaming
+/// driver polls it from the same loop that beats the watchdog
+/// [`Pulse`](crate::exec::Pulse).
+#[derive(Debug)]
+pub struct Heartbeat {
+    every_ns: u64,
+    next_ns: u64,
+    ticks: u64,
+}
+
+impl Heartbeat {
+    /// A heartbeat firing every `every` (first tick one interval in).
+    pub fn new(every: Duration) -> Heartbeat {
+        let every_ns = (every.as_nanos() as u64).max(1);
+        Heartbeat {
+            every_ns,
+            next_ns: every_ns,
+            ticks: 0,
+        }
+    }
+
+    /// Is a tick due at `now_ns` (nanoseconds since the epoch)? Advances
+    /// the schedule past `now_ns` when it fires, so a late poll emits
+    /// one line, not a burst.
+    pub fn due(&mut self, now_ns: u64) -> bool {
+        if now_ns < self.next_ns {
+            return false;
+        }
+        self.ticks += 1;
+        while self.next_ns <= now_ns {
+            self.next_ns += self.every_ns;
+        }
+        true
+    }
+
+    /// Lines emitted so far.
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Render one machine-parseable heartbeat line (no trailing
+    /// newline): space-separated `key=value` tokens after the fixed
+    /// `progress` prefix. `rate` is emitted regions per second; `done=1`
+    /// marks the forced end-of-stream tick.
+    pub fn render(s: &ProgressSnapshot) -> String {
+        let rate = if s.elapsed_secs > 0.0 {
+            s.emitted_regions as f64 / s.elapsed_secs
+        } else {
+            0.0
+        };
+        format!(
+            "progress t={:.1} regions={}/{} rate={:.1} in_flight={} p50_ms={:.3} \
+             p99_ms={:.3} steals={} faults={} done={}",
+            s.elapsed_secs,
+            s.emitted_regions,
+            s.submitted_regions,
+            rate,
+            s.in_flight_regions,
+            s.p50_ns as f64 / 1e6,
+            s.p99_ns as f64 / 1e6,
+            s.stolen,
+            s.faults,
+            s.done as u8,
+        )
+    }
+}
+
+/// One heartbeat tick's inputs, gathered by the streaming driver.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProgressSnapshot {
+    /// Seconds since the run's epoch.
+    pub elapsed_secs: f64,
+    /// Regions submitted so far.
+    pub submitted_regions: u64,
+    /// Regions emitted in stream order so far.
+    pub emitted_regions: u64,
+    /// Regions currently in flight.
+    pub in_flight_regions: u64,
+    /// Shards observed stolen so far.
+    pub stolen: u64,
+    /// Failed shard attempts observed so far.
+    pub faults: u64,
+    /// So-far p50 end-to-end latency (bucket midpoint), nanoseconds.
+    pub p50_ns: u64,
+    /// So-far p99 end-to-end latency (bucket midpoint), nanoseconds.
+    pub p99_ns: u64,
+    /// True on the forced end-of-stream tick.
+    pub done: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_indexing_is_log2() {
+        assert_eq!(LatencyHist::bucket_index(0), 0);
+        assert_eq!(LatencyHist::bucket_index(1), 0);
+        assert_eq!(LatencyHist::bucket_index(2), 1);
+        assert_eq!(LatencyHist::bucket_index(3), 1);
+        assert_eq!(LatencyHist::bucket_index(4), 2);
+        assert_eq!(LatencyHist::bucket_index(1023), 9);
+        assert_eq!(LatencyHist::bucket_index(1024), 10);
+        assert_eq!(LatencyHist::bucket_index(u64::MAX), 63);
+        for i in 0..HIST_BUCKETS {
+            let (lo, hi) = LatencyHist::bucket_bounds(i);
+            assert_eq!(LatencyHist::bucket_index(lo.max(1).min(hi)), i.max(0));
+            assert_eq!(LatencyHist::bucket_index(hi), i);
+            assert!(lo <= hi);
+        }
+    }
+
+    #[test]
+    fn hist_records_and_quantiles() {
+        let mut h = LatencyHist::default();
+        for ns in [100u64, 200, 300, 4000, 50_000] {
+            h.record(ns);
+        }
+        assert_eq!(h.count, 5);
+        assert_eq!(h.sum_ns, 54_600);
+        assert_eq!(h.max_ns, 50_000);
+        assert_eq!(h.mean_ns(), 10_920);
+        // p50 = rank 3 = 300 ns → bucket 8 = [256, 511]
+        let (lo, hi) = h.quantile_bounds(0.5).unwrap();
+        assert!(lo <= 300 && 300 <= hi, "[{lo}, {hi}]");
+        assert_eq!((lo, hi), (256, 511));
+        // p99 = rank 5 = 50_000 ns
+        let (lo, hi) = h.quantile_bounds(0.99).unwrap();
+        assert!(lo <= 50_000 && 50_000 <= hi, "[{lo}, {hi}]");
+        assert_eq!(LatencyHist::default().quantile_bounds(0.5), None);
+        assert_eq!(LatencyHist::default().quantile_ns(0.5), 0);
+        let mid = h.quantile_ns(0.5);
+        assert!((256..=511).contains(&mid));
+    }
+
+    #[test]
+    fn hist_merge_is_exact_and_associative() {
+        let fill = |vals: &[u64]| {
+            let mut h = LatencyHist::default();
+            for &v in vals {
+                h.record(v);
+            }
+            h
+        };
+        let (a, b, c) = (
+            fill(&[1, 17, 300]),
+            fill(&[2, 2, 900_000]),
+            fill(&[0, u64::MAX / 2]),
+        );
+        // (a ⊕ b) ⊕ c
+        let mut left = a;
+        left.merge(&b);
+        left.merge(&c);
+        // a ⊕ (b ⊕ c)
+        let mut bc = b;
+        bc.merge(&c);
+        let mut right = a;
+        right.merge(&bc);
+        assert_eq!(left, right, "merge is associative");
+        // and equals recording everything into one histogram
+        let all = fill(&[1, 17, 300, 2, 2, 900_000, 0, u64::MAX / 2]);
+        assert_eq!(left, all, "merge is exact");
+    }
+
+    #[test]
+    fn record_n_matches_n_records() {
+        let mut a = LatencyHist::default();
+        a.record_n(777, 5);
+        let mut b = LatencyHist::default();
+        for _ in 0..5 {
+            b.record(777);
+        }
+        assert_eq!(a, b);
+        a.record_n(1, 0);
+        assert_eq!(a, b, "n = 0 records nothing");
+    }
+
+    #[test]
+    fn disabled_hub_is_inert() {
+        let hub = MetricsHub::default();
+        assert!(!hub.enabled());
+        assert_eq!(hub.now_ns(), 0);
+        hub.record_shard(4, true, 10, 20);
+        hub.record_emit(4, 30);
+        hub.record_faults(1, 1);
+        assert!(hub.peek(|m| m.shards).is_none());
+        assert_eq!(hub.take(), LaneMetrics::default());
+    }
+
+    #[test]
+    fn hub_records_against_shared_epoch_and_drains() {
+        let spec = MetricsSpec::new();
+        let hub = spec.hub();
+        assert!(hub.enabled());
+        let t0 = hub.now_ns();
+        let t1 = hub.now_ns();
+        assert!(t1 >= t0, "shared-epoch clock must be monotonic");
+        hub.record_shard(7, true, 100, 900);
+        hub.record_submit(7);
+        hub.record_stall(50);
+        hub.record_emit(7, 1000);
+        hub.note_in_flight(7);
+        hub.note_in_flight(3);
+        hub.record_idle(11);
+        hub.record_faults(2, 1);
+        let lane = hub.take();
+        assert_eq!(lane.shards, 1);
+        assert_eq!(lane.regions, 7);
+        assert_eq!(lane.stolen, 1);
+        assert_eq!(lane.queue_wait.count, 1);
+        assert_eq!(lane.service.sum_ns, 900);
+        assert_eq!(lane.busy_ns, 900);
+        assert_eq!(lane.idle_ns, 11);
+        assert_eq!(lane.submitted_regions, 7);
+        assert_eq!(lane.stalls, 1);
+        assert_eq!(lane.stall_ns, 50);
+        assert_eq!(lane.emitted_regions, 7);
+        assert_eq!(lane.e2e.count, 7, "one e2e sample per region");
+        assert_eq!(lane.peak_in_flight, 7, "gauge max-folds");
+        assert_eq!(lane.faults, 2);
+        assert_eq!(lane.retries, 1);
+        // take drains but keeps recording
+        hub.record_shard(1, false, 0, 1);
+        assert_eq!(hub.take().shards, 1);
+    }
+
+    #[test]
+    #[cfg(feature = "count-allocs")]
+    fn record_path_never_allocates() {
+        use crate::util::alloc_count;
+        let hub = MetricsSpec::new().hub();
+        // warm the Rc + RefCell before counting
+        hub.record_shard(1, false, 1, 1);
+        let before = alloc_count::thread_allocations();
+        for i in 0..4096u64 {
+            hub.record_shard(3, i % 7 == 0, i, i * 2);
+            hub.record_submit(3);
+            hub.record_emit(3, i * 3);
+            hub.record_stall(i);
+            hub.note_in_flight(i % 64);
+            hub.record_idle(i);
+            hub.record_faults(i % 2, i % 2);
+        }
+        let lane = hub.take();
+        let delta = alloc_count::thread_allocations() - before;
+        assert_eq!(delta, 0, "metrics record path allocated {delta} times");
+        assert_eq!(lane.shards, 4096);
+    }
+
+    #[test]
+    fn lane_merge_folds_every_field() {
+        let mut a = LaneMetrics {
+            shards: 2,
+            regions: 9,
+            stolen: 1,
+            peak_in_flight: 5,
+            ..Default::default()
+        };
+        a.service.record(100);
+        let mut b = LaneMetrics {
+            shards: 3,
+            regions: 4,
+            faults: 2,
+            retries: 1,
+            stalls: 1,
+            stall_ns: 70,
+            submitted_shards: 5,
+            submitted_regions: 13,
+            emitted_shards: 5,
+            emitted_regions: 13,
+            peak_in_flight: 3,
+            busy_ns: 40,
+            idle_ns: 8,
+            ..Default::default()
+        };
+        b.e2e.record_n(500, 13);
+        a.merge(&b);
+        assert_eq!(a.shards, 5);
+        assert_eq!(a.regions, 13);
+        assert_eq!(a.stolen, 1);
+        assert_eq!(a.faults, 2);
+        assert_eq!(a.retries, 1);
+        assert_eq!(a.stalls, 1);
+        assert_eq!(a.stall_ns, 70);
+        assert_eq!(a.submitted_regions, 13);
+        assert_eq!(a.emitted_regions, 13);
+        assert_eq!(a.busy_ns, 40);
+        assert_eq!(a.idle_ns, 8);
+        assert_eq!(a.peak_in_flight, 5, "gauge max-folds, not adds");
+        assert_eq!(a.e2e.count, 13);
+        assert_eq!(a.service.count, 1);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let mut totals = LaneMetrics {
+            shards: 4,
+            regions: 100,
+            stolen: 2,
+            submitted_shards: 4,
+            submitted_regions: 100,
+            emitted_shards: 4,
+            emitted_regions: 100,
+            peak_in_flight: 32,
+            busy_ns: 123_456,
+            ..Default::default()
+        };
+        totals.e2e.record_n(10_000, 100);
+        totals.queue_wait.record_n(700, 4);
+        totals.service.record_n(30_000, 4);
+        let report = MetricsReport {
+            workers: 4,
+            elapsed: 0.25,
+            totals,
+        };
+        let text = report.to_json();
+        let back = MetricsReport::from_json(&text).unwrap();
+        assert_eq!(back, report, "JSON round-trip is lossless");
+        // and the artifact is well-formed for the offline parser
+        assert!(Json::parse(&text).is_ok());
+        assert!(MetricsReport::from_json("{\"schema\": \"nope\"}").is_err());
+        assert!(MetricsReport::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn prometheus_export_is_cumulative_and_named() {
+        let mut totals = LaneMetrics {
+            shards: 2,
+            regions: 10,
+            emitted_regions: 10,
+            ..Default::default()
+        };
+        totals.e2e.record(100); // bucket 6 [64, 127]
+        totals.e2e.record(100_000); // bucket 16
+        let report = MetricsReport {
+            workers: 2,
+            elapsed: 1.0,
+            totals,
+        };
+        let prom = report.to_prometheus();
+        assert!(prom.contains("# TYPE regatta_shards_total counter"), "{prom}");
+        assert!(prom.contains("regatta_shards_total 2\n"), "{prom}");
+        assert!(prom.contains("# TYPE regatta_e2e_latency_seconds histogram"), "{prom}");
+        assert!(prom.contains("regatta_e2e_latency_seconds_bucket{le=\"+Inf\"} 2"), "{prom}");
+        assert!(prom.contains("regatta_e2e_latency_seconds_count 2"), "{prom}");
+        assert!(prom.contains("regatta_in_flight_regions_peak 0"), "{prom}");
+        // cumulative: the last finite bucket already holds both samples
+        let lines: Vec<&str> = prom
+            .lines()
+            .filter(|l| l.starts_with("regatta_e2e_latency_seconds_bucket"))
+            .collect();
+        assert!(lines.len() >= 2);
+        let last_finite = lines[lines.len() - 2];
+        assert!(last_finite.ends_with(" 2"), "{last_finite}");
+    }
+
+    #[test]
+    fn summary_table_reports_quantiles() {
+        let mut totals = LaneMetrics {
+            shards: 1,
+            regions: 8,
+            emitted_regions: 8,
+            submitted_regions: 8,
+            ..Default::default()
+        };
+        totals.e2e.record_n(1_000_000, 8); // 1 ms
+        let report = MetricsReport {
+            workers: 1,
+            elapsed: 2.0,
+            totals,
+        };
+        let table = report.summary_table();
+        assert!(table.contains("e2e"), "{table}");
+        assert!(table.contains("p50"), "{table}");
+        assert!(table.contains("queue_wait"), "{table}");
+        assert!((report.emit_rate() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn heartbeat_ticks_on_schedule_without_bursting() {
+        let mut hb = Heartbeat::new(Duration::from_millis(10));
+        assert!(!hb.due(5_000_000));
+        assert!(hb.due(10_000_000));
+        assert!(!hb.due(11_000_000));
+        // a long gap yields ONE tick, schedule advanced past now
+        assert!(hb.due(95_000_000));
+        assert!(!hb.due(99_000_000));
+        assert!(hb.due(100_000_000));
+        assert_eq!(hb.ticks(), 3);
+    }
+
+    #[test]
+    fn heartbeat_line_is_single_and_parseable() {
+        let line = Heartbeat::render(&ProgressSnapshot {
+            elapsed_secs: 2.5,
+            submitted_regions: 100,
+            emitted_regions: 80,
+            in_flight_regions: 20,
+            stolen: 3,
+            faults: 1,
+            p50_ns: 1_500_000,
+            p99_ns: 9_000_000,
+            done: false,
+        });
+        assert!(!line.contains('\n'), "one line, no embedded newlines: {line:?}");
+        assert!(line.starts_with("progress "), "{line}");
+        let mut tokens = line.split_whitespace();
+        assert_eq!(tokens.next(), Some("progress"));
+        for tok in tokens {
+            let (key, value) = tok.split_once('=').expect("every token is key=value");
+            assert!(!key.is_empty() && !value.is_empty(), "{tok}");
+        }
+        assert!(line.contains("regions=80/100"), "{line}");
+        assert!(line.contains("rate=32.0"), "{line}");
+        assert!(line.contains("done=0"), "{line}");
+        let done = Heartbeat::render(&ProgressSnapshot {
+            done: true,
+            ..Default::default()
+        });
+        assert!(done.contains("done=1"), "{done}");
+    }
+}

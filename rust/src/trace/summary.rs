@@ -78,8 +78,9 @@ pub fn summarize(text: &str, buckets: usize) -> Result<String> {
     let mut stall_us = 0.0f64;
     let mut prewarm_count = 0usize;
     let mut prewarm_us = 0.0f64;
-    let mut submits = 0usize;
-    let mut emits = 0usize;
+    // submit/emit span timestamps by shard id, for the latency section
+    let mut submit_ts: Vec<(usize, f64)> = Vec::new();
+    let mut emit_ts: Vec<(usize, f64)> = Vec::new();
     let mut fault_count = 0usize;
     let mut retry_count = 0usize;
     let mut retry_us = 0.0f64;
@@ -116,10 +117,10 @@ pub fn summarize(text: &str, buckets: usize) -> Result<String> {
                     stall_count += 1;
                     stall_us += dur;
                 } else {
-                    submits += 1;
+                    submit_ts.push((arg_f64(e, "shard") as usize, ts));
                 }
             }
-            "merge" => emits += 1,
+            "merge" => emit_ts.push((arg_f64(e, "shard") as usize, ts)),
             "fault" => {
                 if e.get("name")
                     .and_then(Json::as_str)
@@ -229,6 +230,42 @@ pub fn summarize(text: &str, buckets: usize) -> Result<String> {
         }
     }
 
+    // -- submit → emit latency, re-derived from the driver-lane spans --
+    // The same quantity the live metrics' e2e histogram measures
+    // per region ([`crate::metrics::LaneMetrics::e2e`]), here recomputed
+    // per shard offline from the artifact alone; the `metrics_observe`
+    // suite cross-checks the two against each other on a real run.
+    out.push_str("\n== latency (ingest submit -> in-order emit) ==\n");
+    let emit_by_shard: std::collections::HashMap<usize, f64> =
+        emit_ts.iter().copied().collect();
+    let mut lat_us: Vec<f64> = submit_ts
+        .iter()
+        .filter_map(|&(shard, t)| emit_by_shard.get(&shard).map(|&e| (e - t).max(0.0)))
+        .collect();
+    if lat_us.is_empty() {
+        out.push_str(
+            "(no submit/emit span pairs — materialized run, or a trace \
+             without the driver lane)\n",
+        );
+    } else {
+        lat_us.sort_by(f64::total_cmp);
+        let q = |f: f64| {
+            let idx = (f * (lat_us.len() - 1) as f64).round() as usize;
+            lat_us[idx.min(lat_us.len() - 1)]
+        };
+        out.push_str(&format!(
+            "paired {} of {} submitted shards\n",
+            lat_us.len(),
+            submit_ts.len()
+        ));
+        out.push_str(&format!(
+            "per-shard p50 {:.3} ms   p99 {:.3} ms   max {:.3} ms\n",
+            q(0.5) / 1000.0,
+            q(0.99) / 1000.0,
+            lat_us[lat_us.len() - 1] / 1000.0
+        ));
+    }
+
     // -- steal / backpressure --
     let stolen = shards.iter().filter(|s| s.stolen).count();
     out.push_str("\n== steal / backpressure ==\n");
@@ -243,7 +280,11 @@ pub fn summarize(text: &str, buckets: usize) -> Result<String> {
         stall_count,
         stall_us / 1000.0
     ));
-    out.push_str(&format!("ingest submits {submits}, merge emits {emits}\n"));
+    out.push_str(&format!(
+        "ingest submits {}, merge emits {}\n",
+        submit_ts.len(),
+        emit_ts.len()
+    ));
     if fault_count > 0 || retry_count > 0 {
         out.push_str(&format!(
             "faults: {fault_count} shard attempt(s) failed, {retry_count} retried \
@@ -391,6 +432,26 @@ mod tests {
             "{report}"
         );
         assert!(report.contains("(0.001 ms rebuilding)"), "{report}");
+    }
+
+    #[test]
+    fn latency_section_pairs_submit_and_emit_spans() {
+        // sample trace: submit shard 0 @ 500 ns, emit shard 0 @ 10_100 ns
+        // → one pair of 9.6 µs ≈ 0.010 ms at the report's precision
+        let report = summarize(&to_chrome_json(&sample_trace()), 2).unwrap();
+        assert!(report.contains("paired 1 of 1 submitted shards"), "{report}");
+        assert!(
+            report.contains("per-shard p50 0.010 ms   p99 0.010 ms   max 0.010 ms"),
+            "{report}"
+        );
+    }
+
+    #[test]
+    fn latency_section_degrades_without_driver_spans() {
+        let mut trace = sample_trace();
+        trace.workers.retain(|w| w.worker != DRIVER_LANE);
+        let report = summarize(&to_chrome_json(&trace), 2).unwrap();
+        assert!(report.contains("no submit/emit span pairs"), "{report}");
     }
 
     #[test]

@@ -1,0 +1,508 @@
+//! Metering is an observer, not a participant.
+//!
+//! The metrics subsystem's contract (`regatta::metrics` module docs):
+//! turning metrics on changes *nothing observable* about a run — outputs
+//! are bit-for-bit identical for every worker count, app, ingest mode,
+//! split setting and fault policy — and the folded [`MetricsReport`]
+//! reconciles *exactly* with the [`ExecReport`] it rides on: same shard,
+//! region, steal, retry and fault totals, one e2e histogram sample per
+//! emitted region. This suite pins both halves down, end to end through
+//! the `--metrics` JSON artifact, the `trace summarize` latency section
+//! (re-derived offline from Submit/Emit spans) and the `--progress-secs`
+//! heartbeat of the real CLI binary.
+//!
+//! [`MetricsReport`]: regatta::metrics::MetricsReport
+//! [`ExecReport`]: regatta::exec::ExecReport
+
+use std::rc::Rc;
+
+use regatta::apps::sum::{finish_sharded_outputs, SumApp, SumConfig, SumFactory, SumMode, SumShape};
+use regatta::apps::taxi::{TaxiApp, TaxiConfig, TaxiVariant};
+use regatta::exec::{
+    ExecConfig, FaultKind, FaultPlan, FaultPolicy, FaultShot, FaultyFactory, KernelSpawn,
+    ShardedRunner,
+};
+use regatta::metrics::{LaneMetrics, MetricsReport};
+use regatta::prelude::Policy;
+use regatta::runtime::kernels::{Backend, KernelSet};
+use regatta::trace::TraceOptions;
+use regatta::workload::regions::{gen_blobs, RegionSpec};
+use regatta::workload::source::SliceSource;
+use regatta::workload::taxi::{generate, TaxiGenConfig};
+
+const WIDTH: usize = 8;
+
+fn sum_app(mode: SumMode) -> SumApp {
+    SumApp::new(
+        SumConfig {
+            width: WIDTH,
+            mode,
+            shape: SumShape::Fused,
+            data_cap: 256,
+            signal_cap: 64,
+            ..Default::default()
+        },
+        Rc::new(KernelSet::native(WIDTH)),
+    )
+}
+
+fn sum_factory(mode: SumMode) -> SumFactory {
+    SumFactory::new(
+        SumConfig {
+            width: WIDTH,
+            mode,
+            shape: SumShape::Fused,
+            data_cap: 256,
+            signal_cap: 64,
+            ..Default::default()
+        },
+        KernelSpawn::from_backend(Backend::Native),
+    )
+}
+
+fn metered(workers: usize) -> ExecConfig {
+    ExecConfig::new(workers).with_metrics(true)
+}
+
+fn assert_outputs_bitwise(got: &[(u64, f64)], want: &[(u64, f64)], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: output count");
+    for (i, ((gi, gv), (wi, wv))) in got.iter().zip(want).enumerate() {
+        assert_eq!(gi, wi, "{ctx}: region id at {i}");
+        assert_eq!(
+            gv.to_bits(),
+            wv.to_bits(),
+            "{ctx}: region {gi} sum {gv} vs {wv}"
+        );
+    }
+}
+
+#[test]
+fn metered_sum_is_bitwise_identical_workers_1_to_8() {
+    for mode in [SumMode::Enumerated, SumMode::Tagged] {
+        let app = sum_app(mode);
+        let blobs = gen_blobs(1500, RegionSpec::Uniform { max: 40 }, 42);
+        for workers in 1..=8 {
+            let plain = app
+                .run_sharded_with(&blobs, &ExecConfig::new(workers))
+                .unwrap();
+            let m = app.run_sharded_with(&blobs, &metered(workers)).unwrap();
+            assert_outputs_bitwise(
+                &m.outputs,
+                &plain.outputs,
+                &format!("{mode:?} workers {workers}"),
+            );
+            assert_eq!(
+                m.invocations, plain.invocations,
+                "{mode:?} workers {workers}: kernel invocations"
+            );
+        }
+    }
+}
+
+#[test]
+fn metered_streaming_sum_is_bitwise_identical() {
+    let app = sum_app(SumMode::Enumerated);
+    let blobs = gen_blobs(1200, RegionSpec::Uniform { max: 30 }, 7);
+    for workers in [1usize, 2, 4, 8] {
+        let plain = app
+            .run_streaming(SliceSource::new(&blobs), &ExecConfig::new(workers))
+            .unwrap();
+        let m = app
+            .run_streaming(SliceSource::new(&blobs), &metered(workers))
+            .unwrap();
+        assert_outputs_bitwise(
+            &m.outputs,
+            &plain.outputs,
+            &format!("streamed workers {workers}"),
+        );
+    }
+}
+
+#[test]
+fn metered_taxi_is_bitwise_identical() {
+    let w = generate(
+        20,
+        TaxiGenConfig {
+            avg_pairs: 6,
+            avg_line_len: 160,
+        },
+        99,
+    );
+    for variant in TaxiVariant::all() {
+        let app = TaxiApp::new(
+            TaxiConfig {
+                width: WIDTH,
+                variant,
+                data_cap: 512,
+                signal_cap: 128,
+                policy: Policy::GreedyOccupancy,
+            },
+            Rc::new(KernelSet::native(WIDTH)),
+        );
+        for workers in [1usize, 3] {
+            let plain = app.run_sharded_with(&w, &ExecConfig::new(workers)).unwrap();
+            let m = app.run_sharded_with(&w, &metered(workers)).unwrap();
+            assert_eq!(
+                m.pairs.len(),
+                plain.pairs.len(),
+                "{variant:?} workers {workers}: pair count"
+            );
+            for (i, (g, e)) in m.pairs.iter().zip(&plain.pairs).enumerate() {
+                assert_eq!(g.tag, e.tag, "{variant:?} workers {workers}: tag at {i}");
+                assert_eq!(g.x.to_bits(), e.x.to_bits(), "{variant:?} w{workers}: x {i}");
+                assert_eq!(g.y.to_bits(), e.y.to_bits(), "{variant:?} w{workers}: y {i}");
+            }
+        }
+    }
+}
+
+/// The folded report's totals equal the `ExecReport`'s own accounting
+/// *exactly* — not approximately: both read the same per-shard facts.
+/// Materialized and streamed, across worker counts.
+#[test]
+fn metrics_reconcile_with_the_exec_report() {
+    let factory = sum_factory(SumMode::Enumerated);
+    let blobs = gen_blobs(2000, RegionSpec::Uniform { max: 25 }, 5);
+    for workers in [1usize, 3, 8] {
+        // materialized: worker-side totals only, flow side stays zero
+        let report = ShardedRunner::new(metered(workers)).run(&factory, &blobs).unwrap();
+        let m = report.metrics_report.as_ref().expect("metrics attached");
+        let t = &m.totals;
+        let ctx = format!("materialized workers {workers}");
+        assert_eq!(m.workers, workers, "{ctx}");
+        assert_eq!(t.shards, report.shards as u64, "{ctx}: shards");
+        assert_eq!(t.regions, blobs.len() as u64, "{ctx}: regions");
+        assert_eq!(t.stolen, report.steals as u64, "{ctx}: steals");
+        assert_eq!(t.retries, report.retries, "{ctx}: retries");
+        assert_eq!(t.faults, 0, "{ctx}: fault-free");
+        assert_eq!(t.service.count, t.shards, "{ctx}: one service sample per shard");
+        assert_eq!(t.queue_wait.count, t.shards, "{ctx}: one wait sample per shard");
+        assert_eq!(t.busy_ns, t.service.sum_ns, "{ctx}: busy time is the service sum");
+        assert_eq!(t.e2e.count, 0, "{ctx}: no submit stamps when materialized");
+        assert_eq!(t.submitted_regions, 0, "{ctx}");
+        assert_eq!(t.emitted_regions, 0, "{ctx}");
+
+        // streamed: the driver lane fills the flow side
+        let report = ShardedRunner::new(metered(workers).streaming(64))
+            .run_stream(&factory, SliceSource::new(&blobs))
+            .unwrap();
+        let m = report.metrics_report.as_ref().expect("metrics attached");
+        let t = &m.totals;
+        let ctx = format!("streamed workers {workers}");
+        assert_eq!(t.shards, report.shards as u64, "{ctx}: shards");
+        assert_eq!(t.submitted_shards, t.shards, "{ctx}: every shard was submitted");
+        assert_eq!(t.emitted_shards, t.shards, "{ctx}: every shard was emitted");
+        assert_eq!(t.submitted_regions, blobs.len() as u64, "{ctx}");
+        assert_eq!(t.emitted_regions, t.submitted_regions, "{ctx}: flow balances");
+        assert_eq!(t.e2e.count, t.emitted_regions, "{ctx}: one e2e sample per region");
+        assert_eq!(t.stolen, report.steals as u64, "{ctx}: steals");
+        assert!(
+            t.peak_in_flight >= 1 && t.peak_in_flight <= 64,
+            "{ctx}: peak gauge {} within the budget",
+            t.peak_in_flight
+        );
+        assert!(m.emit_rate() > 0.0, "{ctx}: live rate");
+    }
+}
+
+/// A plan that poisons every shard index once, alternating panic/error.
+fn poison_every_shard(shards: usize) -> FaultPlan {
+    let mut plan = FaultPlan::new();
+    for shard in 0..shards {
+        plan = plan.with_shot(FaultShot {
+            shard,
+            worker: None,
+            kind: if shard % 2 == 0 {
+                FaultKind::Panic
+            } else {
+                FaultKind::Error
+            },
+            times: 1,
+        });
+    }
+    plan
+}
+
+/// Metering a faulted run stays bit-identical to the unmetered faulted
+/// run, and the fault/retry counters reconcile with the injection plan
+/// and the report's own ledger: retry recovery counts one fault + one
+/// retry per shot; quarantine counts the terminal failed attempt too
+/// (`faults == retries + fault_table entries`).
+#[test]
+fn metered_faulted_runs_stay_identical_and_reconcile() {
+    let blobs = gen_blobs(600, RegionSpec::Uniform { max: 16 }, 11);
+    let base = ExecConfig::new(3).with_shards_per_worker(2).streaming(24);
+    for streamed in [false, true] {
+        let ctx = format!("retry {}", if streamed { "streamed" } else { "materialized" });
+        let runner = ShardedRunner::new(base.clone());
+        let clean = if streamed {
+            runner
+                .run_stream(&sum_factory(SumMode::Enumerated), SliceSource::new(&blobs))
+                .unwrap()
+        } else {
+            runner.run(&sum_factory(SumMode::Enumerated), &blobs).unwrap()
+        };
+        let plan = poison_every_shard(clean.shards);
+
+        let run_faulted = |cfg: ExecConfig| {
+            let faulty = FaultyFactory::new(sum_factory(SumMode::Enumerated), &plan);
+            let runner = ShardedRunner::new(cfg.with_fault(FaultPolicy::retry(3)));
+            if streamed {
+                runner.run_stream(&faulty, SliceSource::new(&blobs)).unwrap()
+            } else {
+                runner.run(&faulty, &blobs).unwrap()
+            }
+        };
+        let plain = run_faulted(base.clone());
+        let report = run_faulted(base.clone().with_metrics(true));
+        let got = finish_sharded_outputs(SumMode::Enumerated, report.outputs);
+        let want = finish_sharded_outputs(SumMode::Enumerated, plain.outputs);
+        assert_outputs_bitwise(&got, &want, &ctx);
+        let t = &report.metrics_report.as_ref().expect("metrics attached").totals;
+        assert_eq!(t.retries, report.retries, "{ctx}: retries match the report");
+        assert_eq!(t.retries, plan.injected() as u64, "{ctx}: one retry per shot");
+        assert_eq!(t.faults, t.retries, "{ctx}: recovered faults == retries");
+    }
+
+    // quarantine: the terminal attempt is a fault with no retry behind it
+    let clean = ShardedRunner::new(base.clone())
+        .run(&sum_factory(SumMode::Enumerated), &blobs)
+        .unwrap();
+    let target = clean.shards / 2;
+    let faulty = FaultyFactory::new(
+        sum_factory(SumMode::Enumerated),
+        &FaultPlan::new().panic_at(target),
+    );
+    let report = ShardedRunner::new(base.with_metrics(true).with_fault(FaultPolicy::Quarantine))
+        .run(&faulty, &blobs)
+        .unwrap();
+    assert_eq!(report.faults.len(), 1, "one ledger entry");
+    let t = &report.metrics_report.as_ref().unwrap().totals;
+    assert_eq!(
+        t.faults,
+        t.retries + report.faults.len() as u64,
+        "quarantine: faults = retries + fault_table entries"
+    );
+    assert!(
+        report.fault_table().contains("injected fault"),
+        "the ledger still renders"
+    );
+}
+
+/// Region splitting and metering compose: outputs stay bit-identical to
+/// the unmetered split run, and the flow side counts *sub*-shards.
+#[test]
+fn metered_split_run_is_bitwise_identical() {
+    let blobs = gen_blobs(300, RegionSpec::Uniform { max: 120 }, 13);
+    let factory = sum_factory(SumMode::Enumerated);
+    let base = ExecConfig::new(3).streaming(48).with_max_region_items(32);
+    let plain = ShardedRunner::new(base.clone())
+        .run_stream(&factory, SliceSource::new(&blobs))
+        .unwrap();
+    assert!(plain.split_regions > 0, "the workload must actually split");
+    let report = ShardedRunner::new(base.with_metrics(true))
+        .run_stream(&factory, SliceSource::new(&blobs))
+        .unwrap();
+    assert_eq!(report.split_regions, plain.split_regions, "same cuts");
+    let got = finish_sharded_outputs(SumMode::Enumerated, report.outputs);
+    let want = finish_sharded_outputs(SumMode::Enumerated, plain.outputs);
+    assert_outputs_bitwise(&got, &want, "metered split stream");
+    let t = &report.metrics_report.as_ref().expect("metrics attached").totals;
+    assert_eq!(t.shards, report.shards as u64, "shards count sub-shards");
+    assert_eq!(t.submitted_regions, t.emitted_regions, "flow balances");
+    assert_eq!(t.e2e.count, t.emitted_regions, "one e2e sample per part");
+}
+
+/// Lane folding is order-independent end to end: totals from independent
+/// runs merge associatively, so *any* per-worker fold order the pool
+/// happens to use yields the same `MetricsReport`.
+#[test]
+fn lane_fold_order_is_irrelevant_for_real_run_totals() {
+    let factory = sum_factory(SumMode::Enumerated);
+    let totals: Vec<LaneMetrics> = [1usize, 2, 4]
+        .iter()
+        .map(|&workers| {
+            let blobs = gen_blobs(500 * workers, RegionSpec::Uniform { max: 20 }, workers as u64);
+            ShardedRunner::new(metered(workers).streaming(32))
+                .run_stream(&factory, SliceSource::new(&blobs))
+                .unwrap()
+                .metrics_report
+                .expect("metrics attached")
+                .totals
+        })
+        .collect();
+    let [a, b, c] = <[LaneMetrics; 3]>::try_from(totals).unwrap();
+    let mut left = a.clone(); // (a ⊕ b) ⊕ c
+    left.merge(&b);
+    left.merge(&c);
+    let mut bc = b; // a ⊕ (b ⊕ c)
+    bc.merge(&c);
+    let mut right = a;
+    right.merge(&bc);
+    assert_eq!(left, right, "fold of real run lanes is associative");
+    assert!(left.e2e.count > 0 && left.shards > 0);
+}
+
+/// The offline twin: `trace summarize` re-derives per-shard latency from
+/// the artifact's Submit/Emit spans alone, and on a traced **and**
+/// metered run it pairs exactly the shards the live report counted.
+#[test]
+fn trace_summarize_latency_section_matches_live_metrics() {
+    let factory = sum_factory(SumMode::Enumerated);
+    let blobs = gen_blobs(1000, RegionSpec::Uniform { max: 30 }, 23);
+    let cfg = metered(3)
+        .streaming(32)
+        .with_trace(Some(TraceOptions { capacity: 1 << 16 }));
+    let report = ShardedRunner::new(cfg)
+        .run_stream(&factory, SliceSource::new(&blobs))
+        .unwrap();
+    let trace = report.trace.as_ref().expect("trace attached");
+    assert_eq!(trace.dropped(), 0, "pairing needs the full event stream");
+    let t = &report.metrics_report.as_ref().expect("metrics attached").totals;
+    let text = regatta::trace::chrome::to_chrome_json(trace);
+    let rendered = regatta::trace::summary::summarize(&text, 12).unwrap();
+    assert!(
+        rendered.contains("latency (ingest submit -> in-order emit)"),
+        "{rendered}"
+    );
+    assert!(
+        rendered.contains(&format!(
+            "paired {} of {} submitted shards",
+            t.emitted_shards, t.submitted_shards
+        )),
+        "offline pairing must match the live flow counters: {rendered}"
+    );
+    assert!(rendered.contains("per-shard p50"), "{rendered}");
+}
+
+/// The `--metrics` JSON artifact written by the real binary re-loads via
+/// `MetricsReport::from_json`, reconciles, and `regatta metrics
+/// summarize` renders it.
+#[test]
+fn cli_metrics_artifact_round_trips_through_summarize() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("regatta_metrics_{}.json", std::process::id()));
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_regatta"))
+        .args([
+            "run",
+            "sum",
+            "--items",
+            "2000",
+            "--region-max",
+            "24",
+            "--workers",
+            "2",
+            "--stream",
+            "--metrics",
+        ])
+        .arg(&path)
+        .output()
+        .expect("spawn regatta");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&path).expect("artifact written");
+    let report = MetricsReport::from_json(&text).expect("artifact re-loads");
+    let t = &report.totals;
+    assert_eq!(t.submitted_regions, 2000, "every generated region submitted");
+    assert_eq!(t.emitted_regions, 2000, "every region emitted in order");
+    assert_eq!(t.e2e.count, 2000, "one e2e sample per region");
+    assert_eq!(report.workers, 2);
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_regatta"))
+        .args(["metrics", "summarize", "--input"])
+        .arg(&path)
+        .output()
+        .expect("spawn regatta metrics summarize");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let rendered = String::from_utf8_lossy(&out.stdout);
+    assert!(rendered.contains("2000 submitted / 2000 emitted"), "{rendered}");
+    assert!(rendered.contains("e2e"), "{rendered}");
+    assert!(rendered.contains("p99"), "{rendered}");
+    std::fs::remove_file(&path).ok();
+}
+
+/// `--progress-secs` on the real binary: at least one heartbeat line
+/// (the forced end-of-stream tick), every line a single machine-parseable
+/// `progress key=value ...` record, `done=1` exactly once and last, and
+/// no heartbeat text ever spliced into another line (the driver owns
+/// stdout until the run completes, so the `--stats` tables that follow
+/// start on fresh lines).
+#[test]
+fn cli_progress_heartbeat_is_parseable_and_never_interleaves() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_regatta"))
+        .args([
+            "run",
+            "sum",
+            "--items",
+            "4000",
+            "--region-max",
+            "24",
+            "--workers",
+            "2",
+            "--stream",
+            "--stats",
+            "--progress-secs",
+            "1",
+        ])
+        .output()
+        .expect("spawn regatta");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let progress: Vec<&str> = stdout
+        .lines()
+        .filter(|l| l.starts_with("progress "))
+        .collect();
+    assert!(
+        !progress.is_empty(),
+        "a progress-enabled run prints at least the final tick:\n{stdout}"
+    );
+    // heartbeat text never appears mid-line
+    for line in stdout.lines() {
+        if let Some(at) = line.find("progress t=") {
+            assert_eq!(at, 0, "heartbeat spliced into another line: {line:?}");
+        }
+    }
+    for line in &progress {
+        let mut tokens = line.split_whitespace();
+        assert_eq!(tokens.next(), Some("progress"), "{line}");
+        for tok in tokens {
+            let (key, value) = tok
+                .split_once('=')
+                .unwrap_or_else(|| panic!("token {tok:?} is not key=value in {line:?}"));
+            assert!(!key.is_empty() && !value.is_empty(), "{line}");
+        }
+    }
+    let done: Vec<&&str> = progress.iter().filter(|l| l.contains("done=1")).collect();
+    assert_eq!(done.len(), 1, "exactly one final tick:\n{stdout}");
+    assert!(
+        progress.last().unwrap().contains("done=1"),
+        "the final tick is last:\n{stdout}"
+    );
+    // the worker table (--stats) still renders after the heartbeat
+    assert!(stdout.contains("worker"), "{stdout}");
+}
+
+/// The record path of an enabled hub allocates nothing — integration
+/// twin of the unit proof, through the public `metrics` API.
+#[test]
+#[cfg(feature = "count-allocs")]
+fn enabled_hub_record_path_is_alloc_free() {
+    use regatta::metrics::MetricsSpec;
+    use regatta::util::alloc_count;
+    let hub = MetricsSpec::new().hub();
+    hub.record_shard(1, false, 1, 1); // warm the Rc + RefCell
+    let before = alloc_count::thread_allocations();
+    for i in 0..10_000u64 {
+        hub.record_shard(4, i % 3 == 0, i, 2 * i);
+        hub.record_submit(4);
+        hub.record_emit(4, 3 * i);
+        hub.record_stall(i);
+        hub.note_in_flight(i % 128);
+        hub.record_idle(i);
+        hub.record_faults(i % 2, i % 2);
+    }
+    let lane = hub.take();
+    let delta = alloc_count::thread_allocations() - before;
+    assert_eq!(delta, 0, "record path allocated {delta} times");
+    assert_eq!(lane.shards, 10_000);
+    assert_eq!(lane.e2e.count, 40_000, "four regions per emit");
+}
