@@ -12,8 +12,19 @@
 //!   count exactly, and the plan is fully consumed;
 //! * `retry-traced` — one traced recovery run asserting the trace's
 //!   `Fault`/`Retry` event totals reconcile with the report;
+//! * `part-retry` — a shard poisoned twice under retry: after the first
+//!   whole-shard failure the pool narrows to single-region re-runs, so
+//!   only the poisoned part pays the second fault. The run stays
+//!   bit-identical and the report's `rerun_regions` proves the
+//!   narrowing happened (the `part_retry_savings` headline compares it
+//!   against what whole-shard re-runs would have cost);
 //! * `quarantine` — a planned panic on one shard; the run keeps going
 //!   and the report names exactly that shard;
+//! * `degraded` — a worker whose guarded pipeline rebuild *also* panics
+//!   retires; its shard is re-dealt untouched to the survivors and the
+//!   run completes bit-identically on N−1 workers with an empty fault
+//!   ledger (skipped when the pool has a single worker — there is no
+//!   survivor to take the work);
 //! * `salvage` — a `.rgn` container with deterministically corrupted
 //!   frames read back under [`CorruptFramePolicy::Skip`]: every
 //!   uncorrupted frame survives bit-identically, every corrupted frame
@@ -116,6 +127,12 @@ pub struct FaultsReport {
     pub shards: usize,
     /// Faults the seeded plan injected into the retry legs.
     pub injected: usize,
+    /// Regions in the generated stream (the part population).
+    pub regions: usize,
+    /// Single-region re-runs the part-retry leg paid while narrowing.
+    pub rerun_regions: u64,
+    /// Workers the degraded leg retired mid-run (0 when skipped).
+    pub dead_workers: usize,
     /// Measured legs.
     pub rows: Vec<FaultsRow>,
     /// Salvage leg: frames written / corrupted / read back intact.
@@ -248,6 +265,45 @@ pub fn run(cfg: &FaultsConfig) -> Result<FaultsReport> {
         check: "trace/report reconciled".to_string(),
     });
 
+    // -- part-retry: narrowing re-runs only the poisoned slice ----------
+    // Two shots on one shard: the first fails the whole-slice attempt,
+    // the second lands inside the narrowing pass so exactly one region
+    // pays the extra re-run. Whole-shard retry would have re-run every
+    // region of the shard twice.
+    let pr_target = shards / 2;
+    let pr_plan = FaultPlan::new().panic_at(pr_target).with_times(2);
+    let pr_runner = ShardedRunner::new(exec(cfg).with_fault(FaultPolicy::retry(3)));
+    let t0 = Instant::now();
+    let pr_faulty = FaultyFactory::new(factory(cfg), &pr_plan);
+    let pr = pr_runner.run(&pr_faulty, &blobs)?;
+    let pr_s = t0.elapsed().as_secs_f64();
+    ensure_bit_identical("part-retry", &pr.outputs, &base.outputs)?;
+    ensure!(
+        pr.retries == 2,
+        "part-retry: report counts {} retries, plan injected 2",
+        pr.retries
+    );
+    ensure!(pr_faulty.remaining() == 0, "part-retry: planned shot(s) never fired");
+    ensure!(
+        pr.rerun_regions >= 2,
+        "part-retry: narrowing must pay single-region re-runs, report counts {}",
+        pr.rerun_regions
+    );
+    ensure!(
+        pr.rerun_regions as usize <= blobs.len() + 1,
+        "part-retry: {} single-region re-runs exceed the {}-region stream",
+        pr.rerun_regions,
+        blobs.len()
+    );
+    rows.push(FaultsRow {
+        leg: "part-retry",
+        seconds: pr_s,
+        retries: pr.retries,
+        quarantined: 0,
+        check: format!("{} single-region re-run(s), bit-identical", pr.rerun_regions),
+    });
+    let rerun_regions = pr.rerun_regions;
+
     // -- quarantine: one poisoned shard, run survives, ledger names it --
     let target = shards / 2;
     let q_runner = ShardedRunner::new(exec(cfg).with_fault(FaultPolicy::Quarantine));
@@ -271,6 +327,45 @@ pub fn run(cfg: &FaultsConfig) -> Result<FaultsReport> {
         quarantined: q.faults.len(),
         check: format!("shard {target} dropped, run survived"),
     });
+
+    // -- degraded: rebuild dies too, worker retires, survivors finish ---
+    // The quarantined panic forces a pipeline rebuild; the rebuild shot
+    // kills that too, so the worker retires and its shard is re-dealt
+    // untouched to a survivor — the run must finish bit-identically on
+    // N−1 workers with nothing quarantined.
+    let mut dead_workers = 0;
+    if cfg.workers >= 2 {
+        let d_target = shards / 2;
+        let d_runner = ShardedRunner::new(exec(cfg).with_fault(FaultPolicy::Quarantine));
+        let t0 = Instant::now();
+        let d = d_runner.run(
+            &FaultyFactory::new(
+                factory(cfg),
+                &FaultPlan::new().panic_at(d_target).panic_on_rebuild(),
+            ),
+            &blobs,
+        )?;
+        let d_s = t0.elapsed().as_secs_f64();
+        ensure_bit_identical("degraded", &d.outputs, &base.outputs)?;
+        dead_workers = d.per_worker.iter().filter(|w| w.dead).count();
+        ensure!(
+            dead_workers == 1,
+            "degraded: expected exactly one retired worker, saw {dead_workers}"
+        );
+        ensure!(
+            d.faults.is_empty(),
+            "degraded: the re-dealt shard must finish clean, not quarantine"
+        );
+        rows.push(FaultsRow {
+            leg: "degraded",
+            seconds: d_s,
+            retries: d.retries,
+            quarantined: 0,
+            check: format!("1 worker retired, {} survivor(s), bit-identical", cfg.workers - 1),
+        });
+    } else {
+        println!("(degraded leg skipped: a 1-worker pool has no survivor to re-deal to)");
+    }
 
     // -- salvage: corrupted .rgn frames skipped, survivors bit-exact ----
     let mut bytes: Vec<u8> = Vec::new();
@@ -343,6 +438,9 @@ pub fn run(cfg: &FaultsConfig) -> Result<FaultsReport> {
         workers: cfg.workers,
         shards,
         injected,
+        regions: blobs.len(),
+        rerun_regions,
+        dead_workers,
         rows,
         frames: blobs.len(),
         corrupted: corrupt.len(),
@@ -362,6 +460,20 @@ pub fn retry_overhead(report: &FaultsReport) -> Option<f64> {
     Some(pick("retry")? / base)
 }
 
+/// Headline metric: how much region work part-granular narrowing saved
+/// over whole-shard retry — planned whole-shard re-run cost (retries ×
+/// average regions per shard) over the single-region re-runs actually
+/// paid. \>1 means narrowing re-ran less than whole-shard retry would
+/// have. `None` if the part-retry leg is missing.
+pub fn part_retry_savings(report: &FaultsReport) -> Option<f64> {
+    let row = report.rows.iter().find(|r| r.leg == "part-retry")?;
+    if report.rerun_regions == 0 || report.shards == 0 {
+        return None;
+    }
+    let whole_shard = row.retries as f64 * report.regions as f64 / report.shards as f64;
+    Some(whole_shard / report.rerun_regions as f64)
+}
+
 /// Render the report as the `BENCH_faults.json` artifact.
 pub fn to_json(report: &FaultsReport) -> String {
     let mut s = String::new();
@@ -371,6 +483,9 @@ pub fn to_json(report: &FaultsReport) -> String {
     s.push_str(&format!("  \"workers\": {},\n", report.workers));
     s.push_str(&format!("  \"shards\": {},\n", report.shards));
     s.push_str(&format!("  \"injected\": {},\n", report.injected));
+    s.push_str(&format!("  \"regions\": {},\n", report.regions));
+    s.push_str(&format!("  \"rerun_regions\": {},\n", report.rerun_regions));
+    s.push_str(&format!("  \"dead_workers\": {},\n", report.dead_workers));
     s.push_str("  \"rows\": [\n");
     for (i, r) in report.rows.iter().enumerate() {
         s.push_str(&format!(
@@ -390,8 +505,12 @@ pub fn to_json(report: &FaultsReport) -> String {
         report.frames, report.corrupted, report.recovered
     ));
     s.push_str(&format!(
-        "  \"retry_overhead\": {:.4}\n",
+        "  \"retry_overhead\": {:.4},\n",
         retry_overhead(report).unwrap_or(0.0)
+    ));
+    s.push_str(&format!(
+        "  \"part_retry_savings\": {:.4}\n",
+        part_retry_savings(report).unwrap_or(0.0)
     ));
     s.push_str("}\n");
     s
@@ -416,15 +535,24 @@ mod tests {
             },
         };
         let report = run(&cfg).unwrap();
-        assert_eq!(report.rows.len(), 5, "baseline/retry/traced/quarantine/salvage");
+        assert_eq!(
+            report.rows.len(),
+            7,
+            "baseline/retry/traced/part-retry/quarantine/degraded/salvage"
+        );
         assert!(report.injected >= 1, "the plan always injects something");
         assert!(report.corrupted >= 1, "the salvage leg always corrupts something");
         assert_eq!(report.recovered, report.frames - report.corrupted);
+        assert!(report.rerun_regions >= 2, "the part-retry leg narrowed");
+        assert_eq!(report.dead_workers, 1, "the degraded leg retired one worker");
         let js = to_json(&report);
         let parsed = Json::parse(&js).expect("emitted JSON parses");
         assert!(parsed.get("rows").is_some());
         assert!(parsed.get("salvage").is_some());
         assert!(parsed.get("retry_overhead").is_some());
+        assert!(parsed.get("part_retry_savings").is_some());
         assert!(retry_overhead(&report).is_some());
+        let savings = part_retry_savings(&report).expect("part-retry leg present");
+        assert!(savings > 0.0, "savings ratio is a positive number, got {savings}");
     }
 }

@@ -19,13 +19,28 @@
 //!   stream-order merge emits an empty slot for it instead of stalling
 //!   the runs behind it.
 //!
+//! Recovery is **part-granular**: when a failed shard covers several
+//! regions (or [`SubShard`](crate::exec::split::SubShard) parts), the
+//! pool narrows to the failing slice instead of discarding the whole
+//! shard — `Retry` re-runs only what failed, and `Quarantine` records
+//! one [`FaultRecord`] per lost region (its in-shard ordinal in
+//! [`FaultRecord::part`]) while keeping every surviving region's
+//! output. Split runs additionally surface lost parts through the
+//! [`PartialRegion`](crate::exec::PartialRegion) salvage ledger.
+//!
 //! The injection harness ([`FaultPlan`] + [`FaultyFactory`]) makes every
 //! recovery path deterministically testable: a plan is a list of
 //! "shard `k` panics (or errors) on its next `times` attempts",
 //! either written explicitly or drawn from a seeded PRNG, and the
 //! factory wrapper detonates those shots from inside `run_shard` —
 //! upstream of the pool's `catch_unwind` guard, exactly where a real
-//! kernel fault would fire.
+//! kernel fault would fire. Beyond the compute domain, a plan can also
+//! poison the **ingest** boundary ([`FaultySource`] fails
+//! `next_region` pulls, recovered by the driver's bounded
+//! retry-with-backoff), the **sink** boundary ([`FaultySink`] fails
+//! `write_batch`, surfacing a named error with the `.tmp` sibling
+//! cleaned up), and the **rebuild** path (`panic_on_rebuild` kills a
+//! worker's recovery build, exercising worker retirement).
 //!
 //! [`ExecReport::faults`]: crate::exec::ExecReport::faults
 
@@ -108,6 +123,20 @@ pub struct FaultRecord {
     pub attempts: u32,
     /// Rendered error (panic payload or `run_shard` error chain).
     pub error: String,
+    /// Granularity of the loss: `Some(i)` means only the region at
+    /// in-shard ordinal `i` was dropped (part-granular quarantine);
+    /// `None` means the whole shard was lost.
+    pub part: Option<u32>,
+}
+
+impl FaultRecord {
+    /// Human-readable granularity tag for the `fault_table` column.
+    pub fn granularity(&self) -> String {
+        match self.part {
+            Some(i) => format!("part {i}"),
+            None => "shard".to_string(),
+        }
+    }
 }
 
 /// How an injected fault manifests inside `run_shard`.
@@ -134,12 +163,40 @@ pub struct FaultShot {
     pub times: u32,
 }
 
+/// One planned ingest/sink boundary fault: call number `at` (0-based
+/// pulls for sources, batches for sinks) fails on its next `times`
+/// attempts. `times == u32::MAX` models a permanent fault that no
+/// retry budget survives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IoShot {
+    /// 0-based call ordinal that fails (source pull / sink batch).
+    pub at: usize,
+    /// Attempts this shot poisons before the call succeeds again.
+    pub times: u32,
+}
+
+/// One planned pipeline-rebuild fault: a worker's recovery build (any
+/// `make_worker` call after its first) panics on its next `times`
+/// firings — the trigger for worker retirement under `Quarantine`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RebuildShot {
+    /// Restrict to one worker id (`None` = whichever rebuilds first).
+    pub worker: Option<usize>,
+    /// Rebuilds this shot poisons.
+    pub times: u32,
+}
+
 /// A deterministic plan of injected faults. Build one explicitly
-/// (`panic_at`, `error_at`) or draw one from a seeded PRNG (`seeded`);
-/// thread it through a [`FaultyFactory`] to detonate the shots.
+/// (`panic_at`, `error_at`, `source_fault_at`, …) or draw one from a
+/// seeded PRNG (`seeded`, `seeded_source`); thread it through a
+/// [`FaultyFactory`] / [`FaultySource`] / [`FaultySink`] to detonate
+/// the shots in their respective domains.
 #[derive(Debug, Clone, Default)]
 pub struct FaultPlan {
     shots: Vec<FaultShot>,
+    source_shots: Vec<IoShot>,
+    sink_shots: Vec<IoShot>,
+    rebuild_shots: Vec<RebuildShot>,
 }
 
 impl FaultPlan {
@@ -183,6 +240,67 @@ impl FaultPlan {
     pub fn with_shot(mut self, shot: FaultShot) -> FaultPlan {
         self.shots.push(shot);
         self
+    }
+
+    /// Set every compute shot's `times` to `times` — e.g. `times = 2`
+    /// makes each poisoned shard fail again during part narrowing, so
+    /// the per-part retry path (not just the narrowing pass) runs.
+    pub fn with_times(mut self, times: u32) -> FaultPlan {
+        for s in &mut self.shots {
+            s.times = times;
+        }
+        self
+    }
+
+    /// Source pull `at` fails transiently on its next attempt (the
+    /// retried pull succeeds).
+    pub fn source_fault_at(mut self, at: usize) -> FaultPlan {
+        self.source_shots.push(IoShot { at, times: 1 });
+        self
+    }
+
+    /// Source pull `at` fails on its next `times` attempts; pass
+    /// `u32::MAX` for a permanent fault that exhausts any retry budget.
+    pub fn source_fault_at_times(mut self, at: usize, times: u32) -> FaultPlan {
+        self.source_shots.push(IoShot { at, times });
+        self
+    }
+
+    /// Sink batch `at` fails on its next attempt. Sink faults are not
+    /// retried — they abort the run with a named error.
+    pub fn sink_fault_at(mut self, at: usize) -> FaultPlan {
+        self.sink_shots.push(IoShot { at, times: 1 });
+        self
+    }
+
+    /// The next pipeline **rebuild** (any worker's `make_worker` call
+    /// after its first) panics — under `Quarantine` this retires the
+    /// worker instead of aborting the run.
+    pub fn panic_on_rebuild(mut self) -> FaultPlan {
+        self.rebuild_shots.push(RebuildShot {
+            worker: None,
+            times: 1,
+        });
+        self
+    }
+
+    /// Draw transient source faults from a seeded PRNG: each pull index
+    /// in `0..pulls` fails once with probability `rate`. Same seed +
+    /// pull count → same plan, always.
+    pub fn seeded_source(seed: u64, pulls: usize, rate: f64) -> FaultPlan {
+        let mut rng = Prng::new(seed);
+        let mut plan = FaultPlan::new();
+        for at in 0..pulls {
+            if rng.chance(rate) {
+                plan.source_shots.push(IoShot { at, times: 1 });
+            }
+        }
+        plan
+    }
+
+    /// Transient source faults the plan will inject.
+    pub fn injected_source(&self) -> usize {
+        self.source_shots.iter().map(|s| s.times as usize).sum()
     }
 
     /// Draw a plan from a seeded PRNG: each shard index in
@@ -231,6 +349,14 @@ impl FaultPlan {
 /// Live shot ledger shared by every worker of one injected run.
 type Shots = Arc<Mutex<Vec<FaultShot>>>;
 
+/// Shared rebuild-shot ledger plus per-worker build counts (keyed by
+/// worker id), used to tell recovery rebuilds apart from first builds.
+#[derive(Debug, Default)]
+struct RebuildState {
+    shots: Vec<RebuildShot>,
+    builds: std::collections::HashMap<usize, u32>,
+}
+
 /// Consume one matching shot, if any (first match wins).
 fn claim_shot(shots: &Shots, shard: usize, worker: usize) -> Option<FaultKind> {
     let mut shots = lock_ignore_poison(shots);
@@ -252,6 +378,7 @@ fn claim_shot(shots: &Shots, shard: usize, worker: usize) -> Option<FaultKind> {
 pub struct FaultyFactory<F> {
     inner: F,
     shots: Shots,
+    rebuilds: Arc<Mutex<RebuildState>>,
 }
 
 impl<F: PipelineFactory> FaultyFactory<F> {
@@ -260,11 +387,16 @@ impl<F: PipelineFactory> FaultyFactory<F> {
         FaultyFactory {
             inner,
             shots: Arc::new(Mutex::new(plan.shots.clone())),
+            rebuilds: Arc::new(Mutex::new(RebuildState {
+                shots: plan.rebuild_shots.clone(),
+                builds: Default::default(),
+            })),
         }
     }
 
-    /// Shots not yet fired — zero after a run proves the plan landed
-    /// exactly (the injection-count reconciliation tests pin this).
+    /// Compute shots not yet fired — zero after a run proves the plan
+    /// landed exactly (the injection-count reconciliation tests pin
+    /// this). Rebuild shots are not counted here.
     pub fn remaining(&self) -> usize {
         lock_ignore_poison(&self.shots)
             .iter()
@@ -284,6 +416,26 @@ impl<F: PipelineFactory> PipelineFactory for FaultyFactory<F> {
     type Worker = FaultyWorker<F::Worker>;
 
     fn make_worker(&self, worker_id: usize) -> Result<FaultyWorker<F::Worker>> {
+        {
+            let mut guard = lock_ignore_poison(&self.rebuilds);
+            let state = &mut *guard;
+            let builds = state.builds.entry(worker_id).or_insert(0);
+            *builds += 1;
+            let is_rebuild = *builds > 1;
+            // only builds after a worker's first are rebuilds; a planned
+            // rebuild shot panics here, inside the pool's guarded
+            // rebuild, exactly where a real recovery build would die
+            if is_rebuild {
+                for s in state.shots.iter_mut() {
+                    if s.times > 0 && s.worker.is_none_or(|w| w == worker_id) {
+                        s.times -= 1;
+                        panic!(
+                            "injected fault: worker {worker_id} panics rebuilding its pipeline"
+                        );
+                    }
+                }
+            }
+        }
         Ok(FaultyWorker {
             inner: self.inner.make_worker(worker_id)?,
             worker: worker_id,
@@ -362,6 +514,127 @@ impl<W: ShardWorker> ShardWorker for FaultyWorker<W> {
     }
 }
 
+/// A [`RegionSource`](crate::workload::source::RegionSource) wrapper that
+/// detonates a plan's **source shots**: pull number `at` fails with a
+/// named error instead of touching the inner source, so a retried pull
+/// resumes exactly where the stream left off. Transient shots (`times`
+/// finite) clear after firing — the ingest driver's bounded
+/// retry-with-backoff recovers them; permanent shots (`u32::MAX`)
+/// exhaust the budget and fail the run by name.
+pub struct FaultySource<S> {
+    inner: S,
+    shots: Vec<IoShot>,
+    /// 0-based pull index of the next `try_next_region` call.
+    pulls: usize,
+    fired: usize,
+}
+
+impl<S> FaultySource<S> {
+    /// Wrap `inner` so the plan's source shots fire during ingest.
+    pub fn new(inner: S, plan: &FaultPlan) -> FaultySource<S> {
+        FaultySource {
+            inner,
+            shots: plan.source_shots.clone(),
+            pulls: 0,
+            fired: 0,
+        }
+    }
+
+    /// Source faults fired so far.
+    pub fn fired(&self) -> usize {
+        self.fired
+    }
+
+    /// Source shots not yet fired.
+    pub fn remaining(&self) -> usize {
+        self.shots
+            .iter()
+            .map(|s| if s.times == u32::MAX { 1 } else { s.times as usize })
+            .sum()
+    }
+}
+
+impl<S: crate::workload::source::RegionSource> crate::workload::source::RegionSource for FaultySource<S> {
+    type Region = S::Region;
+
+    fn next_region(&mut self) -> Option<S::Region> {
+        // the infallible path cannot surface transient faults; shots
+        // only fire through try_next_region (the driver's path)
+        self.pulls += 1;
+        self.inner.next_region()
+    }
+
+    fn try_next_region(&mut self) -> Result<Option<S::Region>> {
+        let at = self.pulls;
+        for s in self.shots.iter_mut() {
+            if s.at == at && s.times > 0 {
+                if s.times != u32::MAX {
+                    s.times -= 1;
+                }
+                self.fired += 1;
+                // the pull index does NOT advance: the retried call
+                // re-attempts this same pull
+                bail!("injected fault: source pull {at} failed");
+            }
+        }
+        self.pulls += 1;
+        self.inner.try_next_region()
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        self.inner.size_hint()
+    }
+
+    fn close(&mut self) -> Result<()> {
+        self.inner.close()
+    }
+}
+
+/// A [`ResultSink`](crate::io::ResultSink) wrapper that detonates a
+/// plan's **sink shots**: batch number `at` fails `write_batch` with a
+/// named error before the inner sink sees it. Sink faults are never
+/// retried — the streaming run aborts, and file-backed sinks remove
+/// their unpublished `.tmp` sibling on drop.
+pub struct FaultySink<S> {
+    inner: S,
+    shots: Vec<IoShot>,
+    batches: usize,
+}
+
+impl<S> FaultySink<S> {
+    /// Wrap `inner` so the plan's sink shots fire during emission.
+    pub fn new(inner: S, plan: &FaultPlan) -> FaultySink<S> {
+        FaultySink {
+            inner,
+            shots: plan.sink_shots.clone(),
+            batches: 0,
+        }
+    }
+
+    /// The wrapped sink (to finish or inspect after a run).
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<T, S: crate::io::ResultSink<T>> crate::io::ResultSink<T> for FaultySink<S> {
+    fn write_batch(&mut self, outputs: &[T]) -> Result<()> {
+        let at = self.batches;
+        self.batches += 1;
+        for s in self.shots.iter_mut() {
+            if s.at == at && s.times > 0 {
+                s.times -= 1;
+                bail!("injected fault: result sink failed writing batch {at}");
+            }
+        }
+        self.inner.write_batch(outputs)
+    }
+
+    fn finish(&mut self) -> Result<crate::io::SinkStats> {
+        self.inner.finish()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -408,5 +681,93 @@ mod tests {
         assert_eq!(claim_shot(&shots, 5, 1), None);
         assert_eq!(plan.injected(), 3);
         assert_eq!(plan.shards(), vec![3, 5]);
+    }
+
+    #[test]
+    fn seeded_source_plans_are_deterministic() {
+        let a = FaultPlan::seeded_source(0xBAD, 64, 0.25);
+        let b = FaultPlan::seeded_source(0xBAD, 64, 0.25);
+        assert_eq!(a.source_shots, b.source_shots, "same seed, same plan");
+        assert!(a.injected_source() >= 1, "1/4 rate over 64 pulls injects something");
+        assert!(a.injected_source() < 64, "and not everything");
+        let c = FaultPlan::seeded_source(0xF00D, 64, 0.25);
+        assert_ne!(a.source_shots, c.source_shots, "different seed, different plan");
+    }
+
+    #[test]
+    fn with_times_rescales_every_compute_shot() {
+        let plan = FaultPlan::new().panic_at(1).error_at(4).with_times(3);
+        assert_eq!(plan.injected(), 6);
+        assert!(plan.shots.iter().all(|s| s.times == 3));
+    }
+
+    #[test]
+    fn faulty_source_fails_the_planned_pull_then_recovers() {
+        use crate::workload::source::{RegionSource, SliceSource};
+        let items = vec![10u32, 20, 30];
+        let plan = FaultPlan::new().source_fault_at(1);
+        let mut src = FaultySource::new(SliceSource::new(&items), &plan);
+        assert_eq!(src.try_next_region().unwrap(), Some(10));
+        let err = src.try_next_region().unwrap_err();
+        assert!(err.to_string().contains("source pull 1 failed"), "{err:#}");
+        assert_eq!(src.try_next_region().unwrap(), Some(20), "retried pull resumes in place");
+        assert_eq!(src.try_next_region().unwrap(), Some(30));
+        assert_eq!(src.try_next_region().unwrap(), None);
+        assert_eq!(src.fired(), 1);
+        assert_eq!(src.remaining(), 0);
+        src.close().unwrap();
+    }
+
+    #[test]
+    fn permanent_source_fault_never_clears() {
+        use crate::workload::source::{RegionSource, SliceSource};
+        let items = vec![1u32];
+        let plan = FaultPlan::new().source_fault_at_times(0, u32::MAX);
+        let mut src = FaultySource::new(SliceSource::new(&items), &plan);
+        for _ in 0..4 {
+            assert!(src.try_next_region().is_err(), "permanent fault keeps firing");
+        }
+        assert_eq!(src.remaining(), 1, "a permanent shot never drains");
+    }
+
+    #[test]
+    fn faulty_sink_fails_the_planned_batch_by_name() {
+        use crate::io::{JsonlSink, ResultSink};
+        let plan = FaultPlan::new().sink_fault_at(1);
+        let mut sink = FaultySink::new(JsonlSink::new(Vec::new()), &plan);
+        ResultSink::<(u64, f64)>::write_batch(&mut sink, &[(0, 1.0)]).unwrap();
+        let err = ResultSink::<(u64, f64)>::write_batch(&mut sink, &[(1, 2.0)]).unwrap_err();
+        assert!(
+            err.to_string().contains("sink failed writing batch 1"),
+            "{err:#}"
+        );
+        ResultSink::<(u64, f64)>::write_batch(&mut sink, &[(2, 3.0)]).unwrap();
+        let stats = ResultSink::<(u64, f64)>::finish(&mut sink).unwrap();
+        assert_eq!(stats.records, 2, "the poisoned batch never reached the sink");
+    }
+
+    #[test]
+    fn rebuild_shots_spare_first_builds_and_fire_once() {
+        use crate::exec::factory::KernelSpawn;
+        use crate::apps::sum::{SumConfig, SumFactory};
+        let factory = SumFactory::new(
+            SumConfig {
+                width: 8,
+                ..Default::default()
+            },
+            KernelSpawn::Native,
+        );
+        let faulty = FaultyFactory::new(factory, &FaultPlan::new().panic_on_rebuild());
+        // first build per worker (prewarm) is never a rebuild
+        let _w0 = faulty.make_worker(0).unwrap();
+        let _w1 = faulty.make_worker(1).unwrap();
+        // the first rebuild anywhere panics…
+        let died = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = faulty.make_worker(1);
+        }));
+        assert!(died.is_err(), "planned rebuild shot must panic");
+        // …and the shot is consumed: later rebuilds succeed
+        let _w1b = faulty.make_worker(1).unwrap();
+        let _w0b = faulty.make_worker(0).unwrap();
     }
 }

@@ -61,10 +61,55 @@ pub struct WorkerStats {
     /// Extra shard attempts this worker ran under
     /// [`FaultPolicy::Retry`](super::fault::FaultPolicy) (0 fault-free).
     pub retries: u64,
-    /// Shards this worker quarantined.
+    /// Shards this worker quarantined (whole or in part).
     pub faults: u64,
     /// Its pipeline metrics, folded across its shards.
     pub metrics: PipelineMetrics,
+    /// The worker retired mid-run: its `Quarantine` rebuild failed, its
+    /// unfinished shard was re-dealt to survivors, and it stopped
+    /// claiming. Shards it completed *before* retiring are still
+    /// counted above.
+    pub dead: bool,
+}
+
+impl WorkerStats {
+    /// A zeroed row for `worker` — the fold seed.
+    fn empty(worker: usize) -> WorkerStats {
+        WorkerStats {
+            worker,
+            shards: 0,
+            steals: 0,
+            outputs: 0,
+            invocations: 0,
+            busy: 0.0,
+            pipelines_built: 0,
+            retries: 0,
+            faults: 0,
+            metrics: PipelineMetrics::default(),
+            dead: false,
+        }
+    }
+}
+
+/// One split region that lost parts to a quarantine: the named salvage
+/// ledger entry. The region emits **no** output row — these are the
+/// pieces that survived, made explicit so a partial aggregate can never
+/// masquerade as a total.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartialRegion<T> {
+    /// The region's stream id (the [`SubShard::region`] ordinal).
+    ///
+    /// [`SubShard::region`]: super::split::SubShard::region
+    pub region: u64,
+    /// How many parts the region was split into.
+    pub of: u32,
+    /// Part indices (ascending) that were lost.
+    pub lost: Vec<u32>,
+    /// One entry per maximal contiguous run of surviving parts:
+    /// `(first part index of the run, left-linear fold of the run)`.
+    /// The fold inside each run uses the factory's `combine`, in part
+    /// order — bit-identical to the prefix it represents.
+    pub salvaged: Vec<(u32, T)>,
 }
 
 /// The merged result of a sharded run.
@@ -92,11 +137,23 @@ pub struct ExecReport<T> {
     /// rebuild-and-rerun recovery cycle; 0 on a fault-free run). Under
     /// injection this reconciles exactly with the plan's shot count.
     pub retries: u64,
-    /// Quarantined shards, in stream order: each failed all its attempts
-    /// under [`FaultPolicy::Quarantine`](super::fault::FaultPolicy) and
-    /// contributed an empty output slot. Empty on fault-free, fail-fast
-    /// and fully-recovered retry runs.
+    /// The fault ledger, in stream order: one record per lost region
+    /// (part-granular — [`FaultRecord::part`] names the in-shard
+    /// ordinal) or per wholly-lost shard, under
+    /// [`FaultPolicy::Quarantine`](super::fault::FaultPolicy). Empty on
+    /// fault-free, fail-fast and fully-recovered retry runs.
     pub faults: Vec<FaultRecord>,
+    /// The salvage ledger for **split** regions that lost parts: each
+    /// entry names exactly which parts of the region are gone and
+    /// carries the folded partials of every maximal contiguous
+    /// surviving run. A region listed here has **no** row in `outputs`
+    /// — a partial aggregate is never passed off as a total; callers
+    /// that can use salvage must opt in by reading this ledger.
+    pub partial_regions: Vec<PartialRegion<T>>,
+    /// Single-region re-runs workers performed while narrowing `Retry`
+    /// recoveries (0 fault-free). Compare with `retries` × regions/shard
+    /// to see what part-level retry saved over whole-shard re-runs.
+    pub rerun_regions: u64,
     /// Regions the planner cut into sub-shards for intra-region
     /// parallelism (0 when splitting is off — the default — or when no
     /// region exceeded
@@ -152,7 +209,7 @@ impl<T> ExecReport<T> {
             };
             out.push_str(&format!(
                 "{:<8} {:>6}  {:>6}  {:>5}  {:>5}  {:>5}  {:>8}  {:>11}  {:>7.3}  {:>5.1}  \
-                 {:>5.1}\n",
+                 {:>5.1}{}\n",
                 w.worker,
                 w.shards,
                 w.steals,
@@ -164,26 +221,74 @@ impl<T> ExecReport<T> {
                 w.busy,
                 100.0 * w.metrics.occupancy(),
                 idle,
+                if w.dead { "  retired" } else { "" },
             ));
         }
         out
     }
 
     /// Render the quarantine ledger (used by `--stats`): one line per
-    /// quarantined shard, stream order. Empty string when the run had no
-    /// faults, so callers can print it unconditionally.
+    /// lost region (or wholly-lost shard), stream order, with a
+    /// granularity column telling the two apart. Empty string when the
+    /// run had no faults, so callers can print it unconditionally.
     pub fn fault_table(&self) -> String {
         if self.faults.is_empty() {
             return String::new();
         }
-        let mut out = String::from("shard    worker   attempts   error\n");
+        let mut out = String::from("shard    worker   attempts   granularity   error\n");
         for f in &self.faults {
             out.push_str(&format!(
-                "{:<8} {:>6}  {:>8}   {}\n",
-                f.shard, f.worker, f.attempts, f.error
+                "{:<8} {:>6}  {:>8}   {:<11}   {}\n",
+                f.shard,
+                f.worker,
+                f.attempts,
+                f.granularity(),
+                f.error
             ));
         }
         out
+    }
+
+    /// Render the salvage ledger (used by `--stats`): one line per
+    /// split region that lost parts, with the lost part indices and the
+    /// surviving contiguous runs. Empty string when no region was
+    /// partially lost, so callers can print it unconditionally.
+    pub fn partial_table(&self) -> String {
+        if self.partial_regions.is_empty() {
+            return String::new();
+        }
+        let mut out = String::from("region   parts   lost          salvaged_runs\n");
+        for p in &self.partial_regions {
+            let lost: Vec<String> = p.lost.iter().map(u32::to_string).collect();
+            let runs: Vec<String> =
+                p.salvaged.iter().map(|(start, _)| format!("@{start}")).collect();
+            out.push_str(&format!(
+                "{:<8} {:>5}   {:<12}  {}\n",
+                p.region,
+                p.of,
+                lost.join(","),
+                if runs.is_empty() { "-".to_string() } else { runs.join(" ") },
+            ));
+        }
+        out
+    }
+
+    /// Mark `retired` workers dead in the per-worker table. A worker
+    /// that retired before completing any shard still gets a zeroed
+    /// row, so degradation is always visible; the table stays sorted by
+    /// worker id.
+    pub fn mark_retired(&mut self, retired: &[usize]) {
+        for &worker in retired {
+            match self.per_worker.iter_mut().find(|w| w.worker == worker) {
+                Some(w) => w.dead = true,
+                None => {
+                    let mut w = WorkerStats::empty(worker);
+                    w.dead = true;
+                    self.per_worker.push(w);
+                }
+            }
+        }
+        self.per_worker.sort_by_key(|w| w.worker);
     }
 }
 
@@ -197,6 +302,7 @@ pub struct ReportBuilder<T> {
     shards: usize,
     steals: usize,
     retries: u64,
+    rerun_regions: u64,
     faults: Vec<FaultRecord>,
     per_worker: BTreeMap<usize, WorkerStats>,
 }
@@ -217,9 +323,21 @@ impl<T> ReportBuilder<T> {
             shards: 0,
             steals: 0,
             retries: 0,
+            rerun_regions: 0,
             faults: Vec::new(),
             per_worker: BTreeMap::new(),
         }
+    }
+
+    /// Mark `worker` as retired (its `Quarantine` rebuild failed and
+    /// its remaining work was re-dealt). A worker that retired before
+    /// completing any shard still gets a (zeroed) row, so degradation
+    /// is always visible in the worker table.
+    pub fn mark_dead(&mut self, worker: usize) {
+        self.per_worker
+            .entry(worker)
+            .or_insert_with(|| WorkerStats::empty(worker))
+            .dead = true;
     }
 
     /// Fold one shard's counters (not its outputs — the caller decides
@@ -230,26 +348,36 @@ impl<T> ReportBuilder<T> {
         self.shards += 1;
         self.steals += r.stolen as usize;
         self.retries += u64::from(r.retries);
+        self.rerun_regions += r.rerun_regions;
         if let Some(error) = &r.fault {
-            self.faults.push(FaultRecord {
-                shard: r.shard,
-                worker: r.worker,
-                attempts: r.retries + 1,
-                error: error.clone(),
-            });
+            // Part-granular ledger: one record per lost in-shard
+            // ordinal. A shard that lost everything (or a legacy result
+            // with no part list) folds to a single whole-shard record,
+            // so 1-region shards read exactly as before.
+            if r.lost.is_empty() || r.lost.len() == r.regions {
+                self.faults.push(FaultRecord {
+                    shard: r.shard,
+                    worker: r.worker,
+                    attempts: r.retries + 1,
+                    error: error.clone(),
+                    part: None,
+                });
+            } else {
+                for &ordinal in &r.lost {
+                    self.faults.push(FaultRecord {
+                        shard: r.shard,
+                        worker: r.worker,
+                        attempts: r.retries + 1,
+                        error: error.clone(),
+                        part: Some(ordinal),
+                    });
+                }
+            }
         }
-        let w = self.per_worker.entry(r.worker).or_insert_with(|| WorkerStats {
-            worker: r.worker,
-            shards: 0,
-            steals: 0,
-            outputs: 0,
-            invocations: 0,
-            busy: 0.0,
-            pipelines_built: 0,
-            retries: 0,
-            faults: 0,
-            metrics: PipelineMetrics::default(),
-        });
+        let w = self
+            .per_worker
+            .entry(r.worker)
+            .or_insert_with(|| WorkerStats::empty(r.worker));
         w.shards += 1;
         w.steals += r.stolen as usize;
         w.outputs += r.outputs.len();
@@ -287,6 +415,10 @@ impl<T> ReportBuilder<T> {
             pipelines_built,
             retries: self.retries,
             faults,
+            // filled by the runner from the RegionFolder's ledger on
+            // split runs; unsplit regions are all-or-nothing
+            partial_regions: Vec::new(),
+            rerun_regions: self.rerun_regions,
             // overwritten by the runner on split runs; plain runs never
             // cut a region
             split_regions: 0,
@@ -322,14 +454,24 @@ pub fn merge_results<T>(results: Vec<ShardResult<T>>, elapsed: f64) -> ExecRepor
 /// worker ran which part, and in what completion order, cannot affect
 /// the result.
 ///
-/// Quarantined shards poison every region they cover a part of: a
-/// region with **any** lost part emits nothing (the unsplit run's
-/// empty-slot semantics, at whole-region granularity), rather than a
-/// partial aggregate masquerading as a total.
+/// A quarantined shard names its lost parts ([`ShardResult::lost`]);
+/// the folder turns every region touched by a loss into a
+/// [`PartialRegion`] ledger entry — the lost part indices plus the
+/// folded value of each maximal contiguous surviving run — and emits
+/// **no** output row for it, rather than a partial aggregate
+/// masquerading as a total. Salvage is explicit: callers opt in by
+/// reading the ledger ([`RegionFolder::take_partials`]).
 pub struct RegionFolder<T> {
     queue: SharedSplitQueue,
+    // Current contiguous surviving run: accumulator + the part index
+    // that seeded it.
     acc: Option<T>,
-    poisoned: bool,
+    run_start: u32,
+    // The current region's loss state (both empty while it is healthy).
+    lost: Vec<u32>,
+    salvaged: Vec<(u32, T)>,
+    // Finished ledger entries, in region order.
+    partials: Vec<PartialRegion<T>>,
 }
 
 impl<T> RegionFolder<T> {
@@ -338,7 +480,10 @@ impl<T> RegionFolder<T> {
         RegionFolder {
             queue,
             acc: None,
-            poisoned: false,
+            run_start: 0,
+            lost: Vec::new(),
+            salvaged: Vec::new(),
+            partials: Vec::new(),
         }
     }
 
@@ -347,63 +492,95 @@ impl<T> RegionFolder<T> {
     /// trailing parts may live in a later shard, whose fold will emit
     /// it). Healthy shards must produce exactly one row per part —
     /// that's what `Splittability::RegionFold` promises — and violations
-    /// are named errors, not silent misalignment.
+    /// are named errors, not silent misalignment. Quarantined shards
+    /// must produce one row per *surviving* part (`r.lost` names the
+    /// dropped in-shard ordinals, ascending).
     pub fn fold_shard<F>(&mut self, factory: &F, r: &mut ShardResult<T>) -> Result<()>
     where
         F: PipelineFactory<Out = T>,
     {
-        let mut queue = self.queue.borrow_mut();
-        if r.fault.is_some() {
-            // quarantined: every part this shard covered is lost, so
-            // poison their regions through to each region's last part
-            for _ in 0..r.regions {
-                let sub = queue.pop().ok_or_else(|| {
-                    anyhow::anyhow!("region fold: split queue ran dry on a quarantined shard")
-                })?;
-                self.acc = None;
-                self.poisoned = !sub.is_last();
-            }
-            r.outputs.clear();
-            return Ok(());
-        }
+        // A legacy whole-shard quarantine (no part list) loses every
+        // part the shard covered.
+        let all_lost: Vec<u32>;
+        let lost_parts: &[u32] = if r.fault.is_some() && r.lost.is_empty() {
+            all_lost = (0..r.regions as u32).collect();
+            &all_lost
+        } else {
+            &r.lost
+        };
         ensure!(
-            r.outputs.len() == r.regions,
-            "region fold requires exactly one output row per part, but shard {} \
-             produced {} rows over {} parts — only one-row-per-region stages may \
-             advertise Splittability::RegionFold",
+            r.outputs.len() + lost_parts.len() == r.regions,
+            "region fold requires exactly one output row per surviving part, but \
+             shard {} produced {} rows over {} parts ({} lost) — only \
+             one-row-per-region stages may advertise Splittability::RegionFold",
             r.shard,
             r.outputs.len(),
-            r.regions
+            r.regions,
+            lost_parts.len()
         );
-        let rows = std::mem::take(&mut r.outputs);
+        let mut queue = self.queue.borrow_mut();
+        let mut rows = std::mem::take(&mut r.outputs).into_iter();
         let mut folded = Vec::with_capacity(rows.len());
-        for row in rows {
+        let mut lost_iter = lost_parts.iter().copied().peekable();
+        for ordinal in 0..r.regions as u32 {
             let sub = queue.pop().ok_or_else(|| {
                 anyhow::anyhow!("region fold: split queue ran dry mid-stream (executor bug)")
             })?;
-            if sub.part == 0 {
-                self.poisoned = false;
-                self.acc = Some(row);
-            } else if !self.poisoned {
-                let acc = self.acc.as_mut().ok_or_else(|| {
-                    anyhow::anyhow!(
+            if lost_iter.peek() == Some(&ordinal) {
+                lost_iter.next();
+                // a lost part closes the current surviving run
+                if let Some(v) = self.acc.take() {
+                    self.salvaged.push((self.run_start, v));
+                }
+                self.lost.push(sub.part);
+            } else {
+                let row = rows.next().expect("row count ensured above");
+                if let Some(acc) = self.acc.as_mut() {
+                    // previous part of this region survived: extend the run
+                    factory.combine(acc, row)?;
+                } else {
+                    ensure!(
+                        sub.part == 0 || !self.lost.is_empty(),
                         "region fold: part {} of region {} arrived with no accumulator \
                          (executor bug)",
                         sub.part,
                         sub.region
-                    )
-                })?;
-                factory.combine(acc, row)?;
+                    );
+                    self.acc = Some(row);
+                    self.run_start = sub.part;
+                }
             }
             if sub.is_last() {
-                if let Some(done) = self.acc.take() {
+                if self.lost.is_empty() {
+                    let done = self.acc.take().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "region fold: region {} closed with no accumulator (executor bug)",
+                            sub.region
+                        )
+                    })?;
                     folded.push(done);
+                } else {
+                    if let Some(v) = self.acc.take() {
+                        self.salvaged.push((self.run_start, v));
+                    }
+                    self.partials.push(PartialRegion {
+                        region: sub.region,
+                        of: sub.of,
+                        lost: std::mem::take(&mut self.lost),
+                        salvaged: std::mem::take(&mut self.salvaged),
+                    });
                 }
-                self.poisoned = false;
             }
         }
         r.outputs = folded;
         Ok(())
+    }
+
+    /// Drain the salvage ledger accumulated so far (regions with lost
+    /// parts, in region order). The runner folds this into
+    /// [`ExecReport::partial_regions`].
+    pub fn take_partials(&mut self) -> Vec<PartialRegion<T>> {
+        std::mem::take(&mut self.partials)
     }
 
     /// Assert every part identity was consumed and no region is left
@@ -416,7 +593,7 @@ impl<T> RegionFolder<T> {
             self.queue.borrow().pending()
         );
         ensure!(
-            self.acc.is_none() && !self.poisoned,
+            self.acc.is_none() && self.lost.is_empty() && self.salvaged.is_empty(),
             "region fold: the stream ended mid-region (executor bug)"
         );
         Ok(())
@@ -522,6 +699,8 @@ mod tests {
             pipelines_built: 1,
             retries: 0,
             fault: None,
+            lost: Vec::new(),
+            rerun_regions: 0,
             submit_ns: 0,
         }
     }
@@ -741,9 +920,10 @@ mod tests {
         }
 
         #[test]
-        fn quarantined_shard_poisons_its_whole_regions() {
+        fn quarantined_shard_salvages_surviving_parts_into_the_ledger() {
             // region 0: 2 parts, part 0 healthy, part 1 quarantined —
-            // the region must vanish, not emit a half sum
+            // the region emits no total, but the ledger names the lost
+            // part and salvages the surviving run
             let queue = queue_of(&[2, 1]);
             let mut folder = RegionFolder::new(queue);
             let mut a = shard(0, 0, vec![5], 1);
@@ -757,6 +937,44 @@ mod tests {
             assert_eq!(a.outputs, Vec::<i32>::new());
             assert_eq!(b.outputs, Vec::<i32>::new());
             assert_eq!(c.outputs, vec![7], "later regions are untouched");
+            let partials = folder.take_partials();
+            assert_eq!(
+                partials,
+                vec![PartialRegion {
+                    region: 0,
+                    of: 2,
+                    lost: vec![1],
+                    salvaged: vec![(0, 5)],
+                }]
+            );
+            folder.finish().unwrap();
+        }
+
+        #[test]
+        fn part_granular_quarantine_salvages_around_the_lost_part() {
+            // one shard covers region 0's 3 parts; only part 1 is lost
+            // (part-granular quarantine) — both neighbours are salvaged
+            // as separate runs because the fold is not commutative
+            let queue = queue_of(&[3, 1]);
+            let mut folder = RegionFolder::new(queue);
+            let mut a = shard(0, 0, vec![5, 9], 2);
+            a.regions = 3;
+            a.fault = Some("injected".to_string());
+            a.lost = vec![1];
+            let mut c = shard(1, 0, vec![7], 1);
+            folder.fold_shard(&FoldFactory, &mut a).unwrap();
+            folder.fold_shard(&FoldFactory, &mut c).unwrap();
+            assert_eq!(a.outputs, Vec::<i32>::new());
+            assert_eq!(c.outputs, vec![7]);
+            assert_eq!(
+                folder.take_partials(),
+                vec![PartialRegion {
+                    region: 0,
+                    of: 3,
+                    lost: vec![1],
+                    salvaged: vec![(0, 5), (2, 9)],
+                }]
+            );
             folder.finish().unwrap();
         }
 
@@ -768,7 +986,7 @@ mod tests {
             bad.regions = 2;
             let err = folder.fold_shard(&FoldFactory, &mut bad).unwrap_err();
             assert!(
-                err.to_string().contains("exactly one output row per part"),
+                err.to_string().contains("exactly one output row per surviving part"),
                 "{err}"
             );
         }

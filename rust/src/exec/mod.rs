@@ -137,9 +137,12 @@ pub mod steal;
 pub use factory::{
     KernelSpawn, PipelineFactory, ShardOutput, ShardWorker, Splittability, WorkerKernels,
 };
-pub use fault::{FaultKind, FaultPlan, FaultPolicy, FaultRecord, FaultShot, FaultyFactory};
+pub use fault::{
+    FaultKind, FaultPlan, FaultPolicy, FaultRecord, FaultShot, FaultyFactory, FaultySink,
+    FaultySource, IoShot, RebuildShot,
+};
 pub use ingest::{ContainerPool, IngestPlanner, IngestPolicy, ShardTask};
-pub use merge::{ExecReport, RegionFolder, ReportBuilder, StreamMerger, WorkerStats};
+pub use merge::{ExecReport, PartialRegion, RegionFolder, ReportBuilder, StreamMerger, WorkerStats};
 pub use plan::{ShardPlan, ShardPolicy};
 pub use pool::{PoolRun, ShardResult, StreamRun, WorkerPool, DEFAULT_WATCHDOG};
 pub use runner::{ExecConfig, ShardedRunner, MAX_INGEST_BUFFER};

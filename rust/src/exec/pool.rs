@@ -26,9 +26,16 @@
 //! with worker and shard) reaches the caller after all threads join —
 //! already-completed shards are discarded. `Retry` discards the failing
 //! worker's pipeline, rebuilds it fresh through the factory, and re-runs
-//! the shard (output stays bit-identical, by the reuse ≡ fresh proof);
-//! `Quarantine` records the failure and emits an empty slot in stream
-//! order so the run proceeds. Every `run_shard` call sits behind
+//! the shard — after the first failure the re-run **narrows to
+//! per-region slices**, so only the regions that keep failing pay
+//! further retries (output stays bit-identical, by the reuse ≡ fresh
+//! proof plus the shard-granularity invariance). `Quarantine` runs
+//! per-region from the start: a poisoned region is dropped by name (its
+//! in-shard ordinal lands in [`ShardResult::lost`] and the run's fault
+//! table), surviving regions keep their outputs, and a worker whose
+//! quarantine *rebuild* also fails retires — its unfinished shard is
+//! handed back to the surviving deques and the run completes on N−1
+//! workers. Every `run_shard` call sits behind
 //! `catch_unwind`, so a panicking kernel is handled exactly like an
 //! `Err` — never a poisoned pool. And no blocking wait is unbounded:
 //! claims and completion drains carry a watchdog deadline (see
@@ -59,7 +66,7 @@ use super::fault::FaultPolicy;
 use super::ingest::{lock_ignore_poison, ContainerPool, IngestPlanner, IngestPolicy, ShardTask};
 use super::merge::StreamMerger;
 use super::plan::ShardPlan;
-use super::steal::{Claim, ClaimMode, CompletionBuffer, StealQueues};
+use super::steal::{Claim, ClaimMode, CompletionBuffer, Pulse, StealQueues};
 use crate::coordinator::metrics::PipelineMetrics;
 use crate::metrics::{Heartbeat, LaneMetrics, MetricsHub, MetricsSpec, ProgressSnapshot};
 use crate::trace::{TraceEvent, TraceSink, TraceSpec, WorkerTrace, DRIVER_LANE};
@@ -92,10 +99,21 @@ pub struct ShardResult<T> {
     /// Extra attempts this shard needed (0 on the fault-free path; a
     /// `Retry` recovery counts one per rebuild-and-rerun cycle).
     pub retries: u32,
-    /// `Some(error)` if the shard was quarantined under
-    /// [`FaultPolicy::Quarantine`]: its outputs are empty and the
-    /// failure lands in the run's fault table.
+    /// `Some(first error)` if any region of the shard was lost under
+    /// [`FaultPolicy::Quarantine`]: `outputs` then holds only the
+    /// surviving regions' rows and `lost` names the dropped ordinals.
     pub fault: Option<String>,
+    /// In-shard ordinals (0-based, ascending) of regions dropped by a
+    /// part-granular quarantine. Empty on every other path — a
+    /// quarantined shard keeps its surviving regions' outputs instead
+    /// of discarding the whole shard.
+    pub lost: Vec<u32>,
+    /// Single-region re-runs performed while recovering this shard
+    /// under [`FaultPolicy::Retry`] (the part-narrowing pass plus any
+    /// per-region retries). 0 when the first whole-slice attempt
+    /// succeeded; the fault bench compares this against the whole-shard
+    /// rerun cost the narrowing avoided.
+    pub rerun_regions: u64,
     /// When this shard was submitted by the streaming ingest driver
     /// (nanoseconds since the run's shared epoch), carried through from
     /// [`ShardTask::submit_ns`] so the stream merger can stamp emit time
@@ -155,22 +173,106 @@ impl<R> Drop for PanicSignal<'_, R> {
 }
 
 /// Outcome of [`run_shard_guarded`]: the shard's output (possibly after
-/// retries), or its quarantine record.
+/// retries), its part-granular quarantine record, or a retirement
+/// notice when the worker lost its pipeline for good.
 enum Guarded<T> {
-    /// The shard completed; `retries` rebuild-and-rerun cycles preceded.
-    Done { out: ShardOutput<T>, retries: u32 },
-    /// [`FaultPolicy::Quarantine`] gave up on the shard.
-    Quarantined { error: String, attempts: u32 },
+    /// The shard completed; `retries` rebuild-and-rerun cycles preceded
+    /// and `rerun_regions` single-region re-runs were paid during the
+    /// part-narrowing pass (both 0 on the fault-free path).
+    Done {
+        out: ShardOutput<T>,
+        retries: u32,
+        rerun_regions: u64,
+    },
+    /// [`FaultPolicy::Quarantine`] gave up on part of the shard: `out`
+    /// holds the surviving regions' rows in shard order, `lost` the
+    /// failed in-shard ordinals (ascending), `error` the first failure.
+    Quarantined {
+        out: ShardOutput<T>,
+        lost: Vec<u32>,
+        error: String,
+        attempts: u32,
+    },
+    /// A quarantine rebuild itself failed: the worker has no usable
+    /// pipeline left and must retire from the pool.
+    Retired { error: String },
+}
+
+/// Sleep a retry backoff without starving the pool watchdog: the wait is
+/// chunked and the pool [`Pulse`] is beaten between chunks, so a backoff
+/// longer than `--watchdog-secs` no longer reads as a stall. `None`
+/// (the legacy cursor claimer has no pulse) degrades to a plain sleep.
+fn sleep_backoff(backoff: Duration, pulse: Option<&Pulse>) {
+    const CHUNK: Duration = Duration::from_millis(50);
+    if backoff.is_zero() {
+        return;
+    }
+    let Some(pulse) = pulse else {
+        std::thread::sleep(backoff);
+        return;
+    };
+    let mut left = backoff;
+    while !left.is_zero() {
+        let step = left.min(CHUNK);
+        std::thread::sleep(step);
+        left -= step;
+        pulse.beat();
+    }
+}
+
+/// Replace a possibly-corrupt pipeline wholesale through the factory,
+/// under its own `catch_unwind` (a panicking rebuild must not escape the
+/// worker loop — under `Quarantine` it triggers retirement instead of
+/// aborting the run). Counted in `rebuilds` so per-worker
+/// `pipelines_built` accounting stays exact.
+fn rebuild_pipeline<F: PipelineFactory>(
+    factory: &F,
+    worker_id: usize,
+    pipeline: &mut F::Worker,
+    rebuilds: &mut u64,
+    shard: usize,
+    sink: &TraceSink,
+) -> Result<()> {
+    match catch_unwind(AssertUnwindSafe(|| factory.make_worker(worker_id))) {
+        Ok(Ok(p)) => {
+            *pipeline = p;
+            *rebuilds += 1;
+            if sink.enabled() {
+                pipeline.set_trace(sink.clone());
+            }
+            Ok(())
+        }
+        Ok(Err(e)) => Err(e.context(format!(
+            "rebuilding worker {worker_id}'s pipeline to retry shard {shard}"
+        ))),
+        Err(payload) => Err(anyhow!(
+            "worker {worker_id} panicked rebuilding its pipeline to \
+             retry shard {shard}: {}",
+            panic_msg(&payload)
+        )),
+    }
 }
 
 /// Run one shard under the pool's fault policy. Every attempt goes
 /// through `catch_unwind`, so a panicking kernel is handled exactly like
-/// an `Err`. Before a `Retry` re-run the worker's persistent pipeline is
-/// discarded — a panic may have unwound it mid-reset — and rebuilt fresh
-/// through the factory (counted in `rebuilds`, traced as a `Retry`
-/// span), which is what makes the recovered output bit-identical to a
-/// fault-free run. The fault-free path pays one `catch_unwind` frame and
-/// allocates nothing.
+/// an `Err`.
+///
+/// The execution shape depends on the policy:
+///
+/// * `FailFast` and the first `Retry` attempt run the whole slice in one
+///   `run_shard` call — the fault-free path pays one `catch_unwind`
+///   frame and allocates nothing.
+/// * After a `Retry` failure the pipeline is rebuilt (a panic may have
+///   unwound it mid-reset) and the slice is **narrowed**: each region is
+///   re-run alone, so only the regions that keep failing pay further
+///   retries instead of the whole shard. Region boundaries are sanctioned
+///   shard boundaries, so the per-region re-run is bit-identical to the
+///   batched one (the same invariance `--shard-regions` relies on).
+/// * `Quarantine` runs per-region slices from the start: the failing
+///   region is identified on its first attempt, surviving regions keep
+///   their outputs, and only the lost ordinals are dropped. A panicked
+///   region's pipeline is rebuilt before the next region; if that
+///   rebuild *also* fails the worker returns [`Guarded::Retired`].
 #[allow(clippy::too_many_arguments)]
 fn run_shard_guarded<F: PipelineFactory>(
     factory: &F,
@@ -181,86 +283,216 @@ fn run_shard_guarded<F: PipelineFactory>(
     regions: &[F::In],
     policy: FaultPolicy,
     sink: &TraceSink,
+    pulse: Option<&Pulse>,
 ) -> Result<Guarded<F::Out>> {
+    if matches!(policy, FaultPolicy::Quarantine) {
+        return run_shard_quarantine(factory, worker_id, pipeline, rebuilds, shard, regions, sink);
+    }
+
+    // Whole-slice first attempt (FailFast's only one).
+    pipeline.begin_shard(shard);
+    let f0 = sink.now_ns();
+    let err = match catch_unwind(AssertUnwindSafe(|| pipeline.run_shard(regions))) {
+        Ok(Ok(out)) => {
+            return Ok(Guarded::Done {
+                out,
+                retries: 0,
+                rerun_regions: 0,
+            });
+        }
+        Ok(Err(e)) => e,
+        Err(payload) => anyhow!(
+            "shard {shard} panicked on worker {worker_id} (attempt 1): {}",
+            panic_msg(&payload)
+        ),
+    };
+    sink.record(
+        f0,
+        sink.now_ns(),
+        TraceEvent::Fault {
+            shard: shard as u32,
+            attempt: 1,
+        },
+    );
+    let FaultPolicy::Retry { backoff, .. } = policy else {
+        return Err(err);
+    };
     let max_attempts = policy.max_attempts();
-    let mut attempt = 1u32;
-    loop {
+    if max_attempts <= 1 {
+        return Err(err.context(format!(
+            "shard {shard} still failing after {max_attempts} attempt(s)"
+        )));
+    }
+    sleep_backoff(backoff, pulse);
+    let r0 = sink.now_ns();
+    rebuild_pipeline(factory, worker_id, pipeline, rebuilds, shard, sink)?;
+    sink.record(
+        r0,
+        sink.now_ns(),
+        TraceEvent::Retry {
+            shard: shard as u32,
+            attempt: 1,
+        },
+    );
+    let mut attempt = 2u32;
+
+    // Narrowing pass: re-run each region alone so only the failing
+    // part(s) pay further retries. `attempt` stays shard-global, so the
+    // retry budget bounds total attempts exactly as before.
+    let mut outputs = Vec::new();
+    let mut metrics = PipelineMetrics::default();
+    let mut invocations = 0u64;
+    let mut rerun_regions = 0u64;
+    for (i, region) in regions.iter().enumerate() {
+        let part = i as u32;
+        loop {
+            pipeline.begin_shard(shard);
+            rerun_regions += 1;
+            let f0 = sink.now_ns();
+            let err = match catch_unwind(AssertUnwindSafe(|| {
+                pipeline.run_shard(std::slice::from_ref(region))
+            })) {
+                Ok(Ok(out)) => {
+                    outputs.extend(out.outputs);
+                    metrics.merge(&out.metrics);
+                    invocations += out.invocations;
+                    break;
+                }
+                Ok(Err(e)) => e,
+                Err(payload) => anyhow!(
+                    "part {part} of shard {shard} panicked on worker {worker_id} \
+                     (attempt {attempt}): {}",
+                    panic_msg(&payload)
+                ),
+            };
+            sink.record(
+                f0,
+                sink.now_ns(),
+                TraceEvent::PartFault {
+                    shard: shard as u32,
+                    part,
+                    attempt,
+                },
+            );
+            if attempt >= max_attempts {
+                return Err(err.context(format!(
+                    "shard {shard} still failing after {max_attempts} attempt(s)"
+                )));
+            }
+            sleep_backoff(backoff, pulse);
+            let r0 = sink.now_ns();
+            rebuild_pipeline(factory, worker_id, pipeline, rebuilds, shard, sink)?;
+            sink.record(
+                r0,
+                sink.now_ns(),
+                TraceEvent::PartRetry {
+                    shard: shard as u32,
+                    part,
+                    attempt,
+                },
+            );
+            attempt += 1;
+        }
+    }
+    Ok(Guarded::Done {
+        out: ShardOutput {
+            outputs,
+            metrics,
+            invocations,
+        },
+        retries: attempt - 1,
+        rerun_regions,
+    })
+}
+
+/// The `Quarantine` execution shape: per-region slices from the start,
+/// so a poisoned region is pinpointed on its first attempt and its
+/// healthy neighbours keep their outputs (the salvage that
+/// [`merge::RegionFolder`] turns into a [`merge::PartialRegion`] ledger
+/// for split regions). Never retries — each region gets exactly one
+/// shot, matching the policy's one-attempt contract.
+fn run_shard_quarantine<F: PipelineFactory>(
+    factory: &F,
+    worker_id: usize,
+    pipeline: &mut F::Worker,
+    rebuilds: &mut u64,
+    shard: usize,
+    regions: &[F::In],
+    sink: &TraceSink,
+) -> Result<Guarded<F::Out>> {
+    let mut outputs = Vec::new();
+    let mut metrics = PipelineMetrics::default();
+    let mut invocations = 0u64;
+    let mut lost: Vec<u32> = Vec::new();
+    let mut first_error: Option<String> = None;
+    for (i, region) in regions.iter().enumerate() {
+        let part = i as u32;
         pipeline.begin_shard(shard);
         let f0 = sink.now_ns();
-        let err = match catch_unwind(AssertUnwindSafe(|| pipeline.run_shard(regions))) {
+        let (err, panicked) = match catch_unwind(AssertUnwindSafe(|| {
+            pipeline.run_shard(std::slice::from_ref(region))
+        })) {
             Ok(Ok(out)) => {
-                return Ok(Guarded::Done {
-                    out,
-                    retries: attempt - 1,
-                });
+                outputs.extend(out.outputs);
+                metrics.merge(&out.metrics);
+                invocations += out.invocations;
+                continue;
             }
-            Ok(Err(e)) => e,
-            Err(payload) => anyhow!(
-                "shard {shard} panicked on worker {worker_id} (attempt {attempt}): {}",
-                panic_msg(&payload)
+            Ok(Err(e)) => (e, false),
+            Err(payload) => (
+                anyhow!(
+                    "part {part} of shard {shard} panicked on worker {worker_id}: {}",
+                    panic_msg(&payload)
+                ),
+                true,
             ),
         };
         sink.record(
             f0,
             sink.now_ns(),
-            TraceEvent::Fault {
+            TraceEvent::PartFault {
                 shard: shard as u32,
-                attempt,
+                part,
+                attempt: 1,
             },
         );
-        match policy {
-            FaultPolicy::FailFast => return Err(err),
-            FaultPolicy::Quarantine => {
-                return Ok(Guarded::Quarantined {
-                    error: format!("{err:#}"),
-                    attempts: attempt,
+        lost.push(part);
+        if first_error.is_none() {
+            first_error = Some(format!("{err:#}"));
+        }
+        // A panic may have unwound the pipeline mid-reset: replace it
+        // before touching the remaining regions. A rebuild that fails
+        // too leaves this worker pipeline-less — retire it rather than
+        // aborting the run (graceful N-1 degradation).
+        if panicked {
+            if let Err(e) = rebuild_pipeline(factory, worker_id, pipeline, rebuilds, shard, sink) {
+                return Ok(Guarded::Retired {
+                    error: format!("{e:#}"),
                 });
-            }
-            FaultPolicy::Retry { backoff, .. } => {
-                if attempt >= max_attempts {
-                    return Err(err.context(format!(
-                        "shard {shard} still failing after {max_attempts} attempt(s)"
-                    )));
-                }
-                if !backoff.is_zero() {
-                    std::thread::sleep(backoff);
-                }
-                // The failing pipeline may be corrupt mid-reset:
-                // replace it wholesale before the re-run.
-                let r0 = sink.now_ns();
-                let rebuilt =
-                    match catch_unwind(AssertUnwindSafe(|| factory.make_worker(worker_id))) {
-                        Ok(Ok(p)) => p,
-                        Ok(Err(e)) => {
-                            return Err(e.context(format!(
-                                "rebuilding worker {worker_id}'s pipeline to retry shard {shard}"
-                            )));
-                        }
-                        Err(payload) => {
-                            return Err(anyhow!(
-                                "worker {worker_id} panicked rebuilding its pipeline to \
-                                 retry shard {shard}: {}",
-                                panic_msg(&payload)
-                            ));
-                        }
-                    };
-                *pipeline = rebuilt;
-                *rebuilds += 1;
-                if sink.enabled() {
-                    pipeline.set_trace(sink.clone());
-                }
-                sink.record(
-                    r0,
-                    sink.now_ns(),
-                    TraceEvent::Retry {
-                        shard: shard as u32,
-                        attempt,
-                    },
-                );
-                attempt += 1;
             }
         }
     }
+    if lost.is_empty() {
+        return Ok(Guarded::Done {
+            out: ShardOutput {
+                outputs,
+                metrics,
+                invocations,
+            },
+            retries: 0,
+            rerun_regions: 0,
+        });
+    }
+    Ok(Guarded::Quarantined {
+        out: ShardOutput {
+            outputs,
+            metrics,
+            invocations,
+        },
+        lost,
+        error: first_error.unwrap_or_else(|| "quarantined".into()),
+        attempts: 1,
+    })
 }
 
 /// How a materialized run hands out shard indices.
@@ -310,6 +542,26 @@ impl ShardClaimer {
             }),
         }
     }
+
+    /// The pool pulse behind the deques, if this claimer has one (the
+    /// legacy cursor does not) — lets retry backoffs beat the watchdog.
+    fn pulse(&self) -> Option<std::sync::Arc<Pulse>> {
+        match self {
+            ShardClaimer::Cursor { .. } => None,
+            ShardClaimer::Deques(queues) => Some(queues.pulse()),
+        }
+    }
+
+    /// Hand a retiring worker's unfinished shard back to the pool.
+    /// Returns `false` when no surviving sibling can claim it (cursor
+    /// claimer, stealing disabled, or this was the last live worker) —
+    /// the caller must then abort by name instead.
+    fn retire(&self, shard: usize) -> bool {
+        match self {
+            ShardClaimer::Cursor { .. } => false,
+            ShardClaimer::Deques(queues) => queues.push_for_retirement(shard),
+        }
+    }
 }
 
 /// A materialized run's full yield: shard results (in shard order),
@@ -329,6 +581,10 @@ pub struct PoolRun<T> {
     /// runs have no submit/emit stamps, so the end-to-end histogram and
     /// flow counters stay zero here.
     pub metrics: Option<LaneMetrics>,
+    /// Ids of workers that retired mid-run (a `Quarantine` rebuild
+    /// failed, their remaining work was re-dealt to survivors), sorted.
+    /// Empty on every healthy run.
+    pub retired: Vec<usize>,
 }
 
 /// A streaming run's yield: results went to the caller's `emit` sink,
@@ -344,6 +600,10 @@ pub struct StreamRun {
     /// submit/stall/emit lane), exact-folded; `Some` only when the pool
     /// was metered ([`WorkerPool::with_metrics`]).
     pub metrics: Option<LaneMetrics>,
+    /// Ids of workers that retired mid-run (a `Quarantine` rebuild
+    /// failed, their unfinished shard was re-dealt to survivors),
+    /// sorted. Empty on every healthy run.
+    pub retired: Vec<usize>,
 }
 
 /// Default watchdog deadline for the pool's blocking waits: long enough
@@ -478,10 +738,12 @@ impl WorkerPool {
                 traces: Vec::new(),
                 elapsed: 0.0,
                 metrics: self.metrics.map(|_| LaneMetrics::default()),
+                retired: Vec::new(),
             });
         }
         let threads = self.workers.min(plan.len());
         let claimer = ShardClaimer::for_plan(self.claim, threads, plan.len());
+        let retired: Mutex<Vec<usize>> = Mutex::new(Vec::new());
         let stop = AtomicBool::new(false);
         let traces: Mutex<Vec<WorkerTrace>> = Mutex::new(Vec::new());
         let lanes: Mutex<LaneMetrics> = Mutex::new(LaneMetrics::default());
@@ -531,6 +793,7 @@ impl WorkerPool {
                 pipeline.set_trace(sink.clone());
             }
             let claim_t0 = Instant::now();
+            let pulse = claimer.pulse();
             let mut done = Vec::new();
             let mut rebuilds = 0u64;
             while !stop.load(Ordering::Relaxed) {
@@ -559,10 +822,15 @@ impl WorkerPool {
                     &stream[range.clone()],
                     fault,
                     &sink,
+                    pulse.as_deref(),
                 );
                 let took = t0.elapsed();
                 match guarded {
-                    Ok(Guarded::Done { out, retries }) => {
+                    Ok(Guarded::Done {
+                        out,
+                        retries,
+                        rerun_regions,
+                    }) => {
                         sink.record(
                             s0,
                             sink.now_ns(),
@@ -589,28 +857,49 @@ impl WorkerPool {
                             pipelines_built: pipeline.pipelines_built() + rebuilds,
                             retries,
                             fault: None,
+                            lost: Vec::new(),
+                            rerun_regions,
                             submit_ns: 0,
                         });
                     }
-                    Ok(Guarded::Quarantined { error, attempts }) => {
+                    Ok(Guarded::Quarantined {
+                        out,
+                        lost,
+                        error,
+                        attempts,
+                    }) => {
                         if hub.enabled() {
                             hub.record_shard(range.len() as u64, stolen, 0, took.as_nanos() as u64);
-                            hub.record_faults(u64::from(attempts), u64::from(attempts - 1));
+                            hub.record_faults(lost.len() as u64, u64::from(attempts - 1));
                         }
                         done.push(ShardResult {
                             shard,
                             worker: worker_id,
                             regions: range.len(),
                             stolen,
-                            outputs: Vec::new(),
-                            metrics: PipelineMetrics::default(),
-                            invocations: 0,
+                            outputs: out.outputs,
+                            metrics: out.metrics,
+                            invocations: out.invocations,
                             elapsed: took.as_secs_f64(),
                             pipelines_built: pipeline.pipelines_built() + rebuilds,
                             retries: attempts - 1,
                             fault: Some(error),
+                            lost,
+                            rerun_regions: 0,
                             submit_ns: 0,
                         });
+                    }
+                    Ok(Guarded::Retired { error }) => {
+                        if claimer.retire(shard) {
+                            lock_ignore_poison(&retired).push(worker_id);
+                            break;
+                        }
+                        stop.store(true, Ordering::Relaxed);
+                        return Err(anyhow!(
+                            "worker {worker_id} lost its pipeline on shard {shard} and no \
+                             surviving worker can take over (stealing disabled or pool of \
+                             one): {error}"
+                        ));
                     }
                     Err(e) => {
                         stop.store(true, Ordering::Relaxed);
@@ -679,11 +968,14 @@ impl WorkerPool {
         trace_lanes.sort_by_key(|t| t.worker);
         let metrics =
             mspec.map(|_| lanes.into_inner().unwrap_or_else(|e| e.into_inner()));
+        let mut retired = retired.into_inner().unwrap_or_else(|e| e.into_inner());
+        retired.sort_unstable();
         Ok(PoolRun {
             results: all,
             traces: trace_lanes,
             elapsed,
             metrics,
+            retired,
         })
     }
 
@@ -770,6 +1062,7 @@ impl WorkerPool {
             CompletionBuffer::new().with_pulse(queues.pulse());
         let containers: ContainerPool<F::In> = ContainerPool::new();
         let stop = AtomicBool::new(false);
+        let retired: Mutex<Vec<usize>> = Mutex::new(Vec::new());
         let traces: Mutex<Vec<WorkerTrace>> = Mutex::new(Vec::new());
         let spec = self.trace;
         // every worker + the driver rendezvous after prewarm
@@ -797,11 +1090,11 @@ impl WorkerPool {
                     let (queues, completion) = (&queues, &completion);
                     let (containers, stop) = (&containers, &stop);
                     let (barrier, traces) = (&barrier, &traces);
-                    let lanes = &lanes;
+                    let (lanes, retired) = (&lanes, &retired);
                     scope.spawn(move || {
                         stream_worker(
                             wid, factory, pool, queues, completion, containers, stop, barrier,
-                            traces, lanes,
+                            traces, lanes, retired,
                         )
                     })
                 })
@@ -824,6 +1117,7 @@ impl WorkerPool {
                 hb_stolen: 0,
                 hb_faults: 0,
                 watchdog: self.watchdog,
+                fault: pool.fault,
             };
             let mut planner: IngestPlanner<F::In> = IngestPlanner::new(granule);
             // all pipelines are built once this returns; the measured
@@ -874,10 +1168,13 @@ impl WorkerPool {
         let metrics = self
             .metrics
             .map(|_| lanes.into_inner().unwrap_or_else(|e| e.into_inner()));
+        let mut retired = retired.into_inner().unwrap_or_else(|e| e.into_inner());
+        retired.sort_unstable();
         Ok(StreamRun {
             traces: trace_lanes,
             elapsed,
             metrics,
+            retired,
         })
     }
 }
@@ -905,7 +1202,7 @@ where
         }
         driver.pump()?;
 
-        let Some(region) = source.next_region() else {
+        let Some(region) = pull_region(source, driver)? else {
             break;
         };
         // the driver is alive and pulling: beat the pulse so worker
@@ -926,6 +1223,44 @@ where
     // end of stream: no more work will be dealt; let idle workers exit
     driver.queues.close();
     driver.drain_rest()
+}
+
+/// One source pull under the pool's fault policy: a transient
+/// [`RegionSource::try_next_region`] error is retried with the same
+/// bounded backoff budget as a compute fault (the backoff beats the pool
+/// pulse, so worker claim watchdogs never read a source retry as a
+/// stall). Under `FailFast`/`Quarantine` — or once the budget is spent —
+/// the error aborts ingest by name; a short prefix is never merged as if
+/// it were the whole stream.
+fn pull_region<S, I, O, K>(
+    source: &mut S,
+    driver: &mut StreamDriver<'_, I, O, K>,
+) -> Result<Option<I>>
+where
+    S: RegionSource<Region = I>,
+    K: FnMut(ShardResult<O>) -> Result<()>,
+{
+    let FaultPolicy::Retry { backoff, .. } = driver.fault else {
+        return source.try_next_region();
+    };
+    let max_attempts = driver.fault.max_attempts();
+    let mut attempt = 1u32;
+    loop {
+        let err = match source.try_next_region() {
+            Ok(region) => return Ok(region),
+            Err(e) => e,
+        };
+        if attempt >= max_attempts {
+            return Err(err.context(format!(
+                "ingest source still failing after {max_attempts} attempt(s)"
+            )));
+        }
+        driver.hub.record_source_retry();
+        let pulse = driver.queues.pulse();
+        sleep_backoff(backoff, Some(&*pulse));
+        driver.queues.beat();
+        attempt += 1;
+    }
 }
 
 /// Driver-side state for a streaming run: budget accounting, the ordered
@@ -953,6 +1288,10 @@ struct StreamDriver<'s, I, O, K> {
     hb_stolen: u64,
     hb_faults: u64,
     watchdog: Duration,
+    // The pool's fault policy, echoed here so ingest-side source pulls
+    // share the compute retry budget (`Retry` retries transient source
+    // errors; `FailFast`/`Quarantine` propagate them immediately).
+    fault: FaultPolicy,
 }
 
 impl<I, O, K> StreamDriver<'_, I, O, K>
@@ -1138,6 +1477,7 @@ fn stream_worker<F: PipelineFactory>(
     barrier: &Barrier,
     traces: &Mutex<Vec<WorkerTrace>>,
     lanes: &Mutex<LaneMetrics>,
+    retired: &Mutex<Vec<usize>>,
 ) {
     let current_shard = AtomicUsize::new(usize::MAX);
     let _guard = PanicSignal {
@@ -1181,6 +1521,7 @@ fn stream_worker<F: PipelineFactory>(
         pipeline.set_trace(sink.clone());
     }
     let mut rebuilds = 0u64;
+    let worker_pulse = queues.pulse();
     while !stop.load(Ordering::Relaxed) {
         let (task, stolen) = match queues.claim(worker_id, pool.watchdog) {
             Ok(Claim::Task {
@@ -1216,9 +1557,14 @@ fn stream_worker<F: PipelineFactory>(
             &task.regions,
             pool.fault,
             &sink,
+            Some(&*worker_pulse),
         );
-        let (outputs, metrics, invocations, retries, fault) = match guarded {
-            Ok(Guarded::Done { out, retries }) => {
+        let (outputs, metrics, invocations, retries, fault, lost, rerun_regions) = match guarded {
+            Ok(Guarded::Done {
+                out,
+                retries,
+                rerun_regions,
+            }) => {
                 sink.record(
                     s0,
                     sink.now_ns(),
@@ -1228,15 +1574,50 @@ fn stream_worker<F: PipelineFactory>(
                         stolen,
                     },
                 );
-                (out.outputs, out.metrics, out.invocations, retries, None)
+                (
+                    out.outputs,
+                    out.metrics,
+                    out.invocations,
+                    retries,
+                    None,
+                    Vec::new(),
+                    rerun_regions,
+                )
             }
-            Ok(Guarded::Quarantined { error, attempts }) => (
-                Vec::new(),
-                PipelineMetrics::default(),
-                0,
+            Ok(Guarded::Quarantined {
+                out,
+                lost,
+                error,
+                attempts,
+            }) => (
+                out.outputs,
+                out.metrics,
+                out.invocations,
                 attempts - 1,
                 Some(error),
+                lost,
+                0,
             ),
+            Ok(Guarded::Retired { error }) => {
+                // The worker has no pipeline left. Hand the whole task
+                // back untouched — a survivor re-runs it from scratch,
+                // bit-identically — and leave the pool quietly (the
+                // PanicSignal guard sees no panic; traces and metrics
+                // flush below like any orderly exit).
+                current_shard.store(usize::MAX, Ordering::Relaxed);
+                let index = task.index;
+                if queues.push_for_retirement(task) {
+                    lock_ignore_poison(retired).push(worker_id);
+                    break;
+                }
+                stop.store(true, Ordering::Relaxed);
+                completion.fail(anyhow!(
+                    "worker {worker_id} lost its pipeline on streaming shard {index} and \
+                     no surviving worker can take over (stealing disabled or pool of \
+                     one): {error}"
+                ));
+                return;
+            }
             Err(e) => {
                 stop.store(true, Ordering::Relaxed);
                 completion.fail(e.context(format!(
@@ -1249,10 +1630,11 @@ fn stream_worker<F: PipelineFactory>(
         let took = t0.elapsed();
         if hub.enabled() {
             hub.record_shard(task.regions.len() as u64, stolen, queue_wait, took.as_nanos() as u64);
-            // `retries` already folds the quarantine convention (attempts
-            // − 1), so faults = retries + 1 when a fault record survives.
+            // Done shards count one fault per retry; quarantined shards
+            // one per lost region (`retries` is 0 there, so the terms
+            // never double-count).
             hub.record_faults(
-                u64::from(retries) + u64::from(fault.is_some()),
+                u64::from(retries) + lost.len() as u64,
                 u64::from(retries),
             );
         }
@@ -1268,6 +1650,8 @@ fn stream_worker<F: PipelineFactory>(
             pipelines_built: pipeline.pipelines_built() + rebuilds,
             retries,
             fault,
+            lost,
+            rerun_regions,
             submit_ns: task.submit_ns,
         };
         // Hand each region back through the factory (a pooled factory
@@ -1684,12 +2068,21 @@ mod tests {
         assert_eq!(results.len(), plan.len(), "quarantine still fills every slot");
         for r in &results {
             if r.shard == 2 {
-                assert!(r.outputs.is_empty());
+                // part-granular: only the region the shot hit (the
+                // first per-region attempt) is lost; survivors keep
+                // their rows
+                assert_eq!(r.lost, vec![0], "exactly the poisoned part is named");
+                assert_eq!(
+                    r.outputs,
+                    stream[plan.range(2)][1..].to_vec(),
+                    "surviving regions keep their outputs"
+                );
                 let msg = r.fault.as_deref().expect("shard 2 is quarantined");
                 assert!(msg.contains("injected fault"), "{msg}");
             } else {
                 assert_eq!(r.outputs, stream[plan.range(r.shard)].to_vec());
                 assert!(r.fault.is_none());
+                assert!(r.lost.is_empty());
             }
         }
     }
@@ -1778,8 +2171,9 @@ mod tests {
         let quarantined: Vec<usize> =
             slots.iter().filter(|s| s.1).map(|s| s.0).collect();
         assert_eq!(quarantined, vec![4], "exactly the injected shard is quarantined");
-        // shard 4 spans regions 8..10, the only items missing
-        let expect: Vec<u32> = (0..100u32).filter(|&v| !(8..10).contains(&v)).collect();
+        // shard 4 spans regions 8..10; the part-granular quarantine
+        // drops only region 8 (the part the shot hit) and salvages 9
+        let expect: Vec<u32> = (0..100u32).filter(|&v| v != 8).collect();
         assert_eq!(got, expect);
     }
 

@@ -288,9 +288,13 @@ impl ShardedRunner {
 
     /// Wrap a run's folded metrics lane into a
     /// [`MetricsReport`](crate::metrics::MetricsReport) on the finished
-    /// report (no-op when the run was unmetered).
+    /// report (no-op when the run was unmetered). Callers must have
+    /// already stamped the salvage ledger and retired workers onto the
+    /// report — the fault-domain counters are folded from it here.
     fn attach_metrics<T>(report: &mut ExecReport<T>, workers: usize, lanes: Option<LaneMetrics>) {
-        if let Some(totals) = lanes {
+        if let Some(mut totals) = lanes {
+            totals.partial_regions = report.partial_regions.len() as u64;
+            totals.dead_workers = report.per_worker.iter().filter(|w| w.dead).count() as u64;
             report.metrics_report = Some(MetricsReport {
                 workers,
                 elapsed: report.elapsed,
@@ -321,6 +325,7 @@ impl ShardedRunner {
         let planning = t0.elapsed().as_secs_f64();
         let run = self.pool().run_collect(factory, stream, &plan)?;
         let mut report = merge_results(run.results, planning + run.elapsed);
+        report.mark_retired(&run.retired);
         if self.cfg.trace.is_some() {
             Self::attach_trace(&mut report, run.traces);
         }
@@ -377,15 +382,19 @@ impl ShardedRunner {
         let run = self.pool().run_collect(factory, &parts, &plan)?;
         let split_regions = queue.regions_split();
         let mut results = run.results;
+        let mut partials = Vec::new();
         if record {
             let mut folder = RegionFolder::new(Rc::new(RefCell::new(queue)));
             for r in &mut results {
                 folder.fold_shard(factory, r)?;
             }
             folder.finish()?;
+            partials = folder.take_partials();
         }
         let mut report = merge_results(results, planning + run.elapsed);
         report.split_regions = split_regions;
+        report.partial_regions = partials;
+        report.mark_retired(&run.retired);
         if self.cfg.trace.is_some() {
             Self::attach_trace(&mut report, run.traces);
         }
@@ -445,6 +454,7 @@ impl ShardedRunner {
                 sink(r)
             })?;
         let mut report = builder.finish(run.elapsed);
+        report.mark_retired(&run.retired);
         if self.cfg.trace.is_some() {
             Self::attach_trace(&mut report, run.traces);
         }
@@ -486,11 +496,15 @@ impl ShardedRunner {
                 builder.add_stats(&r);
                 sink(r)
             })?;
-        if let Some(folder) = &folder {
+        if let Some(folder) = folder.as_mut() {
             folder.finish()?;
         }
         let mut report = builder.finish(run.elapsed);
         report.split_regions = queue.borrow().regions_split();
+        if let Some(folder) = folder.as_mut() {
+            report.partial_regions = folder.take_partials();
+        }
+        report.mark_retired(&run.retired);
         if self.cfg.trace.is_some() {
             Self::attach_trace(&mut report, run.traces);
         }

@@ -188,17 +188,11 @@ impl<'f, F: PipelineFactory, S: RegionSource<Region = F::In>> SplitSource<'f, F,
     }
 }
 
-impl<F: PipelineFactory, S: RegionSource<Region = F::In>> RegionSource for SplitSource<'_, F, S> {
-    type Region = F::In;
-
-    fn next_region(&mut self) -> Option<F::In> {
-        if let Some(part) = self.pending.pop_front() {
-            return Some(part);
-        }
-        if self.error.is_some() {
-            return None;
-        }
-        let region = self.inner.next_region()?;
+impl<F: PipelineFactory, S: RegionSource<Region = F::In>> SplitSource<'_, F, S> {
+    /// Post-pull half of the pull path: register the region with the
+    /// queue, cutting it first if oversized. Split failures stash into
+    /// `self.error` (surfaced by `close`) and end the stream.
+    fn admit(&mut self, region: F::In) -> Option<F::In> {
         if self.factory.weight(&region) <= self.max_items {
             self.queue.borrow_mut().push_region(1);
             return Some(region);
@@ -223,6 +217,36 @@ impl<F: PipelineFactory, S: RegionSource<Region = F::In>> RegionSource for Split
                 None
             }
         }
+    }
+}
+
+impl<F: PipelineFactory, S: RegionSource<Region = F::In>> RegionSource for SplitSource<'_, F, S> {
+    type Region = F::In;
+
+    fn next_region(&mut self) -> Option<F::In> {
+        if let Some(part) = self.pending.pop_front() {
+            return Some(part);
+        }
+        if self.error.is_some() {
+            return None;
+        }
+        let region = self.inner.next_region()?;
+        self.admit(region)
+    }
+
+    fn try_next_region(&mut self) -> Result<Option<F::In>> {
+        if let Some(part) = self.pending.pop_front() {
+            return Ok(Some(part));
+        }
+        if self.error.is_some() {
+            return Ok(None);
+        }
+        // A transient inner failure propagates without touching the
+        // split queue, so the driver's retried pull resumes cleanly.
+        let Some(region) = self.inner.try_next_region()? else {
+            return Ok(None);
+        };
+        Ok(self.admit(region))
     }
 
     fn size_hint(&self) -> (usize, Option<usize>) {

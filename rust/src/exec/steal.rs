@@ -107,6 +107,11 @@ struct QueuesInner<W> {
     deques: Vec<VecDeque<W>>,
     next_push: usize,
     closed: bool,
+    // Workers still inside their claim loop. Decremented under this
+    // same lock the moment a claim observes `Done` (or a worker
+    // retires), so a retiring worker can tell — race-free — whether any
+    // surviving sibling will ever look at the deques again.
+    live: usize,
 }
 
 /// The deque set. `W` is the unit of claimable work: a shard index for
@@ -128,6 +133,7 @@ impl<W> StealQueues<W> {
                 deques: (0..workers.max(1)).map(|_| VecDeque::new()).collect(),
                 next_push: 0,
                 closed: false,
+                live: workers.max(1),
             }),
             work_cv: Condvar::new(),
             steal,
@@ -207,6 +213,10 @@ impl<W> StealQueues<W> {
                 }
             }
             if q.closed {
+                // Leaving the claim loop for good: deregister under the
+                // lock, so retirement hand-offs never target a worker
+                // that has already decided to exit.
+                q.live = q.live.saturating_sub(1);
                 return Ok(Claim::Done);
             }
             let beats = self.pulse.count();
@@ -237,6 +247,44 @@ impl<W> StealQueues<W> {
     /// Units currently queued across all deques.
     pub fn queued(&self) -> usize {
         lock_ignore_poison(&self.inner).deques.iter().map(VecDeque::len).sum()
+    }
+
+    /// Whether cross-deque stealing is enabled — a retiring worker may
+    /// only hand its work back when a sibling can actually reach it.
+    pub fn steals_enabled(&self) -> bool {
+        self.steal
+    }
+
+    /// Number of worker deques.
+    pub fn workers(&self) -> usize {
+        lock_ignore_poison(&self.inner).deques.len()
+    }
+
+    /// A retiring worker hands its unfinished unit back to the pool.
+    /// Atomically deregisters the caller from the live set and, **iff**
+    /// at least one surviving sibling is still in its claim loop (and
+    /// stealing is enabled, so the sibling can reach any deque), pushes
+    /// the unit and wakes the sleepers — even after [`close`]: claims
+    /// check the deques before the closed flag, so handed-back work is
+    /// always drained before `Done`. Returns `false` when no survivor
+    /// can ever claim the unit (no-steal mode, pool of one, or everyone
+    /// else already exited) — the caller must abort by name instead of
+    /// stranding the work.
+    ///
+    /// [`close`]: StealQueues::close
+    pub fn push_for_retirement(&self, work: W) -> bool {
+        let mut q = lock_ignore_poison(&self.inner);
+        q.live = q.live.saturating_sub(1);
+        if !self.steal || q.live == 0 {
+            return false;
+        }
+        let target = q.next_push;
+        q.next_push = (q.next_push + 1) % q.deques.len();
+        q.deques[target].push_back(work);
+        drop(q);
+        self.pulse.beat();
+        self.work_cv.notify_all();
+        true
     }
 }
 
@@ -496,6 +544,26 @@ mod tests {
                 Claim::Done => panic!("queues were never closed"),
             }
         });
+    }
+
+    #[test]
+    fn retirement_handoff_reaches_a_live_sibling_then_refuses() {
+        let q: StealQueues<u32> = StealQueues::new(2, true);
+        q.close();
+        // worker 1 retires while worker 0 is still in its claim loop:
+        // the hand-off lands even though the queues are already closed
+        assert!(q.push_for_retirement(9));
+        assert_eq!(drain_claims(&q, 0), vec![(9, false)]);
+        // worker 0 has now observed Done: nobody is left to claim
+        assert!(!q.push_for_retirement(8), "no survivor remains");
+    }
+
+    #[test]
+    fn retirement_handoff_refuses_without_stealing() {
+        // in no-steal mode a sibling can never reach the retired
+        // worker's deque, so the hand-off must refuse
+        let q: StealQueues<u32> = StealQueues::new(2, false);
+        assert!(!q.push_for_retirement(9));
     }
 
     #[test]

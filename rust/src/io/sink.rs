@@ -28,7 +28,10 @@
 //! publish atomically: records stream into `<path>.tmp`
 //! ([`super::tmp_path`]) and `finish` renames the flushed file into
 //! place — an aborted or faulted run leaves the previous artifact at
-//! `path` untouched instead of a half-written replacement.
+//! `path` untouched instead of a half-written replacement. A sink
+//! dropped before `finish` published (the run errored or panicked
+//! mid-stream) removes its own `.tmp` sibling, so faulted runs leave
+//! no stale staging files behind.
 //!
 //! [`ShardedRunner::run_stream_into`]: crate::exec::ShardedRunner::run_stream_into
 //! [`ShardedRunner::run_stream_with`]: crate::exec::ShardedRunner::run_stream_with
@@ -142,9 +145,25 @@ impl BinRecord for TaxiPair {
     }
 }
 
+/// `(tmp, final)` publication state for a file-backed sink. While the
+/// pair is live the sink is still staging into `<path>.tmp`; dropping
+/// the guard before `finish` published it removes the unpublished tmp
+/// (mirroring `write_rgn_file`'s error path), so a run that errors or
+/// panics mid-stream never leaves a stale `.tmp` sibling behind.
+#[derive(Default)]
+struct PublishGuard(Option<(PathBuf, PathBuf)>);
+
+impl Drop for PublishGuard {
+    fn drop(&mut self) {
+        if let Some((tmp, _)) = self.0.take() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+    }
+}
+
 /// Rename a finished `.tmp` sink file over its final name.
-fn publish_sink(publish: &mut Option<(PathBuf, PathBuf)>) -> Result<()> {
-    if let Some((tmp, path)) = publish.take() {
+fn publish_sink(publish: &mut PublishGuard) -> Result<()> {
+    if let Some((tmp, path)) = publish.0.take() {
         std::fs::rename(&tmp, &path).with_context(|| {
             format!("publishing {} as {}", tmp.display(), path.display())
         })?;
@@ -157,8 +176,10 @@ pub struct JsonlSink<W: Write> {
     out: W,
     /// Reusable line buffer.
     line: String,
-    /// `(tmp, final)` for file sinks: rename on `finish`.
-    publish: Option<(PathBuf, PathBuf)>,
+    /// `(tmp, final)` for file sinks: rename on `finish`, remove the
+    /// tmp on drop if never published. Declared after `out` so the
+    /// writer flushes and closes before the guard touches the file.
+    publish: PublishGuard,
     records: u64,
     bytes: u64,
 }
@@ -173,7 +194,7 @@ impl JsonlSink<BufWriter<File>> {
         let file = File::create(&tmp)
             .with_context(|| format!("creating result file {}", tmp.display()))?;
         let mut sink = JsonlSink::new(BufWriter::new(file));
-        sink.publish = Some((tmp, path.to_path_buf()));
+        sink.publish = PublishGuard(Some((tmp, path.to_path_buf())));
         Ok(sink)
     }
 }
@@ -184,7 +205,7 @@ impl<W: Write> JsonlSink<W> {
         JsonlSink {
             out,
             line: String::new(),
-            publish: None,
+            publish: PublishGuard::default(),
             records: 0,
             bytes: 0,
         }
@@ -235,8 +256,10 @@ pub struct BinarySink<W: Write> {
     out: W,
     buf: Vec<u8>,
     header_written: bool,
-    /// `(tmp, final)` for file sinks: rename on `finish`.
-    publish: Option<(PathBuf, PathBuf)>,
+    /// `(tmp, final)` for file sinks: rename on `finish`, remove the
+    /// tmp on drop if never published. Declared after `out` so the
+    /// writer flushes and closes before the guard touches the file.
+    publish: PublishGuard,
     records: u64,
     bytes: u64,
 }
@@ -251,7 +274,7 @@ impl BinarySink<BufWriter<File>> {
         let file = File::create(&tmp)
             .with_context(|| format!("creating result file {}", tmp.display()))?;
         let mut sink = BinarySink::new(BufWriter::new(file));
-        sink.publish = Some((tmp, path.to_path_buf()));
+        sink.publish = PublishGuard(Some((tmp, path.to_path_buf())));
         Ok(sink)
     }
 }
@@ -263,7 +286,7 @@ impl<W: Write> BinarySink<W> {
             out,
             buf: Vec::new(),
             header_written: false,
-            publish: None,
+            publish: PublishGuard::default(),
             records: 0,
             bytes: 0,
         }
@@ -422,6 +445,51 @@ mod tests {
         assert!(!tmp.exists(), "no stale .tmp after publish");
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text, "{\"region\":0,\"sum\":1.5}\n");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn dropped_jsonl_sink_removes_its_unpublished_tmp() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("regatta_sink_drop_{}.jsonl", std::process::id()));
+        let tmp = crate::io::tmp_path(&path);
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut sink = JsonlSink::create(&path).unwrap();
+            sink.write_batch(&[(0u64, 1.5f64)]).unwrap();
+            assert!(tmp.exists(), "records staged into the .tmp sibling");
+            // dropped without finish: the faulted-run path
+        }
+        assert!(!tmp.exists(), "drop removes the unpublished tmp");
+        assert!(!path.exists(), "final name never appears");
+    }
+
+    #[test]
+    fn dropped_binary_sink_removes_its_unpublished_tmp() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("regatta_sink_drop_{}.bin", std::process::id()));
+        let tmp = crate::io::tmp_path(&path);
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut sink = BinarySink::create(&path).unwrap();
+            sink.write_batch(&[(0u64, 1.5f64)]).unwrap();
+            assert!(tmp.exists(), "records staged into the .tmp sibling");
+        }
+        assert!(!tmp.exists(), "drop removes the unpublished tmp");
+        assert!(!path.exists(), "final name never appears");
+    }
+
+    #[test]
+    fn finished_sink_drop_leaves_the_published_file_alone() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("regatta_sink_pub_drop_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut sink = JsonlSink::create(&path).unwrap();
+            sink.write_batch(&[(0u64, 1.5f64)]).unwrap();
+            ResultSink::<(u64, f64)>::finish(&mut sink).unwrap();
+        }
+        assert!(path.exists(), "published artifact survives the drop");
         std::fs::remove_file(&path).unwrap();
     }
 }

@@ -12,7 +12,7 @@
 //!                   [--input trips.txt] [--output pairs.jsonl|.bin]
 //! regatta gen sum   --out data.rgn  [--items N] [--region-*] [--seed S]
 //! regatta gen taxi  --out trips.txt [--lines N] [--replicate K] [--seed S]
-//! regatta rgn verify <data.rgn>     # per-frame checksum + footer audit
+//! regatta rgn verify <data.rgn> [--json]   # per-frame checksum + footer audit
 //! regatta bench <fig6|fig7|fig8|scale|hotpath|ingest|io|faults|latency|penalty|width|lanectx>
 //! regatta trace summarize --input out.trace.json [--buckets N]
 //! regatta metrics summarize --input out.metrics.json
@@ -56,7 +56,7 @@ USAGE:
                     [--workers K] [--shards-per-worker S]
                     [--stream] [--ingest-buffer R] [--stats] [--verify]
                     [--fault-policy fail-fast|retry|quarantine] [--fault-retries N]
-                    [--watchdog-secs S] [--max-region-items N]
+                    [--fault-backoff-ms N] [--watchdog-secs S] [--max-region-items N]
                     [--input data.rgn] [--output results.jsonl|.bin]
                     [--trace out.trace.json]
                     [--metrics out.json [--metrics-format json|prom]]
@@ -67,7 +67,7 @@ USAGE:
                     [--workers K] [--shards-per-worker S]
                     [--stream] [--ingest-buffer R] [--stats]
                     [--fault-policy fail-fast|retry|quarantine] [--fault-retries N]
-                    [--watchdog-secs S] [--max-region-items N]
+                    [--fault-backoff-ms N] [--watchdog-secs S] [--max-region-items N]
                     [--input trips.txt] [--output pairs.jsonl|.bin]
                     [--trace out.trace.json]
                     [--metrics out.json [--metrics-format json|prom]]
@@ -75,7 +75,7 @@ USAGE:
   regatta gen sum   --out data.rgn  [--items N] [--region-size N | --region-max N |
                     --region-skew N] [--seed S]
   regatta gen taxi  --out trips.txt [--lines N] [--replicate K] [--seed S]
-  regatta rgn verify <data.rgn>
+  regatta rgn verify <data.rgn> [--json]
   regatta bench <fig6|fig7|fig8|scale|penalty|width|lanectx>
                     [--items N] [--width W] [--backend xla|native]
                     [--workers K1,K2,...] [--json FILE]
@@ -118,10 +118,17 @@ USAGE:
   --fault-policy picks what a worker does when a shard panics or errors:
   fail-fast (default) aborts the run naming worker and shard; retry
   rebuilds the worker's pipeline and re-runs the shard up to
-  --fault-retries times (outputs stay bit-identical to a fault-free
-  run); quarantine records the shard in the report and keeps going.
-  --watchdog-secs bounds how long the pool waits without any progress
-  before failing with a stall diagnosis instead of hanging.
+  --fault-retries times, narrowing to single-region re-runs after the
+  first whole-shard failure so only the poisoned part repeats (outputs
+  stay bit-identical to a fault-free run); quarantine drops only the
+  poisoned parts, salvaging each region's surviving partial aggregates
+  into the report's partial-region ledger (--stats prints it), and
+  retires a worker whose rebuilt pipeline fails again, re-dealing its
+  work to survivors. --fault-backoff-ms N waits N ms between attempts
+  (also applied to transient ingest-source failures) without tripping
+  the watchdog. --watchdog-secs bounds how long the pool waits without
+  any progress before failing with a stall diagnosis instead of
+  hanging.
 
   --max-region-items N splits regions heavier than N items into
   sub-shards that different workers run concurrently, re-folding the
@@ -129,6 +136,12 @@ USAGE:
   the fused enumerated sum; stages with order-dependent region state
   (taxi, two-stage sum) refuse with a named error. 0 (default) never
   splits.
+
+  rgn verify audits a .rgn container and exits 0 when it verifies
+  clean, 2 when the container was read but failed verification
+  (corrupt frames or footer mismatch), and 1 when the file could not
+  be audited at all (missing, unreadable, bad usage). --json prints
+  one machine-readable report object instead of the human summary.
 
   --metrics FILE meters the run with per-worker counters and
   log2-bucketed latency histograms — per-region submit->emit e2e
@@ -190,8 +203,8 @@ fn config_to_args(path: &str) -> Result<Args> {
         "items", "region-size", "region-max", "region-skew", "mode", "shape", "width",
         "backend", "threshold", "workers", "shards-per-worker", "ingest-buffer", "lines",
         "replicate", "variant", "policy", "input", "output", "trace", "fault-policy",
-        "fault-retries", "watchdog-secs", "max-region-items", "metrics", "metrics-format",
-        "progress-secs",
+        "fault-retries", "fault-backoff-ms", "watchdog-secs", "max-region-items", "metrics",
+        "metrics-format", "progress-secs",
     ] {
         if let Some(v) = cfg.get("run", &key.replace('-', "_")) {
             let vs = match v {
@@ -221,11 +234,15 @@ fn policy(args: &Args) -> Result<regatta::prelude::Policy> {
     args.str_or("policy", "greedy").parse()
 }
 
-/// `--fault-policy` / `--fault-retries` into a [`FaultPolicy`].
+/// `--fault-policy` / `--fault-retries` / `--fault-backoff-ms` into a
+/// [`FaultPolicy`].
 fn fault_policy(args: &Args) -> Result<FaultPolicy> {
     Ok(match args.str_or("fault-policy", "fail-fast").as_str() {
         "fail-fast" => FaultPolicy::FailFast,
-        "retry" => FaultPolicy::retry(args.get_or("fault-retries", 3)?),
+        "retry" => FaultPolicy::Retry {
+            max_attempts: args.get_or("fault-retries", 3)?,
+            backoff: Duration::from_millis(args.get_or("fault-backoff-ms", 0)?),
+        },
         "quarantine" => FaultPolicy::Quarantine,
         other => bail!("unknown fault policy {other:?} (use fail-fast|retry|quarantine)"),
     })
@@ -399,10 +416,24 @@ fn print_exec_stats<T>(report: &regatta::exec::ExecReport<T>) {
             report.split_regions
         );
     }
+    if report.rerun_regions > 0 {
+        println!(
+            "{} single-region re-run(s) during part-granular retry narrowing",
+            report.rerun_regions
+        );
+    }
     print!("{}", report.worker_table());
+    let retired = report.per_worker.iter().filter(|w| w.dead).count();
+    if retired > 0 {
+        println!("{retired} worker(s) retired mid-run; their work was re-dealt to survivors");
+    }
     let faults = report.fault_table();
     if !faults.is_empty() {
-        print!("quarantined shards:\n{faults}");
+        print!("quarantined work:\n{faults}");
+    }
+    let partials = report.partial_table();
+    if !partials.is_empty() {
+        print!("partially salvaged regions (no output row emitted):\n{partials}");
     }
 }
 
@@ -834,9 +865,32 @@ fn run_gen(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `regatta rgn verify <file>`: audit a `.rgn` container — per-frame
-/// checksums plus footer reconciliation — and exit nonzero if anything
-/// is corrupt.
+/// Escape a string into a JSON literal (ASCII-only, matching the
+/// vendored parser's expectations).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 || !c.is_ascii() => {
+                out.push_str(&format!("\\u{:04x}", (c as u32).min(0xFFFF)));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// `regatta rgn verify <file> [--json]`: audit a `.rgn` container —
+/// per-frame checksums plus footer reconciliation.
+///
+/// Exit codes (scriptable; CI keys off them):
+/// * `0` — container verified clean;
+/// * `2` — container was read but failed verification (corrupt frames
+///   or footer mismatch; diagnostics on stdout, JSON with `--json`);
+/// * `1` — the file could not be audited at all (missing, unreadable,
+///   bad usage), reported like every other CLI error.
 fn run_rgn(args: &Args) -> Result<()> {
     match args.positional.get(1).map(String::as_str) {
         Some("verify") => {
@@ -847,26 +901,47 @@ fn run_rgn(args: &Args) -> Result<()> {
                 .or_else(|| args.opt("input"))
                 .context("rgn verify needs a file: `regatta rgn verify data.rgn`")?;
             let report = verify_rgn_file(path)?;
-            println!(
-                "{path}: {} readable region(s), {} item(s), {} corrupt frame(s)",
-                report.regions, report.items, report.corrupt_frames
-            );
-            for e in &report.errors {
-                println!("  {e}");
-            }
-            if report.corrupt_frames > report.errors.len() as u64 {
+            if args.flag("json") {
+                let errors: Vec<String> =
+                    report.errors.iter().map(|e| format!("\"{}\"", json_escape(e))).collect();
                 println!(
-                    "  ... diagnostics capped; {} corrupt frame(s) total",
-                    report.corrupt_frames
+                    "{{\"path\": \"{}\", \"ok\": {}, \"regions\": {}, \"items\": {}, \
+                     \"corrupt_frames\": {}, \"errors\": [{}]}}",
+                    json_escape(path),
+                    report.ok(),
+                    report.regions,
+                    report.items,
+                    report.corrupt_frames,
+                    errors.join(", ")
                 );
+            } else {
+                println!(
+                    "{path}: {} readable region(s), {} item(s), {} corrupt frame(s)",
+                    report.regions, report.items, report.corrupt_frames
+                );
+                for e in &report.errors {
+                    println!("  {e}");
+                }
+                if report.corrupt_frames > report.errors.len() as u64 {
+                    println!(
+                        "  ... diagnostics capped; {} corrupt frame(s) total",
+                        report.corrupt_frames
+                    );
+                }
             }
-            anyhow::ensure!(
-                report.ok(),
-                "{path} failed verification: {} corrupt frame(s), {} error(s)",
-                report.corrupt_frames,
-                report.errors.len()
-            );
-            println!("verify: OK");
+            if !report.ok() {
+                if !args.flag("json") {
+                    eprintln!(
+                        "{path} failed verification: {} corrupt frame(s), {} error(s)",
+                        report.corrupt_frames,
+                        report.errors.len()
+                    );
+                }
+                std::process::exit(2);
+            }
+            if !args.flag("json") {
+                println!("verify: OK");
+            }
             Ok(())
         }
         other => bail!("unknown rgn action {other:?} (use verify)"),
@@ -1043,6 +1118,11 @@ fn run_bench_faults(args: &Args) -> Result<()> {
     println!("wrote {path}");
     if let Some(overhead) = faults::retry_overhead(&report) {
         println!("retry-policy run vs fault-free baseline: {overhead:.2}x elapsed");
+    }
+    if let Some(savings) = faults::part_retry_savings(&report) {
+        println!(
+            "part-granular narrowing vs whole-shard retry: {savings:.2}x less region work re-run"
+        );
     }
     Ok(())
 }

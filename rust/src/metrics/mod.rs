@@ -251,6 +251,16 @@ pub struct LaneMetrics {
     pub emitted_regions: u64,
     /// Peak regions in flight (submitted − emitted): a max-fold gauge.
     pub peak_in_flight: u64,
+    /// Regions that lost at least one part to a part-granular
+    /// quarantine and were emitted only through the salvage ledger
+    /// ([`PartialRegion`](crate::exec::PartialRegion)).
+    pub partial_regions: u64,
+    /// Workers retired mid-run after losing their pipeline beyond
+    /// recovery (their remaining work was re-dealt to survivors).
+    pub dead_workers: u64,
+    /// Transient ingest-source failures absorbed by the `Retry`
+    /// policy's bounded backoff at the `RegionSource` boundary.
+    pub source_retries: u64,
 }
 
 impl LaneMetrics {
@@ -275,6 +285,9 @@ impl LaneMetrics {
         self.emitted_shards += other.emitted_shards;
         self.emitted_regions += other.emitted_regions;
         self.peak_in_flight = self.peak_in_flight.max(other.peak_in_flight);
+        self.partial_regions += other.partial_regions;
+        self.dead_workers += other.dead_workers;
+        self.source_retries += other.source_retries;
     }
 }
 
@@ -360,6 +373,13 @@ impl MetricsHub {
             m.faults += faults;
             m.retries += retries;
         });
+    }
+
+    /// Driver lane: one transient ingest-source failure absorbed by the
+    /// `Retry` policy's bounded backoff.
+    #[inline]
+    pub fn record_source_retry(&self) {
+        self.with(|m| m.source_retries += 1);
     }
 
     /// Driver lane: one shard submitted to the deques.
@@ -473,7 +493,7 @@ fn hist_from_json(j: &Json, name: &str) -> Result<LatencyHist> {
 /// `(name, value)` pairs of every scalar counter/gauge in a lane, in a
 /// fixed order — shared by the JSON exporter, the parser and the
 /// Prometheus renderer so the three can never drift apart.
-fn counters(t: &LaneMetrics) -> [(&'static str, u64); 14] {
+fn counters(t: &LaneMetrics) -> [(&'static str, u64); 17] {
     [
         ("shards", t.shards),
         ("regions", t.regions),
@@ -489,6 +509,9 @@ fn counters(t: &LaneMetrics) -> [(&'static str, u64); 14] {
         ("emitted_shards", t.emitted_shards),
         ("emitted_regions", t.emitted_regions),
         ("peak_in_flight", t.peak_in_flight),
+        ("partial_regions", t.partial_regions),
+        ("dead_workers", t.dead_workers),
+        ("source_retries", t.source_retries),
     ]
 }
 
@@ -563,6 +586,9 @@ impl MetricsReport {
             emitted_shards: int("emitted_shards")?,
             emitted_regions: int("emitted_regions")?,
             peak_in_flight: int("peak_in_flight")?,
+            partial_regions: int("partial_regions")?,
+            dead_workers: int("dead_workers")?,
+            source_retries: int("source_retries")?,
         };
         Ok(MetricsReport {
             workers: j.get("workers").and_then(Json::as_usize).unwrap_or(0),
@@ -619,6 +645,21 @@ impl MetricsReport {
             "regatta_emitted_regions_total",
             "Regions emitted in stream order.",
             t.emitted_regions as f64,
+        );
+        counter(
+            "regatta_partial_regions_total",
+            "Regions salvaged partially after part-granular quarantine.",
+            t.partial_regions as f64,
+        );
+        counter(
+            "regatta_dead_workers_total",
+            "Workers retired mid-run after unrecoverable pipeline loss.",
+            t.dead_workers as f64,
+        );
+        counter(
+            "regatta_source_retries_total",
+            "Transient ingest-source failures absorbed by retry backoff.",
+            t.source_retries as f64,
         );
         out.push_str(
             "# HELP regatta_in_flight_regions_peak Peak regions in flight.\n\
@@ -686,6 +727,13 @@ impl MetricsReport {
             ms(t.stall_ns),
             self.emit_rate(),
         ));
+        if t.partial_regions > 0 || t.dead_workers > 0 || t.source_retries > 0 {
+            out.push_str(&format!(
+                "salvage: {} partial region(s), {} retired worker(s), \
+                 {} ingest retrie(s)\n",
+                t.partial_regions, t.dead_workers, t.source_retries
+            ));
+        }
         out.push_str("latency_ms         count      p50      p99      max     mean\n");
         for (name, h) in [
             ("e2e", &t.e2e),
@@ -912,6 +960,7 @@ mod tests {
         hub.note_in_flight(3);
         hub.record_idle(11);
         hub.record_faults(2, 1);
+        hub.record_source_retry();
         let lane = hub.take();
         assert_eq!(lane.shards, 1);
         assert_eq!(lane.regions, 7);
@@ -928,6 +977,7 @@ mod tests {
         assert_eq!(lane.peak_in_flight, 7, "gauge max-folds");
         assert_eq!(lane.faults, 2);
         assert_eq!(lane.retries, 1);
+        assert_eq!(lane.source_retries, 1);
         // take drains but keeps recording
         hub.record_shard(1, false, 0, 1);
         assert_eq!(hub.take().shards, 1);
@@ -980,6 +1030,9 @@ mod tests {
             peak_in_flight: 3,
             busy_ns: 40,
             idle_ns: 8,
+            partial_regions: 2,
+            dead_workers: 1,
+            source_retries: 3,
             ..Default::default()
         };
         b.e2e.record_n(500, 13);
@@ -996,6 +1049,9 @@ mod tests {
         assert_eq!(a.busy_ns, 40);
         assert_eq!(a.idle_ns, 8);
         assert_eq!(a.peak_in_flight, 5, "gauge max-folds, not adds");
+        assert_eq!(a.partial_regions, 2);
+        assert_eq!(a.dead_workers, 1);
+        assert_eq!(a.source_retries, 3);
         assert_eq!(a.e2e.count, 13);
         assert_eq!(a.service.count, 1);
     }
@@ -1012,6 +1068,9 @@ mod tests {
             emitted_regions: 100,
             peak_in_flight: 32,
             busy_ns: 123_456,
+            partial_regions: 3,
+            dead_workers: 1,
+            source_retries: 2,
             ..Default::default()
         };
         totals.e2e.record_n(10_000, 100);

@@ -169,6 +169,30 @@ pub fn to_chrome_json(trace: &Trace) -> String {
                          \"args\":{{\"shard\":{shard},\"attempt\":{attempt}}}}}"
                     ));
                 }
+                TraceEvent::PartFault {
+                    shard,
+                    part,
+                    attempt,
+                } => {
+                    ev.push(format!(
+                        "{{\"name\":\"fault {shard}.{part}\",\"cat\":\"fault\",\"ph\":\"X\",\
+                         \"pid\":1,\"tid\":{tid},\"ts\":{ts:.3},\"dur\":{dur:.3},\
+                         \"args\":{{\"shard\":{shard},\"part\":{part},\
+                         \"attempt\":{attempt}}}}}"
+                    ));
+                }
+                TraceEvent::PartRetry {
+                    shard,
+                    part,
+                    attempt,
+                } => {
+                    ev.push(format!(
+                        "{{\"name\":\"retry {shard}.{part}\",\"cat\":\"fault\",\"ph\":\"X\",\
+                         \"pid\":1,\"tid\":{tid},\"ts\":{ts:.3},\"dur\":{dur:.3},\
+                         \"args\":{{\"shard\":{shard},\"part\":{part},\
+                         \"attempt\":{attempt}}}}}"
+                    ));
+                }
             }
         }
     }
@@ -245,6 +269,24 @@ mod tests {
                         ),
                         rec(3_100, 3_200, TraceEvent::Fault { shard: 1, attempt: 1 }),
                         rec(3_200, 3_300, TraceEvent::Retry { shard: 1, attempt: 2 }),
+                        rec(
+                            3_300,
+                            3_350,
+                            TraceEvent::PartFault {
+                                shard: 1,
+                                part: 0,
+                                attempt: 2,
+                            },
+                        ),
+                        rec(
+                            3_350,
+                            3_400,
+                            TraceEvent::PartRetry {
+                                shard: 1,
+                                part: 0,
+                                attempt: 3,
+                            },
+                        ),
                     ],
                     dropped: 0,
                 },
@@ -293,8 +335,8 @@ mod tests {
         assert_eq!(meta.get("items").unwrap().as_usize(), Some(12));
         assert_eq!(meta.get("shards").unwrap().as_usize(), Some(1));
         assert_eq!(meta.get("stolen").unwrap().as_usize(), Some(1));
-        assert_eq!(meta.get("faults").unwrap().as_usize(), Some(1));
-        assert_eq!(meta.get("retries").unwrap().as_usize(), Some(1));
+        assert_eq!(meta.get("faults").unwrap().as_usize(), Some(2), "Fault + PartFault");
+        assert_eq!(meta.get("retries").unwrap().as_usize(), Some(2), "Retry + PartRetry");
         assert_eq!(meta.get("dropped").unwrap().as_usize(), Some(2));
         let nodes = meta.get("nodes").unwrap().as_arr().unwrap();
         assert_eq!(nodes.len(), 2);
@@ -319,6 +361,8 @@ mod tests {
         assert_eq!(named("fire sum"), 1);
         assert_eq!(named("fault 1"), 1);
         assert_eq!(named("retry 1"), 1);
+        assert_eq!(named("fault 1.0"), 1, "part fault names shard.part");
+        assert_eq!(named("retry 1.0"), 1, "part retry names shard.part");
         // fault spans land on the failing worker's own track
         let fault = events
             .iter()

@@ -136,6 +136,15 @@ pub enum TraceEvent {
     /// re-run the shard as attempt `attempt` (2-based: the first retry
     /// is attempt 2).
     Retry { shard: u32, attempt: u32 },
+    /// A single-region attempt failed during part-granular narrowing or
+    /// part-level quarantine: `part` is the in-shard region ordinal,
+    /// `attempt` is the shard-global 1-based attempt counter. The span
+    /// covers the failed single-region execution.
+    PartFault { shard: u32, part: u32, attempt: u32 },
+    /// Part-granular recovery span: the worker rebuilt its pipeline to
+    /// re-run exactly one region (`part` of `shard`) as attempt
+    /// `attempt`.
+    PartRetry { shard: u32, part: u32, attempt: u32 },
 }
 
 /// A stamped event: `[t0_ns, t1_ns]` nanoseconds since the shared
@@ -351,17 +360,24 @@ impl Trace {
         self.fold(|e| matches!(e, TraceEvent::Stall { .. }) as u64)
     }
 
-    /// Failed shard attempts (panics or errors caught by the pool).
+    /// Failed attempts at either granularity: whole-shard
+    /// ([`TraceEvent::Fault`]) plus single-region
+    /// ([`TraceEvent::PartFault`]) failures caught by the pool.
     pub fn faults(&self) -> u64 {
-        self.fold(|e| matches!(e, TraceEvent::Fault { .. }) as u64)
+        self.fold(|e| {
+            matches!(e, TraceEvent::Fault { .. } | TraceEvent::PartFault { .. }) as u64
+        })
     }
 
-    /// Recovery spans: pipeline rebuilds that preceded a re-run. With
-    /// zero drops this equals the report's `retries` total
-    /// ([`ExecReport`](crate::exec::ExecReport)) on a run that
-    /// recovered every fault.
+    /// Recovery spans at either granularity: pipeline rebuilds that
+    /// preceded a re-run ([`TraceEvent::Retry`] and
+    /// [`TraceEvent::PartRetry`]). With zero drops this equals the
+    /// report's `retries` total ([`ExecReport`](crate::exec::ExecReport))
+    /// on a run that recovered every fault.
     pub fn retries(&self) -> u64 {
-        self.fold(|e| matches!(e, TraceEvent::Retry { .. }) as u64)
+        self.fold(|e| {
+            matches!(e, TraceEvent::Retry { .. } | TraceEvent::PartRetry { .. }) as u64
+        })
     }
 }
 
@@ -488,6 +504,16 @@ mod tests {
                     records: vec![
                         rec(TraceEvent::Fault { shard: 2, attempt: 1 }),
                         rec(TraceEvent::Retry { shard: 2, attempt: 2 }),
+                        rec(TraceEvent::PartFault {
+                            shard: 2,
+                            part: 1,
+                            attempt: 2,
+                        }),
+                        rec(TraceEvent::PartRetry {
+                            shard: 2,
+                            part: 1,
+                            attempt: 3,
+                        }),
                         rec(TraceEvent::Shard {
                             shard: 2,
                             regions: 3,
@@ -514,7 +540,7 @@ mod tests {
             ],
             nodes: vec![("enum".into(), 8), ("sum".into(), 8)],
         };
-        assert_eq!(trace.events(), 9);
+        assert_eq!(trace.events(), 11);
         assert_eq!(trace.dropped(), 1);
         assert_eq!(trace.firings(), 2);
         assert_eq!(trace.ensembles(), 2);
@@ -524,7 +550,7 @@ mod tests {
         assert_eq!(trace.submits(), 1);
         assert_eq!(trace.emits(), 1);
         assert_eq!(trace.stalls(), 1);
-        assert_eq!(trace.faults(), 1);
-        assert_eq!(trace.retries(), 1);
+        assert_eq!(trace.faults(), 2, "Fault + PartFault both count");
+        assert_eq!(trace.retries(), 2, "Retry + PartRetry both count");
     }
 }

@@ -35,6 +35,17 @@ pub trait RegionSource {
     /// Pull the next region, or `None` at end of stream.
     fn next_region(&mut self) -> Option<Self::Region>;
 
+    /// Fallible pull: like [`RegionSource::next_region`], but a source
+    /// that can fail *transiently* (network hiccup, injected fault) may
+    /// return `Err` without ending the stream — the ingest driver
+    /// retries the same pull under its bounded retry-with-backoff
+    /// budget (`Ok(None)` still means a clean end of stream). The
+    /// default forwards to `next_region`, so infallible sources never
+    /// see retries.
+    fn try_next_region(&mut self) -> Result<Option<Self::Region>> {
+        Ok(self.next_region())
+    }
+
     /// `(lower, upper)` bound on the number of regions still to come —
     /// advisory only (sizing hints for planners), like
     /// [`Iterator::size_hint`].
@@ -63,6 +74,10 @@ impl<S: RegionSource + ?Sized> RegionSource for Box<S> {
 
     fn next_region(&mut self) -> Option<S::Region> {
         (**self).next_region()
+    }
+
+    fn try_next_region(&mut self) -> Result<Option<S::Region>> {
+        (**self).try_next_region()
     }
 
     fn size_hint(&self) -> (usize, Option<usize>) {

@@ -9,18 +9,30 @@
 //!    to the fault-free run, for workers 1–8, materialized and streamed,
 //!    sum and taxi — and the report's retry/rebuild counts reconcile
 //!    with the injected plan exactly.
-//! 2. **Quarantine containment** — a poisoned shard is dropped, named in
-//!    [`ExecReport::faults`], and costs exactly its own output slot: the
-//!    surviving output is the fault-free output with one contiguous
-//!    block removed, still in stream order.
+//! 2. **Quarantine containment, part-granular** — a poisoned shard
+//!    loses only the region whose attempt actually failed: the ledger
+//!    names shard *and* in-shard part, and the surviving output is the
+//!    fault-free output with exactly that one region removed, still in
+//!    stream order — for workers 1–8, materialized and streamed.
 //! 3. **Fail-fast attribution** — the default policy aborts with an
 //!    error naming the worker and the shard in flight.
 //! 4. **Watchdog** — a never-completing shard turns into a named stall
-//!    diagnostic (which shards are in flight) instead of a hang.
+//!    diagnostic (which shards are in flight) instead of a hang; and a
+//!    retry backoff *longer* than the watchdog deadline still reads as
+//!    progress, never as a stall.
 //! 5. **Salvage** — a byte-flipped `.rgn` container read under
 //!    [`CorruptFramePolicy::Skip`] yields every uncorrupted frame
 //!    bit-identically, through the executor end to end, and
 //!    [`verify_rgn_file`] reports exactly the corrupted frames.
+//! 6. **Degradation** — a worker whose guarded pipeline rebuild also
+//!    panics retires; its shard is re-dealt untouched to a survivor and
+//!    the run completes bit-identically on N−1 workers. A pool of one
+//!    has no survivor and aborts by name instead.
+//! 7. **Ingest/sink fault domains** — transient source-pull failures
+//!    are retried under the compute budget and lose no regions; a
+//!    permanent one exhausts the budget with a named error; a sink
+//!    failure aborts by name and the unpublished `.tmp` sibling is
+//!    removed.
 //!
 //! [`FaultPolicy::Retry`]: regatta::exec::FaultPolicy
 //! [`ExecReport::faults`]: regatta::exec::ExecReport
@@ -38,8 +50,9 @@ use regatta::exec::{
     ExecConfig, ExecReport, FaultKind, FaultPlan, FaultPolicy, FaultShot, FaultyFactory,
     KernelSpawn, PipelineFactory, ShardOutput, ShardWorker, ShardedRunner,
 };
-use regatta::io::{corrupt_frame, verify_rgn_file, write_rgn_file, BlobFileSource,
-    CorruptFramePolicy};
+use regatta::exec::{FaultySink, FaultySource};
+use regatta::io::{corrupt_frame, tmp_path, verify_rgn_file, write_rgn_file, BlobFileSource,
+    CorruptFramePolicy, JsonlSink};
 use regatta::prelude::Policy;
 use regatta::trace::TraceOptions;
 use regatta::workload::regions::{gen_blobs, RegionSpec};
@@ -277,39 +290,53 @@ fn assert_one_block_removed(got: &[(u64, f64)], want: &[(u64, f64)], ctx: &str) 
 }
 
 #[test]
-fn quarantine_drops_exactly_the_poisoned_shard() {
-    let blobs = gen_blobs(500, RegionSpec::Uniform { max: 16 }, 31);
+fn quarantine_drops_only_the_poisoned_part_across_worker_counts() {
+    // Quarantine runs per-region slices, so the planned panic lands on
+    // the target shard's first region attempt and costs exactly that
+    // one region — its healthy neighbours keep their outputs. The
+    // precision must hold for every pool size, materialized and
+    // streamed.
+    let blobs = gen_blobs(600, RegionSpec::Uniform { max: 16 }, 31);
     let factory = sum_factory();
-    for streamed in [false, true] {
-        let ctx = format!(
-            "quarantine {}",
-            if streamed { "streamed" } else { "materialized" }
-        );
-        let runner = ShardedRunner::new(exec(3));
-        let clean = if streamed {
-            runner.run_stream(&factory, SliceSource::new(&blobs)).unwrap()
-        } else {
-            runner.run(&factory, &blobs).unwrap()
-        };
-        let target = clean.shards / 2;
-        let faulty = FaultyFactory::new(sum_factory(), &FaultPlan::new().panic_at(target));
-        let q_runner = ShardedRunner::new(exec(3).with_fault(FaultPolicy::Quarantine));
-        let report = if streamed {
-            q_runner.run_stream(&faulty, SliceSource::new(&blobs)).unwrap()
-        } else {
-            q_runner.run(&faulty, &blobs).unwrap()
-        };
-        assert_eq!(report.faults.len(), 1, "{ctx}: one entry in the ledger");
-        let f = &report.faults[0];
-        assert_eq!(f.shard, target, "{ctx}: the ledger names the injected shard");
-        assert_eq!(f.attempts, 1, "{ctx}: quarantine gives one attempt");
-        assert!(f.error.contains("injected fault"), "{ctx}: {}", f.error);
-        assert_eq!(report.shards, clean.shards, "{ctx}: the slot is filled, not stalled");
-        let got = finish_sharded_outputs(SumMode::Enumerated, report.outputs);
-        let want = finish_sharded_outputs(SumMode::Enumerated, clean.outputs);
-        assert_one_block_removed(&got, &want, &ctx);
-        let table = report.fault_table();
-        assert!(table.contains("injected fault"), "{ctx}: {table}");
+    for workers in 1..=8 {
+        for streamed in [false, true] {
+            let ctx = format!(
+                "part quarantine workers {workers} {}",
+                if streamed { "streamed" } else { "materialized" }
+            );
+            let runner = ShardedRunner::new(exec(workers));
+            let clean = if streamed {
+                runner.run_stream(&factory, SliceSource::new(&blobs)).unwrap()
+            } else {
+                runner.run(&factory, &blobs).unwrap()
+            };
+            let target = clean.shards / 2;
+            let faulty = FaultyFactory::new(sum_factory(), &FaultPlan::new().panic_at(target));
+            let q_runner = ShardedRunner::new(exec(workers).with_fault(FaultPolicy::Quarantine));
+            let report = if streamed {
+                q_runner.run_stream(&faulty, SliceSource::new(&blobs)).unwrap()
+            } else {
+                q_runner.run(&faulty, &blobs).unwrap()
+            };
+            assert_eq!(report.faults.len(), 1, "{ctx}: one entry in the ledger");
+            let f = &report.faults[0];
+            assert_eq!(f.shard, target, "{ctx}: the ledger names the injected shard");
+            assert_eq!(
+                f.part,
+                Some(0),
+                "{ctx}: the loss is part-granular — the shot fired on the first region attempt"
+            );
+            assert_eq!(f.attempts, 1, "{ctx}: quarantine gives one attempt");
+            assert!(f.error.contains("injected fault"), "{ctx}: {}", f.error);
+            assert_eq!(report.shards, clean.shards, "{ctx}: the slot is filled, not stalled");
+            let got = finish_sharded_outputs(SumMode::Enumerated, report.outputs);
+            let want = finish_sharded_outputs(SumMode::Enumerated, clean.outputs);
+            assert_eq!(got.len(), want.len() - 1, "{ctx}: exactly one region lost");
+            assert_one_block_removed(&got, &want, &ctx);
+            let table = report.fault_table();
+            assert!(table.contains("injected fault"), "{ctx}: {table}");
+            assert!(table.contains("part 0"), "{ctx}: granularity column: {table}");
+        }
     }
 }
 
@@ -377,6 +404,189 @@ fn watchdog_turns_a_stuck_shard_into_a_named_diagnostic() {
     assert!(msg.contains("watchdog"), "{msg}");
     assert!(msg.contains("in flight"), "lists the in-flight shards: {msg}");
     assert!(msg.contains("stream slot"), "names the stalled merge slot: {msg}");
+}
+
+#[test]
+fn retry_backoff_longer_than_the_watchdog_still_recovers() {
+    // sleep_backoff beats the pool pulse in 50ms chunks, so a 300ms
+    // retry pause under a 100ms watchdog must read as progress — the
+    // run recovers bit-identically instead of dying with a stall
+    // diagnosis mid-backoff
+    let blobs = gen_blobs(300, RegionSpec::Uniform { max: 16 }, 43);
+    let clean = ShardedRunner::new(exec(1))
+        .run_stream(&sum_factory(), SliceSource::new(&blobs))
+        .unwrap();
+    let faulty = FaultyFactory::new(sum_factory(), &FaultPlan::new().panic_at(0));
+    let runner = ShardedRunner::new(
+        exec(1)
+            .with_fault(FaultPolicy::Retry {
+                max_attempts: 3,
+                backoff: Duration::from_millis(300),
+            })
+            .with_watchdog(Duration::from_millis(100)),
+    );
+    let report = runner
+        .run_stream(&faulty, SliceSource::new(&blobs))
+        .expect("the backoff must beat the watchdog, not trip it");
+    assert_eq!(report.retries, 1, "one injected fault, one retry");
+    assert_eq!(faulty.remaining(), 0);
+    assert_sums_bitwise(
+        &finish_sharded_outputs(SumMode::Enumerated, report.outputs),
+        &finish_sharded_outputs(SumMode::Enumerated, clean.outputs),
+        "backoff vs watchdog",
+    );
+}
+
+#[test]
+fn retry_exhaustion_fails_with_a_named_error() {
+    // more shots than the budget: the whole-slice attempt and both
+    // narrowing attempts on the poisoned part all fail, and the error
+    // names the shard and the spent budget
+    let blobs = gen_blobs(300, RegionSpec::Uniform { max: 16 }, 67);
+    let faulty = FaultyFactory::new(sum_factory(), &FaultPlan::new().panic_at(1).with_times(10));
+    let runner = ShardedRunner::new(exec(2).with_fault(FaultPolicy::retry(3)));
+    let err = runner.run(&faulty, &blobs).expect_err("the retry budget must exhaust");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shard 1 still failing after 3 attempt(s)"), "{msg}");
+    assert!(msg.contains("injected fault"), "carries the root cause: {msg}");
+}
+
+#[test]
+fn a_retired_workers_shard_is_redealt_and_survivors_finish_bit_identically() {
+    // quarantined panic -> guarded rebuild -> rebuild shot kills that
+    // too -> the worker retires, its shard is re-pushed untouched, and
+    // a survivor re-runs it cleanly: bit-identical output, an empty
+    // fault ledger, and exactly one worker marked dead
+    let blobs = gen_blobs(600, RegionSpec::Uniform { max: 16 }, 53);
+    let factory = sum_factory();
+    for workers in [2, 3, 8] {
+        for streamed in [false, true] {
+            let ctx = format!(
+                "degraded workers {workers} {}",
+                if streamed { "streamed" } else { "materialized" }
+            );
+            let runner = ShardedRunner::new(exec(workers));
+            let clean = if streamed {
+                runner.run_stream(&factory, SliceSource::new(&blobs)).unwrap()
+            } else {
+                runner.run(&factory, &blobs).unwrap()
+            };
+            let target = clean.shards / 2;
+            let plan = FaultPlan::new().panic_at(target).panic_on_rebuild();
+            let faulty = FaultyFactory::new(sum_factory(), &plan);
+            let d_runner = ShardedRunner::new(exec(workers).with_fault(FaultPolicy::Quarantine));
+            let report = if streamed {
+                d_runner.run_stream(&faulty, SliceSource::new(&blobs)).unwrap()
+            } else {
+                d_runner.run(&faulty, &blobs).unwrap()
+            };
+            assert!(
+                report.faults.is_empty(),
+                "{ctx}: the re-dealt shard finishes clean, nothing quarantined: {:?}",
+                report.faults
+            );
+            let dead: Vec<usize> =
+                report.per_worker.iter().filter(|w| w.dead).map(|w| w.worker).collect();
+            assert_eq!(dead.len(), 1, "{ctx}: exactly one worker retired, got {dead:?}");
+            assert!(
+                report.worker_table().contains("retired"),
+                "{ctx}: the worker table marks the retirement"
+            );
+            assert_sums_bitwise(
+                &finish_sharded_outputs(SumMode::Enumerated, report.outputs),
+                &finish_sharded_outputs(SumMode::Enumerated, clean.outputs),
+                &ctx,
+            );
+        }
+    }
+}
+
+#[test]
+fn a_pool_of_one_cannot_degrade_and_aborts_by_name() {
+    let blobs = gen_blobs(300, RegionSpec::Uniform { max: 16 }, 71);
+    let faulty = FaultyFactory::new(
+        sum_factory(),
+        &FaultPlan::new().panic_at(0).panic_on_rebuild(),
+    );
+    let runner = ShardedRunner::new(exec(1).with_fault(FaultPolicy::Quarantine));
+    let err = runner
+        .run(&faulty, &blobs)
+        .expect_err("no survivor can take the retiring worker's shard");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no surviving worker"), "{msg}");
+    assert!(msg.contains("lost its pipeline"), "{msg}");
+}
+
+#[test]
+fn transient_source_faults_retry_and_lose_no_regions() {
+    let blobs = gen_blobs(400, RegionSpec::Uniform { max: 16 }, 59);
+    let clean = ShardedRunner::new(exec(2))
+        .run_stream(&sum_factory(), SliceSource::new(&blobs))
+        .unwrap();
+    let plan = FaultPlan::new().source_fault_at(3).source_fault_at(11);
+    let src = FaultySource::new(SliceSource::new(&blobs), &plan);
+    let runner = ShardedRunner::new(exec(2).with_fault(FaultPolicy::Retry {
+        max_attempts: 3,
+        backoff: Duration::ZERO,
+    }));
+    let report = runner
+        .run_stream(&sum_factory(), src)
+        .expect("transient source faults are retried under the compute budget");
+    assert_sums_bitwise(
+        &finish_sharded_outputs(SumMode::Enumerated, report.outputs),
+        &finish_sharded_outputs(SumMode::Enumerated, clean.outputs),
+        "source retry",
+    );
+}
+
+#[test]
+fn a_permanent_source_fault_exhausts_the_retry_budget_by_name() {
+    let blobs = gen_blobs(400, RegionSpec::Uniform { max: 16 }, 73);
+    let plan = FaultPlan::new().source_fault_at_times(2, u32::MAX);
+    let src = FaultySource::new(SliceSource::new(&blobs), &plan);
+    let runner = ShardedRunner::new(exec(2).with_fault(FaultPolicy::Retry {
+        max_attempts: 3,
+        backoff: Duration::ZERO,
+    }));
+    let err = runner
+        .run_stream(&sum_factory(), src)
+        .expect_err("a permanent source fault must exhaust the budget");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("ingest source still failing after 3 attempt(s)"), "{msg}");
+    assert!(msg.contains("source pull 2 failed"), "carries the root cause: {msg}");
+
+    // without a retry budget the same fault aborts on first sight
+    let src = FaultySource::new(
+        SliceSource::new(&blobs),
+        &FaultPlan::new().source_fault_at(2),
+    );
+    let err = ShardedRunner::new(exec(2))
+        .run_stream(&sum_factory(), src)
+        .expect_err("fail-fast propagates the source fault immediately");
+    assert!(format!("{err:#}").contains("source pull 2 failed"), "{err:#}");
+}
+
+#[test]
+fn a_sink_fault_aborts_by_name_and_removes_the_tmp_sibling() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("regatta_sink_fault_{}.jsonl", std::process::id()));
+    let tmp = tmp_path(&path);
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&tmp);
+    let blobs = gen_blobs(300, RegionSpec::Uniform { max: 16 }, 61);
+    {
+        let mut sink = FaultySink::new(
+            JsonlSink::create(&path).unwrap(),
+            &FaultPlan::new().sink_fault_at(0),
+        );
+        let err = ShardedRunner::new(exec(2))
+            .run_stream_into(&sum_factory(), SliceSource::new(&blobs), &mut sink)
+            .expect_err("the sink fault must abort the run");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("result sink failed writing batch 0"), "{msg}");
+    } // sink dropped unfinished: the Drop guard must clean the staging file
+    assert!(!tmp.exists(), "the .tmp sibling is removed on drop");
+    assert!(!path.exists(), "the final path was never published");
 }
 
 #[test]

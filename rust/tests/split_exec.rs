@@ -22,8 +22,11 @@
 //!    on both the materialized and streaming paths, and the apps'
 //!    single-worker inline fast path does not bypass the refusal.
 //! 5. **Fault composition** — retry on a split run is still
-//!    bit-identical; quarantine on a split run drops *whole* regions
-//!    (never a partial fold), leaving every survivor bit-identical.
+//!    bit-identical; quarantine on a split run withholds the output row
+//!    of every region that lost a part (never a partial fold passed off
+//!    as a total), salvages the surviving parts into the explicit
+//!    [`PartialRegion`](regatta::exec::PartialRegion) ledger, and
+//!    leaves every fully-folded survivor bit-identical.
 //!
 //! [`ExecConfig::max_region_items`]: regatta::exec::ExecConfig
 
@@ -556,10 +559,12 @@ fn retry_on_a_split_run_is_still_bitwise_identical() {
 
 #[test]
 fn quarantine_on_a_split_run_drops_whole_regions_only() {
-    // giant regions cut into many parts across several shards: losing a
-    // shard must cost every region it covers *entirely* — a surviving id
+    // giant regions cut into many parts across several shards: a lost
+    // part must cost its region's *output row* entirely — a surviving id
     // folded from a subset of its parts would carry a partial (wrong)
-    // value, which bitwise comparison against the clean run would catch
+    // value, which bitwise comparison against the clean run would catch.
+    // The surviving parts are salvaged into the explicit partial-region
+    // ledger instead, never passed off as a total
     let factory = sum_factory(SumMode::Enumerated, SumShape::Fused);
     let blobs = gen_blobs(8 * 16 * WIDTH, RegionSpec::Fixed { size: 16 * WIDTH }, 89);
     let single = ShardedRunner::new(ExecConfig::new(1)).run(&factory, &blobs).unwrap();
@@ -590,6 +595,29 @@ fn quarantine_on_a_split_run_drops_whole_regions_only() {
             report.outputs.len() < single.outputs.len(),
             "{ctx}: quarantine must cost at least one region"
         );
+        // the regions missing from the output are exactly the ones in
+        // the salvage ledger: lost parts named, surviving parts kept as
+        // partial aggregates, and never also emitted as an output row
+        assert_eq!(
+            report.partial_regions.len(),
+            single.outputs.len() - report.outputs.len(),
+            "{ctx}: one ledger entry per region withheld from the output"
+        );
+        for p in &report.partial_regions {
+            assert!(!p.lost.is_empty(), "{ctx}: region {} lost no part", p.region);
+            assert!(
+                p.lost.len() < p.of as usize,
+                "{ctx}: region {} ({} parts) salvaged nothing",
+                p.region,
+                p.of
+            );
+            assert!(!p.salvaged.is_empty(), "{ctx}: region {} has no salvaged runs", p.region);
+            assert!(
+                report.outputs.iter().all(|(gi, _)| *gi != p.region),
+                "{ctx}: region {} is both salvaged and emitted",
+                p.region
+            );
+        }
         // every surviving region is bit-identical to the clean run — no
         // id appears with a partial fold, and stream order holds
         let mut want = single.outputs.iter();
